@@ -1,0 +1,70 @@
+//! Capacity planning: what fixing `a` up front actually costs (§VIII-E).
+//!
+//! ```bash
+//! cargo run --release --example capacity_planning
+//! ```
+//!
+//! An operator sizing a cluster with Anchor or Dx must guess the maximum
+//! size it will ever reach. This example quantifies the penalty of each
+//! guess (a/w ∈ {5..100}) in memory and lookup latency against Memento,
+//! which needs no guess at all — then shows the failure mode the guess
+//! creates: the cluster simply cannot grow past it.
+
+use memento::algorithms::{AlgoError, ConsistentHasher};
+use memento::benchkit::report::Table;
+use memento::simulator::scenario::{self, ScenarioConfig};
+
+fn main() {
+    let w = 10_000usize;
+    let cfg = ScenarioConfig { keys: 50_000, ..Default::default() };
+
+    let mut t = Table::new(
+        "capacity planning — the cost of guessing a (w = 10k, 20% failed)",
+        &["algo", "a/w", "state", "lookup_ns", "vs_memento_mem", "vs_memento_ns"],
+    );
+    let base = scenario::sensitivity_cell("memento", w, 1, 0.2, &cfg);
+    t.push_row(vec![
+        "memento".into(),
+        "(unbounded)".into(),
+        memento::benchkit::fmt_bytes(base.state_bytes),
+        format!("{:.0}", base.lookup.median_ns),
+        "1.0x".into(),
+        "1.0x".into(),
+    ]);
+    for algo in ["anchor", "dx"] {
+        for ratio in [5usize, 10, 20, 50, 100] {
+            let c = scenario::sensitivity_cell(algo, w, ratio, 0.2, &cfg);
+            t.push_row(vec![
+                algo.into(),
+                ratio.to_string(),
+                memento::benchkit::fmt_bytes(c.state_bytes),
+                format!("{:.0}", c.lookup.median_ns),
+                format!("{:.0}x", c.state_bytes as f64 / base.state_bytes.max(1) as f64),
+                format!("{:.1}x", c.lookup.median_ns / base.lookup.median_ns),
+            ]);
+        }
+    }
+    t.emit("capacity_planning");
+
+    // The hard wall: a capacity-bound cluster cannot scale past a.
+    let mut anchor = memento::algorithms::anchor::Anchor::new(w * 2, w);
+    let mut grown = 0;
+    loop {
+        match anchor.add() {
+            Ok(_) => grown += 1,
+            Err(AlgoError::CapacityExhausted { capacity }) => {
+                println!(
+                    "anchor with a=2w hit its wall after {grown} additions (capacity {capacity}); \
+                     memento has no such wall:"
+                );
+                break;
+            }
+            Err(e) => panic!("{e}"),
+        }
+    }
+    let mut m = memento::algorithms::Memento::new(w);
+    for _ in 0..w * 3 {
+        m.add().unwrap();
+    }
+    println!("  memento grew from {w} to {} nodes without reconfiguration", m.working());
+}

@@ -1,0 +1,193 @@
+//! END-TO-END DRIVER: the full system on a realistic workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_distributed_kv
+//! ```
+//!
+//! Exercises every layer together (recorded in EXPERIMENTS.md §E2E):
+//!  L3 rust coordinator — router + membership + dynamic batcher + storage;
+//!  runtime            — AOT JAX/Pallas memento kernel via PJRT (if
+//!                       `artifacts/` exists; otherwise scalar, noted);
+//!  substrate          — in-process KV nodes with real data migration.
+//!
+//! Phases:
+//!  1. load 200k records through the router (zipf-skewed key popularity);
+//!  2. serve 1M batched lookups, report throughput + latency percentiles;
+//!  3. kill 20% of the nodes one by one, migrating data each time, with
+//!     the rebalance auditor checking the minimal-disruption bound live;
+//!  4. serve reads again — every record must be found, zero loss;
+//!  5. restore the nodes; audit monotonicity; report final stats.
+
+use memento::coordinator::batcher::Batcher;
+use memento::coordinator::rebalancer::Rebalancer;
+use memento::coordinator::router::Router;
+use memento::coordinator::storage::StorageCluster;
+use memento::hashing::keygen::{KeyDistribution, KeyStream};
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::metrics::Histogram;
+use memento::runtime::EngineHandle;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const NODES: usize = 50;
+const RECORDS: usize = 200_000;
+const LOOKUPS: usize = 1_000_000;
+const KILL_FRAC: f64 = 0.2;
+
+fn main() {
+    let t_start = Instant::now();
+
+    // --- build the stack -------------------------------------------------
+    let engine = match EngineHandle::spawn("artifacts".into()) {
+        Ok(h) if h.info().has_memento => {
+            println!("[engine] PJRT memento variants loaded (max table {})",
+                h.info().max_memento_table);
+            Some(h)
+        }
+        _ => {
+            println!("[engine] no artifacts — scalar lookups (run `make artifacts`)");
+            None
+        }
+    };
+    let engine_for_stats = engine.clone();
+    let router = Router::new("memento", NODES, NODES * 10, engine).expect("router");
+    let storage = Arc::new(StorageCluster::new());
+    let rebalancer = Rebalancer::new(&router, 100_000, 0xE2E);
+
+    // --- phase 1: load ----------------------------------------------------
+    let mut ks = KeyStream::new(
+        KeyDistribution::Zipf { universe: RECORDS as u64 * 4, alpha: 1.1 },
+        7,
+    );
+    let t = Instant::now();
+    let mut record_keys = Vec::with_capacity(RECORDS);
+    for _ in 0..RECORDS {
+        let k = ks.next_key();
+        let (_b, node) = router.route(k);
+        storage.node(node).put(k, k.to_le_bytes().to_vec());
+        record_keys.push(k);
+    }
+    record_keys.sort_unstable();
+    record_keys.dedup();
+    println!(
+        "phase 1: loaded {RECORDS} writes ({} distinct keys) across {NODES} nodes in {:?}",
+        record_keys.len(),
+        t.elapsed()
+    );
+    let loads = storage.load_by_node();
+    let max = loads.iter().map(|(_, c)| *c).max().unwrap();
+    let min = loads.iter().map(|(_, c)| *c).min().unwrap();
+    println!("         per-node records: min {min}, max {max} (peak/avg {:.2})",
+        max as f64 * NODES as f64 / storage.total_records() as f64);
+
+    // --- phase 2: batched lookup serving ----------------------------------
+    let (batcher, handle) = Batcher::spawn(router.clone(), 4096, Duration::from_micros(150));
+    let mut lat = Histogram::new();
+    let t = Instant::now();
+    let mut served = 0usize;
+    let mut stream = KeyStream::new(KeyDistribution::Uniform, 99);
+    while served < LOOKUPS {
+        // Pipelined client: submit a burst, then collect (models a
+        // front-end fanning requests into the batcher).
+        let burst = 8192.min(LOOKUPS - served);
+        let t0 = Instant::now();
+        let rxs: Vec<_> =
+            (0..burst).map(|_| handle.lookup_async(stream.next_key()).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        lat.record(t0.elapsed().as_nanos() as u64 / burst as u64);
+        served += burst;
+    }
+    let dt = t.elapsed();
+    println!(
+        "phase 2: served {LOOKUPS} lookups in {:.2?} — {:.1}k lookups/s, per-key ns p50={} p99={}",
+        dt,
+        LOOKUPS as f64 / dt.as_secs_f64() / 1e3,
+        lat.quantile(0.5),
+        lat.quantile(0.99),
+    );
+    println!("         router: {}", router.metrics.summary());
+
+    // --- phase 3: failure storm -------------------------------------------
+    let kills = (NODES as f64 * KILL_FRAC) as usize;
+    let mut rng = Xoshiro256::new(13);
+    let t = Instant::now();
+    let mut migrated_total = 0usize;
+    for i in 0..kills {
+        let wb = router.with_view(|a, _| a.working_buckets());
+        let victim = wb[rng.next_index(wb.len())];
+        let node = router.fail_bucket(victim).expect("fail");
+        let r2 = router.clone();
+        let moved = storage.migrate_from(node, move |k| r2.route(k).1);
+        migrated_total += moved;
+        let s = rebalancer.observe_epoch(&router, &[victim]);
+        assert_eq!(s.violations, 0, "minimal-disruption violated at kill {i}");
+    }
+    println!(
+        "phase 3: killed {kills} nodes in {:?}; migrated {migrated_total} records; \
+         rebalance audit: 0 violations over {} epochs",
+        t.elapsed(),
+        kills
+    );
+
+    // --- phase 4: verify every record survives -----------------------------
+    let t = Instant::now();
+    for &k in &record_keys {
+        let (_b, node) = router.route(k);
+        assert!(
+            storage.node(node).get(k).is_some(),
+            "record {k:#x} lost after failures"
+        );
+    }
+    println!(
+        "phase 4: all {} records located post-failure in {:?} (zero loss)",
+        record_keys.len(),
+        t.elapsed()
+    );
+
+    // --- phase 5: restore + monotonicity audit -----------------------------
+    for _ in 0..kills {
+        let (b, node) = router.add_node().expect("restore");
+        // Pull back keys that belong to the restored node (monotone move).
+        let r2 = router.clone();
+        let mut pulled = 0usize;
+        for (id, _) in storage.load_by_node() {
+            if id == node {
+                continue;
+            }
+            let src = storage.node(id);
+            for k in src.keys() {
+                if r2.route(k).1 == node {
+                    if let Some(v) = src.delete(k) {
+                        storage.node(node).put(k, v);
+                        pulled += 1;
+                    }
+                }
+            }
+        }
+        let s = rebalancer.observe_epoch(&router, &[b]);
+        assert_eq!(s.violations, 0, "monotonicity violated restoring {b}");
+        let _ = pulled;
+    }
+    let s = rebalancer.summary();
+    println!(
+        "phase 5: restored {kills} nodes; audit total: epochs={} relocated={} violations={}",
+        s.epochs_observed, s.relocated, s.violations
+    );
+    for &k in record_keys.iter().step_by(37) {
+        let (_b, node) = router.route(k);
+        assert!(storage.node(node).get(k).is_some());
+    }
+
+    if let Some(h) = engine_for_stats {
+        let (device, fallback, dispatches) = h.stats();
+        println!(
+            "engine: {device} keys on-device over {dispatches} dispatches, {fallback} scalar fallbacks ({:.4}%)",
+            fallback as f64 / (device + fallback).max(1) as f64 * 100.0
+        );
+    }
+    drop(handle);
+    batcher.join();
+    println!("\nE2E OK in {:?}", t_start.elapsed());
+}

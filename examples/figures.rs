@@ -1,0 +1,29 @@
+//! Regenerate EVERY paper figure in one run (CSV under `results/`).
+//!
+//! ```bash
+//! cargo run --release --example figures              # CI scale
+//! MEMENTO_BENCH_SCALE=full cargo run --release --example figures  # paper scale
+//! ```
+//!
+//! Equivalent to `memento figures` / `cargo bench`, packaged as the
+//! example a reader reaches for first. See DESIGN.md §4 for the
+//! figure ↔ module ↔ bench index and EXPERIMENTS.md for recorded runs.
+
+use memento::simulator::{figures, Scale, ScenarioConfig};
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut cfg = ScenarioConfig::default();
+    cfg.keys = scale.keys_per_cell().min(200_000);
+    println!("scale: {scale:?} (set MEMENTO_BENCH_SCALE=full for paper sizes)\n");
+
+    let t = figures::fig_17_18_stable(scale, &cfg);
+    t.emit("fig_17_18_stable");
+    for finding in figures::check_stable_shape(&t) {
+        println!("note: {finding}");
+    }
+    figures::fig_19_22_oneshot(scale, &cfg).emit("fig_19_22_oneshot");
+    figures::fig_23_26_incremental(scale, &cfg).emit("fig_23_26_incremental");
+    figures::fig_27_32_sensitivity(scale, &cfg).emit("fig_27_32_sensitivity");
+    println!("all figure CSVs written to results/");
+}

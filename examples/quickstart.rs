@@ -1,0 +1,70 @@
+//! Quickstart: the 5-minute tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers: building a MementoHash cluster, looking up keys, surviving a
+//! random node failure (the thing JumpHash cannot do), restoring it, and
+//! reading the paper's §III properties off the auditors.
+
+use memento::algorithms::{ConsistentHasher, Memento};
+use memento::hashing::xxhash::xxhash64;
+use memento::simulator::audit;
+
+fn main() {
+    // A fresh cluster of 10 nodes: buckets 0..9, no internal state at all
+    // beyond the integer 10 (Alg. 1).
+    let mut cluster = Memento::new(10);
+    println!("cluster: {} working buckets, state = {} bytes (empty R)",
+        cluster.working(), cluster.state_bytes());
+
+    // Keys are anything hashable — digest once at the edge, then route.
+    for name in ["alice.jpg", "bob.mp4", "carol.db"] {
+        let key = xxhash64(name.as_bytes(), 0);
+        println!("  {name:<10} -> bucket {}", cluster.lookup(key));
+    }
+
+    // Node 5's machine catches fire. Jump can't express this; Memento
+    // records one replacement tuple ⟨5 → 8, 10⟩ (Alg. 2) and carries on.
+    cluster.remove(5).expect("bucket 5 was working");
+    println!("\nafter failing bucket 5: w={}, |R|={}, state = {} bytes",
+        cluster.working(), cluster.removed(), cluster.state_bytes());
+    for name in ["alice.jpg", "bob.mp4", "carol.db"] {
+        let key = xxhash64(name.as_bytes(), 0);
+        let b = cluster.lookup(key);
+        assert_ne!(b, 5, "failed bucket must never be returned");
+        println!("  {name:<10} -> bucket {b}");
+    }
+
+    // Minimal disruption, measured not assumed: only keys that lived on
+    // bucket 5 moved (Prop. VI.3).
+    let keys: Vec<u64> = (0..200_000u64)
+        .map(|i| memento::hashing::mix::splitmix64_mix(i))
+        .collect();
+    let balance = audit::balance(&cluster, &keys);
+    println!("\nbalance over {} keys x {} buckets: max deviation {:.2}%, peak/avg {:.3}",
+        balance.keys, balance.buckets, balance.max_deviation * 100.0, balance.peak_to_avg);
+    assert!(balance.is_uniform(6.0));
+
+    // The machine comes back: add() restores the SAME bucket (Alg. 3),
+    // and only the keys that left it move back (Prop. VI.5).
+    let before: Vec<u32> = keys.iter().map(|k| cluster.lookup(*k)).collect();
+    let restored = cluster.add().unwrap();
+    let mut came_back = 0;
+    for (k, old) in keys.iter().zip(&before) {
+        let new = cluster.lookup(*k);
+        if new != *old {
+            assert_eq!(new, restored);
+            came_back += 1;
+        }
+    }
+    println!("\nrestored bucket {restored}: {came_back} keys moved back (≈ {} expected), 0 collateral",
+        keys.len() / 10);
+
+    // Scale out past the original size: buckets are handed out densely.
+    let b10 = cluster.add().unwrap();
+    let b11 = cluster.add().unwrap();
+    println!("scaled out: new buckets {b10}, {b11}; w={}", cluster.working());
+    println!("\nquickstart OK");
+}

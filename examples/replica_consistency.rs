@@ -1,0 +1,54 @@
+//! §X future work, implemented: *"maintain full consistency when nodes
+//! may not unanimously agree on the removal order"*.
+//!
+//! ```bash
+//! cargo run --release --example replica_consistency
+//! ```
+//!
+//! Memento's replacement tuples capture the working count *at removal
+//! time*, so replicas that apply the same failures in different orders
+//! route keys differently. This example sweeps the network-reordering
+//! window and compares the naive eager policy against sequence-fenced
+//! application (the leader stamps a total order; replicas buffer gaps):
+//! eager divergence grows with the window, fenced stays at exactly zero.
+
+use memento::benchkit::report::Table;
+use memento::coordinator::replica::reorder_experiment;
+
+fn main() {
+    let mut t = Table::new(
+        "removal-order consistency — 3 replicas, 64-node cluster, 80 events",
+        &[
+            "reorder_window",
+            "eager_divergence%",
+            "eager_dropped_events",
+            "fenced_divergence%",
+            "fenced_buffer_peak",
+        ],
+    );
+    for window in [0usize, 2, 4, 8, 16, 32] {
+        // Average a few seeds per window.
+        let (mut ed, mut dr, mut fd, mut bp) = (0.0, 0u64, 0.0, 0usize);
+        let seeds = 5;
+        for seed in 0..seeds {
+            let r = reorder_experiment(64, 80, 3, window, seed);
+            ed += r.eager_divergence;
+            dr += r.eager_dropped;
+            fd += r.fenced_divergence;
+            bp = bp.max(r.fenced_buffer_peak);
+        }
+        t.push_row(vec![
+            window.to_string(),
+            format!("{:.2}", ed / seeds as f64 * 100.0),
+            dr.to_string(),
+            format!("{:.2}", fd / seeds as f64 * 100.0),
+            bp.to_string(),
+        ]);
+    }
+    t.emit("replica_consistency");
+    println!(
+        "fenced application (the leader's sequence numbers) keeps every replica\n\
+         bit-identical to the leader at any reorder window — the practical answer\n\
+         to the paper's §X open question."
+    );
+}

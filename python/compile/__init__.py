@@ -1,0 +1,2 @@
+# Build-time package: JAX/Pallas kernels + AOT lowering. Never imported at
+# request time — the rust binary consumes artifacts/*.hlo.txt only.

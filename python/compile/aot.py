@@ -1,0 +1,92 @@
+"""AOT lowering: JAX → HLO **text** → artifacts/ for the rust runtime.
+
+HLO text (not `serialize()`d protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming (consumed by rust/src/runtime/artifacts.rs):
+  jump_b{B}.hlo.txt            — jump_lookup   (keys u64[B], n u32[])
+  memento_b{B}_n{N}.hlo.txt    — memento_lookup(keys u64[B], n u32[], table u32[N])
+  hist_b{B}_n{N}.hlo.txt       — balance_histogram(buckets u32[B]) → u32[N]
+
+Variant matrix: one jump batch size, three memento table sizes (the engine
+picks the smallest table ≥ the live cluster's n). Compile time scales with
+the variant count; the defaults keep `make artifacts` under a minute.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch size of every engine dispatch (rust pads tails; multiple of the
+# kernels' BLOCK).
+BATCH = 4096
+
+# Dense-table variants: the engine picks the smallest ≥ n.
+MEMENTO_TABLES = (4096, 16384, 131072)
+HIST_TABLES = (4096,)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_jump(batch: int) -> str:
+    keys = jax.ShapeDtypeStruct((batch,), jnp.uint64)
+    n = jax.ShapeDtypeStruct((), jnp.uint32)
+    return to_hlo_text(jax.jit(model.jump_lookup).lower(keys, n))
+
+
+def lower_memento(batch: int, table: int) -> str:
+    keys = jax.ShapeDtypeStruct((batch,), jnp.uint64)
+    n = jax.ShapeDtypeStruct((), jnp.uint32)
+    tbl = jax.ShapeDtypeStruct((table,), jnp.uint32)
+    return to_hlo_text(jax.jit(model.memento_lookup).lower(keys, n, tbl))
+
+
+def lower_hist(batch: int, table: int) -> str:
+    buckets = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    fn = functools.partial(model.balance_histogram, n_buckets=table)
+    return to_hlo_text(jax.jit(fn).lower(buckets))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument(
+        "--tables",
+        type=lambda s: tuple(int(x) for x in s.split(",")),
+        default=MEMENTO_TABLES,
+        help="comma-separated memento table sizes",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def emit(name: str, text: str) -> None:
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    emit(f"jump_b{args.batch}.hlo.txt", lower_jump(args.batch))
+    for table in args.tables:
+        emit(f"memento_b{args.batch}_n{table}.hlo.txt", lower_memento(args.batch, table))
+    for table in HIST_TABLES:
+        emit(f"hist_b{args.batch}_n{table}.hlo.txt", lower_hist(args.batch, table))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""TPU resource estimator for the L1 kernels (DESIGN.md §Perf).
+
+Pallas runs interpret-mode on CPU here (the image has no TPU), so
+real-hardware performance is *estimated* from the BlockSpec geometry:
+VMEM footprint per block, bytes streamed per key, and expected loop trip
+counts (the paper's Prop. VII.1/2 expectations + the Jump ln(n) walk).
+`python -m compile.estimate` prints the table recorded in EXPERIMENTS.md.
+
+Model (v4-lite-ish single core, round numbers):
+  VMEM budget   16 MiB
+  HBM bandwidth 400 GB/s effective
+  VPU           8 lanes × 128 sublanes × ~940 MHz ≈ 1e12 simple ops/s
+"""
+
+import math
+from dataclasses import dataclass
+
+VMEM_BUDGET = 16 * 1024 * 1024
+HBM_GBPS = 400e9
+VPU_OPS = 1.0e12
+
+# Ops per loop iteration (counted from the kernel bodies).
+JUMP_OPS_PER_ITER = 8  # mul, add, shift, add, div, mul, trunc, select
+MEMENTO_OUTER_OPS = 14  # gather, cmp, mix(6), mod, selects
+MEMENTO_INNER_OPS = 5  # gather, 2 cmp, and, select
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    block: int
+    table: int
+    vmem_bytes: int
+    hbm_bytes_per_key: float
+    expected_iters: float
+    est_ns_per_key_compute: float
+    est_ns_per_key_hbm: float
+
+    @property
+    def bound(self) -> str:
+        return "HBM" if self.est_ns_per_key_hbm >= self.est_ns_per_key_compute else "VPU"
+
+    @property
+    def est_ns_per_key(self) -> float:
+        return max(self.est_ns_per_key_hbm, self.est_ns_per_key_compute)
+
+
+def jump_estimate(block: int, n: int) -> KernelEstimate:
+    # State: keys u64 + b,j i64 + out u32×2 per lane.
+    vmem = block * (8 + 8 + 8 + 4 + 4)
+    iters = math.log(max(n, 2)) + math.log(block)  # E[max over lanes] approx
+    compute = iters * JUMP_OPS_PER_ITER / VPU_OPS * 1e9
+    hbm = (8 + 4) / HBM_GBPS * 1e9  # stream key in, bucket out
+    return KernelEstimate("jump", block, 0, vmem, 12.0, iters, compute, hbm)
+
+
+def memento_estimate(block: int, table: int, n: int, w: int) -> KernelEstimate:
+    vmem = block * (8 + 8 + 8 + 4 + 4 + 4) + table * 4
+    lnr = math.log(max(n, 2) / max(w, 1)) if n > w else 0.0
+    jump_iters = math.log(max(n, 2)) + math.log(block)
+    outer = 1.0 + lnr  # Prop. VII.1 bound (+1 for the settled check)
+    inner = 1.0 + lnr  # Prop. VII.2
+    ops = (
+        jump_iters * JUMP_OPS_PER_ITER
+        + outer * MEMENTO_OUTER_OPS
+        + outer * inner * MEMENTO_INNER_OPS
+    )
+    compute = ops / VPU_OPS * 1e9
+    # Keys stream from HBM; the table is VMEM-resident per epoch.
+    hbm = (8 + 4) / HBM_GBPS * 1e9
+    return KernelEstimate(
+        f"memento(n={n},w={w})", block, table, vmem, 12.0, outer * inner, compute, hbm
+    )
+
+
+def main() -> None:
+    rows = [
+        jump_estimate(2048, 10**6),
+        memento_estimate(2048, 4096, 4000, 4000),
+        memento_estimate(2048, 16384, 10**4, 8 * 10**3),
+        memento_estimate(2048, 131072, 10**5, 3.5 * 10**4),
+        memento_estimate(2048, 131072, 10**5, 10**4),
+    ]
+    hdr = f"{'kernel':<26}{'block':>6}{'table':>8}{'VMEM':>10}{'E[iter]':>9}{'ns/key':>8}  bound"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        assert r.vmem_bytes < VMEM_BUDGET, f"{r.name} exceeds VMEM budget"
+        print(
+            f"{r.name:<26}{r.block:>6}{r.table:>8}{r.vmem_bytes/1024:>9.0f}K"
+            f"{r.expected_iters:>9.1f}{r.est_ns_per_key:>8.3f}  {r.bound}"
+        )
+    print(
+        "\nAll variants fit VMEM with ≥25x headroom. The kernels are VPU-bound\n"
+        "(~0.15-0.25 ns/key of sequential-loop vector work vs ~0.03 ns/key of\n"
+        "HBM streaming): the serial Jump walk dominates, so double-buffering\n"
+        "key blocks fully hides HBM latency and projected TPU throughput is\n"
+        "~4-7 G lookups/s/core — ≈400-600x the measured scalar CPU path,\n"
+        "consistent with the paper's 'runs at CPU speed' framing for Jump\n"
+        "scaled to a vector unit."
+    )
+
+
+if __name__ == "__main__":
+    main()

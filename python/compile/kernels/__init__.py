@@ -1,0 +1,3 @@
+# L1 Pallas kernels. All kernels run with interpret=True: the CPU PJRT
+# plugin cannot execute Mosaic custom-calls, and interpret-mode lowering
+# produces plain HLO the rust runtime can compile (see DESIGN.md section 5).

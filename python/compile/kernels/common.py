@@ -1,0 +1,47 @@
+"""Shared constants + x64 setup for the L1 kernels.
+
+Every constant here has an exact twin in the rust scalar path
+(rust/src/hashing/mix.rs, rust/src/algorithms/mod.rs). The integration test
+`rust/tests/integration_runtime.rs` asserts bit-identical streams across the
+language boundary — do not change one side without the other.
+"""
+
+import jax
+
+# 64-bit integers are mandatory: keys are u64 and the Jump LCG wraps mod 2^64.
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402,F401  (after x64 flag)
+
+# SplitMix64 (Stafford mix13) constants — mix.rs.
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+MIX_A = np.uint64(0xBF58476D1CE4E5B9)
+MIX_B = np.uint64(0x94D049BB133111EB)
+SEED_FOLD = np.uint64(0xA24BAED4963EE407)
+
+# Jump LCG multiplier (Lamping & Veach) — algorithms/mod.rs.
+JUMP_K = np.uint64(2862933555777941757)
+
+# Dense replacement-table sentinel — algorithms/memento.rs NO_REPLACEMENT.
+NO_REPLACEMENT = np.uint32(0xFFFFFFFF)
+
+# Loop bounds for the masked SIMD adaptation (DESIGN.md §2). Lanes that
+# exceed a bound report ok=0 and are re-resolved by the rust scalar path,
+# so these bound *throughput*, not correctness.
+JUMP_MAX_ITERS = 64   # covers n ≤ 2^32: E[iters] = ln(n) ≈ 22, p(>64) ≈ 0
+OUTER_MAX_ITERS = 16  # Memento external loop: E ≈ ln(n/w) (Prop. VII.1)
+INNER_MAX_ITERS = 32  # Memento chain walk: E ≈ ln(n/w) (Prop. VII.2)
+
+
+def splitmix64(z):
+    """The SplitMix64 finalizer over uint64 arrays (twin: mix.rs::splitmix64_mix)."""
+    z = z + GOLDEN
+    z = (z ^ (z >> np.uint64(30))) * MIX_A
+    z = (z ^ (z >> np.uint64(27))) * MIX_B
+    return z ^ (z >> np.uint64(31))
+
+
+def mix2(key, seed):
+    """Two-input mixer used as Alg. 4's `hash(key, b)` (twin: mix.rs::mix2)."""
+    return splitmix64(key ^ (seed * SEED_FOLD))

@@ -1,0 +1,104 @@
+"""L1 kernel: batched JumpHash (Lamping & Veach) — Memento's core engine.
+
+Hardware adaptation (DESIGN.md §2): the paper's data-dependent `while`
+becomes a fixed-trip masked loop. Every lane carries (b, j, key) state;
+converged lanes (j ≥ n) freeze. After JUMP_MAX_ITERS the kernel reports a
+per-lane `ok` flag — non-converged lanes are re-resolved by the rust
+scalar path, so the result is exact at any bound.
+
+The f64 arithmetic inside matches rust's `as f64` / `as i64` semantics
+exactly for the value ranges involved (divisor < 2^31 ⇒ products < 2^62,
+below the f64 53-bit mantissa *only* for b+1 < 2^22 — above that the
+product rounds identically in both languages because both use IEEE
+round-to-nearest for the multiply and then truncate).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common
+
+BLOCK = 2048
+
+
+def _jump_body(_i, state):
+    b, j, key, n = state
+    active = j < n
+    nb = jnp.where(active, j, b)
+    nkey = jnp.where(active, key * common.JUMP_K + np.uint64(1), key)
+    ratio = np.float64(2147483648.0) / ((nkey >> np.uint64(33)) + np.uint64(1)).astype(jnp.float64)
+    nj = jnp.where(
+        active,
+        ((nb + 1).astype(jnp.float64) * ratio).astype(jnp.int64),
+        j,
+    )
+    return nb, nj, nkey, n
+
+
+def jump_walk(keys, n):
+    """The masked Jump walk with data-dependent early exit.
+
+    A `while_loop` instead of a fixed-trip `fori_loop`: the block exits as
+    soon as EVERY lane converged (perf: E[max-lane iters] ≈ ln n + ln B
+    instead of always paying JUMP_MAX_ITERS — see EXPERIMENTS.md §Perf).
+    The cap is retained for exactness bookkeeping: lanes still active at
+    the cap report ok=0 and take the rust scalar path.
+    """
+    b0 = jnp.full(keys.shape, -1, dtype=jnp.int64)
+    j0 = jnp.zeros(keys.shape, dtype=jnp.int64)
+
+    def cond(state):
+        i, b_j_k = state
+        _b, j, _k, nn = b_j_k
+        return (i < common.JUMP_MAX_ITERS) & jnp.any(j < nn)
+
+    def body(state):
+        i, b_j_k = state
+        return i + 1, _jump_body(i, b_j_k)
+
+    _i, (b, j, _k, _n) = jax.lax.while_loop(cond, body, (0, (b0, j0, keys, n)))
+    return b, j >= n
+
+
+def _jump_kernel(key_ref, n_ref, b_ref, ok_ref):
+    keys = key_ref[...]
+    n = n_ref[0].astype(jnp.int64)
+    b, ok = jump_walk(keys, n)
+    b_ref[...] = b.astype(jnp.uint32)
+    ok_ref[...] = ok.astype(jnp.uint32)
+
+
+def jump_batch(keys, n):
+    """Batched jump lookup.
+
+    Args:
+      keys: u64[B] pre-digested keys.
+      n: u32 scalar bucket count (≥ 1).
+
+    Returns:
+      (buckets u32[B], ok u32[B]) — `ok=0` lanes did not converge within
+      the iteration bound and must be resolved scalar-side.
+    """
+    (b,) = keys.shape
+    block = min(BLOCK, b)
+    assert b % block == 0
+    n_arr = jnp.reshape(n.astype(jnp.uint32), (1,))
+    return pl.pallas_call(
+        _jump_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # broadcast scalar n
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=True,
+    )(keys.astype(jnp.uint64), n_arr)

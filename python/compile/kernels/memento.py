@@ -1,0 +1,140 @@
+"""L1 kernel: batched MementoHash lookup (paper Alg. 4) against a dense
+replacement table.
+
+Hardware adaptation (DESIGN.md §2):
+* The Θ(r) replacement hash table becomes a Θ(n) dense array
+  `table[b] = c` (sentinel = working) — the SIMD-friendly freeze, rebuilt
+  per membership epoch by the rust coordinator, never on the lookup path.
+* Both nested loops of Alg. 4 run as fixed-trip masked loops
+  (OUTER_MAX_ITERS × INNER_MAX_ITERS); per-lane `ok` flags mark lanes that
+  converged. Non-converged lanes (astronomically rare at the configured
+  bounds — E[iters] ≈ ln(n/w) per Prop. VII.1/2) are re-resolved by the
+  rust scalar path, keeping the engine bit-exact.
+* The table rides whole in each block's VMEM window (u32[N]; 256 KiB at
+  N = 65536 — within budget, see DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common
+from .jump import jump_walk
+
+BLOCK = 2048
+
+
+def _chain_walk(d, w_b, table, active):
+    """Alg. 4 lines 7-9: chase the replacement chain while u ≥ w_b.
+
+    Early-exit while_loop: a stable epoch pays ONE gather here, not
+    INNER_MAX_ITERS (EXPERIMENTS.md §Perf).
+    """
+
+    def cond(state):
+        i, d, follow_any = state
+        del d
+        return (i < common.INNER_MAX_ITERS) & follow_any
+
+    def step(d):
+        u = jnp.take(table, d.astype(jnp.int64), mode="clip")
+        follow = active & (u != common.NO_REPLACEMENT) & (u >= w_b)
+        return jnp.where(follow, u, d), follow
+
+    def body(state):
+        i, d, _fa = state
+        nd, follow = step(d)
+        return i + 1, nd, jnp.any(follow)
+
+    d0, follow0 = step(d)
+    _i, d, _fa = jax.lax.while_loop(cond, body, (1, d0, jnp.any(follow0)))
+    # If any lane still wants to follow, the bound was hit: poison it.
+    u = jnp.take(table, d.astype(jnp.int64), mode="clip")
+    still = active & (u != common.NO_REPLACEMENT) & (u >= w_b)
+    return d, still
+
+
+def _outer_step(b, inner_bad, table, keys):
+    c = jnp.take(table, b.astype(jnp.int64), mode="clip")
+    active = c != common.NO_REPLACEMENT
+    w_b = c
+    # Alg. 4 lines 5-6: rehash into [0, w_b). w_b ≥ 1 for any replacement
+    # (the cluster is never emptied); guard the inactive lanes anyway.
+    h = common.mix2(keys, b.astype(jnp.uint64))
+    safe_w = jnp.where(active, w_b, np.uint32(1)).astype(jnp.uint64)
+    d = (h % safe_w).astype(jnp.uint32)
+    d, still = _chain_walk(d, w_b, table, active)
+    inner_bad = inner_bad | still
+    b = jnp.where(active, d, b)
+    # A lane is settled once its bucket is working.
+    settled = jnp.take(table, b.astype(jnp.int64), mode="clip") == common.NO_REPLACEMENT
+    return b, inner_bad, settled
+
+
+def _memento_kernel(key_ref, n_ref, table_ref, b_ref, ok_ref):
+    keys = key_ref[...]
+    table = table_ref[...]
+    n = n_ref[0].astype(jnp.int64)
+
+    # Phase 1 — Alg. 4 line 2: Jump over the full b-array (early exit).
+    jb, jump_ok = jump_walk(keys, n)
+    b = jb.astype(jnp.uint32)
+
+    # Phase 2 — the nested replacement loops, early-exit while_loop:
+    # a stable epoch costs ONE gather; E[iters] ≈ ln(n/w) otherwise
+    # (Prop. VII.1).
+    inner_bad0 = jnp.zeros(keys.shape, dtype=bool)
+    settled0 = jnp.take(table, b.astype(jnp.int64), mode="clip") == common.NO_REPLACEMENT
+
+    def cond(state):
+        i, _b, _bad, settled = state
+        return (i < common.OUTER_MAX_ITERS) & ~jnp.all(settled)
+
+    def body(state):
+        i, b, bad, _settled = state
+        nb, nbad, settled = _outer_step(b, bad, table, keys)
+        return i + 1, nb, nbad, settled
+
+    _i, b, inner_bad, settled = jax.lax.while_loop(
+        cond, body, (0, b, inner_bad0, settled0)
+    )
+    b_ref[...] = b
+    ok_ref[...] = (jump_ok & settled & ~inner_bad).astype(jnp.uint32)
+
+
+def memento_batch(keys, n, table):
+    """Batched Memento lookup.
+
+    Args:
+      keys: u64[B] pre-digested keys.
+      n: u32 scalar b-array size (Def. VI.1).
+      table: u32[N] dense replacement table, N ≥ n, padded with
+        NO_REPLACEMENT.
+
+    Returns:
+      (buckets u32[B], ok u32[B]).
+    """
+    (bsz,) = keys.shape
+    (tsz,) = table.shape
+    block = min(BLOCK, bsz)
+    assert bsz % block == 0
+    n_arr = jnp.reshape(n.astype(jnp.uint32), (1,))
+    return pl.pallas_call(
+        _memento_kernel,
+        grid=(bsz // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tsz,), lambda i: (0,)),  # whole table per block
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), jnp.uint32),
+            jax.ShapeDtypeStruct((bsz,), jnp.uint32),
+        ],
+        interpret=True,
+    )(keys.astype(jnp.uint64), n_arr, table.astype(jnp.uint32))

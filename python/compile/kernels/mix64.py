@@ -1,0 +1,38 @@
+"""L1 kernel: SplitMix64 mixing over key blocks.
+
+The `hash(key, b)` of Alg. 4 line 5, batched. Elementwise over the batch —
+pure VPU work, no gathers. BlockSpec tiles the batch into VMEM-sized blocks
+(`BLOCK` u64 lanes = 8·BLOCK bytes per buffer; at 2048 lanes the working
+set is 48 KiB, far under the ~16 MiB VMEM budget — see DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .common import mix2  # noqa: F401  (re-export for model.py)
+
+BLOCK = 2048
+
+
+def _mix2_kernel(key_ref, seed_ref, o_ref):
+    o_ref[...] = common.mix2(key_ref[...], seed_ref[...])
+
+
+def mix2_batch(keys, seeds):
+    """Pallas-batched mix2 over equal-shaped u64 arrays."""
+    (b,) = keys.shape
+    block = min(BLOCK, b)
+    assert b % block == 0, "batch must be a multiple of the block size"
+    return pl.pallas_call(
+        _mix2_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint64),
+        interpret=True,
+    )(keys.astype(jnp.uint64), seeds.astype(jnp.uint64))

@@ -1,0 +1,111 @@
+"""Pure-python correctness oracles (exact integer arithmetic, no jax).
+
+These mirror the rust scalar implementations line-for-line and are the
+ground truth the Pallas kernels are tested against in python/tests/.
+"""
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+MIX_A = 0xBF58476D1CE4E5B9
+MIX_B = 0x94D049BB133111EB
+SEED_FOLD = 0xA24BAED4963EE407
+JUMP_K = 2862933555777941757
+NO_REPLACEMENT = 0xFFFFFFFF
+
+
+def splitmix64(z: int) -> int:
+    """Twin of rust mix.rs::splitmix64_mix."""
+    z = (z + GOLDEN) & MASK64
+    z = ((z ^ (z >> 30)) * MIX_A) & MASK64
+    z = ((z ^ (z >> 27)) * MIX_B) & MASK64
+    return z ^ (z >> 31)
+
+
+def mix2(key: int, seed: int) -> int:
+    """Twin of rust mix.rs::mix2."""
+    return splitmix64(key ^ ((seed * SEED_FOLD) & MASK64))
+
+
+def jump_hash(key: int, n: int) -> int:
+    """Lamping & Veach, exactly as rust algorithms::jump_hash.
+
+    The float math is done through python floats (IEEE f64), matching the
+    rust `as f64` / `as i64` (truncating) semantics for the value ranges
+    involved (b+1 ≤ 2^31, divisor ≤ 2^31: products stay < 2^62, exact).
+    """
+    assert n >= 1
+    b, j = -1, 0
+    while j < n:
+        b = j
+        key = (key * JUMP_K + 1) & MASK64
+        j = int((b + 1) * (float(1 << 31) / float((key >> 33) + 1)))
+    return b
+
+
+def jump_iters(key: int, n: int) -> int:
+    """Number of loop iterations jump_hash makes (for bound validation)."""
+    iters, b, j = 0, -1, 0
+    while j < n:
+        iters += 1
+        b = j
+        key = (key * JUMP_K + 1) & MASK64
+        j = int((b + 1) * (float(1 << 31) / float((key >> 33) + 1)))
+    return iters
+
+
+class MementoRef:
+    """Reference MementoHash (paper Alg. 1-4), exact twin of memento.rs."""
+
+    def __init__(self, n: int):
+        assert n >= 1
+        self.n = n
+        self.last_removed = n
+        self.repl: dict[int, tuple[int, int]] = {}
+
+    @property
+    def working(self) -> int:
+        return self.n - len(self.repl)
+
+    def is_working(self, b: int) -> bool:
+        return b < self.n and b not in self.repl
+
+    def remove(self, b: int) -> None:
+        assert self.is_working(b), f"bucket {b} is not working"
+        assert self.working > 1, "cannot empty the cluster"
+        if not self.repl and b == self.n - 1:
+            self.n -= 1
+            self.last_removed = self.n
+        else:
+            w = self.working
+            self.repl[b] = (w - 1, self.last_removed)
+            self.last_removed = b
+
+    def add(self) -> int:
+        if not self.repl:
+            b = self.n
+            self.n += 1
+            self.last_removed = self.n
+            return b
+        b = self.last_removed
+        _c, p = self.repl.pop(b)
+        self.last_removed = p if self.repl else self.n
+        return b
+
+    def lookup(self, key: int) -> int:
+        b = jump_hash(key, self.n)
+        while b in self.repl:
+            w_b = self.repl[b][0]
+            d = mix2(key, b) % w_b
+            while d in self.repl and self.repl[d][0] >= w_b:
+                d = self.repl[d][0]
+            b = d
+        return b
+
+    def dense_table(self, pad_to: int | None = None) -> list[int]:
+        """table[b] = c for replaced buckets, NO_REPLACEMENT otherwise."""
+        size = pad_to if pad_to is not None else self.n
+        assert size >= self.n
+        t = [NO_REPLACEMENT] * size
+        for b, (c, _p) in self.repl.items():
+            t[b] = c
+        return t

@@ -1,0 +1,66 @@
+"""L2: the batched lookup engines as jitted JAX functions.
+
+Composes the L1 Pallas kernels into the computations the rust runtime
+executes, plus the pure-jnp histogram used by the balance auditor. These
+functions are lowered once by aot.py; python never touches the request
+path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import jump as jump_kernel
+from .kernels import memento as memento_kernel
+from .kernels import mix64
+
+
+def jump_lookup(keys, n):
+    """Engine: batched Jump lookup → (buckets u32[B], ok u32[B])."""
+    b, ok = jump_kernel.jump_batch(keys, n)
+    return b, ok
+
+
+def memento_lookup(keys, n, table):
+    """Engine: batched Memento lookup → (buckets u32[B], ok u32[B])."""
+    b, ok = memento_kernel.memento_batch(keys, n, table)
+    return b, ok
+
+
+def mix2_stream(keys, seeds):
+    """Engine: batched 2-input mixing (diagnostics / key pre-digestion)."""
+    return (mix64.mix2_batch(keys, seeds),)
+
+
+def balance_histogram(buckets, n_buckets: int):
+    """Engine: per-bucket key counts (u32[N]) from bucket ids (u32[B]).
+
+    Out-of-range ids (the padding sentinel u32::MAX) fall outside every
+    bin and are dropped — pure jnp: XLA fuses the one-hot sum into a
+    single scatter-add loop, no Pallas needed for this auxiliary path.
+    """
+    b = buckets.astype(jnp.uint32)
+    counts = jnp.zeros((n_buckets,), dtype=jnp.uint32)
+    in_range = b < jnp.uint32(n_buckets)
+    idx = jnp.where(in_range, b, jnp.uint32(0)).astype(jnp.int32)
+    counts = counts.at[idx].add(in_range.astype(jnp.uint32))
+    return (counts,)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp references (vectorized, non-Pallas) used by the pytest suite to
+# cross-check the kernels at sizes where the exact python-int oracle in
+# kernels/ref.py would be too slow.
+# ---------------------------------------------------------------------------
+
+
+def jump_lookup_jnp(keys, n):
+    """Vectorized jump via the same masked loop, without pallas_call."""
+    from .kernels.common import JUMP_MAX_ITERS
+    from .kernels.jump import _jump_body
+
+    keys = keys.astype(jnp.uint64)
+    n = n.astype(jnp.int64)
+    b0 = jnp.full(keys.shape, -1, dtype=jnp.int64)
+    j0 = jnp.zeros(keys.shape, dtype=jnp.int64)
+    b, j, _k, _n = jax.lax.fori_loop(0, JUMP_MAX_ITERS, _jump_body, (b0, j0, keys, n))
+    return b.astype(jnp.uint32), (j >= n).astype(jnp.uint32)

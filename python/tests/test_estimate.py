@@ -1,0 +1,33 @@
+"""The TPU estimator must agree with the compiled variant geometry."""
+
+from compile import aot, estimate
+
+
+def test_all_variants_fit_vmem():
+    for table in aot.MEMENTO_TABLES:
+        e = estimate.memento_estimate(2048, table, table, max(table // 2, 1))
+        assert e.vmem_bytes < estimate.VMEM_BUDGET
+
+
+def test_iteration_model_tracks_removals():
+    light = estimate.memento_estimate(2048, 131072, 10**5, 9 * 10**4)
+    heavy = estimate.memento_estimate(2048, 131072, 10**5, 10**4)
+    assert heavy.expected_iters > light.expected_iters
+    assert heavy.est_ns_per_key >= light.est_ns_per_key
+
+
+def test_jump_estimate_monotone_in_n():
+    small = estimate.jump_estimate(2048, 10**3)
+    big = estimate.jump_estimate(2048, 10**6)
+    assert big.expected_iters > small.expected_iters
+
+
+def test_kernels_are_vpu_bound_with_hbm_hidden():
+    # The DESIGN.md §Perf claim: the serial loop work dominates streaming,
+    # so key-block double-buffering fully hides HBM latency.
+    for e in [
+        estimate.jump_estimate(2048, 10**6),
+        estimate.memento_estimate(2048, 131072, 10**5, 3 * 10**4),
+    ]:
+        assert e.bound == "VPU", f"{e.name} unexpectedly {e.bound}-bound"
+        assert e.est_ns_per_key_hbm < e.est_ns_per_key_compute

@@ -1,0 +1,163 @@
+"""Pallas kernels vs the exact python-int oracle — the core L1 correctness
+signal, including hypothesis sweeps over shapes, sizes and removal
+patterns."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import common, ref
+from compile.kernels.jump import jump_batch
+from compile.kernels.memento import memento_batch
+from compile.kernels.mix64 import mix2_batch
+
+
+def rand_keys(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 2**64, n, dtype=np.uint64)
+
+
+# ---------------------------------------------------------------- mix2 ----
+
+
+def test_mix2_matches_oracle():
+    ks = rand_keys(256, 1)
+    seeds = rand_keys(256, 2)
+    out = np.asarray(mix2_batch(jnp.asarray(ks), jnp.asarray(seeds)))
+    for k, s, o in zip(ks, seeds, out):
+        assert int(o) == ref.mix2(int(k), int(s))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**64 - 1),
+    st.integers(min_value=0, max_value=2**64 - 1),
+)
+def test_mix2_hypothesis(key, seed):
+    out = np.asarray(
+        mix2_batch(
+            jnp.full((8,), key, dtype=jnp.uint64), jnp.full((8,), seed, dtype=jnp.uint64)
+        )
+    )
+    assert all(int(o) == ref.mix2(key, seed) for o in out)
+
+
+# ---------------------------------------------------------------- jump ----
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 10, 1000, 10**6, 2**31 - 1])
+def test_jump_matches_oracle(n):
+    ks = rand_keys(512, n % 97)
+    b, ok = jump_batch(jnp.asarray(ks), jnp.uint32(n))
+    b, ok = np.asarray(b), np.asarray(ok)
+    assert ok.all(), f"non-converged lanes at n={n}: {int(ok.sum())}/512"
+    for k, got in zip(ks, b):
+        assert int(got) == ref.jump_hash(int(k), n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=2**31 - 1),
+    st.integers(min_value=0, max_value=2**32),
+)
+def test_jump_hypothesis(n, seed):
+    ks = rand_keys(64, seed)
+    b, ok = jump_batch(jnp.asarray(ks), jnp.uint32(n))
+    assert np.asarray(ok).all()
+    for k, got in zip(ks, np.asarray(b)):
+        assert int(got) == ref.jump_hash(int(k), n)
+
+
+def test_jump_iteration_bound_is_generous():
+    # The paper's complexity argument: E[iters] = O(ln n). Empirically the
+    # p100 over 20k keys at n=2^31 must sit far below JUMP_MAX_ITERS.
+    worst = max(ref.jump_iters(int(k), 2**31 - 1) for k in rand_keys(20000, 3))
+    assert worst < common.JUMP_MAX_ITERS - 10, worst
+
+
+# ------------------------------------------------------------- memento ----
+
+
+def build_ref(w, removals, seed):
+    m = ref.MementoRef(w)
+    rng = np.random.default_rng(seed)
+    for _ in range(removals):
+        working = [b for b in range(m.n) if m.is_working(b)]
+        if len(working) <= 1:
+            break
+        m.remove(int(rng.choice(working)))
+    return m
+
+
+@pytest.mark.parametrize(
+    "w,removals",
+    [(10, 0), (10, 5), (100, 30), (100, 90), (1000, 650), (2048, 500), (4000, 3600)],
+)
+def test_memento_matches_oracle(w, removals):
+    m = build_ref(w, removals, seed=w + removals)
+    pad = max(64, 1 << (m.n - 1).bit_length())
+    table = jnp.asarray(np.array(m.dense_table(pad_to=pad), dtype=np.uint32))
+    ks = rand_keys(512, removals)
+    b, ok = memento_batch(jnp.asarray(ks), jnp.uint32(m.n), table)
+    b, ok = np.asarray(b), np.asarray(ok)
+    converged = int(ok.sum())
+    assert converged >= 510, f"convergence too low: {converged}/512"
+    for k, got, o in zip(ks, b, ok):
+        if o:
+            assert int(got) == m.lookup(int(k)), f"w={w} removals={removals} key={k}"
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=500),
+    st.floats(min_value=0.0, max_value=0.9),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_memento_hypothesis(w, frac, seed):
+    m = build_ref(w, int(w * frac), seed)
+    pad = max(64, 1 << (m.n - 1).bit_length())
+    table = jnp.asarray(np.array(m.dense_table(pad_to=pad), dtype=np.uint32))
+    ks = rand_keys(64, seed)
+    b, ok = memento_batch(jnp.asarray(ks), jnp.uint32(m.n), table)
+    for k, got, o in zip(ks, np.asarray(b), np.asarray(ok)):
+        if o:
+            assert int(got) == m.lookup(int(k))
+
+
+def test_memento_ok_flag_is_meaningful():
+    # A stable cluster must fully converge (jump bound is the only limit).
+    m = ref.MementoRef(1000)
+    table = jnp.asarray(np.array(m.dense_table(pad_to=1024), dtype=np.uint32))
+    ks = rand_keys(2048, 9)
+    _b, ok = memento_batch(jnp.asarray(ks), jnp.uint32(1000), table)
+    assert np.asarray(ok).all()
+
+
+def test_memento_never_returns_removed_bucket_when_ok():
+    m = build_ref(300, 200, seed=7)
+    removed = set(m.repl)
+    table = jnp.asarray(np.array(m.dense_table(pad_to=512), dtype=np.uint32))
+    ks = rand_keys(2048, 8)
+    b, ok = memento_batch(jnp.asarray(ks), jnp.uint32(m.n), table)
+    for got, o in zip(np.asarray(b), np.asarray(ok)):
+        if o:
+            assert int(got) not in removed
+            assert int(got) < m.n
+
+
+# ----------------------------------------------------------- histogram ----
+
+
+def test_histogram_matches_numpy():
+    buckets = np.random.default_rng(0).integers(0, 64, 4096, dtype=np.uint32)
+    (h,) = model.balance_histogram(jnp.asarray(buckets), 64)
+    np.testing.assert_array_equal(np.asarray(h), np.bincount(buckets, minlength=64))
+
+
+def test_histogram_drops_out_of_range():
+    buckets = np.array([0, 1, 63, 64, 2**32 - 1], dtype=np.uint32)
+    (h,) = model.balance_histogram(jnp.asarray(buckets), 64)
+    h = np.asarray(h)
+    assert h.sum() == 3
+    assert h[0] == 1 and h[1] == 1 and h[63] == 1

@@ -1,0 +1,103 @@
+"""The pure-python oracle itself is tested against the paper's worked
+examples (the same ones the rust unit tests pin), so both language's
+implementations are anchored to the same ground truth."""
+
+from compile.kernels import ref
+
+
+def test_paper_example_section_v_b():
+    m = ref.MementoRef(10)
+    m.remove(9)
+    assert m.n == 9 and not m.repl
+    m.remove(5)
+    assert m.repl[5] == (8, 9)
+    m.remove(1)
+    assert m.repl[1] == (7, 5)
+    assert m.working == 7
+    assert m.last_removed == 1
+
+
+def test_paper_example_fig13():
+    m = ref.MementoRef(6)
+    for b in (0, 3, 5):
+        m.remove(b)
+    assert m.repl == {0: (5, 6), 3: (4, 0), 5: (3, 3)}
+    working = {b for b in range(6) if m.is_working(b)}
+    assert working == {1, 2, 4}
+    for k in range(5000):
+        assert m.lookup(ref.splitmix64(k)) in working
+
+
+def test_add_restores_lifo():
+    m = ref.MementoRef(6)
+    for b in (0, 3, 5):
+        m.remove(b)
+    assert m.add() == 5
+    assert m.add() == 3
+    assert m.add() == 0
+    assert not m.repl
+    assert m.add() == 6  # tail growth
+    assert m.n == 7
+
+
+def test_lifo_equivalence_with_jump():
+    m = ref.MementoRef(64)
+    keys = [ref.splitmix64(k) for k in range(2000)]
+    for k in keys:
+        assert m.lookup(k) == ref.jump_hash(k, 64)
+    for tail in range(63, 33, -1):
+        m.remove(tail)
+    assert not m.repl
+    for k in keys:
+        assert m.lookup(k) == ref.jump_hash(k, 34)
+
+
+def test_minimal_disruption():
+    m = ref.MementoRef(20)
+    keys = [ref.splitmix64(k) for k in range(20000)]
+    before = [m.lookup(k) for k in keys]
+    m.remove(7)
+    for k, old in zip(keys, before):
+        new = m.lookup(k)
+        if old != 7:
+            assert new == old
+        else:
+            assert new != 7 and m.is_working(new)
+
+
+def test_balance_after_removals():
+    m = ref.MementoRef(30)
+    for b in (3, 17, 8, 22, 1, 29, 14, 6, 19, 27):
+        m.remove(b)
+    counts: dict[int, int] = {}
+    n_keys = 100_000
+    for k in range(n_keys):
+        b = m.lookup(ref.splitmix64(k))
+        counts[b] = counts.get(b, 0) + 1
+    ideal = n_keys / m.working
+    assert len(counts) == m.working
+    for b, c in counts.items():
+        assert abs(c - ideal) / ideal < 0.12, (b, c, ideal)
+
+
+def test_dense_table_roundtrip():
+    m = ref.MementoRef(12)
+    for b in (2, 7, 4):
+        m.remove(b)
+    t = m.dense_table(pad_to=16)
+    assert len(t) == 16
+    for b in range(12):
+        if b in m.repl:
+            assert t[b] == m.repl[b][0]
+        else:
+            assert t[b] == ref.NO_REPLACEMENT
+    assert all(x == ref.NO_REPLACEMENT for x in t[12:])
+
+
+def test_jump_growth_property():
+    for k in (1, 42, 0xDEADBEEF):
+        key = ref.splitmix64(k)
+        for n in range(1, 200):
+            b1 = ref.jump_hash(key, n)
+            b2 = ref.jump_hash(key, n + 1)
+            assert b2 == b1 or b2 == n

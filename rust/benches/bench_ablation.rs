@@ -1,0 +1,170 @@
+//! Ablations of Memento's design choices (DESIGN.md §4):
+//!
+//! 1. **Inner-loop guard** (`u ≥ w_b`, Alg. 4 line 7): the paper's
+//!    Fig. 13-16 argues this guard is what preserves balance. We measure
+//!    the max per-bucket deviation with and without it.
+//! 2. **Rehash function** (Note III.1): Memento assumes a uniform hash for
+//!    the Alg. 4 line-5 rehash. We sweep SplitMix64 (default), xxHash64,
+//!    Murmur3-fmix64-alike and the deliberately weak FNV-1a, measuring
+//!    both balance and lookup latency.
+//! 3. **Replacement-map load factor** is covered indirectly: ReplMap grows
+//!    at 3/4 occupancy; we report lookup latency at several removal levels
+//!    to show probe-length stability.
+
+use memento::algorithms::{ConsistentHasher, Memento, RemovalOrder};
+use memento::benchkit::report::Table;
+use memento::benchkit::{self, BenchConfig};
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::hashing::{self, Hasher64};
+use memento::simulator::{audit, scenario};
+use std::sync::Arc;
+
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+fn main() {
+    ablation_inner_guard();
+    ablation_rehash_function();
+    ablation_replmap_under_churn();
+    ablation_bounded_load();
+}
+
+/// §X bounded loads: the balance/placement-cost trade as c varies.
+fn ablation_bounded_load() {
+    use memento::algorithms::bounded::BoundedLoad;
+    let mut t = Table::new(
+        "Ablation — bounded loads (CHBL over memento, w=100, k=300 keys)",
+        &["c", "peak_to_avg", "unbounded_peak_to_avg", "assign_ns"],
+    );
+    let ks = keys(300, 0x6F);
+    // Unbounded baseline.
+    let m = Memento::new(100);
+    let mut loads = std::collections::HashMap::<u32, u64>::new();
+    for &k in &ks {
+        *loads.entry(m.lookup(k)).or_default() += 1;
+    }
+    let unbounded = *loads.values().max().unwrap() as f64 * 100.0 / ks.len() as f64;
+    let cfg = BenchConfig::quick();
+    for c in [1.05f64, 1.25, 1.5, 2.0] {
+        let mut bl = BoundedLoad::new(Memento::new(100), c);
+        for &k in &ks {
+            bl.assign(k);
+        }
+        let peak = bl.peak_to_avg();
+        // Assignment walk cost (fresh placements, steady churn).
+        let mut i = 0usize;
+        let stats = benchkit::bench(&format!("assign c={c}"), &cfg, || {
+            let k = ks[i % ks.len()];
+            bl.release(k);
+            benchkit::black_box(bl.assign(k));
+            i += 1;
+        });
+        t.push_row(vec![
+            format!("{c:.2}"),
+            format!("{peak:.3}"),
+            format!("{unbounded:.3}"),
+            format!("{:.0}", stats.median_ns),
+        ]);
+    }
+    t.emit("ablation_bounded_load");
+}
+
+/// Fig. 13-16 ablation: balance with vs without the inner guard.
+fn ablation_inner_guard() {
+    let mut t = Table::new(
+        "Ablation — inner-loop guard (u ≥ w_b): balance impact",
+        &["w", "removed", "guarded_maxdev", "unguarded_maxdev", "guard_wins"],
+    );
+    let ks = keys(200_000, 0x6A);
+    let mut rng = Xoshiro256::new(0x6B);
+    for (w, removals) in [(6usize, 3usize), (50, 30), (500, 300), (2000, 1300)] {
+        let mut m = Memento::new(w);
+        scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
+        let guarded = audit::balance(&m, &ks).max_deviation;
+        // Unguarded variant over the same state.
+        let working = m.working_buckets();
+        let mut counts = std::collections::HashMap::<u32, u64>::new();
+        for &k in &ks {
+            *counts.entry(m.lookup_unguarded(k)).or_default() += 1;
+        }
+        let ideal = ks.len() as f64 / working.len() as f64;
+        let unguarded = working
+            .iter()
+            .map(|b| (counts.get(b).copied().unwrap_or(0) as f64 - ideal).abs() / ideal)
+            .fold(0.0f64, f64::max);
+        t.push_row(vec![
+            w.to_string(),
+            removals.to_string(),
+            format!("{guarded:.4}"),
+            format!("{unguarded:.4}"),
+            (guarded < unguarded).to_string(),
+        ]);
+    }
+    t.emit("ablation_inner_guard");
+}
+
+/// Note III.1 ablation: the rehash function.
+fn ablation_rehash_function() {
+    let mut t = Table::new(
+        "Ablation — rehash function (Note III.1)",
+        &["hash", "maxdev", "chi2_uniform", "lookup_ns"],
+    );
+    let ks = keys(150_000, 0x6C);
+    let cfg = BenchConfig::quick();
+    let hashers: Vec<(&str, Option<Arc<dyn Hasher64>>)> = vec![
+        ("splitmix64(default)", None),
+        ("xxhash64", Some(Arc::new(hashing::xxhash::XxHash64))),
+        ("murmur3", Some(Arc::new(hashing::murmur3::Murmur3_128))),
+        ("fnv1a(weak)", Some(Arc::new(hashing::fnv::Fnv1a64))),
+    ];
+    for (label, hasher) in hashers {
+        let mut m = match &hasher {
+            None => Memento::new(1000),
+            Some(h) => Memento::with_hasher(1000, h.clone()),
+        };
+        let mut rng = Xoshiro256::new(0x6D);
+        scenario::apply_removals(&mut m, 650, RemovalOrder::Random, &mut rng);
+        let rep = audit::balance(&m, &ks);
+        let mut i = 0usize;
+        let stats = benchkit::bench(label, &cfg, || {
+            benchkit::black_box(m.lookup(benchkit::black_box(ks[i])));
+            i = (i + 1) % ks.len();
+        });
+        t.push_row(vec![
+            label.into(),
+            format!("{:.4}", rep.max_deviation),
+            rep.is_uniform(6.0).to_string(),
+            format!("{:.1}", stats.median_ns),
+        ]);
+    }
+    t.emit("ablation_rehash");
+}
+
+/// ReplMap probe-length stability: lookup latency as R fills.
+fn ablation_replmap_under_churn() {
+    let mut t = Table::new(
+        "Ablation — ReplMap occupancy vs lookup latency",
+        &["w", "removed", "r_bytes", "lookup_ns"],
+    );
+    let cfg = BenchConfig::quick();
+    let ks = keys(100_000, 0x6E);
+    for removals in [0usize, 1000, 5000, 20_000, 50_000] {
+        let mut m = Memento::new(100_000);
+        let mut rng = Xoshiro256::new(3);
+        scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
+        let mut i = 0usize;
+        let stats = benchkit::bench(&format!("churn{removals}"), &cfg, || {
+            benchkit::black_box(m.lookup(benchkit::black_box(ks[i])));
+            i = (i + 1) % ks.len();
+        });
+        t.push_row(vec![
+            "100000".into(),
+            removals.to_string(),
+            m.state_bytes().to_string(),
+            format!("{:.1}", stats.median_ns),
+        ]);
+    }
+    t.emit("ablation_replmap");
+}

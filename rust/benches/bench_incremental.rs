@@ -1,0 +1,47 @@
+//! Figs. 23-26 — incremental removals (10%…90%) from a large cluster,
+//! both orders: lookup time (23/24) and memory usage (25/26).
+//!
+//! Paper shape: best case, Dx is the clear worst performer and
+//! Memento ≈ Jump; worst case, Anchor is slowest until ~65% removals,
+//! after which Memento and Dx degrade past it (the crossover the paper
+//! calls out in §VIII-D).
+
+use memento::simulator::{figures, Scale, ScenarioConfig};
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = ScenarioConfig::default();
+    let t = figures::fig_23_26_incremental(scale, &cfg);
+    t.emit("fig_23_26_incremental");
+
+    // Crossover report: the *persistent* point past which memento stays
+    // behind anchor in the worst case (single-cell comparisons at low
+    // fractions sit within timing noise — the two are nearly equal there).
+    let mut rows: Vec<(String, f64, f64)> = Vec::new(); // (algo, frac, ns)
+    for r in &t.rows {
+        if r[4] == "worst(random)" {
+            rows.push((r[0].clone(), r[3].parse().unwrap(), r[5].parse().unwrap()));
+        }
+    }
+    let find = |name: &str, frac: f64| {
+        rows.iter()
+            .find(|(a, f, _)| a == name && (f - frac).abs() < 1e-9)
+            .map(|(_, _, ns)| *ns)
+    };
+    let crossover = figures::INCREMENTAL_FRACS
+        .iter()
+        .rev()
+        .take_while(|&&frac| match (find("memento", frac), find("anchor", frac)) {
+            (Some(m), Some(a)) => m > a,
+            _ => false,
+        })
+        .last()
+        .copied();
+    match crossover {
+        Some(f) => println!(
+            "crossover: memento persistently behind anchor from {:.0}% removals on (paper: ~65%)",
+            f * 100.0
+        ),
+        None => println!("crossover: memento stayed ahead of anchor through 90% removals"),
+    }
+}

@@ -1,0 +1,14 @@
+//! Figs. 19-22 — one-shot removal of 90% of the nodes, best (LIFO) and
+//! worst (random) case: memory usage (19/20) and lookup time (21/22).
+//!
+//! Paper shape: best case, Memento+Jump flat & tiny memory, fast lookups;
+//! worst case, Memento's memory grows with r but stays below Anchor/Dx,
+//! Anchor slightly ahead of Memento on lookups, Dx slowest.
+
+use memento::simulator::{figures, Scale, ScenarioConfig};
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = ScenarioConfig::default();
+    figures::fig_19_22_oneshot(scale, &cfg).emit("fig_19_22_oneshot");
+}

@@ -1,0 +1,14 @@
+//! Figs. 27-32 — §VIII-E sensitivity to the a/w over-provisioning ratio
+//! (5/10/20/50/100) at 0%, 20% and 65% removals: lookup time and memory.
+//!
+//! Paper shape: Dx lookup grows linearly with the ratio, Anchor
+//! logarithmically; both algorithms' memory grows linearly; Memento is a
+//! flat baseline (it has no capacity bound at all).
+
+use memento::simulator::{figures, Scale, ScenarioConfig};
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = ScenarioConfig::default();
+    figures::fig_27_32_sensitivity(scale, &cfg).emit("fig_27_32_sensitivity");
+}

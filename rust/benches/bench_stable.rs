@@ -1,0 +1,22 @@
+//! Figs. 17 + 18 — stable scenario: lookup time and memory usage vs
+//! cluster size (10 … 10⁶ paper-scale; `MEMENTO_BENCH_SCALE=full`).
+//!
+//! Paper shape to reproduce: Memento ≈ Jump on lookups, both clearly
+//! faster than Anchor and Dx; memory Jump ≤ Memento ≪ Dx < Anchor.
+
+use memento::simulator::{figures, Scale, ScenarioConfig};
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = ScenarioConfig::default();
+    let t = figures::fig_17_18_stable(scale, &cfg);
+    t.emit("fig_17_18_stable");
+    let findings = figures::check_stable_shape(&t);
+    if findings.is_empty() {
+        println!("shape check: OK (memento ≤ dx on lookup and memory at every size)");
+    } else {
+        for f in findings {
+            println!("shape check: {f}");
+        }
+    }
+}

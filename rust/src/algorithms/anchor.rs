@@ -1,0 +1,295 @@
+//! **AnchorHash** (Mendelson, Vargaftik, Barabash, Lorenz, Keslassy, Orda;
+//! 2020) — the *in-place* variant (four integer arrays), as benchmarked by
+//! the paper (§VIII: "the in-place version of Anchor").
+//!
+//! Anchor fixes the overall cluster capacity `a` at init and tracks every
+//! bucket, working or not (§IV-B). Lookup takes O(ln²(a/w)); memory is
+//! Θ(a) regardless of how many buckets were ever removed — the cost Memento
+//! eliminates.
+//!
+//! Implementation follows Algorithm 3 of the AnchorHash paper:
+//! * `A[b]` — size of the working set at the moment `b` was removed
+//!   (0 ⇒ working);
+//! * `W` — the working-set array: `W[0..N-1]` are the working buckets;
+//! * `L[b]` — `b`'s position in `W`;
+//! * `K[b]` — the successor (the bucket that filled `b`'s seat).
+//! Removed buckets are kept on a LIFO stack `R` for re-addition.
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use crate::hashing::mix::mix2;
+
+/// AnchorHash, in-place variant.
+#[derive(Debug, Clone)]
+pub struct Anchor {
+    a: u32,
+    n: u32, // |working| — the AnchorHash paper's N
+    array_a: Vec<u32>,
+    w: Vec<u32>,
+    l: Vec<u32>,
+    k: Vec<u32>,
+    r: Vec<u32>, // removal stack
+}
+
+impl Anchor {
+    /// Initialize with overall capacity `a` and `w ≤ a` initial working
+    /// buckets (INITANCHOR).
+    pub fn new(a: usize, w: usize) -> Self {
+        assert!(w >= 1, "need at least one working bucket");
+        assert!(w <= a, "working set must fit the capacity");
+        let a32 = u32::try_from(a).expect("capacity fits u32");
+        let w32 = w as u32;
+        let mut s = Self {
+            a: a32,
+            n: w32,
+            array_a: vec![0; a],
+            w: (0..a32).collect(),
+            l: (0..a32).collect(),
+            k: (0..a32).collect(),
+            r: Vec::with_capacity(a - w),
+        };
+        // Buckets a-1 … w start removed (in that order, so the stack pops
+        // w first).
+        for b in (w32..a32).rev() {
+            s.r.push(b);
+            s.array_a[b as usize] = b;
+        }
+        s
+    }
+
+    /// The capacity `a` this cluster was frozen at.
+    pub fn capacity(&self) -> usize {
+        self.a as usize
+    }
+}
+
+impl ConsistentHasher for Anchor {
+    /// GETBUCKET(k).
+    #[inline]
+    fn lookup(&self, key: u64) -> u32 {
+        let mut b = (mix2(key, 0xA11C0) % self.a as u64) as u32;
+        loop {
+            let ab = self.array_a[b as usize];
+            if ab == 0 {
+                return b; // working
+            }
+            // h ← h_b(key), uniform in [0, A[b])
+            let mut h = (mix2(key, b as u64) % ab as u64) as u32;
+            while self.array_a[h as usize] >= ab {
+                h = self.k[h as usize];
+            }
+            b = h;
+        }
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        let mut t = LookupTrace::default();
+        let mut b = (mix2(key, 0xA11C0) % self.a as u64) as u32;
+        loop {
+            let ab = self.array_a[b as usize];
+            if ab == 0 {
+                t.bucket = b;
+                return t;
+            }
+            t.outer_iters += 1;
+            let mut h = (mix2(key, b as u64) % ab as u64) as u32;
+            while self.array_a[h as usize] >= ab {
+                t.inner_iters += 1;
+                h = self.k[h as usize];
+            }
+            b = h;
+        }
+    }
+
+    /// ADDBUCKET().
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let Some(b) = self.r.pop() else {
+            return Err(AlgoError::CapacityExhausted { capacity: self.a as usize });
+        };
+        let n = self.n as usize;
+        self.array_a[b as usize] = 0;
+        // W[N] still holds the bucket that took b's seat (stale but
+        // preserved under LIFO): put it back at position N.
+        let x = self.w[n];
+        self.l[x as usize] = n as u32;
+        self.w[self.l[b as usize] as usize] = b;
+        self.k[b as usize] = b;
+        self.n += 1;
+        Ok(b)
+    }
+
+    /// REMOVEBUCKET(b).
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        if b >= self.a || self.array_a[b as usize] != 0 {
+            return Err(AlgoError::NotWorking(b));
+        }
+        if self.n == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.r.push(b);
+        self.n -= 1;
+        let n = self.n as usize;
+        self.array_a[b as usize] = self.n;
+        let wn = self.w[n];
+        let lb = self.l[b as usize] as usize;
+        self.w[lb] = wn;
+        self.l[wn as usize] = lb as u32;
+        self.k[b as usize] = wn;
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.n as usize
+    }
+
+    fn size(&self) -> usize {
+        self.a as usize
+    }
+
+    fn capacity_bound(&self) -> Option<usize> {
+        Some(self.a as usize)
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        b < self.a && self.array_a[b as usize] == 0
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.w[..self.n as usize].to_vec();
+        v.sort_unstable();
+        v
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Θ(a): four u32 arrays of size a plus the removal stack capacity.
+        (self.array_a.len() + self.w.len() + self.l.len() + self.k.len() + self.r.capacity())
+            * std::mem::size_of::<u32>()
+    }
+
+    fn name(&self) -> &'static str {
+        "anchor"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn lookup_hits_working_buckets_only() {
+        let mut an = Anchor::new(100, 60);
+        for b in [3u32, 41, 17, 55, 8, 22] {
+            an.remove(b).unwrap();
+        }
+        for k in 0..20_000u64 {
+            let key = splitmix64_mix(k);
+            let b = an.lookup(key);
+            assert!(an.is_working(b), "key {k} -> removed/reserved bucket {b}");
+        }
+    }
+
+    #[test]
+    fn initial_working_set_is_prefix() {
+        let an = Anchor::new(10, 4);
+        assert_eq!(an.working_buckets(), vec![0, 1, 2, 3]);
+        assert_eq!(an.working(), 4);
+        for k in 0..5_000u64 {
+            assert!(an.lookup(splitmix64_mix(k)) < 4);
+        }
+    }
+
+    #[test]
+    fn add_restores_lifo_and_respects_capacity() {
+        let mut an = Anchor::new(6, 6);
+        an.remove(2).unwrap();
+        an.remove(4).unwrap();
+        assert_eq!(an.add().unwrap(), 4);
+        assert_eq!(an.add().unwrap(), 2);
+        assert!(matches!(an.add(), Err(AlgoError::CapacityExhausted { .. })));
+    }
+
+    #[test]
+    fn minimal_disruption() {
+        let mut an = Anchor::new(50, 30);
+        let keys: Vec<u64> = (0..30_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| an.lookup(*k)).collect();
+        an.remove(11).unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            let new = an.lookup(*k);
+            if *old != 11 {
+                assert_eq!(new, *old, "non-removed key moved");
+            } else {
+                assert!(an.is_working(new));
+            }
+        }
+    }
+
+    #[test]
+    fn monotonicity() {
+        let mut an = Anchor::new(50, 30);
+        an.remove(7).unwrap();
+        let keys: Vec<u64> = (0..30_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| an.lookup(*k)).collect();
+        let b = an.add().unwrap();
+        assert_eq!(b, 7);
+        for (k, old) in keys.iter().zip(&before) {
+            let new = an.lookup(*k);
+            assert!(new == *old || new == b);
+        }
+    }
+
+    #[test]
+    fn balance_rough() {
+        let mut an = Anchor::new(100, 20);
+        for b in [1u32, 5, 9, 13] {
+            an.remove(b).unwrap();
+        }
+        let nkeys = 160_000u64;
+        let mut counts = std::collections::HashMap::<u32, u64>::new();
+        for k in 0..nkeys {
+            *counts.entry(an.lookup(splitmix64_mix(k))).or_default() += 1;
+        }
+        assert_eq!(counts.len(), 16);
+        let ideal = nkeys as f64 / 16.0;
+        for (b, c) in counts {
+            let dev = (c as f64 - ideal).abs() / ideal;
+            assert!(dev < 0.10, "bucket {b} count {c} dev {dev:.3}");
+        }
+    }
+
+    #[test]
+    fn memory_is_theta_a() {
+        let small = Anchor::new(1_000, 100).state_bytes();
+        let big = Anchor::new(10_000, 100).state_bytes();
+        assert!(big > small * 8, "memory must scale with capacity a");
+    }
+
+    #[test]
+    fn deep_removal_chain_stays_correct() {
+        // Remove most buckets to force long K-chains, then verify totality.
+        let mut an = Anchor::new(64, 64);
+        let mut order: Vec<u32> = (0..64).collect();
+        // Deterministic scramble.
+        for i in 0..order.len() {
+            let j = (splitmix64_mix(i as u64) % order.len() as u64) as usize;
+            order.swap(i, j);
+        }
+        for &b in order.iter().take(56) {
+            an.remove(b).unwrap();
+        }
+        assert_eq!(an.working(), 8);
+        for k in 0..20_000u64 {
+            let b = an.lookup(splitmix64_mix(k));
+            assert!(an.is_working(b));
+        }
+        // Restore everything; lookups must again cover 0..64 uniformly-ish.
+        while an.working() < 64 {
+            an.add().unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..50_000u64 {
+            seen.insert(an.lookup(splitmix64_mix(k)));
+        }
+        assert_eq!(seen.len(), 64);
+    }
+}

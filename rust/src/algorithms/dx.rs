@@ -1,0 +1,284 @@
+//! **DxHash** (Dong & Wang, 2021) — "a scalable consistent hash based on
+//! the pseudo-random sequence".
+//!
+//! Dx keeps a bit-array over the full capacity `a` marking which buckets
+//! are active (§IV-C) — much smaller than Anchor's four integer arrays but
+//! still Θ(a). Lookup draws a pseudo-random probe sequence seeded by the
+//! key and returns the first active bucket: O(a/w) expected probes, the
+//! cost that explodes in the paper's sensitivity analysis (Figs. 27/29/31).
+//!
+//! The probe sequence here is `mix2(key, i) mod a` for i = 0, 1, … — a
+//! uniform independent-probe sequence, statistically equivalent to the
+//! paper's NSArray pseudo-random walk for the metrics under study (each
+//! probe is uniform over `[0, a)`, so the first-active-hit distribution and
+//! the expected probe count `a/w` are identical). A deterministic scan
+//! fallback after `MAX_PROBES` keeps the lookup total (probability
+//! `(1-w/a)^MAX_PROBES`, ≤ e^-53 at the paper's worst ratio a/w ≈ 286).
+//!
+//! A LIFO stack of removed buckets drives re-addition, mirroring the
+//! paper's benchmark harness ("storing the order of the removals" — §VIII-E
+//! explains Dx/Anchor memory deltas by exactly this structure).
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use crate::hashing::mix::mix2;
+
+/// Probe budget before falling back to a linear scan (totality guard).
+pub const MAX_PROBES: u32 = 16_384;
+
+/// DxHash.
+#[derive(Debug, Clone)]
+pub struct Dx {
+    a: u32,
+    working: u32,
+    /// Active-bucket bit array (the NSArray).
+    bits: Vec<u64>,
+    /// LIFO stack of removed buckets (drives `add`).
+    removed: Vec<u32>,
+}
+
+impl Dx {
+    pub fn new(a: usize, w: usize) -> Self {
+        assert!(w >= 1, "need at least one working bucket");
+        assert!(w <= a, "working set must fit capacity");
+        let a32 = u32::try_from(a).expect("capacity fits u32");
+        let mut s = Self {
+            a: a32,
+            working: w as u32,
+            bits: vec![0u64; a.div_ceil(64)],
+            removed: Vec::new(),
+        };
+        for b in 0..w as u32 {
+            s.set_active(b, true);
+        }
+        // Reserved (never-yet-added) buckets live on the stack too, so the
+        // cluster can grow to capacity: push a-1 … w so that w pops first.
+        for b in (w as u32..a32).rev() {
+            s.removed.push(b);
+        }
+        s
+    }
+
+    #[inline(always)]
+    fn is_active(&self, b: u32) -> bool {
+        (self.bits[(b >> 6) as usize] >> (b & 63)) & 1 == 1
+    }
+
+    fn set_active(&mut self, b: u32, on: bool) {
+        let w = &mut self.bits[(b >> 6) as usize];
+        if on {
+            *w |= 1 << (b & 63);
+        } else {
+            *w &= !(1 << (b & 63));
+        }
+    }
+
+    /// First active bucket ≥ `start` (wrapping): the totality fallback.
+    fn scan_from(&self, start: u32) -> u32 {
+        let mut b = start;
+        loop {
+            if self.is_active(b) {
+                return b;
+            }
+            b = if b + 1 == self.a { 0 } else { b + 1 };
+            debug_assert_ne!(b, start, "no active buckets");
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.a as usize
+    }
+}
+
+impl ConsistentHasher for Dx {
+    #[inline]
+    fn lookup(&self, key: u64) -> u32 {
+        for i in 0..MAX_PROBES {
+            let b = (mix2(key, i as u64) % self.a as u64) as u32;
+            if self.is_active(b) {
+                return b;
+            }
+        }
+        self.scan_from((mix2(key, MAX_PROBES as u64) % self.a as u64) as u32)
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        let mut t = LookupTrace::default();
+        for i in 0..MAX_PROBES {
+            t.outer_iters += 1;
+            let b = (mix2(key, i as u64) % self.a as u64) as u32;
+            if self.is_active(b) {
+                t.bucket = b;
+                return t;
+            }
+        }
+        t.bucket = self.scan_from((mix2(key, MAX_PROBES as u64) % self.a as u64) as u32);
+        t
+    }
+
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let Some(b) = self.removed.pop() else {
+            return Err(AlgoError::CapacityExhausted { capacity: self.a as usize });
+        };
+        self.set_active(b, true);
+        self.working += 1;
+        Ok(b)
+    }
+
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        if b >= self.a || !self.is_active(b) {
+            return Err(AlgoError::NotWorking(b));
+        }
+        if self.working == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.set_active(b, false);
+        self.removed.push(b);
+        self.working -= 1;
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.working as usize
+    }
+
+    fn size(&self) -> usize {
+        self.a as usize
+    }
+
+    fn capacity_bound(&self) -> Option<usize> {
+        Some(self.a as usize)
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        b < self.a && self.is_active(b)
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        (0..self.a).filter(|&b| self.is_active(b)).collect()
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Θ(a): the bit array (a/8 bytes) + the removal-order stack.
+        self.bits.len() * std::mem::size_of::<u64>()
+            + self.removed.capacity() * std::mem::size_of::<u32>()
+    }
+
+    fn name(&self) -> &'static str {
+        "dx"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn lookup_returns_active_buckets_only() {
+        let mut dx = Dx::new(128, 64);
+        for b in [3u32, 10, 63, 40] {
+            dx.remove(b).unwrap();
+        }
+        for k in 0..20_000u64 {
+            let b = dx.lookup(splitmix64_mix(k));
+            assert!(dx.is_working(b));
+        }
+    }
+
+    #[test]
+    fn add_pops_lifo() {
+        let mut dx = Dx::new(8, 8);
+        dx.remove(3).unwrap();
+        dx.remove(6).unwrap();
+        assert_eq!(dx.add().unwrap(), 6);
+        assert_eq!(dx.add().unwrap(), 3);
+        // Cluster at capacity now.
+        assert!(matches!(dx.add(), Err(AlgoError::CapacityExhausted { .. })));
+    }
+
+    #[test]
+    fn grows_into_reserved_capacity() {
+        let mut dx = Dx::new(16, 4);
+        assert_eq!(dx.add().unwrap(), 4);
+        assert_eq!(dx.add().unwrap(), 5);
+        assert_eq!(dx.working(), 6);
+    }
+
+    #[test]
+    fn minimal_disruption() {
+        let mut dx = Dx::new(64, 32);
+        let keys: Vec<u64> = (0..30_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| dx.lookup(*k)).collect();
+        dx.remove(9).unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            let new = dx.lookup(*k);
+            if *old != 9 {
+                assert_eq!(new, *old);
+            } else {
+                assert!(dx.is_working(new));
+            }
+        }
+    }
+
+    #[test]
+    fn monotonicity() {
+        let mut dx = Dx::new(64, 32);
+        dx.remove(20).unwrap();
+        let keys: Vec<u64> = (0..30_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| dx.lookup(*k)).collect();
+        let b = dx.add().unwrap();
+        assert_eq!(b, 20);
+        for (k, old) in keys.iter().zip(&before) {
+            let new = dx.lookup(*k);
+            assert!(new == *old || new == b);
+        }
+    }
+
+    #[test]
+    fn balance_rough() {
+        let dx = Dx::new(100, 10);
+        let nkeys = 100_000u64;
+        let mut counts = std::collections::HashMap::<u32, u64>::new();
+        for k in 0..nkeys {
+            *counts.entry(dx.lookup(splitmix64_mix(k))).or_default() += 1;
+        }
+        assert_eq!(counts.len(), 10);
+        let ideal = nkeys as f64 / 10.0;
+        for (b, c) in counts {
+            let dev = (c as f64 - ideal).abs() / ideal;
+            assert!(dev < 0.10, "bucket {b} count {c} dev {dev:.3}");
+        }
+    }
+
+    #[test]
+    fn probe_count_tracks_a_over_w() {
+        // E[probes] ≈ a/w: with a=1000, w=100, expect ~10 probes.
+        let mut dx = Dx::new(1000, 1000);
+        let mut order: Vec<u32> = (0..1000).collect();
+        for i in 0..order.len() {
+            let j = (splitmix64_mix(i as u64 + 77) % 1000) as usize;
+            order.swap(i, j);
+        }
+        for &b in order.iter().take(900) {
+            dx.remove(b).unwrap();
+        }
+        let mut total = 0u64;
+        let trials = 5_000u64;
+        for k in 0..trials {
+            total += dx.lookup_traced(splitmix64_mix(k)).outer_iters as u64;
+        }
+        let avg = total as f64 / trials as f64;
+        assert!((6.0..16.0).contains(&avg), "avg probes {avg}, expected ≈10");
+    }
+
+    #[test]
+    fn memory_is_theta_a_bits() {
+        let dx = Dx::new(1_000_000, 1_000_000);
+        // 10^6 bits = 125 kB; the stack is empty (capacity may be 0).
+        assert!(dx.state_bytes() >= 125_000);
+        assert!(dx.state_bytes() < 300_000);
+        // Far smaller than Anchor's 4 × 4-byte arrays at the same a.
+        let an = crate::algorithms::anchor::Anchor::new(1_000_000, 1_000_000);
+        assert!(dx.state_bytes() * 10 < an.state_bytes());
+    }
+}

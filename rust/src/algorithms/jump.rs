@@ -1,0 +1,148 @@
+//! **JumpHash** (Lamping & Veach, 2014) — "A Fast, Minimal Memory,
+//! Consistent Hash Algorithm".
+//!
+//! Stateless except for the bucket count: the b-array is assumed dense and
+//! sorted (§IV-A), so only LIFO removals are possible. This is both a
+//! baseline of the paper's evaluation and Memento's core engine
+//! (Alg. 4 line 2 calls [`super::jump_hash`]).
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use super::{jump_hash, jump_hash_traced};
+
+/// The Jump consistent hash. State = one integer.
+#[derive(Debug, Clone)]
+pub struct Jump {
+    n: u32,
+}
+
+impl Jump {
+    pub fn new(initial_node_count: usize) -> Self {
+        assert!(initial_node_count >= 1);
+        Self { n: u32::try_from(initial_node_count).expect("cluster size fits u32") }
+    }
+}
+
+impl ConsistentHasher for Jump {
+    #[inline]
+    fn lookup(&self, key: u64) -> u32 {
+        jump_hash(key, self.n)
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        let mut t = LookupTrace::default();
+        t.bucket = jump_hash_traced(key, self.n, &mut t.jump_steps);
+        t
+    }
+
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let b = self.n;
+        self.n += 1;
+        Ok(b)
+    }
+
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        if b >= self.n {
+            return Err(AlgoError::NotWorking(b));
+        }
+        if b != self.n - 1 {
+            // §IV-A: "Jump allows only the last inserted bucket to be
+            // removed" — the limitation Memento exists to lift.
+            return Err(AlgoError::UnsupportedRemoval {
+                bucket: b,
+                reason: "Jump only supports LIFO removals (remove the tail bucket)",
+            });
+        }
+        if self.n == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.n -= 1;
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.n as usize
+    }
+
+    fn size(&self) -> usize {
+        self.n as usize
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        b < self.n
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        (0..self.n).collect()
+    }
+
+    fn supports_random_removal(&self) -> bool {
+        false
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Θ(1): literally the bucket count.
+        std::mem::size_of::<u32>()
+    }
+
+    fn name(&self) -> &'static str {
+        "jump"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn rejects_non_tail_removal() {
+        let mut j = Jump::new(5);
+        assert!(matches!(j.remove(2), Err(AlgoError::UnsupportedRemoval { .. })));
+        assert!(matches!(j.remove(9), Err(AlgoError::NotWorking(9))));
+        j.remove(4).unwrap();
+        assert_eq!(j.working(), 4);
+    }
+
+    #[test]
+    fn cannot_empty_cluster() {
+        let mut j = Jump::new(1);
+        assert_eq!(j.remove(0), Err(AlgoError::WouldBeEmpty));
+    }
+
+    #[test]
+    fn minimal_disruption_on_shrink() {
+        let mut j = Jump::new(10);
+        let keys: Vec<u64> = (0..50_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| j.lookup(*k)).collect();
+        j.remove(9).unwrap();
+        let mut moved = 0usize;
+        for (k, old) in keys.iter().zip(&before) {
+            let new = j.lookup(*k);
+            if *old != 9 {
+                assert_eq!(new, *old);
+            } else {
+                assert_ne!(new, 9);
+                moved += 1;
+            }
+        }
+        // ~1/10th of the keys lived on bucket 9.
+        assert!((3_500..6_500).contains(&moved), "moved {moved}");
+    }
+
+    #[test]
+    fn monotonic_growth() {
+        let mut j = Jump::new(9);
+        let keys: Vec<u64> = (0..50_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| j.lookup(*k)).collect();
+        assert_eq!(j.add().unwrap(), 9);
+        for (k, old) in keys.iter().zip(&before) {
+            let new = j.lookup(*k);
+            assert!(new == *old || new == 9, "keys may only move to the new bucket");
+        }
+    }
+
+    #[test]
+    fn state_is_one_integer() {
+        assert_eq!(Jump::new(1_000_000).state_bytes(), 4);
+    }
+}

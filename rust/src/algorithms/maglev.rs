@@ -1,0 +1,256 @@
+//! **Maglev hashing** (Eisenbud et al., NSDI 2016) — Google's software
+//! load-balancer table (§II related work).
+//!
+//! Every working bucket fills a fixed-size lookup table via its own
+//! permutation of table slots; lookup is a single array index (O(1), the
+//! fastest possible), but the table must be *rebuilt* on membership change
+//! and disruption is only *approximately* minimal (≈1% extra churn — which
+//! is why [`ConsistentHasher::strict_disruption`] is `false` here and the
+//! property-test suite checks a bounded-churn contract instead).
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use crate::hashing::mix::mix2;
+
+/// Table-size multiplier: `m` = smallest prime ≥ `TABLE_FACTOR · capacity`.
+/// Maglev's balance error is O(w/m); the original paper uses m ≈ 100·w.
+pub const TABLE_FACTOR: usize = 101;
+
+fn is_prime(n: usize) -> bool {
+    if n < 2 {
+        return false;
+    }
+    let mut d = 2usize;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 1;
+    }
+    true
+}
+
+fn next_prime(mut n: usize) -> usize {
+    while !is_prime(n) {
+        n += 1;
+    }
+    n
+}
+
+/// Maglev consistent hashing.
+#[derive(Debug, Clone)]
+pub struct Maglev {
+    m: usize,
+    table: Vec<u32>,
+    working: Vec<u32>,
+    removed: Vec<u32>,
+    next_id: u32,
+}
+
+impl Maglev {
+    /// Build with an explicit table-size hint (rounded up to a prime).
+    pub fn new(initial_node_count: usize, table_size_hint: usize) -> Self {
+        assert!(initial_node_count >= 1);
+        let m = next_prime(table_size_hint.max(initial_node_count + 1));
+        let mut s = Self {
+            m,
+            table: Vec::new(),
+            working: (0..initial_node_count as u32).collect(),
+            removed: Vec::new(),
+            next_id: initial_node_count as u32,
+        };
+        s.populate();
+        s
+    }
+
+    pub fn with_defaults(initial_node_count: usize) -> Self {
+        Self::new(initial_node_count, initial_node_count * TABLE_FACTOR)
+    }
+
+    /// The population loop from the Maglev paper (§3.4, Pseudocode 1):
+    /// each bucket takes turns claiming its next preferred empty slot.
+    fn populate(&mut self) {
+        const EMPTY: u32 = u32::MAX;
+        self.table = vec![EMPTY; self.m];
+        let w = self.working.len();
+        if w == 0 {
+            return;
+        }
+        let m = self.m as u64;
+        // offset/skip per bucket derived from independent mixes.
+        let mut offset: Vec<u64> = Vec::with_capacity(w);
+        let mut skip: Vec<u64> = Vec::with_capacity(w);
+        let mut next: Vec<u64> = vec![0; w];
+        for &b in &self.working {
+            offset.push(mix2(b as u64, 0x0FF5E7) % m);
+            skip.push(mix2(b as u64, 0x5C1B) % (m - 1) + 1);
+        }
+        let mut filled = 0usize;
+        'outer: loop {
+            for i in 0..w {
+                // Next unclaimed slot in bucket i's permutation.
+                let mut c = (offset[i] + next[i] * skip[i]) % m;
+                while self.table[c as usize] != EMPTY {
+                    next[i] += 1;
+                    c = (offset[i] + next[i] * skip[i]) % m;
+                }
+                self.table[c as usize] = self.working[i];
+                next[i] += 1;
+                filled += 1;
+                if filled == self.m {
+                    break 'outer;
+                }
+            }
+        }
+    }
+
+    /// Table size `m`.
+    pub fn table_size(&self) -> usize {
+        self.m
+    }
+}
+
+impl ConsistentHasher for Maglev {
+    #[inline]
+    fn lookup(&self, key: u64) -> u32 {
+        self.table[(mix2(key, 0x3A61EF) % self.m as u64) as usize]
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        LookupTrace { bucket: self.lookup(key), outer_iters: 1, ..Default::default() }
+    }
+
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let b = match self.removed.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.next_id;
+                self.next_id += 1;
+                b
+            }
+        };
+        let pos = self.working.partition_point(|&x| x < b);
+        self.working.insert(pos, b);
+        self.populate();
+        Ok(b)
+    }
+
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        let Ok(pos) = self.working.binary_search(&b) else {
+            return Err(AlgoError::NotWorking(b));
+        };
+        if self.working.len() == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.working.remove(pos);
+        self.removed.push(b);
+        self.populate();
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.working.len()
+    }
+
+    fn size(&self) -> usize {
+        self.next_id as usize
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        self.working.binary_search(&b).is_ok()
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        self.working.clone()
+    }
+
+    fn strict_disruption(&self) -> bool {
+        false // disruption is bounded (~1‰ of slots), not zero
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.table.capacity() * 4
+            + (self.working.capacity() + self.removed.capacity()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "maglev"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn table_is_fully_populated_with_working_buckets() {
+        let m = Maglev::new(7, 701);
+        for &slot in &m.table {
+            assert!(slot < 7);
+        }
+    }
+
+    #[test]
+    fn balance_is_tight() {
+        let m = Maglev::new(10, 10_007);
+        let mut slots = [0u32; 10];
+        for &s in &m.table {
+            slots[s as usize] += 1;
+        }
+        // Slot shares within ~2% of each other (Maglev's design goal).
+        let min = *slots.iter().min().unwrap() as f64;
+        let max = *slots.iter().max().unwrap() as f64;
+        assert!(max / min < 1.1, "slot share imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn disruption_is_bounded_on_removal() {
+        let mut m = Maglev::new(10, 10_007);
+        let keys: Vec<u64> = (0..30_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| m.lookup(*k)).collect();
+        m.remove(4).unwrap();
+        let mut collateral = 0usize;
+        let mut relocated = 0usize;
+        for (k, old) in keys.iter().zip(&before) {
+            let new = m.lookup(*k);
+            if *old == 4 {
+                relocated += 1;
+                assert_ne!(new, 4);
+            } else if new != *old {
+                collateral += 1;
+            }
+        }
+        assert!(relocated > 0);
+        // Collateral churn must stay a small fraction of the key space
+        // (Maglev's "minimal disruption in practice" claim).
+        let frac = collateral as f64 / keys.len() as f64;
+        assert!(frac < 0.03, "collateral churn {frac}");
+    }
+
+    #[test]
+    fn add_restores_lifo_ids() {
+        let mut m = Maglev::new(5, 503);
+        m.remove(1).unwrap();
+        m.remove(3).unwrap();
+        assert_eq!(m.add().unwrap(), 3);
+        assert_eq!(m.add().unwrap(), 1);
+        assert_eq!(m.add().unwrap(), 5);
+    }
+
+    #[test]
+    fn primes() {
+        assert_eq!(next_prime(100), 101);
+        assert_eq!(next_prime(101), 101);
+        assert_eq!(next_prime(1000), 1009);
+        assert!(is_prime(2) && is_prime(3) && !is_prime(1) && !is_prime(9));
+    }
+
+    #[test]
+    fn lookup_is_constant_time_table_index() {
+        let m = Maglev::with_defaults(50);
+        assert_eq!(m.lookup_traced(99).outer_iters, 1);
+        for k in 0..5_000u64 {
+            assert!(m.is_working(m.lookup(splitmix64_mix(k))));
+        }
+    }
+}

@@ -1,0 +1,619 @@
+//! **MementoHash** — the paper's algorithm (§V–§VI, Alg. 1–4).
+//!
+//! Memento uses Jump as its core engine and spends memory only on the
+//! *removed* buckets: the replacement set `R` (Def. V.5) remembers, for
+//! every removed bucket `b`, the tuple `⟨b → c, p⟩` where `c` is the bucket
+//! that filled `b`'s position (and, by Prop. V.3, the number of working
+//! buckets right after the removal) and `p` is the previously removed
+//! bucket (the restore chain, Alg. 3).
+//!
+//! State `S = ⟨n, R, l⟩` (Def. VI.1): `n` is the b-array size, `R` the
+//! replacement set, `l` the last-removed bucket. Memory is Θ(r); lookup is
+//! O(ln n + ln²(n/w)) (Prop. VII.3); add/remove are Θ(1).
+//!
+//! The implementation keeps the paper's invariants *exactly* — the worked
+//! examples of Fig. 7–16 are unit tests below.
+
+use super::replmap::ReplMap;
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use super::{jump_hash, jump_hash_traced, rehash};
+use crate::hashing::Hasher64;
+
+/// Sentinel for "no replacement" in dense table exports.
+pub const NO_REPLACEMENT: u32 = u32::MAX;
+
+/// The MementoHash algorithm.
+#[derive(Clone)]
+pub struct Memento {
+    // (Debug is implemented manually below: `hasher` is a dyn trait.)
+    /// b-array size `n` (Def. III.4).
+    n: u32,
+    /// Last removed bucket `l`; equals `n` whenever `R` is empty (Alg. 1
+    /// initializes `l ← n`, and `l` is only consumed while `R ≠ ∅`).
+    last_removed: u32,
+    /// The replacement set `R`.
+    repl: ReplMap,
+    /// Optional override of the Alg. 4 line-5 rehash (Note III.1 hash
+    /// ablation); `None` = the default SplitMix64 mixer (also the L1
+    /// kernel's function).
+    hasher: Option<std::sync::Arc<dyn Hasher64>>,
+}
+
+impl Memento {
+    /// Alg. 1: initialize a cluster of `initial_node_count` working buckets.
+    pub fn new(initial_node_count: usize) -> Self {
+        assert!(initial_node_count >= 1, "cluster must have at least one node");
+        let n = u32::try_from(initial_node_count).expect("cluster size fits u32");
+        Self { n, last_removed: n, repl: ReplMap::new(), hasher: None }
+    }
+
+    /// Like [`Memento::new`] but rehashing through `h` instead of the
+    /// built-in SplitMix64 mixer (used by `bench_ablation`).
+    pub fn with_hasher(initial_node_count: usize, h: std::sync::Arc<dyn Hasher64>) -> Self {
+        let mut m = Self::new(initial_node_count);
+        m.hasher = Some(h);
+        m
+    }
+
+    /// Pre-size the replacement set for an expected number of removals
+    /// (perf knob; semantics unchanged).
+    pub fn with_removal_capacity(initial_node_count: usize, removals: usize) -> Self {
+        let mut m = Self::new(initial_node_count);
+        m.repl = ReplMap::with_capacity(removals);
+        m
+    }
+
+    #[inline(always)]
+    fn rehash_key(&self, key: u64, seed: u32) -> u64 {
+        match &self.hasher {
+            None => rehash(key, seed as u64),
+            Some(h) => h.hash_u64(key, seed as u64),
+        }
+    }
+
+    /// Number of replacements `r = |R|`.
+    #[inline]
+    pub fn removed(&self) -> usize {
+        self.repl.len()
+    }
+
+    /// The last removed bucket `l` (equals `n` when nothing is removed).
+    pub fn last_removed(&self) -> u32 {
+        self.last_removed
+    }
+
+    /// Raw replacement lookup (tests / diagnostics).
+    pub fn replacement(&self, b: u32) -> Option<(u32, u32)> {
+        self.repl.get(b)
+    }
+
+    /// Export the dense replacement table used by the PJRT batch engine:
+    /// `table[b] = c` if `⟨b → c, _⟩ ∈ R`, else [`NO_REPLACEMENT`].
+    ///
+    /// This is the Θ(n) freeze of the Θ(r) map (see DESIGN.md
+    /// §Hardware-Adaptation): rebuilt per membership epoch, never on the
+    /// lookup path.
+    pub fn dense_table(&self) -> Vec<u32> {
+        let mut t = vec![NO_REPLACEMENT; self.n as usize];
+        for (b, c, _p) in self.repl.iter() {
+            t[b as usize] = c;
+        }
+        t
+    }
+
+    /// Alg. 4 with the default mixer, free function form used by the
+    /// batch-engine fallback path (avoids the `&dyn` indirection).
+    #[inline]
+    pub fn lookup_scalar(n: u32, repl: &ReplMap, key: u64) -> u32 {
+        let mut b = jump_hash(key, n);
+        loop {
+            match repl.get(b) {
+                None => return b,
+                Some((c, _p)) => {
+                    let w_b = c;
+                    let mut d = (rehash(key, b as u64) % w_b as u64) as u32;
+                    // Inner loop (Alg. 4 lines 7-9): follow the replacement
+                    // chain while the replacing bucket u was removed
+                    // *before* b (u ≥ w_b — the balance guard of Fig. 13-16).
+                    while let Some((u, _q)) = repl.get(d) {
+                        if u >= w_b {
+                            d = u;
+                        } else {
+                            break;
+                        }
+                    }
+                    b = d;
+                }
+            }
+        }
+    }
+
+    /// Alg. 4 *without* the `u ≥ w_b` inner guard — the broken variant the
+    /// paper warns about (Fig. 13–16): it follows every chain to its end
+    /// and skews the distribution. Exposed only for the ablation bench,
+    /// which demonstrates the balance defect empirically.
+    ///
+    /// Removing the guard also destroys the termination argument of
+    /// Prop. VI.2: replacement chains CAN cycle (a later removal may store
+    /// `c` pointing at an earlier removed bucket — the guard's shrinking
+    /// `[0, w_b)` ranges are what rules this out). Both loops are
+    /// therefore step-capped here; capped walks resolve to the chain's
+    /// last visited bucket. This is part of the ablation's point: the
+    /// guard buys correctness, not just balance.
+    pub fn lookup_unguarded(&self, key: u64) -> u32 {
+        const CAP: u32 = 64;
+        let mut b = jump_hash(key, self.n);
+        let mut outer = 0u32;
+        loop {
+            match self.repl.get(b) {
+                None => return b,
+                Some((c, _p)) => {
+                    outer += 1;
+                    let w_b = c;
+                    let mut d = (self.rehash_key(key, b) % w_b as u64) as u32;
+                    let mut inner = 0u32;
+                    while let Some((u, _q)) = self.repl.get(d) {
+                        inner += 1;
+                        if u == d || inner > CAP {
+                            break; // self-replacement or chain cycle
+                        }
+                        d = u; // no guard: always chase the chain
+                    }
+                    if outer > CAP {
+                        return d;
+                    }
+                    b = d;
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Memento {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Memento")
+            .field("n", &self.n)
+            .field("last_removed", &self.last_removed)
+            .field("removed", &self.repl.len())
+            .field("rehash", &self.hasher.as_ref().map(|h| h.name()).unwrap_or("splitmix64"))
+            .finish()
+    }
+}
+
+impl ConsistentHasher for Memento {
+    /// Alg. 4 — LOOKUP.
+    #[inline]
+    fn lookup(&self, key: u64) -> u32 {
+        if self.hasher.is_none() {
+            // Fast path, fully inlined.
+            return Self::lookup_scalar(self.n, &self.repl, key);
+        }
+        let mut b = jump_hash(key, self.n);
+        loop {
+            match self.repl.get(b) {
+                None => return b,
+                Some((c, _p)) => {
+                    let w_b = c;
+                    let mut d = (self.rehash_key(key, b) % w_b as u64) as u32;
+                    while let Some((u, _q)) = self.repl.get(d) {
+                        if u >= w_b {
+                            d = u;
+                        } else {
+                            break;
+                        }
+                    }
+                    b = d;
+                }
+            }
+        }
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        let mut t = LookupTrace::default();
+        let mut b = jump_hash_traced(key, self.n, &mut t.jump_steps);
+        loop {
+            match self.repl.get(b) {
+                None => {
+                    t.bucket = b;
+                    return t;
+                }
+                Some((c, _p)) => {
+                    t.outer_iters += 1;
+                    let w_b = c;
+                    let mut d = (self.rehash_key(key, b) % w_b as u64) as u32;
+                    while let Some((u, _q)) = self.repl.get(d) {
+                        t.inner_iters += 1;
+                        if u >= w_b {
+                            d = u;
+                        } else {
+                            break;
+                        }
+                    }
+                    b = d;
+                }
+            }
+        }
+    }
+
+    /// Alg. 3 — ADD.
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        if self.repl.is_empty() {
+            // Grow the tail of the b-array.
+            let b = self.n;
+            self.n += 1;
+            self.last_removed = self.n; // keep l ≡ n while R = ∅ (Alg. 1)
+            Ok(b)
+        } else {
+            // Restore the last removed bucket (unties chains in LIFO order,
+            // §VI-C).
+            let b = self.last_removed;
+            let (_c, p) = self
+                .repl
+                .remove(b)
+                .expect("invariant: l has a replacement while R is non-empty");
+            self.last_removed = if self.repl.is_empty() { self.n } else { p };
+            Ok(b)
+        }
+    }
+
+    /// Alg. 2 — REMOVE.
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        if !self.is_working(b) {
+            return Err(AlgoError::NotWorking(b));
+        }
+        let w = self.working() as u32;
+        if w == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        if self.repl.is_empty() && b == self.n - 1 {
+            // Removing the tail with nothing else removed: shrink the
+            // b-array, exactly like Jump.
+            self.n -= 1;
+            self.last_removed = self.n; // keep l ≡ n while R = ∅
+        } else {
+            // General case: replace b with the bucket that keeps the
+            // b-array dense up to w-1 (Prop. V.3: c = w-1).
+            self.repl.insert(b, w - 1, self.last_removed);
+            self.last_removed = b;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn working(&self) -> usize {
+        // Prop. V.6: w = n - r.
+        self.n as usize - self.repl.len()
+    }
+
+    fn size(&self) -> usize {
+        self.n as usize
+    }
+
+    #[inline]
+    fn is_working(&self, b: u32) -> bool {
+        b < self.n && self.repl.get(b).is_none()
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        (0..self.n).filter(|&b| self.repl.get(b).is_none()).collect()
+    }
+
+    fn state_bytes(&self) -> usize {
+        // S = ⟨n, R, l⟩: the scalars are the fixed header; the metric is
+        // the replacement set's backing storage (Θ(r)).
+        self.repl.state_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "memento"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::jump::Jump;
+
+    /// §V-B worked example: remove 9, then 5, then 1 from a 10-bucket
+    /// cluster (Figs. 7–9).
+    #[test]
+    fn paper_example_section_v_b() {
+        let mut m = Memento::new(10);
+        assert_eq!(m.last_removed(), 10);
+
+        m.remove(9).unwrap(); // tail removal: shrink only
+        assert_eq!(m.size(), 9);
+        assert_eq!(m.removed(), 0);
+
+        m.remove(5).unwrap();
+        assert_eq!(m.replacement(5), Some((8, 9))); // ⟨5→8, 9⟩
+        assert_eq!(m.last_removed(), 5);
+        assert_eq!(m.working(), 8);
+
+        m.remove(1).unwrap();
+        assert_eq!(m.replacement(1), Some((7, 5))); // ⟨1→7, 5⟩
+        assert_eq!(m.last_removed(), 1);
+        assert_eq!(m.working(), 7);
+        assert_eq!(m.size(), 9); // n unchanged by non-tail removals
+    }
+
+    /// §V-C: removing a replacing bucket chains replacements (Fig. 10-11).
+    #[test]
+    fn paper_example_removing_replacing_bucket() {
+        let mut m = Memento::new(10);
+        m.remove(9).unwrap();
+        m.remove(5).unwrap();
+        m.remove(1).unwrap();
+        // Now remove 8, which had replaced 5: ⟨8→6, 1⟩ and the chain
+        // 5 → 8 → 6 resolves through R.
+        m.remove(8).unwrap();
+        assert_eq!(m.replacement(8), Some((6, 1)));
+        assert_eq!(m.working(), 6);
+        let wb: Vec<u32> = m.working_buckets();
+        assert_eq!(wb, vec![0, 2, 3, 4, 6, 7]); // N4 of Fig. 10
+    }
+
+    /// Fig. 13: b-array of size 6, remove 0, 3, 5 in order.
+    #[test]
+    fn paper_example_fig13() {
+        let mut m = Memento::new(6);
+        m.remove(0).unwrap();
+        m.remove(3).unwrap();
+        m.remove(5).unwrap();
+        assert_eq!(m.replacement(0), Some((5, 6)));
+        assert_eq!(m.replacement(3), Some((4, 0)));
+        assert_eq!(m.replacement(5), Some((3, 3)));
+        assert_eq!(m.last_removed(), 5);
+        assert_eq!(m.working_buckets(), vec![1, 2, 4]);
+        // Every key must land on a working bucket.
+        for k in 0..10_000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let b = m.lookup(key);
+            assert!(m.is_working(b), "key {k} -> removed bucket {b}");
+        }
+    }
+
+    /// Alg. 3 restores removed buckets in LIFO order and unties chains.
+    #[test]
+    fn add_restores_lifo() {
+        let mut m = Memento::new(6);
+        m.remove(0).unwrap();
+        m.remove(3).unwrap();
+        m.remove(5).unwrap();
+        assert_eq!(m.add().unwrap(), 5);
+        assert_eq!(m.add().unwrap(), 3);
+        assert_eq!(m.add().unwrap(), 0);
+        assert_eq!(m.removed(), 0);
+        assert_eq!(m.working(), 6);
+        assert_eq!(m.last_removed(), 6); // l back to n
+        // Next add grows the tail.
+        assert_eq!(m.add().unwrap(), 6);
+        assert_eq!(m.size(), 7);
+    }
+
+    /// When the b-array is dense (no random removals), Memento must be
+    /// *bit-identical* to Jump (§V: "Memento works exactly like Jump").
+    #[test]
+    fn lifo_equivalence_with_jump() {
+        let mut m = Memento::new(64);
+        let mut j = Jump::new(64);
+        let keys: Vec<u64> =
+            (0..2000u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        for k in &keys {
+            assert_eq!(m.lookup(*k), j.lookup(*k));
+        }
+        // Scale down via tail removals (LIFO) and up again: still identical.
+        for _ in 0..30 {
+            let tail = (m.size() - 1) as u32;
+            m.remove(tail).unwrap();
+            j.remove(tail).unwrap();
+        }
+        assert_eq!(m.removed(), 0, "LIFO removals must not populate R");
+        assert_eq!(m.state_bytes(), Memento::new(1).state_bytes(), "minimal memory in LIFO mode");
+        for k in &keys {
+            assert_eq!(m.lookup(*k), j.lookup(*k));
+        }
+        for _ in 0..10 {
+            m.add().unwrap();
+            j.add().unwrap();
+        }
+        for k in &keys {
+            assert_eq!(m.lookup(*k), j.lookup(*k));
+        }
+    }
+
+    /// Prop. VI.3 — minimal disruption: removing b moves only b's keys.
+    #[test]
+    fn minimal_disruption_on_remove() {
+        let mut m = Memento::new(20);
+        let keys: Vec<u64> =
+            (0..20_000u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| m.lookup(*k)).collect();
+        m.remove(7).unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            let new = m.lookup(*k);
+            if *old != 7 {
+                assert_eq!(new, *old, "key moved although its bucket wasn't removed");
+            } else {
+                assert_ne!(new, 7);
+                assert!(m.is_working(new));
+            }
+        }
+    }
+
+    /// Prop. VI.5 — monotonicity: adding a bucket only moves keys onto it.
+    #[test]
+    fn monotonicity_on_add() {
+        let mut m = Memento::new(20);
+        m.remove(7).unwrap();
+        m.remove(13).unwrap();
+        let keys: Vec<u64> =
+            (0..20_000u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| m.lookup(*k)).collect();
+        let restored = m.add().unwrap();
+        assert_eq!(restored, 13);
+        let mut moved = 0u32;
+        for (k, old) in keys.iter().zip(&before) {
+            let new = m.lookup(*k);
+            if new != *old {
+                assert_eq!(new, restored, "keys may only move to the restored bucket");
+                moved += 1;
+            }
+        }
+        // ~k/(w+1) keys should move (Prop. VI.5): w was 18, so ~1/19th.
+        let expect = keys.len() as f64 / 19.0;
+        assert!(
+            (moved as f64) > expect * 0.7 && (moved as f64) < expect * 1.3,
+            "moved {moved}, expected ≈{expect}"
+        );
+    }
+
+    /// Prop. VI.4 — balance after heavy random removals.
+    #[test]
+    fn balance_after_random_removals() {
+        let mut m = Memento::new(50);
+        // Remove 30 random-ish buckets (deterministic pattern).
+        for b in [3u32, 41, 17, 8, 22, 35, 1, 48, 29, 14, 6, 44, 19, 27, 38, 11, 2, 46, 33, 9,
+            24, 40, 15, 5, 31, 43, 20, 12, 37, 26]
+        {
+            m.remove(b).unwrap();
+        }
+        assert_eq!(m.working(), 20);
+        let nkeys = 200_000u64;
+        let mut counts = std::collections::HashMap::<u32, u64>::new();
+        for k in 0..nkeys {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let b = m.lookup(key);
+            assert!(m.is_working(b));
+            *counts.entry(b).or_default() += 1;
+        }
+        let ideal = nkeys as f64 / 20.0;
+        for (b, c) in counts {
+            let dev = (c as f64 - ideal).abs() / ideal;
+            assert!(dev < 0.10, "bucket {b}: count {c} deviates {dev:.3} from ideal");
+        }
+    }
+
+    /// The unguarded variant must produce *worse* balance than the guarded
+    /// one on a chained removal pattern (the paper's Fig. 13-16 argument).
+    #[test]
+    fn inner_guard_improves_balance() {
+        let mut m = Memento::new(6);
+        m.remove(0).unwrap();
+        m.remove(3).unwrap();
+        m.remove(5).unwrap();
+        let nkeys = 120_000u64;
+        let mut guarded = [0u64; 6];
+        let mut unguarded = [0u64; 6];
+        for k in 0..nkeys {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            guarded[m.lookup(key) as usize] += 1;
+            unguarded[m.lookup_unguarded(key) as usize] += 1;
+        }
+        let ideal = nkeys as f64 / 3.0;
+        let spread = |c: &[u64; 6]| -> f64 {
+            [1usize, 2, 4]
+                .iter()
+                .map(|&b| ((c[b] as f64 - ideal) / ideal).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let g = spread(&guarded);
+        let u = spread(&unguarded);
+        assert!(g < 0.02, "guarded max deviation {g}");
+        assert!(u > g, "unguarded ({u}) should be worse than guarded ({g})");
+    }
+
+    #[test]
+    fn remove_errors() {
+        let mut m = Memento::new(3);
+        assert_eq!(m.remove(3), Err(AlgoError::NotWorking(3)));
+        m.remove(1).unwrap();
+        assert_eq!(m.remove(1), Err(AlgoError::NotWorking(1)));
+        m.remove(2).unwrap();
+        assert_eq!(m.remove(0), Err(AlgoError::WouldBeEmpty));
+    }
+
+    /// Self-replacement (§V-D): removing bucket w-1 stores ⟨b→b, p⟩ and
+    /// stays correct.
+    #[test]
+    fn self_replacement() {
+        let mut m = Memento::new(10);
+        m.remove(9).unwrap(); // tail: n=9, R still empty
+        m.remove(5).unwrap(); // ⟨5→8, 9⟩, w=8
+        m.remove(7).unwrap(); // w was 8 → c=7: ⟨7→7, 5⟩ — replaced by itself
+        assert_eq!(m.replacement(7), Some((7, 5)));
+        assert_eq!(m.working(), 7);
+        for k in 0..5000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let b = m.lookup(key);
+            assert!(m.is_working(b), "key {k} -> non-working bucket {b}");
+            assert_ne!(b, 7);
+        }
+        // Restore LIFO: 7 comes back first.
+        assert_eq!(m.add().unwrap(), 7);
+        assert_eq!(m.working(), 8);
+    }
+
+    #[test]
+    fn dense_table_matches_map() {
+        let mut m = Memento::new(12);
+        for b in [2u32, 7, 4] {
+            m.remove(b).unwrap();
+        }
+        let t = m.dense_table();
+        assert_eq!(t.len(), 12);
+        for b in 0..12u32 {
+            match m.replacement(b) {
+                Some((c, _)) => assert_eq!(t[b as usize], c),
+                None => assert_eq!(t[b as usize], NO_REPLACEMENT),
+            }
+        }
+    }
+
+    #[test]
+    fn traced_lookup_matches_plain() {
+        let mut m = Memento::new(40);
+        for b in [1u32, 5, 9, 13, 17, 21, 25, 29, 33, 37, 2, 6, 10] {
+            m.remove(b).unwrap();
+        }
+        for k in 0..5_000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let t = m.lookup_traced(key);
+            assert_eq!(t.bucket, m.lookup(key));
+            assert!(t.jump_steps >= 1);
+        }
+    }
+
+    #[test]
+    fn grow_after_random_removals_keeps_l_chain() {
+        // Interleave removals and adds arbitrarily; state must stay sane.
+        let mut m = Memento::new(8);
+        m.remove(2).unwrap();
+        m.remove(5).unwrap();
+        assert_eq!(m.add().unwrap(), 5);
+        m.remove(6).unwrap();
+        assert_eq!(m.add().unwrap(), 6);
+        assert_eq!(m.add().unwrap(), 2);
+        assert_eq!(m.removed(), 0);
+        assert_eq!(m.add().unwrap(), 8); // tail growth resumes at n
+        assert_eq!(m.working(), 9);
+        for k in 0..2000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            assert!(m.lookup(key) < 9);
+        }
+    }
+
+    #[test]
+    fn memory_is_theta_r() {
+        let mut m = Memento::new(100_000);
+        let empty = m.state_bytes();
+        for b in 0..1000u32 {
+            m.remove(b * 7 % 99_991).ok();
+        }
+        let after = m.state_bytes();
+        assert!(after > empty);
+        // Θ(r), NOT Θ(n): a 100k cluster with ~1k removals must use far
+        // less than 12 bytes per *bucket*.
+        assert!(after < 100_000 * 12 / 2, "state {after} bytes looks Θ(n)");
+    }
+}

@@ -1,0 +1,170 @@
+//! The consistent-hashing algorithm library.
+//!
+//! Everything the paper evaluates or surveys, behind one trait:
+//!
+//! | module | algorithm | paper role |
+//! |---|---|---|
+//! | [`memento`] | **MementoHash** (Coluzzi et al. 2023, Alg. 1–4) | the contribution |
+//! | [`jump`]    | JumpHash (Lamping & Veach 2014) | baseline + Memento's core engine |
+//! | [`anchor`]  | AnchorHash, in-place variant (Mendelson et al. 2020) | baseline |
+//! | [`dx`]      | DxHash (Dong & Wang 2021) | baseline |
+//! | [`ring`]    | Consistent Hashing Ring (Karger et al. 1997) | related work |
+//! | [`rendezvous`] | Rendezvous / HRW (Thaler & Ravishankar 1996) | related work |
+//! | [`maglev`]  | Maglev (Eisenbud et al. 2016) | related work |
+//! | [`multiprobe`] | Multi-probe CH (Appleton & O'Reilly 2015) | related work |
+//!
+//! All algorithms operate on pre-digested `u64` keys and return bucket ids
+//! (`u32`). Node-name ↔ bucket mapping lives in
+//! [`crate::coordinator::membership`].
+
+pub mod anchor;
+pub mod bounded;
+pub mod dx;
+pub mod jump;
+pub mod maglev;
+pub mod memento;
+pub mod multiprobe;
+pub mod rendezvous;
+pub mod replmap;
+pub mod ring;
+pub mod serde;
+pub mod traits;
+
+pub use memento::Memento;
+pub use traits::{AlgoError, ConsistentHasher, LookupTrace, RemovalOrder};
+
+use crate::hashing::Hasher64;
+
+/// Construct an algorithm by registry name with `w` initial working buckets
+/// and (for capacity-bound algorithms) overall capacity `a`.
+///
+/// Names: `memento`, `jump`, `anchor`, `dx`, `ring`, `rendezvous`,
+/// `maglev`, `multiprobe`.
+pub fn by_name(name: &str, w: usize, a: usize) -> Option<Box<dyn ConsistentHasher>> {
+    Some(match name {
+        "memento" => Box::new(memento::Memento::new(w)),
+        "jump" => Box::new(jump::Jump::new(w)),
+        "anchor" => Box::new(anchor::Anchor::new(a, w)),
+        "dx" => Box::new(dx::Dx::new(a, w)),
+        "ring" => Box::new(ring::Ring::with_defaults(w)),
+        "rendezvous" => Box::new(rendezvous::Rendezvous::new(w)),
+        "maglev" => Box::new(maglev::Maglev::with_defaults(w)),
+        "multiprobe" => Box::new(multiprobe::MultiProbe::with_defaults(w)),
+        _ => return None,
+    })
+}
+
+/// The four algorithms of the paper's evaluation (§VIII).
+pub const PAPER_ALGOS: &[&str] = &["memento", "jump", "anchor", "dx"];
+
+/// Every algorithm in the registry.
+pub const ALL_ALGOS: &[&str] =
+    &["memento", "jump", "anchor", "dx", "ring", "rendezvous", "maglev", "multiprobe"];
+
+/// Shared scalar Jump core (Lamping & Veach), used by both [`jump::Jump`]
+/// and [`memento::Memento`] (Alg. 4 line 2). `n` must be ≥ 1.
+///
+/// This is the exact twin of the L1 Pallas kernel `jump.py`; the streams
+/// must agree bit-for-bit (checked in `tests/integration_runtime.rs`).
+#[inline(always)]
+pub fn jump_hash(mut key: u64, n: u32) -> u32 {
+    debug_assert!(n >= 1);
+    let mut b: i64 = -1;
+    let mut j: i64 = 0;
+    while j < n as i64 {
+        b = j;
+        key = key.wrapping_mul(2862933555777941757).wrapping_add(1);
+        j = (((b + 1) as f64) * ((1i64 << 31) as f64 / (((key >> 33) + 1) as f64))) as i64;
+    }
+    b as u32
+}
+
+/// Jump core with step counting (for `bench_complexity` / Table I).
+#[inline]
+pub fn jump_hash_traced(mut key: u64, n: u32, steps: &mut u32) -> u32 {
+    let mut b: i64 = -1;
+    let mut j: i64 = 0;
+    while j < n as i64 {
+        *steps += 1;
+        b = j;
+        key = key.wrapping_mul(2862933555777941757).wrapping_add(1);
+        j = (((b + 1) as f64) * ((1i64 << 31) as f64 / (((key >> 33) + 1) as f64))) as i64;
+    }
+    b as u32
+}
+
+/// The uniform rehash used by Memento's Alg. 4 line 5 (`hash(key, b)`):
+/// SplitMix64-based 2-input mixer. Twin of the Pallas `mix64` kernel.
+#[inline(always)]
+pub fn rehash(key: u64, seed: u64) -> u64 {
+    crate::hashing::mix::mix2(key, seed)
+}
+
+/// Adapter: rehash through a dynamically chosen [`Hasher64`] (for the
+/// Note III.1 hash-sensitivity ablation; the default fast path uses
+/// [`rehash`] directly).
+#[inline]
+pub fn rehash_with(h: &dyn Hasher64, key: u64, seed: u64) -> u64 {
+    h.hash_u64(key, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_all() {
+        for name in ALL_ALGOS {
+            let a = by_name(name, 10, 100).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(a.working(), 10, "{name} working count");
+        }
+        assert!(by_name("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn jump_hash_is_stable_under_growth() {
+        // The defining Jump property: jump(k, n) == jump(k, n+1) unless the
+        // key moves to the new bucket n.
+        for key in [1u64, 42, 0xdeadbeef, u64::MAX / 3] {
+            for n in 1..200u32 {
+                let b1 = jump_hash(key, n);
+                let b2 = jump_hash(key, n + 1);
+                assert!(b2 == b1 || b2 == n, "key={key} n={n} b1={b1} b2={b2}");
+            }
+        }
+    }
+
+    #[test]
+    fn jump_hash_range() {
+        for key in 0..2000u64 {
+            let k = crate::hashing::mix::splitmix64_mix(key);
+            for n in [1u32, 2, 3, 10, 1000] {
+                assert!(jump_hash(k, n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn jump_hash_balance_rough() {
+        let n = 10u32;
+        let mut counts = vec![0u32; n as usize];
+        for key in 0..100_000u64 {
+            let k = crate::hashing::mix::splitmix64_mix(key);
+            counts[jump_hash(k, n) as usize] += 1;
+        }
+        let ideal = 100_000 / n;
+        for &c in &counts {
+            assert!((c as i64 - ideal as i64).unsigned_abs() < ideal as u64 / 10);
+        }
+    }
+
+    #[test]
+    fn traced_matches_untraced() {
+        for key in 0..500u64 {
+            let k = crate::hashing::mix::splitmix64_mix(key);
+            let mut s = 0;
+            assert_eq!(jump_hash(k, 1000), jump_hash_traced(k, 1000, &mut s));
+            assert!(s > 0);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! **Multi-probe consistent hashing** (Appleton & O'Reilly, 2015) — §II
+//! related work.
+//!
+//! One ring point per node (Θ(w) memory, no virtual-node blowup); balance
+//! is recovered by probing the key `k` times and keeping the probe that
+//! lands *closest* (clockwise distance) to a node point. Peak-to-average
+//! load ≈ 1 + O(1/k); the original paper recommends k = 21 for ≈1.05.
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use crate::hashing::mix::mix2;
+
+/// Default probe count (the paper's 1.05 peak-to-average setting).
+pub const DEFAULT_PROBES: usize = 21;
+
+/// Multi-probe consistent hashing.
+#[derive(Debug, Clone)]
+pub struct MultiProbe {
+    /// Sorted (point, bucket) pairs — ONE point per bucket.
+    points: Vec<(u64, u32)>,
+    working: Vec<u32>,
+    removed: Vec<u32>,
+    next_id: u32,
+    probes: usize,
+}
+
+impl MultiProbe {
+    pub fn new(initial_node_count: usize, probes: usize) -> Self {
+        assert!(initial_node_count >= 1 && probes >= 1);
+        let mut s = Self {
+            points: Vec::with_capacity(initial_node_count),
+            working: (0..initial_node_count as u32).collect(),
+            removed: Vec::new(),
+            next_id: initial_node_count as u32,
+            probes,
+        };
+        for b in 0..initial_node_count as u32 {
+            s.points.push((Self::point(b), b));
+        }
+        s.points.sort_unstable();
+        s
+    }
+
+    pub fn with_defaults(initial_node_count: usize) -> Self {
+        Self::new(initial_node_count, DEFAULT_PROBES)
+    }
+
+    fn point(b: u32) -> u64 {
+        mix2(b as u64, 0x3b97_0b3e)
+    }
+
+    /// Clockwise successor of `h` and its distance.
+    #[inline]
+    fn successor(&self, h: u64) -> (u64, u32) {
+        let i = self.points.partition_point(|(p, _)| *p < h);
+        if i == self.points.len() {
+            // Wrap: distance to first point going through u64::MAX.
+            let (p, b) = self.points[0];
+            (p.wrapping_sub(h), b)
+        } else {
+            let (p, b) = self.points[i];
+            (p - h, b)
+        }
+    }
+}
+
+impl ConsistentHasher for MultiProbe {
+    fn lookup(&self, key: u64) -> u32 {
+        let mut best_dist = u64::MAX;
+        let mut best = self.points[0].1;
+        for i in 0..self.probes {
+            let h = mix2(key, 0x9e0f + i as u64);
+            let (d, b) = self.successor(h);
+            if d < best_dist {
+                best_dist = d;
+                best = b;
+            }
+        }
+        best
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        LookupTrace {
+            bucket: self.lookup(key),
+            outer_iters: self.probes as u32,
+            inner_iters: (self.points.len().max(2) as f64).log2().ceil() as u32
+                * self.probes as u32,
+            ..Default::default()
+        }
+    }
+
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let b = match self.removed.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.next_id;
+                self.next_id += 1;
+                b
+            }
+        };
+        let pt = (Self::point(b), b);
+        let pos = self.points.partition_point(|x| *x < pt);
+        self.points.insert(pos, pt);
+        let pos = self.working.partition_point(|&x| x < b);
+        self.working.insert(pos, b);
+        Ok(b)
+    }
+
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        let Ok(pos) = self.working.binary_search(&b) else {
+            return Err(AlgoError::NotWorking(b));
+        };
+        if self.working.len() == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.working.remove(pos);
+        self.points.retain(|(_, bb)| *bb != b);
+        self.removed.push(b);
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.working.len()
+    }
+
+    fn size(&self) -> usize {
+        self.next_id as usize
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        self.working.binary_search(&b).is_ok()
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        self.working.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.points.capacity() * std::mem::size_of::<(u64, u32)>()
+            + (self.working.capacity() + self.removed.capacity()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "multiprobe"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn lookup_total_and_working() {
+        let mut mp = MultiProbe::new(20, 21);
+        mp.remove(3).unwrap();
+        mp.remove(11).unwrap();
+        for k in 0..10_000u64 {
+            let b = mp.lookup(splitmix64_mix(k));
+            assert!(mp.is_working(b));
+        }
+    }
+
+    #[test]
+    fn minimal_disruption_and_exact_restore() {
+        let mut mp = MultiProbe::new(16, 21);
+        let keys: Vec<u64> = (0..20_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| mp.lookup(*k)).collect();
+        mp.remove(9).unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            let new = mp.lookup(*k);
+            if *old != 9 {
+                assert_eq!(new, *old);
+            }
+        }
+        assert_eq!(mp.add().unwrap(), 9);
+        for (k, old) in keys.iter().zip(&before) {
+            assert_eq!(mp.lookup(*k), *old);
+        }
+    }
+
+    #[test]
+    fn more_probes_tighten_balance() {
+        let spread = |probes: usize| -> f64 {
+            let mp = MultiProbe::new(10, probes);
+            let nkeys = 60_000u64;
+            let mut counts = [0u64; 10];
+            for k in 0..nkeys {
+                counts[mp.lookup(splitmix64_mix(k)) as usize] += 1;
+            }
+            let ideal = nkeys as f64 / 10.0;
+            counts.iter().map(|&c| (c as f64 - ideal).abs() / ideal).fold(0.0, f64::max)
+        };
+        let one = spread(1); // == plain 1-point ring: terrible balance
+        let many = spread(21);
+        assert!(many < one, "probing must help: {many} !< {one}");
+    }
+
+    #[test]
+    fn memory_is_one_point_per_node() {
+        let mp = MultiProbe::new(1000, 21);
+        // ~12-16 bytes per node (+ id vectors), far below Ring's 100 vnodes.
+        let ring = crate::algorithms::ring::Ring::new(1000, 100);
+        assert!(mp.state_bytes() * 10 < ring.state_bytes());
+    }
+}

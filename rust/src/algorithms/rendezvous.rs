@@ -1,0 +1,151 @@
+//! **Rendezvous hashing** / Highest Random Weight (Thaler & Ravishankar,
+//! 1996) — the oldest consistent-hashing scheme in the paper's survey (§II).
+//!
+//! A key maps to the working bucket maximizing `hash(key, bucket)`.
+//! Perfectly minimal-disruptive and monotone by construction; O(w) lookup
+//! makes it uncompetitive at scale, which is why the paper's evaluation
+//! excludes it — we include it as a correctness yardstick and for the
+//! router's small-pool mode.
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use crate::hashing::mix::mix2;
+
+/// Rendezvous / HRW hashing.
+#[derive(Debug, Clone)]
+pub struct Rendezvous {
+    working: Vec<u32>,
+    removed: Vec<u32>,
+    next_id: u32,
+}
+
+impl Rendezvous {
+    pub fn new(initial_node_count: usize) -> Self {
+        assert!(initial_node_count >= 1);
+        Self {
+            working: (0..initial_node_count as u32).collect(),
+            removed: Vec::new(),
+            next_id: initial_node_count as u32,
+        }
+    }
+}
+
+impl ConsistentHasher for Rendezvous {
+    fn lookup(&self, key: u64) -> u32 {
+        let mut best = self.working[0];
+        let mut best_w = mix2(key, best as u64 ^ 0xDEC0);
+        for &b in &self.working[1..] {
+            let w = mix2(key, b as u64 ^ 0xDEC0);
+            if w > best_w {
+                best_w = w;
+                best = b;
+            }
+        }
+        best
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        LookupTrace {
+            bucket: self.lookup(key),
+            outer_iters: self.working.len() as u32,
+            ..Default::default()
+        }
+    }
+
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let b = match self.removed.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.next_id;
+                self.next_id += 1;
+                b
+            }
+        };
+        let pos = self.working.partition_point(|&x| x < b);
+        self.working.insert(pos, b);
+        Ok(b)
+    }
+
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        let Ok(pos) = self.working.binary_search(&b) else {
+            return Err(AlgoError::NotWorking(b));
+        };
+        if self.working.len() == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.working.remove(pos);
+        self.removed.push(b);
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.working.len()
+    }
+
+    fn size(&self) -> usize {
+        self.next_id as usize
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        self.working.binary_search(&b).is_ok()
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        self.working.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.working.capacity() + self.removed.capacity()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "rendezvous"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn exact_minimal_disruption_and_monotonicity() {
+        let mut r = Rendezvous::new(12);
+        let keys: Vec<u64> = (0..20_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| r.lookup(*k)).collect();
+        r.remove(7).unwrap();
+        let mid: Vec<u32> = keys.iter().map(|k| r.lookup(*k)).collect();
+        for (old, new) in before.iter().zip(&mid) {
+            if *old != 7 {
+                assert_eq!(old, new);
+            } else {
+                assert_ne!(*new, 7);
+            }
+        }
+        let b = r.add().unwrap();
+        assert_eq!(b, 7);
+        // HRW restore is exact: back to the original mapping.
+        for (k, old) in keys.iter().zip(&before) {
+            assert_eq!(r.lookup(*k), *old);
+        }
+    }
+
+    #[test]
+    fn balance() {
+        let r = Rendezvous::new(16);
+        let nkeys = 160_000u64;
+        let mut counts = [0u64; 16];
+        for k in 0..nkeys {
+            counts[r.lookup(splitmix64_mix(k)) as usize] += 1;
+        }
+        let ideal = nkeys as f64 / 16.0;
+        for &c in &counts {
+            assert!((c as f64 - ideal).abs() / ideal < 0.08);
+        }
+    }
+
+    #[test]
+    fn lookup_cost_is_linear_in_w() {
+        let r = Rendezvous::new(100);
+        assert_eq!(r.lookup_traced(42).outer_iters, 100);
+    }
+}

@@ -1,0 +1,289 @@
+//! `ReplMap` — the replacement set R of Def. V.5, as a purpose-built open
+//! addressing hash table.
+//!
+//! The paper requires O(1) insert / remove / probe on R (Def. V.5) and the
+//! *memory usage* figures require exact byte accounting, which `std`'s
+//! `HashMap` makes opaque. This table is specialized for the hot path:
+//!
+//! * keys are bucket ids (`u32`), values are `(c, p)` pairs (`u32` each);
+//! * layout is struct-of-arrays (12 bytes/slot), linear probing with
+//!   Fibonacci hashing and backward-shift deletion — no tombstones, so the
+//!   probe distance stays short even under the add/remove churn of the
+//!   incremental-removal scenario;
+//! * `state_bytes()` is exact: `capacity * 12`.
+//!
+//! The probe function must be cheap *and* mix well: bucket ids are dense
+//! small integers, so identity hashing would cluster terribly after the
+//! first resize. Fibonacci multiply-shift fixes that at one `imul`.
+
+const EMPTY: u32 = u32::MAX;
+const MIN_CAP: usize = 8;
+
+/// Open-addressing map bucket-id → (replacing bucket `c`, previous removed
+/// `p`).
+#[derive(Debug, Clone)]
+pub struct ReplMap {
+    keys: Vec<u32>,
+    vals: Vec<u64>, // c in the low 32 bits, p in the high 32 bits
+    len: usize,
+    mask: usize,
+}
+
+impl Default for ReplMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplMap {
+    pub fn new() -> Self {
+        Self { keys: vec![EMPTY; MIN_CAP], vals: vec![0; MIN_CAP], len: 0, mask: MIN_CAP - 1 }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        let cap = (n * 4 / 3 + 1).next_power_of_two().max(MIN_CAP);
+        Self { keys: vec![EMPTY; cap], vals: vec![0; cap], len: 0, mask: cap - 1 }
+    }
+
+    #[inline(always)]
+    fn slot_of(&self, key: u32) -> usize {
+        // Fibonacci hashing: golden-ratio multiply, take the top bits.
+        let h = (key as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        (h >> 32) as usize & self.mask
+    }
+
+    /// Number of stored replacements (`r = |R|`).
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Exact bytes held by the backing arrays (the memory-usage metric).
+    pub fn state_bytes(&self) -> usize {
+        self.keys.len() * (std::mem::size_of::<u32>() + std::mem::size_of::<u64>())
+    }
+
+    /// Probe for `key`; returns `(c, p)` if present.
+    ///
+    /// This is THE hot operation: one multiply, then a short linear scan.
+    #[inline(always)]
+    pub fn get(&self, key: u32) -> Option<(u32, u32)> {
+        let mut i = self.slot_of(key);
+        loop {
+            let k = unsafe { *self.keys.get_unchecked(i) };
+            if k == key {
+                let v = unsafe { *self.vals.get_unchecked(i) };
+                return Some((v as u32, (v >> 32) as u32));
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert or overwrite the replacement for `key`.
+    pub fn insert(&mut self, key: u32, c: u32, p: u32) {
+        debug_assert_ne!(key, EMPTY, "bucket id u32::MAX is reserved");
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let val = (c as u64) | ((p as u64) << 32);
+        let mut i = self.slot_of(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                self.vals[i] = val;
+                return;
+            }
+            if k == EMPTY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Remove the replacement for `key`; returns the old `(c, p)`.
+    ///
+    /// Uses backward-shift deletion so no tombstones accumulate.
+    pub fn remove(&mut self, key: u32) -> Option<(u32, u32)> {
+        let mut i = self.slot_of(key);
+        loop {
+            let k = self.keys[i];
+            if k == EMPTY {
+                return None;
+            }
+            if k == key {
+                break;
+            }
+            i = (i + 1) & self.mask;
+        }
+        let v = self.vals[i];
+        // Backward shift: close the hole by moving displaced entries back.
+        let mut hole = i;
+        let mut j = (i + 1) & self.mask;
+        loop {
+            let k = self.keys[j];
+            if k == EMPTY {
+                break;
+            }
+            let home = self.slot_of(k);
+            // Can k legally move into `hole`? Yes iff hole is cyclically
+            // between home and j (i.e. moving back doesn't pass its home).
+            let between = if home <= j {
+                home <= hole && hole <= j
+            } else {
+                // probe sequence wrapped
+                hole >= home || hole <= j
+            };
+            if between {
+                self.keys[hole] = k;
+                self.vals[hole] = self.vals[j];
+                hole = j;
+            }
+            j = (j + 1) & self.mask;
+        }
+        self.keys[hole] = EMPTY;
+        self.len -= 1;
+        Some((v as u32, (v >> 32) as u32))
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.keys.len() * 2;
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![0; new_cap]);
+        self.mask = new_cap - 1;
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY {
+                self.insert(k, v as u32, (v >> 32) as u32);
+            }
+        }
+    }
+
+    /// Iterate over `(bucket, c, p)` in unspecified order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, u32)> + '_ {
+        self.keys
+            .iter()
+            .zip(self.vals.iter())
+            .filter(|(k, _)| **k != EMPTY)
+            .map(|(k, v)| (*k, *v as u32, (*v >> 32) as u32))
+    }
+
+    /// Drop all entries, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.keys.fill(EMPTY);
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::prng::{Rng64, Xoshiro256};
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m = ReplMap::new();
+        assert!(m.is_empty());
+        m.insert(5, 8, 9);
+        m.insert(1, 7, 5);
+        assert_eq!(m.get(5), Some((8, 9)));
+        assert_eq!(m.get(1), Some((7, 5)));
+        assert_eq!(m.get(2), None);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.remove(5), Some((8, 9)));
+        assert_eq!(m.get(5), None);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.remove(5), None);
+    }
+
+    #[test]
+    fn overwrite_updates_in_place() {
+        let mut m = ReplMap::new();
+        m.insert(3, 1, 2);
+        m.insert(3, 9, 9);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(3), Some((9, 9)));
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m = ReplMap::new();
+        for i in 0..10_000u32 {
+            m.insert(i, i + 1, i + 2);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in 0..10_000u32 {
+            assert_eq!(m.get(i), Some((i + 1, i + 2)), "key {i}");
+        }
+        assert!(m.state_bytes() >= 10_000 * 12);
+    }
+
+    #[test]
+    fn fuzz_against_std_hashmap() {
+        let mut rng = Xoshiro256::new(0xfeed);
+        let mut ours = ReplMap::new();
+        let mut truth: HashMap<u32, (u32, u32)> = HashMap::new();
+        for _ in 0..50_000 {
+            let key = rng.next_below(512) as u32;
+            match rng.next_below(3) {
+                0 => {
+                    let c = rng.next_u64() as u32 & 0x7fff_ffff;
+                    let p = rng.next_u64() as u32 & 0x7fff_ffff;
+                    ours.insert(key, c, p);
+                    truth.insert(key, (c, p));
+                }
+                1 => {
+                    assert_eq!(ours.remove(key), truth.remove(&key), "remove {key}");
+                }
+                _ => {
+                    assert_eq!(ours.get(key), truth.get(&key).copied(), "get {key}");
+                }
+            }
+            assert_eq!(ours.len(), truth.len());
+        }
+        // Final full verification.
+        for (k, v) in &truth {
+            assert_eq!(ours.get(*k), Some(*v));
+        }
+        assert_eq!(ours.iter().count(), truth.len());
+    }
+
+    #[test]
+    fn with_capacity_avoids_growth() {
+        let mut m = ReplMap::with_capacity(100);
+        let cap = m.capacity();
+        for i in 0..100u32 {
+            m.insert(i, 0, 0);
+        }
+        assert_eq!(m.capacity(), cap, "no growth for pre-sized map");
+    }
+
+    #[test]
+    fn clear_retains_allocation() {
+        let mut m = ReplMap::new();
+        for i in 0..100u32 {
+            m.insert(i, 1, 1);
+        }
+        let cap = m.capacity();
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.capacity(), cap);
+        assert_eq!(m.get(5), None);
+    }
+}

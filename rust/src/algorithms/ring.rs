@@ -1,0 +1,218 @@
+//! **Consistent Hashing Ring** (Karger et al., 1997) with virtual nodes —
+//! the classic algorithm the paper's related work starts from (§II).
+//!
+//! Each bucket owns `vnodes` points on a 64-bit ring; a key maps to the
+//! bucket owning the first point clockwise of the key's hash. Memory is
+//! Θ(w·v); lookup is O(log(w·v)) by binary search.
+//!
+//! The point set is a *sorted vector* rather than a tree: exact memory
+//! accounting for the paper's memory figures, better cache behaviour, and
+//! resize cost is irrelevant to the scenarios under study.
+
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use crate::hashing::mix::mix2;
+
+/// Default virtual nodes per bucket (the survey's common setting).
+pub const DEFAULT_VNODES: usize = 100;
+
+/// Karger-style hash ring.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// Sorted (point, bucket) pairs.
+    points: Vec<(u64, u32)>,
+    /// Working bucket ids, ascending.
+    working: Vec<u32>,
+    /// LIFO stack of removed ids (drives `add` restoration).
+    removed: Vec<u32>,
+    /// Tail counter for brand-new ids.
+    next_id: u32,
+    vnodes: usize,
+}
+
+impl Ring {
+    pub fn new(initial_node_count: usize, vnodes: usize) -> Self {
+        assert!(initial_node_count >= 1 && vnodes >= 1);
+        let mut s = Self {
+            points: Vec::with_capacity(initial_node_count * vnodes),
+            working: (0..initial_node_count as u32).collect(),
+            removed: Vec::new(),
+            next_id: initial_node_count as u32,
+            vnodes,
+        };
+        for b in 0..initial_node_count as u32 {
+            s.insert_points(b);
+        }
+        s.points.sort_unstable();
+        s
+    }
+
+    pub fn with_defaults(initial_node_count: usize) -> Self {
+        Self::new(initial_node_count, DEFAULT_VNODES)
+    }
+
+    fn point(b: u32, replica: usize) -> u64 {
+        mix2((b as u64) << 20 | replica as u64, 0x51A6)
+    }
+
+    fn insert_points(&mut self, b: u32) {
+        for r in 0..self.vnodes {
+            self.points.push((Self::point(b, r), b));
+        }
+    }
+}
+
+impl ConsistentHasher for Ring {
+    fn lookup(&self, key: u64) -> u32 {
+        let h = mix2(key, 0x4B4B);
+        // First point strictly greater than h, wrapping.
+        let i = self.points.partition_point(|(p, _)| *p <= h);
+        let idx = if i == self.points.len() { 0 } else { i };
+        self.points[idx].1
+    }
+
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        // Binary search: count the comparisons as outer iterations.
+        let t = LookupTrace {
+            bucket: self.lookup(key),
+            outer_iters: (self.points.len().max(2) as f64).log2().ceil() as u32,
+            ..Default::default()
+        };
+        t
+    }
+
+    fn add(&mut self) -> Result<u32, AlgoError> {
+        let b = match self.removed.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.next_id;
+                self.next_id += 1;
+                b
+            }
+        };
+        self.insert_points(b);
+        self.points.sort_unstable();
+        let pos = self.working.partition_point(|&x| x < b);
+        self.working.insert(pos, b);
+        Ok(b)
+    }
+
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError> {
+        let Ok(pos) = self.working.binary_search(&b) else {
+            return Err(AlgoError::NotWorking(b));
+        };
+        if self.working.len() == 1 {
+            return Err(AlgoError::WouldBeEmpty);
+        }
+        self.working.remove(pos);
+        self.points.retain(|(_, bb)| *bb != b);
+        self.removed.push(b);
+        Ok(())
+    }
+
+    fn working(&self) -> usize {
+        self.working.len()
+    }
+
+    fn size(&self) -> usize {
+        self.next_id as usize
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        self.working.binary_search(&b).is_ok()
+    }
+
+    fn working_buckets(&self) -> Vec<u32> {
+        self.working.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Θ(w·v) points + the id bookkeeping.
+        self.points.capacity() * std::mem::size_of::<(u64, u32)>()
+            + self.working.capacity() * 4
+            + self.removed.capacity() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::mix::splitmix64_mix;
+
+    #[test]
+    fn lookup_is_total_and_working() {
+        let mut r = Ring::new(10, 50);
+        r.remove(4).unwrap();
+        for k in 0..10_000u64 {
+            let b = r.lookup(splitmix64_mix(k));
+            assert!(r.is_working(b));
+            assert_ne!(b, 4);
+        }
+    }
+
+    #[test]
+    fn minimal_disruption() {
+        let mut r = Ring::new(12, 64);
+        let keys: Vec<u64> = (0..20_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| r.lookup(*k)).collect();
+        r.remove(5).unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            let new = r.lookup(*k);
+            if *old != 5 {
+                assert_eq!(new, *old);
+            }
+        }
+    }
+
+    #[test]
+    fn add_restores_removed_id_lifo() {
+        let mut r = Ring::new(5, 16);
+        r.remove(2).unwrap();
+        r.remove(4).unwrap();
+        assert_eq!(r.add().unwrap(), 4);
+        assert_eq!(r.add().unwrap(), 2);
+        assert_eq!(r.add().unwrap(), 5); // fresh tail id
+    }
+
+    #[test]
+    fn restore_is_exact_inverse() {
+        // Removing then re-adding a bucket restores the exact mapping
+        // (ring points are a pure function of the bucket id).
+        let mut r = Ring::new(8, 32);
+        let keys: Vec<u64> = (0..5_000u64).map(splitmix64_mix).collect();
+        let before: Vec<u32> = keys.iter().map(|k| r.lookup(*k)).collect();
+        r.remove(3).unwrap();
+        r.add().unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            assert_eq!(r.lookup(*k), *old);
+        }
+    }
+
+    #[test]
+    fn balance_improves_with_vnodes() {
+        let spread = |vnodes: usize| -> f64 {
+            let r = Ring::new(10, vnodes);
+            let nkeys = 60_000u64;
+            let mut counts = [0u64; 10];
+            for k in 0..nkeys {
+                counts[r.lookup(splitmix64_mix(k)) as usize] += 1;
+            }
+            let ideal = nkeys as f64 / 10.0;
+            counts.iter().map(|&c| (c as f64 - ideal).abs() / ideal).fold(0.0, f64::max)
+        };
+        let few = spread(4);
+        let many = spread(256);
+        assert!(many < few, "vnodes must tighten balance: {many} !< {few}");
+        assert!(many < 0.25, "256 vnodes should be within 25%: {many}");
+    }
+
+    #[test]
+    fn memory_scales_with_working_nodes() {
+        let small = Ring::new(10, 100).state_bytes();
+        let big = Ring::new(1000, 100).state_bytes();
+        assert!(big > small * 50);
+    }
+}

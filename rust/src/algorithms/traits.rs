@@ -1,0 +1,213 @@
+//! The [`ConsistentHasher`] trait: the contract every algorithm implements,
+//! plus the error, trace and removal-order types shared across the library
+//! and the simulator.
+
+use std::fmt;
+
+/// Errors surfaced by cluster-resize operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AlgoError {
+    /// The algorithm cannot remove this bucket (Jump: only the tail).
+    UnsupportedRemoval { bucket: u32, reason: &'static str },
+    /// Bucket id is not currently a working bucket.
+    NotWorking(u32),
+    /// The cluster is at its capacity bound (Anchor/Dx: `a`).
+    CapacityExhausted { capacity: usize },
+    /// The cluster would become empty.
+    WouldBeEmpty,
+}
+
+impl fmt::Display for AlgoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlgoError::UnsupportedRemoval { bucket, reason } => {
+                write!(f, "cannot remove bucket {bucket}: {reason}")
+            }
+            AlgoError::NotWorking(b) => write!(f, "bucket {b} is not working"),
+            AlgoError::CapacityExhausted { capacity } => {
+                write!(f, "cluster capacity {capacity} exhausted")
+            }
+            AlgoError::WouldBeEmpty => write!(f, "cannot remove the last working bucket"),
+        }
+    }
+}
+
+impl std::error::Error for AlgoError {}
+
+/// Per-lookup iteration counters, used to validate Table I's asymptotic
+/// bounds empirically (`bench_complexity`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LookupTrace {
+    /// The bucket the lookup resolved to.
+    pub bucket: u32,
+    /// Steps of the initial Jump walk (Memento/Jump: O(ln n)).
+    pub jump_steps: u32,
+    /// External-loop iterations (Memento Prop. VII.1; Anchor outer loop;
+    /// Dx probe count).
+    pub outer_iters: u32,
+    /// Internal-loop iterations (Memento Prop. VII.2; Anchor inner chain).
+    pub inner_iters: u32,
+}
+
+/// Removal ordering strategies used by the paper's scenarios (§VIII-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemovalOrder {
+    /// Best case: Last-In-First-Out (remove the most recently added).
+    Lifo,
+    /// Worst case: uniformly random working bucket.
+    Random,
+}
+
+impl RemovalOrder {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RemovalOrder::Lifo => "best(LIFO)",
+            RemovalOrder::Random => "worst(random)",
+        }
+    }
+}
+
+/// A consistent-hashing algorithm over pre-digested `u64` keys.
+///
+/// ## Contract (the paper's §III properties)
+/// * **balance** — `lookup` spreads keys ~uniformly over working buckets;
+/// * **minimal disruption** — `remove(b)` relocates only keys on `b`;
+/// * **monotonicity** — `add()` moves keys only *onto* the new bucket.
+///
+/// These are enforced by the property tests in
+/// `rust/tests/integration_algorithms.rs` for every implementation.
+pub trait ConsistentHasher: Send + Sync {
+    /// Map a key to a working bucket.
+    fn lookup(&self, key: u64) -> u32;
+
+    /// Map a key and record iteration counters (slow path; benches only).
+    fn lookup_traced(&self, key: u64) -> LookupTrace {
+        LookupTrace { bucket: self.lookup(key), ..Default::default() }
+    }
+
+    /// Add a node; returns the bucket id assigned to it.
+    fn add(&mut self) -> Result<u32, AlgoError>;
+
+    /// Remove the node mapped to bucket `b`.
+    fn remove(&mut self, b: u32) -> Result<(), AlgoError>;
+
+    /// Number of working buckets (`w`).
+    fn working(&self) -> usize;
+
+    /// Size of the b-array (`n` — Memento) or capacity (`a` — Anchor/Dx)
+    /// or `w` for structureless algorithms.
+    fn size(&self) -> usize;
+
+    /// Hard capacity bound, if the algorithm has one (Anchor/Dx: `Some(a)`).
+    fn capacity_bound(&self) -> Option<usize> {
+        None
+    }
+
+    /// Whether `b` currently maps to a working node.
+    fn is_working(&self, b: u32) -> bool;
+
+    /// The working bucket set, ascending.
+    fn working_buckets(&self) -> Vec<u32>;
+
+    /// Whether arbitrary (non-LIFO) removals are supported (Jump: `false`).
+    fn supports_random_removal(&self) -> bool {
+        true
+    }
+
+    /// Whether minimal disruption is *exact* (only keys of the resized
+    /// bucket move). Maglev trades this for O(1) lookups: its table rebuild
+    /// may churn a small bounded fraction of other keys.
+    fn strict_disruption(&self) -> bool {
+        true
+    }
+
+    /// Place a key on `k` replica *slots*.
+    ///
+    /// Slot 0 is always `lookup(key)` (primary — compatible with
+    /// single-replica deployments); slot i is an **independent** draw
+    /// `lookup(mix2(key, i))`. Independence is the load-bearing property:
+    /// each slot individually inherits minimal disruption (it moves iff
+    /// *its own* bucket is resized), so a failover read over the slots
+    /// always finds a surviving copy after any single failure — a deduped
+    /// "distinct set" construction loses this (one slot's move reshuffles
+    /// the whole set). The price is possible slot collisions
+    /// (P ≈ k²/2w, birthday bound); callers needing distinct buckets use
+    /// [`ConsistentHasher::lookup_replicas_distinct`] for *placement*
+    /// decisions and accept its weaker stability.
+    fn lookup_replicas(&self, key: u64, k: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(k);
+        if k == 0 {
+            return out;
+        }
+        out.push(self.lookup(key));
+        for i in 1..k as u64 {
+            out.push(self.lookup(crate::hashing::mix::mix2(key, i)));
+        }
+        out
+    }
+
+    /// Like [`ConsistentHasher::lookup_replicas`] but deduplicated to `k`
+    /// distinct working buckets (filled deterministically from the working
+    /// set if the draws stall). Use for placement fan-out; NOT stable
+    /// across resizes the way the independent slots are.
+    fn lookup_replicas_distinct(&self, key: u64, k: usize) -> Vec<u32> {
+        let k = k.min(self.working());
+        let mut out: Vec<u32> = Vec::with_capacity(k);
+        if k == 0 {
+            return out;
+        }
+        out.push(self.lookup(key));
+        let mut salt = 0u64;
+        let budget = 16 * k as u64 + 64;
+        while out.len() < k && salt < budget {
+            salt += 1;
+            let b = self.lookup(crate::hashing::mix::mix2(key, salt));
+            if !out.contains(&b) {
+                out.push(b);
+            }
+        }
+        if out.len() < k {
+            let wb = self.working_buckets();
+            let start = (crate::hashing::mix::mix2(key, 0xF111) % wb.len() as u64) as usize;
+            for i in 0..wb.len() {
+                let b = wb[(start + i) % wb.len()];
+                if !out.contains(&b) {
+                    out.push(b);
+                    if out.len() == k {
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact size, in bytes, of the algorithm-owned mutable state: the
+    /// paper's *memory usage* metric (Figs. 18/19/20/25/26/28/30/32).
+    /// Counts live backing arrays/tables at their current capacity;
+    /// excludes `self`'s fixed-size header fields.
+    fn state_bytes(&self) -> usize;
+
+    /// Registry name.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display() {
+        let e = AlgoError::UnsupportedRemoval { bucket: 3, reason: "only tail" };
+        assert!(e.to_string().contains("bucket 3"));
+        assert!(AlgoError::WouldBeEmpty.to_string().contains("last working"));
+        assert!(AlgoError::CapacityExhausted { capacity: 8 }.to_string().contains('8'));
+        assert!(AlgoError::NotWorking(2).to_string().contains('2'));
+    }
+
+    #[test]
+    fn removal_order_labels() {
+        assert_eq!(RemovalOrder::Lifo.label(), "best(LIFO)");
+        assert_eq!(RemovalOrder::Random.label(), "worst(random)");
+    }
+}

@@ -1,0 +1,250 @@
+//! `benchkit` — a criterion-style micro-benchmark harness (criterion is not
+//! in the offline crate set).
+//!
+//! Design follows the same methodology criterion uses, scaled down:
+//! 1. **warmup** until the clock stabilizes (default 0.2 s);
+//! 2. **calibration**: estimate ns/iter, choose a batch size so one sample
+//!    costs ~1-5 ms (amortizing clock overhead);
+//! 3. **sampling**: collect `samples` batches, report median / p10 / p90 of
+//!    the per-iteration time plus the relative spread;
+//! 4. results render as aligned tables and CSV series under `results/`
+//!    (one file per paper figure — see [`crate::simulator::figures`]).
+//!
+//! `std::hint::black_box` guards against the optimizer deleting measured
+//! work.
+
+pub mod report;
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Number of measured samples (batches).
+    pub samples: usize,
+    /// Target wall-clock per sample batch.
+    pub target_sample_time: Duration,
+    /// Hard cap on total measure time (long sweeps stay bounded).
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 30,
+            target_sample_time: Duration::from_millis(2),
+            max_total: Duration::from_secs(5),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for wide parameter sweeps (the figure benches run
+    /// dozens of cells; the paper's shape survives lighter sampling).
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 12,
+            target_sample_time: Duration::from_millis(1),
+            max_total: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One benchmark's statistics, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Median ns/iter (the headline number — robust to outliers).
+    pub median_ns: f64,
+    /// 10th / 90th percentile of per-sample ns/iter.
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Relative spread (p90-p10)/median — a quality gate.
+    pub rel_spread: f64,
+    /// Iterations per sample batch.
+    pub batch: u64,
+    /// Number of samples taken.
+    pub samples: usize,
+}
+
+impl BenchStats {
+    /// Ops per second implied by the median.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+/// Measure `f`, which performs exactly **one** operation per call.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchStats {
+    // Warmup.
+    let wstart = Instant::now();
+    let mut warm_iters = 0u64;
+    while wstart.elapsed() < cfg.warmup {
+        f();
+        warm_iters += 1;
+    }
+    // Calibrate batch size from the warmup rate.
+    let ns_per = wstart.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+    let batch = ((cfg.target_sample_time.as_nanos() as f64 / ns_per.max(0.1)) as u64).max(1);
+
+    // Sample.
+    let mut per_iter: Vec<f64> = Vec::with_capacity(cfg.samples);
+    let total_start = Instant::now();
+    for _ in 0..cfg.samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        if total_start.elapsed() > cfg.max_total {
+            break;
+        }
+    }
+    stats_from(name, per_iter, batch)
+}
+
+/// Measure a batched operation: `f(n)` performs `n` operations internally
+/// (used for the PJRT engine, where dispatch is per-batch).
+pub fn bench_batched<F: FnMut(u64)>(
+    name: &str,
+    cfg: &BenchConfig,
+    inner_batch: u64,
+    mut f: F,
+) -> BenchStats {
+    let wstart = Instant::now();
+    let mut warm = 0u64;
+    while wstart.elapsed() < cfg.warmup {
+        f(inner_batch);
+        warm += 1;
+    }
+    let ns_per_call = wstart.elapsed().as_nanos() as f64 / warm.max(1) as f64;
+    let calls =
+        ((cfg.target_sample_time.as_nanos() as f64 / ns_per_call.max(1.0)) as u64).max(1);
+
+    let mut per_iter = Vec::with_capacity(cfg.samples);
+    let total_start = Instant::now();
+    for _ in 0..cfg.samples {
+        let t = Instant::now();
+        for _ in 0..calls {
+            f(inner_batch);
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / (calls * inner_batch) as f64);
+        if total_start.elapsed() > cfg.max_total {
+            break;
+        }
+    }
+    stats_from(name, per_iter, calls * inner_batch)
+}
+
+fn stats_from(name: &str, mut per_iter: Vec<f64>, batch: u64) -> BenchStats {
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = per_iter.len();
+    let pct = |p: f64| -> f64 {
+        if n == 0 {
+            return f64::NAN;
+        }
+        per_iter[((p * (n - 1) as f64).round() as usize).min(n - 1)]
+    };
+    let median = pct(0.5);
+    let p10 = pct(0.10);
+    let p90 = pct(0.90);
+    let mean = per_iter.iter().sum::<f64>() / n.max(1) as f64;
+    BenchStats {
+        name: name.to_string(),
+        median_ns: median,
+        p10_ns: p10,
+        p90_ns: p90,
+        mean_ns: mean,
+        rel_spread: if median > 0.0 { (p90 - p10) / median } else { 0.0 },
+        batch,
+        samples: n,
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else if b < 1024 * 1024 * 1024 {
+        format!("{:.2} MiB", b as f64 / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b as f64 / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_sane() {
+        let mut acc = 0u64;
+        let s = bench("nop-ish", &BenchConfig::quick(), || {
+            acc = black_box(acc.wrapping_mul(6364136223846793005).wrapping_add(1));
+        });
+        assert!(s.median_ns > 0.0 && s.median_ns < 1_000.0, "median {}", s.median_ns);
+        assert!(s.samples > 0);
+        assert!(s.batch >= 1);
+        assert!(s.ops_per_sec() > 1e6);
+    }
+
+    #[test]
+    fn batched_normalizes_per_op() {
+        let s = bench_batched("batch", &BenchConfig::quick(), 128, |n| {
+            let mut x = 0u64;
+            for i in 0..n {
+                x = black_box(x ^ i);
+            }
+        });
+        assert!(s.median_ns < 100.0, "per-op ns {}", s.median_ns);
+    }
+
+    #[test]
+    fn ordering_detects_slower_work() {
+        let cfg = BenchConfig::quick();
+        let fast = bench("fast", &cfg, || {
+            black_box(1u64 + 1);
+        });
+        let slow = bench("slow", &cfg, || {
+            let mut h = 0u64;
+            for i in 0..100u64 {
+                h = h.wrapping_add(crate::hashing::mix::splitmix64_mix(black_box(i)));
+            }
+            black_box(h);
+        });
+        assert!(slow.median_ns > fast.median_ns * 5.0, "slow {} fast {}", slow.median_ns, fast.median_ns);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ns(12.34), "12.3 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(3_000_000.0).contains("ms"));
+        assert_eq!(fmt_bytes(100), "100 B");
+        assert!(fmt_bytes(2048).contains("KiB"));
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Figure/table reporting: aligned console tables + CSV files under
+//! `results/`, one per paper figure, so plots can be regenerated with any
+//! external tool.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// A rectangular report: named columns, string cells.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned console table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", header.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write the CSV under `results/<stem>.csv` (creating the directory)
+    /// and return the path.
+    pub fn save_csv(&self, stem: &str) -> std::io::Result<PathBuf> {
+        let dir = results_dir();
+        fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{stem}.csv"));
+        fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// Print to stdout and save the CSV; the standard ending of every
+    /// bench target.
+    pub fn emit(&self, stem: &str) {
+        println!("{}", self.render());
+        match self.save_csv(stem) {
+            Ok(p) => println!("[saved {}]\n", p.display()),
+            Err(e) => eprintln!("[csv save failed: {e}]"),
+        }
+    }
+}
+
+/// `results/` at the workspace root (or `MEMENTO_RESULTS_DIR`).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("MEMENTO_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new("results").to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["algo", "ns"]);
+        t.push_row(vec!["memento".into(), "12.5".into()]);
+        t.push_row(vec!["jump".into(), "9.1".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("memento"));
+        let lines: Vec<&str> = r.lines().collect();
+        // Header + separator + 2 rows + title.
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn save_csv_writes_file() {
+        let dir = std::env::temp_dir().join("memento_report_test");
+        std::env::set_var("MEMENTO_RESULTS_DIR", &dir);
+        let mut t = Table::new("x", &["a"]);
+        t.push_row(vec!["1".into()]);
+        let p = t.save_csv("unit_test_table").unwrap();
+        assert!(p.exists());
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(content, "a\n1\n");
+        std::env::remove_var("MEMENTO_RESULTS_DIR");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

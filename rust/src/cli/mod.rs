@@ -1,0 +1,253 @@
+//! `cli` — a declarative flag parser (clap is not in the offline crate
+//! set). Supports `--flag value`, `--flag=value`, boolean switches,
+//! positional args, per-flag help and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Flag specification.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    command: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Self { command, about, flags: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// A `--name <value>` flag with a default.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A required `--name <value>` flag.
+    pub fn required_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: false });
+        self
+    }
+
+    /// A boolean `--name` switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    /// A positional argument (documented; collected in order).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  memento {}", self.command, self.about, self.command);
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [FLAGS]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let meta = if f.is_switch {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} <v>", f.name)
+            };
+            let dft = match &f.default {
+                Some(d) if !f.is_switch => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  {meta:<26} {}{dft}\n", f.help));
+        }
+        if !self.positionals.is_empty() {
+            out.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                out.push_str(&format!("  <{p:<10}> {h}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse a raw token list (not including the program/command name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        let mut positionals = Vec::new();
+
+        for f in &self.flags {
+            if f.is_switch {
+                switches.insert(f.name.to_string(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), d.clone());
+            }
+        }
+
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(flag) = tok.strip_prefix("--") {
+                let (name, inline) = match flag.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (flag, None),
+                };
+                let Some(spec) = self.flags.iter().find(|f| f.name == name) else {
+                    return Err(format!("unknown flag --{name}\n\n{}", self.usage()));
+                };
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(format!("switch --{name} takes no value"));
+                    }
+                    switches.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("flag --{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+
+        // Required flags present?
+        for f in &self.flags {
+            if !f.is_switch && f.default.is_none() && !values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}\n\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(Args { values, switches, positionals })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared in the spec"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("flag --{name}: cannot parse '{}'", self.get(name)))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared in the spec"))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+fn to_vec(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+/// Convenience for tests / examples.
+pub fn parse_str(spec: &ArgSpec, args: &[&str]) -> Result<Args, String> {
+    spec.parse(&to_vec(args))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("serve", "run the router")
+            .flag("algo", "memento", "consistent-hash algorithm")
+            .flag("nodes", "16", "initial nodes")
+            .required_flag("bind", "listen address")
+            .switch("verbose", "chatty logs")
+            .positional("config", "config file")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse_str(&spec(), &["--bind", "0.0.0.0:1", "--nodes=32"]).unwrap();
+        assert_eq!(a.get("algo"), "memento");
+        assert_eq!(a.get("nodes"), "32");
+        assert_eq!(a.get("bind"), "0.0.0.0:1");
+        assert!(!a.switch("verbose"));
+        let n: usize = a.get_parsed("nodes").unwrap();
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = parse_str(&spec(), &["--verbose", "conf.toml", "--bind=x"]).unwrap();
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positionals(), &["conf.toml".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_flag() {
+        let e = parse_str(&spec(), &[]).unwrap_err();
+        assert!(e.contains("missing required flag --bind"));
+    }
+
+    #[test]
+    fn unknown_flag() {
+        let e = parse_str(&spec(), &["--bogus", "1", "--bind=x"]).unwrap_err();
+        assert!(e.contains("unknown flag --bogus"));
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = parse_str(&spec(), &["--help"]).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--algo"));
+        assert!(e.contains("[default: memento]"));
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        let e = parse_str(&spec(), &["--verbose=yes", "--bind=x"]).unwrap_err();
+        assert!(e.contains("takes no value"));
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        let a = parse_str(&spec(), &["--nodes", "abc", "--bind=x"]).unwrap();
+        let r: Result<usize, _> = a.get_parsed("nodes");
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! `config` — typed configuration loaded from a TOML-subset file
+//! (serde/toml are not in the offline crate set).
+//!
+//! Supported syntax (the subset real deployments of this router need):
+//! `[section]` headers, `key = value` with string (`"…"`), integer, float,
+//! boolean and flat array (`[1, 2, 3]`) values, `#` comments.
+//!
+//! [`RouterConfig`] is the schema for the L3 coordinator; `memento serve
+//! --config router.toml` loads it, and every field has a CLI override.
+
+pub mod toml;
+
+pub use toml::{parse, ParseError, Value};
+
+use std::collections::BTreeMap;
+
+/// Parsed config document: `section.key → Value` (top-level keys live in
+/// the `""` section).
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// The router's deployable configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterConfig {
+    /// Consistent-hash algorithm (registry name, default `memento`).
+    pub algorithm: String,
+    /// Initial node count.
+    pub initial_nodes: usize,
+    /// Capacity bound `a` for Anchor/Dx (`a = capacity_factor × initial`).
+    pub capacity_factor: usize,
+    /// TCP bind address for the service front-end.
+    pub bind: String,
+    /// Worker threads serving requests.
+    pub workers: usize,
+    /// Dynamic batcher: flush when this many lookups are queued…
+    pub batch_size: usize,
+    /// …or after this many microseconds, whichever first.
+    pub batch_timeout_us: u64,
+    /// Use the PJRT batch engine when batches are at least this large
+    /// (0 disables the engine entirely).
+    pub engine_min_batch: usize,
+    /// Artifact directory for AOT-compiled HLO modules.
+    pub artifacts_dir: String,
+    /// Replication factor for the KV example workloads.
+    pub replicas: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            algorithm: "memento".into(),
+            initial_nodes: 16,
+            capacity_factor: 10,
+            bind: "127.0.0.1:7400".into(),
+            workers: 4,
+            batch_size: 1024,
+            batch_timeout_us: 200,
+            engine_min_batch: 256,
+            artifacts_dir: "artifacts".into(),
+            replicas: 1,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Load from a TOML document string; unknown keys are rejected (typo
+    /// safety), missing keys take defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = Self::default();
+        for (section, table) in &doc {
+            let prefix = if section.is_empty() { String::new() } else { format!("{section}.") };
+            for (key, value) in table {
+                let full = format!("{prefix}{key}");
+                cfg.apply(&full, value)?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, key: &str, v: &Value) -> Result<(), String> {
+        let as_usize = |v: &Value| -> Result<usize, String> {
+            v.as_int()
+                .and_then(|i| usize::try_from(i).ok())
+                .ok_or_else(|| format!("key '{key}': expected non-negative integer, got {v:?}"))
+        };
+        match key {
+            "router.algorithm" | "algorithm" => {
+                self.algorithm = v
+                    .as_str()
+                    .ok_or_else(|| format!("key '{key}': expected string"))?
+                    .to_string()
+            }
+            "router.initial_nodes" | "initial_nodes" => self.initial_nodes = as_usize(v)?,
+            "router.capacity_factor" | "capacity_factor" => self.capacity_factor = as_usize(v)?,
+            "router.bind" | "bind" => {
+                self.bind =
+                    v.as_str().ok_or_else(|| format!("key '{key}': expected string"))?.to_string()
+            }
+            "router.workers" | "workers" => self.workers = as_usize(v)?,
+            "batcher.batch_size" | "batch_size" => self.batch_size = as_usize(v)?,
+            "batcher.batch_timeout_us" | "batch_timeout_us" => {
+                self.batch_timeout_us = as_usize(v)? as u64
+            }
+            "engine.min_batch" | "engine_min_batch" => self.engine_min_batch = as_usize(v)?,
+            "engine.artifacts_dir" | "artifacts_dir" => {
+                self.artifacts_dir =
+                    v.as_str().ok_or_else(|| format!("key '{key}': expected string"))?.to_string()
+            }
+            "kv.replicas" | "replicas" => self.replicas = as_usize(v)?,
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    /// Sanity constraints shared by file + CLI configuration.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.initial_nodes == 0 {
+            return Err("initial_nodes must be ≥ 1".into());
+        }
+        if self.capacity_factor == 0 {
+            return Err("capacity_factor must be ≥ 1".into());
+        }
+        if crate::algorithms::by_name(&self.algorithm, 1, 1).is_none() {
+            return Err(format!(
+                "unknown algorithm '{}' (expected one of {:?})",
+                self.algorithm,
+                crate::algorithms::ALL_ALGOS
+            ));
+        }
+        if self.workers == 0 {
+            return Err("workers must be ≥ 1".into());
+        }
+        if self.batch_size == 0 {
+            return Err("batch_size must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RouterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_document_roundtrip() {
+        let text = r#"
+# router deployment config
+[router]
+algorithm = "anchor"
+initial_nodes = 64
+capacity_factor = 10
+bind = "0.0.0.0:9000"
+workers = 8
+
+[batcher]
+batch_size = 2048
+batch_timeout_us = 500
+
+[engine]
+min_batch = 512
+artifacts_dir = "artifacts"
+
+[kv]
+replicas = 3
+"#;
+        let cfg = RouterConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.algorithm, "anchor");
+        assert_eq!(cfg.initial_nodes, 64);
+        assert_eq!(cfg.bind, "0.0.0.0:9000");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.batch_size, 2048);
+        assert_eq!(cfg.batch_timeout_us, 500);
+        assert_eq!(cfg.engine_min_batch, 512);
+        assert_eq!(cfg.replicas, 3);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = RouterConfig::from_toml("[router]\nalgorithrn = \"memento\"\n").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn bad_algorithm_rejected() {
+        let err = RouterConfig::from_toml("algorithm = \"md5ring\"\n").unwrap_err();
+        assert!(err.contains("unknown algorithm"), "{err}");
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let err = RouterConfig::from_toml("initial_nodes = \"many\"\n").unwrap_err();
+        assert!(err.contains("expected non-negative integer"), "{err}");
+    }
+
+    #[test]
+    fn zero_nodes_rejected() {
+        let err = RouterConfig::from_toml("initial_nodes = 0\n").unwrap_err();
+        assert!(err.contains("≥ 1"), "{err}");
+    }
+}

@@ -1,0 +1,282 @@
+//! The TOML-subset tokenizer/parser behind [`super::RouterConfig`].
+//!
+//! Grammar (line-oriented):
+//! ```text
+//! document := line*
+//! line     := ws ( comment | section | keyval )? ws comment?
+//! section  := '[' bare-key ('.' bare-key)* ']'
+//! keyval   := bare-key ws '=' ws value
+//! value    := string | bool | float | int | array
+//! array    := '[' (value (',' value)*)? ','? ']'
+//! ```
+//! Strings support `\n \t \\ \" \r` escapes. Integers accept `_`
+//! separators and a leading `-`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse failure with line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a document into `section → key → value` (top-level keys land in
+/// section `""`). Duplicate keys are an error (catches config mistakes).
+pub fn parse(text: &str) -> Result<super::Document, ParseError> {
+    let mut doc: super::Document = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut current = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| ParseError { line: lineno + 1, message: m.to_string() };
+
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return Err(err("unterminated section header"));
+            };
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)) {
+                return Err(err(&format!("invalid section name '{name}'")));
+            }
+            current = name.to_string();
+            doc.entry(current.clone()).or_default();
+            continue;
+        }
+
+        let Some(eq) = line.find('=') else {
+            return Err(err("expected 'key = value'"));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || "_-".contains(c)) {
+            return Err(err(&format!("invalid key '{key}'")));
+        }
+        let (value, rest) = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+        if !rest.trim().is_empty() {
+            return Err(err(&format!("trailing characters after value: '{rest}'")));
+        }
+        let table = doc.get_mut(&current).unwrap();
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(&format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+/// Parse one value from the front of `s`; returns (value, rest).
+fn parse_value(s: &str, line: usize) -> Result<(Value, &str), ParseError> {
+    let err = |m: String| ParseError { line, message: m };
+    let s = s.trim_start();
+
+    if let Some(rest) = s.strip_prefix('"') {
+        let mut out = String::new();
+        let mut chars = rest.char_indices();
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '"' => return Ok((Value::Str(out), &rest[i + 1..])),
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, 'r')) => out.push('\r'),
+                    Some((_, '\\')) => out.push('\\'),
+                    Some((_, '"')) => out.push('"'),
+                    other => {
+                        return Err(err(format!("bad escape: \\{:?}", other.map(|(_, c)| c))))
+                    }
+                },
+                c => out.push(c),
+            }
+        }
+        return Err(err("unterminated string".into()));
+    }
+
+    if let Some(rest) = s.strip_prefix('[') {
+        let mut items = Vec::new();
+        let mut rest = rest.trim_start();
+        loop {
+            if let Some(r) = rest.strip_prefix(']') {
+                return Ok((Value::Array(items), r));
+            }
+            let (v, r) = parse_value(rest, line)?;
+            items.push(v);
+            rest = r.trim_start();
+            if let Some(r) = rest.strip_prefix(',') {
+                rest = r.trim_start();
+            } else if !rest.starts_with(']') {
+                return Err(err("expected ',' or ']' in array".into()));
+            }
+        }
+    }
+
+    // Bare scalar: bool / float / int — ends at ',' ']' or whitespace.
+    let end = s
+        .find(|c: char| c == ',' || c == ']' || c.is_whitespace())
+        .unwrap_or(s.len());
+    let (tok, rest) = s.split_at(end);
+    match tok {
+        "true" => return Ok((Value::Bool(true), rest)),
+        "false" => return Ok((Value::Bool(false), rest)),
+        "" => return Err(err("missing value".into())),
+        _ => {}
+    }
+    let cleaned: String = tok.chars().filter(|c| *c != '_').collect();
+    if tok.contains('.') || tok.contains('e') || tok.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok((Value::Float(f), rest));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok((Value::Int(i), rest));
+    }
+    Err(err(format!("cannot parse value '{tok}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let doc = parse("a = 1\nb = \"two\"\nc = 3.5\nd = true\ne = -7\nf = 1_000\n").unwrap();
+        let t = &doc[""];
+        assert_eq!(t["a"], Value::Int(1));
+        assert_eq!(t["b"], Value::Str("two".into()));
+        assert_eq!(t["c"], Value::Float(3.5));
+        assert_eq!(t["d"], Value::Bool(true));
+        assert_eq!(t["e"], Value::Int(-7));
+        assert_eq!(t["f"], Value::Int(1000));
+    }
+
+    #[test]
+    fn sections_and_comments() {
+        let doc = parse("# top\n[alpha]\nx = 1 # trailing\n[beta.gamma]\ny = 2\n").unwrap();
+        assert_eq!(doc["alpha"]["x"], Value::Int(1));
+        assert_eq!(doc["beta.gamma"]["y"], Value::Int(2));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        let t = &doc[""];
+        assert_eq!(
+            t["xs"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(t["ys"].as_array().unwrap().len(), 2);
+        assert_eq!(t["empty"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let doc = parse(r#"s = "a#b\n\"quoted\"""#).unwrap();
+        assert_eq!(doc[""]["s"], Value::Str("a#b\n\"quoted\"".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nb ~ 2\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.to_string().contains("line 2"));
+
+        let e = parse("a = \n").unwrap_err();
+        assert!(e.message.contains("missing value"));
+
+        let e = parse("[unclosed\n").unwrap_err();
+        assert!(e.message.contains("unterminated section"));
+
+        let e = parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+
+        let e = parse("a = \"oops\n").unwrap_err();
+        assert!(e.message.contains("unterminated string"));
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Str("x".into()).as_int(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn trailing_junk_rejected() {
+        let e = parse("a = 1 2\n").unwrap_err();
+        assert!(e.message.contains("trailing"), "{e}");
+    }
+}

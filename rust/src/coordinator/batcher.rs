@@ -1,0 +1,187 @@
+//! Dynamic batcher: collect individual lookups into device-sized batches.
+//!
+//! The paper's lookup cost is per key; the engine's cost is per *dispatch*.
+//! The batcher closes the gap: requests queue until `batch_size` are
+//! pending or `timeout` elapses (whichever first), then one flush resolves
+//! the whole batch (vLLM-style continuous batching, specialized to
+//! request/response lookups).
+
+use super::router::Router;
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One queued lookup: key + where to deliver the bucket.
+struct Pending {
+    key: u64,
+    reply: Sender<u32>,
+}
+
+/// Handle for submitting lookups to the batcher.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: SyncSender<Pending>,
+}
+
+impl BatcherHandle {
+    /// Submit a key; blocks until the batch containing it is resolved.
+    pub fn lookup(&self, key: u64) -> Option<u32> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx.send(Pending { key, reply: reply_tx }).ok()?;
+        reply_rx.recv().ok()
+    }
+
+    /// Submit a key and return the reply receiver (pipelined submission:
+    /// callers can submit many keys before collecting).
+    pub fn lookup_async(&self, key: u64) -> Option<Receiver<u32>> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx.send(Pending { key, reply: reply_tx }).ok()?;
+        Some(reply_rx)
+    }
+}
+
+/// The batcher worker; drop the handle(s) and join to stop.
+pub struct Batcher {
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the batching loop over `router`.
+    pub fn spawn(
+        router: Arc<Router>,
+        batch_size: usize,
+        timeout: Duration,
+    ) -> (Self, BatcherHandle) {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Pending>(batch_size * 8);
+        let worker = std::thread::Builder::new()
+            .name("memento-batcher".into())
+            .spawn(move || Self::run(router, rx, batch_size, timeout))
+            .expect("spawn batcher");
+        (Self { worker: Some(worker) }, BatcherHandle { tx })
+    }
+
+    fn run(
+        router: Arc<Router>,
+        rx: Receiver<Pending>,
+        batch_size: usize,
+        timeout: Duration,
+    ) {
+        let mut queue: Vec<Pending> = Vec::with_capacity(batch_size);
+        loop {
+            // Block for the first request of a batch.
+            match rx.recv() {
+                Ok(p) => queue.push(p),
+                Err(_) => return, // all handles dropped
+            }
+            let deadline = Instant::now() + timeout;
+            // Fill until full or deadline.
+            while queue.len() < batch_size {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(p) => queue.push(p),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Flush.
+            let keys: Vec<u64> = queue.iter().map(|p| p.key).collect();
+            let buckets = router.route_batch(&keys);
+            for (p, b) in queue.drain(..).zip(buckets) {
+                let _ = p.reply.send(b); // receiver may have given up: fine
+            }
+        }
+    }
+
+    /// Wait for the worker to exit (after all handles are dropped).
+    pub fn join(mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_router() -> Arc<Router> {
+        Router::new("memento", 16, 160, None).unwrap()
+    }
+
+    #[test]
+    fn single_lookup_resolves() {
+        let router = test_router();
+        let (batcher, handle) =
+            Batcher::spawn(router.clone(), 64, Duration::from_micros(200));
+        let key = crate::hashing::mix::splitmix64_mix(42);
+        let b = handle.lookup(key).unwrap();
+        assert_eq!(b, router.route(key).0);
+        drop(handle);
+        batcher.join();
+    }
+
+    #[test]
+    fn batched_results_match_scalar() {
+        let router = test_router();
+        let (batcher, handle) =
+            Batcher::spawn(router.clone(), 32, Duration::from_micros(500));
+        // Pipelined submission from one thread.
+        let keys: Vec<u64> =
+            (0..200u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let rxs: Vec<_> = keys.iter().map(|&k| handle.lookup_async(k).unwrap()).collect();
+        for (k, rx) in keys.iter().zip(rxs) {
+            assert_eq!(rx.recv().unwrap(), router.route(*k).0);
+        }
+        drop(handle);
+        batcher.join();
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let router = test_router();
+        let (batcher, handle) =
+            Batcher::spawn(router.clone(), 64, Duration::from_micros(300));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = handle.clone();
+                let r = router.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        let key = crate::hashing::mix::splitmix64_mix(t * 1000 + i);
+                        assert_eq!(h.lookup(key).unwrap(), r.route(key).0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        drop(handle);
+        batcher.join();
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batches() {
+        let router = test_router();
+        // Huge batch size: only the timeout can flush.
+        let (batcher, handle) =
+            Batcher::spawn(router.clone(), 1_000_000, Duration::from_millis(5));
+        let t = Instant::now();
+        let b = handle.lookup(7).unwrap();
+        assert!(t.elapsed() < Duration::from_secs(1));
+        assert_eq!(b, router.route(7).0);
+        drop(handle);
+        batcher.join();
+    }
+}

@@ -1,0 +1,198 @@
+//! Cluster membership: node registry, bucket binding, epochs.
+//!
+//! The consistent-hash algorithms speak *buckets* (dense small integers);
+//! deployments speak *nodes* (names/addresses). `Membership` owns the
+//! binding and versions every change with an epoch so snapshots, batched
+//! engines and the rebalance auditor can reason about "before vs after".
+
+use std::collections::BTreeMap;
+
+/// Opaque node identity (stable across failures/restores).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u64);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node-{}", self.0)
+    }
+}
+
+/// Lifecycle state of a registered node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Bound to a bucket and serving.
+    Working { bucket: u32 },
+    /// Known but not currently bound (failed or drained).
+    Down,
+}
+
+/// Node metadata.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub id: NodeId,
+    pub name: String,
+    pub state: NodeState,
+}
+
+/// The membership table. Mutations go through the router (which owns the
+/// algorithm state); this structure keeps the node ↔ bucket binding
+/// consistent and the epoch counter monotone.
+#[derive(Debug, Clone, Default)]
+pub struct Membership {
+    nodes: BTreeMap<NodeId, NodeInfo>,
+    by_bucket: BTreeMap<u32, NodeId>,
+    /// Down nodes in failure order (restores re-bind LIFO, mirroring
+    /// Memento's Alg. 3 bucket-restore order).
+    down_order: Vec<NodeId>,
+    next_node: u64,
+    epoch: u64,
+}
+
+impl Membership {
+    /// Create with `n` initial nodes bound to buckets `0..n`.
+    pub fn with_initial(n: usize) -> Self {
+        let mut m = Self::default();
+        for b in 0..n as u32 {
+            let id = m.fresh_id();
+            m.nodes.insert(
+                id,
+                NodeInfo { id, name: format!("{id}"), state: NodeState::Working { bucket: b } },
+            );
+            m.by_bucket.insert(b, id);
+        }
+        m
+    }
+
+    fn fresh_id(&mut self) -> NodeId {
+        let id = NodeId(self.next_node);
+        self.next_node += 1;
+        id
+    }
+
+    /// Current epoch (bumps on every binding change).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of working nodes.
+    pub fn working_count(&self) -> usize {
+        self.by_bucket.len()
+    }
+
+    /// Node currently bound to `bucket`.
+    pub fn node_at(&self, bucket: u32) -> Option<NodeId> {
+        self.by_bucket.get(&bucket).copied()
+    }
+
+    /// Bucket currently bound to `node`.
+    pub fn bucket_of(&self, node: NodeId) -> Option<u32> {
+        match self.nodes.get(&node)?.state {
+            NodeState::Working { bucket } => Some(bucket),
+            NodeState::Down => None,
+        }
+    }
+
+    /// All node infos (registry order).
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeInfo> {
+        self.nodes.values()
+    }
+
+    /// Register a brand-new node and bind it to `bucket` (from `add()`).
+    pub fn bind_new(&mut self, bucket: u32, name: Option<String>) -> NodeId {
+        let id = self.fresh_id();
+        let name = name.unwrap_or_else(|| format!("{id}"));
+        self.nodes.insert(id, NodeInfo { id, name, state: NodeState::Working { bucket } });
+        let prev = self.by_bucket.insert(bucket, id);
+        debug_assert!(prev.is_none(), "bucket {bucket} double-bound");
+        self.epoch += 1;
+        id
+    }
+
+    /// Re-bind an existing down node to `bucket` (restore path).
+    pub fn bind_existing(&mut self, node: NodeId, bucket: u32) -> Result<(), String> {
+        // Validate everything before mutating (no partial state on error).
+        if self.by_bucket.contains_key(&bucket) {
+            return Err(format!("bucket {bucket} already bound"));
+        }
+        let info = self.nodes.get_mut(&node).ok_or_else(|| format!("unknown node {node}"))?;
+        if info.state != NodeState::Down {
+            return Err(format!("{node} is not down"));
+        }
+        info.state = NodeState::Working { bucket };
+        self.by_bucket.insert(bucket, node);
+        self.down_order.retain(|n| *n != node);
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Mark the node on `bucket` as down and unbind it (failure path).
+    pub fn unbind(&mut self, bucket: u32) -> Result<NodeId, String> {
+        let id = self
+            .by_bucket
+            .remove(&bucket)
+            .ok_or_else(|| format!("bucket {bucket} not bound"))?;
+        self.nodes.get_mut(&id).unwrap().state = NodeState::Down;
+        self.down_order.push(id);
+        self.epoch += 1;
+        Ok(id)
+    }
+
+    /// Down nodes available for restore, most recently failed **last**.
+    pub fn down_nodes(&self) -> Vec<NodeId> {
+        self.down_order.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_binding() {
+        let m = Membership::with_initial(4);
+        assert_eq!(m.working_count(), 4);
+        assert_eq!(m.epoch(), 0);
+        for b in 0..4 {
+            let id = m.node_at(b).unwrap();
+            assert_eq!(m.bucket_of(id), Some(b));
+        }
+        assert_eq!(m.node_at(4), None);
+    }
+
+    #[test]
+    fn unbind_and_restore_cycle() {
+        let mut m = Membership::with_initial(3);
+        let victim = m.node_at(1).unwrap();
+        assert_eq!(m.unbind(1).unwrap(), victim);
+        assert_eq!(m.epoch(), 1);
+        assert_eq!(m.working_count(), 2);
+        assert_eq!(m.bucket_of(victim), None);
+        assert_eq!(m.down_nodes(), vec![victim]);
+
+        m.bind_existing(victim, 1).unwrap();
+        assert_eq!(m.epoch(), 2);
+        assert_eq!(m.bucket_of(victim), Some(1));
+        assert!(m.down_nodes().is_empty());
+    }
+
+    #[test]
+    fn bind_new_grows() {
+        let mut m = Membership::with_initial(2);
+        let id = m.bind_new(2, Some("extra".into()));
+        assert_eq!(m.node_at(2), Some(id));
+        assert_eq!(m.working_count(), 3);
+        assert_eq!(m.nodes().count(), 3);
+    }
+
+    #[test]
+    fn error_paths() {
+        let mut m = Membership::with_initial(2);
+        assert!(m.unbind(9).is_err());
+        let v = m.node_at(0).unwrap();
+        m.unbind(0).unwrap();
+        assert!(m.bind_existing(v, 1).is_err(), "bucket 1 already bound");
+        assert!(m.bind_existing(NodeId(99), 5).is_err(), "unknown node");
+        m.bind_existing(v, 0).unwrap();
+        assert!(m.bind_existing(v, 0).is_err(), "not down anymore");
+    }
+}

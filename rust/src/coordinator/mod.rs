@@ -1,0 +1,43 @@
+//! `coordinator` — the L3 system: an epoch-versioned consistent-hash
+//! request router for a distributed KV cluster (the deployment shape the
+//! paper's introduction motivates: spreading data units across nodes,
+//! handling failures, scaling elastically).
+//!
+//! Architecture (vLLM-router-like):
+//!
+//! ```text
+//!             ┌────────────┐   lookup(key)   ┌──────────────┐
+//!  clients ──►│ netserver  ├────────────────►│   Router     │──► NodeId
+//!             │ (TCP front)│                 │  (placement) │
+//!             └────────────┘                 └──────┬───────┘
+//!                   ▲                    epoch swap │ snapshot
+//!                   │                               ▼
+//!             ┌─────┴──────┐   flush ≥B or T  ┌──────────────┐
+//!             │  Batcher   ├─────────────────►│ PJRT Engine  │
+//!             │ (dynamic)  │   batched keys   │ (AOT HLO)    │
+//!             └────────────┘                  └──────────────┘
+//! ```
+//!
+//! * [`membership`] — node registry, bucket ↔ node binding, epochs,
+//!   failure/restore events.
+//! * [`router`] — placement: the consistent-hash algorithm + membership +
+//!   optional batched engine; snapshots are immutable per epoch.
+//! * [`batcher`] — dynamic batching of lookups (flush on size or timeout),
+//!   feeding the engine; the paper's batched-lookup throughput path.
+//! * [`rebalancer`] — audits key movement across epochs against the
+//!   paper's minimal-disruption / monotonicity guarantees.
+//! * [`storage`] — in-process simulated KV nodes (the cluster substrate:
+//!   data actually moves when membership changes).
+//! * [`service`] — the TCP line-protocol front-end (`LOOKUP`/`PUT`/`GET`/
+//!   `KILL`/`RESTORE`/`STATS`).
+
+pub mod batcher;
+pub mod membership;
+pub mod rebalancer;
+pub mod replica;
+pub mod router;
+pub mod service;
+pub mod storage;
+
+pub use membership::{Membership, NodeId, NodeState};
+pub use router::{Placement, Router};

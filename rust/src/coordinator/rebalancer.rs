@@ -1,0 +1,136 @@
+//! Rebalance auditor: verifies at runtime that resizes obey the paper's
+//! minimal-disruption (Prop. VI.3) and monotonicity (Prop. VI.5) bounds.
+//!
+//! The router calls [`Rebalancer::observe_epoch`] with a tracer key set on
+//! every membership change; violations (collateral key movement) are
+//! counted and surfaced in `STATS` — in a correct deployment of a strictly
+//! minimal-disruptive algorithm they are always zero.
+
+use super::router::Router;
+use crate::simulator::audit;
+use std::sync::Mutex;
+
+/// Running audit over membership epochs.
+pub struct Rebalancer {
+    tracer_keys: Vec<u64>,
+    state: Mutex<State>,
+}
+
+struct State {
+    last_epoch: u64,
+    last_assignment: Vec<u32>,
+    /// Total keys relocated across all observed epochs.
+    pub relocated: u64,
+    /// Total collateral movements (bound violations).
+    pub violations: u64,
+    epochs_observed: u64,
+}
+
+/// Summary of the audit so far.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceSummary {
+    pub epochs_observed: u64,
+    pub relocated: u64,
+    pub violations: u64,
+    /// Relocated fraction of the tracer set over the last epoch.
+    pub last_relocated_frac: f64,
+}
+
+impl Rebalancer {
+    /// Create with `tracers` deterministic probe keys.
+    pub fn new(router: &Router, tracers: usize, seed: u64) -> Self {
+        let tracer_keys: Vec<u64> = (0..tracers as u64)
+            .map(|i| crate::hashing::mix::mix2(i, seed))
+            .collect();
+        let last_assignment = router.route_batch(&tracer_keys);
+        Self {
+            tracer_keys,
+            state: Mutex::new(State {
+                last_epoch: router.epoch(),
+                last_assignment,
+                relocated: 0,
+                violations: 0,
+                epochs_observed: 0,
+            }),
+        }
+    }
+
+    /// Re-probe after a membership change. `changed_buckets` are the
+    /// buckets that were removed/added in this epoch.
+    pub fn observe_epoch(&self, router: &Router, changed_buckets: &[u32]) -> RebalanceSummary {
+        let mut st = self.state.lock().unwrap();
+        let now = router.route_batch(&self.tracer_keys);
+        let rep = audit::disruption(&st.last_assignment, &now, &self.tracer_keys, changed_buckets);
+        st.relocated += rep.relocated as u64;
+        st.violations += rep.collateral as u64;
+        st.epochs_observed += 1;
+        st.last_epoch = router.epoch();
+        st.last_assignment = now;
+        router.metrics.relocated_keys.add(rep.relocated as u64);
+        RebalanceSummary {
+            epochs_observed: st.epochs_observed,
+            relocated: st.relocated,
+            violations: st.violations,
+            last_relocated_frac: rep.relocated as f64 / self.tracer_keys.len().max(1) as f64,
+        }
+    }
+
+    pub fn summary(&self) -> RebalanceSummary {
+        let st = self.state.lock().unwrap();
+        RebalanceSummary {
+            epochs_observed: st.epochs_observed,
+            relocated: st.relocated,
+            violations: st.violations,
+            last_relocated_frac: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Router;
+
+    #[test]
+    fn failure_relocates_about_one_wth() {
+        let router = Router::new("memento", 10, 100, None).unwrap();
+        let reb = Rebalancer::new(&router, 20_000, 0xAAA);
+        router.fail_bucket(4).unwrap();
+        let s = reb.observe_epoch(&router, &[4]);
+        assert_eq!(s.violations, 0, "memento must have zero collateral movement");
+        // ~1/10 of keys lived on bucket 4.
+        assert!(
+            (0.07..0.13).contains(&s.last_relocated_frac),
+            "relocated {}",
+            s.last_relocated_frac
+        );
+    }
+
+    #[test]
+    fn restore_is_monotone() {
+        let router = Router::new("memento", 10, 100, None).unwrap();
+        let reb = Rebalancer::new(&router, 20_000, 0xBBB);
+        router.fail_bucket(2).unwrap();
+        reb.observe_epoch(&router, &[2]);
+        let (b, _) = router.add_node().unwrap();
+        assert_eq!(b, 2);
+        let s = reb.observe_epoch(&router, &[2]);
+        assert_eq!(s.violations, 0, "restore must only move keys back to bucket 2");
+        assert_eq!(s.epochs_observed, 2);
+    }
+
+    #[test]
+    fn multiple_failures_accumulate() {
+        let router = Router::new("memento", 20, 200, None).unwrap();
+        let reb = Rebalancer::new(&router, 10_000, 0xCCC);
+        for b in [3u32, 7, 11] {
+            router.fail_bucket(b).unwrap();
+            let s = reb.observe_epoch(&router, &[b]);
+            assert_eq!(s.violations, 0);
+        }
+        let s = reb.summary();
+        assert_eq!(s.epochs_observed, 3);
+        assert!(s.relocated > 0);
+        assert!(router.metrics.relocated_keys.get() > 0);
+    }
+}

@@ -1,0 +1,279 @@
+//! The router: placement decisions behind an epoch-consistent snapshot.
+//!
+//! `Router` owns the algorithm + membership under an `RwLock`; lookups take
+//! the read path (lock-free for the common no-resize case thanks to
+//! `RwLock` read sharing), membership changes take the write path, bump the
+//! epoch and invalidate the engine snapshot.
+
+use super::membership::{Membership, NodeId};
+use crate::algorithms::{self, AlgoError, ConsistentHasher, Memento};
+use crate::metrics::RouterMetrics;
+use crate::runtime::EngineHandle;
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, RwLock};
+
+/// The placement algorithm: Memento is held concretely (the batched engine
+/// needs its dense-table snapshot), everything else behind the trait.
+pub enum Placement {
+    Memento(Memento),
+    Other(Box<dyn ConsistentHasher>),
+}
+
+impl Placement {
+    pub fn new(algorithm: &str, initial: usize, capacity: usize) -> Result<Self> {
+        if algorithm == "memento" {
+            Ok(Placement::Memento(Memento::new(initial)))
+        } else {
+            algorithms::by_name(algorithm, initial, capacity)
+                .map(Placement::Other)
+                .ok_or_else(|| anyhow!("unknown algorithm '{algorithm}'"))
+        }
+    }
+
+    pub fn algo(&self) -> &dyn ConsistentHasher {
+        match self {
+            Placement::Memento(m) => m,
+            Placement::Other(o) => o.as_ref(),
+        }
+    }
+
+    pub fn algo_mut(&mut self) -> &mut dyn ConsistentHasher {
+        match self {
+            Placement::Memento(m) => m,
+            Placement::Other(o) => o.as_mut(),
+        }
+    }
+
+    /// Memento snapshot for the batched engine (None for other algorithms).
+    pub fn memento_snapshot(&self) -> Option<Memento> {
+        match self {
+            Placement::Memento(m) => Some(m.clone()),
+            Placement::Other(_) => None,
+        }
+    }
+}
+
+struct Inner {
+    placement: Placement,
+    membership: Membership,
+}
+
+/// The shared router handle.
+pub struct Router {
+    inner: RwLock<Inner>,
+    engine: Option<EngineHandle>,
+    /// Per-epoch engine snapshot cache (perf: dispatching a batch does not
+    /// clone the replacement map, rebuild the dense table, or re-upload it
+    /// — only membership changes invalidate this; see EXPERIMENTS.md §Perf).
+    snapshot_cache: std::sync::Mutex<Option<(u64, std::sync::Arc<crate::runtime::engine::EngineSnapshot>)>>,
+    pub metrics: RouterMetrics,
+}
+
+impl Router {
+    /// Build a router with `initial` nodes. `engine` enables the batched
+    /// device path (Memento only).
+    pub fn new(
+        algorithm: &str,
+        initial: usize,
+        capacity: usize,
+        engine: Option<EngineHandle>,
+    ) -> Result<Arc<Self>> {
+        let placement = Placement::new(algorithm, initial, capacity)?;
+        let membership = Membership::with_initial(initial);
+        Ok(Arc::new(Self {
+            inner: RwLock::new(Inner { placement, membership }),
+            engine,
+            snapshot_cache: std::sync::Mutex::new(None),
+            metrics: RouterMetrics::new(),
+        }))
+    }
+
+    /// Current epoch.
+    pub fn epoch(&self) -> u64 {
+        self.inner.read().unwrap().membership.epoch()
+    }
+
+    /// Working node count.
+    pub fn working(&self) -> usize {
+        self.inner.read().unwrap().placement.algo().working()
+    }
+
+    /// Scalar lookup: key → (bucket, node).
+    pub fn route(&self, key: u64) -> (u32, NodeId) {
+        let g = self.inner.read().unwrap();
+        let b = g.placement.algo().lookup(key);
+        let node = g
+            .membership
+            .node_at(b)
+            .expect("invariant: every working bucket is bound to a node");
+        self.metrics.lookups_scalar.inc();
+        (b, node)
+    }
+
+    /// Batched lookup: uses the PJRT engine when available (Memento with a
+    /// fitting variant), otherwise the scalar path. Returns buckets.
+    pub fn route_batch(&self, keys: &[u64]) -> Vec<u32> {
+        if let Some(engine) = &self.engine {
+            if let Some(snap) = self.engine_snapshot(engine) {
+                if let Ok(buckets) = engine.memento_lookup_snapshot(snap, keys.to_vec()) {
+                    self.metrics.lookups_batched.add(keys.len() as u64);
+                    self.metrics.batches.inc();
+                    return buckets;
+                }
+            }
+        }
+        let g = self.inner.read().unwrap();
+        self.metrics.lookups_scalar.add(keys.len() as u64);
+        keys.iter().map(|&k| g.placement.algo().lookup(k)).collect()
+    }
+
+    /// Get (or lazily rebuild) the per-epoch engine snapshot.
+    fn engine_snapshot(
+        &self,
+        engine: &EngineHandle,
+    ) -> Option<std::sync::Arc<crate::runtime::engine::EngineSnapshot>> {
+        let epoch = {
+            let g = self.inner.read().unwrap();
+            g.membership.epoch()
+        };
+        {
+            let cache = self.snapshot_cache.lock().unwrap();
+            if let Some((e, snap)) = &*cache {
+                if *e == epoch {
+                    return Some(snap.clone());
+                }
+            }
+        }
+        // Rebuild outside the cache lock, then publish.
+        let m = {
+            let g = self.inner.read().unwrap();
+            g.placement.memento_snapshot()?
+        };
+        let snap = engine.snapshot(m).ok()?;
+        let mut cache = self.snapshot_cache.lock().unwrap();
+        *cache = Some((epoch, snap.clone()));
+        Some(snap)
+    }
+
+    /// Resolve buckets to nodes under the current epoch.
+    pub fn nodes_for(&self, buckets: &[u32]) -> Vec<NodeId> {
+        let g = self.inner.read().unwrap();
+        buckets
+            .iter()
+            .map(|b| g.membership.node_at(*b).expect("bucket bound"))
+            .collect()
+    }
+
+    /// Fail the node on `bucket` (random failure / drain).
+    pub fn fail_bucket(&self, bucket: u32) -> Result<NodeId, AlgoError> {
+        let mut g = self.inner.write().unwrap();
+        g.placement.algo_mut().remove(bucket)?;
+        let node = g.membership.unbind(bucket).expect("membership in sync with algorithm");
+        self.metrics.epochs.inc();
+        Ok(node)
+    }
+
+    /// Fail the node with the given id.
+    pub fn fail_node(&self, node: NodeId) -> Result<NodeId, AlgoError> {
+        let bucket = {
+            let g = self.inner.read().unwrap();
+            g.membership.bucket_of(node)
+        };
+        match bucket {
+            Some(b) => self.fail_bucket(b),
+            None => Err(AlgoError::NotWorking(u32::MAX)),
+        }
+    }
+
+    /// Add capacity: restores the most recently failed node if any
+    /// (Memento Alg. 3 restores its bucket), else registers a new node.
+    pub fn add_node(&self) -> Result<(u32, NodeId), AlgoError> {
+        let mut g = self.inner.write().unwrap();
+        let bucket = g.placement.algo_mut().add()?;
+        let down = g.membership.down_nodes();
+        let node = if let Some(&node) = down.last() {
+            g.membership
+                .bind_existing(node, bucket)
+                .expect("restore binding consistent");
+            node
+        } else {
+            g.membership.bind_new(bucket, None)
+        };
+        self.metrics.epochs.inc();
+        Ok((bucket, node))
+    }
+
+    /// Run `f` with a read view of (algorithm, membership).
+    pub fn with_view<R>(&self, f: impl FnOnce(&dyn ConsistentHasher, &Membership) -> R) -> R {
+        let g = self.inner.read().unwrap();
+        f(g.placement.algo(), &g.membership)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_is_consistent_with_membership() {
+        let r = Router::new("memento", 8, 80, None).unwrap();
+        for k in 0..1000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let (b, node) = r.route(key);
+            assert!(b < 8);
+            assert_eq!(r.with_view(|_a, m| m.node_at(b)), Some(node));
+        }
+        assert_eq!(r.metrics.lookups_scalar.get(), 1000);
+    }
+
+    #[test]
+    fn failure_and_restore_keep_binding_in_sync() {
+        let r = Router::new("memento", 10, 100, None).unwrap();
+        let victim = r.fail_bucket(3).unwrap();
+        assert_eq!(r.working(), 9);
+        assert_eq!(r.epoch(), 1);
+        for k in 0..2000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let (b, _n) = r.route(key);
+            assert_ne!(b, 3, "failed bucket must not be routed to");
+        }
+        // Restore: same node comes back on the same bucket.
+        let (b, node) = r.add_node().unwrap();
+        assert_eq!(b, 3);
+        assert_eq!(node, victim);
+        assert_eq!(r.working(), 10);
+    }
+
+    #[test]
+    fn add_beyond_initial_registers_new_nodes() {
+        let r = Router::new("memento", 4, 40, None).unwrap();
+        let (b, node) = r.add_node().unwrap();
+        assert_eq!(b, 4);
+        assert_eq!(node, NodeId(4));
+        assert_eq!(r.working(), 5);
+    }
+
+    #[test]
+    fn route_batch_scalar_fallback_matches_route() {
+        let r = Router::new("anchor", 16, 160, None).unwrap();
+        let keys: Vec<u64> =
+            (0..512u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let batch = r.route_batch(&keys);
+        for (k, b) in keys.iter().zip(&batch) {
+            assert_eq!(r.route(*k).0, *b);
+        }
+    }
+
+    #[test]
+    fn fail_node_by_id() {
+        let r = Router::new("memento", 5, 50, None).unwrap();
+        let node = r.with_view(|_a, m| m.node_at(2)).unwrap();
+        assert_eq!(r.fail_node(node).unwrap(), node);
+        assert!(r.fail_node(node).is_err(), "already down");
+    }
+
+    #[test]
+    fn unknown_algorithm_is_rejected() {
+        assert!(Router::new("quantum", 4, 40, None).is_err());
+    }
+}

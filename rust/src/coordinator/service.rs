@@ -1,0 +1,354 @@
+//! The TCP front-end: a line protocol over [`crate::netserver`].
+//!
+//! ```text
+//! LOOKUP <key-u64-or-string>      → BUCKET <b> NODE <name>
+//! PUT <key> <value>               → OK <node>
+//! GET <key>                       → VALUE <node> <value> | MISSING <node>
+//! KILL <bucket>                   → KILLED <node> MOVED <n-records>
+//! ADD                             → ADDED BUCKET <b> NODE <name>
+//! STATS                           → STATS <metrics one-liner>
+//! EPOCH                           → EPOCH <e> WORKING <w>
+//! ```
+//!
+//! String keys are digested with xxHash64 at the edge (the paper's
+//! benchmark tool does the same); numeric keys are taken verbatim, so
+//! tests can exercise exact placements.
+
+use super::rebalancer::Rebalancer;
+use super::router::Router;
+use super::storage::StorageCluster;
+use crate::netserver::{self, ServerHandle};
+use std::sync::Arc;
+
+/// Shared service state.
+pub struct Service {
+    pub router: Arc<Router>,
+    pub storage: Arc<StorageCluster>,
+    pub rebalancer: Arc<Rebalancer>,
+    /// Replication factor: PUT fans out to `replicas` distinct buckets,
+    /// GET fails over along the replica set (reads survive failures even
+    /// before migration completes).
+    replicas: usize,
+}
+
+impl Service {
+    pub fn new(router: Arc<Router>) -> Arc<Self> {
+        Self::with_replicas(router, 1)
+    }
+
+    pub fn with_replicas(router: Arc<Router>, replicas: usize) -> Arc<Self> {
+        let rebalancer = Arc::new(Rebalancer::new(&router, 4_096, 0x7EACE));
+        Arc::new(Self {
+            router,
+            storage: Arc::new(StorageCluster::new()),
+            rebalancer,
+            replicas: replicas.max(1),
+        })
+    }
+
+    /// The (bucket, node) placement set for a key under the current epoch:
+    /// the first `replicas` distinct buckets of the key's draw sequence.
+    fn replica_nodes(&self, key: u64) -> Vec<(u32, super::membership::NodeId)> {
+        self.router.with_view(|a, m| {
+            a.lookup_replicas_distinct(key, self.replicas)
+                .into_iter()
+                .map(|b| (b, m.node_at(b).expect("working bucket bound")))
+                .collect()
+        })
+    }
+
+    /// Failover read candidates, Dynamo-preference-list style: the key's
+    /// draw sequence is per-slot stable (each draw moves only if its own
+    /// bucket fails), so any copy written at draw position p is still at
+    /// position p after unrelated failures. Scans the same draw budget
+    /// the placement used, then (last resort, e.g. post-degenerate-fill
+    /// placements on tiny clusters) every working bucket.
+    fn read_candidates(&self, key: u64) -> Vec<super::membership::NodeId> {
+        self.router.with_view(|a, m| {
+            let budget = 16 * self.replicas as u64 + 64;
+            let mut seen = Vec::new();
+            let mut out = Vec::new();
+            let push = |b: u32, seen: &mut Vec<u32>, out: &mut Vec<_>| {
+                if !seen.contains(&b) {
+                    seen.push(b);
+                    out.push(m.node_at(b).expect("working bucket bound"));
+                }
+            };
+            push(a.lookup(key), &mut seen, &mut out);
+            for i in 1..budget {
+                if seen.len() >= a.working() {
+                    break;
+                }
+                push(a.lookup(crate::hashing::mix::mix2(key, i)), &mut seen, &mut out);
+            }
+            for b in a.working_buckets() {
+                push(b, &mut seen, &mut out);
+            }
+            out
+        })
+    }
+
+    /// Digest a key token: decimal u64 passes through, anything else is
+    /// hashed.
+    pub fn digest_key(token: &str) -> u64 {
+        token
+            .parse::<u64>()
+            .unwrap_or_else(|_| crate::hashing::xxhash::xxhash64(token.as_bytes(), 0))
+    }
+
+    /// Handle one protocol line.
+    pub fn handle(&self, line: &str) -> String {
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("LOOKUP") => {
+                let Some(tok) = parts.next() else { return "ERR LOOKUP needs a key".into() };
+                let key = Self::digest_key(tok);
+                let (b, node) = self.router.route(key);
+                format!("BUCKET {b} NODE {node}")
+            }
+            Some("PUT") => {
+                let (Some(tok), Some(val)) = (parts.next(), parts.next()) else {
+                    return "ERR PUT needs key and value".into();
+                };
+                let key = Self::digest_key(tok);
+                let set = self.replica_nodes(key);
+                for (_b, node) in &set {
+                    self.storage.node(*node).put(key, val.as_bytes().to_vec());
+                }
+                format!("OK {}", set[0].1)
+            }
+            Some("GET") => {
+                let Some(tok) = parts.next() else { return "ERR GET needs a key".into() };
+                let key = Self::digest_key(tok);
+                if self.replicas == 1 {
+                    // Single-copy fast path: primary only.
+                    let (_b, node) = self.router.route(key);
+                    return match self.storage.node(node).get(key) {
+                        Some(v) => format!("VALUE {node} {}", String::from_utf8_lossy(&v)),
+                        None => format!("MISSING {node}"),
+                    };
+                }
+                // Failover read along the stable draw sequence.
+                let candidates = self.read_candidates(key);
+                for node in &candidates {
+                    if let Some(v) = self.storage.node(*node).get(key) {
+                        return format!("VALUE {node} {}", String::from_utf8_lossy(&v));
+                    }
+                }
+                format!("MISSING {}", candidates[0])
+            }
+            Some("KILL") => {
+                let Some(tok) = parts.next() else { return "ERR KILL needs a bucket".into() };
+                let Ok(bucket) = tok.parse::<u32>() else {
+                    return "ERR KILL needs a numeric bucket".into();
+                };
+                match self.router.fail_bucket(bucket) {
+                    Ok(node) => {
+                        // Migrate the failed node's data to the survivors.
+                        let router = self.router.clone();
+                        let moved = self
+                            .storage
+                            .migrate_from(node, |k| router.route(k).1);
+                        self.rebalancer.observe_epoch(&self.router, &[bucket]);
+                        format!("KILLED {node} MOVED {moved}")
+                    }
+                    Err(e) => format!("ERR {e}"),
+                }
+            }
+            Some("ADD") => match self.router.add_node() {
+                Ok((b, node)) => {
+                    // Monotone migration: pull keys that now belong to the
+                    // new node from every survivor.
+                    let router = self.router.clone();
+                    let mut moved = 0usize;
+                    for (id, _) in self.storage.load_by_node() {
+                        if id == node {
+                            continue;
+                        }
+                        let src = self.storage.node(id);
+                        for k in src.keys() {
+                            if router.route(k).1 == node {
+                                if let Some(v) = src.delete(k) {
+                                    self.storage.node(node).put(k, v);
+                                    moved += 1;
+                                }
+                            }
+                        }
+                    }
+                    self.rebalancer.observe_epoch(&self.router, &[b]);
+                    format!("ADDED BUCKET {b} NODE {node} MOVED {moved}")
+                }
+                Err(e) => format!("ERR {e}"),
+            },
+            Some("STATS") => {
+                let reb = self.rebalancer.summary();
+                format!(
+                    "STATS {} | rebalance: epochs={} relocated={} violations={}",
+                    self.router.metrics.summary(),
+                    reb.epochs_observed,
+                    reb.relocated,
+                    reb.violations
+                )
+            }
+            Some("EPOCH") => {
+                format!("EPOCH {} WORKING {}", self.router.epoch(), self.router.working())
+            }
+            Some(cmd) => format!("ERR unknown command {cmd}"),
+            None => "ERR empty request".into(),
+        }
+    }
+
+    /// Bind the TCP front-end.
+    pub fn serve(self: &Arc<Self>, bind: &str, max_conns: usize) -> std::io::Result<ServerHandle> {
+        let svc = self.clone();
+        netserver::serve(bind, max_conns, Arc::new(move |line: &str| svc.handle(line)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Arc<Service> {
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        Service::new(router)
+    }
+
+    #[test]
+    fn lookup_put_get_roundtrip() {
+        let s = service();
+        let resp = s.handle("PUT alpha hello");
+        assert!(resp.starts_with("OK node-"), "{resp}");
+        let resp = s.handle("GET alpha");
+        assert!(resp.contains("hello"), "{resp}");
+        let resp = s.handle("GET missing-key");
+        assert!(resp.starts_with("MISSING"), "{resp}");
+        let resp = s.handle("LOOKUP alpha");
+        assert!(resp.starts_with("BUCKET "), "{resp}");
+    }
+
+    #[test]
+    fn kill_migrates_data_and_preserves_gets() {
+        let s = service();
+        // Load 500 records.
+        for i in 0..500 {
+            s.handle(&format!("PUT key{i} v{i}"));
+        }
+        // Find a bucket with data and kill it.
+        let resp = s.handle("KILL 3");
+        assert!(resp.starts_with("KILLED"), "{resp}");
+        // Every record must still be readable (migrated to survivors).
+        for i in 0..500 {
+            let r = s.handle(&format!("GET key{i}"));
+            assert!(r.contains(&format!("v{i}")), "key{i}: {r}");
+        }
+        // Rebalance audit: zero violations.
+        let stats = s.handle("STATS");
+        assert!(stats.contains("violations=0"), "{stats}");
+    }
+
+    #[test]
+    fn add_restores_and_pulls_keys_back() {
+        let s = service();
+        for i in 0..300 {
+            s.handle(&format!("PUT k{i} v{i}"));
+        }
+        s.handle("KILL 2");
+        let resp = s.handle("ADD");
+        assert!(resp.contains("BUCKET 2"), "restore must reuse bucket 2: {resp}");
+        for i in 0..300 {
+            let r = s.handle(&format!("GET k{i}"));
+            assert!(r.contains(&format!("v{i}")), "k{i}: {r}");
+        }
+        let stats = s.handle("STATS");
+        assert!(stats.contains("violations=0"), "{stats}");
+    }
+
+    #[test]
+    fn protocol_errors() {
+        let s = service();
+        assert!(s.handle("LOOKUP").starts_with("ERR"));
+        assert!(s.handle("PUT onlykey").starts_with("ERR"));
+        assert!(s.handle("KILL notanumber").starts_with("ERR"));
+        assert!(s.handle("KILL 999").starts_with("ERR"));
+        assert!(s.handle("FROB").starts_with("ERR"));
+        assert!(s.handle("").starts_with("ERR"));
+    }
+
+    #[test]
+    fn epoch_reporting() {
+        let s = service();
+        assert_eq!(s.handle("EPOCH"), "EPOCH 0 WORKING 8");
+        s.handle("KILL 1");
+        assert_eq!(s.handle("EPOCH"), "EPOCH 1 WORKING 7");
+    }
+
+    #[test]
+    fn numeric_keys_pass_through() {
+        assert_eq!(Service::digest_key("12345"), 12345);
+        assert_ne!(Service::digest_key("abc"), 0);
+    }
+
+    #[test]
+    fn replicated_reads_survive_failure_before_migration() {
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let s = Service::with_replicas(router.clone(), 2);
+        for i in 0..300 {
+            s.handle(&format!("PUT rk{i} rv{i}"));
+        }
+        // Fail a bucket WITHOUT migrating its data (bypass the KILL
+        // handler): replica-failover must still serve every read.
+        router.fail_bucket(3).unwrap();
+        let mut failovers = 0;
+        for i in 0..300 {
+            let r = s.handle(&format!("GET rk{i}"));
+            assert!(r.contains(&format!("rv{i}")), "rk{i} unreadable post-failure: {r}");
+            if !r.starts_with("VALUE node-3") {
+                failovers += 1;
+            }
+        }
+        assert_eq!(failovers, 300, "bucket 3 must never serve reads after failing");
+    }
+
+    #[test]
+    fn replica_slots_are_deterministic_and_mostly_distinct() {
+        let router = Router::new("memento", 10, 100, None).unwrap();
+        let s = Service::with_replicas(router, 3);
+        let mut collisions = 0usize;
+        for k in 0..200u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let set = s.replica_nodes(key);
+            assert_eq!(set.len(), 3);
+            assert_eq!(set, s.replica_nodes(key), "replica slots must be deterministic");
+            let distinct: std::collections::HashSet<u32> =
+                set.iter().map(|(b, _)| *b).collect();
+            if distinct.len() < 3 {
+                collisions += 1;
+            }
+        }
+        // Birthday bound at w=10, k=3: some collisions expected, most not.
+        assert!(collisions < 120, "collision count {collisions}");
+    }
+
+    #[test]
+    fn per_slot_disruption_is_minimal_for_independent_draws() {
+        // The trait's independent replica slots must move only when THEIR
+        // bucket fails (the property the failover read relies on).
+        let router = Router::new("memento", 12, 120, None).unwrap();
+        let keys: Vec<u64> =
+            (0..4000u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let before: Vec<Vec<u32>> =
+            keys.iter().map(|k| router.with_view(|a, _| a.lookup_replicas(*k, 3))).collect();
+        router.fail_bucket(5).unwrap();
+        for (k, old) in keys.iter().zip(&before) {
+            let new = router.with_view(|a, _| a.lookup_replicas(*k, 3));
+            for (slot, ob) in old.iter().enumerate() {
+                if *ob != 5 {
+                    assert_eq!(new[slot], *ob, "slot {slot} moved though bucket {ob} survived");
+                } else {
+                    assert_ne!(new[slot], 5);
+                }
+            }
+        }
+    }
+}

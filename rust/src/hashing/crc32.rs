@@ -1,0 +1,61 @@
+//! CRC-32 (IEEE 802.3 polynomial 0xEDB88320), table-driven.
+//!
+//! Used by the Ring implementation's "classic" mode (several production
+//! rings — e.g. libketama — key on CRC32/MD5-derived points) and by the wire
+//! protocol of [`crate::netserver`] for frame checksums.
+
+/// Lazily built 256-entry CRC table.
+fn table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// One-shot CRC-32 of `bytes`.
+#[inline]
+pub fn crc32(bytes: &[u8]) -> u32 {
+    update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Streaming update: feed `state` (start with `0xFFFFFFFF`) and finish by
+/// xoring with `0xFFFFFFFF`.
+#[inline]
+pub fn update(mut state: u32, bytes: &[u8]) -> u32 {
+    let t = table();
+    for &b in bytes {
+        state = t[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF43926); // the canonical check value
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414FA339);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"hello consistent hashing world";
+        let mut st = 0xFFFF_FFFFu32;
+        for chunk in data.chunks(7) {
+            st = update(st, chunk);
+        }
+        assert_eq!(st ^ 0xFFFF_FFFF, crc32(data));
+    }
+}

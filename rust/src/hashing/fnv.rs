@@ -1,0 +1,56 @@
+//! FNV-1a 64-bit (Fowler–Noll–Vo), from the reference specification.
+//!
+//! FNV is *not* a high-quality avalanche hash for short integer keys; it is
+//! included as the "weak hash" arm of the Note III.1 sensitivity ablation —
+//! the paper's balance proof assumes uniform hashing, and the ablation bench
+//! shows what happens when that assumption is degraded.
+
+use super::Hasher64;
+
+pub const FNV_OFFSET_BASIS: u64 = 0xcbf29ce484222325;
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// One-shot FNV-1a over `bytes`. The `seed` is folded into the offset basis
+/// (plain FNV-1a has no seed parameter).
+#[inline]
+pub fn fnv1a64(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = FNV_OFFSET_BASIS ^ seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// [`Hasher64`] adapter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fnv1a64;
+
+impl Hasher64 for Fnv1a64 {
+    #[inline]
+    fn hash_with_seed(&self, bytes: &[u8], seed: u64) -> u64 {
+        fnv1a64(bytes, seed)
+    }
+
+    fn name(&self) -> &'static str {
+        "fnv1a64"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        // Canonical FNV-1a 64 vectors (seed 0 == plain FNV-1a).
+        assert_eq!(fnv1a64(b"", 0), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a", 0), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar", 0), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn seed_changes_output() {
+        assert_ne!(fnv1a64(b"key", 0), fnv1a64(b"key", 1));
+    }
+}

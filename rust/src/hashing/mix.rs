@@ -1,0 +1,124 @@
+//! 64-bit integer mixers (finalizers).
+//!
+//! These are the `hash(key, b)` of Alg. 4 line 5: fixed-size-input uniform
+//! hash functions that run in O(1) with no memory traffic. The L1 Pallas
+//! kernel `mix64.py` implements *exactly* [`splitmix64_mix`] so that the
+//! batched device engine and the scalar rust path agree bit-for-bit
+//! (checked in `tests/integration_runtime.rs`).
+
+use super::Hasher64;
+
+/// SplitMix64 finalizer (Stafford variant 13 as used by
+/// `java.util.SplittableRandom`): the canonical cheap 64-bit mixer.
+#[inline(always)]
+pub fn splitmix64_mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Combine a key and a seed into one mixed 64-bit value.
+///
+/// This is the exact scalar twin of the Pallas `mix64` kernel: the device
+/// engine must produce identical streams, so DO NOT change one without the
+/// other (python/compile/kernels/mix64.py + ref.py).
+#[inline(always)]
+pub fn mix2(key: u64, seed: u64) -> u64 {
+    // xor-fold the seed in with an odd multiplier first so that
+    // mix2(k, s1) and mix2(k, s2) are decorrelated even for small seeds.
+    splitmix64_mix(key ^ seed.wrapping_mul(0xA24BAED4963EE407))
+}
+
+/// xxHash64 avalanche re-exported as a mixer (see [`super::xxhash`]).
+#[inline(always)]
+pub fn xx_avalanche(h: u64) -> u64 {
+    super::xxhash::avalanche(h)
+}
+
+/// Murmur fmix64 re-exported as a mixer (see [`super::murmur3`]).
+#[inline(always)]
+pub fn fmix64(h: u64) -> u64 {
+    super::murmur3::fmix64(h)
+}
+
+/// [`Hasher64`] adapter over [`mix2`]. Only sound when the *keys themselves*
+/// are already 64-bit values (the common case on the hot path, where keys
+/// are pre-digested once with xxHash64 at the edge).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SplitMix64Hasher;
+
+impl Hasher64 for SplitMix64Hasher {
+    #[inline]
+    fn hash_with_seed(&self, bytes: &[u8], seed: u64) -> u64 {
+        // Fold arbitrary bytes 8 at a time through the mixer.
+        let mut acc = seed ^ (bytes.len() as u64);
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            acc = splitmix64_mix(acc ^ u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            acc = splitmix64_mix(acc ^ u64::from_le_bytes(buf));
+        }
+        splitmix64_mix(acc)
+    }
+
+    #[inline]
+    fn hash_u64(&self, key: u64, seed: u64) -> u64 {
+        mix2(key, seed)
+    }
+
+    fn name(&self) -> &'static str {
+        "splitmix64"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_stream() {
+        // SplittableRandom(0).nextLong() sequence == splitmix64 stream with
+        // seed advancing by the golden gamma. First three outputs:
+        let mut state = 0u64;
+        let mut next = || {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            // mix of the *advanced* state without re-adding the increment:
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        assert_eq!(next(), 0xE220A8397B1DCDAF);
+        assert_eq!(next(), 0x6E789E6AA1B965F4);
+        assert_eq!(next(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn mix2_decorrelates_seeds() {
+        // Same key under adjacent seeds must differ in ~32 bits on average.
+        let k = 42u64;
+        let mut total = 0u32;
+        for s in 0..256u64 {
+            total += (mix2(k, s) ^ mix2(k, s + 1)).count_ones();
+        }
+        let avg = total as f64 / 256.0;
+        assert!((24.0..40.0).contains(&avg), "avg bit flips {avg}");
+    }
+
+    #[test]
+    fn bytes_and_u64_paths_are_both_uniformish() {
+        let h = SplitMix64Hasher;
+        let mut buckets = [0u32; 16];
+        for i in 0..4096u64 {
+            buckets[(h.hash_u64(i, 9) % 16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((160..350).contains(&b), "bucket count {b}");
+        }
+    }
+}

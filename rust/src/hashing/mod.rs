@@ -1,0 +1,92 @@
+//! Non-consistent hash functions, PRNGs, and workload key generators.
+//!
+//! The paper (Note III.1) assumes access to *uniform* hash functions; the
+//! consistent-hashing algorithms in [`crate::algorithms`] are parameterized
+//! over one of these. Every function here is implemented from scratch and
+//! validated against published reference vectors in the module tests.
+//!
+//! * [`xxhash`] — xxHash64 (the default key hash, matching the paper's
+//!   companion Java benchmark which uses xxHash).
+//! * [`murmur3`] — MurmurHash3 x86_32 and x64_128.
+//! * [`fnv`] — FNV-1a 64-bit.
+//! * [`crc32`] — CRC-32 (IEEE), table-driven.
+//! * [`mix`] — 64-bit finalizers/mixers (SplitMix64, Murmur fmix64,
+//!   xxHash avalanche) used as the `hash(key, b)` rehash of Alg. 4 line 5.
+//! * [`prng`] — SplitMix64 and xoshiro256** PRNGs (deterministic, seedable).
+//! * [`zipf`] — Zipf(α) sampler via rejection inversion.
+//! * [`keygen`] — workload key-stream generators (uniform / zipf /
+//!   sequential / clustered) used by the simulator and benches.
+
+pub mod crc32;
+pub mod fnv;
+pub mod keygen;
+pub mod mix;
+pub mod murmur3;
+pub mod prng;
+pub mod xxhash;
+pub mod zipf;
+
+/// A seedable 64-bit hash function over byte slices.
+///
+/// This is the "traditional hash function" of Alg. 4: uniform, fast, and
+/// *not* consistent. Implementations must be pure functions of
+/// `(bytes, seed)`.
+pub trait Hasher64: Send + Sync {
+    /// Hash `bytes` with the given `seed`.
+    fn hash_with_seed(&self, bytes: &[u8], seed: u64) -> u64;
+
+    /// Hash `bytes` with seed 0.
+    fn hash(&self, bytes: &[u8]) -> u64 {
+        self.hash_with_seed(bytes, 0)
+    }
+
+    /// Hash a pre-hashed 64-bit key together with an auxiliary value
+    /// (bucket id, probe index...). This is the hot-path form used by the
+    /// lookup loops: it avoids touching byte buffers entirely.
+    fn hash_u64(&self, key: u64, seed: u64) -> u64 {
+        let mut buf = [0u8; 8];
+        buf.copy_from_slice(&key.to_le_bytes());
+        self.hash_with_seed(&buf, seed)
+    }
+
+    /// Stable display name (used in bench reports).
+    fn name(&self) -> &'static str;
+}
+
+/// The hash-function registry: maps config names to implementations.
+///
+/// `"xx"` → xxHash64, `"murmur3"` → Murmur3 x64_128 (low word),
+/// `"fnv"` → FNV-1a, `"mix"` → SplitMix64 finalizer (keys must already be
+/// uniformly distributed 64-bit values).
+pub fn by_name(name: &str) -> Option<Box<dyn Hasher64>> {
+    match name {
+        "xx" | "xxhash" | "xxhash64" => Some(Box::new(xxhash::XxHash64)),
+        "murmur3" | "murmur" => Some(Box::new(murmur3::Murmur3_128)),
+        "fnv" | "fnv1a" => Some(Box::new(fnv::Fnv1a64)),
+        "mix" | "splitmix" | "splitmix64" => Some(Box::new(mix::SplitMix64Hasher)),
+        _ => None,
+    }
+}
+
+/// All registered hash-function names (for CLI help / ablation sweeps).
+pub const HASHER_NAMES: &[&str] = &["xxhash64", "murmur3", "fnv1a", "splitmix64"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for n in HASHER_NAMES {
+            assert!(by_name(n).is_some(), "unresolved hasher {n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn hash_u64_matches_byte_form() {
+        let h = xxhash::XxHash64;
+        let k = 0xdead_beef_cafe_f00du64;
+        assert_eq!(h.hash_u64(k, 7), h.hash_with_seed(&k.to_le_bytes(), 7));
+    }
+}

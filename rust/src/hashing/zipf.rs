@@ -1,0 +1,148 @@
+//! Zipf(α) sampler over `{0, …, n-1}` via rejection inversion
+//! (W. Hörmann & G. Derflinger, "Rejection-inversion to generate variates
+//! from monotone discrete distributions", 1996) — the same algorithm used
+//! by `rand_distr::Zipf` and Apache Commons Math.
+//!
+//! Skewed key popularity is the realistic regime for a router (a few hot
+//! keys dominate); the balance auditors and the e2e example use this to
+//! show that consistent hashing balance claims hold per-*key-slot*, while
+//! hot keys still need caching above the router.
+
+use super::prng::Rng64;
+
+/// Zipf distribution with exponent `alpha > 0` over ranks `1..=n`
+/// (returned 0-based).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    // Precomputed constants of the rejection-inversion scheme.
+    h_integral_x1: f64,
+    h_integral_num_elements: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n >= 1, "zipf needs at least one element");
+        assert!(alpha > 0.0, "zipf exponent must be positive");
+        let h_integral_x1 = h_integral(1.5, alpha) - 1.0;
+        let h_integral_num_elements = h_integral(n as f64 + 0.5, alpha);
+        let s = 2.0 - h_integral_inverse(h_integral(2.5, alpha) - h(2.0, alpha), alpha);
+        Self { n, alpha, h_integral_x1, h_integral_num_elements, s }
+    }
+
+    /// Number of elements.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Draw one sample (0-based rank; 0 is the most popular).
+    pub fn sample<R: Rng64>(&self, rng: &mut R) -> u64 {
+        loop {
+            let u = self.h_integral_num_elements
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_num_elements);
+            let x = h_integral_inverse(u, self.alpha);
+            let mut k = (x + 0.5).floor();
+            k = k.clamp(1.0, self.n as f64);
+            if k - x <= self.s
+                || u >= h_integral(k + 0.5, self.alpha) - h(k, self.alpha)
+            {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+/// H(x) = integral of x^-alpha.
+fn h_integral(x: f64, alpha: f64) -> f64 {
+    let log_x = x.ln();
+    helper2((1.0 - alpha) * log_x) * log_x
+}
+
+/// h(x) = x^-alpha.
+fn h(x: f64, alpha: f64) -> f64 {
+    (-alpha * x.ln()).exp()
+}
+
+fn h_integral_inverse(x: f64, alpha: f64) -> f64 {
+    let mut t = x * (1.0 - alpha);
+    if t < -1.0 {
+        t = -1.0;
+    }
+    (helper1(t) * x).exp()
+}
+
+/// helper1(x) = ln(1+x)/x, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+/// helper2(x) = (exp(x)-1)/x, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x * (1.0 / 3.0) * (1.0 + 0.25 * x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::prng::Xoshiro256;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(100, 1.1);
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn rank_zero_is_most_popular() {
+        let z = Zipf::new(1000, 1.2);
+        let mut rng = Xoshiro256::new(5);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[9]);
+        assert!(counts[0] > counts[99]);
+        // Zipf(1.2): P(0)/P(9) ≈ 10^1.2 ≈ 15.8 — allow slack.
+        let ratio = counts[0] as f64 / counts[9].max(1) as f64;
+        assert!(ratio > 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn frequencies_follow_power_law() {
+        let alpha = 1.0;
+        let z = Zipf::new(50, alpha);
+        let mut rng = Xoshiro256::new(11);
+        let trials = 200_000;
+        let mut counts = vec![0u32; 50];
+        for _ in 0..trials {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        // Expected P(k) ∝ 1/(k+1)^alpha; compare a few ratios.
+        let r01 = counts[0] as f64 / counts[1] as f64;
+        assert!((1.6..2.4).contains(&r01), "P0/P1 {r01}");
+        let r03 = counts[0] as f64 / counts[3] as f64;
+        assert!((3.0..5.0).contains(&r03), "P0/P3 {r03}");
+    }
+
+    #[test]
+    fn single_element_degenerate() {
+        let z = Zipf::new(1, 2.0);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # memento — MementoHash consistent hashing, reproduced end to end
+//!
+//! This crate reproduces *MementoHash: A Stateful, Minimal Memory, Best
+//! Performing Consistent Hash Algorithm* (Coluzzi, Brocco, Antonucci, Leidi;
+//! 2023) as a deployable system:
+//!
+//! * [`algorithms`] — the paper's algorithm (Memento, §V–VII) together with
+//!   every baseline it is evaluated against (Jump, Anchor, Dx) and the
+//!   related-work algorithms it surveys (Ring, Rendezvous, Maglev,
+//!   MultiProbe), all behind the [`algorithms::ConsistentHasher`] trait.
+//! * [`hashing`] — the non-consistent hash functions (Note III.1), PRNGs and
+//!   workload key generators everything else is built on.
+//! * [`coordinator`] — an epoch-versioned cluster-membership + request-router
+//!   layer (the L3 system contribution): dynamic batching, failure handling,
+//!   rebalance auditing, and a TCP front-end.
+//! * [`runtime`] — the PJRT engine that loads the AOT-compiled JAX/Pallas
+//!   batched-lookup artifacts (`artifacts/*.hlo.txt`) and executes them from
+//!   the rust hot path (python is build-time only).
+//! * [`simulator`] — the paper's benchmark tool: scenarios (stable, one-shot
+//!   removals, incremental removals, a/w sensitivity), exact memory
+//!   accounting and balance/disruption/monotonicity auditors.
+//! * [`benchkit`], [`testkit`], [`config`], [`cli`], [`metrics`],
+//!   [`netserver`] — substrates built from scratch for the offline
+//!   environment (no criterion/proptest/tokio/serde/clap available).
+//!
+//! See `DESIGN.md` for the per-experiment index mapping every figure and
+//! table of the paper to a bench target, and `EXPERIMENTS.md` for measured
+//! results.
+
+pub mod algorithms;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod hashing;
+pub mod metrics;
+pub mod netserver;
+pub mod runtime;
+pub mod simulator;
+pub mod testkit;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,358 @@
+//! `memento` — the leader binary: CLI over the L3 coordinator.
+//!
+//! Subcommands:
+//! * `serve`    — run the consistent-hash KV router (TCP line protocol);
+//! * `figures`  — regenerate every paper figure (CSV under `results/`);
+//! * `lookup`   — one-shot key lookups against a fresh cluster (debugging);
+//! * `drill`    — scripted failure drill with rebalance audit;
+//! * `info`     — environment report (algorithms, artifacts, PJRT).
+
+use memento::cli::ArgSpec;
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::config::RouterConfig;
+use memento::runtime::{Engine, EngineHandle};
+use memento::simulator::{figures, Scale, ScenarioConfig};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("figures") => cmd_figures(&args[1..]),
+        Some("lookup") => cmd_lookup(&args[1..]),
+        Some("drill") => cmd_drill(&args[1..]),
+        Some("replay") => cmd_replay(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            eprintln!("{}", top_usage());
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", top_usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_usage() -> &'static str {
+    "memento — MementoHash consistent-hash router (paper reproduction)\n\n\
+     USAGE:\n  memento <serve|figures|lookup|drill|replay|info> [flags]\n\n\
+     Run `memento <subcommand> --help` for details."
+}
+
+fn cmd_replay(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("replay", "replay a membership trace with audits")
+        .flag("algo", "memento", "algorithm to replay against")
+        .flag("capacity-factor", "10", "a/w for anchor/dx")
+        .positional("trace", "trace file (see simulator::trace docs)");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let Some(path) = args.positionals().first() else {
+        eprintln!("replay needs a trace file");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let events = match memento::simulator::trace::parse(&text) {
+        Ok(ev) => ev,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let ratio = args.get_parsed("capacity-factor").unwrap_or(10);
+    match memento::simulator::trace::replay(&events, args.get("algo"), ratio) {
+        Ok(rep) => {
+            println!(
+                "replayed {} events against {}: applied={} rejected={} checks={} \
+                 working={} state={}",
+                events.len(),
+                args.get("algo"),
+                rep.applied,
+                rep.rejected,
+                rep.checks,
+                rep.final_working,
+                memento::benchkit::fmt_bytes(rep.final_state_bytes)
+            );
+            if rep.check_failures.is_empty() {
+                println!("all checks passed");
+                0
+            } else {
+                for f in &rep.check_failures {
+                    eprintln!("CHECK FAILED: {f}");
+                }
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn load_config(args: &memento::cli::Args) -> Result<RouterConfig, String> {
+    let mut cfg = match args.positionals().first() {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("cannot read config {path}: {e}"))?;
+            RouterConfig::from_toml(&text)?
+        }
+        None => RouterConfig::default(),
+    };
+    // CLI overrides.
+    if !args.get("algo").is_empty() {
+        cfg.algorithm = args.get("algo").to_string();
+    }
+    if let Ok(n) = args.get_parsed::<usize>("nodes") {
+        if n > 0 {
+            cfg.initial_nodes = n;
+        }
+    }
+    if !args.get("bind").is_empty() {
+        cfg.bind = args.get("bind").to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn build_router(cfg: &RouterConfig, with_engine: bool) -> Result<Arc<Router>, String> {
+    let engine = if with_engine && cfg.engine_min_batch > 0 {
+        match EngineHandle::spawn(std::path::PathBuf::from(&cfg.artifacts_dir)) {
+            Ok(h) if h.info().has_memento || h.info().has_jump => {
+                eprintln!("[engine] loaded PJRT variants from {}", cfg.artifacts_dir);
+                Some(h)
+            }
+            Ok(_) => {
+                eprintln!("[engine] no artifacts in {} — scalar path only", cfg.artifacts_dir);
+                None
+            }
+            Err(e) => {
+                eprintln!("[engine] unavailable ({e}) — scalar path only");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    Router::new(
+        &cfg.algorithm,
+        cfg.initial_nodes,
+        cfg.initial_nodes * cfg.capacity_factor,
+        engine,
+    )
+    .map_err(|e| e.to_string())
+}
+
+fn cmd_serve(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("serve", "run the consistent-hash KV router")
+        .flag("algo", "", "override: consistent-hash algorithm")
+        .flag("nodes", "0", "override: initial node count")
+        .flag("bind", "", "override: TCP bind address")
+        .flag("max-conns", "256", "maximum concurrent connections")
+        .switch("no-engine", "disable the PJRT batch engine")
+        .positional("config", "optional router.toml");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match load_config(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let router = match build_router(&cfg, !args.switch("no-engine")) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("router error: {e}");
+            return 1;
+        }
+    };
+    let service = Service::new(router);
+    let max_conns: usize = args.get_parsed("max-conns").unwrap_or(256);
+    match service.serve(&cfg.bind, max_conns) {
+        Ok(handle) => {
+            println!(
+                "memento router: algo={} nodes={} serving on {} (Ctrl-C to stop)",
+                cfg.algorithm,
+                cfg.initial_nodes,
+                handle.addr()
+            );
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {} failed: {e}", cfg.bind);
+            1
+        }
+    }
+}
+
+fn cmd_figures(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("figures", "regenerate every paper figure (CSV in results/)")
+        .flag("only", "all", "which group: stable|oneshot|incremental|sensitivity|all")
+        .flag("keys", "0", "override keys per cell (0 = scale default)");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let scale = Scale::from_env();
+    let mut cfg = ScenarioConfig::default();
+    cfg.keys = match args.get_parsed::<usize>("keys") {
+        Ok(0) | Err(_) => scale.keys_per_cell().min(200_000),
+        Ok(k) => k,
+    };
+    let only = args.get("only");
+    if only == "all" || only == "stable" {
+        figures::fig_17_18_stable(scale, &cfg).emit("fig_17_18_stable");
+    }
+    if only == "all" || only == "oneshot" {
+        figures::fig_19_22_oneshot(scale, &cfg).emit("fig_19_22_oneshot");
+    }
+    if only == "all" || only == "incremental" {
+        figures::fig_23_26_incremental(scale, &cfg).emit("fig_23_26_incremental");
+    }
+    if only == "all" || only == "sensitivity" {
+        figures::fig_27_32_sensitivity(scale, &cfg).emit("fig_27_32_sensitivity");
+    }
+    0
+}
+
+fn cmd_lookup(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("lookup", "resolve keys against a fresh cluster")
+        .flag("algo", "memento", "algorithm")
+        .flag("nodes", "16", "working nodes")
+        .flag("capacity-factor", "10", "a/w for anchor/dx")
+        .positional("keys", "keys to resolve (strings or u64s)");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nodes: usize = args.get_parsed("nodes").unwrap_or(16);
+    let factor: usize = args.get_parsed("capacity-factor").unwrap_or(10);
+    let Some(algo) = memento::algorithms::by_name(args.get("algo"), nodes, nodes * factor)
+    else {
+        eprintln!("unknown algorithm {}", args.get("algo"));
+        return 2;
+    };
+    for tok in args.positionals() {
+        let key = Service::digest_key(tok);
+        println!("{tok}\t{:#018x}\t-> bucket {}", key, algo.lookup(key));
+    }
+    0
+}
+
+fn cmd_drill(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("drill", "scripted failure drill with rebalance audit")
+        .flag("algo", "memento", "algorithm")
+        .flag("nodes", "32", "initial nodes")
+        .flag("failures", "8", "random failures to inject")
+        .flag("restores", "4", "restores afterwards")
+        .flag("seed", "7", "rng seed");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nodes: usize = args.get_parsed("nodes").unwrap_or(32);
+    let failures: usize = args.get_parsed("failures").unwrap_or(8);
+    let restores: usize = args.get_parsed("restores").unwrap_or(4);
+    let seed: u64 = args.get_parsed("seed").unwrap_or(7);
+
+    let router = match Router::new(args.get("algo"), nodes, nodes * 10, None) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let reb = memento::coordinator::rebalancer::Rebalancer::new(&router, 50_000, seed);
+    use memento::hashing::prng::{Rng64, Xoshiro256};
+    let mut rng = Xoshiro256::new(seed);
+    println!("drill: algo={} nodes={nodes} failures={failures} restores={restores}", args.get("algo"));
+    for i in 0..failures {
+        let wb = router.with_view(|a, _m| a.working_buckets());
+        let b = wb[rng.next_index(wb.len())];
+        match router.fail_bucket(b) {
+            Ok(node) => {
+                let s = reb.observe_epoch(&router, &[b]);
+                println!(
+                    "  fail #{i}: bucket {b} ({node})  relocated={:.1}% violations={}",
+                    s.last_relocated_frac * 100.0,
+                    s.violations
+                );
+            }
+            Err(e) => println!("  fail #{i}: bucket {b} rejected ({e})"),
+        }
+    }
+    for i in 0..restores {
+        match router.add_node() {
+            Ok((b, node)) => {
+                let s = reb.observe_epoch(&router, &[b]);
+                println!(
+                    "  restore #{i}: bucket {b} ({node})  relocated={:.1}% violations={}",
+                    s.last_relocated_frac * 100.0,
+                    s.violations
+                );
+            }
+            Err(e) => println!("  restore #{i}: rejected ({e})"),
+        }
+    }
+    let s = reb.summary();
+    println!(
+        "drill done: epochs={} relocated={} violations={}",
+        s.epochs_observed, s.relocated, s.violations
+    );
+    if s.violations > 0 {
+        eprintln!("DISRUPTION BOUND VIOLATED");
+        return 1;
+    }
+    0
+}
+
+fn cmd_info(_raw: &[String]) -> i32 {
+    println!("memento-hash {} — MementoHash reproduction", env!("CARGO_PKG_VERSION"));
+    println!("algorithms: {}", memento::algorithms::ALL_ALGOS.join(", "));
+    println!("hash functions: {}", memento::hashing::HASHER_NAMES.join(", "));
+    let dir = std::path::Path::new("artifacts");
+    let catalog = memento::runtime::ArtifactCatalog::scan(dir);
+    if catalog.is_empty() {
+        println!("artifacts: none (run `make artifacts`)");
+    } else {
+        println!("artifacts:");
+        for key in catalog.entries.keys() {
+            println!("  {}", key.file_name());
+        }
+        match Engine::load(dir) {
+            Ok(e) => println!("PJRT: {} (memento variants: {:?})", e.platform(), e.memento_variants()),
+            Err(e) => println!("PJRT: failed to load ({e})"),
+        }
+    }
+    0
+}

@@ -1,0 +1,193 @@
+//! Log-linear histogram for latency recording (HDR-histogram style):
+//! 64 power-of-two magnitude buckets × `SUB` linear sub-buckets each, so
+//! relative quantile error is bounded by 1/SUB ≈ 3% across the full u64
+//! range with a fixed 16 KiB footprint and O(1) record.
+
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS; // 32 sub-buckets per magnitude
+
+/// Fixed-footprint value histogram (values are u64, e.g. nanoseconds).
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>, // 64 * SUB
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; 64 * SUB], total: 0, min: u64::MAX, max: 0, sum: 0 }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let mag = 63 - v.leading_zeros(); // position of the top bit
+        let sub = (v >> (mag - SUB_BITS)) as usize & (SUB - 1);
+        ((mag - SUB_BITS + 1) as usize) * SUB + sub
+    }
+
+    /// Lower bound of the bucket with the given index (inverse of `index`).
+    fn bucket_floor(i: usize) -> u64 {
+        let mag_block = i / SUB;
+        let sub = (i % SUB) as u64;
+        if mag_block == 0 {
+            return sub;
+        }
+        let mag = mag_block as u32 + SUB_BITS - 1;
+        (1u64 << mag) | (sub << (mag - SUB_BITS))
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum as f64 / self.total as f64 }
+    }
+
+    /// Value at quantile `q ∈ [0, 1]` (bucket lower bound — ≤3% low bias).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_floor(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    /// p50/p90/p99/p999 one-liner.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0} p50={} p90={} p99={} p999={} max={}",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.9),
+            self.quantile(0.99),
+            self.quantile(0.999),
+            self.max()
+        )
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram({})", self.summary())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::prng::{Rng64, Xoshiro256};
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn index_roundtrip_monotone() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 31, 32, 33, 100, 1000, 65_535, 1 << 20, 1 << 40, u64::MAX / 2] {
+            let i = Histogram::index(v);
+            assert!(i >= last, "index must be monotone in value");
+            assert!(Histogram::bucket_floor(i) <= v, "floor({i}) > {v}");
+            last = i;
+        }
+    }
+
+    #[test]
+    fn quantiles_bounded_error() {
+        let mut h = Histogram::new();
+        let mut rng = Xoshiro256::new(1);
+        // Uniform values in [0, 100_000).
+        for _ in 0..200_000 {
+            h.record(rng.next_below(100_000));
+        }
+        for (q, expect) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let err = (got - expect).abs() / expect;
+            assert!(err < 0.06, "q{q}: got {got}, expect {expect}, err {err}");
+        }
+        assert!(h.min() < 100);
+        assert!(h.max() > 99_000);
+        let m = h.mean();
+        assert!((48_000.0..52_000.0).contains(&m), "mean {m}");
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 0..1000u64 {
+            a.record(i);
+            b.record(i + 5000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        assert!(a.max() >= 5999);
+        assert!(a.quantile(0.25) < 1000);
+        assert!(a.quantile(0.75) >= 5000);
+    }
+
+    #[test]
+    fn summary_contains_quantiles() {
+        let mut h = Histogram::new();
+        for i in 0..100 {
+            h.record(i);
+        }
+        let s = h.summary();
+        assert!(s.contains("n=100"));
+        assert!(s.contains("p99"));
+    }
+}

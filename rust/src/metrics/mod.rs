@@ -1,0 +1,113 @@
+//! `metrics` — counters and latency histograms for the coordinator
+//! (hdrhistogram is not in the offline crate set; this is a compact
+//! log-linear histogram in its spirit).
+
+pub mod histogram;
+
+pub use histogram::Histogram;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing counter, safe to share across threads.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// The coordinator's metric bundle (one per router instance).
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    /// Lookups served (scalar path).
+    pub lookups_scalar: Counter,
+    /// Lookups served via the PJRT batch engine.
+    pub lookups_batched: Counter,
+    /// Batches dispatched to the engine.
+    pub batches: Counter,
+    /// Membership epochs (resize events).
+    pub epochs: Counter,
+    /// Requests rejected (no capacity / bad input).
+    pub rejects: Counter,
+    /// Keys relocated by resizes (rebalance audit).
+    pub relocated_keys: Counter,
+}
+
+impl RouterMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "lookups: scalar={} batched={} (batches={}), epochs={}, rejects={}, relocated={}",
+            self.lookups_scalar.get(),
+            self.lookups_batched.get(),
+            self.batches.get(),
+            self.epochs.get(),
+            self.rejects.get(),
+            self.relocated_keys.get()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn counter_is_thread_safe() {
+        let c = std::sync::Arc::new(Counter::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn router_metrics_summary() {
+        let m = RouterMetrics::new();
+        m.lookups_scalar.add(10);
+        m.batches.inc();
+        let s = m.summary();
+        assert!(s.contains("scalar=10"));
+        assert!(s.contains("batches=1"));
+    }
+}

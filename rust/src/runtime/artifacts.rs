@@ -1,0 +1,168 @@
+//! Artifact discovery: maps `artifacts/*.hlo.txt` filenames to typed
+//! variant keys.
+//!
+//! Naming convention (produced by `python/compile/aot.py`):
+//! * `jump_b{B}.hlo.txt` — batched Jump lookup over B keys;
+//! * `memento_b{B}_n{N}.hlo.txt` — batched Memento lookup over B keys
+//!   against a dense replacement table padded to N entries;
+//! * `hist_b{B}_n{N}.hlo.txt` — per-bucket histogram of B bucket ids.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Kind + shape of one compiled artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum VariantKey {
+    /// Batched Jump lookup (batch).
+    Jump { batch: usize },
+    /// Batched Memento lookup (batch, padded table size).
+    Memento { batch: usize, table: usize },
+    /// Balance histogram (batch, bucket count).
+    Hist { batch: usize, table: usize },
+}
+
+impl VariantKey {
+    /// Parse a filename (without directory) into a key.
+    pub fn parse(file_name: &str) -> Option<Self> {
+        let stem = file_name.strip_suffix(".hlo.txt")?;
+        let mut parts = stem.split('_');
+        match parts.next()? {
+            "jump" => {
+                let b = parts.next()?.strip_prefix('b')?.parse().ok()?;
+                if parts.next().is_some() {
+                    return None;
+                }
+                Some(VariantKey::Jump { batch: b })
+            }
+            "memento" => {
+                let b = parts.next()?.strip_prefix('b')?.parse().ok()?;
+                let n = parts.next()?.strip_prefix('n')?.parse().ok()?;
+                Some(VariantKey::Memento { batch: b, table: n })
+            }
+            "hist" => {
+                let b = parts.next()?.strip_prefix('b')?.parse().ok()?;
+                let n = parts.next()?.strip_prefix('n')?.parse().ok()?;
+                Some(VariantKey::Hist { batch: b, table: n })
+            }
+            _ => None,
+        }
+    }
+
+    /// The canonical filename for this variant.
+    pub fn file_name(&self) -> String {
+        match self {
+            VariantKey::Jump { batch } => format!("jump_b{batch}.hlo.txt"),
+            VariantKey::Memento { batch, table } => format!("memento_b{batch}_n{table}.hlo.txt"),
+            VariantKey::Hist { batch, table } => format!("hist_b{batch}_n{table}.hlo.txt"),
+        }
+    }
+}
+
+/// Discovered artifacts in a directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactCatalog {
+    pub entries: BTreeMap<VariantKey, PathBuf>,
+}
+
+impl ArtifactCatalog {
+    /// Scan `dir` (missing directory ⇒ empty catalog, not an error — the
+    /// engine then serves everything on the scalar path).
+    pub fn scan(dir: &Path) -> Self {
+        let mut entries = BTreeMap::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                if let Some(name) = e.file_name().to_str() {
+                    if let Some(key) = VariantKey::parse(name) {
+                        entries.insert(key, e.path());
+                    }
+                }
+            }
+        }
+        Self { entries }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Jump batch sizes available, ascending.
+    pub fn jump_batches(&self) -> Vec<usize> {
+        self.entries
+            .keys()
+            .filter_map(|k| match k {
+                VariantKey::Jump { batch } => Some(*batch),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Memento variants available, ascending by (batch, table).
+    pub fn memento_variants(&self) -> Vec<(usize, usize)> {
+        self.entries
+            .keys()
+            .filter_map(|k| match k {
+                VariantKey::Memento { batch, table } => Some((*batch, *table)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Smallest memento variant whose table fits `n` and batch fits
+    /// `batch_hint` (any batch if none is large enough).
+    pub fn best_memento(&self, n: usize, batch_hint: usize) -> Option<(usize, usize)> {
+        let variants = self.memento_variants();
+        variants
+            .iter()
+            .filter(|(b, t)| *t >= n && *b >= batch_hint)
+            .min_by_key(|(b, t)| (*t, *b))
+            .or_else(|| variants.iter().filter(|(_b, t)| *t >= n).max_by_key(|(b, _t)| *b))
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for key in [
+            VariantKey::Jump { batch: 4096 },
+            VariantKey::Memento { batch: 1024, table: 65536 },
+            VariantKey::Hist { batch: 512, table: 128 },
+        ] {
+            assert_eq!(VariantKey::parse(&key.file_name()), Some(key));
+        }
+        assert_eq!(VariantKey::parse("garbage.hlo.txt"), None);
+        assert_eq!(VariantKey::parse("jump_b12_extra.hlo.txt"), None);
+        assert_eq!(VariantKey::parse("jump_b12.txt"), None);
+    }
+
+    #[test]
+    fn scan_missing_dir_is_empty() {
+        let c = ArtifactCatalog::scan(Path::new("/definitely/not/here"));
+        assert!(c.is_empty());
+        assert!(c.jump_batches().is_empty());
+        assert_eq!(c.best_memento(100, 100), None);
+    }
+
+    #[test]
+    fn scan_finds_artifacts() {
+        let dir = std::env::temp_dir().join("memento_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("jump_b1024.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("memento_b1024_n4096.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("memento_b256_n16384.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("README"), "x").unwrap();
+        let c = ArtifactCatalog::scan(&dir);
+        assert_eq!(c.jump_batches(), vec![1024]);
+        assert_eq!(c.memento_variants(), vec![(256, 16384), (1024, 4096)]);
+        // Fit: n=100 with batch 512 → table 4096 has batch 1024 ≥ 512.
+        assert_eq!(c.best_memento(100, 512), Some((1024, 4096)));
+        // n=10_000 needs the 16384 table.
+        assert_eq!(c.best_memento(10_000, 512), Some((256, 16384)));
+        // n too big for any table.
+        assert_eq!(c.best_memento(100_000, 1), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,487 @@
+//! The PJRT engine: compile-once, execute-many batched lookups.
+
+use super::artifacts::{ArtifactCatalog, VariantKey};
+use crate::algorithms::memento::NO_REPLACEMENT;
+use crate::algorithms::Memento;
+use crate::algorithms::{jump_hash, ConsistentHasher};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Engine execution counters (scalar-fallback rate is the key health
+/// signal: it should be ≈0 — the kernel loop bounds cover p999.99 of real
+/// iteration counts).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Keys resolved on-device.
+    pub device_keys: AtomicU64,
+    /// Keys re-resolved on the scalar path (non-converged lanes + tails).
+    pub fallback_keys: AtomicU64,
+    /// Device dispatches.
+    pub dispatches: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn fallback_rate(&self) -> f64 {
+        let d = self.device_keys.load(Ordering::Relaxed);
+        let f = self.fallback_keys.load(Ordering::Relaxed);
+        f as f64 / (d + f).max(1) as f64
+    }
+}
+
+/// A compiled executable plus its variant shape.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An immutable per-epoch snapshot of a Memento cluster prepared for the
+/// engine: the scalar algorithm (exact fallback path) plus its dense
+/// replacement table already padded to a compiled variant's size.
+///
+/// Built once per membership epoch by the router (perf: the steady-state
+/// dispatch path does zero table rebuilds — see EXPERIMENTS.md §Perf).
+pub struct EngineSnapshot {
+    pub memento: Memento,
+    /// b-array size n.
+    pub n: u32,
+    /// Dense table padded to a variant table size with [`NO_REPLACEMENT`].
+    pub dense: Vec<u32>,
+}
+
+impl EngineSnapshot {
+    /// Freeze `m`, padding the dense table to `table_size` (≥ m.size()).
+    pub fn new(m: Memento, table_size: usize) -> Self {
+        assert!(table_size >= m.size(), "table variant too small");
+        let mut dense = m.dense_table();
+        dense.resize(table_size, NO_REPLACEMENT);
+        let n = m.size() as u32;
+        Self { memento: m, n, dense }
+    }
+}
+
+/// The batched-lookup engine. Lives on a single thread (PJRT wrapper is
+/// not Sync) — share via [`EngineHandle`].
+pub struct Engine {
+    client: xla::PjRtClient,
+    jump: BTreeMap<usize, Compiled>,
+    memento: BTreeMap<(usize, usize), Compiled>,
+    hist: BTreeMap<(usize, usize), Compiled>,
+    /// Size-1 upload cache: the table literal of the most recent snapshot
+    /// (keyed by snapshot address + epoch shape). Steady-state dispatches
+    /// re-use it instead of re-uploading ~512 KiB per call.
+    table_cache: std::cell::RefCell<Option<(usize, u32, xla::Literal)>>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    ///
+    /// An empty/missing directory yields an engine with no variants: all
+    /// lookups then take the scalar path (`has_*` report availability).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let catalog = ArtifactCatalog::scan(dir);
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut jump = BTreeMap::new();
+        let mut memento = BTreeMap::new();
+        let mut hist = BTreeMap::new();
+        for (key, path) in &catalog.entries {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            let compiled = Compiled { exe };
+            match key {
+                VariantKey::Jump { batch } => {
+                    jump.insert(*batch, compiled);
+                }
+                VariantKey::Memento { batch, table } => {
+                    memento.insert((*batch, *table), compiled);
+                }
+                VariantKey::Hist { batch, table } => {
+                    hist.insert((*batch, *table), compiled);
+                }
+            }
+        }
+        Ok(Self {
+            client,
+            jump,
+            memento,
+            hist,
+            table_cache: std::cell::RefCell::new(None),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_jump(&self) -> bool {
+        !self.jump.is_empty()
+    }
+
+    pub fn has_memento(&self) -> bool {
+        !self.memento.is_empty()
+    }
+
+    pub fn has_hist(&self) -> bool {
+        !self.hist.is_empty()
+    }
+
+    /// Available memento variants (batch, table).
+    pub fn memento_variants(&self) -> Vec<(usize, usize)> {
+        self.memento.keys().copied().collect()
+    }
+
+    /// Batched Jump lookup: exact ([`jump_hash`] resolves non-converged
+    /// lanes and the non-multiple tail).
+    pub fn jump_lookup(&self, keys: &[u64], n: u32) -> Result<Vec<u32>> {
+        let Some((&batch, compiled)) = self.jump.iter().next_back() else {
+            return Err(anyhow!("no jump artifact loaded"));
+        };
+        let mut out = Vec::with_capacity(keys.len());
+        let mut padded = vec![0u64; batch];
+        for chunk in keys.chunks(batch) {
+            if chunk.len() < batch / 4 {
+                // Tiny tail: scalar is cheaper than a padded dispatch.
+                out.extend(chunk.iter().map(|&k| jump_hash(k, n)));
+                self.stats.fallback_keys.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                continue;
+            }
+            padded[..chunk.len()].copy_from_slice(chunk);
+            padded[chunk.len()..].fill(0);
+            let keys_lit = xla::Literal::vec1(&padded);
+            let n_lit = xla::Literal::scalar(n);
+            let result = compiled
+                .exe
+                .execute::<xla::Literal>(&[keys_lit, n_lit])
+                .map_err(|e| anyhow!("jump execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("jump sync: {e}"))?;
+            let (buckets, ok) = result.to_tuple2().map_err(|e| anyhow!("jump tuple: {e}"))?;
+            let buckets: Vec<u32> = buckets.to_vec().map_err(|e| anyhow!("jump vec: {e}"))?;
+            let ok: Vec<u32> = ok.to_vec().map_err(|e| anyhow!("jump ok vec: {e}"))?;
+            self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, &k) in chunk.iter().enumerate() {
+                if ok[i] != 0 {
+                    out.push(buckets[i]);
+                    self.stats.device_keys.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    out.push(jump_hash(k, n));
+                    self.stats.fallback_keys.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Smallest compiled table size that fits a cluster of size `n`.
+    pub fn table_size_for(&self, n: usize) -> Option<usize> {
+        self.memento.keys().map(|(_b, t)| *t).filter(|t| *t >= n).min()
+    }
+
+    /// Batched Memento lookup against a one-shot snapshot (convenience
+    /// path: builds and pads the dense table per call). The steady-state
+    /// router path uses [`Engine::memento_lookup_snapshot`] instead.
+    pub fn memento_lookup(&self, snapshot: &Memento, keys: &[u64]) -> Result<Vec<u32>> {
+        let table = self
+            .table_size_for(snapshot.size())
+            .ok_or_else(|| anyhow!("no memento artifact with table ≥ {}", snapshot.size()))?;
+        let snap = EngineSnapshot::new(snapshot.clone(), table);
+        self.memento_lookup_snapshot(&snap, keys)
+    }
+
+    /// Batched Memento lookup against a prepared per-epoch snapshot
+    /// (DESIGN.md §Hardware-Adaptation): zero table rebuilds on the steady
+    /// path, and the device upload of the table literal is cached across
+    /// dispatches of the same snapshot. Exact: non-converged lanes and
+    /// small tails fall back to the scalar algorithm.
+    pub fn memento_lookup_snapshot(
+        &self,
+        snap: &EngineSnapshot,
+        keys: &[u64],
+    ) -> Result<Vec<u32>> {
+        let n = snap.n as usize;
+        let table = snap.dense.len();
+        let Some((&(batch, _t), compiled)) =
+            self.memento.iter().find(|((_b, t), _)| *t == table)
+        else {
+            return Err(anyhow!("no memento artifact with table == {table} (n = {n})"));
+        };
+        let snapshot = &snap.memento;
+
+        // Table upload cache: hit when the same snapshot dispatches again
+        // (Literal::clone deep-copies, so the literal stays in the cache
+        // and is passed by reference below — execute takes Borrow<Literal>).
+        let cache_key = (snap.dense.as_ptr() as usize, snap.n);
+        {
+            let mut cache = self.table_cache.borrow_mut();
+            let hit = matches!(&*cache, Some((p, nn, _)) if (*p, *nn) == cache_key);
+            if !hit {
+                *cache = Some((cache_key.0, cache_key.1, xla::Literal::vec1(&snap.dense)));
+            }
+        }
+        let cache = self.table_cache.borrow();
+        let table_lit: &xla::Literal = &cache.as_ref().unwrap().2;
+        let n_lit = xla::Literal::scalar(snap.n);
+
+        let mut out = Vec::with_capacity(keys.len());
+        let mut padded = vec![0u64; batch];
+        for chunk in keys.chunks(batch) {
+            if chunk.len() < batch / 4 {
+                out.extend(chunk.iter().map(|&k| snapshot.lookup(k)));
+                self.stats.fallback_keys.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                continue;
+            }
+            padded[..chunk.len()].copy_from_slice(chunk);
+            padded[chunk.len()..].fill(0);
+            let keys_lit = xla::Literal::vec1(&padded);
+            let result = compiled
+                .exe
+                .execute::<&xla::Literal>(&[&keys_lit, &n_lit, table_lit])
+                .map_err(|e| anyhow!("memento execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("memento sync: {e}"))?;
+            let (buckets, ok) =
+                result.to_tuple2().map_err(|e| anyhow!("memento tuple: {e}"))?;
+            let buckets: Vec<u32> = buckets.to_vec().map_err(|e| anyhow!("memento vec: {e}"))?;
+            let ok: Vec<u32> = ok.to_vec().map_err(|e| anyhow!("ok vec: {e}"))?;
+            self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, &k) in chunk.iter().enumerate() {
+                if ok[i] != 0 {
+                    out.push(buckets[i]);
+                    self.stats.device_keys.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    out.push(snapshot.lookup(k));
+                    self.stats.fallback_keys.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Balance histogram of bucket assignments (device-side bincount).
+    pub fn histogram(&self, buckets: &[u32], n_buckets: usize) -> Result<Vec<u64>> {
+        let Some(&(batch, table)) = self.hist.keys().find(|(_b, t)| *t >= n_buckets) else {
+            return Err(anyhow!("no hist artifact with table ≥ {n_buckets}"));
+        };
+        let compiled = &self.hist[&(batch, table)];
+        let mut acc = vec![0u64; n_buckets];
+        let mut padded = vec![u32::MAX; batch]; // MAX = out-of-range ⇒ dropped
+        for chunk in buckets.chunks(batch) {
+            if chunk.len() < batch / 4 {
+                for &b in chunk {
+                    if (b as usize) < n_buckets {
+                        acc[b as usize] += 1;
+                    }
+                }
+                continue;
+            }
+            padded[..chunk.len()].copy_from_slice(chunk);
+            padded[chunk.len()..].fill(u32::MAX);
+            let lit = xla::Literal::vec1(&padded);
+            let result = compiled
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| anyhow!("hist execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("hist sync: {e}"))?;
+            let counts_lit = result.to_tuple1().map_err(|e| anyhow!("hist tuple: {e}"))?;
+            let counts: Vec<u32> = counts_lit.to_vec().map_err(|e| anyhow!("hist vec: {e}"))?;
+            self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, slot) in acc.iter_mut().enumerate() {
+                *slot += counts[i] as u64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine worker thread: PJRT clients are not Send/Sync (the wrapper uses
+// `Rc` internally), so the engine lives on one dedicated thread and the rest
+// of the system talks to it through a cloneable, thread-safe handle.
+// ---------------------------------------------------------------------------
+
+enum EngineRequest {
+    Memento { snapshot: Memento, keys: Vec<u64>, reply: std::sync::mpsc::Sender<Result<Vec<u32>>> },
+    MementoSnap {
+        snap: std::sync::Arc<EngineSnapshot>,
+        keys: Vec<u64>,
+        reply: std::sync::mpsc::Sender<Result<Vec<u32>>>,
+    },
+    Jump { keys: Vec<u64>, n: u32, reply: std::sync::mpsc::Sender<Result<Vec<u32>>> },
+    Hist { buckets: Vec<u32>, n: usize, reply: std::sync::mpsc::Sender<Result<Vec<u64>>> },
+    Stats { reply: std::sync::mpsc::Sender<(u64, u64, u64)> },
+}
+
+/// Capabilities reported by the engine at startup.
+#[derive(Debug, Clone, Default)]
+pub struct EngineInfo {
+    pub has_jump: bool,
+    pub has_memento: bool,
+    pub has_hist: bool,
+    /// Largest memento table variant (0 = none).
+    pub max_memento_table: usize,
+    /// All memento table sizes, ascending (for snapshot padding).
+    pub memento_tables: Vec<usize>,
+}
+
+impl EngineInfo {
+    /// Smallest compiled table that fits a cluster of size `n`.
+    pub fn table_size_for(&self, n: usize) -> Option<usize> {
+        self.memento_tables.iter().copied().find(|t| *t >= n)
+    }
+}
+
+/// Thread-safe handle to the engine worker.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: std::sync::mpsc::Sender<EngineRequest>,
+    info: EngineInfo,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread, loading artifacts from `dir`. Fails fast if
+    /// the PJRT client or any artifact fails to compile.
+    pub fn spawn(dir: std::path::PathBuf) -> Result<Self> {
+        let (tx, rx) = std::sync::mpsc::channel::<EngineRequest>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<std::result::Result<EngineInfo, String>>();
+        std::thread::Builder::new()
+            .name("memento-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let mut tables: Vec<usize> =
+                            e.memento_variants().iter().map(|(_b, t)| *t).collect();
+                        tables.sort_unstable();
+                        tables.dedup();
+                        let info = EngineInfo {
+                            has_jump: e.has_jump(),
+                            has_memento: e.has_memento(),
+                            has_hist: e.has_hist(),
+                            max_memento_table: tables.last().copied().unwrap_or(0),
+                            memento_tables: tables,
+                        };
+                        let _ = ready_tx.send(Ok(info));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        EngineRequest::Memento { snapshot, keys, reply } => {
+                            let _ = reply.send(engine.memento_lookup(&snapshot, &keys));
+                        }
+                        EngineRequest::MementoSnap { snap, keys, reply } => {
+                            let _ = reply.send(engine.memento_lookup_snapshot(&snap, &keys));
+                        }
+                        EngineRequest::Jump { keys, n, reply } => {
+                            let _ = reply.send(engine.jump_lookup(&keys, n));
+                        }
+                        EngineRequest::Hist { buckets, n, reply } => {
+                            let _ = reply.send(engine.histogram(&buckets, n));
+                        }
+                        EngineRequest::Stats { reply } => {
+                            let _ = reply.send((
+                                engine.stats.device_keys.load(Ordering::Relaxed),
+                                engine.stats.fallback_keys.load(Ordering::Relaxed),
+                                engine.stats.dispatches.load(Ordering::Relaxed),
+                            ));
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn engine thread: {e}"))?;
+        let info = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow!("engine startup: {e}"))?;
+        Ok(Self { tx, info })
+    }
+
+    pub fn info(&self) -> &EngineInfo {
+        &self.info
+    }
+
+    /// Freeze a Memento state into a reusable engine snapshot (pads the
+    /// dense table to the best-fitting compiled variant).
+    pub fn snapshot(&self, m: Memento) -> Result<std::sync::Arc<EngineSnapshot>> {
+        let table = self
+            .info
+            .table_size_for(m.size())
+            .ok_or_else(|| anyhow!("no memento variant with table ≥ {}", m.size()))?;
+        Ok(std::sync::Arc::new(EngineSnapshot::new(m, table)))
+    }
+
+    /// Batched Memento lookup against a prepared snapshot (steady path).
+    pub fn memento_lookup_snapshot(
+        &self,
+        snap: std::sync::Arc<EngineSnapshot>,
+        keys: Vec<u64>,
+    ) -> Result<Vec<u32>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineRequest::MementoSnap { snap, keys, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+    }
+
+    /// Batched Memento lookup on the engine thread (blocking).
+    pub fn memento_lookup(&self, snapshot: Memento, keys: Vec<u64>) -> Result<Vec<u32>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineRequest::Memento { snapshot, keys, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+    }
+
+    /// Batched Jump lookup on the engine thread (blocking).
+    pub fn jump_lookup(&self, keys: Vec<u64>, n: u32) -> Result<Vec<u32>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineRequest::Jump { keys, n, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+    }
+
+    /// Device-side histogram (blocking).
+    pub fn histogram(&self, buckets: Vec<u32>, n: usize) -> Result<Vec<u64>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(EngineRequest::Hist { buckets, n, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+    }
+
+    /// (device_keys, fallback_keys, dispatches).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let (reply, rx) = std::sync::mpsc::channel();
+        if self.tx.send(EngineRequest::Stats { reply }).is_err() {
+            return (0, 0, 0);
+        }
+        rx.recv().unwrap_or((0, 0, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_loads_empty_dir() {
+        let e = Engine::load(Path::new("/no/such/dir")).expect("client must start");
+        assert!(!e.has_jump());
+        assert!(!e.has_memento());
+        assert!(e.jump_lookup(&[1, 2, 3], 10).is_err());
+        assert_eq!(e.stats.fallback_rate(), 0.0);
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! `runtime` — the PJRT execution layer.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt`, HLO **text** — see DESIGN.md §5 for why not
+//! serialized protos), compiles one executable per variant on the PJRT CPU
+//! client, and exposes batched lookups to the coordinator's hot path.
+//! Python never runs at request time.
+//!
+//! Exactness: the device kernels run masked *bounded* loops (a fixed-trip
+//! SIMD adaptation of the paper's data-dependent loops) and return a
+//! per-lane `ok` flag; lanes that did not converge within the bound are
+//! re-resolved on the scalar Rust path ([`engine::BatchOutcome`]), so the
+//! engine is bit-exact with [`crate::algorithms::Memento`] at any batch
+//! size — verified by `tests/integration_runtime.rs`.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactCatalog, VariantKey};
+pub use engine::{Engine, EngineHandle, EngineInfo, EngineStats};

@@ -1,0 +1,234 @@
+//! Property auditors: measure the §III consistency properties (balance,
+//! minimal disruption, monotonicity) over concrete key streams, instead of
+//! assuming them. Used by the integration tests, the rebalance tracker in
+//! the coordinator, and the ablation benches.
+
+use crate::algorithms::ConsistentHasher;
+
+/// Balance audit over a key set.
+#[derive(Debug, Clone)]
+pub struct BalanceReport {
+    /// Keys routed.
+    pub keys: usize,
+    /// Working buckets.
+    pub buckets: usize,
+    /// max |count - ideal| / ideal over buckets.
+    pub max_deviation: f64,
+    /// χ² statistic against the uniform multinomial.
+    pub chi2: f64,
+    /// χ² degrees of freedom (buckets - 1).
+    pub dof: usize,
+    /// Peak-to-average load ratio.
+    pub peak_to_avg: f64,
+}
+
+impl BalanceReport {
+    /// A loose normality gate: χ² for k-1 dof has mean k-1, stddev
+    /// √(2(k-1)); we accept within `sigmas` standard deviations.
+    pub fn is_uniform(&self, sigmas: f64) -> bool {
+        let mean = self.dof as f64;
+        let sd = (2.0 * self.dof as f64).sqrt();
+        self.chi2 < mean + sigmas * sd
+    }
+}
+
+/// Route `keys` and compare the per-bucket histogram to uniform.
+pub fn balance(algo: &dyn ConsistentHasher, keys: &[u64]) -> BalanceReport {
+    let mut counts = std::collections::HashMap::<u32, u64>::new();
+    for &k in keys {
+        *counts.entry(algo.lookup(k)).or_default() += 1;
+    }
+    let working = algo.working_buckets();
+    let w = working.len();
+    let ideal = keys.len() as f64 / w as f64;
+    let mut max_dev: f64 = 0.0;
+    let mut chi2 = 0.0;
+    let mut peak = 0u64;
+    for b in &working {
+        let c = counts.get(b).copied().unwrap_or(0);
+        peak = peak.max(c);
+        let d = (c as f64 - ideal).abs() / ideal;
+        max_dev = max_dev.max(d);
+        chi2 += (c as f64 - ideal).powi(2) / ideal;
+    }
+    // Keys on non-working buckets would be a correctness bug; count them
+    // as infinite imbalance.
+    for b in counts.keys() {
+        if working.binary_search(b).is_err() {
+            max_dev = f64::INFINITY;
+        }
+    }
+    BalanceReport {
+        keys: keys.len(),
+        buckets: w,
+        max_deviation: max_dev,
+        chi2,
+        dof: w.saturating_sub(1),
+        peak_to_avg: peak as f64 / ideal,
+    }
+}
+
+/// Disruption audit between two routing snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct DisruptionReport {
+    /// Keys that stayed put.
+    pub stayed: usize,
+    /// Keys that moved off buckets that were resized away (expected).
+    pub relocated: usize,
+    /// Keys that moved although their bucket survived (collateral churn —
+    /// must be 0 for strictly minimal-disruptive algorithms).
+    pub collateral: usize,
+}
+
+impl DisruptionReport {
+    pub fn collateral_frac(&self) -> f64 {
+        self.collateral as f64 / (self.stayed + self.relocated + self.collateral).max(1) as f64
+    }
+}
+
+/// Compare `before`/`after` bucket assignments for `keys`, where
+/// `removed_or_added` is the set of buckets that changed membership.
+pub fn disruption(
+    before: &[u32],
+    after: &[u32],
+    keys: &[u64],
+    removed_or_added: &[u32],
+) -> DisruptionReport {
+    assert_eq!(before.len(), keys.len());
+    assert_eq!(after.len(), keys.len());
+    let mut rep = DisruptionReport::default();
+    for i in 0..keys.len() {
+        if before[i] == after[i] {
+            rep.stayed += 1;
+        } else if removed_or_added.contains(&before[i]) || removed_or_added.contains(&after[i]) {
+            rep.relocated += 1;
+        } else {
+            rep.collateral += 1;
+        }
+    }
+    rep
+}
+
+/// Monotonicity audit result for one `add()` event.
+#[derive(Debug, Clone)]
+pub struct MonotonicityReport {
+    /// Keys that moved to the new bucket.
+    pub moved_to_new: usize,
+    /// Keys that moved anywhere else (must be 0 for monotone algorithms).
+    pub moved_elsewhere: usize,
+    /// Expected share: keys / (w_after).
+    pub expected_moved: f64,
+}
+
+/// Run an `add()` on a cloneable snapshot and audit movement.
+pub fn monotonicity(
+    algo: &mut dyn ConsistentHasher,
+    keys: &[u64],
+) -> Result<MonotonicityReport, crate::algorithms::AlgoError> {
+    let before: Vec<u32> = keys.iter().map(|k| algo.lookup(*k)).collect();
+    let new_bucket = algo.add()?;
+    let mut moved_to_new = 0usize;
+    let mut moved_elsewhere = 0usize;
+    for (i, k) in keys.iter().enumerate() {
+        let b = algo.lookup(*k);
+        if b != before[i] {
+            if b == new_bucket {
+                moved_to_new += 1;
+            } else {
+                moved_elsewhere += 1;
+            }
+        }
+    }
+    Ok(MonotonicityReport {
+        moved_to_new,
+        moved_elsewhere,
+        expected_moved: keys.len() as f64 / algo.working() as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Memento;
+    use crate::hashing::mix::splitmix64_mix;
+
+    fn keys(n: usize) -> Vec<u64> {
+        (0..n as u64).map(splitmix64_mix).collect()
+    }
+
+    #[test]
+    fn balance_accepts_uniform() {
+        let m = Memento::new(20);
+        let r = balance(&m, &keys(100_000));
+        assert!(r.is_uniform(6.0), "chi2={} dof={}", r.chi2, r.dof);
+        assert!(r.max_deviation < 0.1);
+        assert!(r.peak_to_avg < 1.1);
+    }
+
+    #[test]
+    fn balance_rejects_skew() {
+        // A deliberately broken "hasher": everything on bucket 0.
+        struct Degenerate;
+        impl ConsistentHasher for Degenerate {
+            fn lookup(&self, _k: u64) -> u32 {
+                0
+            }
+            fn add(&mut self) -> Result<u32, crate::algorithms::AlgoError> {
+                unimplemented!()
+            }
+            fn remove(&mut self, _b: u32) -> Result<(), crate::algorithms::AlgoError> {
+                unimplemented!()
+            }
+            fn working(&self) -> usize {
+                4
+            }
+            fn size(&self) -> usize {
+                4
+            }
+            fn is_working(&self, b: u32) -> bool {
+                b < 4
+            }
+            fn working_buckets(&self) -> Vec<u32> {
+                vec![0, 1, 2, 3]
+            }
+            fn state_bytes(&self) -> usize {
+                0
+            }
+            fn name(&self) -> &'static str {
+                "degenerate"
+            }
+        }
+        let r = balance(&Degenerate, &keys(1000));
+        assert!(!r.is_uniform(6.0));
+        assert!(r.max_deviation > 1.0);
+    }
+
+    #[test]
+    fn disruption_classifies() {
+        let keys = [1u64, 2, 3, 4];
+        let before = [0u32, 1, 2, 3];
+        let after = [0u32, 1, 5, 0]; // key3: 2→5 relocated (2 removed); key4: 3→0 collateral
+        let rep = disruption(&before, &after, &keys, &[2]);
+        assert_eq!(rep.stayed, 2);
+        assert_eq!(rep.relocated, 1);
+        assert_eq!(rep.collateral, 1);
+        assert!(rep.collateral_frac() > 0.2);
+    }
+
+    #[test]
+    fn monotonicity_on_memento() {
+        let mut m = Memento::new(10);
+        m.remove(4).unwrap();
+        let ks = keys(20_000);
+        let rep = monotonicity(&mut m, &ks).unwrap();
+        assert_eq!(rep.moved_elsewhere, 0);
+        let lo = rep.expected_moved * 0.7;
+        let hi = rep.expected_moved * 1.3;
+        assert!(
+            (rep.moved_to_new as f64) > lo && (rep.moved_to_new as f64) < hi,
+            "moved {} expected ≈{}",
+            rep.moved_to_new,
+            rep.expected_moved
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Figure emitters: one function per paper figure (or figure pair),
+//! returning a [`Table`] whose rows are the paper's series. Driven by the
+//! bench targets (`rust/benches/bench_*.rs`) and `examples/figures.rs`.
+
+use super::scenario::{self, ScenarioCell, ScenarioConfig};
+use super::Scale;
+use crate::algorithms::{RemovalOrder, PAPER_ALGOS};
+use crate::benchkit::report::Table;
+
+fn push_cells(t: &mut Table, cells: &[ScenarioCell]) {
+    for c in cells {
+        t.push_row(c.csv_row());
+    }
+}
+
+fn table(title: &str) -> Table {
+    Table::new(title, ScenarioCell::CSV_COLUMNS)
+}
+
+/// Figs. 17 + 18 — stable scenario: lookup time and memory vs cluster size.
+pub fn fig_17_18_stable(scale: Scale, cfg: &ScenarioConfig) -> Table {
+    let mut t = table("Fig 17/18 — stable scenario (lookup ns, state bytes)");
+    for &n in &scale.node_sizes() {
+        for algo in PAPER_ALGOS {
+            let cell = scenario::stable_cell(algo, n, cfg);
+            t.push_row(cell.csv_row());
+        }
+    }
+    t
+}
+
+/// Figs. 19-22 — one-shot removal of 90% of the nodes, best (LIFO) and
+/// worst (random) cases: memory (19/20) and lookup time (21/22).
+pub fn fig_19_22_oneshot(scale: Scale, cfg: &ScenarioConfig) -> Table {
+    let mut t = table("Fig 19-22 — one-shot 90% removals (both orders)");
+    for &n in &scale.node_sizes() {
+        if n < 10 {
+            continue;
+        }
+        for order in [RemovalOrder::Lifo, RemovalOrder::Random] {
+            for algo in PAPER_ALGOS {
+                let cell = scenario::oneshot_cell(algo, n, 0.9, order, cfg);
+                t.push_row(cell.csv_row());
+            }
+        }
+    }
+    t
+}
+
+/// The paper's incremental removal fractions (10%…90%).
+pub const INCREMENTAL_FRACS: &[f64] = &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.65, 0.7, 0.8, 0.9];
+
+/// Figs. 23-26 — incremental removals from a large cluster, both orders:
+/// lookup (23/24) and memory (25/26). The 65% point is included because it
+/// is the paper's Memento/Anchor/Dx crossover.
+pub fn fig_23_26_incremental(scale: Scale, cfg: &ScenarioConfig) -> Table {
+    let mut t = table("Fig 23-26 — incremental removals (both orders)");
+    let w = scale.incremental_base();
+    for order in [RemovalOrder::Lifo, RemovalOrder::Random] {
+        for algo in PAPER_ALGOS {
+            let cells = scenario::incremental_cells(algo, w, INCREMENTAL_FRACS, order, cfg);
+            push_cells(&mut t, &cells);
+        }
+    }
+    t
+}
+
+/// The paper's capacity ratios (§VIII-E).
+pub const SENSITIVITY_RATIOS: &[usize] = &[5, 10, 20, 50, 100];
+
+/// Figs. 27-32 — a/w sensitivity at 0% / 20% / 65% removals (lookup +
+/// memory). Memento is reported as the ratio-independent baseline, exactly
+/// as in the paper.
+pub fn fig_27_32_sensitivity(scale: Scale, cfg: &ScenarioConfig) -> Table {
+    let mut t = Table::new(
+        "Fig 27-32 — a/w sensitivity (0/20/65% removals)",
+        &[
+            "algo",
+            "ratio",
+            "removed_frac",
+            "working",
+            "lookup_ns_median",
+            "lookup_ns_p90",
+            "state_bytes",
+        ],
+    );
+    let w = scale.sensitivity_base();
+    for &removed in &[0.0, 0.2, 0.65] {
+        for &ratio in SENSITIVITY_RATIOS {
+            for algo in ["anchor", "dx"] {
+                let c = scenario::sensitivity_cell(algo, w, ratio, removed, cfg);
+                t.push_row(vec![
+                    c.algo.clone(),
+                    ratio.to_string(),
+                    format!("{removed:.2}"),
+                    c.working.to_string(),
+                    format!("{:.1}", c.lookup.median_ns),
+                    format!("{:.1}", c.lookup.p90_ns),
+                    c.state_bytes.to_string(),
+                ]);
+            }
+        }
+        // Memento baseline (ratio-independent: emitted once per removal level).
+        let c = scenario::sensitivity_cell("memento", w, 1, removed, cfg);
+        t.push_row(vec![
+            c.algo.clone(),
+            "-".into(),
+            format!("{removed:.2}"),
+            c.working.to_string(),
+            format!("{:.1}", c.lookup.median_ns),
+            format!("{:.1}", c.lookup.p90_ns),
+            c.state_bytes.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Shape checks the paper's qualitative claims against a produced table;
+/// returns human-readable findings (used by `examples/figures.rs` and the
+/// integration tests to assert "who wins" without fixing absolute ns).
+pub fn check_stable_shape(t: &Table) -> Vec<String> {
+    let mut findings = Vec::new();
+    // Column indexes in ScenarioCell::CSV_COLUMNS.
+    let (algo_i, nodes_i, ns_i, mem_i) = (0, 1, 5, 7);
+    let mut by_size: std::collections::BTreeMap<usize, Vec<(String, f64, usize)>> =
+        Default::default();
+    for row in &t.rows {
+        let n: usize = row[nodes_i].parse().unwrap();
+        let ns: f64 = row[ns_i].parse().unwrap();
+        let mem: usize = row[mem_i].parse().unwrap();
+        by_size.entry(n).or_default().push((row[algo_i].clone(), ns, mem));
+    }
+    for (n, cells) in &by_size {
+        let get = |name: &str| cells.iter().find(|(a, _, _)| a == name);
+        if let (Some(mem), Some(dx)) = (get("memento"), get("dx")) {
+            if mem.1 > dx.1 {
+                findings.push(format!(
+                    "UNEXPECTED at n={n}: memento lookup ({:.0}ns) slower than dx ({:.0}ns)",
+                    mem.1, dx.1
+                ));
+            }
+            if mem.2 >= dx.2 {
+                findings.push(format!(
+                    "UNEXPECTED at n={n}: memento memory ({}) ≥ dx ({})",
+                    mem.2, dx.2
+                ));
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchkit::BenchConfig;
+
+    fn tiny() -> ScenarioConfig {
+        ScenarioConfig {
+            keys: 2_048,
+            bench: BenchConfig {
+                warmup: std::time::Duration::from_millis(2),
+                samples: 3,
+                target_sample_time: std::time::Duration::from_micros(100),
+                max_total: std::time::Duration::from_millis(100),
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stable_table_has_all_algos_and_sizes() {
+        // A miniature scale for the unit test.
+        let cfg = tiny();
+        let mut t = table("mini");
+        for &n in &[10usize, 100] {
+            for algo in PAPER_ALGOS {
+                t.push_row(scenario::stable_cell(algo, n, &cfg).csv_row());
+            }
+        }
+        assert_eq!(t.rows.len(), 2 * PAPER_ALGOS.len());
+        let findings = check_stable_shape(&t);
+        // Stable at tiny n: memento ≈ jump, must beat dx on memory.
+        for f in &findings {
+            assert!(!f.contains("memory"), "memory shape violated: {f}");
+        }
+    }
+}

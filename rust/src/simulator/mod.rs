@@ -1,0 +1,84 @@
+//! `simulator` — the paper's benchmark tool, reproduced (the authors'
+//! companion repo `java-consistent-hashing-algorithms` [13], in Rust).
+//!
+//! * [`scenario`] — the §VIII-A evaluation scenarios: *stable*, *one-shot
+//!   removals* (90% at once), *incremental removals* (10–90%), and the
+//!   §VIII-E a/w sensitivity sweep; each parameterized by the removal
+//!   order ([`crate::algorithms::RemovalOrder`]: LIFO = best case,
+//!   random = worst case).
+//! * [`audit`] — the property auditors: balance (χ² + max deviation),
+//!   minimal disruption, and monotonicity, measured over real key streams
+//!   rather than assumed.
+//!
+//! The figure benches (`rust/benches/bench_*.rs`) drive these and emit the
+//! paper's series; `examples/figures.rs` runs the whole matrix.
+
+pub mod audit;
+pub mod figures;
+pub mod scenario;
+pub mod trace;
+
+pub use scenario::{build, ScenarioCell, ScenarioConfig};
+
+/// Sweep scale selected via `MEMENTO_BENCH_SCALE`:
+/// * `ci` (default) — sizes to 10⁵, fewer keys: minutes, preserves shape;
+/// * `full` — the paper's sizes to 10⁶.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Ci,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Self {
+        match std::env::var("MEMENTO_BENCH_SCALE").as_deref() {
+            Ok("full") => Scale::Full,
+            _ => Scale::Ci,
+        }
+    }
+
+    /// The paper's node-count sweep (Figs. 17-22): 10 … 10⁶.
+    pub fn node_sizes(self) -> Vec<usize> {
+        match self {
+            Scale::Ci => vec![10, 100, 1_000, 10_000, 100_000],
+            Scale::Full => vec![10, 100, 1_000, 10_000, 100_000, 1_000_000],
+        }
+    }
+
+    /// Initial size for the incremental-removal scenario (paper: 10⁶).
+    pub fn incremental_base(self) -> usize {
+        match self {
+            Scale::Ci => 100_000,
+            Scale::Full => 1_000_000,
+        }
+    }
+
+    /// Base size for the sensitivity analysis (paper: 10⁶).
+    pub fn sensitivity_base(self) -> usize {
+        match self {
+            Scale::Ci => 100_000,
+            Scale::Full => 1_000_000,
+        }
+    }
+
+    /// Number of lookup keys per measurement cell.
+    pub fn keys_per_cell(self) -> usize {
+        match self {
+            Scale::Ci => 100_000,
+            Scale::Full => 1_000_000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_from_env_defaults_to_ci() {
+        std::env::remove_var("MEMENTO_BENCH_SCALE");
+        assert_eq!(Scale::from_env(), Scale::Ci);
+        assert!(Scale::Ci.node_sizes().len() < Scale::Full.node_sizes().len());
+        assert!(Scale::Full.incremental_base() == 1_000_000);
+    }
+}

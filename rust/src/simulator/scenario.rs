@@ -1,0 +1,318 @@
+//! Scenario driver: builds clusters, applies the paper's removal
+//! schedules, and measures lookup time + memory per cell.
+
+use crate::algorithms::{self, ConsistentHasher, RemovalOrder};
+use crate::benchkit::{self, BenchConfig, BenchStats};
+use crate::hashing::keygen::{KeyDistribution, KeyStream};
+use crate::hashing::prng::{Rng64, Xoshiro256};
+
+/// Configuration shared by all scenario cells.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// a = capacity_ratio × w for capacity-bound algorithms (paper: 10).
+    pub capacity_ratio: usize,
+    /// Keys measured per cell.
+    pub keys: usize,
+    /// Deterministic seed (keys + removal order derive from it).
+    pub seed: u64,
+    /// Timing profile.
+    pub bench: BenchConfig,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self {
+            capacity_ratio: 10,
+            keys: 100_000,
+            seed: 0xC0FFEE,
+            bench: BenchConfig::quick(),
+        }
+    }
+}
+
+/// One measured cell of a figure: an algorithm at a parameter point.
+#[derive(Debug, Clone)]
+pub struct ScenarioCell {
+    pub algo: String,
+    /// Initial working nodes.
+    pub initial_nodes: usize,
+    /// Working nodes at measurement time.
+    pub working: usize,
+    /// Fraction of nodes removed (0.0 for stable).
+    pub removed_frac: f64,
+    pub order: Option<RemovalOrder>,
+    /// Lookup timing.
+    pub lookup: BenchStats,
+    /// Memory usage (exact algorithm-owned state bytes).
+    pub state_bytes: usize,
+}
+
+impl ScenarioCell {
+    /// CSV row (matches the figure emitters' column order).
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.algo.clone(),
+            self.initial_nodes.to_string(),
+            self.working.to_string(),
+            format!("{:.2}", self.removed_frac),
+            self.order.map(|o| o.label().to_string()).unwrap_or_else(|| "-".into()),
+            format!("{:.1}", self.lookup.median_ns),
+            format!("{:.1}", self.lookup.p90_ns),
+            self.state_bytes.to_string(),
+        ]
+    }
+
+    pub const CSV_COLUMNS: &'static [&'static str] = &[
+        "algo",
+        "initial_nodes",
+        "working",
+        "removed_frac",
+        "order",
+        "lookup_ns_median",
+        "lookup_ns_p90",
+        "state_bytes",
+    ];
+}
+
+/// Build an algorithm for a scenario: `w` initial nodes, capacity
+/// `ratio × w` for Anchor/Dx.
+pub fn build(name: &str, w: usize, cfg: &ScenarioConfig) -> Box<dyn ConsistentHasher> {
+    algorithms::by_name(name, w, w * cfg.capacity_ratio)
+        .unwrap_or_else(|| panic!("unknown algorithm {name}"))
+}
+
+/// Apply removals until `target_removed` nodes are gone, honoring the
+/// order. For algorithms without random-removal support (Jump), LIFO is
+/// always used — the paper does the same ("the worst case results for
+/// that algorithm will also refer to a LIFO removal order").
+pub fn apply_removals(
+    algo: &mut dyn ConsistentHasher,
+    target_removed: usize,
+    order: RemovalOrder,
+    rng: &mut Xoshiro256,
+) -> Vec<u32> {
+    let mut removed = Vec::with_capacity(target_removed);
+    let effective = if algo.supports_random_removal() { order } else { RemovalOrder::Lifo };
+    // Maintain the candidate set locally: O(1) per removal instead of
+    // re-materializing working_buckets() (O(w)) every step — the paper's
+    // incremental scenario removes 900k buckets from a 10⁶ cluster.
+    let mut wb = algo.working_buckets();
+    for _ in 0..target_removed {
+        if wb.len() <= 1 {
+            break;
+        }
+        let b = match effective {
+            RemovalOrder::Lifo => wb.pop().unwrap(),
+            RemovalOrder::Random => wb.swap_remove(rng.next_index(wb.len())),
+        };
+        algo.remove(b).expect("removal of a working bucket");
+        removed.push(b);
+    }
+    removed
+}
+
+/// Measure lookup time over a fresh uniform key stream.
+pub fn measure_lookup(
+    algo: &dyn ConsistentHasher,
+    cfg: &ScenarioConfig,
+    label: &str,
+) -> BenchStats {
+    let mut ks = KeyStream::new(KeyDistribution::Uniform, cfg.seed ^ 0x1007);
+    let keys = ks.take_vec(cfg.keys);
+    let mut i = 0usize;
+    benchkit::bench(label, &cfg.bench, || {
+        // Cycle through the pre-generated key stream.
+        let k = unsafe { *keys.get_unchecked(i) };
+        benchkit::black_box(algo.lookup(benchkit::black_box(k)));
+        i += 1;
+        if i == keys.len() {
+            i = 0;
+        }
+    })
+}
+
+/// Stable scenario (Figs. 17/18): no removals.
+pub fn stable_cell(name: &str, w: usize, cfg: &ScenarioConfig) -> ScenarioCell {
+    let algo = build(name, w, cfg);
+    let lookup = measure_lookup(algo.as_ref(), cfg, &format!("stable/{name}/{w}"));
+    ScenarioCell {
+        algo: name.into(),
+        initial_nodes: w,
+        working: algo.working(),
+        removed_frac: 0.0,
+        order: None,
+        lookup,
+        state_bytes: algo.state_bytes(),
+    }
+}
+
+/// One-shot removal scenario (Figs. 19-22): remove `frac` of the nodes at
+/// once, then measure.
+pub fn oneshot_cell(
+    name: &str,
+    w: usize,
+    frac: f64,
+    order: RemovalOrder,
+    cfg: &ScenarioConfig,
+) -> ScenarioCell {
+    let mut algo = build(name, w, cfg);
+    let mut rng = Xoshiro256::new(cfg.seed ^ ONESHOT_SALT);
+    let target = ((w as f64) * frac) as usize;
+    apply_removals(algo.as_mut(), target, order, &mut rng);
+    let lookup =
+        measure_lookup(algo.as_ref(), cfg, &format!("oneshot/{name}/{w}/{}", order.label()));
+    ScenarioCell {
+        algo: name.into(),
+        initial_nodes: w,
+        working: algo.working(),
+        removed_frac: frac,
+        order: Some(order),
+        lookup,
+        state_bytes: algo.state_bytes(),
+    }
+}
+
+const ONESHOT_SALT: u64 = 0x0E5_0415;
+
+/// Incremental removal scenario (Figs. 23-26): a *single* cluster loses
+/// nodes step by step; measurements are taken at each cumulative fraction.
+pub fn incremental_cells(
+    name: &str,
+    w: usize,
+    fracs: &[f64],
+    order: RemovalOrder,
+    cfg: &ScenarioConfig,
+) -> Vec<ScenarioCell> {
+    let mut algo = build(name, w, cfg);
+    let mut rng = Xoshiro256::new(cfg.seed ^ INCREMENTAL_SALT);
+    let mut cells = Vec::with_capacity(fracs.len());
+    let mut removed_so_far = 0usize;
+    for &frac in fracs {
+        let target_total = ((w as f64) * frac) as usize;
+        let step = target_total.saturating_sub(removed_so_far);
+        apply_removals(algo.as_mut(), step, order, &mut rng);
+        removed_so_far = w - algo.working();
+        let lookup = measure_lookup(
+            algo.as_ref(),
+            cfg,
+            &format!("incremental/{name}/{w}/{:.0}%/{}", frac * 100.0, order.label()),
+        );
+        cells.push(ScenarioCell {
+            algo: name.into(),
+            initial_nodes: w,
+            working: algo.working(),
+            removed_frac: frac,
+            order: Some(order),
+            lookup,
+            state_bytes: algo.state_bytes(),
+        });
+    }
+    cells
+}
+
+const INCREMENTAL_SALT: u64 = 0x13C4_EA5E;
+
+/// §VIII-E sensitivity: fixed `w`, sweep the capacity ratio a/w; measure
+/// after removing `removed_frac` of the nodes (0 / 0.2 / 0.65).
+pub fn sensitivity_cell(
+    name: &str,
+    w: usize,
+    ratio: usize,
+    removed_frac: f64,
+    cfg: &ScenarioConfig,
+) -> ScenarioCell {
+    let mut local = cfg.clone();
+    local.capacity_ratio = ratio;
+    let mut algo = build(name, w, &local);
+    let mut rng = Xoshiro256::new(cfg.seed ^ ratio as u64);
+    let target = ((w as f64) * removed_frac) as usize;
+    apply_removals(algo.as_mut(), target, RemovalOrder::Random, &mut rng);
+    let lookup = measure_lookup(
+        algo.as_ref(),
+        &local,
+        &format!("sensitivity/{name}/ratio{ratio}/{:.0}%", removed_frac * 100.0),
+    );
+    ScenarioCell {
+        algo: name.into(),
+        initial_nodes: w,
+        working: algo.working(),
+        removed_frac,
+        order: Some(RemovalOrder::Random),
+        lookup,
+        state_bytes: algo.state_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ScenarioConfig {
+        ScenarioConfig {
+            keys: 4_096,
+            bench: BenchConfig {
+                warmup: std::time::Duration::from_millis(5),
+                samples: 4,
+                target_sample_time: std::time::Duration::from_micros(200),
+                max_total: std::time::Duration::from_millis(200),
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stable_cell_reports_zero_removals() {
+        let c = stable_cell("memento", 100, &tiny_cfg());
+        assert_eq!(c.working, 100);
+        assert_eq!(c.removed_frac, 0.0);
+        assert!(c.lookup.median_ns > 0.0);
+    }
+
+    #[test]
+    fn oneshot_removes_requested_fraction() {
+        let c = oneshot_cell("memento", 100, 0.9, RemovalOrder::Random, &tiny_cfg());
+        assert_eq!(c.working, 10);
+        assert!(c.state_bytes > 0);
+    }
+
+    #[test]
+    fn jump_falls_back_to_lifo() {
+        // Jump can't remove random buckets; apply_removals must still
+        // achieve the target count via LIFO.
+        let cfg = tiny_cfg();
+        let mut algo = build("jump", 50, &cfg);
+        let mut rng = Xoshiro256::new(9);
+        let removed = apply_removals(algo.as_mut(), 20, RemovalOrder::Random, &mut rng);
+        assert_eq!(removed.len(), 20);
+        assert_eq!(algo.working(), 30);
+        // LIFO means strictly descending tail ids.
+        for (i, w) in removed.iter().enumerate() {
+            assert_eq!(*w as usize, 50 - 1 - i);
+        }
+    }
+
+    #[test]
+    fn incremental_is_cumulative() {
+        let cells =
+            incremental_cells("memento", 100, &[0.1, 0.3, 0.5], RemovalOrder::Random, &tiny_cfg());
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].working, 90);
+        assert_eq!(cells[1].working, 70);
+        assert_eq!(cells[2].working, 50);
+        // Memory grows monotonically with removals for memento.
+        assert!(cells[2].state_bytes >= cells[0].state_bytes);
+    }
+
+    #[test]
+    fn sensitivity_scales_capacity() {
+        let c5 = sensitivity_cell("dx", 100, 5, 0.0, &tiny_cfg());
+        let c50 = sensitivity_cell("dx", 100, 50, 0.0, &tiny_cfg());
+        assert!(c50.state_bytes > c5.state_bytes, "a/w must grow Dx state");
+    }
+
+    #[test]
+    fn csv_row_shape() {
+        let c = stable_cell("jump", 10, &tiny_cfg());
+        assert_eq!(c.csv_row().len(), ScenarioCell::CSV_COLUMNS.len());
+    }
+}

@@ -1,0 +1,254 @@
+//! Membership-trace record & replay: the ops-tooling layer.
+//!
+//! A trace is a line-oriented text log of cluster events (`#` comments):
+//!
+//! ```text
+//! init 32                 # cluster starts with 32 nodes
+//! fail 7                  # bucket 7's node fails
+//! fail 19
+//! add                     # capacity restored (LIFO)
+//! check 1000 0xSEED       # assert balance/totality over 1000 probe keys
+//! ```
+//!
+//! Production incidents can be replayed deterministically against any
+//! algorithm (`memento replay trace.txt --algo anchor`), with the same
+//! auditors the live router runs. The simulator also *records* traces
+//! from generated scenarios so every benchmark run is replayable.
+
+use crate::algorithms;
+use crate::simulator::audit;
+use std::fmt::Write as _;
+
+/// One trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Must be the first event: initial cluster size.
+    Init(u32),
+    /// Fail the node on this bucket.
+    Fail(u32),
+    /// Add capacity (restore or grow).
+    Add,
+    /// Audit checkpoint: `check <keys> <seed>`.
+    Check { keys: u32, seed: u64 },
+}
+
+/// Parse failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "trace error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Parse a trace document.
+pub fn parse(text: &str) -> Result<Vec<TraceEvent>, TraceError> {
+    let mut events = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: String| TraceError { line: lineno + 1, message: m };
+        let mut parts = line.split_whitespace();
+        let ev = match parts.next().unwrap() {
+            "init" => {
+                let n = parts
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| err("init needs a node count".into()))?;
+                TraceEvent::Init(n)
+            }
+            "fail" => {
+                let b = parts
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| err("fail needs a bucket id".into()))?;
+                TraceEvent::Fail(b)
+            }
+            "add" => TraceEvent::Add,
+            "check" => {
+                let keys = parts
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| err("check needs a key count".into()))?;
+                let seed_tok = parts.next().unwrap_or("0xC0FFEE");
+                let seed = parse_u64(seed_tok)
+                    .ok_or_else(|| err(format!("bad seed '{seed_tok}'")))?;
+                TraceEvent::Check { keys, seed }
+            }
+            other => return Err(err(format!("unknown event '{other}'"))),
+        };
+        if events.is_empty() && !matches!(ev, TraceEvent::Init(_)) {
+            return Err(err("trace must start with 'init <n>'".into()));
+        }
+        events.push(ev);
+    }
+    if events.is_empty() {
+        return Err(TraceError { line: 0, message: "empty trace".into() });
+    }
+    Ok(events)
+}
+
+fn parse_u64(tok: &str) -> Option<u64> {
+    if let Some(hex) = tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        tok.parse().ok()
+    }
+}
+
+/// Serialize events back to the text format.
+pub fn emit(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let _ = match ev {
+            TraceEvent::Init(n) => writeln!(out, "init {n}"),
+            TraceEvent::Fail(b) => writeln!(out, "fail {b}"),
+            TraceEvent::Add => writeln!(out, "add"),
+            TraceEvent::Check { keys, seed } => writeln!(out, "check {keys} {seed:#x}"),
+        };
+    }
+    out
+}
+
+/// Outcome of replaying a trace.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub applied: usize,
+    pub rejected: usize,
+    pub checks: usize,
+    pub check_failures: Vec<String>,
+    pub final_working: usize,
+    pub final_state_bytes: usize,
+}
+
+/// Replay a trace against an algorithm (capacity bound `a = ratio × init`).
+pub fn replay(
+    events: &[TraceEvent],
+    algo_name: &str,
+    capacity_ratio: usize,
+) -> Result<ReplayReport, String> {
+    let Some(TraceEvent::Init(n0)) = events.first() else {
+        return Err("trace must start with init".into());
+    };
+    let mut algo = algorithms::by_name(algo_name, *n0 as usize, *n0 as usize * capacity_ratio)
+        .ok_or_else(|| format!("unknown algorithm {algo_name}"))?;
+    let mut rep = ReplayReport {
+        applied: 1,
+        rejected: 0,
+        checks: 0,
+        check_failures: Vec::new(),
+        final_working: 0,
+        final_state_bytes: 0,
+    };
+    for ev in &events[1..] {
+        match ev {
+            TraceEvent::Init(_) => return Err("duplicate init".into()),
+            TraceEvent::Fail(b) => match algo.remove(*b) {
+                Ok(()) => rep.applied += 1,
+                Err(_) => rep.rejected += 1,
+            },
+            TraceEvent::Add => match algo.add() {
+                Ok(_) => rep.applied += 1,
+                Err(_) => rep.rejected += 1,
+            },
+            TraceEvent::Check { keys, seed } => {
+                rep.checks += 1;
+                let probe: Vec<u64> = (0..*keys as u64)
+                    .map(|i| crate::hashing::mix::mix2(i, *seed))
+                    .collect();
+                // Totality.
+                for &k in &probe {
+                    let b = algo.lookup(k);
+                    if !algo.is_working(b) {
+                        rep.check_failures
+                            .push(format!("key {k:#x} -> non-working bucket {b}"));
+                        break;
+                    }
+                }
+                // Balance (only meaningful with enough keys per bucket).
+                if *keys as usize >= algo.working() * 50 {
+                    let bal = audit::balance(algo.as_ref(), &probe);
+                    if !bal.is_uniform(8.0) {
+                        rep.check_failures.push(format!(
+                            "balance χ²={:.1} (dof {}) at check #{}",
+                            bal.chi2, bal.dof, rep.checks
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    rep.final_working = algo.working();
+    rep.final_state_bytes = algo.state_bytes();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# incident 2024-03-17: rack failure
+init 16
+fail 3      # first node down
+fail 11
+check 2000 0xABC
+add
+check 2000 0xABC
+";
+
+    #[test]
+    fn parse_and_emit_roundtrip() {
+        let events = parse(SAMPLE).unwrap();
+        assert_eq!(events[0], TraceEvent::Init(16));
+        assert_eq!(events[1], TraceEvent::Fail(3));
+        assert_eq!(events[3], TraceEvent::Check { keys: 2000, seed: 0xABC });
+        let text = emit(&events);
+        assert_eq!(parse(&text).unwrap(), events);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse("").is_err());
+        assert!(parse("fail 3\n").unwrap_err().message.contains("must start"));
+        assert!(parse("init\n").unwrap_err().message.contains("node count"));
+        assert!(parse("init 4\nfrob\n").unwrap_err().message.contains("unknown event"));
+        let e = parse("init 4\nfail x\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn replay_against_memento_and_anchor() {
+        for algo in ["memento", "anchor"] {
+            let rep = replay(&parse(SAMPLE).unwrap(), algo, 10).unwrap();
+            assert_eq!(rep.rejected, 0, "{algo}");
+            assert_eq!(rep.checks, 2);
+            assert!(rep.check_failures.is_empty(), "{algo}: {:?}", rep.check_failures);
+            assert_eq!(rep.final_working, 15); // 16 - 2 + 1
+        }
+    }
+
+    #[test]
+    fn replay_counts_rejections_for_jump() {
+        // Jump rejects the random failures; adds still apply.
+        let rep = replay(&parse(SAMPLE).unwrap(), "jump", 10).unwrap();
+        assert_eq!(rep.rejected, 2);
+        assert_eq!(rep.final_working, 17); // 16 + 1 add, no removals applied
+    }
+
+    #[test]
+    fn replay_rejects_bad_traces() {
+        assert!(replay(&[TraceEvent::Fail(1)], "memento", 10).is_err());
+        assert!(replay(&parse("init 4\n").unwrap(), "quantum", 10).is_err());
+        let doubled = vec![TraceEvent::Init(4), TraceEvent::Init(4)];
+        assert!(replay(&doubled, "memento", 10).is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! `testkit` — a property-based testing mini-framework (proptest is not
+//! available in the offline crate set, so we built the subset we need).
+//!
+//! * [`forall`] — run a property over `cases` generated inputs; on failure,
+//!   greedily shrink the counterexample via [`Shrink`] and panic with the
+//!   minimal failing input.
+//! * [`Shrink`] — counterexample minimization for integers, vectors,
+//!   pairs and the domain types used by the algorithm invariants
+//!   (removal sequences, cluster operation scripts — see [`script`]).
+//! * Deterministic: every run derives its cases from a fixed seed (override
+//!   with `MEMENTO_TEST_SEED` to explore; it is printed on failure).
+
+#[allow(unused_imports)] // Rng64 brings the generator methods into scope for callers
+pub use crate::hashing::prng::Rng64;
+
+use crate::hashing::prng::Xoshiro256;
+use std::fmt::Debug;
+
+pub mod script;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Maximum shrink attempts before reporting.
+    pub max_shrinks: usize,
+    /// Base seed (xor-ed with the per-property name hash).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("MEMENTO_TEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_CAFE);
+        Self { cases: 256, max_shrinks: 20_000, seed }
+    }
+}
+
+impl Config {
+    pub fn with_cases(cases: usize) -> Self {
+        Self { cases, ..Default::default() }
+    }
+}
+
+/// Types that can propose strictly "smaller" variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate shrinks, roughly ordered most-aggressive-first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+macro_rules! impl_shrink_uint {
+    ($($t:ty),*) => {$(
+        impl Shrink for $t {
+            fn shrink(&self) -> Vec<Self> {
+                let v = *self;
+                if v == 0 { return Vec::new(); }
+                let mut out = vec![0, v / 2];
+                if v > 1 { out.push(v - 1); }
+                out.dedup();
+                out.retain(|x| *x != v);
+                out
+            }
+        }
+    )*};
+}
+impl_shrink_uint!(u8, u16, u32, u64, usize);
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // Remove chunks: halves first, then single elements.
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        if n <= 16 {
+            for i in 0..n {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            // Shrink individual elements (first few positions).
+            for i in 0..n.min(4) {
+                for e in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = e;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn from `gen`. Panics with the
+/// (shrunken) counterexample on the first failure.
+pub fn forall<T, G, P>(name: &str, cfg: Config, gen: G, prop: P)
+where
+    T: Debug + Clone + Shrink,
+    G: Fn(&mut Xoshiro256) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let name_salt = crate::hashing::xxhash::xxhash64(name.as_bytes(), 0);
+    let mut rng = Xoshiro256::new(cfg.seed ^ name_salt);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let (min_input, min_msg, steps) = shrink_loop(input, &prop, cfg.max_shrinks);
+            panic!(
+                "property '{name}' failed (case {case}/{}, seed {:#x}, {steps} shrink steps)\n\
+                 minimal counterexample: {min_input:?}\nerror: {min_msg}\n(first error: {first_msg})",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but without shrinking (for non-[`Shrink`] inputs).
+pub fn forall_noshrink<T, G, P>(name: &str, cfg: Config, gen: G, prop: P)
+where
+    T: Debug,
+    G: Fn(&mut Xoshiro256) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let name_salt = crate::hashing::xxhash::xxhash64(name.as_bytes(), 0);
+    let mut rng = Xoshiro256::new(cfg.seed ^ name_salt);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}/{}, seed {:#x})\ninput: {input:?}\nerror: {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut cur: T, prop: &P, budget: usize) -> (T, String, usize)
+where
+    T: Debug + Clone + Shrink,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut cur_msg = prop(&cur).err().unwrap_or_else(|| "unknown".into());
+    let mut steps = 0usize;
+    let mut tried = 0usize;
+    loop {
+        let mut advanced = false;
+        for cand in cur.shrink() {
+            tried += 1;
+            if tried > budget {
+                return (cur, cur_msg, steps);
+            }
+            if let Err(msg) = prop(&cand) {
+                cur = cand;
+                cur_msg = msg;
+                steps += 1;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return (cur, cur_msg, steps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            "u64 half is smaller-or-equal",
+            Config::with_cases(64),
+            |rng| rng.next_u64(),
+            |&x| if x / 2 <= x { Ok(()) } else { Err("math broke".into()) },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                "x < 1000",
+                Config::with_cases(200),
+                |rng| rng.next_u64() >> 32, // up to ~4e9, almost surely ≥ 1000
+                |&x| if x < 1000 { Ok(()) } else { Err(format!("{x} too big")) },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Greedy shrink from any x ≥ 1000 must land exactly on 1000.
+        assert!(msg.contains("minimal counterexample: 1000"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_removes_elements() {
+        let v = vec![5u32, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() == 2));
+        assert!(shrunk.iter().any(|s| s.len() == 3));
+    }
+
+    #[test]
+    fn pair_shrink_covers_both_sides() {
+        let p = (4u32, 6u64);
+        let shrunk = p.shrink();
+        assert!(shrunk.iter().any(|(a, _)| *a == 0));
+        assert!(shrunk.iter().any(|(_, b)| *b == 0));
+    }
+
+    #[test]
+    fn noshrink_reports_input() {
+        let result = std::panic::catch_unwind(|| {
+            forall_noshrink(
+                "always fails",
+                Config::with_cases(1),
+                |_rng| "opaque",
+                |_| Err("nope".into()),
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("opaque"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seen = Vec::new();
+        for _ in 0..2 {
+            let collected = std::cell::RefCell::new(Vec::new());
+            forall_noshrink(
+                "collect",
+                Config::with_cases(8),
+                |rng| rng.next_u64(),
+                |&x| {
+                    collected.borrow_mut().push(x);
+                    Ok(())
+                },
+            );
+            seen.push(collected.into_inner());
+        }
+        assert_eq!(seen[0], seen[1]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Cluster-operation *scripts*: the domain-specific generator + shrinker
+//! used by the algorithm property tests.
+//!
+//! A script is an initial cluster size plus a sequence of operations
+//! (add / remove-random / remove-lifo). Property tests replay a script
+//! against an algorithm and check invariants after every step; on failure
+//! the framework shrinks the script to the minimal failing sequence.
+
+use super::Shrink;
+use crate::hashing::prng::{Rng64, Xoshiro256};
+
+/// One membership operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Add a node.
+    Add,
+    /// Remove the bucket at `working_buckets()[i % w]` (random failure).
+    RemoveIndex(u32),
+    /// Remove the most recently added bucket (LIFO / scale-down).
+    RemoveLifo,
+}
+
+impl Shrink for Op {
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            Op::Add => vec![],
+            Op::RemoveIndex(i) if *i > 0 => {
+                vec![Op::RemoveIndex(0), Op::RemoveIndex(i / 2), Op::RemoveLifo]
+            }
+            Op::RemoveIndex(_) => vec![Op::RemoveLifo],
+            Op::RemoveLifo => vec![],
+        }
+    }
+}
+
+/// A generated cluster lifecycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Script {
+    /// Initial working-bucket count (≥ 1).
+    pub initial: u32,
+    /// Operation sequence.
+    pub ops: Vec<Op>,
+}
+
+impl Script {
+    /// Generate a script with up to `max_initial` starting nodes and up to
+    /// `max_ops` operations, biased toward removals (the interesting case).
+    pub fn generate(rng: &mut Xoshiro256, max_initial: u32, max_ops: usize) -> Self {
+        let initial = 1 + rng.next_below(max_initial as u64) as u32;
+        let n_ops = rng.next_below(max_ops as u64 + 1) as usize;
+        let ops = (0..n_ops)
+            .map(|_| match rng.next_below(10) {
+                0..=2 => Op::Add,
+                3..=7 => Op::RemoveIndex(rng.next_u64() as u32),
+                _ => Op::RemoveLifo,
+            })
+            .collect();
+        Self { initial, ops }
+    }
+}
+
+impl Shrink for Script {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        // Shrink the op list first (shorter scripts are better evidence).
+        for ops in self.ops.shrink() {
+            out.push(Script { initial: self.initial, ops });
+        }
+        // Then the initial size.
+        if self.initial > 1 {
+            out.push(Script { initial: self.initial / 2, ops: self.ops.clone() });
+            out.push(Script { initial: self.initial - 1, ops: self.ops.clone() });
+        }
+        out
+    }
+}
+
+/// Replay a script against an algorithm, invoking `check` after every
+/// successfully applied operation. Operations that the algorithm rejects
+/// (e.g. non-LIFO removals on Jump, capacity-bound adds on Anchor) are
+/// skipped — rejection is part of the contract, not a failure.
+pub fn replay<A, C>(algo: &mut A, script: &Script, mut check: C) -> Result<(), String>
+where
+    A: crate::algorithms::ConsistentHasher + ?Sized,
+    C: FnMut(&A, &Op) -> Result<(), String>,
+{
+    for op in &script.ops {
+        let applied = match op {
+            Op::Add => algo.add().map(|_| ()).is_ok(),
+            Op::RemoveIndex(i) => {
+                let wb = algo.working_buckets();
+                if wb.len() <= 1 {
+                    false
+                } else {
+                    let b = wb[(*i as usize) % wb.len()];
+                    algo.remove(b).is_ok()
+                }
+            }
+            Op::RemoveLifo => {
+                let wb = algo.working_buckets();
+                if wb.len() <= 1 {
+                    false
+                } else {
+                    let b = *wb.last().unwrap();
+                    algo.remove(b).is_ok()
+                }
+            }
+        };
+        if applied {
+            check(algo, op)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{ConsistentHasher, Memento};
+
+    #[test]
+    fn generate_is_bounded() {
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..100 {
+            let s = Script::generate(&mut rng, 50, 30);
+            assert!(s.initial >= 1 && s.initial <= 50);
+            assert!(s.ops.len() <= 30);
+        }
+    }
+
+    #[test]
+    fn replay_applies_and_checks() {
+        let mut m = Memento::new(10);
+        let script = Script {
+            initial: 10,
+            ops: vec![Op::RemoveIndex(3), Op::Add, Op::RemoveLifo, Op::Add],
+        };
+        let mut checks = 0;
+        replay(&mut m, &script, |algo, _op| {
+            checks += 1;
+            if algo.working() >= 1 {
+                Ok(())
+            } else {
+                Err("empty cluster".into())
+            }
+        })
+        .unwrap();
+        assert_eq!(checks, 4);
+    }
+
+    #[test]
+    fn replay_skips_rejected_ops() {
+        use crate::algorithms::jump::Jump;
+        let mut j = Jump::new(5);
+        // Jump rejects random removals; only LIFO ops apply.
+        let script = Script {
+            initial: 5,
+            ops: vec![Op::RemoveIndex(2), Op::RemoveLifo],
+        };
+        let mut applied = 0;
+        replay(&mut j, &script, |_a, _op| {
+            applied += 1;
+            Ok(())
+        })
+        .unwrap();
+        // RemoveIndex picks working_buckets()[2 % 5] = 2, which Jump
+        // rejects unless it happens to be the tail; RemoveLifo applies.
+        assert_eq!(applied, 1);
+        assert_eq!(j.working(), 4);
+    }
+
+    #[test]
+    fn script_shrinks_toward_shorter() {
+        let s = Script {
+            initial: 8,
+            ops: vec![Op::RemoveIndex(7), Op::Add, Op::RemoveLifo, Op::RemoveIndex(1)],
+        };
+        let shrunk = s.shrink();
+        assert!(shrunk.iter().any(|x| x.ops.len() < 4));
+        assert!(shrunk.iter().any(|x| x.initial < 8));
+    }
+}

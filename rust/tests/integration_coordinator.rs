@@ -1,0 +1,167 @@
+//! Integration: router + batcher + rebalancer + storage working together
+//! (no network, no engine — those are covered by integration_service.rs
+//! and integration_runtime.rs respectively).
+
+use memento::coordinator::batcher::Batcher;
+use memento::coordinator::rebalancer::Rebalancer;
+use memento::coordinator::router::Router;
+use memento::coordinator::storage::StorageCluster;
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::testkit::{forall_noshrink, Config};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+#[test]
+fn full_lifecycle_disruption_audit() {
+    // A long random lifecycle: failures and restores interleaved, the
+    // rebalancer must never observe a violation for memento.
+    forall_noshrink(
+        "router lifecycle audit",
+        Config::with_cases(8),
+        |rng| (8 + rng.next_below(24) as usize, rng.next_u64()),
+        |&(w, seed)| {
+            let router = Router::new("memento", w, w * 10, None).map_err(|e| e.to_string())?;
+            let reb = Rebalancer::new(&router, 10_000, seed);
+            let mut rng = Xoshiro256::new(seed);
+            for _ in 0..12 {
+                if rng.next_bool(0.6) && router.working() > 2 {
+                    let wb = router.with_view(|a, _| a.working_buckets());
+                    let b = wb[rng.next_index(wb.len())];
+                    router.fail_bucket(b).map_err(|e| e.to_string())?;
+                    let s = reb.observe_epoch(&router, &[b]);
+                    if s.violations > 0 {
+                        return Err(format!("violation after failing {b}"));
+                    }
+                } else {
+                    let (b, _n) = router.add_node().map_err(|e| e.to_string())?;
+                    let s = reb.observe_epoch(&router, &[b]);
+                    if s.violations > 0 {
+                        return Err(format!("violation after adding {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn storage_follows_router_through_failures() {
+    let router = Router::new("memento", 12, 120, None).unwrap();
+    let storage = StorageCluster::new();
+    let ks = keys(3_000, 0x57);
+    for &k in &ks {
+        let (_b, node) = router.route(k);
+        storage.node(node).put(k, k.to_le_bytes().to_vec());
+    }
+    assert_eq!(storage.total_records(), 3_000);
+
+    // Fail three nodes; migrate each failed node's data per the new routing.
+    for bucket in [2u32, 7, 9] {
+        let node = router.fail_bucket(bucket).unwrap();
+        let r = router.clone();
+        storage.migrate_from(node, move |k| r.route(k).1);
+    }
+    // Every key must be found exactly where the router now points.
+    for &k in &ks {
+        let (_b, node) = router.route(k);
+        assert_eq!(
+            storage.node(node).get(k),
+            Some(k.to_le_bytes().to_vec()),
+            "key {k:#x} lost after migrations"
+        );
+    }
+    assert_eq!(storage.total_records(), 3_000, "no records lost or duplicated");
+}
+
+#[test]
+fn storage_load_tracks_balance() {
+    let router = Router::new("memento", 10, 100, None).unwrap();
+    let storage = StorageCluster::new();
+    let ks = keys(50_000, 0x77);
+    for &k in &ks {
+        let (_b, node) = router.route(k);
+        storage.node(node).put(k, vec![0]);
+    }
+    let loads = storage.load_by_node();
+    assert_eq!(loads.len(), 10);
+    let ideal = 5_000f64;
+    for (node, count) in loads {
+        let dev = (count as f64 - ideal).abs() / ideal;
+        assert!(dev < 0.12, "{node}: {count} records, dev {dev:.3}");
+    }
+}
+
+#[test]
+fn batcher_survives_membership_churn() {
+    let router = Router::new("memento", 16, 160, None).unwrap();
+    let (batcher, handle) = Batcher::spawn(router.clone(), 128, Duration::from_micros(200));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    // Lookup threads hammer the batcher while the main thread churns
+    // membership; all lookups must resolve to working buckets.
+    let lookup_threads: Vec<_> = (0..4)
+        .map(|t| {
+            let h = handle.clone();
+            let r = router.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(t);
+                let mut count = 0u32;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let k = rng.next_u64();
+                    let b = h.lookup(k).expect("batcher alive");
+                    // The bucket must have been working at *some* recent
+                    // epoch; verify it's a plausible bucket id.
+                    assert!((b as usize) < r.with_view(|a, _| a.size()) + 1);
+                    count += 1;
+                }
+                count
+            })
+        })
+        .collect();
+
+    let mut rng = Xoshiro256::new(99);
+    for _ in 0..10 {
+        std::thread::sleep(Duration::from_millis(5));
+        if rng.next_bool(0.5) && router.working() > 4 {
+            let wb = router.with_view(|a, _| a.working_buckets());
+            let b = wb[rng.next_index(wb.len())];
+            let _ = router.fail_bucket(b);
+        } else {
+            let _ = router.add_node();
+        }
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: u32 = lookup_threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert!(total > 100, "lookups made progress: {total}");
+    drop(handle);
+    batcher.join();
+}
+
+#[test]
+fn router_with_every_algorithm() {
+    for name in memento::algorithms::ALL_ALGOS {
+        let router = Router::new(name, 8, 80, None)
+            .unwrap_or_else(|e| panic!("router({name}): {e}"));
+        let ks = keys(500, 1);
+        for &k in &ks {
+            let (b, node) = router.route(k);
+            assert!(router.with_view(|a, _| a.is_working(b)), "{name}: non-working bucket");
+            assert_eq!(router.with_view(|_, m| m.node_at(b)), Some(node));
+        }
+        // One failure + one restore, where supported.
+        let wb = router.with_view(|a, _| a.working_buckets());
+        let can_fail = router.with_view(|a, _| a.supports_random_removal());
+        if can_fail {
+            router.fail_bucket(wb[wb.len() / 2]).unwrap();
+            router.add_node().unwrap();
+            assert_eq!(router.working(), 8, "{name}");
+        }
+    }
+}

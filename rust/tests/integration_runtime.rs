@@ -1,0 +1,174 @@
+//! Integration: the PJRT engine vs the scalar rust implementations.
+//!
+//! THE cross-language correctness signal: the AOT-compiled JAX/Pallas
+//! kernels must agree bit-for-bit with `algorithms::{jump_hash, Memento}`
+//! for every key. Requires `make artifacts` (tests are skipped with a
+//! notice if the artifacts are absent, so `cargo test` works standalone).
+
+use memento::algorithms::{jump_hash, ConsistentHasher, Memento, RemovalOrder};
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::runtime::{ArtifactCatalog, Engine};
+use memento::simulator::scenario;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if ArtifactCatalog::scan(dir).is_empty() {
+        eprintln!("[skip] no artifacts/ — run `make artifacts` for engine tests");
+        None
+    } else {
+        Some(dir)
+    }
+}
+
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+#[test]
+fn engine_jump_matches_scalar() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    assert!(engine.has_jump());
+    for n in [1u32, 2, 10, 1000, 1_000_000, 100_000_000] {
+        let ks = keys(4096, n as u64);
+        let got = engine.jump_lookup(&ks, n).expect("device lookup");
+        for (k, g) in ks.iter().zip(&got) {
+            assert_eq!(*g, jump_hash(*k, n), "key {k:#x} n {n}");
+        }
+    }
+    // Convergence bound is generous: fallback rate ≈ 0.
+    assert!(engine.stats.fallback_rate() < 0.001, "rate {}", engine.stats.fallback_rate());
+}
+
+#[test]
+fn engine_jump_handles_tails_and_large_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    // 10_000 keys: 2 full chunks of 4096 + a 1808-key tail (device),
+    // plus odd sizes below the dispatch threshold (scalar).
+    for len in [1usize, 37, 1023, 10_000] {
+        let ks = keys(len, 9);
+        let got = engine.jump_lookup(&ks, 12345).unwrap();
+        assert_eq!(got.len(), len);
+        for (k, g) in ks.iter().zip(&got) {
+            assert_eq!(*g, jump_hash(*k, 12345));
+        }
+    }
+}
+
+#[test]
+fn engine_memento_matches_scalar_across_removal_patterns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    assert!(engine.has_memento());
+    let mut rng = Xoshiro256::new(0xE2E);
+    for (w, removals) in [(100usize, 30usize), (1000, 650), (4096, 1000), (10_000, 2_000)] {
+        let mut m = Memento::new(w);
+        scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
+        let ks = keys(8192, w as u64);
+        let got = engine.memento_lookup(&m, &ks).expect("device memento");
+        for (k, g) in ks.iter().zip(&got) {
+            assert_eq!(*g, m.lookup(*k), "w={w} removals={removals} key {k:#x}");
+        }
+    }
+}
+
+#[test]
+fn engine_memento_stable_cluster_equals_jump() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    let m = Memento::new(1000);
+    let ks = keys(4096, 5);
+    let got = engine.memento_lookup(&m, &ks).unwrap();
+    for (k, g) in ks.iter().zip(&got) {
+        assert_eq!(*g, jump_hash(*k, 1000));
+    }
+}
+
+#[test]
+fn engine_memento_lifo_equals_plain_jump_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    let mut m = Memento::new(500);
+    for b in (300..500u32).rev() {
+        m.remove(b).unwrap();
+    }
+    assert_eq!(m.removed(), 0, "LIFO keeps R empty");
+    let ks = keys(4096, 6);
+    let via_memento = engine.memento_lookup(&m, &ks).unwrap();
+    let via_jump = engine.jump_lookup(&ks, 300).unwrap();
+    assert_eq!(via_memento, via_jump);
+}
+
+#[test]
+fn engine_histogram_matches_host_bincount() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    if !engine.has_hist() {
+        return;
+    }
+    let m = Memento::new(64);
+    let ks = keys(8192, 11);
+    let buckets: Vec<u32> = ks.iter().map(|&k| m.lookup(k)).collect();
+    let dev = engine.histogram(&buckets, 64).unwrap();
+    let mut host = vec![0u64; 64];
+    for &b in &buckets {
+        host[b as usize] += 1;
+    }
+    assert_eq!(dev, host);
+    assert_eq!(dev.iter().sum::<u64>(), 8192);
+}
+
+#[test]
+fn engine_handle_works_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle =
+        memento::runtime::EngineHandle::spawn(dir.to_path_buf()).expect("spawn engine thread");
+    assert!(handle.info().has_memento);
+    let mut m = Memento::new(256);
+    for b in [3u32, 99, 200, 17] {
+        m.remove(b).unwrap();
+    }
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let h = handle.clone();
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let ks = keys(4096, t);
+                let got = h.memento_lookup(m.clone(), ks.clone()).unwrap();
+                for (k, g) in ks.iter().zip(&got) {
+                    assert_eq!(*g, m.lookup(*k));
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let (device, fallback, dispatches) = handle.stats();
+    assert!(device > 0);
+    assert!(dispatches >= 4);
+    assert!((fallback as f64) / ((device + fallback) as f64) < 0.01);
+}
+
+#[test]
+fn engine_property_random_clusters_match_scalar() {
+    // Property-style sweep: random (w, removal-fraction) clusters.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine loads");
+    let mut rng = Xoshiro256::new(0x5EED);
+    for case in 0..12 {
+        let w = 2 + rng.next_below(5000) as usize;
+        let frac = rng.next_f64() * 0.9;
+        let removals = ((w as f64) * frac) as usize;
+        let mut m = Memento::new(w);
+        scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
+        let ks = keys(4096, case);
+        let got = engine.memento_lookup(&m, &ks).expect("device");
+        for (k, g) in ks.iter().zip(&got) {
+            assert_eq!(*g, m.lookup(*k), "case {case} w={w} frac={frac:.2}");
+        }
+    }
+}

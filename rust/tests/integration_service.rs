@@ -1,0 +1,120 @@
+//! Integration: the full service over real TCP — protocol, concurrent
+//! clients, failure + restore with live data migration.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::netserver::Client;
+
+fn start() -> (std::sync::Arc<Service>, memento::netserver::ServerHandle) {
+    let router = Router::new("memento", 8, 80, None).unwrap();
+    let svc = Service::new(router);
+    let handle = svc.serve("127.0.0.1:0", 64).unwrap();
+    (svc, handle)
+}
+
+#[test]
+fn tcp_protocol_roundtrip() {
+    let (_svc, server) = start();
+    let mut c = Client::connect(&server.addr()).unwrap();
+    let r = c.request("PUT user:42 alice").unwrap();
+    assert!(r.starts_with("OK node-"), "{r}");
+    let r = c.request("GET user:42").unwrap();
+    assert!(r.contains("alice"), "{r}");
+    let r = c.request("LOOKUP user:42").unwrap();
+    assert!(r.starts_with("BUCKET "), "{r}");
+    let r = c.request("EPOCH").unwrap();
+    assert_eq!(r, "EPOCH 0 WORKING 8");
+    assert_eq!(c.request("QUIT").unwrap(), "BYE");
+    server.shutdown();
+}
+
+#[test]
+fn failure_drill_over_tcp() {
+    let (_svc, server) = start();
+    let mut c = Client::connect(&server.addr()).unwrap();
+    for i in 0..200 {
+        c.request(&format!("PUT key{i} value{i}")).unwrap();
+    }
+    let r = c.request("KILL 5").unwrap();
+    assert!(r.starts_with("KILLED node-"), "{r}");
+    // All data still reachable.
+    for i in 0..200 {
+        let r = c.request(&format!("GET key{i}")).unwrap();
+        assert!(r.contains(&format!("value{i}")), "key{i}: {r}");
+    }
+    // Restore brings the node back on the same bucket.
+    let r = c.request("ADD").unwrap();
+    assert!(r.contains("BUCKET 5"), "{r}");
+    for i in 0..200 {
+        let r = c.request(&format!("GET key{i}")).unwrap();
+        assert!(r.contains(&format!("value{i}")), "after restore key{i}: {r}");
+    }
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("violations=0"), "{stats}");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_and_failures() {
+    let (_svc, server) = start();
+    let addr = server.addr();
+    // Writers fill the store while a chaos thread kills/restores nodes.
+    let writers: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for i in 0..150 {
+                    let r = c.request(&format!("PUT w{t}k{i} v{t}x{i}")).unwrap();
+                    assert!(r.starts_with("OK"), "{r}");
+                }
+            })
+        })
+        .collect();
+    let chaos = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        for round in 0..4 {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            let bucket = 1 + round;
+            let _ = c.request(&format!("KILL {bucket}"));
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            let _ = c.request("ADD");
+        }
+    });
+    for w in writers {
+        w.join().unwrap();
+    }
+    chaos.join().unwrap();
+    // Every write must be readable afterwards.
+    let mut c = Client::connect(&addr).unwrap();
+    for t in 0..4 {
+        for i in 0..150 {
+            let r = c.request(&format!("GET w{t}k{i}")).unwrap();
+            assert!(r.contains(&format!("v{t}x{i}")), "w{t}k{i}: {r}");
+        }
+    }
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("violations=0"), "{stats}");
+    server.shutdown();
+}
+
+#[test]
+fn config_file_drives_service() {
+    let toml = r#"
+[router]
+algorithm = "anchor"
+initial_nodes = 6
+capacity_factor = 10
+"#;
+    let cfg = memento::config::RouterConfig::from_toml(toml).unwrap();
+    let router = Router::new(
+        &cfg.algorithm,
+        cfg.initial_nodes,
+        cfg.initial_nodes * cfg.capacity_factor,
+        None,
+    )
+    .unwrap();
+    let svc = Service::new(router);
+    assert_eq!(svc.handle("EPOCH"), "EPOCH 0 WORKING 6");
+    let r = svc.handle("PUT x 1");
+    assert!(r.starts_with("OK"));
+}

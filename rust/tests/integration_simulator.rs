@@ -1,0 +1,175 @@
+//! Integration: the scenario driver reproduces the paper's *qualitative*
+//! claims at CI scale — who wins, where the crossovers sit, how memory
+//! scales. Absolute nanoseconds are hardware-dependent; shapes are not.
+
+use memento::algorithms::RemovalOrder;
+use memento::benchkit::BenchConfig;
+use memento::simulator::scenario::{self, ScenarioConfig};
+use std::time::Duration;
+
+fn cfg() -> ScenarioConfig {
+    ScenarioConfig {
+        keys: 20_000,
+        bench: BenchConfig {
+            warmup: Duration::from_millis(30),
+            samples: 10,
+            target_sample_time: Duration::from_millis(1),
+            max_total: Duration::from_millis(600),
+        },
+        ..Default::default()
+    }
+}
+
+/// Fig. 18's shape: stable-cluster memory — Jump < Memento ≪ Dx < Anchor.
+#[test]
+fn stable_memory_ordering() {
+    let cfg = cfg();
+    for w in [1_000usize, 10_000] {
+        let jump = scenario::stable_cell("jump", w, &cfg).state_bytes;
+        let memento = scenario::stable_cell("memento", w, &cfg).state_bytes;
+        let dx = scenario::stable_cell("dx", w, &cfg).state_bytes;
+        let anchor = scenario::stable_cell("anchor", w, &cfg).state_bytes;
+        assert!(jump <= memento, "w={w}");
+        assert!(memento < dx, "w={w}: memento {memento} !< dx {dx}");
+        assert!(dx < anchor, "w={w}: dx {dx} !< anchor {anchor}");
+        // Memento's stable-state memory must be O(1)-ish (empty map).
+        assert!(memento < 1_000, "w={w}: stable memento state {memento} bytes");
+    }
+}
+
+/// Fig. 17's *robust* shape: stable lookups — Memento ≈ Jump ("nearly
+/// identical performance", §V) at every size.
+///
+/// Deviation note (EXPERIMENTS.md §Deviations): the paper also shows Dx
+/// slowest in the stable scenario; that ordering is an artifact of the
+/// authors' Java Dx (per-lookup allocations). Our optimized Dx does
+/// E[a/w]=10 ~3ns probes and legitimately beats the ~ln(n) f64-division
+/// jump walk at a/w = 10 — its weakness appears exactly where Table I
+/// says: lookups grow linearly in a/w (sensitivity test below) while
+/// Memento stays flat.
+#[test]
+fn stable_lookup_ordering() {
+    let cfg = cfg();
+    for w in [100usize, 10_000] {
+        let jump = scenario::stable_cell("jump", w, &cfg).lookup.median_ns;
+        let memento = scenario::stable_cell("memento", w, &cfg).lookup.median_ns;
+        assert!(
+            memento < jump * 1.5,
+            "w={w}: memento {memento:.0}ns !≈ jump {jump:.0}ns"
+        );
+    }
+}
+
+/// Fig. 19/20's shape: one-shot 90% removals — LIFO keeps Memento at
+/// Jump-level memory; random removals grow it with r but keep it below
+/// Anchor (Θ(a) with a = 10w).
+#[test]
+fn oneshot_memory_shapes() {
+    let cfg = cfg();
+    let w = 5_000;
+    let best = scenario::oneshot_cell("memento", w, 0.9, RemovalOrder::Lifo, &cfg);
+    let worst = scenario::oneshot_cell("memento", w, 0.9, RemovalOrder::Random, &cfg);
+    let anchor = scenario::oneshot_cell("anchor", w, 0.9, RemovalOrder::Random, &cfg);
+    assert!(best.state_bytes < 1_000, "LIFO removals must not grow R");
+    assert!(worst.state_bytes > best.state_bytes * 10);
+    assert!(worst.state_bytes < anchor.state_bytes);
+    assert_eq!(best.working, 500);
+    assert_eq!(worst.working, 500);
+}
+
+/// Fig. 23's shape (best case / LIFO): Memento stays at Jump speed (the
+/// replacement set stays EMPTY under LIFO churn) while Dx degrades badly
+/// as the working set shrinks against its fixed capacity — "Dx is by far
+/// the worst performer" (§VIII-D).
+#[test]
+fn incremental_lookup_shape() {
+    let cfg = cfg();
+    let w = 20_000;
+    let fr = &[0.2, 0.9];
+    let memento = scenario::incremental_cells("memento", w, fr, RemovalOrder::Lifo, &cfg);
+    let dx = scenario::incremental_cells("dx", w, fr, RemovalOrder::Lifo, &cfg);
+    // Memento under LIFO keeps R empty: memory flat & tiny.
+    assert!(memento[1].state_bytes < 1_000, "LIFO must keep R empty");
+    // Dx at 90% removed probes ~a/w_live = 100 slots: far slower than
+    // memento (which is just jump over the shrunken b-array).
+    assert!(
+        dx[1].lookup.median_ns > memento[1].lookup.median_ns * 2.0,
+        "90% LIFO: dx {:.0}ns !≫ memento {:.0}ns",
+        dx[1].lookup.median_ns,
+        memento[1].lookup.median_ns
+    );
+    // Dx degrades with the removal fraction; memento-LIFO does not (much).
+    assert!(dx[1].lookup.median_ns > dx[0].lookup.median_ns * 2.0);
+
+    // Fig. 24 (worst case / random): memento's ln²(n/w) term shows up —
+    // lookups at 90% removed are measurably slower than at 20%.
+    let mw = scenario::incremental_cells(
+        "memento",
+        w,
+        &[0.2, 0.9],
+        RemovalOrder::Random,
+        &cfg,
+    );
+    assert!(
+        mw[1].lookup.median_ns > mw[0].lookup.median_ns * 1.3,
+        "degradation with removals missing: {:.0} vs {:.0}",
+        mw[1].lookup.median_ns,
+        mw[0].lookup.median_ns
+    );
+}
+
+/// §VIII-E's shape: Dx lookup grows ~linearly with a/w, Anchor's memory
+/// grows linearly, Memento is flat (independent of the ratio).
+#[test]
+fn sensitivity_shapes() {
+    let cfg = cfg();
+    let w = 2_000;
+    let dx5 = scenario::sensitivity_cell("dx", w, 5, 0.2, &cfg);
+    let dx50 = scenario::sensitivity_cell("dx", w, 50, 0.2, &cfg);
+    assert!(
+        dx50.lookup.median_ns > dx5.lookup.median_ns * 3.0,
+        "dx lookup must degrade with ratio: {:.0} vs {:.0}",
+        dx50.lookup.median_ns,
+        dx5.lookup.median_ns
+    );
+    let an5 = scenario::sensitivity_cell("anchor", w, 5, 0.2, &cfg);
+    let an50 = scenario::sensitivity_cell("anchor", w, 50, 0.2, &cfg);
+    assert!(an50.state_bytes > an5.state_bytes * 8, "anchor memory must scale with a");
+
+    let m5 = scenario::sensitivity_cell("memento", w, 5, 0.2, &cfg);
+    let m50 = scenario::sensitivity_cell("memento", w, 50, 0.2, &cfg);
+    assert_eq!(m5.state_bytes, m50.state_bytes, "memento is ratio-independent");
+}
+
+/// Table I empirics: Memento's traced outer-loop iterations stay within
+/// the Prop. VII.1 bound E[τ] ≤ 1 + ln(n/w) (with slack for variance).
+#[test]
+fn table1_outer_loop_bound() {
+    use memento::algorithms::ConsistentHasher;
+    use memento::hashing::prng::{Rng64, Xoshiro256};
+    let cfg = cfg();
+    let mut rng = Xoshiro256::new(42);
+    for (w, frac) in [(2_000usize, 0.5), (2_000, 0.9), (10_000, 0.65)] {
+        let mut m = memento::algorithms::Memento::new(w);
+        scenario::apply_removals(
+            &mut m,
+            (w as f64 * frac) as usize,
+            RemovalOrder::Random,
+            &mut rng,
+        );
+        let n = m.size() as f64;
+        let ww = m.working() as f64;
+        let bound = 1.0 + (n / ww).ln();
+        let trials = 20_000;
+        let mut total_outer = 0u64;
+        for _ in 0..trials {
+            total_outer += m.lookup_traced(rng.next_u64()).outer_iters as u64;
+        }
+        let mean = total_outer as f64 / trials as f64;
+        assert!(
+            mean <= bound * 1.15,
+            "w={w} frac={frac}: mean outer iters {mean:.2} > bound {bound:.2}"
+        );
+    }
+    let _ = cfg;
+}
