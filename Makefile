@@ -1,0 +1,24 @@
+# Convenience targets. The rust crate needs none of these — `cargo build`
+# is dependency-free; `artifacts` is only for the optional PJRT path.
+
+.PHONY: build test bench artifacts doc fmt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	cargo doc --no-deps
+
+fmt:
+	cargo fmt --all --check
+
+# AOT-compile the PJRT kernel variants (requires the python/JAX toolchain;
+# see python/compile/aot.py and DESIGN.md §5).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -1,13 +1,14 @@
 //! END-TO-END DRIVER: the full system on a realistic workload.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_distributed_kv
+//! cargo run --release --example e2e_distributed_kv
 //! ```
 //!
 //! Exercises every layer together (recorded in EXPERIMENTS.md §E2E):
 //!  L3 rust coordinator — router + membership + dynamic batcher + storage;
-//!  runtime            — AOT JAX/Pallas memento kernel via PJRT (if
-//!                       `artifacts/` exists; otherwise scalar, noted);
+//!  runtime            — the batched lookup engine (pure-Rust lockstep
+//!                       backend by default; PJRT with `--features pjrt`
+//!                       and `make artifacts`);
 //!  substrate          — in-process KV nodes with real data migration.
 //!
 //! Phases:
@@ -40,12 +41,15 @@ fn main() {
     // --- build the stack -------------------------------------------------
     let engine = match EngineHandle::spawn("artifacts".into()) {
         Ok(h) if h.info().has_memento => {
-            println!("[engine] PJRT memento variants loaded (max table {})",
-                h.info().max_memento_table);
+            println!("[engine] batched lookups on {}", h.info().platform);
             Some(h)
         }
-        _ => {
-            println!("[engine] no artifacts — scalar lookups (run `make artifacts`)");
+        Ok(_) => {
+            println!("[engine] backend has no memento kernel — scalar lookups");
+            None
+        }
+        Err(e) => {
+            println!("[engine] unavailable ({e}) — scalar lookups");
             None
         }
     };

@@ -1,14 +1,17 @@
-//! Batch-engine throughput: the L1/L2 contribution measured end-to-end.
+//! Batch-engine throughput: the batched-lookup contribution measured
+//! end-to-end.
 //!
-//! Compares keys/s of the scalar rust Memento lookup against the PJRT
-//! batched engine at several batch sizes and removal levels, plus the
-//! dynamic batcher's end-to-end latency. Run `make artifacts` first —
-//! without artifacts only the scalar rows are printed.
+//! Compares keys/s of the scalar rust Memento lookup against the batched
+//! engine at several batch sizes and removal levels, on both the
+//! convenience path (per-call snapshot build) and the steady-state path
+//! (per-epoch snapshot reuse — what the router dispatches). Runs against
+//! whatever backend `Engine::load` selects: the pure-Rust `rust-batch`
+//! backend by default, or PJRT with `--features pjrt` + `make artifacts`.
 
 use memento::algorithms::{ConsistentHasher, Memento, RemovalOrder};
 use memento::benchkit::report::Table;
 use memento::hashing::prng::{Rng64, Xoshiro256};
-use memento::runtime::{ArtifactCatalog, Engine};
+use memento::runtime::{Engine, EngineSnapshot};
 use memento::simulator::scenario;
 use std::path::Path;
 use std::time::Instant;
@@ -19,20 +22,9 @@ fn keys(n: usize, seed: u64) -> Vec<u64> {
 }
 
 fn main() {
-    let dir = Path::new("artifacts");
-    let have_engine = !ArtifactCatalog::scan(dir).is_empty();
-    let engine = if have_engine {
-        match Engine::load(dir) {
-            Ok(e) => Some(e),
-            Err(err) => {
-                eprintln!("engine load failed: {err}");
-                None
-            }
-        }
-    } else {
-        eprintln!("[note] artifacts/ missing — scalar rows only (`make artifacts`)");
-        None
-    };
+    let engine = Engine::load(Path::new("artifacts")).expect("engine backend");
+    let platform = engine.platform();
+    println!("engine backend: {platform}");
 
     let mut t = Table::new(
         "Batch engine vs scalar lookup throughput",
@@ -62,37 +54,57 @@ fn main() {
             format!("{scalar_ns:.1}"),
         ]);
 
-        // Device path at growing batch sizes.
-        if let Some(engine) = &engine {
-            for batch in [1usize << 12, 1 << 14, 1 << 16] {
-                let ks = keys(batch, w as u64 + 1);
-                // Warm once (compile cache, first-dispatch cost).
-                let _ = engine.memento_lookup(&m, &ks);
-                let reps = (1 << 18) / batch;
-                let t0 = Instant::now();
-                for _ in 0..reps.max(1) {
-                    std::hint::black_box(engine.memento_lookup(&m, &ks).unwrap());
-                }
-                let ns = t0.elapsed().as_nanos() as f64 / (reps.max(1) * batch) as f64;
-                t.push_row(vec![
-                    "pjrt-engine".into(),
-                    w.to_string(),
-                    removals.to_string(),
-                    batch.to_string(),
-                    format!("{:.0}", 1e9 / ns),
-                    format!("{ns:.1}"),
-                ]);
+        // Steady-state engine path: the per-epoch snapshot is built once
+        // (as the router does) and reused across dispatches.
+        let table = engine.table_size_for(m.size()).expect("table size");
+        let snap = EngineSnapshot::new(m.clone(), table);
+        for batch in [1usize << 12, 1 << 14, 1 << 16] {
+            let ks = keys(batch, w as u64 + 1);
+            // Warm once (first-dispatch cost).
+            let _ = engine.memento_lookup_snapshot(&snap, &ks);
+            let reps = ((1 << 18) / batch).max(1);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(engine.memento_lookup_snapshot(&snap, &ks).unwrap());
             }
+            let ns = t0.elapsed().as_nanos() as f64 / (reps * batch) as f64;
+            t.push_row(vec![
+                "engine-snap".into(),
+                w.to_string(),
+                removals.to_string(),
+                batch.to_string(),
+                format!("{:.0}", 1e9 / ns),
+                format!("{ns:.1}"),
+            ]);
         }
+
+        // Convenience path (clones + freezes the snapshot per call):
+        // measures the cost the steady path avoids.
+        let batch = 1usize << 14;
+        let ks = keys(batch, w as u64 + 2);
+        let _ = engine.memento_lookup(&m, &ks);
+        let reps = ((1 << 17) / batch).max(1);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(engine.memento_lookup(&m, &ks).unwrap());
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / (reps * batch) as f64;
+        t.push_row(vec![
+            "engine-oneshot".into(),
+            w.to_string(),
+            removals.to_string(),
+            batch.to_string(),
+            format!("{:.0}", 1e9 / ns),
+            format!("{ns:.1}"),
+        ]);
     }
     t.emit("batch_engine_throughput");
 
-    if let Some(engine) = &engine {
-        println!(
-            "engine fallback rate: {:.5} (device={} fallback={})",
-            engine.stats.fallback_rate(),
-            engine.stats.device_keys.load(std::sync::atomic::Ordering::Relaxed),
-            engine.stats.fallback_keys.load(std::sync::atomic::Ordering::Relaxed),
-        );
-    }
+    println!(
+        "engine fallback rate: {:.5} (device={} fallback={} dispatches={})",
+        engine.stats.fallback_rate(),
+        engine.stats.device_keys.load(std::sync::atomic::Ordering::Relaxed),
+        engine.stats.fallback_keys.load(std::sync::atomic::Ordering::Relaxed),
+        engine.stats.dispatches.load(std::sync::atomic::Ordering::Relaxed),
+    );
 }

@@ -32,6 +32,7 @@ pub struct BoundedLoad<A: ConsistentHasher> {
 }
 
 impl<A: ConsistentHasher> BoundedLoad<A> {
+    /// Wrap `inner` with capacity factor `c > 1`.
     pub fn new(inner: A, c: f64) -> Self {
         assert!(c > 1.0, "capacity factor must exceed 1");
         Self { inner, c, loads: HashMap::new(), owners: HashMap::new() }
@@ -174,6 +175,7 @@ impl<A: ConsistentHasher> BoundedLoad<A> {
         moved
     }
 
+    /// The wrapped algorithm.
     pub fn inner(&self) -> &A {
         &self.inner
     }

@@ -37,6 +37,7 @@ pub struct Dx {
 }
 
 impl Dx {
+    /// Initialize with overall capacity `a` and `w ≤ a` working buckets.
     pub fn new(a: usize, w: usize) -> Self {
         assert!(w >= 1, "need at least one working bucket");
         assert!(w <= a, "working set must fit capacity");
@@ -84,6 +85,7 @@ impl Dx {
         }
     }
 
+    /// The capacity `a` this cluster was frozen at.
     pub fn capacity(&self) -> usize {
         self.a as usize
     }

@@ -16,6 +16,7 @@ pub struct Jump {
 }
 
 impl Jump {
+    /// Build a cluster of `initial_node_count` working buckets.
     pub fn new(initial_node_count: usize) -> Self {
         assert!(initial_node_count >= 1);
         Self { n: u32::try_from(initial_node_count).expect("cluster size fits u32") }

@@ -62,6 +62,7 @@ impl Maglev {
         s
     }
 
+    /// Build with the paper's default table factor (m ≈ 101·w).
     pub fn with_defaults(initial_node_count: usize) -> Self {
         Self::new(initial_node_count, initial_node_count * TABLE_FACTOR)
     }

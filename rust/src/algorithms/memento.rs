@@ -71,6 +71,15 @@ impl Memento {
         }
     }
 
+    /// Whether lookups rehash through the built-in SplitMix64 mixer — the
+    /// only rehash the batched kernels (pure-Rust and PJRT) implement.
+    /// `false` under [`Memento::with_hasher`]; the engine then serves the
+    /// snapshot entirely on the exact scalar path.
+    #[inline]
+    pub fn uses_default_hasher(&self) -> bool {
+        self.hasher.is_none()
+    }
+
     /// Number of replacements `r = |R|`.
     #[inline]
     pub fn removed(&self) -> usize {

@@ -24,6 +24,7 @@ pub struct MultiProbe {
 }
 
 impl MultiProbe {
+    /// Build with an explicit probe count.
     pub fn new(initial_node_count: usize, probes: usize) -> Self {
         assert!(initial_node_count >= 1 && probes >= 1);
         let mut s = Self {
@@ -40,6 +41,7 @@ impl MultiProbe {
         s
     }
 
+    /// Build with the default probe count.
     pub fn with_defaults(initial_node_count: usize) -> Self {
         Self::new(initial_node_count, DEFAULT_PROBES)
     }

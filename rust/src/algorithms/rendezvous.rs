@@ -19,6 +19,7 @@ pub struct Rendezvous {
 }
 
 impl Rendezvous {
+    /// Build a cluster of `initial_node_count` working buckets.
     pub fn new(initial_node_count: usize) -> Self {
         assert!(initial_node_count >= 1);
         Self {

@@ -36,10 +36,12 @@ impl Default for ReplMap {
 }
 
 impl ReplMap {
+    /// An empty map at the minimum capacity.
     pub fn new() -> Self {
         Self { keys: vec![EMPTY; MIN_CAP], vals: vec![0; MIN_CAP], len: 0, mask: MIN_CAP - 1 }
     }
 
+    /// An empty map pre-sized for `n` entries without growth.
     pub fn with_capacity(n: usize) -> Self {
         let cap = (n * 4 / 3 + 1).next_power_of_two().max(MIN_CAP);
         Self { keys: vec![EMPTY; cap], vals: vec![0; cap], len: 0, mask: cap - 1 }
@@ -58,6 +60,7 @@ impl ReplMap {
         self.len
     }
 
+    /// Whether the map holds no replacements.
     #[inline(always)]
     pub fn is_empty(&self) -> bool {
         self.len == 0

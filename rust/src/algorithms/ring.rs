@@ -30,6 +30,7 @@ pub struct Ring {
 }
 
 impl Ring {
+    /// Build with an explicit virtual-node count per bucket.
     pub fn new(initial_node_count: usize, vnodes: usize) -> Self {
         assert!(initial_node_count >= 1 && vnodes >= 1);
         let mut s = Self {
@@ -46,6 +47,7 @@ impl Ring {
         s
     }
 
+    /// Build with the default virtual-node count.
     pub fn with_defaults(initial_node_count: usize) -> Self {
         Self::new(initial_node_count, DEFAULT_VNODES)
     }

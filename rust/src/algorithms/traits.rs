@@ -59,6 +59,7 @@ pub enum RemovalOrder {
 }
 
 impl RemovalOrder {
+    /// Human-readable label used in figure tables and CSVs.
     pub fn label(&self) -> &'static str {
         match self {
             RemovalOrder::Lifo => "best(LIFO)",

@@ -59,11 +59,13 @@ impl BenchConfig {
 /// One benchmark's statistics, in nanoseconds per iteration.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
     /// Median ns/iter (the headline number — robust to outliers).
     pub median_ns: f64,
-    /// 10th / 90th percentile of per-sample ns/iter.
+    /// 10th percentile of per-sample ns/iter.
     pub p10_ns: f64,
+    /// 90th percentile of per-sample ns/iter.
     pub p90_ns: f64,
     /// Mean ns/iter.
     pub mean_ns: f64,

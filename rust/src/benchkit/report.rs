@@ -9,12 +9,16 @@ use std::path::{Path, PathBuf};
 /// A rectangular report: named columns, string cells.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Report title (rendered as the table header).
     pub title: String,
+    /// Column names.
     pub columns: Vec<String>,
+    /// Data rows; each row has exactly one cell per column.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given columns.
     pub fn new(title: &str, columns: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -23,6 +27,7 @@ impl Table {
         }
     }
 
+    /// Append a row (arity-checked against the columns).
     pub fn push_row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
         self.rows.push(cells);

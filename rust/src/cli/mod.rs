@@ -31,6 +31,7 @@ pub struct Args {
 }
 
 impl ArgSpec {
+    /// A spec for `command` with the given one-line description.
     pub fn new(command: &'static str, about: &'static str) -> Self {
         Self { command, about, flags: Vec::new(), positionals: Vec::new() }
     }
@@ -154,18 +155,22 @@ impl ArgSpec {
 }
 
 impl Args {
+    /// The value of flag `name` (default or parsed); panics if the
+    /// flag was not declared.
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("flag --{name} not declared in the spec"))
     }
 
+    /// Parse the value of flag `name` into `T`.
     pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
         self.get(name)
             .parse()
             .map_err(|_| format!("flag --{name}: cannot parse '{}'", self.get(name)))
     }
 
+    /// Whether boolean switch `name` was given.
     pub fn switch(&self, name: &str) -> bool {
         *self
             .switches
@@ -173,6 +178,7 @@ impl Args {
             .unwrap_or_else(|| panic!("switch --{name} not declared in the spec"))
     }
 
+    /// Positional arguments, in order.
     pub fn positionals(&self) -> &[String] {
         &self.positionals
     }

@@ -18,14 +18,20 @@ use std::fmt;
 /// A parsed TOML-subset value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// 64-bit integer.
     Int(i64),
+    /// Float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Flat array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -33,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is a [`Value::Int`].
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -40,6 +47,7 @@ impl Value {
         }
     }
 
+    /// Float payload; integers widen ([`Value::Int`] accepted).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -48,6 +56,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -55,6 +64,7 @@ impl Value {
         }
     }
 
+    /// The array payload, if this is a [`Value::Array`].
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -66,7 +76,9 @@ impl Value {
 /// Parse failure with line information.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// 1-based line number of the failure.
     pub line: usize,
+    /// What went wrong.
     pub message: String,
 }
 

@@ -29,8 +29,11 @@ pub enum NodeState {
 /// Node metadata.
 #[derive(Debug, Clone)]
 pub struct NodeInfo {
+    /// Stable identity.
     pub id: NodeId,
+    /// Display name (defaults to `node-<id>`).
     pub name: String,
+    /// Current lifecycle state.
     pub state: NodeState,
 }
 

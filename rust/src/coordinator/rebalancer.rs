@@ -29,8 +29,11 @@ struct State {
 /// Summary of the audit so far.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RebalanceSummary {
+    /// Membership epochs audited so far.
     pub epochs_observed: u64,
+    /// Total tracer keys relocated across all observed epochs.
     pub relocated: u64,
+    /// Total collateral movements (bound violations).
     pub violations: u64,
     /// Relocated fraction of the tracer set over the last epoch.
     pub last_relocated_frac: f64,
@@ -75,6 +78,7 @@ impl Rebalancer {
         }
     }
 
+    /// Snapshot of the accumulated audit counters.
     pub fn summary(&self) -> RebalanceSummary {
         let st = self.state.lock().unwrap();
         RebalanceSummary {

@@ -7,29 +7,33 @@
 
 use super::membership::{Membership, NodeId};
 use crate::algorithms::{self, AlgoError, ConsistentHasher, Memento};
+use crate::error::Result;
 use crate::metrics::RouterMetrics;
 use crate::runtime::EngineHandle;
-use anyhow::{anyhow, Result};
 use std::sync::{Arc, RwLock};
 
 /// The placement algorithm: Memento is held concretely (the batched engine
 /// needs its dense-table snapshot), everything else behind the trait.
 pub enum Placement {
+    /// MementoHash, held concretely for dense-table snapshots.
     Memento(Memento),
+    /// Any other registry algorithm, behind the trait.
     Other(Box<dyn ConsistentHasher>),
 }
 
 impl Placement {
+    /// Build a placement by algorithm registry name.
     pub fn new(algorithm: &str, initial: usize, capacity: usize) -> Result<Self> {
         if algorithm == "memento" {
             Ok(Placement::Memento(Memento::new(initial)))
         } else {
             algorithms::by_name(algorithm, initial, capacity)
                 .map(Placement::Other)
-                .ok_or_else(|| anyhow!("unknown algorithm '{algorithm}'"))
+                .ok_or_else(|| crate::err!("unknown algorithm '{algorithm}'"))
         }
     }
 
+    /// The algorithm as a trait object.
     pub fn algo(&self) -> &dyn ConsistentHasher {
         match self {
             Placement::Memento(m) => m,
@@ -37,6 +41,7 @@ impl Placement {
         }
     }
 
+    /// The algorithm as a mutable trait object (resize operations).
     pub fn algo_mut(&mut self) -> &mut dyn ConsistentHasher {
         match self {
             Placement::Memento(m) => m,
@@ -66,6 +71,7 @@ pub struct Router {
     /// clone the replacement map, rebuild the dense table, or re-upload it
     /// — only membership changes invalidate this; see EXPERIMENTS.md §Perf).
     snapshot_cache: std::sync::Mutex<Option<(u64, std::sync::Arc<crate::runtime::engine::EngineSnapshot>)>>,
+    /// Lookup/epoch counters for this router instance.
     pub metrics: RouterMetrics,
 }
 
@@ -110,8 +116,8 @@ impl Router {
         (b, node)
     }
 
-    /// Batched lookup: uses the PJRT engine when available (Memento with a
-    /// fitting variant), otherwise the scalar path. Returns buckets.
+    /// Batched lookup: uses the batched engine when available (Memento
+    /// with a fitting table), otherwise the scalar path. Returns buckets.
     pub fn route_batch(&self, keys: &[u64]) -> Vec<u32> {
         if let Some(engine) = &self.engine {
             if let Some(snap) = self.engine_snapshot(engine) {

@@ -22,8 +22,11 @@ use std::sync::Arc;
 
 /// Shared service state.
 pub struct Service {
+    /// Placement + membership.
     pub router: Arc<Router>,
+    /// The simulated KV fleet behind the router.
     pub storage: Arc<StorageCluster>,
+    /// Live disruption/monotonicity auditor.
     pub rebalancer: Arc<Rebalancer>,
     /// Replication factor: PUT fans out to `replicas` distinct buckets,
     /// GET fails over along the replica set (reads survive failures even
@@ -32,10 +35,12 @@ pub struct Service {
 }
 
 impl Service {
+    /// Single-copy service (replication factor 1).
     pub fn new(router: Arc<Router>) -> Arc<Self> {
         Self::with_replicas(router, 1)
     }
 
+    /// Service with PUT fan-out to `replicas` distinct buckets.
     pub fn with_replicas(router: Arc<Router>, replicas: usize) -> Arc<Self> {
         let rebalancer = Arc::new(Rebalancer::new(&router, 4_096, 0x7EACE));
         Arc::new(Self {

@@ -13,30 +13,36 @@ use std::sync::{Mutex, RwLock};
 #[derive(Debug, Default)]
 pub struct StorageNode {
     data: Mutex<HashMap<u64, Vec<u8>>>,
-    /// Ops counters (load measurement for the balance figures).
+    /// GET counter (load measurement for the balance figures).
     pub gets: std::sync::atomic::AtomicU64,
+    /// PUT counter.
     pub puts: std::sync::atomic::AtomicU64,
 }
 
 impl StorageNode {
+    /// Store a record.
     pub fn put(&self, key: u64, value: Vec<u8>) {
         self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.data.lock().unwrap().insert(key, value);
     }
 
+    /// Read a record.
     pub fn get(&self, key: u64) -> Option<Vec<u8>> {
         self.gets.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.data.lock().unwrap().get(&key).cloned()
     }
 
+    /// Remove a record, returning its value.
     pub fn delete(&self, key: u64) -> Option<Vec<u8>> {
         self.data.lock().unwrap().remove(&key)
     }
 
+    /// Number of stored records.
     pub fn len(&self) -> usize {
         self.data.lock().unwrap().len()
     }
 
+    /// Whether the node holds no records.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -59,6 +65,7 @@ pub struct StorageCluster {
 }
 
 impl StorageCluster {
+    /// An empty fleet.
     pub fn new() -> Self {
         Self::default()
     }

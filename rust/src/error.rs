@@ -1,0 +1,276 @@
+//! `error` — the crate-wide error type (a dependency-free `anyhow`
+//! stand-in for the offline crate set).
+//!
+//! The [`Error`] enum carries context the way operators need to read it:
+//! every layer can wrap a lower failure with one line of "what was being
+//! attempted" via [`Context::context`], and [`std::fmt::Display`] renders
+//! the chain outermost-first (`load artifacts: parse foo.hlo.txt: …`).
+//!
+//! Construction idioms (mirroring `anyhow`):
+//!
+//! ```
+//! use memento::error::{Context, Result};
+//!
+//! fn parse_port(s: &str) -> memento::Result<u16> {
+//!     if s.is_empty() {
+//!         memento::bail!("empty port");
+//!     }
+//!     s.parse::<u16>().map_err(|_| memento::err!("bad port '{s}'"))
+//! }
+//!
+//! let e: Result<u16> = parse_port("x").context("reading config");
+//! assert_eq!(e.unwrap_err().to_string(), "reading config: bad port 'x'");
+//! ```
+
+use crate::algorithms::AlgoError;
+use std::fmt;
+
+/// Crate-wide result alias; the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// The crate error: a small context-carrying enum.
+///
+/// Variants are coarse on purpose — callers match on *kind* (I/O vs
+/// algorithm rejection vs config) and render the rest; fine-grained
+/// typed errors stay local to their layer (e.g.
+/// [`crate::algorithms::AlgoError`]).
+#[derive(Debug)]
+pub enum Error {
+    /// A free-form failure message (what [`crate::err!`] produces).
+    Msg(String),
+    /// An I/O failure, tagged with what was being attempted.
+    Io {
+        /// What the crate was doing when the I/O failed.
+        context: String,
+        /// The underlying I/O error.
+        source: std::io::Error,
+    },
+    /// A cluster-resize rejection bubbled up from an algorithm.
+    Algo(AlgoError),
+    /// A configuration failure (TOML parse or schema validation).
+    Config(String),
+    /// A lower error wrapped with one line of context
+    /// ([`Context::context`]).
+    Context {
+        /// The added context line.
+        context: String,
+        /// The wrapped error.
+        source: Box<Error>,
+    },
+}
+
+impl Error {
+    /// Build a free-form [`Error::Msg`] (prefer the [`crate::err!`] macro,
+    /// which accepts a format string).
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+
+    /// Wrap `self` with a context line; `Display` renders
+    /// `"{context}: {self}"`.
+    pub fn wrap(self, context: impl Into<String>) -> Self {
+        Error::Context { context: context.into(), source: Box::new(self) }
+    }
+
+    /// The innermost error message (the chain's root cause).
+    pub fn root_cause(&self) -> String {
+        match self {
+            Error::Context { source, .. } => source.root_cause(),
+            Error::Io { source, .. } => source.to_string(),
+            Error::Algo(e) => e.to_string(),
+            Error::Msg(m) | Error::Config(m) => m.clone(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Msg(m) => f.write_str(m),
+            Error::Io { context, source } => write!(f, "{context}: {source}"),
+            Error::Algo(e) => write!(f, "{e}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Context { context, source } => write!(f, "{context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            Error::Algo(e) => Some(e),
+            Error::Context { source, .. } => Some(source.as_ref()),
+            Error::Msg(_) | Error::Config(_) => None,
+        }
+    }
+}
+
+impl From<AlgoError> for Error {
+    fn from(e: AlgoError) -> Self {
+        Error::Algo(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io { context: "I/O".into(), source: e }
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Error::Msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Self {
+        Error::Msg(m.to_string())
+    }
+}
+
+/// `anyhow::Context`-style extension: attach a context line to the error
+/// of a `Result`, or turn an `Option::None` into a contextual error.
+pub trait Context<T> {
+    /// Wrap the failure with a fixed context line.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+
+    /// Wrap the failure with a lazily built context line (use when the
+    /// message formats values on the hot path).
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::Msg(msg.into()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::Msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (an `anyhow!` stand-in).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::Msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return `Err(err!(…))` from the enclosing function (a `bail!`
+/// stand-in).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into())
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = crate::err!("bucket {} of {total}", 3, total = 10);
+        assert_eq!(e.to_string(), "bucket 3 of 10");
+        assert!(matches!(e, Error::Msg(_)));
+    }
+
+    #[test]
+    fn bail_macro_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                crate::bail!("asked to fail");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "asked to fail");
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let e = io_fail().context("loading artifacts").unwrap_err();
+        let rendered = e.to_string();
+        assert!(rendered.starts_with("loading artifacts:"), "{rendered}");
+        assert!(rendered.contains("gone"), "{rendered}");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_success() {
+        let mut called = false;
+        let r: Result<u32> = Ok(1u32);
+        let v = r
+            .with_context(|| {
+                called = true;
+                "never".into()
+            })
+            .unwrap();
+        assert_eq!(v, 1);
+        assert!(!called, "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing variant").unwrap_err();
+        assert_eq!(e.to_string(), "missing variant");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn algo_errors_convert_and_chain() {
+        let e: Error = AlgoError::NotWorking(9).into();
+        assert!(e.to_string().contains("bucket 9"));
+        let wrapped = e.wrap("failing node");
+        assert_eq!(wrapped.to_string(), "failing node: bucket 9 is not working");
+        // The std error chain is preserved for `source()` walkers.
+        let mut depth = 0;
+        let mut cur: &dyn std::error::Error = &wrapped;
+        while let Some(next) = cur.source() {
+            depth += 1;
+            cur = next;
+        }
+        assert_eq!(depth, 2, "Context -> Algo -> AlgoError");
+    }
+
+    #[test]
+    fn nested_context_renders_as_a_chain() {
+        let e = io_fail()
+            .context("parse memento_b1024_n4096.hlo.txt")
+            .context("load artifacts")
+            .unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "load artifacts: parse memento_b1024_n4096.hlo.txt: I/O: gone"
+        );
+    }
+
+    #[test]
+    fn string_conversions() {
+        let e: Error = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+        let e: Error = String::from("owned").into();
+        assert_eq!(e.to_string(), "owned");
+        let e = Error::Config("bad key".into());
+        assert_eq!(e.to_string(), "config: bad key");
+    }
+}

@@ -7,7 +7,9 @@
 
 use super::Hasher64;
 
+/// FNV-1a 64-bit offset basis.
 pub const FNV_OFFSET_BASIS: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime.
 pub const FNV_PRIME: u64 = 0x100000001b3;
 
 /// One-shot FNV-1a over `bytes`. The `seed` is folded into the offset basis

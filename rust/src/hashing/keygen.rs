@@ -36,6 +36,7 @@ pub struct KeyStream {
 }
 
 impl KeyStream {
+    /// A seeded stream over the given distribution.
     pub fn new(dist: KeyDistribution, seed: u64) -> Self {
         let zipf = match &dist {
             KeyDistribution::Zipf { universe, alpha } => Some(Zipf::new(*universe, *alpha)),

@@ -63,6 +63,7 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seeded generator.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }

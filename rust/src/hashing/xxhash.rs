@@ -7,10 +7,15 @@
 
 use super::Hasher64;
 
+/// xxHash64 prime 1.
 pub const PRIME64_1: u64 = 0x9E3779B185EBCA87;
+/// xxHash64 prime 2.
 pub const PRIME64_2: u64 = 0xC2B2AE3D27D4EB4F;
+/// xxHash64 prime 3.
 pub const PRIME64_3: u64 = 0x165667B19E3779F9;
+/// xxHash64 prime 4.
 pub const PRIME64_4: u64 = 0x85EBCA77C2B2AE63;
+/// xxHash64 prime 5.
 pub const PRIME64_5: u64 = 0x27D4EB2F165667C5;
 
 #[inline(always)]

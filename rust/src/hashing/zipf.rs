@@ -23,6 +23,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over `n` ranks with exponent `alpha`.
     pub fn new(n: u64, alpha: f64) -> Self {
         assert!(n >= 1, "zipf needs at least one element");
         assert!(alpha > 0.0, "zipf exponent must be positive");

@@ -13,25 +13,30 @@
 //! * [`coordinator`] — an epoch-versioned cluster-membership + request-router
 //!   layer (the L3 system contribution): dynamic batching, failure handling,
 //!   rebalance auditing, and a TCP front-end.
-//! * [`runtime`] — the PJRT engine that loads the AOT-compiled JAX/Pallas
-//!   batched-lookup artifacts (`artifacts/*.hlo.txt`) and executes them from
-//!   the rust hot path (python is build-time only).
+//! * [`runtime`] — the batched-lookup engine: a pure-Rust lockstep-lane
+//!   backend by default, with the PJRT path (AOT-compiled JAX/Pallas
+//!   artifacts, `artifacts/*.hlo.txt`) behind the `pjrt` cargo feature;
+//!   python is build-time only.
 //! * [`simulator`] — the paper's benchmark tool: scenarios (stable, one-shot
 //!   removals, incremental removals, a/w sensitivity), exact memory
 //!   accounting and balance/disruption/monotonicity auditors.
-//! * [`benchkit`], [`testkit`], [`config`], [`cli`], [`metrics`],
+//! * [`error`], [`benchkit`], [`testkit`], [`config`], [`cli`], [`metrics`],
 //!   [`netserver`] — substrates built from scratch for the offline
-//!   environment (no criterion/proptest/tokio/serde/clap available).
+//!   environment (no anyhow/criterion/proptest/tokio/serde/clap available).
 //!
-//! See `DESIGN.md` for the per-experiment index mapping every figure and
-//! table of the paper to a bench target, and `EXPERIMENTS.md` for measured
-//! results.
+//! See `README.md` for the quickstart and layer map, `DESIGN.md` for the
+//! per-experiment index mapping every figure and table of the paper to a
+//! bench target, and `EXPERIMENTS.md` for how to run the benches and where
+//! results land.
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod hashing;
 pub mod metrics;
 pub mod netserver;
@@ -39,5 +44,4 @@ pub mod runtime;
 pub mod simulator;
 pub mod testkit;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::{Error, Result};

@@ -132,11 +132,11 @@ fn build_router(cfg: &RouterConfig, with_engine: bool) -> Result<Arc<Router>, St
     let engine = if with_engine && cfg.engine_min_batch > 0 {
         match EngineHandle::spawn(std::path::PathBuf::from(&cfg.artifacts_dir)) {
             Ok(h) if h.info().has_memento || h.info().has_jump => {
-                eprintln!("[engine] loaded PJRT variants from {}", cfg.artifacts_dir);
+                eprintln!("[engine] batched lookups on {}", h.info().platform);
                 Some(h)
             }
             Ok(_) => {
-                eprintln!("[engine] no artifacts in {} — scalar path only", cfg.artifacts_dir);
+                eprintln!("[engine] backend has no lookup kernels — scalar path only");
                 None
             }
             Err(e) => {
@@ -162,7 +162,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
         .flag("nodes", "0", "override: initial node count")
         .flag("bind", "", "override: TCP bind address")
         .flag("max-conns", "256", "maximum concurrent connections")
-        .switch("no-engine", "disable the PJRT batch engine")
+        .switch("no-engine", "disable the batched lookup engine")
         .positional("config", "optional router.toml");
     let args = match spec.parse(raw) {
         Ok(a) => a,
@@ -343,16 +343,23 @@ fn cmd_info(_raw: &[String]) -> i32 {
     let dir = std::path::Path::new("artifacts");
     let catalog = memento::runtime::ArtifactCatalog::scan(dir);
     if catalog.is_empty() {
-        println!("artifacts: none (run `make artifacts`)");
+        println!("artifacts: none (PJRT variants come from `make artifacts`)");
     } else {
         println!("artifacts:");
         for key in catalog.entries.keys() {
             println!("  {}", key.file_name());
         }
-        match Engine::load(dir) {
-            Ok(e) => println!("PJRT: {} (memento variants: {:?})", e.platform(), e.memento_variants()),
-            Err(e) => println!("PJRT: failed to load ({e})"),
+    }
+    match Engine::load(dir) {
+        Ok(e) => {
+            let variants = e.memento_variants();
+            if variants.is_empty() {
+                println!("engine: {} (dynamic table sizes)", e.platform());
+            } else {
+                println!("engine: {} (memento variants: {variants:?})", e.platform());
+            }
         }
+        Err(e) => println!("engine: failed to load ({e})"),
     }
     0
 }

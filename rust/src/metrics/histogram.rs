@@ -23,6 +23,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self { counts: vec![0; 64 * SUB], total: 0, min: u64::MAX, max: 0, sum: 0 }
     }
@@ -58,18 +59,22 @@ impl Histogram {
         self.sum += v as u128;
     }
 
+    /// Number of recorded values.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Smallest recorded value (0 when empty).
     pub fn min(&self) -> u64 {
         if self.total == 0 { 0 } else { self.min }
     }
 
+    /// Largest recorded value.
     pub fn max(&self) -> u64 {
         self.max
     }
 
+    /// Exact mean of recorded values.
     pub fn mean(&self) -> f64 {
         if self.total == 0 { 0.0 } else { self.sum as f64 / self.total as f64 }
     }

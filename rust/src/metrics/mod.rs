@@ -15,20 +15,24 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// A zeroed counter.
     pub const fn new() -> Self {
         Self { v: AtomicU64::new(0) }
     }
 
+    /// Add one.
     #[inline]
     pub fn inc(&self) {
         self.v.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n`.
     #[inline]
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -52,6 +56,7 @@ pub struct RouterMetrics {
 }
 
 impl RouterMetrics {
+    /// A zeroed bundle.
     pub fn new() -> Self {
         Self::default()
     }

@@ -142,6 +142,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Open a connection to a running server.
     pub fn connect(addr: &SocketAddr) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;

@@ -61,6 +61,7 @@ impl VariantKey {
 /// Discovered artifacts in a directory.
 #[derive(Debug, Clone, Default)]
 pub struct ArtifactCatalog {
+    /// Discovered variants and their file paths.
     pub entries: BTreeMap<VariantKey, PathBuf>,
 }
 
@@ -81,6 +82,7 @@ impl ArtifactCatalog {
         Self { entries }
     }
 
+    /// Whether no artifacts were discovered.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -1,0 +1,324 @@
+//! `batch` — the pure-Rust batched-lookup backend (the default).
+//!
+//! A software twin of the PJRT device kernels, runnable everywhere with no
+//! artifacts and no external crates:
+//!
+//! * the replacement set is consumed in its dense **struct-of-arrays**
+//!   form ([`EngineSnapshot::dense`]: `table[b] = c`, one flat `u32` array
+//!   instead of the scalar path's `⟨b → c, p⟩` tuple map), so the hot loop
+//!   touches one cache-friendly slab;
+//! * the Jump walk — the dominant per-key cost — runs over **lockstep
+//!   lanes**: every lane of a chunk executes the same fixed instruction
+//!   sequence per round with conditional-select updates (no data-dependent
+//!   branch in the lane body), the same masked-SIMD adaptation the device
+//!   kernels use;
+//! * loops are **bounded** ([`JUMP_BOUND`], [`WALK_BOUND`], chosen to
+//!   cover p999.99 of real iteration counts); lanes that do not converge
+//!   within the bound are re-resolved on the exact scalar path and counted
+//!   in [`EngineStats::fallback_keys`], so results are bit-exact with
+//!   [`crate::algorithms::Memento`] for every key.
+
+use super::engine::{EngineInfo, EngineSnapshot, EngineStats, LookupBackend};
+use crate::algorithms::memento::NO_REPLACEMENT;
+use crate::algorithms::{jump_hash, rehash, ConsistentHasher};
+use crate::error::Result;
+use std::sync::atomic::Ordering;
+
+/// Keys per software dispatch (one lane group; also the unit the
+/// [`EngineStats::dispatches`] counter ticks on).
+pub const CHUNK: usize = 1024;
+
+/// Round bound of the lockstep Jump walk. Jump takes ~ln(n) rounds in
+/// expectation (≈ 21 at n = 10⁹) with an exponentially decaying tail, so
+/// 96 rounds cover any realistic key; stragglers fall back.
+pub const JUMP_BOUND: usize = 96;
+
+/// Total table-probe budget of one replacement walk (outer hops + inner
+/// chain steps, Prop. VII.1/VII.2: O(ln²(n/w)) expected); walks that
+/// exhaust it fall back.
+pub const WALK_BOUND: usize = 128;
+
+/// Reusable lane-state buffers for [`jump_lockstep`]. Callers hoist one
+/// instance out of their per-chunk loop so the 24 KiB of lane state is
+/// zero-initialized once per API call, not once per chunk (only the
+/// active `[..len]` prefix is rewritten per chunk).
+struct LaneState {
+    state: [u64; CHUNK],
+    b: [i64; CHUNK],
+    j: [i64; CHUNK],
+}
+
+impl LaneState {
+    fn new() -> Self {
+        LaneState { state: [0; CHUNK], b: [0; CHUNK], j: [0; CHUNK] }
+    }
+}
+
+/// One lockstep Jump round-set over `keys.len()` ≤ [`CHUNK`] lanes.
+///
+/// Per lane this replays [`jump_hash`]'s exact iteration sequence, so a
+/// converged lane is bit-identical to the scalar result. Writes each
+/// lane's bucket to `b_out` and its convergence flag to `ok`; returns the
+/// number of non-converged lanes.
+fn jump_lockstep(
+    keys: &[u64],
+    n: u32,
+    lanes: &mut LaneState,
+    b_out: &mut [u32],
+    ok: &mut [bool],
+) -> usize {
+    debug_assert!(n >= 1);
+    debug_assert!(keys.len() <= CHUNK);
+    let len = keys.len();
+    let n_i = n as i64;
+    let LaneState { state, b, j } = lanes;
+    state[..len].copy_from_slice(keys);
+    b[..len].fill(-1);
+    j[..len].fill(0);
+    for _ in 0..JUMP_BOUND {
+        let mut active = 0usize;
+        for i in 0..len {
+            // Conditional-select lane body: inactive lanes re-store their
+            // old state instead of branching around the work.
+            let act = j[i] < n_i;
+            let s_new = state[i].wrapping_mul(2862933555777941757).wrapping_add(1);
+            let s = if act { s_new } else { state[i] };
+            let bb = if act { j[i] } else { b[i] };
+            let j_new =
+                (((bb + 1) as f64) * ((1i64 << 31) as f64 / (((s >> 33) + 1) as f64))) as i64;
+            let jj = if act { j_new } else { j[i] };
+            state[i] = s;
+            b[i] = bb;
+            j[i] = jj;
+            active += act as usize;
+        }
+        if active == 0 {
+            break;
+        }
+    }
+    let mut stragglers = 0usize;
+    for i in 0..len {
+        let done = j[i] >= n_i;
+        ok[i] = done;
+        b_out[i] = if done { b[i] as u32 } else { 0 };
+        stragglers += usize::from(!done);
+    }
+    stragglers
+}
+
+/// Bounded replacement walk of one lane (Alg. 4 lines 3–9 against the
+/// dense table). Transition-for-transition identical to
+/// [`Memento::lookup_scalar`][crate::algorithms::Memento::lookup_scalar];
+/// returns `None` when the probe budget is exhausted (exact scalar
+/// fallback takes over).
+#[inline]
+fn walk_lane(table: &[u32], key: u64, start: u32) -> Option<u32> {
+    let mut b = start;
+    let mut probes = 0usize;
+    loop {
+        probes += 1;
+        if probes > WALK_BOUND {
+            return None;
+        }
+        let c = table[b as usize];
+        if c == NO_REPLACEMENT {
+            return Some(b);
+        }
+        let w_b = c;
+        let mut d = (rehash(key, b as u64) % w_b as u64) as u32;
+        loop {
+            probes += 1;
+            if probes > WALK_BOUND {
+                return None;
+            }
+            let u = table[d as usize];
+            if u == NO_REPLACEMENT || u < w_b {
+                break;
+            }
+            d = u;
+        }
+        b = d;
+    }
+}
+
+/// The pure-Rust batched backend (stateless: all per-epoch state lives in
+/// the caller's [`EngineSnapshot`]).
+#[derive(Debug, Default)]
+pub struct BatchEngine;
+
+impl BatchEngine {
+    /// Build the backend.
+    pub fn new() -> Self {
+        BatchEngine
+    }
+}
+
+impl LookupBackend for BatchEngine {
+    fn platform(&self) -> String {
+        format!("rust-batch (chunk={CHUNK})")
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            platform: self.platform(),
+            has_jump: true,
+            has_memento: true,
+            has_hist: true,
+            max_memento_table: 0,
+            memento_tables: Vec::new(),
+            dynamic_tables: true,
+        }
+    }
+
+    fn jump_lookup(&self, keys: &[u64], n: u32, stats: &EngineStats) -> Result<Vec<u32>> {
+        if n == 0 {
+            crate::bail!("jump lookup needs n ≥ 1");
+        }
+        let mut out = Vec::with_capacity(keys.len());
+        let mut lanes = LaneState::new();
+        let mut b = [0u32; CHUNK];
+        let mut ok = [false; CHUNK];
+        for chunk in keys.chunks(CHUNK) {
+            let stragglers = jump_lockstep(chunk, n, &mut lanes, &mut b, &mut ok);
+            stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, &k) in chunk.iter().enumerate() {
+                out.push(if ok[i] { b[i] } else { jump_hash(k, n) });
+            }
+            stats
+                .device_keys
+                .fetch_add((chunk.len() - stragglers) as u64, Ordering::Relaxed);
+            stats.fallback_keys.fetch_add(stragglers as u64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    fn memento_lookup_snapshot(
+        &self,
+        snap: &EngineSnapshot,
+        keys: &[u64],
+        stats: &EngineStats,
+    ) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(keys.len());
+        if snap.scalar_only {
+            // Non-default rehash: the kernel would diverge — serve the
+            // whole batch on the exact scalar path.
+            out.extend(keys.iter().map(|&k| snap.memento.lookup(k)));
+            stats.fallback_keys.fetch_add(keys.len() as u64, Ordering::Relaxed);
+            return Ok(out);
+        }
+        let table = &snap.dense[..];
+        let mut lanes = LaneState::new();
+        let mut b = [0u32; CHUNK];
+        let mut ok = [false; CHUNK];
+        for chunk in keys.chunks(CHUNK) {
+            jump_lockstep(chunk, snap.n, &mut lanes, &mut b, &mut ok);
+            stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            let mut device = 0u64;
+            let mut fallback = 0u64;
+            for (i, &k) in chunk.iter().enumerate() {
+                let resolved = if ok[i] { walk_lane(table, k, b[i]) } else { None };
+                match resolved {
+                    Some(bucket) => {
+                        out.push(bucket);
+                        device += 1;
+                    }
+                    None => {
+                        out.push(snap.memento.lookup(k));
+                        fallback += 1;
+                    }
+                }
+            }
+            stats.device_keys.fetch_add(device, Ordering::Relaxed);
+            stats.fallback_keys.fetch_add(fallback, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    fn histogram(
+        &self,
+        buckets: &[u32],
+        n_buckets: usize,
+        stats: &EngineStats,
+    ) -> Result<Vec<u64>> {
+        let mut acc = vec![0u64; n_buckets];
+        for &b in buckets {
+            if let Some(slot) = acc.get_mut(b as usize) {
+                *slot += 1;
+            }
+        }
+        stats.dispatches.fetch_add(buckets.len().div_ceil(CHUNK) as u64, Ordering::Relaxed);
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::ConsistentHasher;
+    use crate::algorithms::Memento;
+    use crate::hashing::prng::{Rng64, Xoshiro256};
+
+    fn keys(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn lockstep_jump_replays_scalar_exactly() {
+        let mut lanes = LaneState::new();
+        let mut b = [0u32; CHUNK];
+        let mut ok = [false; CHUNK];
+        for n in [1u32, 2, 7, 1000, 1_000_000] {
+            let ks = keys(CHUNK, n as u64);
+            let stragglers = jump_lockstep(&ks, n, &mut lanes, &mut b, &mut ok);
+            assert_eq!(stragglers, 0, "n={n}");
+            for (i, &k) in ks.iter().enumerate() {
+                assert!(ok[i]);
+                assert_eq!(b[i], jump_hash(k, n), "n={n} key {k:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn walk_matches_scalar_on_removed_clusters() {
+        let mut m = Memento::new(64);
+        for bb in [9u32, 30, 31, 17, 5, 60, 41] {
+            m.remove(bb).unwrap();
+        }
+        let table = m.dense_table();
+        for k in keys(4096, 3) {
+            let start = jump_hash(k, m.size() as u32);
+            assert_eq!(walk_lane(&table, k, start), Some(m.lookup(k)));
+        }
+    }
+
+    #[test]
+    fn partial_and_tiny_chunks() {
+        let be = BatchEngine::new();
+        let stats = EngineStats::default();
+        for len in [1usize, 3, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 17] {
+            let ks = keys(len, len as u64);
+            let got = be.jump_lookup(&ks, 12345, &stats).unwrap();
+            assert_eq!(got.len(), len);
+            for (k, g) in ks.iter().zip(&got) {
+                assert_eq!(*g, jump_hash(*k, 12345));
+            }
+        }
+        assert!(stats.fallback_rate() < 1e-6);
+    }
+
+    #[test]
+    fn jump_rejects_empty_cluster() {
+        let be = BatchEngine::new();
+        let stats = EngineStats::default();
+        assert!(be.jump_lookup(&[1, 2], 0, &stats).is_err());
+    }
+
+    #[test]
+    fn histogram_counts_and_drops_out_of_range() {
+        let be = BatchEngine::new();
+        let stats = EngineStats::default();
+        let h = be.histogram(&[0, 1, 1, 2, 9, u32::MAX], 3, &stats).unwrap();
+        assert_eq!(h, vec![1, 2, 1]);
+    }
+}

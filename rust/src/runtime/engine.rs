@@ -1,11 +1,16 @@
-//! The PJRT engine: compile-once, execute-many batched lookups.
+//! The engine frontend: one API over swappable batched-lookup backends.
+//!
+//! [`Engine`] owns a [`LookupBackend`] — the pure-Rust
+//! [`crate::runtime::batch::BatchEngine`] by default, or (with the `pjrt`
+//! cargo feature and compiled artifacts on disk) the PJRT device path —
+//! plus the [`EngineStats`] fallback accounting shared by both.
+//! [`EngineHandle`] wraps an engine in a dedicated worker thread so the
+//! rest of the system can share it (`PJRT` clients are not `Sync`; the
+//! pure-Rust backend simply inherits the same ownership model).
 
-use super::artifacts::{ArtifactCatalog, VariantKey};
 use crate::algorithms::memento::NO_REPLACEMENT;
-use crate::algorithms::Memento;
-use crate::algorithms::{jump_hash, ConsistentHasher};
-use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use crate::algorithms::{ConsistentHasher, Memento};
+use crate::error::Result;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,15 +19,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// iteration counts).
 #[derive(Debug, Default)]
 pub struct EngineStats {
-    /// Keys resolved on-device.
+    /// Keys resolved by the batched kernel (device or lane-parallel Rust).
     pub device_keys: AtomicU64,
     /// Keys re-resolved on the scalar path (non-converged lanes + tails).
     pub fallback_keys: AtomicU64,
-    /// Device dispatches.
+    /// Kernel dispatches (one per processed chunk).
     pub dispatches: AtomicU64,
 }
 
 impl EngineStats {
+    /// Fraction of keys that needed the scalar path.
     pub fn fallback_rate(&self) -> f64 {
         let d = self.device_keys.load(Ordering::Relaxed);
         let f = self.fallback_keys.load(Ordering::Relaxed);
@@ -30,158 +36,207 @@ impl EngineStats {
     }
 }
 
-/// A compiled executable plus its variant shape.
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-}
-
 /// An immutable per-epoch snapshot of a Memento cluster prepared for the
 /// engine: the scalar algorithm (exact fallback path) plus its dense
-/// replacement table already padded to a compiled variant's size.
+/// struct-of-arrays replacement table, padded to the backend's table size.
 ///
 /// Built once per membership epoch by the router (perf: the steady-state
 /// dispatch path does zero table rebuilds — see EXPERIMENTS.md §Perf).
 pub struct EngineSnapshot {
+    /// Unique id, assigned at construction. Backends key per-snapshot
+    /// caches (e.g. the PJRT table-upload cache) on this instead of the
+    /// table's address: a freed snapshot's allocation can be reused by
+    /// the next epoch's same-sized table, so pointer keys can alias
+    /// across epochs (ABA) — ids cannot.
+    pub id: u64,
+    /// The scalar algorithm (exact fallback path).
     pub memento: Memento,
     /// b-array size n.
     pub n: u32,
     /// Dense table padded to a variant table size with [`NO_REPLACEMENT`].
     pub dense: Vec<u32>,
+    /// True when `memento` rehashes through a non-default
+    /// [`crate::hashing::Hasher64`]: the batched kernels implement only the
+    /// default SplitMix64 mixer, so every key of such a snapshot takes the
+    /// exact scalar path (counted as fallback).
+    pub scalar_only: bool,
 }
 
 impl EngineSnapshot {
     /// Freeze `m`, padding the dense table to `table_size` (≥ m.size()).
     pub fn new(m: Memento, table_size: usize) -> Self {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
         assert!(table_size >= m.size(), "table variant too small");
         let mut dense = m.dense_table();
         dense.resize(table_size, NO_REPLACEMENT);
         let n = m.size() as u32;
-        Self { memento: m, n, dense }
+        let scalar_only = !m.uses_default_hasher();
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        Self { id, memento: m, n, dense, scalar_only }
     }
 }
 
-/// The batched-lookup engine. Lives on a single thread (PJRT wrapper is
-/// not Sync) — share via [`EngineHandle`].
+/// Capabilities reported by a backend at startup.
+#[derive(Debug, Clone, Default)]
+pub struct EngineInfo {
+    /// Human-readable backend/platform name (diagnostics).
+    pub platform: String,
+    /// Whether batched Jump lookups are available.
+    pub has_jump: bool,
+    /// Whether batched Memento lookups are available.
+    pub has_memento: bool,
+    /// Whether device-side histograms are available.
+    pub has_hist: bool,
+    /// Largest compiled memento table variant (0 = none compiled).
+    pub max_memento_table: usize,
+    /// Compiled memento table sizes, ascending (for snapshot padding).
+    pub memento_tables: Vec<usize>,
+    /// Whether the backend accepts *any* table size (the pure-Rust batch
+    /// backend; fixed-shape compiled backends leave this `false`).
+    pub dynamic_tables: bool,
+}
+
+impl EngineInfo {
+    /// Smallest usable table size for a cluster of size `n`: the smallest
+    /// compiled variant that fits, or `n` itself on dynamic backends.
+    pub fn table_size_for(&self, n: usize) -> Option<usize> {
+        if let Some(t) = self.memento_tables.iter().copied().find(|t| *t >= n) {
+            return Some(t);
+        }
+        if self.dynamic_tables {
+            Some(n.max(1))
+        } else {
+            None
+        }
+    }
+}
+
+/// A batched-lookup backend: the contract the engine frontend, router and
+/// benches program against.
+///
+/// Exactness contract: every method must return *bit-exact* results with
+/// the scalar algorithms ([`crate::algorithms::jump_hash`],
+/// [`Memento`]) for every key — backends with bounded kernel loops
+/// re-resolve non-converged lanes on the scalar path and account for them
+/// in the passed [`EngineStats`].
+pub trait LookupBackend {
+    /// Platform string (diagnostics).
+    fn platform(&self) -> String;
+
+    /// Capability report.
+    fn info(&self) -> EngineInfo;
+
+    /// Batched Jump lookup over `keys` against `n` working buckets.
+    fn jump_lookup(&self, keys: &[u64], n: u32, stats: &EngineStats) -> Result<Vec<u32>>;
+
+    /// Batched Memento lookup against a prepared per-epoch snapshot.
+    fn memento_lookup_snapshot(
+        &self,
+        snap: &EngineSnapshot,
+        keys: &[u64],
+        stats: &EngineStats,
+    ) -> Result<Vec<u32>>;
+
+    /// Balance histogram of bucket assignments (ids ≥ `n_buckets` are
+    /// dropped, matching the device kernel's padding semantics).
+    fn histogram(&self, buckets: &[u32], n_buckets: usize, stats: &EngineStats)
+        -> Result<Vec<u64>>;
+
+    /// Compiled (batch, table) memento variants, for diagnostics; empty on
+    /// dynamic backends.
+    fn memento_variants(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+}
+
+/// The batched-lookup engine: a [`LookupBackend`] plus shared stats.
 pub struct Engine {
-    client: xla::PjRtClient,
-    jump: BTreeMap<usize, Compiled>,
-    memento: BTreeMap<(usize, usize), Compiled>,
-    hist: BTreeMap<(usize, usize), Compiled>,
-    /// Size-1 upload cache: the table literal of the most recent snapshot
-    /// (keyed by snapshot address + epoch shape). Steady-state dispatches
-    /// re-use it instead of re-uploading ~512 KiB per call.
-    table_cache: std::cell::RefCell<Option<(usize, u32, xla::Literal)>>,
+    backend: Box<dyn LookupBackend>,
+    /// Execution counters (fallback accounting for all backends).
     pub stats: EngineStats,
 }
 
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Engine {
-    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    /// The default engine: the pure-Rust batch backend (always available,
+    /// no artifacts needed).
+    pub fn new() -> Self {
+        Self::with_backend(Box::new(crate::runtime::batch::BatchEngine::new()))
+    }
+
+    /// Build an engine over an explicit backend.
+    pub fn with_backend(backend: Box<dyn LookupBackend>) -> Self {
+        Self { backend, stats: EngineStats::default() }
+    }
+
+    /// Build the best available backend for `dir`.
     ///
-    /// An empty/missing directory yields an engine with no variants: all
-    /// lookups then take the scalar path (`has_*` report availability).
+    /// With the `pjrt` feature enabled *and* compiled artifacts present in
+    /// `dir`, this is the PJRT device path (falling back to the pure-Rust
+    /// backend, with a warning, if the PJRT client cannot start). In every
+    /// other configuration — including a missing or empty `dir` — it is
+    /// the pure-Rust batch backend, so the engine works everywhere.
     pub fn load(dir: &Path) -> Result<Self> {
-        let catalog = ArtifactCatalog::scan(dir);
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        let mut jump = BTreeMap::new();
-        let mut memento = BTreeMap::new();
-        let mut hist = BTreeMap::new();
-        for (key, path) in &catalog.entries {
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
-            let compiled = Compiled { exe };
-            match key {
-                VariantKey::Jump { batch } => {
-                    jump.insert(*batch, compiled);
-                }
-                VariantKey::Memento { batch, table } => {
-                    memento.insert((*batch, *table), compiled);
-                }
-                VariantKey::Hist { batch, table } => {
-                    hist.insert((*batch, *table), compiled);
+        #[cfg(feature = "pjrt")]
+        {
+            if !crate::runtime::ArtifactCatalog::scan(dir).is_empty() {
+                match crate::runtime::pjrt::PjrtEngine::load(dir) {
+                    Ok(be) => return Ok(Self::with_backend(Box::new(be))),
+                    Err(e) => {
+                        eprintln!("[engine] PJRT backend unavailable ({e}) — using rust-batch");
+                    }
                 }
             }
         }
-        Ok(Self {
-            client,
-            jump,
-            memento,
-            hist,
-            table_cache: std::cell::RefCell::new(None),
-            stats: EngineStats::default(),
-        })
+        let _ = dir;
+        Ok(Self::new())
     }
 
     /// Platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
+    /// Capability report of the active backend.
+    pub fn info(&self) -> EngineInfo {
+        self.backend.info()
+    }
+
+    /// Whether batched Jump lookups are available.
     pub fn has_jump(&self) -> bool {
-        !self.jump.is_empty()
+        self.backend.info().has_jump
     }
 
+    /// Whether batched Memento lookups are available.
     pub fn has_memento(&self) -> bool {
-        !self.memento.is_empty()
+        self.backend.info().has_memento
     }
 
+    /// Whether histograms are available.
     pub fn has_hist(&self) -> bool {
-        !self.hist.is_empty()
+        self.backend.info().has_hist
     }
 
-    /// Available memento variants (batch, table).
+    /// Compiled memento variants (batch, table); empty on the pure-Rust
+    /// backend, whose shapes are dynamic.
     pub fn memento_variants(&self) -> Vec<(usize, usize)> {
-        self.memento.keys().copied().collect()
+        self.backend.memento_variants()
     }
 
-    /// Batched Jump lookup: exact ([`jump_hash`] resolves non-converged
-    /// lanes and the non-multiple tail).
-    pub fn jump_lookup(&self, keys: &[u64], n: u32) -> Result<Vec<u32>> {
-        let Some((&batch, compiled)) = self.jump.iter().next_back() else {
-            return Err(anyhow!("no jump artifact loaded"));
-        };
-        let mut out = Vec::with_capacity(keys.len());
-        let mut padded = vec![0u64; batch];
-        for chunk in keys.chunks(batch) {
-            if chunk.len() < batch / 4 {
-                // Tiny tail: scalar is cheaper than a padded dispatch.
-                out.extend(chunk.iter().map(|&k| jump_hash(k, n)));
-                self.stats.fallback_keys.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                continue;
-            }
-            padded[..chunk.len()].copy_from_slice(chunk);
-            padded[chunk.len()..].fill(0);
-            let keys_lit = xla::Literal::vec1(&padded);
-            let n_lit = xla::Literal::scalar(n);
-            let result = compiled
-                .exe
-                .execute::<xla::Literal>(&[keys_lit, n_lit])
-                .map_err(|e| anyhow!("jump execute: {e}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("jump sync: {e}"))?;
-            let (buckets, ok) = result.to_tuple2().map_err(|e| anyhow!("jump tuple: {e}"))?;
-            let buckets: Vec<u32> = buckets.to_vec().map_err(|e| anyhow!("jump vec: {e}"))?;
-            let ok: Vec<u32> = ok.to_vec().map_err(|e| anyhow!("jump ok vec: {e}"))?;
-            self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
-            for (i, &k) in chunk.iter().enumerate() {
-                if ok[i] != 0 {
-                    out.push(buckets[i]);
-                    self.stats.device_keys.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    out.push(jump_hash(k, n));
-                    self.stats.fallback_keys.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Smallest compiled table size that fits a cluster of size `n`.
+    /// Smallest usable table size that fits a cluster of size `n`.
     pub fn table_size_for(&self, n: usize) -> Option<usize> {
-        self.memento.keys().map(|(_b, t)| *t).filter(|t| *t >= n).min()
+        self.backend.info().table_size_for(n)
+    }
+
+    /// Batched Jump lookup: exact ([`crate::algorithms::jump_hash`]
+    /// resolves non-converged lanes).
+    pub fn jump_lookup(&self, keys: &[u64], n: u32) -> Result<Vec<u32>> {
+        self.backend.jump_lookup(keys, n, &self.stats)
     }
 
     /// Batched Memento lookup against a one-shot snapshot (convenience
@@ -190,121 +245,33 @@ impl Engine {
     pub fn memento_lookup(&self, snapshot: &Memento, keys: &[u64]) -> Result<Vec<u32>> {
         let table = self
             .table_size_for(snapshot.size())
-            .ok_or_else(|| anyhow!("no memento artifact with table ≥ {}", snapshot.size()))?;
+            .ok_or_else(|| crate::err!("no memento table variant ≥ {}", snapshot.size()))?;
         let snap = EngineSnapshot::new(snapshot.clone(), table);
-        self.memento_lookup_snapshot(&snap, keys)
+        self.backend.memento_lookup_snapshot(&snap, keys, &self.stats)
     }
 
     /// Batched Memento lookup against a prepared per-epoch snapshot
     /// (DESIGN.md §Hardware-Adaptation): zero table rebuilds on the steady
-    /// path, and the device upload of the table literal is cached across
-    /// dispatches of the same snapshot. Exact: non-converged lanes and
-    /// small tails fall back to the scalar algorithm.
+    /// path. Exact: non-converged lanes fall back to the scalar algorithm.
     pub fn memento_lookup_snapshot(
         &self,
         snap: &EngineSnapshot,
         keys: &[u64],
     ) -> Result<Vec<u32>> {
-        let n = snap.n as usize;
-        let table = snap.dense.len();
-        let Some((&(batch, _t), compiled)) =
-            self.memento.iter().find(|((_b, t), _)| *t == table)
-        else {
-            return Err(anyhow!("no memento artifact with table == {table} (n = {n})"));
-        };
-        let snapshot = &snap.memento;
-
-        // Table upload cache: hit when the same snapshot dispatches again
-        // (Literal::clone deep-copies, so the literal stays in the cache
-        // and is passed by reference below — execute takes Borrow<Literal>).
-        let cache_key = (snap.dense.as_ptr() as usize, snap.n);
-        {
-            let mut cache = self.table_cache.borrow_mut();
-            let hit = matches!(&*cache, Some((p, nn, _)) if (*p, *nn) == cache_key);
-            if !hit {
-                *cache = Some((cache_key.0, cache_key.1, xla::Literal::vec1(&snap.dense)));
-            }
-        }
-        let cache = self.table_cache.borrow();
-        let table_lit: &xla::Literal = &cache.as_ref().unwrap().2;
-        let n_lit = xla::Literal::scalar(snap.n);
-
-        let mut out = Vec::with_capacity(keys.len());
-        let mut padded = vec![0u64; batch];
-        for chunk in keys.chunks(batch) {
-            if chunk.len() < batch / 4 {
-                out.extend(chunk.iter().map(|&k| snapshot.lookup(k)));
-                self.stats.fallback_keys.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                continue;
-            }
-            padded[..chunk.len()].copy_from_slice(chunk);
-            padded[chunk.len()..].fill(0);
-            let keys_lit = xla::Literal::vec1(&padded);
-            let result = compiled
-                .exe
-                .execute::<&xla::Literal>(&[&keys_lit, &n_lit, table_lit])
-                .map_err(|e| anyhow!("memento execute: {e}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("memento sync: {e}"))?;
-            let (buckets, ok) =
-                result.to_tuple2().map_err(|e| anyhow!("memento tuple: {e}"))?;
-            let buckets: Vec<u32> = buckets.to_vec().map_err(|e| anyhow!("memento vec: {e}"))?;
-            let ok: Vec<u32> = ok.to_vec().map_err(|e| anyhow!("ok vec: {e}"))?;
-            self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
-            for (i, &k) in chunk.iter().enumerate() {
-                if ok[i] != 0 {
-                    out.push(buckets[i]);
-                    self.stats.device_keys.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    out.push(snapshot.lookup(k));
-                    self.stats.fallback_keys.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-        }
-        Ok(out)
+        self.backend.memento_lookup_snapshot(snap, keys, &self.stats)
     }
 
-    /// Balance histogram of bucket assignments (device-side bincount).
+    /// Balance histogram of bucket assignments.
     pub fn histogram(&self, buckets: &[u32], n_buckets: usize) -> Result<Vec<u64>> {
-        let Some(&(batch, table)) = self.hist.keys().find(|(_b, t)| *t >= n_buckets) else {
-            return Err(anyhow!("no hist artifact with table ≥ {n_buckets}"));
-        };
-        let compiled = &self.hist[&(batch, table)];
-        let mut acc = vec![0u64; n_buckets];
-        let mut padded = vec![u32::MAX; batch]; // MAX = out-of-range ⇒ dropped
-        for chunk in buckets.chunks(batch) {
-            if chunk.len() < batch / 4 {
-                for &b in chunk {
-                    if (b as usize) < n_buckets {
-                        acc[b as usize] += 1;
-                    }
-                }
-                continue;
-            }
-            padded[..chunk.len()].copy_from_slice(chunk);
-            padded[chunk.len()..].fill(u32::MAX);
-            let lit = xla::Literal::vec1(&padded);
-            let result = compiled
-                .exe
-                .execute::<xla::Literal>(&[lit])
-                .map_err(|e| anyhow!("hist execute: {e}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("hist sync: {e}"))?;
-            let counts_lit = result.to_tuple1().map_err(|e| anyhow!("hist tuple: {e}"))?;
-            let counts: Vec<u32> = counts_lit.to_vec().map_err(|e| anyhow!("hist vec: {e}"))?;
-            self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
-            for (i, slot) in acc.iter_mut().enumerate() {
-                *slot += counts[i] as u64;
-            }
-        }
-        Ok(acc)
+        self.backend.histogram(buckets, n_buckets, &self.stats)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Engine worker thread: PJRT clients are not Send/Sync (the wrapper uses
-// `Rc` internally), so the engine lives on one dedicated thread and the rest
-// of the system talks to it through a cloneable, thread-safe handle.
+// Engine worker thread: backends are not required to be Send/Sync (the
+// PJRT wrapper uses `Rc` internally), so the engine lives on one dedicated
+// thread and the rest of the system talks to it through a cloneable,
+// thread-safe handle.
 // ---------------------------------------------------------------------------
 
 enum EngineRequest {
@@ -319,25 +286,6 @@ enum EngineRequest {
     Stats { reply: std::sync::mpsc::Sender<(u64, u64, u64)> },
 }
 
-/// Capabilities reported by the engine at startup.
-#[derive(Debug, Clone, Default)]
-pub struct EngineInfo {
-    pub has_jump: bool,
-    pub has_memento: bool,
-    pub has_hist: bool,
-    /// Largest memento table variant (0 = none).
-    pub max_memento_table: usize,
-    /// All memento table sizes, ascending (for snapshot padding).
-    pub memento_tables: Vec<usize>,
-}
-
-impl EngineInfo {
-    /// Smallest compiled table that fits a cluster of size `n`.
-    pub fn table_size_for(&self, n: usize) -> Option<usize> {
-        self.memento_tables.iter().copied().find(|t| *t >= n)
-    }
-}
-
 /// Thread-safe handle to the engine worker.
 #[derive(Clone)]
 pub struct EngineHandle {
@@ -346,28 +294,19 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread, loading artifacts from `dir`. Fails fast if
-    /// the PJRT client or any artifact fails to compile.
+    /// Spawn the engine thread, loading the best backend for `dir` (see
+    /// [`Engine::load`]). Fails fast only if the worker thread itself
+    /// cannot start.
     pub fn spawn(dir: std::path::PathBuf) -> Result<Self> {
         let (tx, rx) = std::sync::mpsc::channel::<EngineRequest>();
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<std::result::Result<EngineInfo, String>>();
+        let (ready_tx, ready_rx) =
+            std::sync::mpsc::channel::<std::result::Result<EngineInfo, String>>();
         std::thread::Builder::new()
             .name("memento-engine".into())
             .spawn(move || {
                 let engine = match Engine::load(&dir) {
                     Ok(e) => {
-                        let mut tables: Vec<usize> =
-                            e.memento_variants().iter().map(|(_b, t)| *t).collect();
-                        tables.sort_unstable();
-                        tables.dedup();
-                        let info = EngineInfo {
-                            has_jump: e.has_jump(),
-                            has_memento: e.has_memento(),
-                            has_hist: e.has_hist(),
-                            max_memento_table: tables.last().copied().unwrap_or(0),
-                            memento_tables: tables,
-                        };
-                        let _ = ready_tx.send(Ok(info));
+                        let _ = ready_tx.send(Ok(e.info()));
                         e
                     }
                     Err(e) => {
@@ -399,25 +338,26 @@ impl EngineHandle {
                     }
                 }
             })
-            .map_err(|e| anyhow!("spawn engine thread: {e}"))?;
+            .map_err(|e| crate::err!("spawn engine thread: {e}"))?;
         let info = ready_rx
             .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))?
-            .map_err(|e| anyhow!("engine startup: {e}"))?;
+            .map_err(|_| crate::err!("engine thread died during startup"))?
+            .map_err(|e| crate::err!("engine startup: {e}"))?;
         Ok(Self { tx, info })
     }
 
+    /// The backend's capability report.
     pub fn info(&self) -> &EngineInfo {
         &self.info
     }
 
     /// Freeze a Memento state into a reusable engine snapshot (pads the
-    /// dense table to the best-fitting compiled variant).
+    /// dense table to the best-fitting table size).
     pub fn snapshot(&self, m: Memento) -> Result<std::sync::Arc<EngineSnapshot>> {
         let table = self
             .info
             .table_size_for(m.size())
-            .ok_or_else(|| anyhow!("no memento variant with table ≥ {}", m.size()))?;
+            .ok_or_else(|| crate::err!("no memento table variant ≥ {}", m.size()))?;
         Ok(std::sync::Arc::new(EngineSnapshot::new(m, table)))
     }
 
@@ -430,8 +370,8 @@ impl EngineHandle {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineRequest::MementoSnap { snap, keys, reply })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+            .map_err(|_| crate::err!("engine thread gone"))?;
+        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
     }
 
     /// Batched Memento lookup on the engine thread (blocking).
@@ -439,8 +379,8 @@ impl EngineHandle {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineRequest::Memento { snapshot, keys, reply })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+            .map_err(|_| crate::err!("engine thread gone"))?;
+        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
     }
 
     /// Batched Jump lookup on the engine thread (blocking).
@@ -448,17 +388,17 @@ impl EngineHandle {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineRequest::Jump { keys, n, reply })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+            .map_err(|_| crate::err!("engine thread gone"))?;
+        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
     }
 
-    /// Device-side histogram (blocking).
+    /// Balance histogram on the engine thread (blocking).
     pub fn histogram(&self, buckets: Vec<u32>, n: usize) -> Result<Vec<u64>> {
         let (reply, rx) = std::sync::mpsc::channel();
         self.tx
             .send(EngineRequest::Hist { buckets, n, reply })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine reply dropped"))?
+            .map_err(|_| crate::err!("engine thread gone"))?;
+        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
     }
 
     /// (device_keys, fallback_keys, dispatches).
@@ -474,14 +414,53 @@ impl EngineHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::jump_hash;
 
     #[test]
-    fn engine_loads_empty_dir() {
-        let e = Engine::load(Path::new("/no/such/dir")).expect("client must start");
-        assert!(!e.has_jump());
-        assert!(!e.has_memento());
-        assert!(e.jump_lookup(&[1, 2, 3], 10).is_err());
-        assert_eq!(e.stats.fallback_rate(), 0.0);
-        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    fn default_engine_works_without_artifacts() {
+        let e = Engine::load(Path::new("/no/such/dir")).expect("default backend");
+        assert!(e.has_jump());
+        assert!(e.has_memento());
+        assert!(e.has_hist());
+        assert!(e.memento_variants().is_empty(), "dynamic backend has no fixed variants");
+        let ks = [1u64, 2, 3];
+        let got = e.jump_lookup(&ks, 10).unwrap();
+        for (k, g) in ks.iter().zip(&got) {
+            assert_eq!(*g, jump_hash(*k, 10));
+        }
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn snapshot_pads_and_flags_custom_hashers() {
+        let m = Memento::new(10);
+        let snap = EngineSnapshot::new(m, 16);
+        assert_eq!(snap.n, 10);
+        assert_eq!(snap.dense.len(), 16);
+        assert!(snap.dense.iter().all(|&c| c == NO_REPLACEMENT));
+        assert!(!snap.scalar_only);
+
+        let h: std::sync::Arc<dyn crate::hashing::Hasher64> =
+            crate::hashing::by_name("xxhash64").expect("registry hasher").into();
+        let custom = Memento::with_hasher(10, h);
+        assert!(EngineSnapshot::new(custom, 10).scalar_only);
+    }
+
+    #[test]
+    #[should_panic(expected = "table variant too small")]
+    fn snapshot_rejects_undersized_tables() {
+        let _ = EngineSnapshot::new(Memento::new(10), 4);
+    }
+
+    #[test]
+    fn info_table_size_prefers_compiled_variants() {
+        let mut info = EngineInfo { dynamic_tables: true, ..Default::default() };
+        assert_eq!(info.table_size_for(100), Some(100));
+        assert_eq!(info.table_size_for(0), Some(1));
+        info.memento_tables = vec![64, 4096];
+        assert_eq!(info.table_size_for(100), Some(4096));
+        assert_eq!(info.table_size_for(10_000), Some(10_000), "dynamic fallback");
+        info.dynamic_tables = false;
+        assert_eq!(info.table_size_for(10_000), None);
     }
 }

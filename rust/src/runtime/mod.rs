@@ -1,20 +1,32 @@
-//! `runtime` — the PJRT execution layer.
+//! `runtime` — the batched-lookup execution layer.
 //!
-//! Loads the AOT artifacts produced by `python/compile/aot.py`
-//! (`artifacts/*.hlo.txt`, HLO **text** — see DESIGN.md §5 for why not
-//! serialized protos), compiles one executable per variant on the PJRT CPU
-//! client, and exposes batched lookups to the coordinator's hot path.
-//! Python never runs at request time.
+//! Lookups are served through one frontend ([`Engine`]) over swappable
+//! [`LookupBackend`]s:
 //!
-//! Exactness: the device kernels run masked *bounded* loops (a fixed-trip
-//! SIMD adaptation of the paper's data-dependent loops) and return a
-//! per-lane `ok` flag; lanes that did not converge within the bound are
-//! re-resolved on the scalar Rust path ([`engine::BatchOutcome`]), so the
-//! engine is bit-exact with [`crate::algorithms::Memento`] at any batch
-//! size — verified by `tests/integration_runtime.rs`.
+//! * [`batch`] — the **default**: a pure-Rust batched engine
+//!   (struct-of-arrays replacement table, lockstep-lane Memento
+//!   iteration). Always available; no artifacts, no external crates.
+//! * `pjrt` (behind the `pjrt` cargo feature) — the PJRT/XLA device path.
+//!   It loads the AOT artifacts produced by `python/compile/aot.py`
+//!   (`artifacts/*.hlo.txt`, HLO **text** — see DESIGN.md §5 for why not
+//!   serialized protos) and compiles one executable per variant; python
+//!   never runs at request time. Offline it type-checks against a stub
+//!   (see `runtime/pjrt.rs`).
+//!
+//! Exactness: both backends run masked *bounded* loops (a fixed-trip
+//! SIMD adaptation of the paper's data-dependent loops); lanes that did
+//! not converge within the bound are re-resolved on the scalar Rust path
+//! and counted in [`EngineStats::fallback_keys`], so the engine is
+//! bit-exact with [`crate::algorithms::Memento`] at any batch size —
+//! verified by `tests/integration_runtime.rs` and
+//! `tests/integration_batch_engine.rs`.
 
 pub mod artifacts;
+pub mod batch;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifacts::{ArtifactCatalog, VariantKey};
-pub use engine::{Engine, EngineHandle, EngineInfo, EngineStats};
+pub use batch::BatchEngine;
+pub use engine::{Engine, EngineHandle, EngineInfo, EngineSnapshot, EngineStats, LookupBackend};

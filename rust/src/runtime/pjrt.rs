@@ -1,0 +1,369 @@
+//! `pjrt` — the PJRT/XLA device backend (behind the `pjrt` cargo
+//! feature).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt`, HLO **text**), compiles one executable per
+//! variant on the PJRT CPU client, and serves batched lookups from the
+//! compiled executables. Non-converged lanes and small tails fall back to
+//! the exact scalar path, identically to the pure-Rust backend.
+//!
+//! ## Offline stub
+//!
+//! The real `xla` crate is not available in the offline crate set, so
+//! this module type-checks against [`stub`], a crate-local stand-in with
+//! the same API surface whose client constructor always fails (the engine
+//! frontend then falls back to the pure-Rust backend with a warning). To
+//! run on a real PJRT runtime, replace the `use self::stub as xla;` alias
+//! below with the actual crate — no other line of this module changes.
+
+use super::artifacts::{ArtifactCatalog, VariantKey};
+use super::engine::{EngineInfo, EngineSnapshot, EngineStats, LookupBackend};
+use crate::algorithms::{jump_hash, ConsistentHasher};
+use crate::error::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+use self::stub as xla;
+
+/// Typed stand-in for the `xla` PJRT crate (see the module docs). Every
+/// constructor that would touch a real runtime fails with a descriptive
+/// error; the remaining types exist so the backend type-checks offline.
+pub mod stub {
+    #![allow(missing_docs)]
+
+    /// Errors surfaced by the (stubbed) runtime.
+    pub type XlaError = String;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime not linked: the `pjrt` feature compiles against a stub \
+         (see rust/src/runtime/pjrt.rs)";
+
+    /// Scalar element types the literals support.
+    pub trait Native: Copy {}
+    impl Native for u32 {}
+    impl Native for u64 {}
+
+    pub struct PjRtClient;
+    impl PjRtClient {
+        pub fn cpu() -> Result<Self, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+        pub fn platform_name(&self) -> String {
+            "pjrt-stub".to_string()
+        }
+        pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    pub struct HloModuleProto;
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    pub struct XlaComputation;
+    impl XlaComputation {
+        pub fn from_proto(_p: &HloModuleProto) -> Self {
+            XlaComputation
+        }
+    }
+
+    pub struct Literal;
+    impl Literal {
+        pub fn vec1<T: Native>(_v: &[T]) -> Literal {
+            Literal
+        }
+        pub fn scalar<T: Native>(_v: T) -> Literal {
+            Literal
+        }
+        pub fn to_vec<T: Native>(&self) -> Result<Vec<T>, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+        pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+        pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    pub struct PjRtBuffer;
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+    impl PjRtLoadedExecutable {
+        pub fn execute<L: std::borrow::Borrow<Literal>>(
+            &self,
+            _args: &[L],
+        ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+}
+
+/// A compiled executable plus its variant shape.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT device backend: compile-once, execute-many batched lookups.
+/// Lives on a single thread (the PJRT wrapper is not `Sync`) — share via
+/// [`super::engine::EngineHandle`].
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    jump: BTreeMap<usize, Compiled>,
+    memento: BTreeMap<(usize, usize), Compiled>,
+    hist: BTreeMap<(usize, usize), Compiled>,
+    /// Size-1 upload cache: the table literal of the most recent snapshot,
+    /// keyed by [`EngineSnapshot::id`] (unique per snapshot — address keys
+    /// would alias across epochs when an allocation is reused).
+    /// Steady-state dispatches re-use it instead of re-uploading
+    /// ~512 KiB per call.
+    table_cache: std::cell::RefCell<Option<(u64, xla::Literal)>>,
+}
+
+impl PjrtEngine {
+    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let catalog = ArtifactCatalog::scan(dir);
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::err!("PJRT CPU client: {e}"))?;
+        let mut jump = BTreeMap::new();
+        let mut memento = BTreeMap::new();
+        let mut hist = BTreeMap::new();
+        for (key, path) in &catalog.entries {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| crate::err!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| crate::err!("compile {}: {e}", path.display()))?;
+            let compiled = Compiled { exe };
+            match key {
+                VariantKey::Jump { batch } => {
+                    jump.insert(*batch, compiled);
+                }
+                VariantKey::Memento { batch, table } => {
+                    memento.insert((*batch, *table), compiled);
+                }
+                VariantKey::Hist { batch, table } => {
+                    hist.insert((*batch, *table), compiled);
+                }
+            }
+        }
+        Ok(Self {
+            client,
+            jump,
+            memento,
+            hist,
+            table_cache: std::cell::RefCell::new(None),
+        })
+    }
+
+    /// Compiled memento table sizes, ascending and deduplicated.
+    fn tables(&self) -> Vec<usize> {
+        let mut tables: Vec<usize> = self.memento.keys().map(|(_b, t)| *t).collect();
+        tables.sort_unstable();
+        tables.dedup();
+        tables
+    }
+}
+
+impl LookupBackend for PjrtEngine {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn info(&self) -> EngineInfo {
+        let tables = self.tables();
+        EngineInfo {
+            platform: self.platform(),
+            has_jump: !self.jump.is_empty(),
+            has_memento: !self.memento.is_empty(),
+            has_hist: !self.hist.is_empty(),
+            max_memento_table: tables.last().copied().unwrap_or(0),
+            memento_tables: tables,
+            dynamic_tables: false,
+        }
+    }
+
+    fn memento_variants(&self) -> Vec<(usize, usize)> {
+        self.memento.keys().copied().collect()
+    }
+
+    fn jump_lookup(&self, keys: &[u64], n: u32, stats: &EngineStats) -> Result<Vec<u32>> {
+        let Some((&batch, compiled)) = self.jump.iter().next_back() else {
+            crate::bail!("no jump artifact loaded");
+        };
+        let mut out = Vec::with_capacity(keys.len());
+        let mut padded = vec![0u64; batch];
+        for chunk in keys.chunks(batch) {
+            if chunk.len() < batch / 4 {
+                // Tiny tail: scalar is cheaper than a padded dispatch.
+                out.extend(chunk.iter().map(|&k| jump_hash(k, n)));
+                stats.fallback_keys.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                continue;
+            }
+            padded[..chunk.len()].copy_from_slice(chunk);
+            padded[chunk.len()..].fill(0);
+            let keys_lit = xla::Literal::vec1(&padded);
+            let n_lit = xla::Literal::scalar(n);
+            let result = compiled
+                .exe
+                .execute::<xla::Literal>(&[keys_lit, n_lit])
+                .map_err(|e| crate::err!("jump execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| crate::err!("jump sync: {e}"))?;
+            let (buckets, ok) =
+                result.to_tuple2().map_err(|e| crate::err!("jump tuple: {e}"))?;
+            let buckets: Vec<u32> = buckets.to_vec().map_err(|e| crate::err!("jump vec: {e}"))?;
+            let ok: Vec<u32> = ok.to_vec().map_err(|e| crate::err!("jump ok vec: {e}"))?;
+            stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, &k) in chunk.iter().enumerate() {
+                if ok[i] != 0 {
+                    out.push(buckets[i]);
+                    stats.device_keys.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    out.push(jump_hash(k, n));
+                    stats.fallback_keys.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn memento_lookup_snapshot(
+        &self,
+        snap: &EngineSnapshot,
+        keys: &[u64],
+        stats: &EngineStats,
+    ) -> Result<Vec<u32>> {
+        let snapshot = &snap.memento;
+        if snap.scalar_only {
+            // Non-default rehash: the device kernel would diverge.
+            let out: Vec<u32> = keys.iter().map(|&k| snapshot.lookup(k)).collect();
+            stats.fallback_keys.fetch_add(keys.len() as u64, Ordering::Relaxed);
+            return Ok(out);
+        }
+        let n = snap.n as usize;
+        let table = snap.dense.len();
+        let Some((&(batch, _t), compiled)) =
+            self.memento.iter().find(|((_b, t), _)| *t == table)
+        else {
+            crate::bail!("no memento artifact with table == {table} (n = {n})");
+        };
+
+        // Table upload cache: hit when the same snapshot dispatches again
+        // (the literal stays in the cache and is passed by reference below
+        // — execute takes Borrow<Literal>).
+        {
+            let mut cache = self.table_cache.borrow_mut();
+            let hit = matches!(&*cache, Some((id, _)) if *id == snap.id);
+            if !hit {
+                *cache = Some((snap.id, xla::Literal::vec1(&snap.dense)));
+            }
+        }
+        let cache = self.table_cache.borrow();
+        let table_lit: &xla::Literal = &cache.as_ref().unwrap().1;
+        let n_lit = xla::Literal::scalar(snap.n);
+
+        let mut out = Vec::with_capacity(keys.len());
+        let mut padded = vec![0u64; batch];
+        for chunk in keys.chunks(batch) {
+            if chunk.len() < batch / 4 {
+                out.extend(chunk.iter().map(|&k| snapshot.lookup(k)));
+                stats.fallback_keys.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                continue;
+            }
+            padded[..chunk.len()].copy_from_slice(chunk);
+            padded[chunk.len()..].fill(0);
+            let keys_lit = xla::Literal::vec1(&padded);
+            let result = compiled
+                .exe
+                .execute::<&xla::Literal>(&[&keys_lit, &n_lit, table_lit])
+                .map_err(|e| crate::err!("memento execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| crate::err!("memento sync: {e}"))?;
+            let (buckets, ok) =
+                result.to_tuple2().map_err(|e| crate::err!("memento tuple: {e}"))?;
+            let buckets: Vec<u32> =
+                buckets.to_vec().map_err(|e| crate::err!("memento vec: {e}"))?;
+            let ok: Vec<u32> = ok.to_vec().map_err(|e| crate::err!("ok vec: {e}"))?;
+            stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, &k) in chunk.iter().enumerate() {
+                if ok[i] != 0 {
+                    out.push(buckets[i]);
+                    stats.device_keys.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    out.push(snapshot.lookup(k));
+                    stats.fallback_keys.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn histogram(
+        &self,
+        buckets: &[u32],
+        n_buckets: usize,
+        stats: &EngineStats,
+    ) -> Result<Vec<u64>> {
+        let Some(&(batch, table)) = self.hist.keys().find(|(_b, t)| *t >= n_buckets) else {
+            crate::bail!("no hist artifact with table ≥ {n_buckets}");
+        };
+        let compiled = &self.hist[&(batch, table)];
+        let mut acc = vec![0u64; n_buckets];
+        let mut padded = vec![u32::MAX; batch]; // MAX = out-of-range ⇒ dropped
+        for chunk in buckets.chunks(batch) {
+            if chunk.len() < batch / 4 {
+                for &b in chunk {
+                    if (b as usize) < n_buckets {
+                        acc[b as usize] += 1;
+                    }
+                }
+                continue;
+            }
+            padded[..chunk.len()].copy_from_slice(chunk);
+            padded[chunk.len()..].fill(u32::MAX);
+            let lit = xla::Literal::vec1(&padded);
+            let result = compiled
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| crate::err!("hist execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| crate::err!("hist sync: {e}"))?;
+            let counts_lit = result.to_tuple1().map_err(|e| crate::err!("hist tuple: {e}"))?;
+            let counts: Vec<u32> =
+                counts_lit.to_vec().map_err(|e| crate::err!("hist vec: {e}"))?;
+            stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for (i, slot) in acc.iter_mut().enumerate() {
+                *slot += counts[i] as u64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stubbed_client_fails_with_a_clear_message() {
+        // With the stub in place the backend must fail fast at load (the
+        // engine frontend then falls back to rust-batch).
+        let dir = std::env::temp_dir().join("memento_pjrt_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("jump_b1024.hlo.txt"), "x").unwrap();
+        let err = PjrtEngine::load(&dir).err().expect("stub must not start");
+        assert!(err.to_string().contains("PJRT"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -81,6 +81,7 @@ pub struct DisruptionReport {
 }
 
 impl DisruptionReport {
+    /// Collateral moves as a fraction of all audited keys.
     pub fn collateral_frac(&self) -> f64 {
         self.collateral as f64 / (self.stayed + self.relocated + self.collateral).max(1) as f64
     }

@@ -25,11 +25,14 @@ pub use scenario::{build, ScenarioCell, ScenarioConfig};
 /// * `full` — the paper's sizes to 10⁶.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// CI scale: sizes to 10⁵, fewer keys (default).
     Ci,
+    /// The paper's scale: sizes to 10⁶.
     Full,
 }
 
 impl Scale {
+    /// Read `MEMENTO_BENCH_SCALE` (`full` ⇒ [`Scale::Full`]).
     pub fn from_env() -> Self {
         match std::env::var("MEMENTO_BENCH_SCALE").as_deref() {
             Ok("full") => Scale::Full,

@@ -33,6 +33,7 @@ impl Default for ScenarioConfig {
 /// One measured cell of a figure: an algorithm at a parameter point.
 #[derive(Debug, Clone)]
 pub struct ScenarioCell {
+    /// Algorithm registry name.
     pub algo: String,
     /// Initial working nodes.
     pub initial_nodes: usize,
@@ -40,6 +41,7 @@ pub struct ScenarioCell {
     pub working: usize,
     /// Fraction of nodes removed (0.0 for stable).
     pub removed_frac: f64,
+    /// Removal order, if removals were applied.
     pub order: Option<RemovalOrder>,
     /// Lookup timing.
     pub lookup: BenchStats,
@@ -62,6 +64,7 @@ impl ScenarioCell {
         ]
     }
 
+    /// Column names matching [`ScenarioCell::csv_row`].
     pub const CSV_COLUMNS: &'static [&'static str] = &[
         "algo",
         "initial_nodes",

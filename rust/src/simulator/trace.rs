@@ -35,7 +35,9 @@ pub enum TraceEvent {
 /// Parse failure.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TraceError {
+    /// 1-based line number of the failure (0 for document-level).
     pub line: usize,
+    /// What went wrong.
     pub message: String,
 }
 
@@ -121,11 +123,17 @@ pub fn emit(events: &[TraceEvent]) -> String {
 /// Outcome of replaying a trace.
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
+    /// Events applied successfully.
     pub applied: usize,
+    /// Events the algorithm rejected (e.g. Jump non-tail removals).
     pub rejected: usize,
+    /// Audit checkpoints executed.
     pub checks: usize,
+    /// Human-readable failures from the checkpoints (empty = all green).
     pub check_failures: Vec<String>,
+    /// Working nodes after the last event.
     pub final_working: usize,
+    /// Exact algorithm state bytes after the last event.
     pub final_state_bytes: usize,
 }
 

@@ -40,6 +40,7 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Default config with an explicit case count.
     pub fn with_cases(cases: usize) -> Self {
         Self { cases, ..Default::default() }
     }

@@ -1,0 +1,141 @@
+//! The pure-Rust batch engine vs the scalar algorithm under membership
+//! churn.
+//!
+//! Acceptance property of the dependency-free runtime: for every key,
+//! batched lookups agree with the scalar `Memento` lookup at *every*
+//! epoch of an arbitrary add/remove schedule — including deep removals,
+//! LIFO restores, tail growth and interleavings of all three.
+
+use memento::algorithms::{ConsistentHasher, Memento};
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::runtime::{BatchEngine, Engine, EngineSnapshot, EngineStats, LookupBackend};
+
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+/// Assert the backend agrees with the scalar algorithm on every key.
+fn assert_batch_matches_scalar(
+    m: &Memento,
+    ks: &[u64],
+    be: &BatchEngine,
+    stats: &EngineStats,
+    label: &str,
+) {
+    let snap = EngineSnapshot::new(m.clone(), m.size());
+    let got = be.memento_lookup_snapshot(&snap, ks, stats).expect("batched lookup");
+    assert_eq!(got.len(), ks.len());
+    for (k, g) in ks.iter().zip(&got) {
+        assert_eq!(*g, m.lookup(*k), "{label}: key {k:#x} diverged");
+    }
+}
+
+#[test]
+fn batched_lookups_agree_with_scalar_across_random_churn() {
+    let be = BatchEngine::new();
+    let stats = EngineStats::default();
+    let mut rng = Xoshiro256::new(0xC4C4);
+    let mut m = Memento::new(200);
+    let ks = keys(4096, 0xFEED);
+
+    assert_batch_matches_scalar(&m, &ks, &be, &stats, "epoch 0");
+    for epoch in 1..=60 {
+        // Biased random schedule: ~1/3 adds (LIFO restores or tail
+        // growth), ~2/3 random removals.
+        if rng.next_below(3) == 0 {
+            m.add().expect("add");
+        } else if m.working() > 1 {
+            let wb = m.working_buckets();
+            let b = wb[rng.next_index(wb.len())];
+            m.remove(b).expect("remove working bucket");
+        }
+        assert_batch_matches_scalar(&m, &ks, &be, &stats, &format!("epoch {epoch}"));
+    }
+    assert!(stats.fallback_rate() < 1e-3, "rate {}", stats.fallback_rate());
+    assert!(stats.device_keys.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn deep_removal_then_full_restore_cycle() {
+    let be = BatchEngine::new();
+    let stats = EngineStats::default();
+    let mut rng = Xoshiro256::new(0xDEE9);
+    let mut m = Memento::new(500);
+    let ks = keys(2048, 0xD00D);
+
+    // Remove 90% of the nodes one by one, checking at every 50th epoch.
+    let mut removed = 0;
+    while m.working() > 50 {
+        let wb = m.working_buckets();
+        let b = wb[rng.next_index(wb.len())];
+        m.remove(b).unwrap();
+        removed += 1;
+        if removed % 50 == 0 {
+            assert_batch_matches_scalar(&m, &ks, &be, &stats, &format!("down {removed}"));
+        }
+    }
+    assert_batch_matches_scalar(&m, &ks, &be, &stats, "90% removed");
+
+    // Restore everything (Alg. 3 LIFO), checking along the way.
+    let mut restored = 0;
+    while m.removed() > 0 {
+        m.add().unwrap();
+        restored += 1;
+        if restored % 50 == 0 {
+            assert_batch_matches_scalar(&m, &ks, &be, &stats, &format!("up {restored}"));
+        }
+    }
+    assert_eq!(m.working(), m.size());
+    assert_batch_matches_scalar(&m, &ks, &be, &stats, "fully restored");
+
+    // Grow past the original size (tail growth) and verify again.
+    for _ in 0..25 {
+        m.add().unwrap();
+    }
+    assert_batch_matches_scalar(&m, &ks, &be, &stats, "grown past initial");
+}
+
+#[test]
+fn tiny_clusters_and_tiny_batches() {
+    let be = BatchEngine::new();
+    let stats = EngineStats::default();
+    // w = 1..=4 with every removal pattern reachable by a short schedule.
+    for w in 1usize..=4 {
+        let mut m = Memento::new(w);
+        let ks = keys(33, w as u64);
+        assert_batch_matches_scalar(&m, &ks, &be, &stats, &format!("w={w} stable"));
+        if w > 1 {
+            m.remove(0).unwrap();
+            assert_batch_matches_scalar(&m, &ks, &be, &stats, &format!("w={w} head removed"));
+        }
+    }
+    // Single-key batches.
+    let mut m = Memento::new(10);
+    m.remove(4).unwrap();
+    for k in keys(16, 1) {
+        assert_batch_matches_scalar(&m, &[k], &be, &stats, "single key");
+    }
+}
+
+#[test]
+fn frontend_engine_matches_scalar_through_churn() {
+    // Same churn property through the public `Engine` frontend (what the
+    // router and benches use), exercising snapshot construction per epoch.
+    let engine = Engine::new();
+    let mut rng = Xoshiro256::new(0x0FF);
+    let mut m = Memento::new(128);
+    let ks = keys(4096, 0xAB);
+    for epoch in 0..30 {
+        if rng.next_below(4) == 0 {
+            m.add().unwrap();
+        } else if m.working() > 1 {
+            let wb = m.working_buckets();
+            m.remove(wb[rng.next_index(wb.len())]).unwrap();
+        }
+        let got = engine.memento_lookup(&m, &ks).unwrap();
+        for (k, g) in ks.iter().zip(&got) {
+            assert_eq!(*g, m.lookup(*k), "epoch {epoch} key {k:#x}");
+        }
+    }
+}

@@ -1,24 +1,21 @@
-//! Integration: the PJRT engine vs the scalar rust implementations.
+//! Integration: the batched-lookup engine vs the scalar rust
+//! implementations.
 //!
-//! THE cross-language correctness signal: the AOT-compiled JAX/Pallas
-//! kernels must agree bit-for-bit with `algorithms::{jump_hash, Memento}`
-//! for every key. Requires `make artifacts` (tests are skipped with a
-//! notice if the artifacts are absent, so `cargo test` works standalone).
+//! THE correctness signal for the runtime layer: batched lookups must
+//! agree bit-for-bit with `algorithms::{jump_hash, Memento}` for every
+//! key. `Engine::load` always yields a working backend — the pure-Rust
+//! batch engine by default — so these tests run everywhere with no
+//! artifacts; with `--features pjrt` and a real PJRT runtime wired in,
+//! the same assertions exercise the device path.
 
 use memento::algorithms::{jump_hash, ConsistentHasher, Memento, RemovalOrder};
 use memento::hashing::prng::{Rng64, Xoshiro256};
-use memento::runtime::{ArtifactCatalog, Engine};
+use memento::runtime::Engine;
 use memento::simulator::scenario;
 use std::path::Path;
 
-fn artifacts_dir() -> Option<&'static Path> {
-    let dir = Path::new("artifacts");
-    if ArtifactCatalog::scan(dir).is_empty() {
-        eprintln!("[skip] no artifacts/ — run `make artifacts` for engine tests");
-        None
-    } else {
-        Some(dir)
-    }
+fn engine() -> Engine {
+    Engine::load(Path::new("artifacts")).expect("engine backend")
 }
 
 fn keys(n: usize, seed: u64) -> Vec<u64> {
@@ -28,12 +25,11 @@ fn keys(n: usize, seed: u64) -> Vec<u64> {
 
 #[test]
 fn engine_jump_matches_scalar() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
+    let engine = engine();
     assert!(engine.has_jump());
     for n in [1u32, 2, 10, 1000, 1_000_000, 100_000_000] {
         let ks = keys(4096, n as u64);
-        let got = engine.jump_lookup(&ks, n).expect("device lookup");
+        let got = engine.jump_lookup(&ks, n).expect("batched lookup");
         for (k, g) in ks.iter().zip(&got) {
             assert_eq!(*g, jump_hash(*k, n), "key {k:#x} n {n}");
         }
@@ -43,11 +39,8 @@ fn engine_jump_matches_scalar() {
 }
 
 #[test]
-fn engine_jump_handles_tails_and_large_batches() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
-    // 10_000 keys: 2 full chunks of 4096 + a 1808-key tail (device),
-    // plus odd sizes below the dispatch threshold (scalar).
+fn engine_jump_handles_tails_and_odd_sizes() {
+    let engine = engine();
     for len in [1usize, 37, 1023, 10_000] {
         let ks = keys(len, 9);
         let got = engine.jump_lookup(&ks, 12345).unwrap();
@@ -60,15 +53,14 @@ fn engine_jump_handles_tails_and_large_batches() {
 
 #[test]
 fn engine_memento_matches_scalar_across_removal_patterns() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
+    let engine = engine();
     assert!(engine.has_memento());
     let mut rng = Xoshiro256::new(0xE2E);
     for (w, removals) in [(100usize, 30usize), (1000, 650), (4096, 1000), (10_000, 2_000)] {
         let mut m = Memento::new(w);
         scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
         let ks = keys(8192, w as u64);
-        let got = engine.memento_lookup(&m, &ks).expect("device memento");
+        let got = engine.memento_lookup(&m, &ks).expect("batched memento");
         for (k, g) in ks.iter().zip(&got) {
             assert_eq!(*g, m.lookup(*k), "w={w} removals={removals} key {k:#x}");
         }
@@ -77,8 +69,7 @@ fn engine_memento_matches_scalar_across_removal_patterns() {
 
 #[test]
 fn engine_memento_stable_cluster_equals_jump() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
+    let engine = engine();
     let m = Memento::new(1000);
     let ks = keys(4096, 5);
     let got = engine.memento_lookup(&m, &ks).unwrap();
@@ -88,9 +79,8 @@ fn engine_memento_stable_cluster_equals_jump() {
 }
 
 #[test]
-fn engine_memento_lifo_equals_plain_jump_artifact() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
+fn engine_memento_lifo_equals_batched_jump() {
+    let engine = engine();
     let mut m = Memento::new(500);
     for b in (300..500u32).rev() {
         m.remove(b).unwrap();
@@ -104,11 +94,8 @@ fn engine_memento_lifo_equals_plain_jump_artifact() {
 
 #[test]
 fn engine_histogram_matches_host_bincount() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
-    if !engine.has_hist() {
-        return;
-    }
+    let engine = engine();
+    assert!(engine.has_hist());
     let m = Memento::new(64);
     let ks = keys(8192, 11);
     let buckets: Vec<u32> = ks.iter().map(|&k| m.lookup(k)).collect();
@@ -123,10 +110,10 @@ fn engine_histogram_matches_host_bincount() {
 
 #[test]
 fn engine_handle_works_across_threads() {
-    let Some(dir) = artifacts_dir() else { return };
     let handle =
-        memento::runtime::EngineHandle::spawn(dir.to_path_buf()).expect("spawn engine thread");
+        memento::runtime::EngineHandle::spawn("artifacts".into()).expect("spawn engine thread");
     assert!(handle.info().has_memento);
+    assert!(!handle.info().platform.is_empty());
     let mut m = Memento::new(256);
     for b in [3u32, 99, 200, 17] {
         m.remove(b).unwrap();
@@ -154,10 +141,31 @@ fn engine_handle_works_across_threads() {
 }
 
 #[test]
+fn engine_snapshot_path_matches_oneshot_path() {
+    let handle =
+        memento::runtime::EngineHandle::spawn("artifacts".into()).expect("spawn engine thread");
+    let mut m = Memento::new(1024);
+    for b in [5u32, 700, 701, 3, 999] {
+        m.remove(b).unwrap();
+    }
+    let snap = handle.snapshot(m.clone()).expect("snapshot");
+    let ks = keys(8192, 77);
+    let via_snap = handle.memento_lookup_snapshot(snap.clone(), ks.clone()).unwrap();
+    let via_oneshot = handle.memento_lookup(m.clone(), ks.clone()).unwrap();
+    assert_eq!(via_snap, via_oneshot);
+    // Re-dispatching the same snapshot must stay consistent (upload/cache
+    // reuse on backends that cache table uploads).
+    let again = handle.memento_lookup_snapshot(snap, ks.clone()).unwrap();
+    assert_eq!(again, via_snap);
+    for (k, g) in ks.iter().zip(&via_snap) {
+        assert_eq!(*g, m.lookup(*k));
+    }
+}
+
+#[test]
 fn engine_property_random_clusters_match_scalar() {
     // Property-style sweep: random (w, removal-fraction) clusters.
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = Engine::load(dir).expect("engine loads");
+    let engine = engine();
     let mut rng = Xoshiro256::new(0x5EED);
     for case in 0..12 {
         let w = 2 + rng.next_below(5000) as usize;
@@ -166,9 +174,46 @@ fn engine_property_random_clusters_match_scalar() {
         let mut m = Memento::new(w);
         scenario::apply_removals(&mut m, removals, RemovalOrder::Random, &mut rng);
         let ks = keys(4096, case);
-        let got = engine.memento_lookup(&m, &ks).expect("device");
+        let got = engine.memento_lookup(&m, &ks).expect("batched");
         for (k, g) in ks.iter().zip(&got) {
             assert_eq!(*g, m.lookup(*k), "case {case} w={w} frac={frac:.2}");
         }
     }
+}
+
+#[test]
+fn custom_hasher_snapshots_stay_exact() {
+    // Non-default rehash functions have no batched kernel: the engine
+    // must serve them on the exact scalar path instead of diverging.
+    let engine = engine();
+    let h: std::sync::Arc<dyn memento::hashing::Hasher64> =
+        memento::hashing::by_name("xxhash64").expect("registry hasher").into();
+    let mut m = Memento::with_hasher(512, h);
+    for b in [100u32, 200, 300, 301, 302] {
+        m.remove(b).unwrap();
+    }
+    let ks = keys(4096, 21);
+    let before_fallback = engine.stats.fallback_keys.load(std::sync::atomic::Ordering::Relaxed);
+    let got = engine.memento_lookup(&m, &ks).unwrap();
+    for (k, g) in ks.iter().zip(&got) {
+        assert_eq!(*g, m.lookup(*k), "key {k:#x}");
+    }
+    let after_fallback = engine.stats.fallback_keys.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(after_fallback >= before_fallback + ks.len() as u64, "scalar path must serve all keys");
+}
+
+#[test]
+fn router_route_batch_matches_scalar_route() {
+    use memento::coordinator::router::Router;
+    let handle =
+        memento::runtime::EngineHandle::spawn("artifacts".into()).expect("spawn engine thread");
+    let router = Router::new("memento", 64, 640, Some(handle)).unwrap();
+    router.fail_bucket(7).unwrap();
+    router.fail_bucket(40).unwrap();
+    let ks = keys(8192, 0xB0);
+    let batched = router.route_batch(&ks);
+    for (k, b) in ks.iter().zip(&batched) {
+        assert_eq!(router.route(*k).0, *b);
+    }
+    assert!(router.metrics.lookups_batched.get() >= ks.len() as u64);
 }
