@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate needs none of these — `cargo build`
 # is dependency-free; `artifacts` is only for the optional PJRT path.
 
-.PHONY: build test bench artifacts doc fmt
+.PHONY: build test bench artifacts doc fmt clippy loadgen
 
 build:
 	cargo build --release
@@ -17,6 +17,15 @@ doc:
 
 fmt:
 	cargo fmt --all --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# Measure the service under fire: open-loop Zipf traffic with
+# coordinated-omission-corrected latency percentiles while nodes fail and
+# recover mid-run (see EXPERIMENTS.md §Service under load).
+loadgen:
+	cargo run --release -- loadgen --mode open --workload zipf --churn incremental
 
 # AOT-compile the PJRT kernel variants (requires the python/JAX toolchain;
 # see python/compile/aot.py and DESIGN.md §5).

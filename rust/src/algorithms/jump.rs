@@ -30,9 +30,9 @@ impl ConsistentHasher for Jump {
     }
 
     fn lookup_traced(&self, key: u64) -> LookupTrace {
-        let mut t = LookupTrace::default();
-        t.bucket = jump_hash_traced(key, self.n, &mut t.jump_steps);
-        t
+        let mut jump_steps = 0;
+        let bucket = jump_hash_traced(key, self.n, &mut jump_steps);
+        LookupTrace { bucket, jump_steps, ..LookupTrace::default() }
     }
 
     fn add(&mut self) -> Result<u32, AlgoError> {

@@ -6,7 +6,8 @@
 //! GET <key>                       → VALUE <node> <value> | MISSING <node>
 //! KILL <bucket>                   → KILLED <node> MOVED <n-records>
 //! ADD                             → ADDED BUCKET <b> NODE <name>
-//! STATS                           → STATS <metrics one-liner>
+//! STATS                           → STATS <metrics one-liner, with
+//!                                    latency p50/p99/p999 percentiles>
 //! EPOCH                           → EPOCH <e> WORKING <w>
 //! ```
 //!
@@ -17,8 +18,23 @@
 use super::rebalancer::Rebalancer;
 use super::router::Router;
 use super::storage::StorageCluster;
+use crate::metrics::Histogram;
 use crate::netserver::{self, ServerHandle};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Latency recording is sharded so concurrent connection threads don't
+/// serialize on one global lock in the request hot path; shards merge on
+/// `STATS` (the cold path).
+const LATENCY_SHARDS: usize = 8;
+
+static NEXT_LATENCY_SHARD: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    /// Each thread sticks to one shard, assigned round-robin on first
+    /// use, so recording contends only when threads outnumber shards.
+    static LATENCY_SHARD: usize =
+        NEXT_LATENCY_SHARD.fetch_add(1, Ordering::Relaxed) % LATENCY_SHARDS;
+}
 
 /// Shared service state.
 pub struct Service {
@@ -32,6 +48,9 @@ pub struct Service {
     /// GET fails over along the replica set (reads survive failures even
     /// before migration completes).
     replicas: usize,
+    /// Per-request handle latency (ns), sharded by recording thread;
+    /// `STATS` merges the shards and reports percentiles.
+    latency: Vec<Mutex<Histogram>>,
 }
 
 impl Service {
@@ -48,6 +67,7 @@ impl Service {
             storage: Arc::new(StorageCluster::new()),
             rebalancer,
             replicas: replicas.max(1),
+            latency: (0..LATENCY_SHARDS).map(|_| Mutex::new(Histogram::new())).collect(),
         })
     }
 
@@ -101,8 +121,26 @@ impl Service {
             .unwrap_or_else(|_| crate::hashing::xxhash::xxhash64(token.as_bytes(), 0))
     }
 
-    /// Handle one protocol line.
+    /// Handle one protocol line, recording service latency for data-path
+    /// requests (`LOOKUP`/`GET`/`PUT`). Admin commands (`KILL`/`ADD`
+    /// migrate data and run for milliseconds; `STATS`/`EPOCH` are
+    /// introspection) stay out of the histogram so the reported tail
+    /// reflects serving behavior, not churn injection.
     pub fn handle(&self, line: &str) -> String {
+        let data_path =
+            matches!(line.split_whitespace().next(), Some("LOOKUP" | "GET" | "PUT"));
+        if !data_path {
+            return self.handle_inner(line);
+        }
+        let t0 = std::time::Instant::now();
+        let resp = self.handle_inner(line);
+        let ns = crate::metrics::duration_to_ns(t0.elapsed());
+        let shard = LATENCY_SHARD.with(|s| *s);
+        self.latency[shard].lock().unwrap().record(ns);
+        resp
+    }
+
+    fn handle_inner(&self, line: &str) -> String {
         let mut parts = line.split_whitespace();
         match parts.next() {
             Some("LOOKUP") => {
@@ -187,12 +225,27 @@ impl Service {
             },
             Some("STATS") => {
                 let reb = self.rebalancer.summary();
+                let lat = {
+                    let mut h = Histogram::new();
+                    for shard in &self.latency {
+                        h.merge(&shard.lock().unwrap());
+                    }
+                    format!(
+                        "latency(ns): n={} p50={} p99={} p999={} max={}",
+                        h.count(),
+                        h.quantile(0.5),
+                        h.quantile(0.99),
+                        h.quantile(0.999),
+                        h.max()
+                    )
+                };
                 format!(
-                    "STATS {} | rebalance: epochs={} relocated={} violations={}",
+                    "STATS {} | rebalance: epochs={} relocated={} violations={} | {}",
                     self.router.metrics.summary(),
                     reb.epochs_observed,
                     reb.relocated,
-                    reb.violations
+                    reb.violations,
+                    lat
                 )
             }
             Some("EPOCH") => {
@@ -278,6 +331,31 @@ mod tests {
         assert!(s.handle("KILL 999").starts_with("ERR"));
         assert!(s.handle("FROB").starts_with("ERR"));
         assert!(s.handle("").starts_with("ERR"));
+    }
+
+    #[test]
+    fn stats_reports_latency_percentiles() {
+        let s = service();
+        for i in 0..200 {
+            s.handle(&format!("PUT lk{i} lv{i}"));
+            s.handle(&format!("GET lk{i}"));
+        }
+        // Admin commands must not pollute the data-path histogram.
+        s.handle("KILL 1");
+        s.handle("ADD");
+        s.handle("EPOCH");
+        let stats = s.handle("STATS");
+        assert!(stats.contains("latency(ns): n=400"), "{stats}");
+        assert!(stats.contains("p50="), "{stats}");
+        assert!(stats.contains("p999="), "{stats}");
+        // Percentiles are monotone.
+        let grab = |tag: &str| -> u64 {
+            let rest = &stats[stats.find(tag).unwrap() + tag.len()..];
+            rest.split_whitespace().next().unwrap().parse().unwrap()
+        };
+        assert!(grab("p50=") <= grab("p99="), "{stats}");
+        assert!(grab("p99=") <= grab("p999="), "{stats}");
+        assert!(grab("p50=") > 0, "service work must take nonzero time: {stats}");
     }
 
     #[test]

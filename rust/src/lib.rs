@@ -20,6 +20,10 @@
 //! * [`simulator`] — the paper's benchmark tool: scenarios (stable, one-shot
 //!   removals, incremental removals, a/w sensitivity), exact memory
 //!   accounting and balance/disruption/monotonicity auditors.
+//! * [`loadgen`] — the traffic subsystem: closed/open-loop generation with
+//!   coordinated-omission correction, pluggable workloads, mid-run churn
+//!   injection, and merged latency/throughput reports — the paper's
+//!   scenarios measured through the whole serving stack.
 //! * [`error`], [`benchkit`], [`testkit`], [`config`], [`cli`], [`metrics`],
 //!   [`netserver`] — substrates built from scratch for the offline
 //!   environment (no anyhow/criterion/proptest/tokio/serde/clap available).
@@ -38,6 +42,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod hashing;
+pub mod loadgen;
 pub mod metrics;
 pub mod netserver;
 pub mod runtime;

@@ -1,0 +1,208 @@
+//! Churn injection: membership changes fired mid-run, through the same
+//! admin protocol a human operator would use (`KILL <bucket>` / `ADD`).
+//!
+//! The scenarios mirror the paper's evaluation matrix end-to-end instead
+//! of at the algorithm layer:
+//!
+//! * **stable** — no membership changes (Figs. 17/18 shape);
+//! * **oneshot** — all failures at once at the run's midpoint
+//!   (Figs. 19–22 shape: a rack loss);
+//! * **incremental** — failures spread across the run, then restores near
+//!   the end (Figs. 23–26 shape: rolling failures + recovery).
+//!
+//! The injector is deliberately protocol-only: it discovers killable
+//! buckets by trying ids and reading responses, so it works against any
+//! live service, in-process or remote.
+
+use super::target::Target;
+use std::time::{Duration, Instant};
+
+/// What the injector does at one scheduled point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnAction {
+    /// Fail one working bucket (`KILL <b>`).
+    Kill,
+    /// Restore capacity (`ADD`).
+    Restore,
+}
+
+/// The churn shape for a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnScenario {
+    /// No membership changes.
+    Stable,
+    /// `kills` failures at once at the midpoint of the run.
+    OneShot {
+        /// Number of buckets to fail.
+        kills: usize,
+    },
+    /// `kills` failures spread across the first two thirds of the run,
+    /// matched by restores near the end.
+    Incremental {
+        /// Number of buckets to fail (and later restore).
+        kills: usize,
+    },
+}
+
+impl ChurnScenario {
+    /// Build by CLI name: `stable`, `oneshot`, or `incremental`.
+    pub fn by_name(name: &str, kills: usize) -> Result<Self, String> {
+        match name {
+            "stable" => Ok(ChurnScenario::Stable),
+            "oneshot" => Ok(ChurnScenario::OneShot { kills }),
+            "incremental" => Ok(ChurnScenario::Incremental { kills }),
+            other => Err(format!("unknown churn scenario '{other}' (stable|oneshot|incremental)")),
+        }
+    }
+
+    /// The scenario's display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnScenario::Stable => "stable",
+            ChurnScenario::OneShot { .. } => "oneshot",
+            ChurnScenario::Incremental { .. } => "incremental",
+        }
+    }
+
+    /// The event schedule for a run of the given length, sorted by offset.
+    pub fn plan(&self, duration: Duration) -> Vec<(Duration, ChurnAction)> {
+        let at = |frac: f64| duration.mul_f64(frac);
+        match *self {
+            ChurnScenario::Stable => Vec::new(),
+            ChurnScenario::OneShot { kills } => {
+                (0..kills).map(|_| (at(0.5), ChurnAction::Kill)).collect()
+            }
+            ChurnScenario::Incremental { kills } => {
+                let mut plan = Vec::with_capacity(2 * kills);
+                // Failures accumulate through [15%, 65%] of the run…
+                for i in 0..kills {
+                    let frac = 0.15 + 0.5 * i as f64 / kills.max(1) as f64;
+                    plan.push((at(frac), ChurnAction::Kill));
+                }
+                // …then capacity returns through [75%, 95%].
+                for i in 0..kills {
+                    let frac = 0.75 + 0.2 * i as f64 / kills.max(1) as f64;
+                    plan.push((at(frac), ChurnAction::Restore));
+                }
+                plan
+            }
+        }
+    }
+}
+
+/// Drive `plan` against an admin connection. `buckets` bounds the bucket
+/// ids probed for `KILL` (pass the initial cluster size). Returns a log of
+/// what actually happened, one line per event.
+pub fn inject(
+    mut admin: Box<dyn Target>,
+    plan: &[(Duration, ChurnAction)],
+    start: Instant,
+    buckets: u32,
+) -> Vec<String> {
+    let mut log = Vec::with_capacity(plan.len());
+    let mut cursor = 0u32;
+    for (at, action) in plan {
+        let elapsed = start.elapsed();
+        if *at > elapsed {
+            std::thread::sleep(*at - elapsed);
+        }
+        let stamp = start.elapsed().as_millis();
+        match action {
+            ChurnAction::Kill => {
+                // Probe bucket ids until one KILL is accepted (a bucket may
+                // already be down; the service answers ERR and we move on).
+                let mut killed = false;
+                for _ in 0..buckets.max(1) {
+                    let b = cursor % buckets.max(1);
+                    cursor = cursor.wrapping_add(1);
+                    match admin.call(&format!("KILL {b}")) {
+                        Ok(r) if r.starts_with("KILLED") => {
+                            log.push(format!("[{stamp}ms] KILL {b} -> {r}"));
+                            killed = true;
+                            break;
+                        }
+                        Ok(_) => continue,
+                        Err(e) => {
+                            log.push(format!("[{stamp}ms] admin connection lost: {e}"));
+                            return log;
+                        }
+                    }
+                }
+                if !killed {
+                    log.push(format!("[{stamp}ms] KILL skipped: no killable bucket"));
+                }
+            }
+            ChurnAction::Restore => match admin.call("ADD") {
+                Ok(r) => log.push(format!("[{stamp}ms] ADD -> {r}")),
+                Err(e) => {
+                    log.push(format!("[{stamp}ms] admin connection lost: {e}"));
+                    return log;
+                }
+            },
+        }
+    }
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_plans_nothing() {
+        assert!(ChurnScenario::Stable.plan(Duration::from_secs(1)).is_empty());
+    }
+
+    #[test]
+    fn oneshot_fires_everything_at_the_midpoint() {
+        let plan = ChurnScenario::OneShot { kills: 3 }.plan(Duration::from_secs(2));
+        assert_eq!(plan.len(), 3);
+        for (at, action) in &plan {
+            assert_eq!(*at, Duration::from_secs(1));
+            assert_eq!(*action, ChurnAction::Kill);
+        }
+    }
+
+    #[test]
+    fn incremental_spreads_kills_then_restores() {
+        let plan = ChurnScenario::Incremental { kills: 4 }.plan(Duration::from_secs(10));
+        assert_eq!(plan.len(), 8);
+        let kills: Vec<_> =
+            plan.iter().filter(|(_, a)| *a == ChurnAction::Kill).map(|(t, _)| *t).collect();
+        let restores: Vec<_> =
+            plan.iter().filter(|(_, a)| *a == ChurnAction::Restore).map(|(t, _)| *t).collect();
+        assert_eq!(kills.len(), 4);
+        assert_eq!(restores.len(), 4);
+        assert!(kills.windows(2).all(|w| w[0] < w[1]), "kills in order");
+        assert!(kills.last().unwrap() < restores.first().unwrap(), "kills before restores");
+        assert!(*restores.last().unwrap() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for name in ["stable", "oneshot", "incremental"] {
+            assert_eq!(ChurnScenario::by_name(name, 2).unwrap().name(), name);
+        }
+        assert!(ChurnScenario::by_name("thundering-herd", 2).is_err());
+    }
+
+    #[test]
+    fn inject_drives_a_live_service() {
+        use crate::coordinator::router::Router;
+        use crate::coordinator::service::Service;
+        let router = Router::new("memento", 6, 60, None).unwrap();
+        let svc = Service::new(router.clone());
+        let admin = Box::new(super::super::target::InProcTarget::new(svc));
+        let plan = vec![
+            (Duration::ZERO, ChurnAction::Kill),
+            (Duration::ZERO, ChurnAction::Kill),
+            (Duration::ZERO, ChurnAction::Restore),
+        ];
+        let log = inject(admin, &plan, Instant::now(), 6);
+        assert_eq!(log.len(), 3, "{log:?}");
+        assert!(log[0].contains("KILLED"), "{}", log[0]);
+        assert!(log[1].contains("KILLED"), "{}", log[1]);
+        assert!(log[2].contains("ADDED"), "{}", log[2]);
+        assert_eq!(router.working(), 5);
+    }
+}

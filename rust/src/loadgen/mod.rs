@@ -1,0 +1,358 @@
+//! `loadgen` — a multi-threaded traffic subsystem that measures the
+//! cluster under fire.
+//!
+//! The paper evaluates lookup speed with single-threaded microbenchmarks;
+//! this module measures the *system* — TCP front-end → router → storage —
+//! under production-shaped traffic:
+//!
+//! * **closed-loop** ([`Mode::Closed`]): N workers issue back-to-back
+//!   requests, measuring the service's saturation throughput;
+//! * **open-loop** ([`Mode::Open`]): arrivals are paced on a fixed
+//!   schedule with coordinated-omission correction (see [`pacing`]), the
+//!   honest way to measure tail latency at a target rate;
+//! * pluggable [`workload`]s (uniform / Zipf / hot-set, GET/PUT mix);
+//! * a [`churn`] injector that fails and restores nodes mid-run, so the
+//!   paper's stable / one-shot / incremental scenarios run end-to-end;
+//! * per-thread [`crate::metrics::Histogram`]s merged into a
+//!   [`report::RunReport`] with p50/p99/p999 and JSON/CSV output.
+//!
+//! Traffic reaches the service through a [`target::Target`] — either
+//! in-process (no protocol overhead) or over live TCP — one per worker.
+
+pub mod churn;
+pub mod pacing;
+pub mod report;
+pub mod target;
+pub mod workload;
+
+pub use churn::{ChurnAction, ChurnScenario};
+pub use report::{RunReport, WorkerStats};
+pub use target::{Target, TargetFactory};
+pub use workload::{Op, Workload};
+
+use crate::hashing::prng::Xoshiro256;
+use pacing::OpenLoopPacer;
+use std::time::{Duration, Instant};
+
+/// Generator mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// Back-to-back requests per worker (saturation measurement).
+    Closed,
+    /// Paced arrivals at `rate` ops/s total, CO-corrected (tail-latency
+    /// measurement).
+    Open {
+        /// Target arrival rate in ops/s across all workers.
+        rate: f64,
+    },
+}
+
+impl Mode {
+    /// Build by CLI name: `closed`, or `open` with a total rate.
+    pub fn by_name(name: &str, rate: f64) -> Result<Self, String> {
+        match name {
+            "closed" => Ok(Mode::Closed),
+            "open" => {
+                if !rate.is_finite() || rate <= 0.0 {
+                    return Err(format!("open-loop rate must be a positive number, got {rate}"));
+                }
+                Ok(Mode::Open { rate })
+            }
+            other => Err(format!("unknown mode '{other}' (closed|open)")),
+        }
+    }
+
+    /// The mode's display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Closed => "closed",
+            Mode::Open { .. } => "open",
+        }
+    }
+}
+
+/// One run's configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Closed- or open-loop generation.
+    pub mode: Mode,
+    /// Traffic shape.
+    pub workload: Workload,
+    /// Worker thread count.
+    pub threads: usize,
+    /// Scheduled run length (open-loop backlog may drain past it).
+    pub duration: Duration,
+    /// Membership churn fired during the run.
+    pub churn: ChurnScenario,
+    /// Bucket ids the churn injector may probe for `KILL` (the initial
+    /// cluster size).
+    pub cluster_buckets: u32,
+    /// Seed for the per-worker key/op streams.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            mode: Mode::Closed,
+            workload: Workload::uniform(100_000, 0.7),
+            threads: 4,
+            duration: Duration::from_secs(2),
+            churn: ChurnScenario::Stable,
+            cluster_buckets: 16,
+            seed: 7,
+        }
+    }
+}
+
+/// Write keys `0..n` through fresh targets so read traffic hits existing
+/// data; returns the number of acknowledged PUTs. Larger preloads are
+/// striped across a few parallel connections — serially, 10k loopback
+/// round trips would cost most of a second of unmeasured startup time.
+pub fn preload(factory: &TargetFactory, n: u64) -> Result<u64, String> {
+    let conns: u64 = if n >= 1_000 { 4 } else { 1 };
+    let mut loaders = Vec::with_capacity(conns as usize);
+    for c in 0..conns {
+        let mut t = factory().map_err(|e| format!("preload target: {e}"))?;
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-preload-{c}"))
+            .spawn(move || -> Result<u64, String> {
+                let mut ok = 0u64;
+                let mut k = c;
+                while k < n {
+                    let resp =
+                        t.call(&Op::Put(k).to_line()).map_err(|e| format!("preload: {e}"))?;
+                    if resp.starts_with("OK") {
+                        ok += 1;
+                    }
+                    k += conns;
+                }
+                Ok(ok)
+            })
+            .map_err(|e| format!("spawn preloader {c}: {e}"))?;
+        loaders.push(handle);
+    }
+    let mut total = 0u64;
+    for h in loaders {
+        total += h.join().map_err(|_| "a preloader panicked".to_string())??;
+    }
+    Ok(total)
+}
+
+/// Run one load test: spawn workers (and the churn injector if the
+/// scenario has one), drive traffic until the schedule ends, merge every
+/// thread's histograms and return the report.
+pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, String> {
+    let threads = cfg.threads.max(1);
+    // Open every connection up front so a refused target fails the run
+    // before any traffic is sent.
+    let mut targets = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        targets.push(factory().map_err(|e| format!("worker target: {e}"))?);
+    }
+    let plan = cfg.churn.plan(cfg.duration);
+    let churn_admin = if plan.is_empty() {
+        None
+    } else {
+        Some(factory().map_err(|e| format!("churn target: {e}"))?)
+    };
+
+    let start = Instant::now();
+    let mut workers = Vec::with_capacity(threads);
+    for (w, tgt) in targets.into_iter().enumerate() {
+        let workload = cfg.workload.clone();
+        let duration = cfg.duration;
+        // Each worker paces 1/threads of the rate, phase-shifted so the
+        // combined stream is uniform rather than `threads`-sized bursts.
+        let pacer = match cfg.mode {
+            Mode::Open { rate } => {
+                let p = OpenLoopPacer::with_rate(start, rate / threads as f64);
+                let phase = p.interval_ns() * w as u64 / threads as u64;
+                Some(p.with_phase(phase))
+            }
+            Mode::Closed => None,
+        };
+        // Decorrelated per-worker streams from one seed.
+        let seed = crate::hashing::mix::splitmix64_mix(cfg.seed ^ ((w as u64 + 1) << 32));
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-{w}"))
+            .spawn(move || worker_loop(tgt, &workload, pacer, duration, start, seed))
+            .map_err(|e| format!("spawn worker {w}: {e}"))?;
+        workers.push(handle);
+    }
+    let churn_thread = match churn_admin {
+        Some(admin) => {
+            let buckets = cfg.cluster_buckets;
+            Some(
+                std::thread::Builder::new()
+                    .name("loadgen-churn".into())
+                    .spawn(move || churn::inject(admin, &plan, start, buckets))
+                    .map_err(|e| format!("spawn churn injector: {e}"))?,
+            )
+        }
+        None => None,
+    };
+
+    let mut merged = WorkerStats::new();
+    for w in workers {
+        let stats = w.join().map_err(|_| "a loadgen worker panicked".to_string())?;
+        merged.merge(&stats);
+    }
+    let churn_log = match churn_thread {
+        Some(t) => t.join().map_err(|_| "the churn injector panicked".to_string())?,
+        None => Vec::new(),
+    };
+    let elapsed = start.elapsed();
+
+    Ok(RunReport {
+        mode: cfg.mode.name().to_string(),
+        workload: cfg.workload.name().to_string(),
+        churn: cfg.churn.name().to_string(),
+        threads,
+        target_rate: match cfg.mode {
+            Mode::Open { rate } => rate,
+            Mode::Closed => 0.0,
+        },
+        elapsed,
+        ops: merged.ops,
+        errors: merged.errors,
+        aborted_workers: merged.aborted_workers,
+        acked_puts: merged.acked_puts,
+        corrected: merged.corrected,
+        naive: merged.naive,
+        churn_log,
+    })
+}
+
+fn worker_loop(
+    mut tgt: Box<dyn Target>,
+    workload: &Workload,
+    mut pacer: Option<OpenLoopPacer>,
+    duration: Duration,
+    start: Instant,
+    seed: u64,
+) -> WorkerStats {
+    let mut rng = Xoshiro256::new(seed);
+    let mut stats = WorkerStats::new();
+    loop {
+        // The intended arrival: scheduled (open) or "now" (closed, where
+        // corrected and naive latency coincide).
+        let intended = match &mut pacer {
+            Some(p) => match p.next_arrival(duration) {
+                Some(t) => t,
+                None => break,
+            },
+            None => {
+                if start.elapsed() >= duration {
+                    break;
+                }
+                Instant::now()
+            }
+        };
+        let op = workload.next_op(&mut rng);
+        let line = op.to_line();
+        let sent = Instant::now();
+        match tgt.call(&line) {
+            Ok(resp) => {
+                let done = Instant::now();
+                if resp.is_empty() || resp.starts_with("ERR") || resp.starts_with("BUSY") {
+                    stats.errors += 1;
+                    continue;
+                }
+                stats.ops += 1;
+                if op.is_put() && resp.starts_with("OK") {
+                    stats.acked_puts += 1;
+                }
+                stats
+                    .corrected
+                    .record(crate::metrics::duration_to_ns(done.duration_since(intended)));
+                stats.naive.record(crate::metrics::duration_to_ns(done.duration_since(sent)));
+            }
+            Err(_) => {
+                // Transport failure: the connection is gone; stop this
+                // worker rather than skewing the histograms with retries,
+                // and flag the abort so the report can say the offered
+                // load fell short.
+                stats.errors += 1;
+                stats.aborted_workers = 1;
+                break;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Router;
+    use crate::coordinator::service::Service;
+
+    fn inproc() -> (std::sync::Arc<Router>, TargetFactory) {
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let svc = Service::new(router.clone());
+        (router, target::inproc_factory(svc))
+    }
+
+    #[test]
+    fn closed_loop_run_counts_every_op() {
+        let (_router, factory) = inproc();
+        assert_eq!(preload(&factory, 200).unwrap(), 200);
+        let cfg = LoadgenConfig {
+            workload: Workload::uniform(200, 0.5),
+            threads: 2,
+            duration: Duration::from_millis(100),
+            ..LoadgenConfig::default()
+        };
+        let rep = run(&cfg, &factory).unwrap();
+        assert!(rep.ops > 100, "ops {}", rep.ops);
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.aborted_workers, 0);
+        assert_eq!(rep.ops, rep.corrected.count());
+        assert_eq!(rep.ops, rep.naive.count());
+        assert!(rep.acked_puts > 0);
+        assert!(rep.throughput() > 0.0);
+    }
+
+    #[test]
+    fn open_loop_hits_roughly_the_target_rate() {
+        let (_router, factory) = inproc();
+        let cfg = LoadgenConfig {
+            mode: Mode::Open { rate: 4_000.0 },
+            workload: Workload::uniform(100, 0.0),
+            threads: 2,
+            duration: Duration::from_millis(500),
+            ..LoadgenConfig::default()
+        };
+        let rep = run(&cfg, &factory).unwrap();
+        // 4000/s for 0.5 s = 2000 scheduled arrivals; an in-process target
+        // never backlogs, so the whole schedule must be served.
+        assert!((1_500..=2_100).contains(&rep.ops), "ops {}", rep.ops);
+    }
+
+    #[test]
+    fn churn_scenario_changes_membership_mid_run() {
+        let (router, factory) = inproc();
+        let cfg = LoadgenConfig {
+            workload: Workload::uniform(500, 0.3),
+            threads: 2,
+            duration: Duration::from_millis(300),
+            churn: ChurnScenario::OneShot { kills: 2 },
+            cluster_buckets: 8,
+            ..LoadgenConfig::default()
+        };
+        let rep = run(&cfg, &factory).unwrap();
+        assert_eq!(router.epoch(), 2, "both kills must land");
+        assert_eq!(router.working(), 6);
+        assert_eq!(rep.churn_log.len(), 2, "{:?}", rep.churn_log);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(Mode::by_name("closed", 0.0).unwrap(), Mode::Closed);
+        assert_eq!(Mode::by_name("open", 100.0).unwrap(), Mode::Open { rate: 100.0 });
+        assert!(Mode::by_name("open", 0.0).is_err());
+        assert!(Mode::by_name("open", f64::INFINITY).is_err());
+        assert!(Mode::by_name("ajar", 1.0).is_err());
+    }
+}

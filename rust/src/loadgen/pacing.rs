@@ -1,0 +1,143 @@
+//! Open-loop pacing with coordinated-omission correction.
+//!
+//! A **closed-loop** generator (N workers, back-to-back requests) silently
+//! stops offering load the moment the service stalls: the stalled request
+//! blocks its worker, no new requests arrive, and the latency histogram
+//! never sees the requests that *would have* arrived — Gil Tene's
+//! "coordinated omission". An **open-loop** generator fixes the arrival
+//! schedule in advance, independent of the service: each request has an
+//! *intended* arrival time, and its latency is measured from that intended
+//! time, not from when the (possibly backlogged) worker actually got to
+//! send it. A stall therefore charges every queued arrival with its full
+//! wait, exactly what a real user behind the stall would experience.
+//!
+//! [`OpenLoopPacer`] produces that schedule: arrivals every `interval_ns`
+//! from a fixed start. When ahead of schedule it sleeps; when behind it
+//! returns immediately (never skipping an arrival) so the backlog drains
+//! at full speed while latencies stay anchored to the schedule.
+
+use std::time::{Duration, Instant};
+
+/// Fixed-rate arrival schedule for one worker.
+#[derive(Debug)]
+pub struct OpenLoopPacer {
+    start: Instant,
+    interval_ns: u64,
+    next_ns: u64,
+}
+
+impl OpenLoopPacer {
+    /// A pacer issuing one arrival every `interval_ns` nanoseconds,
+    /// anchored at `start`.
+    pub fn new(start: Instant, interval_ns: u64) -> Self {
+        Self { start, interval_ns: interval_ns.max(1), next_ns: 0 }
+    }
+
+    /// A pacer for `rate` arrivals per second.
+    pub fn with_rate(start: Instant, rate: f64) -> Self {
+        assert!(rate > 0.0, "open-loop rate must be positive");
+        Self::new(start, (1e9 / rate) as u64)
+    }
+
+    /// Shift the whole schedule by `offset_ns`. With N same-rate workers,
+    /// phase worker `w` by `w * interval / N` so the combined stream is
+    /// uniform instead of N-request bursts every interval — bursts queue
+    /// behind each other and would charge self-induced waiting to the
+    /// service's tail.
+    pub fn with_phase(mut self, offset_ns: u64) -> Self {
+        self.next_ns = offset_ns;
+        self
+    }
+
+    /// Block until the next intended arrival and return its scheduled
+    /// time, or `None` once the schedule passes `duration`. When the
+    /// caller is behind schedule this returns immediately — the arrival is
+    /// late, not dropped, and latency measured from the returned instant
+    /// includes the queueing delay (the coordinated-omission correction).
+    pub fn next_arrival(&mut self, duration: Duration) -> Option<Instant> {
+        if u128::from(self.next_ns) >= duration.as_nanos() {
+            return None;
+        }
+        let intended = self.start + Duration::from_nanos(self.next_ns);
+        self.next_ns += self.interval_ns;
+        let now = Instant::now();
+        if intended > now {
+            std::thread::sleep(intended - now);
+        }
+        Some(intended)
+    }
+
+    /// Nanoseconds between scheduled arrivals.
+    pub fn interval_ns(&self) -> u64 {
+        self.interval_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_fixed_rate_and_bounded() {
+        let start = Instant::now();
+        let mut p = OpenLoopPacer::new(start, 1_000_000); // 1 ms
+        let mut arrivals = Vec::new();
+        while let Some(t) = p.next_arrival(Duration::from_millis(20)) {
+            arrivals.push(t);
+        }
+        assert_eq!(arrivals.len(), 20);
+        for (i, t) in arrivals.iter().enumerate() {
+            assert_eq!(
+                t.duration_since(start).as_nanos() as u64 / 1_000_000,
+                i as u64,
+                "arrival {i} off schedule"
+            );
+        }
+    }
+
+    #[test]
+    fn late_callers_get_past_arrivals_immediately() {
+        let start = Instant::now();
+        let mut p = OpenLoopPacer::new(start, 1_000_000);
+        // Simulate a 10 ms service stall before the first poll.
+        std::thread::sleep(Duration::from_millis(10));
+        let t0 = Instant::now();
+        let mut got = 0;
+        // The ~10 backlogged arrivals must be handed out without sleeping.
+        for _ in 0..8 {
+            let intended = p.next_arrival(Duration::from_millis(50)).unwrap();
+            assert!(intended <= Instant::now(), "backlogged arrival is in the past");
+            got += 1;
+        }
+        assert_eq!(got, 8);
+        assert!(
+            t0.elapsed() < Duration::from_millis(5),
+            "backlog drain must not sleep, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn rate_maps_to_interval() {
+        let p = OpenLoopPacer::with_rate(Instant::now(), 10_000.0);
+        assert_eq!(p.interval_ns(), 100_000);
+    }
+
+    #[test]
+    fn phased_pacers_interleave_instead_of_bursting() {
+        let start = Instant::now();
+        let dur = Duration::from_millis(8);
+        let mut a = OpenLoopPacer::new(start, 2_000_000);
+        let mut b = OpenLoopPacer::new(start, 2_000_000).with_phase(1_000_000);
+        let mut arrivals = Vec::new();
+        while let Some(t) = a.next_arrival(dur) {
+            arrivals.push(t.duration_since(start).as_nanos() as u64);
+        }
+        while let Some(t) = b.next_arrival(dur) {
+            arrivals.push(t.duration_since(start).as_nanos() as u64);
+        }
+        arrivals.sort_unstable();
+        // Combined stream: one arrival every 1 ms, no duplicates.
+        assert_eq!(arrivals, (0..8).map(|i| i * 1_000_000).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,304 @@
+//! Run reporting: per-thread stats merged into one report, rendered for
+//! humans and emitted as CSV (via [`crate::benchkit::report`]) and JSON so
+//! results land in the benchmark trajectory next to the figure CSVs.
+
+use crate::benchkit::{self, report::Table};
+use crate::metrics::Histogram;
+use std::time::Duration;
+
+/// What one worker thread measured. Merged across threads at the end of a
+/// run via [`Histogram::merge`].
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    /// Successfully answered operations.
+    pub ops: u64,
+    /// Errored operations (`ERR …`, empty responses, transport failures).
+    pub errors: u64,
+    /// Workers that lost their transport mid-run and abandoned the rest
+    /// of their schedule (1 for a single worker's stats; summed on merge).
+    pub aborted_workers: u64,
+    /// PUTs acknowledged with `OK` (the writes a durability check must
+    /// find again).
+    pub acked_puts: u64,
+    /// Latency measured from the *intended* arrival time (coordinated-
+    /// omission-corrected; equals `naive` in closed-loop mode).
+    pub corrected: Histogram,
+    /// Latency measured from the actual send time.
+    pub naive: Histogram,
+}
+
+impl WorkerStats {
+    /// Empty stats.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold another worker's stats into this one.
+    pub fn merge(&mut self, other: &WorkerStats) {
+        self.ops += other.ops;
+        self.errors += other.errors;
+        self.aborted_workers += other.aborted_workers;
+        self.acked_puts += other.acked_puts;
+        self.corrected.merge(&other.corrected);
+        self.naive.merge(&other.naive);
+    }
+}
+
+/// The merged result of one loadgen run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Generator mode (`closed` / `open`).
+    pub mode: String,
+    /// Workload name.
+    pub workload: String,
+    /// Churn scenario name.
+    pub churn: String,
+    /// Worker thread count.
+    pub threads: usize,
+    /// Open-loop target rate in ops/s (0 for closed-loop).
+    pub target_rate: f64,
+    /// Wall-clock run length (includes backlog drain past the schedule).
+    pub elapsed: Duration,
+    /// Successfully answered operations across all threads.
+    pub ops: u64,
+    /// Errored operations across all threads.
+    pub errors: u64,
+    /// Workers that lost their transport and abandoned their schedule —
+    /// nonzero means the offered load fell short of the configured rate.
+    pub aborted_workers: u64,
+    /// PUTs acknowledged with `OK`.
+    pub acked_puts: u64,
+    /// Merged CO-corrected latency histogram (nanoseconds).
+    pub corrected: Histogram,
+    /// Merged naive (send-to-response) latency histogram (nanoseconds).
+    pub naive: Histogram,
+    /// Churn injector log, one line per event.
+    pub churn_log: Vec<String>,
+}
+
+impl RunReport {
+    /// Achieved throughput in ops/s.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.ops as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let q = |h: &Histogram, p: f64| benchkit::fmt_ns(h.quantile(p) as f64);
+        let mut out = String::new();
+        out.push_str("== loadgen report ==\n");
+        out.push_str(&format!(
+            "mode={} workload={} churn={} threads={}",
+            self.mode, self.workload, self.churn, self.threads
+        ));
+        if self.target_rate > 0.0 {
+            out.push_str(&format!(" rate={:.0}/s", self.target_rate));
+        }
+        out.push('\n');
+        out.push_str(&format!(
+            "elapsed={:.2?} ops={} errors={} acked_puts={} throughput={:.0} ops/s\n",
+            self.elapsed,
+            self.ops,
+            self.errors,
+            self.acked_puts,
+            self.throughput()
+        ));
+        if self.aborted_workers > 0 {
+            out.push_str(&format!(
+                "WARNING: {} of {} workers lost their connection and abandoned \
+                 their schedule — offered load fell short of the target\n",
+                self.aborted_workers, self.threads
+            ));
+        }
+        out.push_str(&format!(
+            "latency (CO-corrected): p50={} p90={} p99={} p999={} max={}\n",
+            q(&self.corrected, 0.5),
+            q(&self.corrected, 0.9),
+            q(&self.corrected, 0.99),
+            q(&self.corrected, 0.999),
+            benchkit::fmt_ns(self.corrected.max() as f64)
+        ));
+        out.push_str(&format!(
+            "latency (naive):        p50={} p90={} p99={} p999={} max={}\n",
+            q(&self.naive, 0.5),
+            q(&self.naive, 0.9),
+            q(&self.naive, 0.99),
+            q(&self.naive, 0.999),
+            benchkit::fmt_ns(self.naive.max() as f64)
+        ));
+        if !self.churn_log.is_empty() {
+            out.push_str("churn events:\n");
+            for line in &self.churn_log {
+                out.push_str(&format!("  {line}\n"));
+            }
+        }
+        out
+    }
+
+    /// One-row table for the CSV trajectory under `results/`.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "loadgen",
+            &[
+                "mode", "workload", "churn", "threads", "rate", "elapsed_s", "ops", "errors",
+                "throughput", "p50_ns", "p90_ns", "p99_ns", "p999_ns", "max_ns", "naive_p99_ns",
+            ],
+        );
+        t.push_row(vec![
+            self.mode.clone(),
+            self.workload.clone(),
+            self.churn.clone(),
+            self.threads.to_string(),
+            format!("{:.0}", self.target_rate),
+            format!("{:.3}", self.elapsed.as_secs_f64()),
+            self.ops.to_string(),
+            self.errors.to_string(),
+            format!("{:.0}", self.throughput()),
+            self.corrected.quantile(0.5).to_string(),
+            self.corrected.quantile(0.9).to_string(),
+            self.corrected.quantile(0.99).to_string(),
+            self.corrected.quantile(0.999).to_string(),
+            self.corrected.max().to_string(),
+            self.naive.quantile(0.99).to_string(),
+        ]);
+        t
+    }
+
+    /// Serialize as a JSON object (hand-rolled; serde is not in the
+    /// offline crate set).
+    pub fn to_json(&self) -> String {
+        let hist = |h: &Histogram| {
+            format!(
+                "{{\"n\": {}, \"mean_ns\": {:.1}, \"p50\": {}, \"p90\": {}, \"p99\": {}, \
+                 \"p999\": {}, \"max\": {}}}",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.9),
+                h.quantile(0.99),
+                h.quantile(0.999),
+                h.max()
+            )
+        };
+        let events: Vec<String> =
+            self.churn_log.iter().map(|e| format!("\"{}\"", json_escape(e))).collect();
+        format!(
+            "{{\n  \"mode\": \"{}\",\n  \"workload\": \"{}\",\n  \"churn\": \"{}\",\n  \
+             \"threads\": {},\n  \"target_rate\": {:.1},\n  \"elapsed_s\": {:.3},\n  \
+             \"ops\": {},\n  \"errors\": {},\n  \"aborted_workers\": {},\n  \
+             \"acked_puts\": {},\n  \
+             \"throughput\": {:.1},\n  \"latency_ns\": {},\n  \"naive_latency_ns\": {},\n  \
+             \"churn_events\": [{}]\n}}\n",
+            json_escape(&self.mode),
+            json_escape(&self.workload),
+            json_escape(&self.churn),
+            self.threads,
+            self.target_rate,
+            self.elapsed.as_secs_f64(),
+            self.ops,
+            self.errors,
+            self.aborted_workers,
+            self.acked_puts,
+            self.throughput(),
+            hist(&self.corrected),
+            hist(&self.naive),
+            events.join(", ")
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> RunReport {
+        let mut corrected = Histogram::new();
+        let mut naive = Histogram::new();
+        for i in 1..=1000u64 {
+            corrected.record(i * 1000);
+            naive.record(i * 500);
+        }
+        RunReport {
+            mode: "open".into(),
+            workload: "zipf".into(),
+            churn: "incremental".into(),
+            threads: 4,
+            target_rate: 10_000.0,
+            elapsed: Duration::from_secs(2),
+            ops: 1000,
+            errors: 0,
+            aborted_workers: 0,
+            acked_puts: 300,
+            corrected,
+            naive,
+            churn_log: vec!["[500ms] KILL 3 -> KILLED node-3 MOVED 42".into()],
+        }
+    }
+
+    #[test]
+    fn worker_stats_merge_accumulates() {
+        let mut a = WorkerStats::new();
+        let mut b = WorkerStats::new();
+        a.ops = 10;
+        a.acked_puts = 3;
+        a.corrected.record(100);
+        b.ops = 5;
+        b.errors = 1;
+        b.aborted_workers = 1;
+        b.corrected.record(200);
+        a.merge(&b);
+        assert_eq!(a.ops, 15);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.aborted_workers, 1);
+        assert_eq!(a.acked_puts, 3);
+        assert_eq!(a.corrected.count(), 2);
+    }
+
+    #[test]
+    fn render_mentions_the_percentiles() {
+        let r = sample_report().render();
+        assert!(r.contains("p50="), "{r}");
+        assert!(r.contains("p999="), "{r}");
+        assert!(r.contains("throughput=500 ops/s"), "{r}");
+        assert!(r.contains("KILL 3"), "{r}");
+    }
+
+    #[test]
+    fn table_row_matches_columns() {
+        let t = sample_report().to_table();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0].len(), t.columns.len());
+        let csv = t.to_csv();
+        assert!(csv.starts_with("mode,workload,churn"), "{csv}");
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let j = sample_report().to_json();
+        assert!(j.contains("\"p99\""), "{j}");
+        assert!(j.contains("\"churn_events\""), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,105 @@
+//! Load targets: where generated traffic goes.
+//!
+//! A [`Target`] maps one protocol line to one response line — the same
+//! contract as [`crate::coordinator::service::Service::handle`] and the
+//! TCP line protocol, so the generator can drive either interchangeably:
+//!
+//! * [`InProcTarget`] calls the service directly (isolates engine +
+//!   storage cost from protocol overhead);
+//! * [`TcpTarget`] goes through a real socket to a live
+//!   [`crate::netserver`] front-end (measures the whole stack).
+//!
+//! Each worker thread gets its own target from a [`TargetFactory`], so
+//! TCP workers hold independent connections and in-process workers share
+//! the service through its own internal synchronization.
+
+use crate::coordinator::service::Service;
+use crate::netserver::Client;
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+/// One request line in, one response line out. Implementations must be
+/// [`Send`] — every worker thread owns one target exclusively.
+pub trait Target: Send {
+    /// Issue one request and wait for its response.
+    fn call(&mut self, line: &str) -> std::io::Result<String>;
+}
+
+/// Creates one independent [`Target`] per worker thread (plus one for the
+/// churn injector and one for preloading).
+pub type TargetFactory = Arc<dyn Fn() -> std::io::Result<Box<dyn Target>> + Send + Sync>;
+
+/// Drives an in-process [`Service`] without any protocol framing.
+pub struct InProcTarget {
+    svc: Arc<Service>,
+}
+
+impl InProcTarget {
+    /// A target over a shared service handle.
+    pub fn new(svc: Arc<Service>) -> Self {
+        Self { svc }
+    }
+}
+
+impl Target for InProcTarget {
+    fn call(&mut self, line: &str) -> std::io::Result<String> {
+        Ok(self.svc.handle(line))
+    }
+}
+
+/// Drives a live TCP front-end over one pipelined connection.
+pub struct TcpTarget {
+    client: Client,
+}
+
+impl TcpTarget {
+    /// Connect to a running server.
+    pub fn connect(addr: &SocketAddr) -> std::io::Result<Self> {
+        Ok(Self { client: Client::connect(addr)? })
+    }
+}
+
+impl Target for TcpTarget {
+    fn call(&mut self, line: &str) -> std::io::Result<String> {
+        self.client.request(line)
+    }
+}
+
+/// Factory producing in-process targets over one shared service.
+pub fn inproc_factory(svc: Arc<Service>) -> TargetFactory {
+    Arc::new(move || Ok(Box::new(InProcTarget::new(svc.clone())) as Box<dyn Target>))
+}
+
+/// Factory producing one TCP connection per worker.
+pub fn tcp_factory(addr: SocketAddr) -> TargetFactory {
+    Arc::new(move || TcpTarget::connect(&addr).map(|t| Box::new(t) as Box<dyn Target>))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Router;
+
+    #[test]
+    fn inproc_target_round_trips() {
+        let router = Router::new("memento", 4, 40, None).unwrap();
+        let svc = Service::new(router);
+        let factory = inproc_factory(svc);
+        let mut t = factory().unwrap();
+        assert!(t.call("PUT 7 hello").unwrap().starts_with("OK"));
+        assert!(t.call("GET 7").unwrap().contains("hello"));
+    }
+
+    #[test]
+    fn tcp_target_round_trips() {
+        let router = Router::new("memento", 4, 40, None).unwrap();
+        let svc = Service::new(router);
+        let server = svc.serve("127.0.0.1:0", 8).unwrap();
+        let factory = tcp_factory(server.addr());
+        let mut t = factory().unwrap();
+        assert!(t.call("PUT 9 world").unwrap().starts_with("OK"));
+        assert!(t.call("GET 9").unwrap().contains("world"));
+        drop(t);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,241 @@
+//! Pluggable traffic workloads: which keys, and what to do with them.
+//!
+//! Key popularity is the axis the paper's balance claims live on —
+//! consistent hashing balances key *slots*, not request *load* — so the
+//! generator ships the three shapes a router meets in production:
+//!
+//! * **uniform** — every key equally likely (the paper's benchmark shape);
+//! * **zipf(α)** — power-law popularity via [`crate::hashing::zipf`]
+//!   (rank 0 is the hottest key);
+//! * **hot** — a fixed hot set takes a fixed fraction of traffic (cache
+//!   stampedes, celebrity objects).
+//!
+//! Orthogonally, `read_frac` splits every workload into a GET/PUT mix.
+
+use crate::hashing::prng::Rng64;
+use crate::hashing::zipf::Zipf;
+
+/// One generated operation, rendered to the service line protocol by
+/// [`Op::to_line`]. Keys are decimal u64 tokens, which the service takes
+/// verbatim (no edge digest), so placement is reproducible across runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Read a key.
+    Get(u64),
+    /// Write a key (value is derived from the key).
+    Put(u64),
+}
+
+impl Op {
+    /// Render as a service protocol line.
+    pub fn to_line(self) -> String {
+        match self {
+            Op::Get(k) => format!("GET {k}"),
+            Op::Put(k) => format!("PUT {k} v{k}"),
+        }
+    }
+
+    /// Whether this is a write.
+    pub fn is_put(self) -> bool {
+        matches!(self, Op::Put(_))
+    }
+}
+
+/// How keys are drawn from the keyspace.
+#[derive(Debug, Clone)]
+enum KeyDist {
+    Uniform,
+    Zipf(Zipf),
+    Hot {
+        /// Fraction of traffic aimed at the hot set.
+        hot_frac: f64,
+        /// Size of the hot set (keys `0..hot_keys`).
+        hot_keys: u64,
+    },
+}
+
+/// A traffic shape: key distribution × read/write mix over a keyspace.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    dist: KeyDist,
+    keyspace: u64,
+    read_frac: f64,
+}
+
+/// Clamp a probability to `[0, 1]`, mapping NaN to 0.
+fn clamp01(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x.clamp(0.0, 1.0)
+    }
+}
+
+impl Workload {
+    /// Uniform keys over `0..keyspace`.
+    pub fn uniform(keyspace: u64, read_frac: f64) -> Self {
+        Self { dist: KeyDist::Uniform, keyspace: keyspace.max(1), read_frac: clamp01(read_frac) }
+    }
+
+    /// Zipf(α) keys over `0..keyspace` (key 0 is the hottest).
+    pub fn zipf(keyspace: u64, alpha: f64, read_frac: f64) -> Self {
+        let n = keyspace.max(1);
+        Self {
+            dist: KeyDist::Zipf(Zipf::new(n, alpha)),
+            keyspace: n,
+            read_frac: clamp01(read_frac),
+        }
+    }
+
+    /// A hot set of `hot_keys` keys receiving `hot_frac` of all traffic;
+    /// the rest is uniform over the full keyspace.
+    pub fn hot(keyspace: u64, hot_frac: f64, hot_keys: u64, read_frac: f64) -> Self {
+        let n = keyspace.max(1);
+        Self {
+            dist: KeyDist::Hot {
+                hot_frac: clamp01(hot_frac),
+                hot_keys: hot_keys.clamp(1, n),
+            },
+            keyspace: n,
+            read_frac: clamp01(read_frac),
+        }
+    }
+
+    /// Build by CLI name: `uniform`, `zipf(alpha)`, or
+    /// `hot(hot_frac, hot_keys)` — the parameters the named shape doesn't
+    /// use are ignored.
+    pub fn by_name(
+        name: &str,
+        keyspace: u64,
+        alpha: f64,
+        hot_frac: f64,
+        hot_keys: u64,
+        read_frac: f64,
+    ) -> Result<Self, String> {
+        match name {
+            "uniform" => Ok(Self::uniform(keyspace, read_frac)),
+            "zipf" => {
+                if !alpha.is_finite() || alpha <= 0.0 {
+                    return Err(format!("zipf exponent must be a positive number, got {alpha}"));
+                }
+                Ok(Self::zipf(keyspace, alpha, read_frac))
+            }
+            "hot" => Ok(Self::hot(keyspace, hot_frac, hot_keys, read_frac)),
+            other => Err(format!("unknown workload '{other}' (uniform|zipf|hot)")),
+        }
+    }
+
+    /// The workload's display name.
+    pub fn name(&self) -> &'static str {
+        match self.dist {
+            KeyDist::Uniform => "uniform",
+            KeyDist::Zipf(_) => "zipf",
+            KeyDist::Hot { .. } => "hot",
+        }
+    }
+
+    /// Keyspace size.
+    pub fn keyspace(&self) -> u64 {
+        self.keyspace
+    }
+
+    /// Draw the next key.
+    pub fn next_key<R: Rng64>(&self, rng: &mut R) -> u64 {
+        match &self.dist {
+            KeyDist::Uniform => rng.next_below(self.keyspace),
+            KeyDist::Zipf(z) => z.sample(rng),
+            KeyDist::Hot { hot_frac, hot_keys } => {
+                if rng.next_bool(*hot_frac) {
+                    rng.next_below(*hot_keys)
+                } else {
+                    rng.next_below(self.keyspace)
+                }
+            }
+        }
+    }
+
+    /// Draw the next operation (GET with probability `read_frac`).
+    pub fn next_op<R: Rng64>(&self, rng: &mut R) -> Op {
+        let key = self.next_key(rng);
+        if rng.next_bool(self.read_frac) {
+            Op::Get(key)
+        } else {
+            Op::Put(key)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::prng::Xoshiro256;
+
+    #[test]
+    fn ops_render_to_protocol_lines() {
+        assert_eq!(Op::Get(7).to_line(), "GET 7");
+        assert_eq!(Op::Put(9).to_line(), "PUT 9 v9");
+        assert!(Op::Put(1).is_put());
+        assert!(!Op::Get(1).is_put());
+    }
+
+    #[test]
+    fn read_frac_controls_the_mix() {
+        let w = Workload::uniform(1000, 0.75);
+        let mut rng = Xoshiro256::new(3);
+        let reads =
+            (0..20_000).filter(|_| matches!(w.next_op(&mut rng), Op::Get(_))).count();
+        let frac = reads as f64 / 20_000.0;
+        assert!((0.70..0.80).contains(&frac), "read fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_workload_skews_to_low_ranks() {
+        let w = Workload::zipf(10_000, 1.2, 1.0);
+        let mut rng = Xoshiro256::new(5);
+        let mut head = 0u32;
+        for _ in 0..20_000 {
+            if w.next_key(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        // The top 10 of 10k keys must take far more than their 0.1% share.
+        assert!(head > 2_000, "head hits {head}");
+    }
+
+    #[test]
+    fn hot_workload_concentrates_on_the_hot_set() {
+        let w = Workload::hot(100_000, 0.9, 16, 0.5);
+        let mut rng = Xoshiro256::new(9);
+        let mut hot = 0u32;
+        for _ in 0..20_000 {
+            if w.next_key(&mut rng) < 16 {
+                hot += 1;
+            }
+        }
+        let frac = hot as f64 / 20_000.0;
+        assert!((0.85..0.95).contains(&frac), "hot fraction {frac}");
+    }
+
+    #[test]
+    fn keys_stay_in_the_keyspace() {
+        let mut rng = Xoshiro256::new(1);
+        for w in [
+            Workload::uniform(100, 0.5),
+            Workload::zipf(100, 0.8, 0.5),
+            Workload::hot(100, 0.5, 10, 0.5),
+        ] {
+            for _ in 0..5_000 {
+                assert!(w.next_key(&mut rng) < 100);
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(Workload::by_name("uniform", 10, 1.0, 0.9, 4, 0.5).is_ok());
+        assert!(Workload::by_name("zipf", 10, 1.0, 0.9, 4, 0.5).is_ok());
+        assert!(Workload::by_name("zipf", 10, 0.0, 0.9, 4, 0.5).is_err());
+        assert!(Workload::by_name("hot", 10, 1.0, 0.9, 4, 0.5).is_ok());
+        assert!(Workload::by_name("pareto", 10, 1.0, 0.9, 4, 0.5).is_err());
+    }
+}

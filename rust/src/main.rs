@@ -3,6 +3,8 @@
 //! Subcommands:
 //! * `serve`    — run the consistent-hash KV router (TCP line protocol);
 //! * `figures`  — regenerate every paper figure (CSV under `results/`);
+//! * `loadgen`  — drive a live service with measured open/closed-loop
+//!   traffic and mid-run churn;
 //! * `lookup`   — one-shot key lookups against a fresh cluster (debugging);
 //! * `drill`    — scripted failure drill with rebalance audit;
 //! * `info`     — environment report (algorithms, artifacts, PJRT).
@@ -11,6 +13,7 @@ use memento::cli::ArgSpec;
 use memento::coordinator::router::Router;
 use memento::coordinator::service::Service;
 use memento::config::RouterConfig;
+use memento::loadgen::{self, ChurnScenario, LoadgenConfig, Mode, Target as _, Workload};
 use memento::runtime::{Engine, EngineHandle};
 use memento::simulator::{figures, Scale, ScenarioConfig};
 use std::sync::Arc;
@@ -20,6 +23,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
         Some("figures") => cmd_figures(&args[1..]),
+        Some("loadgen") => cmd_loadgen(&args[1..]),
         Some("lookup") => cmd_lookup(&args[1..]),
         Some("drill") => cmd_drill(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
@@ -38,7 +42,7 @@ fn main() {
 
 fn top_usage() -> &'static str {
     "memento — MementoHash consistent-hash router (paper reproduction)\n\n\
-     USAGE:\n  memento <serve|figures|lookup|drill|replay|info> [flags]\n\n\
+     USAGE:\n  memento <serve|figures|loadgen|lookup|drill|replay|info> [flags]\n\n\
      Run `memento <subcommand> --help` for details."
 }
 
@@ -218,10 +222,12 @@ fn cmd_figures(raw: &[String]) -> i32 {
         }
     };
     let scale = Scale::from_env();
-    let mut cfg = ScenarioConfig::default();
-    cfg.keys = match args.get_parsed::<usize>("keys") {
-        Ok(0) | Err(_) => scale.keys_per_cell().min(200_000),
-        Ok(k) => k,
+    let cfg = ScenarioConfig {
+        keys: match args.get_parsed::<usize>("keys") {
+            Ok(0) | Err(_) => scale.keys_per_cell().min(200_000),
+            Ok(k) => k,
+        },
+        ..ScenarioConfig::default()
     };
     let only = args.get("only");
     if only == "all" || only == "stable" {
@@ -237,6 +243,134 @@ fn cmd_figures(raw: &[String]) -> i32 {
         figures::fig_27_32_sensitivity(scale, &cfg).emit("fig_27_32_sensitivity");
     }
     0
+}
+
+fn cmd_loadgen(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("loadgen", "drive a live service with measured traffic")
+        .flag("mode", "closed", "closed | open (paced arrivals, CO-corrected)")
+        .flag("rate", "20000", "open-loop target ops/s (total across threads)")
+        .flag("workload", "zipf", "uniform | zipf | hot")
+        .flag("alpha", "1.1", "zipf exponent")
+        .flag("hot-frac", "0.9", "hot workload: share of traffic on the hot set")
+        .flag("hot-keys", "64", "hot workload: hot-set size")
+        .flag("read-frac", "0.7", "GET fraction (the rest are PUTs)")
+        .flag("keys", "100000", "keyspace size")
+        .flag("threads", "4", "worker threads")
+        .flag("duration", "3", "run length in seconds (fractions allowed)")
+        .flag("churn", "stable", "stable | oneshot | incremental")
+        .flag("kills", "0", "churn failures to inject (0 = nodes/4)")
+        .flag("algo", "memento", "consistent-hash algorithm")
+        .flag("nodes", "16", "initial nodes")
+        .flag("replicas", "2", "PUT replication factor")
+        .flag("target", "inproc", "inproc | tcp (loopback netserver)")
+        .flag("preload", "10000", "keys written before the run starts")
+        .flag("seed", "7", "workload rng seed")
+        .flag("json", "", "also write the report as JSON to this path")
+        .switch("no-csv", "skip the results/ CSV");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match run_loadgen(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("loadgen error: {e}");
+            1
+        }
+    }
+}
+
+fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
+    let nodes: usize = args.get_parsed("nodes")?;
+    let threads: usize = args.get_parsed("threads")?;
+    let replicas: usize = args.get_parsed("replicas")?;
+    let keys: u64 = args.get_parsed("keys")?;
+    let alpha: f64 = args.get_parsed("alpha")?;
+    let hot_frac: f64 = args.get_parsed("hot-frac")?;
+    let hot_keys: u64 = args.get_parsed("hot-keys")?;
+    let read_frac: f64 = args.get_parsed("read-frac")?;
+    let rate: f64 = args.get_parsed("rate")?;
+    let secs: f64 = args.get_parsed("duration")?;
+    let seed: u64 = args.get_parsed("seed")?;
+    let preload_n: u64 = args.get_parsed("preload")?;
+    let kills = match args.get_parsed::<usize>("kills")? {
+        0 => (nodes / 4).max(1),
+        k => k,
+    };
+    if !secs.is_finite() || secs <= 0.0 {
+        return Err("duration must be a positive number of seconds".into());
+    }
+
+    let router = Router::new(args.get("algo"), nodes, nodes * 10, None)
+        .map_err(|e| e.to_string())?;
+    let service = Service::with_replicas(router, replicas);
+    let (factory, server) = match args.get("target") {
+        "inproc" => (loadgen::target::inproc_factory(service.clone()), None),
+        "tcp" => {
+            let server = service
+                .serve("127.0.0.1:0", threads + 8)
+                .map_err(|e| format!("bind: {e}"))?;
+            println!("loadgen: serving on {}", server.addr());
+            (loadgen::target::tcp_factory(server.addr()), Some(server))
+        }
+        other => return Err(format!("unknown target '{other}' (inproc|tcp)")),
+    };
+
+    let cfg = LoadgenConfig {
+        mode: Mode::by_name(args.get("mode"), rate)?,
+        workload: Workload::by_name(args.get("workload"), keys, alpha, hot_frac, hot_keys, read_frac)?,
+        threads,
+        duration: std::time::Duration::from_secs_f64(secs),
+        churn: ChurnScenario::by_name(args.get("churn"), kills)?,
+        cluster_buckets: nodes as u32,
+        seed,
+    };
+    let loaded = loadgen::preload(&factory, preload_n)?;
+    println!(
+        "loadgen: algo={} nodes={nodes} replicas={replicas} preloaded={loaded} \
+         mode={} workload={} churn={} for {secs}s",
+        args.get("algo"),
+        cfg.mode.name(),
+        cfg.workload.name(),
+        cfg.churn.name()
+    );
+
+    let report = loadgen::run(&cfg, &factory)?;
+    println!("{}", report.render());
+    if !args.switch("no-csv") {
+        let stem = format!(
+            "loadgen_{}_{}_{}",
+            report.mode, report.workload, report.churn
+        );
+        match report.to_table().save_csv(&stem) {
+            Ok(p) => println!("[saved {}]", p.display()),
+            Err(e) => eprintln!("[csv save failed: {e}]"),
+        }
+    }
+    let json_path = args.get("json");
+    if !json_path.is_empty() {
+        std::fs::write(json_path, report.to_json())
+            .map_err(|e| format!("write {json_path}: {e}"))?;
+        println!("[saved {json_path}]");
+    }
+
+    // The service's own view of the run.
+    let mut admin = factory().map_err(|e| format!("admin target: {e}"))?;
+    match admin.call("STATS") {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("[STATS failed: {e}]"),
+    }
+    drop(admin);
+    if let Some(server) = server {
+        let remaining = server.shutdown();
+        if remaining > 0 {
+            eprintln!("[{remaining} connections did not drain]");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_lookup(raw: &[String]) -> i32 {

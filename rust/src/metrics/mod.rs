@@ -8,6 +8,12 @@ pub use histogram::Histogram;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Saturating `Duration` → `u64` nanoseconds, the [`Histogram`] domain
+/// (a duration over ~584 years clamps instead of wrapping).
+pub fn duration_to_ns(d: std::time::Duration) -> u64 {
+    d.as_nanos().min(u128::from(u64::MAX)) as u64
+}
+
 /// A monotonically increasing counter, safe to share across threads.
 #[derive(Debug, Default)]
 pub struct Counter {
@@ -78,6 +84,14 @@ impl RouterMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn duration_to_ns_saturates() {
+        use std::time::Duration;
+        assert_eq!(duration_to_ns(Duration::from_nanos(1_500)), 1_500);
+        assert_eq!(duration_to_ns(Duration::from_micros(2)), 2_000);
+        assert_eq!(duration_to_ns(Duration::MAX), u64::MAX);
+    }
 
     #[test]
     fn counter_basics() {

@@ -37,22 +37,42 @@ impl ServerHandle {
         self.live_conns.load(Ordering::Relaxed)
     }
 
-    /// Ask the accept loop to stop and join it. Open connections finish
-    /// their current request and close on next read.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Poke the listener so accept() returns.
-        let _ = TcpStream::connect(self.addr);
+    /// Ask the accept loop to stop, join it, then drain open connections.
+    /// Connection threads finish their current request and observe the
+    /// stop flag at their next read or read-timeout (≤ `READ_TIMEOUT`), so
+    /// long-lived *idle* connections cannot stall teardown. Returns the
+    /// number of connections still open when the drain deadline expired —
+    /// 0 means a clean, fully-drained shutdown.
+    pub fn shutdown(mut self) -> usize {
+        self.begin_stop();
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        // Drain: bounded grace period, comfortably above the per-
+        // connection read timeout that wakes idle readers.
+        let deadline = std::time::Instant::now() + 8 * READ_TIMEOUT;
+        while self.live_conns.load(Ordering::Acquire) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.live_conns.load(Ordering::Acquire)
+    }
+
+    /// Set the stop flag and poke the listener so `accept()` returns.
+    fn begin_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
+        // Stop accepting and join the accept loop, but don't block on the
+        // connection drain here — dropped handles (tests, error paths)
+        // shouldn't pay the grace period; conn threads exit on their own
+        // within one read timeout.
+        self.begin_stop();
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -88,44 +108,73 @@ pub fn serve(bind: &str, max_conns: usize, handler: Handler) -> std::io::Result<
                 let handler = handler.clone();
                 let live3 = live2.clone();
                 let stop3 = stop2.clone();
-                let _ = std::thread::Builder::new().name("memento-conn".into()).spawn(
+                let spawned = std::thread::Builder::new().name("memento-conn".into()).spawn(
                     move || {
                         let _ = handle_conn(stream, handler, stop3);
-                        live3.fetch_sub(1, Ordering::Relaxed);
+                        // Release so the shutdown drain's Acquire load sees
+                        // this connection as gone.
+                        live3.fetch_sub(1, Ordering::Release);
                     },
                 );
+                if spawned.is_err() {
+                    // The closure (and its decrement) never ran; undo the
+                    // increment or the count leaks and shutdown's drain
+                    // stalls on a phantom connection.
+                    live2.fetch_sub(1, Ordering::Release);
+                }
             }
         })?;
 
     Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), live_conns: live })
 }
 
+/// How long a connection thread blocks in `read` before re-checking the
+/// stop flag; bounds how long an idle connection can delay a drain.
+const READ_TIMEOUT: Duration = Duration::from_millis(250);
+
 fn handle_conn(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> std::io::Result<()> {
     // Request/response ping-pong dies under Nagle + delayed-ACK (40 ms
     // stalls); disable coalescing on the server side of every connection.
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    // Raw bytes, not read_line: on a read timeout, read_until leaves any
+    // partially-read line in `buf` for the next iteration to extend —
+    // read_line's UTF-8 guard would *discard* consumed bytes if the
+    // timeout split a multi-byte character, corrupting the stream.
+    let mut buf: Vec<u8> = Vec::new();
+    let mut draining = false;
     loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // peer closed
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()), // peer closed (any partial line dies with it)
             Ok(_) => {
+                let line = String::from_utf8_lossy(&buf);
                 let req = line.trim_end();
                 if req == "QUIT" {
                     let _ = writer.write_all(b"BYE\n");
                     return Ok(());
                 }
                 let resp = handler(req);
+                buf.clear();
                 writer.write_all(resp.as_bytes())?;
                 writer.write_all(b"\n")?;
+                // On shutdown, keep serving the pipelined backlog (both
+                // BufReader's and the kernel's) but shrink the read
+                // timeout: the first quiet gap ends the connection via the
+                // timeout arm below instead of a full READ_TIMEOUT wait.
+                if stop.load(Ordering::SeqCst) && !draining {
+                    draining = true;
+                    let _ = writer.set_read_timeout(Some(Duration::from_millis(10)));
+                }
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                // A slow sender may have landed a partial line in `buf`
+                // before the timeout; keep it — the next read_until
+                // appends the rest.
                 if stop.load(Ordering::SeqCst) {
                     return Ok(());
                 }
@@ -208,6 +257,67 @@ mod tests {
         c.reader.read_line(&mut resp).unwrap();
         assert_eq!(resp.trim_end(), "BUSY");
         server.shutdown();
+    }
+
+    #[test]
+    fn slow_partial_lines_survive_the_read_timeout() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // Send half a request, stall past the server's read timeout, then
+        // finish it: the server must answer the whole line, not an
+        // empty/corrupt one.
+        s.write_all(b"hel").unwrap();
+        std::thread::sleep(READ_TIMEOUT + Duration::from_millis(100));
+        s.write_all(b"lo\n").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "echo:hello");
+        server.shutdown();
+    }
+
+    #[test]
+    fn utf8_character_split_across_timeout_survives() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // "café\n" is 6 bytes; cut inside the 2-byte 'é' so the stall
+        // lands mid-character.
+        let msg = "caf\u{e9}\n".as_bytes();
+        s.write_all(&msg[..4]).unwrap();
+        std::thread::sleep(READ_TIMEOUT + Duration::from_millis(100));
+        s.write_all(&msg[4..]).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "echo:caf\u{e9}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_idle_connections() {
+        let server = echo_server();
+        let addr = server.addr();
+        // Two long-lived connections that never send a byte: without the
+        // drain they'd outlive shutdown, parked in read for up to the
+        // read timeout.
+        let idle1 = TcpStream::connect(addr).unwrap();
+        let idle2 = TcpStream::connect(addr).unwrap();
+        // Wait until the accept loop has registered both.
+        let t0 = std::time::Instant::now();
+        while server.live_connections() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "connections never registered");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let t1 = std::time::Instant::now();
+        let remaining = server.shutdown();
+        assert_eq!(remaining, 0, "idle connections must not survive shutdown");
+        assert!(
+            t1.elapsed() < 8 * READ_TIMEOUT,
+            "drain exceeded the grace period: {:?}",
+            t1.elapsed()
+        );
+        drop(idle1);
+        drop(idle2);
     }
 
     #[test]

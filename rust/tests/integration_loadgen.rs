@@ -1,0 +1,198 @@
+//! Integration: the loadgen subsystem end to end — many pipelined TCP
+//! clients under mid-load failures with replication, open-loop
+//! coordinated-omission correction, and full closed-loop runs.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::loadgen::{self, ChurnScenario, LoadgenConfig, Mode, Target, Workload};
+use memento::netserver::Client;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// ≥8 pipelined TCP clients issue PUT/GET while a KILL fires mid-load;
+/// with replication no acknowledged write may be lost.
+#[test]
+fn pipelined_clients_survive_kill_without_losing_acked_writes() {
+    let router = Router::new("memento", 10, 100, None).unwrap();
+    let svc = Service::with_replicas(router, 2);
+    let server = svc.serve("127.0.0.1:0", 64).unwrap();
+    let addr = server.addr();
+
+    let start_line = Arc::new(Barrier::new(9)); // 8 writers + the killer
+    let writers: Vec<_> = (0..8)
+        .map(|t| {
+            let start_line = start_line.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                start_line.wait();
+                let mut acked: Vec<String> = Vec::new();
+                for i in 0..300 {
+                    let key = format!("c{t}k{i}");
+                    let r = c.request(&format!("PUT {key} val{t}x{i}")).unwrap();
+                    if r.starts_with("OK") {
+                        acked.push(key);
+                    }
+                    // Pipelined read-back on the same connection keeps a
+                    // GET/PUT mix in flight during the failure.
+                    if i % 3 == 0 {
+                        if let Some(k) = acked.last() {
+                            let r = c.request(&format!("GET {k}")).unwrap();
+                            assert!(r.starts_with("VALUE"), "read-your-write {k}: {r}");
+                        }
+                    }
+                }
+                acked
+            })
+        })
+        .collect();
+    let killer = {
+        let start_line = start_line.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            start_line.wait();
+            std::thread::sleep(Duration::from_millis(10));
+            let r = c.request("KILL 4").unwrap();
+            assert!(r.starts_with("KILLED"), "{r}");
+        })
+    };
+    let acked: Vec<String> =
+        writers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    killer.join().unwrap();
+    assert_eq!(acked.len(), 8 * 300, "every PUT must be acknowledged");
+
+    // Every acknowledged write must be readable after the failure.
+    let mut c = Client::connect(&addr).unwrap();
+    for key in &acked {
+        let r = c.request(&format!("GET {key}")).unwrap();
+        assert!(r.starts_with("VALUE"), "acknowledged write {key} lost: {r}");
+    }
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("violations=0"), "{stats}");
+    drop(c);
+    assert_eq!(server.shutdown(), 0, "connections must drain on shutdown");
+}
+
+/// A target that stalls once, mid-run: the service equivalent of a GC
+/// pause or failover blip. The open-loop pacer must charge the backlog
+/// the full queueing delay.
+struct StallingTarget {
+    svc: Arc<Service>,
+    calls: u64,
+    stall_at: u64,
+    stall: Duration,
+}
+
+impl Target for StallingTarget {
+    fn call(&mut self, line: &str) -> std::io::Result<String> {
+        self.calls += 1;
+        if self.calls == self.stall_at {
+            std::thread::sleep(self.stall);
+        }
+        Ok(self.svc.handle(line))
+    }
+}
+
+#[test]
+fn open_loop_pacer_corrects_coordinated_omission() {
+    let router = Router::new("memento", 8, 80, None).unwrap();
+    let svc = Service::new(router);
+    let svc2 = svc.clone();
+    let factory: loadgen::TargetFactory = Arc::new(move || {
+        Ok(Box::new(StallingTarget {
+            svc: svc2.clone(),
+            calls: 0,
+            stall_at: 200,
+            stall: Duration::from_millis(300),
+        }) as Box<dyn Target>)
+    });
+    let cfg = LoadgenConfig {
+        mode: Mode::Open { rate: 2_000.0 },
+        workload: Workload::uniform(10_000, 0.5),
+        threads: 1,
+        duration: Duration::from_secs(1),
+        churn: ChurnScenario::Stable,
+        cluster_buckets: 8,
+        seed: 1,
+    };
+    let rep = loadgen::run(&cfg, &factory).unwrap();
+    assert!(rep.ops > 1_000, "ops {}", rep.ops);
+
+    let corrected_p99 = rep.corrected.quantile(0.99);
+    let naive_p99 = rep.naive.quantile(0.99);
+    // The invariant: measuring from intended arrival can only add queueing
+    // delay on top of service time.
+    assert!(
+        corrected_p99 >= naive_p99,
+        "corrected p99 {corrected_p99} < naive p99 {naive_p99}"
+    );
+    // The 300 ms stall at ~10% of a 2000-arrival schedule backlogs ~600
+    // paced arrivals (~30% of the run), so the corrected p99 must see a
+    // triple-digit-ms latency; the naive send-to-response measurement
+    // observes a single slow call (~0.05% of ops) and hides the rest.
+    assert!(
+        corrected_p99 > 50_000_000,
+        "corrected p99 {corrected_p99} ns misses the stall backlog"
+    );
+    assert!(
+        naive_p99 < corrected_p99 / 2,
+        "naive p99 {naive_p99} should hide most of the stall (corrected {corrected_p99})"
+    );
+}
+
+#[test]
+fn closed_loop_inproc_run_reports_sane_percentiles() {
+    let router = Router::new("memento", 8, 80, None).unwrap();
+    let svc = Service::new(router);
+    let factory = loadgen::target::inproc_factory(svc.clone());
+    assert_eq!(loadgen::preload(&factory, 1_000).unwrap(), 1_000);
+    let cfg = LoadgenConfig {
+        mode: Mode::Closed,
+        workload: Workload::zipf(1_000, 1.1, 0.8),
+        threads: 4,
+        duration: Duration::from_millis(300),
+        churn: ChurnScenario::Stable,
+        cluster_buckets: 8,
+        seed: 42,
+    };
+    let rep = loadgen::run(&cfg, &factory).unwrap();
+    assert!(rep.ops > 1_000, "ops {}", rep.ops);
+    assert_eq!(rep.errors, 0);
+    let p50 = rep.corrected.quantile(0.5);
+    let p99 = rep.corrected.quantile(0.99);
+    let p999 = rep.corrected.quantile(0.999);
+    assert!(p50 <= p99 && p99 <= p999, "p50={p50} p99={p99} p999={p999}");
+    assert!(rep.throughput() > 1_000.0, "throughput {}", rep.throughput());
+    let json = rep.to_json();
+    assert!(json.contains("\"p99\""), "{json}");
+    // The service-side histogram saw the same traffic.
+    let stats = svc.handle("STATS");
+    assert!(stats.contains("latency(ns):"), "{stats}");
+}
+
+#[test]
+fn open_loop_with_incremental_churn_over_tcp() {
+    let router = Router::new("memento", 12, 120, None).unwrap();
+    let svc = Service::with_replicas(router.clone(), 2);
+    let server = svc.serve("127.0.0.1:0", 64).unwrap();
+    let factory = loadgen::target::tcp_factory(server.addr());
+    assert_eq!(loadgen::preload(&factory, 500).unwrap(), 500);
+    let cfg = LoadgenConfig {
+        mode: Mode::Open { rate: 4_000.0 },
+        workload: Workload::hot(500, 0.9, 16, 0.7),
+        threads: 4,
+        duration: Duration::from_millis(800),
+        churn: ChurnScenario::Incremental { kills: 3 },
+        cluster_buckets: 12,
+        seed: 9,
+    };
+    let rep = loadgen::run(&cfg, &factory).unwrap();
+    assert!(rep.ops > 500, "ops {}", rep.ops);
+    // 3 kills + 3 restores bump the epoch six times.
+    assert_eq!(router.epoch(), 6, "churn must fire through the protocol");
+    assert_eq!(router.working(), 12, "restores must bring capacity back");
+    assert_eq!(rep.churn_log.len(), 6, "{:?}", rep.churn_log);
+    // Placement audit stays clean across the whole schedule.
+    let stats = svc.handle("STATS");
+    assert!(stats.contains("violations=0"), "{stats}");
+    assert_eq!(server.shutdown(), 0, "connections must drain on shutdown");
+}
