@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate needs none of these — `cargo build`
 # is dependency-free; `artifacts` is only for the optional PJRT path.
 
-.PHONY: build test bench artifacts doc fmt clippy loadgen
+.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke
 
 build:
 	cargo build --release
@@ -26,6 +26,27 @@ clippy:
 # recover mid-run (see EXPERIMENTS.md §Service under load).
 loadgen:
 	cargo run --release -- loadgen --mode open --workload zipf --churn incremental
+
+# Mirror of the ci.yml `rust` job, step for step: one command to
+# reproduce CI locally before pushing.
+ci:
+	cargo build --release
+	cargo build --release --features pjrt
+	cargo test -q
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Mirror of the ci.yml `perf-smoke` job: duration-bounded closed-loop
+# loadgen + the router scaling sweep, gated against the committed
+# baseline (fails on a >2x throughput regression).
+perf-smoke:
+	cargo run --release -- loadgen --mode closed --workload uniform \
+	  --churn stable --threads 8 --duration 2 --no-csv \
+	  --json BENCH_loadgen_smoke.json
+	cargo bench --bench bench_router_scaling
+	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
+	  --loadgen BENCH_loadgen_smoke.json --baseline ci/perf-baseline.json
 
 # AOT-compile the PJRT kernel variants (requires the python/JAX toolchain;
 # see python/compile/aot.py and DESIGN.md §5).

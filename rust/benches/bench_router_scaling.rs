@@ -1,0 +1,142 @@
+//! Router thread-scaling smoke bench — the measurement behind CI's
+//! `perf-smoke` job and `BENCH_router_scaling.json`.
+//!
+//! Two sweeps over 1/2/4/8 worker threads:
+//!
+//! * **closed-loop loadgen** against an in-process replicated service
+//!   (no TCP: isolates router + sharded storage scaling — the data path
+//!   this repo made wait-free, DESIGN.md §8);
+//! * **route-only**: threads hammering `Router::route` back to back —
+//!   the bare wait-free snapshot path with no storage behind it.
+//!
+//! Emits `results/router_scaling.csv` plus `BENCH_router_scaling.json`
+//! (override the JSON path with `MEMENTO_BENCH_JSON`; cell seconds with
+//! `MEMENTO_SMOKE_SECS`). CI compares the JSON against the committed
+//! `ci/perf-baseline.json` and fails on a >2x throughput regression.
+//! Scaling ratios saturate at the machine's core count — interpret the
+//! 8-thread column on a 2-core runner accordingly.
+
+use memento::benchkit::report::Table;
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::loadgen::{self, LoadgenConfig, Mode, Workload};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// One closed-loop loadgen cell: (ops, throughput ops/s, p99 ns).
+fn loadgen_cell(threads: usize, secs: f64) -> (u64, f64, u64) {
+    let router = Router::new("memento", 16, 160, None).expect("router");
+    let service = Service::with_replicas(router, 2);
+    let factory = loadgen::target::inproc_factory(service);
+    loadgen::preload(&factory, 10_000).expect("preload");
+    let cfg = LoadgenConfig {
+        mode: Mode::Closed,
+        workload: Workload::uniform(100_000, 0.7),
+        threads,
+        duration: Duration::from_secs_f64(secs),
+        ..LoadgenConfig::default()
+    };
+    let rep = loadgen::run(&cfg, &factory).expect("loadgen run");
+    assert_eq!(rep.errors, 0, "smoke run must be error-free");
+    (rep.ops, rep.throughput(), rep.corrected.quantile(0.99))
+}
+
+/// One route-only cell: throughput of bare `Router::route` calls.
+fn route_only_cell(threads: usize, secs: f64) -> f64 {
+    let router = Router::new("memento", 16, 160, None).expect("router");
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let workers: Vec<_> = (0..threads)
+        .map(|w| {
+            let router = router.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut ops = 0u64;
+                let mut k = (w as u64 + 1) << 40;
+                while !stop.load(Ordering::Relaxed) {
+                    for _ in 0..256 {
+                        let key = memento::hashing::mix::splitmix64_mix(k);
+                        std::hint::black_box(router.route(key));
+                        k += 1;
+                    }
+                    ops += 256;
+                }
+                ops
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = workers.into_iter().map(|w| w.join().expect("route worker")).sum();
+    total as f64 / start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let secs: f64 = std::env::var("MEMENTO_SMOKE_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("router scaling smoke: {cores} cores, {secs}s per loadgen cell\n");
+
+    let mut table = Table::new(
+        "router_scaling",
+        &["threads", "loadgen_ops", "loadgen_ops_s", "loadgen_p99_ns", "route_only_ops_s"],
+    );
+    let mut loadgen_rows = Vec::new();
+    let mut route_rows = Vec::new();
+    let mut loadgen_tputs = Vec::new();
+    let mut route_tputs = Vec::new();
+    for &t in &THREADS {
+        let (ops, tput, p99) = loadgen_cell(t, secs);
+        let route = route_only_cell(t, secs * 0.4);
+        table.push_row(vec![
+            t.to_string(),
+            ops.to_string(),
+            format!("{tput:.0}"),
+            p99.to_string(),
+            format!("{route:.0}"),
+        ]);
+        loadgen_rows.push(format!(
+            "{{\"threads\": {t}, \"ops\": {ops}, \"throughput\": {tput:.1}, \"p99_ns\": {p99}}}"
+        ));
+        route_rows.push(format!("{{\"threads\": {t}, \"throughput\": {route:.1}}}"));
+        loadgen_tputs.push(tput);
+        route_tputs.push(route);
+    }
+    table.emit("router_scaling");
+
+    let loadgen_speedup = loadgen_tputs[THREADS.len() - 1] / loadgen_tputs[0].max(1.0);
+    let route_speedup = route_tputs[THREADS.len() - 1] / route_tputs[0].max(1.0);
+    println!("\nspeedup 8 threads vs 1: loadgen {loadgen_speedup:.2}x, route-only {route_speedup:.2}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"router_scaling\",\n  \"algo\": \"memento\",\n  \"nodes\": 16,\n  \
+         \"cores\": {cores},\n  \"cell_secs\": {secs},\n  \
+         \"loadgen_closed\": [\n    {}\n  ],\n  \"route_only\": [\n    {}\n  ],\n  \
+         \"loadgen_speedup_8v1\": {loadgen_speedup:.2},\n  \
+         \"route_speedup_8v1\": {route_speedup:.2}\n}}\n",
+        loadgen_rows.join(",\n    "),
+        route_rows.join(",\n    ")
+    );
+    // Cargo runs bench binaries with CWD = the package root (rust/), but
+    // the committed reference and the CI gate live at the workspace root:
+    // resolve the default there so the fresh measurement overwrites the
+    // file perf_compare.py actually reads.
+    let path = std::env::var("MEMENTO_BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_router_scaling.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    // A failed write must fail the bench: the default path is a committed
+    // reference file, and a green step that silently left stale figures
+    // in place would let the CI perf gate pass against the wrong data.
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

@@ -168,6 +168,10 @@ impl ConsistentHasher for Anchor {
     fn name(&self) -> &'static str {
         "anchor"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

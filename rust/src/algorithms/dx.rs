@@ -168,6 +168,10 @@ impl ConsistentHasher for Dx {
     fn name(&self) -> &'static str {
         "dx"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

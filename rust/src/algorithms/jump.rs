@@ -88,6 +88,10 @@ impl ConsistentHasher for Jump {
     fn name(&self) -> &'static str {
         "jump"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -176,6 +176,10 @@ impl ConsistentHasher for Maglev {
     fn name(&self) -> &'static str {
         "maglev"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -316,6 +316,10 @@ impl ConsistentHasher for Memento {
     fn name(&self) -> &'static str {
         "memento"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -144,6 +144,10 @@ impl ConsistentHasher for MultiProbe {
     fn name(&self) -> &'static str {
         "multiprobe"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

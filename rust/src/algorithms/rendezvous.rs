@@ -101,6 +101,10 @@ impl ConsistentHasher for Rendezvous {
     fn name(&self) -> &'static str {
         "rendezvous"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

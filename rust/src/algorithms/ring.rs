@@ -137,6 +137,10 @@ impl ConsistentHasher for Ring {
     fn name(&self) -> &'static str {
         "ring"
     }
+
+    fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -183,6 +183,12 @@ pub trait ConsistentHasher: Send + Sync {
         out
     }
 
+    /// Clone the algorithm behind the trait (every implementation is
+    /// `Clone`; this makes trait objects cloneable too). The router's
+    /// snapshot publication relies on it: each membership change clones
+    /// the current state, mutates the clone, and publishes it immutably.
+    fn clone_box(&self) -> Box<dyn ConsistentHasher>;
+
     /// Exact size, in bytes, of the algorithm-owned mutable state: the
     /// paper's *memory usage* metric (Figs. 18/19/20/25/26/28/30/32).
     /// Counts live backing arrays/tables at their current capacity;

@@ -21,13 +21,16 @@
 //! * [`membership`] — node registry, bucket ↔ node binding, epochs,
 //!   failure/restore events.
 //! * [`router`] — placement: the consistent-hash algorithm + membership +
-//!   optional batched engine; snapshots are immutable per epoch.
+//!   optional batched engine. Each epoch is one immutable published
+//!   snapshot ([`crate::sync::epoch::EpochPtr`]); the lookup path is
+//!   wait-free (DESIGN.md §8).
 //! * [`batcher`] — dynamic batching of lookups (flush on size or timeout),
 //!   feeding the engine; the paper's batched-lookup throughput path.
 //! * [`rebalancer`] — audits key movement across epochs against the
 //!   paper's minimal-disruption / monotonicity guarantees.
 //! * [`storage`] — in-process simulated KV nodes (the cluster substrate:
-//!   data actually moves when membership changes).
+//!   data actually moves when membership changes); records are
+//!   lock-sharded by key hash so concurrent traffic contends per shard.
 //! * [`service`] — the TCP line-protocol front-end (`LOOKUP`/`PUT`/`GET`/
 //!   `KILL`/`RESTORE`/`STATS`).
 

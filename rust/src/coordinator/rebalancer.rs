@@ -8,6 +8,7 @@
 
 use super::router::Router;
 use crate::simulator::audit;
+use crate::sync::lock_recover;
 use std::sync::Mutex;
 
 /// Running audit over membership epochs.
@@ -61,7 +62,7 @@ impl Rebalancer {
     /// Re-probe after a membership change. `changed_buckets` are the
     /// buckets that were removed/added in this epoch.
     pub fn observe_epoch(&self, router: &Router, changed_buckets: &[u32]) -> RebalanceSummary {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let now = router.route_batch(&self.tracer_keys);
         let rep = audit::disruption(&st.last_assignment, &now, &self.tracer_keys, changed_buckets);
         st.relocated += rep.relocated as u64;
@@ -80,7 +81,7 @@ impl Rebalancer {
 
     /// Snapshot of the accumulated audit counters.
     pub fn summary(&self) -> RebalanceSummary {
-        let st = self.state.lock().unwrap();
+        let st = lock_recover(&self.state);
         RebalanceSummary {
             epochs_observed: st.epochs_observed,
             relocated: st.relocated,

@@ -1,16 +1,23 @@
-//! The router: placement decisions behind an epoch-consistent snapshot.
+//! The router: placement decisions behind epoch-published snapshots.
 //!
-//! `Router` owns the algorithm + membership under an `RwLock`; lookups take
-//! the read path (lock-free for the common no-resize case thanks to
-//! `RwLock` read sharing), membership changes take the write path, bump the
-//! epoch and invalidate the engine snapshot.
+//! Every membership change builds one immutable [`RouterSnapshot`] —
+//! algorithm state + node binding + epoch, plus the batched engine's
+//! dense-table snapshot for that same epoch — and publishes it through
+//! [`EpochPtr`] (DESIGN.md §8). Lookups pin the current snapshot with a
+//! wait-free load: no `RwLock`, no `Mutex`, not even a reader-shared lock
+//! word to contend on, so the read path scales with cores. Writers clone
+//! the current snapshot, mutate the clone, and publish; they serialize
+//! among themselves on a writer mutex the read path never touches, and
+//! they never block readers.
 
 use super::membership::{Membership, NodeId};
 use crate::algorithms::{self, AlgoError, ConsistentHasher, Memento};
 use crate::error::Result;
 use crate::metrics::RouterMetrics;
+use crate::runtime::engine::EngineSnapshot;
 use crate::runtime::EngineHandle;
-use std::sync::{Arc, RwLock};
+use crate::sync::epoch::{EpochGuard, EpochPtr};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// The placement algorithm: Memento is held concretely (the batched engine
 /// needs its dense-table snapshot), everything else behind the trait.
@@ -58,19 +65,67 @@ impl Placement {
     }
 }
 
-struct Inner {
+impl Clone for Placement {
+    fn clone(&self) -> Self {
+        match self {
+            Placement::Memento(m) => Placement::Memento(m.clone()),
+            Placement::Other(o) => Placement::Other(o.clone_box()),
+        }
+    }
+}
+
+/// One immutable, internally consistent view of the cluster: placement
+/// algorithm, node binding and the epoch they were built at — plus, when
+/// the batched engine is enabled and the algorithm is Memento, the
+/// engine's [`EngineSnapshot`] for the same epoch. The per-epoch engine
+/// cache that used to live behind its own `Mutex` is folded in here: a
+/// snapshot carries everything a lookup (scalar or batched) needs, so one
+/// wait-free pin observes all of it at a single epoch. The engine table
+/// is built **lazily** by the first `route_batch` of the epoch (a
+/// `OnceLock`), so churn-heavy workloads that never batch don't pay the
+/// O(table) dense-table build on every membership change.
+pub struct RouterSnapshot {
     placement: Placement,
     membership: Membership,
+    engine_snap: OnceLock<Option<Arc<EngineSnapshot>>>,
+}
+
+impl RouterSnapshot {
+    /// The membership epoch this snapshot was built at.
+    pub fn epoch(&self) -> u64 {
+        self.membership.epoch()
+    }
+
+    /// The placement algorithm.
+    pub fn algo(&self) -> &dyn ConsistentHasher {
+        self.placement.algo()
+    }
+
+    /// The node binding.
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// The engine's dense-table snapshot for this epoch, if the batched
+    /// path has been exercised at this epoch (it is built lazily by the
+    /// first `route_batch`; `None` before that or without an engine).
+    pub fn engine_snapshot(&self) -> Option<&Arc<EngineSnapshot>> {
+        self.engine_snap.get().and_then(|o| o.as_ref())
+    }
+}
+
+/// Build one snapshot; the engine table slot starts empty (lazy).
+fn build_snapshot(placement: Placement, membership: Membership) -> RouterSnapshot {
+    RouterSnapshot { placement, membership, engine_snap: OnceLock::new() }
 }
 
 /// The shared router handle.
 pub struct Router {
-    inner: RwLock<Inner>,
+    published: EpochPtr<RouterSnapshot>,
     engine: Option<EngineHandle>,
-    /// Per-epoch engine snapshot cache (perf: dispatching a batch does not
-    /// clone the replacement map, rebuild the dense table, or re-upload it
-    /// — only membership changes invalidate this; see EXPERIMENTS.md §Perf).
-    snapshot_cache: std::sync::Mutex<Option<(u64, std::sync::Arc<crate::runtime::engine::EngineSnapshot>)>>,
+    /// Serializes membership changes (clone → mutate → publish). The
+    /// lookup path never touches it.
+    writer: Mutex<()>,
     /// Lookup/epoch counters for this router instance.
     pub metrics: RouterMetrics,
 }
@@ -86,29 +141,39 @@ impl Router {
     ) -> Result<Arc<Self>> {
         let placement = Placement::new(algorithm, initial, capacity)?;
         let membership = Membership::with_initial(initial);
+        let snapshot = build_snapshot(placement, membership);
         Ok(Arc::new(Self {
-            inner: RwLock::new(Inner { placement, membership }),
+            published: EpochPtr::new(snapshot),
             engine,
-            snapshot_cache: std::sync::Mutex::new(None),
+            writer: Mutex::new(()),
             metrics: RouterMetrics::new(),
         }))
     }
 
+    /// Pin the current snapshot: epoch, placement, membership and engine
+    /// table, all observed at one instant. Wait-free. Keep the guard
+    /// short-lived — do not block or mutate the router while holding it
+    /// (see [`crate::sync::epoch`]).
+    pub fn snapshot(&self) -> EpochGuard<'_, RouterSnapshot> {
+        self.published.load()
+    }
+
     /// Current epoch.
     pub fn epoch(&self) -> u64 {
-        self.inner.read().unwrap().membership.epoch()
+        self.published.load().epoch()
     }
 
     /// Working node count.
     pub fn working(&self) -> usize {
-        self.inner.read().unwrap().placement.algo().working()
+        self.published.load().placement.algo().working()
     }
 
-    /// Scalar lookup: key → (bucket, node).
+    /// Scalar lookup: key → (bucket, node). Wait-free: one snapshot pin,
+    /// no lock acquisition of any kind on this path.
     pub fn route(&self, key: u64) -> (u32, NodeId) {
-        let g = self.inner.read().unwrap();
-        let b = g.placement.algo().lookup(key);
-        let node = g
+        let snap = self.published.load();
+        let b = snap.placement.algo().lookup(key);
+        let node = snap
             .membership
             .node_at(b)
             .expect("invariant: every working bucket is bound to a node");
@@ -118,9 +183,12 @@ impl Router {
 
     /// Batched lookup: uses the batched engine when available (Memento
     /// with a fitting table), otherwise the scalar path. Returns buckets.
+    /// One snapshot pin covers the whole batch; the engine dispatch runs
+    /// unpinned against the snapshot's `Arc`ed dense table.
     pub fn route_batch(&self, keys: &[u64]) -> Vec<u32> {
         if let Some(engine) = &self.engine {
-            if let Some(snap) = self.engine_snapshot(engine) {
+            let snap = self.epoch_engine_snapshot(engine);
+            if let Some(snap) = snap {
                 if let Ok(buckets) = engine.memento_lookup_snapshot(snap, keys.to_vec()) {
                     self.metrics.lookups_batched.add(keys.len() as u64);
                     self.metrics.batches.inc();
@@ -128,63 +196,63 @@ impl Router {
                 }
             }
         }
-        let g = self.inner.read().unwrap();
+        let snap = self.published.load();
         self.metrics.lookups_scalar.add(keys.len() as u64);
-        keys.iter().map(|&k| g.placement.algo().lookup(k)).collect()
+        keys.iter().map(|&k| snap.placement.algo().lookup(k)).collect()
     }
 
-    /// Get (or lazily rebuild) the per-epoch engine snapshot.
-    fn engine_snapshot(
-        &self,
-        engine: &EngineHandle,
-    ) -> Option<std::sync::Arc<crate::runtime::engine::EngineSnapshot>> {
-        let epoch = {
-            let g = self.inner.read().unwrap();
-            g.membership.epoch()
-        };
-        {
-            let cache = self.snapshot_cache.lock().unwrap();
-            if let Some((e, snap)) = &*cache {
-                if *e == epoch {
-                    return Some(snap.clone());
-                }
+    /// This epoch's engine table: cached on the published snapshot, built
+    /// lazily by the first batch of the epoch. The O(table) build runs
+    /// **unpinned** — a pin held for milliseconds would stall publishers
+    /// (see [`crate::sync::epoch`]) — so the recipe is: read the cache
+    /// under a short pin; on miss, clone the algorithm state out, drop the
+    /// pin, build, then cache the result only if the epoch hasn't moved
+    /// meanwhile (a table built for a stale epoch still serves *this*
+    /// batch consistently, it just isn't cached).
+    fn epoch_engine_snapshot(&self, engine: &EngineHandle) -> Option<Arc<EngineSnapshot>> {
+        let (epoch, memento) = {
+            let pinned = self.published.load();
+            if let Some(cached) = pinned.engine_snap.get() {
+                return cached.clone();
             }
-        }
-        // Rebuild outside the cache lock, then publish.
-        let m = {
-            let g = self.inner.read().unwrap();
-            g.placement.memento_snapshot()?
+            (pinned.epoch(), pinned.placement.memento_snapshot())
         };
-        let snap = engine.snapshot(m).ok()?;
-        let mut cache = self.snapshot_cache.lock().unwrap();
-        *cache = Some((epoch, snap.clone()));
-        Some(snap)
+        let built = memento.and_then(|m| engine.snapshot(m).ok());
+        let pinned = self.published.load();
+        if pinned.epoch() == epoch {
+            // Lost set races built the same epoch's table: either copy is
+            // correct, so the error is ignored.
+            let _ = pinned.engine_snap.set(built.clone());
+        }
+        built
     }
 
     /// Resolve buckets to nodes under the current epoch.
     pub fn nodes_for(&self, buckets: &[u32]) -> Vec<NodeId> {
-        let g = self.inner.read().unwrap();
+        let snap = self.published.load();
         buckets
             .iter()
-            .map(|b| g.membership.node_at(*b).expect("bucket bound"))
+            .map(|b| snap.membership.node_at(*b).expect("bucket bound"))
             .collect()
     }
 
     /// Fail the node on `bucket` (random failure / drain).
-    pub fn fail_bucket(&self, bucket: u32) -> Result<NodeId, AlgoError> {
-        let mut g = self.inner.write().unwrap();
-        g.placement.algo_mut().remove(bucket)?;
-        let node = g.membership.unbind(bucket).expect("membership in sync with algorithm");
+    pub fn fail_bucket(&self, bucket: u32) -> std::result::Result<NodeId, AlgoError> {
+        let _w = crate::sync::lock_recover(&self.writer);
+        let (mut placement, mut membership) = {
+            let snap = self.published.load();
+            (snap.placement.clone(), snap.membership.clone())
+        };
+        placement.algo_mut().remove(bucket)?;
+        let node = membership.unbind(bucket).expect("membership in sync with algorithm");
+        self.published.publish(build_snapshot(placement, membership));
         self.metrics.epochs.inc();
         Ok(node)
     }
 
     /// Fail the node with the given id.
-    pub fn fail_node(&self, node: NodeId) -> Result<NodeId, AlgoError> {
-        let bucket = {
-            let g = self.inner.read().unwrap();
-            g.membership.bucket_of(node)
-        };
+    pub fn fail_node(&self, node: NodeId) -> std::result::Result<NodeId, AlgoError> {
+        let bucket = { self.published.load().membership.bucket_of(node) };
         match bucket {
             Some(b) => self.fail_bucket(b),
             None => Err(AlgoError::NotWorking(u32::MAX)),
@@ -193,26 +261,33 @@ impl Router {
 
     /// Add capacity: restores the most recently failed node if any
     /// (Memento Alg. 3 restores its bucket), else registers a new node.
-    pub fn add_node(&self) -> Result<(u32, NodeId), AlgoError> {
-        let mut g = self.inner.write().unwrap();
-        let bucket = g.placement.algo_mut().add()?;
-        let down = g.membership.down_nodes();
+    pub fn add_node(&self) -> std::result::Result<(u32, NodeId), AlgoError> {
+        let _w = crate::sync::lock_recover(&self.writer);
+        let (mut placement, mut membership) = {
+            let snap = self.published.load();
+            (snap.placement.clone(), snap.membership.clone())
+        };
+        let bucket = placement.algo_mut().add()?;
+        let down = membership.down_nodes();
         let node = if let Some(&node) = down.last() {
-            g.membership
+            membership
                 .bind_existing(node, bucket)
                 .expect("restore binding consistent");
             node
         } else {
-            g.membership.bind_new(bucket, None)
+            membership.bind_new(bucket, None)
         };
+        self.published.publish(build_snapshot(placement, membership));
         self.metrics.epochs.inc();
         Ok((bucket, node))
     }
 
-    /// Run `f` with a read view of (algorithm, membership).
+    /// Run `f` with a consistent read view of (algorithm, membership).
+    /// `f` runs under the snapshot pin: keep it short, do not block, and
+    /// do not call mutating router methods from inside it.
     pub fn with_view<R>(&self, f: impl FnOnce(&dyn ConsistentHasher, &Membership) -> R) -> R {
-        let g = self.inner.read().unwrap();
-        f(g.placement.algo(), &g.membership)
+        let snap = self.published.load();
+        f(snap.placement.algo(), &snap.membership)
     }
 }
 
@@ -281,5 +356,53 @@ mod tests {
     #[test]
     fn unknown_algorithm_is_rejected() {
         assert!(Router::new("quantum", 4, 40, None).is_err());
+    }
+
+    #[test]
+    fn snapshot_pins_one_epoch() {
+        let r = Router::new("memento", 8, 80, None).unwrap();
+        let pinned = r.snapshot();
+        assert_eq!(pinned.epoch(), 0);
+        // A membership change publishes a new snapshot; the pin still
+        // reads the old, internally consistent one.
+        r.fail_bucket(5).unwrap();
+        assert_eq!(pinned.epoch(), 0);
+        assert!(pinned.algo().is_working(5), "pinned view predates the failure");
+        assert_eq!(r.snapshot().epoch(), 1);
+        assert!(!r.snapshot().algo().is_working(5));
+    }
+
+    #[test]
+    fn failed_mutation_publishes_nothing() {
+        let r = Router::new("memento", 4, 40, None).unwrap();
+        assert!(r.fail_bucket(99).is_err());
+        assert_eq!(r.epoch(), 0, "failed removal must not bump the epoch");
+        assert_eq!(r.working(), 4);
+    }
+
+    #[test]
+    fn engine_snapshot_is_folded_into_the_published_snapshot() {
+        let engine =
+            EngineHandle::spawn(std::path::PathBuf::from("/no/such/artifacts")).unwrap();
+        let r = Router::new("memento", 10, 100, Some(engine)).unwrap();
+        // Lazy: no engine table before the first batched lookup.
+        assert!(r.snapshot().engine_snapshot().is_none(), "built on first route_batch only");
+        let keys: Vec<u64> =
+            (0..300u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let batch = r.route_batch(&keys);
+        for (k, b) in keys.iter().zip(&batch) {
+            assert_eq!(r.route(*k).0, *b, "batched path must match scalar");
+        }
+        assert!(r.metrics.lookups_batched.get() >= 300);
+        let id0 = r.snapshot().engine_snapshot().expect("built by route_batch").id;
+        // A membership change publishes a fresh snapshot whose engine
+        // table is rebuilt (lazily) for the new epoch.
+        r.fail_bucket(2).unwrap();
+        assert!(r.snapshot().engine_snapshot().is_none(), "new epoch, not yet batched");
+        for b in r.route_batch(&keys) {
+            assert_ne!(b, 2, "failed bucket must not be routed to");
+        }
+        let id1 = r.snapshot().engine_snapshot().expect("rebuilt for the new epoch").id;
+        assert_ne!(id0, id1, "engine snapshot must be rebuilt per epoch");
     }
 }

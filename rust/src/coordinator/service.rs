@@ -2,6 +2,9 @@
 //!
 //! ```text
 //! LOOKUP <key-u64-or-string>      → BUCKET <b> NODE <name>
+//! LOOKUPB <key> [<key> ...]       → BUCKETS <b> [<b> ...]   (batched:
+//!                                    one snapshot pin + one engine
+//!                                    dispatch for the whole line)
 //! PUT <key> <value>               → OK <node>
 //! GET <key>                       → VALUE <node> <value> | MISSING <node>
 //! KILL <bucket>                   → KILLED <node> MOVED <n-records>
@@ -20,21 +23,14 @@ use super::router::Router;
 use super::storage::StorageCluster;
 use crate::metrics::Histogram;
 use crate::netserver::{self, ServerHandle};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::lock_recover;
 use std::sync::{Arc, Mutex};
 
 /// Latency recording is sharded so concurrent connection threads don't
 /// serialize on one global lock in the request hot path; shards merge on
-/// `STATS` (the cold path).
+/// `STATS` (the cold path). Shard selection is the crate-wide
+/// [`crate::sync::thread_stripe`] assignment. Power of two.
 const LATENCY_SHARDS: usize = 8;
-
-static NEXT_LATENCY_SHARD: AtomicUsize = AtomicUsize::new(0);
-thread_local! {
-    /// Each thread sticks to one shard, assigned round-robin on first
-    /// use, so recording contends only when threads outnumber shards.
-    static LATENCY_SHARD: usize =
-        NEXT_LATENCY_SHARD.fetch_add(1, Ordering::Relaxed) % LATENCY_SHARDS;
-}
 
 /// Shared service state.
 pub struct Service {
@@ -128,15 +124,15 @@ impl Service {
     /// reflects serving behavior, not churn injection.
     pub fn handle(&self, line: &str) -> String {
         let data_path =
-            matches!(line.split_whitespace().next(), Some("LOOKUP" | "GET" | "PUT"));
+            matches!(line.split_whitespace().next(), Some("LOOKUP" | "LOOKUPB" | "GET" | "PUT"));
         if !data_path {
             return self.handle_inner(line);
         }
         let t0 = std::time::Instant::now();
         let resp = self.handle_inner(line);
         let ns = crate::metrics::duration_to_ns(t0.elapsed());
-        let shard = LATENCY_SHARD.with(|s| *s);
-        self.latency[shard].lock().unwrap().record(ns);
+        let shard = crate::sync::thread_stripe(LATENCY_SHARDS);
+        lock_recover(&self.latency[shard]).record(ns);
         resp
     }
 
@@ -148,6 +144,19 @@ impl Service {
                 let key = Self::digest_key(tok);
                 let (b, node) = self.router.route(key);
                 format!("BUCKET {b} NODE {node}")
+            }
+            Some("LOOKUPB") => {
+                let keys: Vec<u64> = parts.map(Self::digest_key).collect();
+                if keys.is_empty() {
+                    return "ERR LOOKUPB needs at least one key".into();
+                }
+                let buckets = self.router.route_batch(&keys);
+                let mut out = String::from("BUCKETS");
+                for b in buckets {
+                    out.push(' ');
+                    out.push_str(&b.to_string());
+                }
+                out
             }
             Some("PUT") => {
                 let (Some(tok), Some(val)) = (parts.next(), parts.next()) else {
@@ -228,7 +237,7 @@ impl Service {
                 let lat = {
                     let mut h = Histogram::new();
                     for shard in &self.latency {
-                        h.merge(&shard.lock().unwrap());
+                        h.merge(&lock_recover(shard));
                     }
                     format!(
                         "latency(ns): n={} p50={} p99={} p999={} max={}",
@@ -283,6 +292,23 @@ mod tests {
         assert!(resp.starts_with("MISSING"), "{resp}");
         let resp = s.handle("LOOKUP alpha");
         assert!(resp.starts_with("BUCKET "), "{resp}");
+    }
+
+    #[test]
+    fn lookupb_matches_scalar_lookup() {
+        let s = service();
+        let resp = s.handle("LOOKUPB 1 2 3 abc");
+        assert!(resp.starts_with("BUCKETS "), "{resp}");
+        let buckets: Vec<u32> = resp["BUCKETS ".len()..]
+            .split_whitespace()
+            .map(|t| t.parse().unwrap())
+            .collect();
+        assert_eq!(buckets.len(), 4);
+        for (tok, b) in ["1", "2", "3", "abc"].iter().zip(&buckets) {
+            let scalar = s.handle(&format!("LOOKUP {tok}"));
+            assert!(scalar.starts_with(&format!("BUCKET {b} ")), "{scalar} vs bucket {b}");
+        }
+        assert!(s.handle("LOOKUPB").starts_with("ERR"));
     }
 
     #[test]

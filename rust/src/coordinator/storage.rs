@@ -4,57 +4,102 @@
 //! change the cluster *actually migrates* the affected keys, so the e2e
 //! example measures real data movement and the rebalancer audits it against
 //! the paper's minimal-disruption bound.
+//!
+//! Storage inside one node is **lock-sharded**: the record map is split
+//! into [`StorageNode::SHARDS`] independently locked shards keyed by the
+//! key's mixed hash, so concurrent PUT/GET traffic from many connection
+//! threads contends per shard instead of serializing on one node-wide
+//! `Mutex` (DESIGN.md §8). All locks follow the crate's recover-on-poison
+//! policy ([`crate::sync::lock_recover`]).
 
 use super::membership::NodeId;
+use crate::sync::{lock_recover, read_recover, write_recover};
 use std::collections::HashMap;
 use std::sync::{Mutex, RwLock};
 
 /// One simulated storage node.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct StorageNode {
-    data: Mutex<HashMap<u64, Vec<u8>>>,
+    /// Record shards, indexed by the key's mixed hash.
+    shards: Vec<Mutex<HashMap<u64, Vec<u8>>>>,
     /// GET counter (load measurement for the balance figures).
     pub gets: std::sync::atomic::AtomicU64,
     /// PUT counter.
     pub puts: std::sync::atomic::AtomicU64,
 }
 
+impl Default for StorageNode {
+    fn default() -> Self {
+        Self {
+            shards: (0..Self::SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            gets: Default::default(),
+            puts: Default::default(),
+        }
+    }
+}
+
 impl StorageNode {
+    /// Lock shards per node. Power of two; 16 shards keep the expected
+    /// contention probability for two concurrent ops at 1/16 while the
+    /// per-node footprint stays trivial.
+    pub const SHARDS: usize = 16;
+
+    /// The shard a key lives in. Keys are mixed first: numeric protocol
+    /// keys (`PUT 0..n`) are sequential, and the low bits of the raw key
+    /// would put whole ranges in one shard.
+    #[inline]
+    fn shard_of(key: u64) -> usize {
+        (crate::hashing::mix::splitmix64_mix(key) as usize) & (Self::SHARDS - 1)
+    }
+
     /// Store a record.
     pub fn put(&self, key: u64, value: Vec<u8>) {
         self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.data.lock().unwrap().insert(key, value);
+        lock_recover(&self.shards[Self::shard_of(key)]).insert(key, value);
     }
 
     /// Read a record.
     pub fn get(&self, key: u64) -> Option<Vec<u8>> {
         self.gets.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.data.lock().unwrap().get(&key).cloned()
+        lock_recover(&self.shards[Self::shard_of(key)]).get(&key).cloned()
     }
 
     /// Remove a record, returning its value.
     pub fn delete(&self, key: u64) -> Option<Vec<u8>> {
-        self.data.lock().unwrap().remove(&key)
+        lock_recover(&self.shards[Self::shard_of(key)]).remove(&key)
     }
 
     /// Number of stored records.
     pub fn len(&self) -> usize {
-        self.data.lock().unwrap().len()
+        self.shards.iter().map(|s| lock_recover(s).len()).sum()
     }
 
     /// Whether the node holds no records.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.shards.iter().all(|s| lock_recover(s).is_empty())
     }
 
     /// Drain all records (node decommission / failure with handoff).
     pub fn drain(&self) -> Vec<(u64, Vec<u8>)> {
-        self.data.lock().unwrap().drain().collect()
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(lock_recover(s).drain());
+        }
+        out
     }
 
     /// Keys only (cheaper than drain when planning migrations).
     pub fn keys(&self) -> Vec<u64> {
-        self.data.lock().unwrap().keys().copied().collect()
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(lock_recover(s).keys().copied());
+        }
+        out
+    }
+
+    /// Per-shard record counts (shard-balance measurement / tests).
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| lock_recover(s).len()).collect()
     }
 }
 
@@ -72,12 +117,10 @@ impl StorageCluster {
 
     /// Get-or-create the store for a node.
     pub fn node(&self, id: NodeId) -> std::sync::Arc<StorageNode> {
-        if let Some(n) = self.nodes.read().unwrap().get(&id) {
+        if let Some(n) = read_recover(&self.nodes).get(&id) {
             return n.clone();
         }
-        self.nodes
-            .write()
-            .unwrap()
+        write_recover(&self.nodes)
             .entry(id)
             .or_insert_with(|| std::sync::Arc::new(StorageNode::default()))
             .clone()
@@ -85,13 +128,13 @@ impl StorageCluster {
 
     /// Total records across the fleet.
     pub fn total_records(&self) -> usize {
-        self.nodes.read().unwrap().values().map(|n| n.len()).sum()
+        read_recover(&self.nodes).values().map(|n| n.len()).sum()
     }
 
     /// Per-node record counts (balance measurement).
     pub fn load_by_node(&self) -> Vec<(NodeId, usize)> {
         let mut v: Vec<(NodeId, usize)> =
-            self.nodes.read().unwrap().iter().map(|(id, n)| (*id, n.len())).collect();
+            read_recover(&self.nodes).iter().map(|(id, n)| (*id, n.len())).collect();
         v.sort_by_key(|(id, _)| *id);
         v
     }
@@ -155,5 +198,53 @@ mod tests {
         for t in 1..=3u64 {
             assert!(c.node(NodeId(t)).len() > 20);
         }
+    }
+
+    #[test]
+    fn shards_spread_sequential_keys() {
+        let n = StorageNode::default();
+        for k in 0..4096u64 {
+            n.put(k, vec![0]);
+        }
+        let loads = n.shard_loads();
+        assert_eq!(loads.len(), StorageNode::SHARDS);
+        assert_eq!(loads.iter().sum::<usize>(), 4096);
+        let mean = 4096 / StorageNode::SHARDS;
+        for (i, l) in loads.iter().enumerate() {
+            assert!(
+                *l > mean / 2 && *l < mean * 2,
+                "shard {i} holds {l} of 4096 records (mean {mean}): mixing failed"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_and_keys_cover_every_shard() {
+        let n = StorageNode::default();
+        for k in 0..512u64 {
+            n.put(k, vec![k as u8]);
+        }
+        let mut keys = n.keys();
+        keys.sort_unstable();
+        assert_eq!(keys, (0..512).collect::<Vec<u64>>());
+        let drained = n.drain();
+        assert_eq!(drained.len(), 512);
+        assert!(n.is_empty());
+    }
+
+    #[test]
+    fn a_poisoned_shard_keeps_serving() {
+        let n = std::sync::Arc::new(StorageNode::default());
+        n.put(7, b"x".to_vec());
+        let n2 = n.clone();
+        let _ = std::thread::spawn(move || {
+            // Poison the shard key 7 lives in while holding its lock.
+            let _g = n2.shards[StorageNode::shard_of(7)].lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert_eq!(n.get(7), Some(b"x".to_vec()), "recover-on-poison policy");
+        n.put(7, b"y".to_vec());
+        assert_eq!(n.get(7), Some(b"y".to_vec()));
     }
 }

@@ -24,6 +24,9 @@
 //!   coordinated-omission correction, pluggable workloads, mid-run churn
 //!   injection, and merged latency/throughput reports — the paper's
 //!   scenarios measured through the whole serving stack.
+//! * [`sync`] — concurrency substrates: epoch-published snapshots behind
+//!   the router's wait-free lookup path ([`sync::epoch::EpochPtr`]) and the
+//!   crate-wide recover-on-poison lock policy.
 //! * [`error`], [`benchkit`], [`testkit`], [`config`], [`cli`], [`metrics`],
 //!   [`netserver`] — substrates built from scratch for the offline
 //!   environment (no anyhow/criterion/proptest/tokio/serde/clap available).
@@ -47,6 +50,7 @@ pub mod metrics;
 pub mod netserver;
 pub mod runtime;
 pub mod simulator;
+pub mod sync;
 pub mod testkit;
 
 pub use error::{Error, Result};

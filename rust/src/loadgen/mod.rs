@@ -105,9 +105,13 @@ impl Default for LoadgenConfig {
     }
 }
 
+/// Lines per pipelined [`Target::call_many`] batch during preload.
+const PRELOAD_BATCH: usize = 256;
+
 /// Write keys `0..n` through fresh targets so read traffic hits existing
 /// data; returns the number of acknowledged PUTs. Larger preloads are
-/// striped across a few parallel connections — serially, 10k loopback
+/// striped across a few parallel connections, and each connection
+/// pipelines `PRELOAD_BATCH`-line batches — serially, 10k loopback
 /// round trips would cost most of a second of unmeasured startup time.
 pub fn preload(factory: &TargetFactory, n: u64) -> Result<u64, String> {
     let conns: u64 = if n >= 1_000 { 4 } else { 1 };
@@ -119,13 +123,16 @@ pub fn preload(factory: &TargetFactory, n: u64) -> Result<u64, String> {
             .spawn(move || -> Result<u64, String> {
                 let mut ok = 0u64;
                 let mut k = c;
+                let mut batch = Vec::with_capacity(PRELOAD_BATCH);
                 while k < n {
-                    let resp =
-                        t.call(&Op::Put(k).to_line()).map_err(|e| format!("preload: {e}"))?;
-                    if resp.starts_with("OK") {
-                        ok += 1;
+                    batch.clear();
+                    while k < n && batch.len() < PRELOAD_BATCH {
+                        batch.push(Op::Put(k).to_line());
+                        k += conns;
                     }
-                    k += conns;
+                    let resps =
+                        t.call_many(&batch).map_err(|e| format!("preload: {e}"))?;
+                    ok += resps.iter().filter(|r| r.starts_with("OK")).count() as u64;
                 }
                 Ok(ok)
             })

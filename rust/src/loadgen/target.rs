@@ -23,6 +23,13 @@ use std::sync::Arc;
 pub trait Target: Send {
     /// Issue one request and wait for its response.
     fn call(&mut self, line: &str) -> std::io::Result<String>;
+
+    /// Issue a batch of requests, returning one response per request.
+    /// The default loops over [`Target::call`]; transports that can
+    /// pipeline (TCP) override it to collapse N round trips into one.
+    fn call_many(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
+        lines.iter().map(|l| self.call(l)).collect()
+    }
 }
 
 /// Creates one independent [`Target`] per worker thread (plus one for the
@@ -63,6 +70,10 @@ impl Target for TcpTarget {
     fn call(&mut self, line: &str) -> std::io::Result<String> {
         self.client.request(line)
     }
+
+    fn call_many(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
+        self.client.request_pipelined(lines)
+    }
 }
 
 /// Factory producing in-process targets over one shared service.
@@ -100,6 +111,24 @@ mod tests {
         assert!(t.call("PUT 9 world").unwrap().starts_with("OK"));
         assert!(t.call("GET 9").unwrap().contains("world"));
         drop(t);
+        server.shutdown();
+    }
+
+    #[test]
+    fn call_many_matches_sequential_calls_on_both_transports() {
+        let router = Router::new("memento", 4, 40, None).unwrap();
+        let svc = Service::new(router);
+        let server = svc.serve("127.0.0.1:0", 8).unwrap();
+        let lines: Vec<String> = (0..50)
+            .map(|i| if i % 2 == 0 { format!("PUT k{i} v{i}") } else { format!("LOOKUP k{i}") })
+            .collect();
+        let mut inproc = inproc_factory(svc.clone())().unwrap();
+        let mut tcp = tcp_factory(server.addr())().unwrap();
+        let a = inproc.call_many(&lines).unwrap();
+        let b = tcp.call_many(&lines).unwrap();
+        assert_eq!(a.len(), 50);
+        assert_eq!(a, b, "pipelined TCP must answer in order with identical responses");
+        drop(tcp);
         server.shutdown();
     }
 }

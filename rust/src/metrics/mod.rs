@@ -44,13 +44,64 @@ impl Counter {
     }
 }
 
+/// Stripes of a [`ShardedCounter`]. Power of two; stripe selection is
+/// the crate-wide [`crate::sync::thread_stripe`] assignment.
+const COUNTER_STRIPES: usize = 8;
+
+/// One cache-line-padded counter stripe.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct CounterStripe(AtomicU64);
+
+/// A striped monotonic counter for per-request hot paths: each thread
+/// increments a (mostly) thread-private cache line, so counting a lookup
+/// does not serialize the wait-free read path on one shared atomic the
+/// way a plain [`Counter`] would. Reads sum the stripes (monotone, but
+/// not a point-in-time atomic snapshot — fine for metrics).
+#[derive(Debug)]
+pub struct ShardedCounter {
+    stripes: [CounterStripe; COUNTER_STRIPES],
+}
+
+impl ShardedCounter {
+    /// A zeroed counter.
+    pub fn new() -> Self {
+        Self { stripes: std::array::from_fn(|_| CounterStripe::default()) }
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        let s = crate::sync::thread_stripe(COUNTER_STRIPES);
+        self.stripes[s].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value (sum over stripes).
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for ShardedCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// The coordinator's metric bundle (one per router instance).
 #[derive(Debug, Default)]
 pub struct RouterMetrics {
-    /// Lookups served (scalar path).
-    pub lookups_scalar: Counter,
-    /// Lookups served via the PJRT batch engine.
-    pub lookups_batched: Counter,
+    /// Lookups served (scalar path). Sharded: this counter ticks once per
+    /// routed key on the wait-free path.
+    pub lookups_scalar: ShardedCounter,
+    /// Lookups served via the batched engine. Sharded for the same reason.
+    pub lookups_batched: ShardedCounter,
     /// Batches dispatched to the engine.
     pub batches: Counter,
     /// Membership epochs (resize events).
@@ -118,6 +169,26 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn sharded_counter_counts_across_threads() {
+        let c = std::sync::Arc::new(ShardedCounter::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                    c.add(5);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8 * 10_005);
     }
 
     #[test]

@@ -207,6 +207,35 @@ impl Client {
         self.reader.read_line(&mut resp)?;
         Ok(resp.trim_end().to_string())
     }
+
+    /// Pipelined batch: write a bounded chunk of requests in one flush,
+    /// read its responses (the server answers in order), repeat. Turns N
+    /// round trips into N/64 for bulk operations like loadgen preload.
+    ///
+    /// The internal chunking is load-bearing, not just a batching knob:
+    /// writing an *unbounded* batch before reading anything deadlocks
+    /// once the request bytes in flight fill the client-send and
+    /// server-receive buffers while the server blocks writing responses
+    /// nobody is draining. Draining responses after every chunk bounds
+    /// the in-flight bytes well below any socket-buffer size.
+    pub fn request_pipelined(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
+        const PIPELINE_CHUNK: usize = 64;
+        let mut out = Vec::with_capacity(lines.len());
+        for chunk in lines.chunks(PIPELINE_CHUNK) {
+            let mut buf = String::with_capacity(chunk.iter().map(|l| l.len() + 1).sum());
+            for line in chunk {
+                buf.push_str(line);
+                buf.push('\n');
+            }
+            self.writer.write_all(buf.as_bytes())?;
+            for _ in chunk {
+                let mut resp = String::new();
+                self.reader.read_line(&mut resp)?;
+                out.push(resp.trim_end().to_string());
+            }
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]

@@ -4,9 +4,11 @@
 //! [`crate::runtime::batch::BatchEngine`] by default, or (with the `pjrt`
 //! cargo feature and compiled artifacts on disk) the PJRT device path —
 //! plus the [`EngineStats`] fallback accounting shared by both.
-//! [`EngineHandle`] wraps an engine in a dedicated worker thread so the
-//! rest of the system can share it (`PJRT` clients are not `Sync`; the
-//! pure-Rust backend simply inherits the same ownership model).
+//! [`EngineHandle`] is the shared, cloneable front: for the pure-Rust
+//! backend (stateless, `Sync`) it dispatches batches **directly on the
+//! calling thread**, so concurrent batches run in parallel; only
+//! non-`Sync` backends (PJRT's `Rc`-based client) get the dedicated
+//! worker thread, via [`EngineHandle::spawn_threaded`].
 
 use crate::algorithms::memento::NO_REPLACEMENT;
 use crate::algorithms::{ConsistentHasher, Memento};
@@ -268,11 +270,31 @@ impl Engine {
 }
 
 // ---------------------------------------------------------------------------
-// Engine worker thread: backends are not required to be Send/Sync (the
-// PJRT wrapper uses `Rc` internally), so the engine lives on one dedicated
-// thread and the rest of the system talks to it through a cloneable,
-// thread-safe handle.
+// Engine handle: the pure-Rust backend is stateless and Sync, so by
+// default callers dispatch batches **directly on their own threads** —
+// concurrent `route_batch` calls run in parallel with no worker-thread
+// hand-off and no channel round trip per batch (the old single engine
+// thread serialized every batch in the process). Backends that are not
+// Sync (the PJRT wrapper uses `Rc` internally) still get the dedicated
+// worker thread behind the same cloneable handle.
 // ---------------------------------------------------------------------------
+
+/// The direct-dispatch engine: pure-Rust backend + shared stats, run on
+/// whichever thread calls it.
+struct DirectEngine {
+    backend: crate::runtime::batch::BatchEngine,
+    stats: EngineStats,
+}
+
+/// How a handle executes requests.
+#[derive(Clone)]
+enum Exec {
+    /// In-place on the caller's thread (default backend; scales with
+    /// caller threads).
+    Direct(std::sync::Arc<DirectEngine>),
+    /// Via the dedicated engine worker thread (non-Sync backends).
+    Thread(std::sync::mpsc::Sender<EngineRequest>),
+}
 
 enum EngineRequest {
     Memento { snapshot: Memento, keys: Vec<u64>, reply: std::sync::mpsc::Sender<Result<Vec<u32>>> },
@@ -286,18 +308,49 @@ enum EngineRequest {
     Stats { reply: std::sync::mpsc::Sender<(u64, u64, u64)> },
 }
 
-/// Thread-safe handle to the engine worker.
+/// Thread-safe handle to the engine: direct dispatch on the pure-Rust
+/// backend, or a worker thread for non-Sync backends.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: std::sync::mpsc::Sender<EngineRequest>,
+    exec: Exec,
     info: EngineInfo,
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread, loading the best backend for `dir` (see
-    /// [`Engine::load`]). Fails fast only if the worker thread itself
-    /// cannot start.
+    /// Build the best handle for `dir`: with the `pjrt` feature *and*
+    /// compiled artifacts present, the dedicated-thread PJRT path
+    /// ([`EngineHandle::spawn_threaded`]); otherwise the direct-dispatch
+    /// pure-Rust backend ([`EngineHandle::direct`]).
     pub fn spawn(dir: std::path::PathBuf) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        {
+            if !crate::runtime::ArtifactCatalog::scan(&dir).is_empty() {
+                return Self::spawn_threaded(dir);
+            }
+        }
+        let _ = &dir;
+        Ok(Self::direct())
+    }
+
+    /// A handle over the pure-Rust batch backend, dispatched on caller
+    /// threads: concurrent batches run in parallel instead of queueing on
+    /// one engine thread.
+    pub fn direct() -> Self {
+        let backend = crate::runtime::batch::BatchEngine::new();
+        let info = backend.info();
+        Self {
+            exec: Exec::Direct(std::sync::Arc::new(DirectEngine {
+                backend,
+                stats: EngineStats::default(),
+            })),
+            info,
+        }
+    }
+
+    /// Spawn the dedicated engine thread, loading the best backend for
+    /// `dir` (see [`Engine::load`]). Fails fast only if the worker thread
+    /// itself cannot start.
+    pub fn spawn_threaded(dir: std::path::PathBuf) -> Result<Self> {
         let (tx, rx) = std::sync::mpsc::channel::<EngineRequest>();
         let (ready_tx, ready_rx) =
             std::sync::mpsc::channel::<std::result::Result<EngineInfo, String>>();
@@ -343,7 +396,7 @@ impl EngineHandle {
             .recv()
             .map_err(|_| crate::err!("engine thread died during startup"))?
             .map_err(|e| crate::err!("engine startup: {e}"))?;
-        Ok(Self { tx, info })
+        Ok(Self { exec: Exec::Thread(tx), info })
     }
 
     /// The backend's capability report.
@@ -361,53 +414,83 @@ impl EngineHandle {
         Ok(std::sync::Arc::new(EngineSnapshot::new(m, table)))
     }
 
-    /// Batched Memento lookup against a prepared snapshot (steady path).
+    /// Batched Memento lookup against a prepared snapshot (steady path):
+    /// in place on the caller's thread for the direct backend, otherwise
+    /// a blocking round trip to the engine thread.
     pub fn memento_lookup_snapshot(
         &self,
         snap: std::sync::Arc<EngineSnapshot>,
         keys: Vec<u64>,
     ) -> Result<Vec<u32>> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineRequest::MementoSnap { snap, keys, reply })
-            .map_err(|_| crate::err!("engine thread gone"))?;
-        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+        match &self.exec {
+            Exec::Direct(d) => d.backend.memento_lookup_snapshot(&snap, &keys, &d.stats),
+            Exec::Thread(tx) => {
+                let (reply, rx) = std::sync::mpsc::channel();
+                tx.send(EngineRequest::MementoSnap { snap, keys, reply })
+                    .map_err(|_| crate::err!("engine thread gone"))?;
+                rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+            }
+        }
     }
 
-    /// Batched Memento lookup on the engine thread (blocking).
+    /// Batched Memento lookup against a one-shot snapshot (blocking).
     pub fn memento_lookup(&self, snapshot: Memento, keys: Vec<u64>) -> Result<Vec<u32>> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineRequest::Memento { snapshot, keys, reply })
-            .map_err(|_| crate::err!("engine thread gone"))?;
-        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+        match &self.exec {
+            Exec::Direct(d) => {
+                let snap = self.snapshot(snapshot)?;
+                d.backend.memento_lookup_snapshot(&snap, &keys, &d.stats)
+            }
+            Exec::Thread(tx) => {
+                let (reply, rx) = std::sync::mpsc::channel();
+                tx.send(EngineRequest::Memento { snapshot, keys, reply })
+                    .map_err(|_| crate::err!("engine thread gone"))?;
+                rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+            }
+        }
     }
 
-    /// Batched Jump lookup on the engine thread (blocking).
+    /// Batched Jump lookup (blocking).
     pub fn jump_lookup(&self, keys: Vec<u64>, n: u32) -> Result<Vec<u32>> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineRequest::Jump { keys, n, reply })
-            .map_err(|_| crate::err!("engine thread gone"))?;
-        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+        match &self.exec {
+            Exec::Direct(d) => d.backend.jump_lookup(&keys, n, &d.stats),
+            Exec::Thread(tx) => {
+                let (reply, rx) = std::sync::mpsc::channel();
+                tx.send(EngineRequest::Jump { keys, n, reply })
+                    .map_err(|_| crate::err!("engine thread gone"))?;
+                rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+            }
+        }
     }
 
-    /// Balance histogram on the engine thread (blocking).
+    /// Balance histogram (blocking).
     pub fn histogram(&self, buckets: Vec<u32>, n: usize) -> Result<Vec<u64>> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(EngineRequest::Hist { buckets, n, reply })
-            .map_err(|_| crate::err!("engine thread gone"))?;
-        rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+        match &self.exec {
+            Exec::Direct(d) => d.backend.histogram(&buckets, n, &d.stats),
+            Exec::Thread(tx) => {
+                let (reply, rx) = std::sync::mpsc::channel();
+                tx.send(EngineRequest::Hist { buckets, n, reply })
+                    .map_err(|_| crate::err!("engine thread gone"))?;
+                rx.recv().map_err(|_| crate::err!("engine reply dropped"))?
+            }
+        }
     }
 
     /// (device_keys, fallback_keys, dispatches).
     pub fn stats(&self) -> (u64, u64, u64) {
-        let (reply, rx) = std::sync::mpsc::channel();
-        if self.tx.send(EngineRequest::Stats { reply }).is_err() {
-            return (0, 0, 0);
+        match &self.exec {
+            Exec::Direct(d) => (
+                d.stats.device_keys.load(Ordering::Relaxed),
+                d.stats.fallback_keys.load(Ordering::Relaxed),
+                d.stats.dispatches.load(Ordering::Relaxed),
+            ),
+            Exec::Thread(tx) => {
+                let (reply, rx) = std::sync::mpsc::channel();
+                if tx.send(EngineRequest::Stats { reply }).is_err() {
+                    return (0, 0, 0);
+                }
+                rx.recv().unwrap_or((0, 0, 0))
+            }
         }
-        rx.recv().unwrap_or((0, 0, 0))
     }
 }
 
@@ -450,6 +533,59 @@ mod tests {
     #[should_panic(expected = "table variant too small")]
     fn snapshot_rejects_undersized_tables() {
         let _ = EngineSnapshot::new(Memento::new(10), 4);
+    }
+
+    #[test]
+    fn direct_and_threaded_handles_agree() {
+        let direct = EngineHandle::direct();
+        let threaded =
+            EngineHandle::spawn_threaded(std::path::PathBuf::from("/no/such/dir")).unwrap();
+        let mut m = Memento::new(50);
+        for b in [3u32, 17, 44] {
+            m.remove(b).unwrap();
+        }
+        let keys: Vec<u64> =
+            (0..3000u64).map(crate::hashing::mix::splitmix64_mix).collect();
+        let a = direct.memento_lookup(m.clone(), keys.clone()).unwrap();
+        let b = threaded.memento_lookup(m.clone(), keys.clone()).unwrap();
+        assert_eq!(a, b, "direct and threaded dispatch must be bit-identical");
+        let snap = direct.snapshot(m).unwrap();
+        let c = direct.memento_lookup_snapshot(snap, keys.clone()).unwrap();
+        assert_eq!(a, c);
+        let (dev, fb, disp) = direct.stats();
+        assert!(dev + fb >= 6_000, "direct stats must account both dispatches");
+        assert!(disp >= 2);
+        assert_eq!(
+            direct.jump_lookup(vec![1, 2, 3], 10).unwrap(),
+            threaded.jump_lookup(vec![1, 2, 3], 10).unwrap()
+        );
+        assert_eq!(direct.histogram(vec![0, 1, 1], 2).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn direct_handle_dispatches_in_parallel_from_many_threads() {
+        let h = EngineHandle::direct();
+        let snap = h.snapshot(Memento::new(64)).unwrap();
+        let expect = h
+            .memento_lookup_snapshot(snap.clone(), (0..512u64).collect())
+            .unwrap();
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                let snap = snap.clone();
+                let expect = expect.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        let got =
+                            h.memento_lookup_snapshot(snap.clone(), (0..512u64).collect()).unwrap();
+                        assert_eq!(got, expect);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
     }
 
     #[test]

@@ -198,6 +198,9 @@ mod tests {
             fn name(&self) -> &'static str {
                 "degenerate"
             }
+            fn clone_box(&self) -> Box<dyn ConsistentHasher> {
+                Box::new(Degenerate)
+            }
         }
         let r = balance(&Degenerate, &keys(1000));
         assert!(!r.is_uniform(6.0));

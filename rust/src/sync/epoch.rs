@@ -1,0 +1,358 @@
+//! Epoch-published snapshots: wait-free reads over an atomically swapped
+//! immutable value, with hand-rolled generation-counted reclamation (no
+//! external crates — crossbeam/arc-swap are not in the offline set).
+//!
+//! ## The problem
+//!
+//! The router wants every membership change to build one immutable
+//! snapshot and *publish* it, so lookups are plain loads with no lock —
+//! not even an `RwLock` read, whose lock-word RMW serializes readers on
+//! one contended cache line. Publishing through a bare `AtomicPtr` is
+//! easy; knowing when the *previous* snapshot can be freed while readers
+//! may still hold it is the hard part.
+//!
+//! ## The scheme
+//!
+//! [`EpochPtr`] combines three pieces:
+//!
+//! * an `AtomicPtr<T>` holding the current snapshot;
+//! * a **generation counter** bumped on every publication;
+//! * striped **reader counts, bucketed by generation parity**: a reader
+//!   announces itself in the bucket of the generation it observed
+//!   (re-validating the generation after the announcement), does its
+//!   reads, then leaves the bucket.
+//!
+//! A publisher swaps the pointer, bumps the generation, and *retires* the
+//! old snapshot instead of freeing it. Because a validated reader of
+//! generation `g` sits in bucket `g & 1`, and each publication first
+//! drains the bucket that the **next** generation will use, a snapshot
+//! retired at generation `g` is unreachable once the publication that
+//! moves the generation to `g + 2` has completed its drain — both parity
+//! buckets have then been observed empty since retirement. Each `publish`
+//! therefore frees everything retired two publications ago: bounded
+//! memory (current + at most two retired snapshots) with no reader-side
+//! blocking at all.
+//!
+//! Readers are wait-free in steady state (one striped counter increment,
+//! two generation loads, one pointer load); a reader retries its
+//! announcement only when a publication lands in the middle of it.
+//! Publishers never block readers; they only wait for *old-generation*
+//! readers to finish, which is why guards must be short-lived:
+//!
+//! * **Do not block while holding an [`EpochGuard`]** (no I/O, no channel
+//!   waits) — a parked guard stalls reclamation and, after two more
+//!   publications, the publisher itself.
+//! * **Do not publish while holding a guard from an older generation**
+//!   (e.g. two membership changes from inside one `with_view` closure) —
+//!   the second publication would wait on the caller's own guard.
+//!
+//! The stress tests at the bottom drive readers through continuous
+//! publication and assert no torn value is ever observed and every
+//! retired snapshot is eventually dropped exactly once.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Reader-count stripes. Each thread is assigned one stripe (via
+/// [`super::thread_stripe`]), so the enter/exit increments land on a
+/// (mostly) thread-private cache line instead of one globally contended
+/// counter. Power of two.
+const STRIPES: usize = 32;
+
+/// One cache line of reader counts: `active[p]` counts readers announced
+/// under a generation of parity `p`.
+#[repr(align(64))]
+struct Stripe {
+    active: [AtomicU64; 2],
+}
+
+impl Stripe {
+    fn new() -> Self {
+        Stripe { active: [AtomicU64::new(0), AtomicU64::new(0)] }
+    }
+}
+
+/// Publisher-side state: retired snapshots awaiting their grace period,
+/// as `(generation the snapshot served, pointer)` pairs.
+struct WriterState<T> {
+    retired: Vec<(u64, *mut T)>,
+}
+
+/// An atomically published, epoch-reclaimed immutable value.
+///
+/// Readers call [`EpochPtr::load`] and dereference the returned guard;
+/// writers call [`EpochPtr::publish`] with a fully built replacement.
+/// See the module docs for the protocol and its two usage rules.
+pub struct EpochPtr<T> {
+    ptr: AtomicPtr<T>,
+    /// Publication count; the value currently in `ptr` was published when
+    /// `gen` took its current value.
+    gen: AtomicU64,
+    stripes: Box<[Stripe]>,
+    writer: Mutex<WriterState<T>>,
+}
+
+// SAFETY: EpochPtr owns T values (publish moves them in from any thread,
+// reclamation drops them on the publisher's thread) and hands out &T to
+// concurrent readers, so it is Send/Sync exactly when T is Send + Sync.
+// The raw pointers inside are only ever created by Box::into_raw and
+// freed once, after the grace period proven in the module docs.
+unsafe impl<T: Send + Sync> Send for EpochPtr<T> {}
+unsafe impl<T: Send + Sync> Sync for EpochPtr<T> {}
+
+/// A pinned read of the snapshot current at pin time. Dereferences to
+/// `T`; dropping it releases the pin. Keep it short-lived (module docs).
+pub struct EpochGuard<'a, T> {
+    value: *const T,
+    slot: &'a AtomicU64,
+}
+
+impl<T> std::ops::Deref for EpochGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: `value` was the published pointer when this guard's
+        // announcement was validated, and reclamation frees a retired
+        // pointer only after both parity buckets have drained since its
+        // retirement — which cannot happen while this guard's slot count
+        // is nonzero (see the module docs for the full argument).
+        unsafe { &*self.value }
+    }
+}
+
+impl<T> Drop for EpochGuard<'_, T> {
+    fn drop(&mut self) {
+        self.slot.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl<T> EpochPtr<T> {
+    /// Publish `value` as generation 0.
+    pub fn new(value: T) -> Self {
+        Self {
+            ptr: AtomicPtr::new(Box::into_raw(Box::new(value))),
+            gen: AtomicU64::new(0),
+            stripes: (0..STRIPES).map(|_| Stripe::new()).collect::<Vec<_>>().into_boxed_slice(),
+            writer: Mutex::new(WriterState { retired: Vec::new() }),
+        }
+    }
+
+    /// The current publication generation (diagnostics / tests).
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::SeqCst)
+    }
+
+    /// Pin and return the current snapshot. Wait-free in the absence of a
+    /// concurrent [`EpochPtr::publish`]; retries (bounded by the number of
+    /// concurrent publications) when one lands mid-announcement.
+    pub fn load(&self) -> EpochGuard<'_, T> {
+        let stripe = &self.stripes[super::thread_stripe(STRIPES)];
+        loop {
+            let g = self.gen.load(Ordering::SeqCst);
+            let slot = &stripe.active[(g & 1) as usize];
+            slot.fetch_add(1, Ordering::SeqCst);
+            // Validate: if the generation moved between the first load and
+            // the announcement, the announcement may be in the wrong parity
+            // bucket — undo and retry. If it still equals `g`, then any
+            // publisher that later retires the pointer we are about to load
+            // must observe this announcement before freeing it.
+            if self.gen.load(Ordering::SeqCst) == g {
+                let value = self.ptr.load(Ordering::SeqCst);
+                return EpochGuard { value, slot };
+            }
+            slot.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Publish a new snapshot, retiring the current one. Serializes with
+    /// other publishers; never blocks readers. Frees snapshots retired two
+    /// publications ago (their grace period has provably elapsed).
+    pub fn publish(&self, value: T) {
+        let fresh = Box::into_raw(Box::new(value));
+        let mut w = super::lock_recover(&self.writer);
+        let g = self.gen.load(Ordering::SeqCst);
+        // Drain the parity bucket generation g+1 will announce into. It can
+        // only hold validated readers of generations ≤ g-1 (parity (g+1)&1)
+        // plus transient failed announcements; both leave promptly.
+        self.wait_drain(((g + 1) & 1) as usize);
+        // Everything retired at generation < g has now had both parity
+        // buckets drained since retirement (this publication's drain plus
+        // the previous one's): free it.
+        w.retired.retain(|&(retired_gen, p)| {
+            if retired_gen < g {
+                // SAFETY: created by Box::into_raw in publish/new; the
+                // grace period above proves no reader can still hold it,
+                // and retain removes the entry so it is freed exactly once.
+                unsafe { drop(Box::from_raw(p)) };
+                false
+            } else {
+                true
+            }
+        });
+        let old = self.ptr.swap(fresh, Ordering::SeqCst);
+        self.gen.store(g + 1, Ordering::SeqCst);
+        w.retired.push((g, old));
+    }
+
+    /// Spin until no reader is announced under `parity`. Only called by
+    /// publishers; guards are short-lived by contract, so this is brief.
+    /// A guard held across blocking work breaks that contract — after
+    /// ~100k yields this logs the stuck bucket once (and again every
+    /// ~100k yields) so the hang is diagnosable instead of silent, then
+    /// keeps waiting: unpinning by force would be a use-after-free.
+    fn wait_drain(&self, parity: usize) {
+        let mut spins = 0u64;
+        loop {
+            let drained =
+                self.stripes.iter().all(|s| s.active[parity].load(Ordering::SeqCst) == 0);
+            if drained {
+                return;
+            }
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                if spins % 100_000 == 0 {
+                    let held: u64 = self
+                        .stripes
+                        .iter()
+                        .map(|s| s.active[parity].load(Ordering::SeqCst))
+                        .sum();
+                    eprintln!(
+                        "[sync::epoch] publisher stalled: {held} reader pin(s) held in \
+                         parity bucket {parity} across two publications — a guard is \
+                         being held across blocking work (see sync::epoch docs)"
+                    );
+                }
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+impl<T> Drop for EpochPtr<T> {
+    fn drop(&mut self) {
+        // &mut self: no guards or publishers can exist any more.
+        let current = *self.ptr.get_mut();
+        // SAFETY: the current pointer is always a live Box::into_raw
+        // allocation and nothing can read it after &mut self.
+        unsafe { drop(Box::from_raw(current)) };
+        let w = self.writer.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for (_g, p) in w.retired.drain(..) {
+            // SAFETY: retired pointers are live allocations freed exactly
+            // once (publish removes entries when it frees them).
+            unsafe { drop(Box::from_raw(p)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    /// A payload whose drops are counted, to pin down reclamation.
+    struct Tracked {
+        value: u64,
+        drops: Arc<AtomicUsize>,
+    }
+
+    impl Drop for Tracked {
+        fn drop(&mut self) {
+            self.drops.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn publish_and_load_roundtrip() {
+        let p = EpochPtr::new(10u64);
+        assert_eq!(*p.load(), 10);
+        assert_eq!(p.generation(), 0);
+        p.publish(11);
+        p.publish(12);
+        assert_eq!(*p.load(), 12);
+        assert_eq!(p.generation(), 2);
+    }
+
+    #[test]
+    fn reclamation_keeps_at_most_two_retired_snapshots() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let p = EpochPtr::new(Tracked { value: 0, drops: drops.clone() });
+        for i in 1..=100u64 {
+            p.publish(Tracked { value: i, drops: drops.clone() });
+            let live = (i as usize + 1) - drops.load(Ordering::SeqCst);
+            assert!(live <= 3, "after publish #{i}: {live} snapshots live");
+        }
+        assert_eq!(*p.load().value_ref(), 100);
+        drop(p);
+        assert_eq!(drops.load(Ordering::SeqCst), 101, "every snapshot dropped exactly once");
+    }
+
+    impl Tracked {
+        fn value_ref(&self) -> &u64 {
+            &self.value
+        }
+    }
+
+    #[test]
+    fn a_held_guard_pins_its_snapshot_across_one_publication() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let p = EpochPtr::new(Tracked { value: 0, drops: drops.clone() });
+        let guard = p.load();
+        // Publishing once while a current-generation guard is held is fine:
+        // the drained bucket is the *other* parity.
+        p.publish(Tracked { value: 1, drops: drops.clone() });
+        assert_eq!(*guard.value_ref(), 0, "guard still reads the pinned snapshot");
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "pinned snapshot not freed");
+        drop(guard);
+        p.publish(Tracked { value: 2, drops: drops.clone() });
+        p.publish(Tracked { value: 3, drops: drops.clone() });
+        assert!(
+            drops.load(Ordering::SeqCst) >= 2,
+            "snapshot 0 reclaimed after its grace period (drops={})",
+            drops.load(Ordering::SeqCst)
+        );
+        assert_eq!(*p.load().value_ref(), 3);
+    }
+
+    #[test]
+    fn concurrent_readers_never_see_torn_or_reclaimed_values() {
+        // Writer publishes (i, i * 3) pairs; readers assert the pair
+        // invariant (torn read detection) and per-thread monotonicity
+        // (a stale pointer load would go backwards).
+        const PUBLISHES: u64 = 2_000;
+        let p = Arc::new(EpochPtr::new((0u64, 0u64)));
+        let stop = Arc::new(AtomicU64::new(0));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    let mut reads = 0u64;
+                    while stop.load(Ordering::SeqCst) == 0 {
+                        let g = p.load();
+                        let (a, b) = *g;
+                        assert_eq!(b, a * 3, "torn snapshot: ({a}, {b})");
+                        assert!(a >= last, "went backwards: {a} < {last}");
+                        last = a;
+                        reads += 1;
+                    }
+                    reads
+                })
+            })
+            .collect();
+        for i in 1..=PUBLISHES {
+            p.publish((i, i * 3));
+            if i % 64 == 0 {
+                std::thread::yield_now();
+            }
+        }
+        stop.store(1, Ordering::SeqCst);
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0, "readers must have made progress");
+        assert_eq!(*p.load(), (PUBLISHES, PUBLISHES * 3));
+        assert_eq!(p.generation(), PUBLISHES);
+    }
+}

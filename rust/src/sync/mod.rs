@@ -1,0 +1,105 @@
+//! `sync` — concurrency substrates for the coordinator's data path.
+//!
+//! Two things live here:
+//!
+//! * [`epoch`] — wait-free snapshot publication ([`epoch::EpochPtr`]): the
+//!   mechanism behind the router's lock-free lookup path (an `AtomicPtr`
+//!   swap plus generation-counted reclamation; see DESIGN.md §8).
+//! * the crate-wide **recover-on-poison lock policy**
+//!   ([`lock_recover`] / [`read_recover`] / [`write_recover`]).
+//!
+//! ## Lock-poisoning policy
+//!
+//! `std` poisons a `Mutex`/`RwLock` when a thread panics while holding it,
+//! and `.lock().unwrap()` then propagates that panic to every other thread
+//! that touches the lock — one crashing connection worker would wedge the
+//! whole data path. Every guarded section in this crate is written to keep
+//! its structure valid at every intermediate point (single-call inserts and
+//! removes, counter bumps, histogram records — no multi-step invariants
+//! held across a possible panic), so the right recovery is to take the data
+//! as it stands and keep serving. These helpers encode that policy in one
+//! place; coordinator code calls them instead of `.lock().unwrap()`.
+
+pub mod epoch;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    /// Each thread's stable slot number, assigned round-robin on first use.
+    static THREAD_SLOT: usize = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
+}
+
+/// This thread's stripe index in `0..n` (`n` must be a power of two).
+///
+/// One global round-robin thread slot, masked per call site: every
+/// striped structure in the crate (epoch reader counts, sharded metrics
+/// counters, latency shards) keys off the same assignment, so a thread
+/// touches one (mostly) private cache line per structure and the stripe
+/// logic lives in exactly one place.
+pub fn thread_stripe(n: usize) -> usize {
+    debug_assert!(n.is_power_of_two(), "stripe count must be a power of two");
+    THREAD_SLOT.with(|s| *s) & (n - 1)
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked
+/// (see the module docs for why recovery is sound here).
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Take a read lock, recovering the guard if a writer panicked.
+pub fn read_recover<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Take a write lock, recovering the guard if a previous holder panicked.
+pub fn write_recover<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn thread_stripes_are_stable_per_thread_and_in_range() {
+        let a = thread_stripe(8);
+        assert_eq!(a, thread_stripe(8), "stripe must be stable within a thread");
+        assert!(a < 8);
+        assert!(thread_stripe(32) < 32);
+        let other = std::thread::spawn(|| thread_stripe(8)).join().unwrap();
+        assert!(other < 8);
+    }
+
+    #[test]
+    fn lock_recover_survives_a_poisoning_panic() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        let mut g = lock_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 8);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_a_poisoning_panic() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert_eq!(read_recover(&l).len(), 4);
+    }
+}

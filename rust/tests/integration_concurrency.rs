@@ -1,0 +1,187 @@
+//! Concurrency stress: the wait-free lookup path under continuous
+//! membership churn, and the sharded storage under parallel clients.
+//!
+//! The torn-read assertion works because every router read runs against
+//! one pinned [`memento::coordinator::router::RouterSnapshot`]: placement
+//! and membership observed together at a single epoch. If publication
+//! were torn (placement from one epoch, membership from another), a
+//! looked-up bucket would be unbound or non-working, or two threads would
+//! observe different placements for the same `(epoch, key)` pair.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::storage::StorageNode;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Deterministic probe keys shared by every reader thread.
+fn probe_keys(n: u64) -> Vec<u64> {
+    (0..n).map(memento::hashing::mix::splitmix64_mix).collect()
+}
+
+#[test]
+fn lookups_stay_consistent_under_continuous_kill_add_churn() {
+    const CHURN_CYCLES: usize = 150;
+    const READERS: usize = 4;
+    let router = Router::new("memento", 16, 160, None).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let keys = Arc::new(probe_keys(64));
+
+    let readers: Vec<_> = (0..READERS)
+        .map(|_| {
+            let router = router.clone();
+            let stop = stop.clone();
+            let keys = keys.clone();
+            std::thread::spawn(move || {
+                // For the first probe key, remember the bucket observed at
+                // each epoch: placements are immutable per epoch, so every
+                // observation of (epoch, key0) must agree — across reads
+                // and across threads.
+                let mut by_epoch: HashMap<u64, u32> = HashMap::new();
+                let mut last_epoch = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    router.with_view(|a, m| {
+                        let epoch = m.epoch();
+                        assert!(epoch >= last_epoch, "epoch went backwards");
+                        last_epoch = epoch;
+                        for &k in keys.iter() {
+                            let b = a.lookup(k);
+                            assert!(a.is_working(b), "lookup returned a dead bucket");
+                            assert!(
+                                m.node_at(b).is_some(),
+                                "torn read: bucket {b} unbound at epoch {epoch}"
+                            );
+                        }
+                        let b0 = a.lookup(keys[0]);
+                        match by_epoch.entry(epoch) {
+                            std::collections::hash_map::Entry::Occupied(e) => {
+                                assert_eq!(
+                                    *e.get(),
+                                    b0,
+                                    "same epoch, different placement for key0"
+                                );
+                            }
+                            std::collections::hash_map::Entry::Vacant(e) => {
+                                e.insert(b0);
+                            }
+                        }
+                    });
+                    // The plain scalar path must hold the same invariant
+                    // (its internal expect() panics on a torn read).
+                    let (_b, _node) = router.route(keys[reads as usize % keys.len()]);
+                    reads += 1;
+                }
+                (reads, by_epoch)
+            })
+        })
+        .collect();
+
+    // Churn: kill a working bucket, restore it, repeatedly. Single
+    // injector thread, so every cycle is exactly two epochs.
+    for _ in 0..CHURN_CYCLES {
+        let wb = router.with_view(|a, _| a.working_buckets());
+        let victim = wb[wb.len() / 2];
+        router.fail_bucket(victim).expect("victim was working");
+        router.add_node().expect("capacity available");
+    }
+    stop.store(true, Ordering::Relaxed);
+
+    let mut merged: HashMap<u64, u32> = HashMap::new();
+    let mut total_reads = 0u64;
+    for r in readers {
+        let (reads, by_epoch) = r.join().expect("a reader panicked (torn read)");
+        total_reads += reads;
+        for (epoch, b) in by_epoch {
+            match merged.entry(epoch) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    assert_eq!(
+                        *e.get(),
+                        b,
+                        "threads disagree on placement at epoch {epoch}"
+                    );
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(b);
+                }
+            }
+        }
+    }
+    assert!(total_reads > 0, "readers must have made progress");
+    assert_eq!(
+        router.epoch(),
+        2 * CHURN_CYCLES as u64,
+        "every kill/add cycle is exactly two published epochs"
+    );
+    assert_eq!(router.working(), 16, "cluster restored to full strength");
+}
+
+#[test]
+fn concurrent_batched_and_scalar_readers_survive_churn() {
+    // route_batch under churn: each batch runs against one snapshot, so
+    // every returned bucket must have been working at some epoch — the
+    // cheap invariant here is simply that nothing panics and bucket ids
+    // stay inside the b-array across 60 epochs of churn.
+    let router = Router::new("memento", 8, 80, None).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let keys = Arc::new(probe_keys(256));
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let router = router.clone();
+            let stop = stop.clone();
+            let keys = keys.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for b in router.route_batch(&keys) {
+                        assert!(b < 8 + 64, "bucket id out of any possible range");
+                    }
+                }
+            })
+        })
+        .collect();
+    for _ in 0..30 {
+        let wb = router.with_view(|a, _| a.working_buckets());
+        router.fail_bucket(wb[0]).unwrap();
+        router.add_node().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().expect("a batched reader panicked");
+    }
+}
+
+#[test]
+fn storage_shards_hold_under_parallel_writers() {
+    const WRITERS: usize = 4;
+    const PER_WRITER: u64 = 4_000;
+    let node = Arc::new(StorageNode::default());
+    let writers: Vec<_> = (0..WRITERS as u64)
+        .map(|w| {
+            let node = node.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    let k = w * PER_WRITER + i;
+                    node.put(k, k.to_le_bytes().to_vec());
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    let total = (WRITERS as u64 * PER_WRITER) as usize;
+    assert_eq!(node.len(), total, "no write lost across shards");
+    let loads = node.shard_loads();
+    assert_eq!(loads.iter().sum::<usize>(), total);
+    let mean = total / StorageNode::SHARDS;
+    for (i, l) in loads.iter().enumerate() {
+        assert!(
+            *l > mean / 2 && *l < mean * 2,
+            "shard {i}: {l} records vs mean {mean} — keys not spread"
+        );
+    }
+    // Every record readable with the right value.
+    for k in (0..total as u64).step_by(97) {
+        assert_eq!(node.get(k), Some(k.to_le_bytes().to_vec()));
+    }
+}

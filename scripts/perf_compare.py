@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Perf-smoke gate: compare fresh BENCH_*.json figures against the
+committed baseline and fail on a >2x throughput regression.
+
+Usage:
+    python3 scripts/perf_compare.py \
+        --current BENCH_router_scaling.json \
+        --loadgen BENCH_loadgen_smoke.json \
+        --baseline ci/perf-baseline.json
+
+The baseline holds conservative *floors* (see ci/perf-baseline.json):
+CI runners are shared and noisy, so the gate only trips when measured
+throughput falls below baseline/2 — a real regression (a lock back on
+the hot path, an accidental O(n) in the lookup), not runner jitter.
+Stdlib only; no third-party packages.
+"""
+
+import argparse
+import json
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_throughput(rows, threads):
+    for row in rows:
+        if row.get("threads") == threads:
+            return float(row["throughput"])
+    raise SystemExit(f"no row for {threads} threads in {rows!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="BENCH_router_scaling.json from this run")
+    ap.add_argument("--loadgen", help="BENCH_loadgen_smoke.json from this run (optional)")
+    ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
+    args = ap.parse_args()
+
+    current = load(args.current)
+    baseline = load(args.baseline)
+    failures = []
+    checks = []
+
+    def gate(name, measured, floor):
+        threshold = floor / REGRESSION_FACTOR
+        ok = measured >= threshold
+        checks.append((name, measured, floor, threshold, ok))
+        if not ok:
+            failures.append(name)
+
+    for threads, floor in baseline["loadgen_closed_ops_s"].items():
+        measured = cell_throughput(current["loadgen_closed"], int(threads))
+        gate(f"loadgen closed @ {threads} threads", measured, floor)
+    for threads, floor in baseline["route_only_ops_s"].items():
+        measured = cell_throughput(current["route_only"], int(threads))
+        gate(f"route-only @ {threads} threads", measured, floor)
+
+    if args.loadgen:
+        smoke = load(args.loadgen)
+        gate(
+            "loadgen smoke (8-thread closed loop)",
+            float(smoke["throughput"]),
+            baseline["loadgen_smoke_ops_s"],
+        )
+        if int(smoke.get("errors", 0)) != 0:
+            failures.append("loadgen smoke reported errors")
+            checks.append(("loadgen smoke errors", smoke["errors"], 0, 0, False))
+
+    width = max(len(c[0]) for c in checks)
+    for name, measured, floor, threshold, ok in checks:
+        verdict = "ok" if ok else "REGRESSION"
+        print(
+            f"{name:<{width}}  measured {measured:>12.0f}  "
+            f"baseline {floor:>12.0f}  floor(/{REGRESSION_FACTOR:g}) {threshold:>12.0f}  {verdict}"
+        )
+
+    scaling = current.get("loadgen_speedup_8v1")
+    if scaling is not None:
+        cores = current.get("cores", "?")
+        print(f"\nloadgen speedup 8v1: {scaling}x on {cores} cores (informational)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} perf regression(s): {', '.join(failures)}")
+        return 1
+    print(f"\nOK: {len(checks)} checks within {REGRESSION_FACTOR}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
