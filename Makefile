@@ -45,8 +45,10 @@ perf-smoke:
 	  --churn stable --threads 8 --duration 2 --no-csv \
 	  --json BENCH_loadgen_smoke.json
 	cargo bench --bench bench_router_scaling
+	cargo bench --bench bench_migration
 	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
-	  --loadgen BENCH_loadgen_smoke.json --baseline ci/perf-baseline.json
+	  --loadgen BENCH_loadgen_smoke.json --migration BENCH_migration.json \
+	  --baseline ci/perf-baseline.json
 
 # AOT-compile the PJRT kernel variants (requires the python/JAX toolchain;
 # see python/compile/aot.py and DESIGN.md §5).

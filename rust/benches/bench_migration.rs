@@ -1,0 +1,172 @@
+//! Migration-pipeline smoke bench — the measurement behind the CI
+//! perf-smoke gate's `BENCH_migration.json` (DESIGN.md §9).
+//!
+//! For each removed fraction of a preloaded cluster, the manual-mode
+//! migrator splits the two halves of a membership change apart and times
+//! them separately:
+//!
+//! * **admin (plan)** — the `KILL`/`ADD` protocol call: publish the new
+//!   epoch, derive the moved-key delta, enqueue the plan. Must be O(1)
+//!   in stored keys — the gate's `migration_admin_ops_s` floor trips if
+//!   key scanning ever creeps back onto this path.
+//! * **drain (execute)** — `Migrator::run_pending()`: batched planning
+//!   (`route_batch`) plus per-shard extraction and relocation. Gated as
+//!   throughput via `migration_drain_keys_per_s`.
+//!
+//! Emits `results/migration.csv` plus `BENCH_migration.json` (override
+//! the JSON path with `MEMENTO_MIGRATION_JSON`; preload size with
+//! `MEMENTO_MIGRATION_PRELOAD`). CI compares the JSON against
+//! `ci/perf-baseline.json` and fails on a >2x regression.
+
+use memento::benchkit::report::Table;
+use memento::coordinator::migration::MigrationConfig;
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use std::time::Instant;
+
+const NODES: usize = 32;
+/// Removed fractions: 1, 4 and 8 of 32 nodes.
+const FRACS: [f64; 3] = [0.03125, 0.125, 0.25];
+
+struct Cell {
+    frac: f64,
+    kills: usize,
+    admin_ns_avg: f64,
+    admin_ns_max: u64,
+    drain_keys: u64,
+    drain_ms: f64,
+    drain_keys_per_s: f64,
+}
+
+fn run_cell(frac: f64, preload: u64) -> Cell {
+    let kills = ((NODES as f64 * frac).round() as usize).max(1);
+    let router = Router::new("memento", NODES, NODES * 10, None).expect("router");
+    let svc = Service::with_migration(
+        router,
+        1,
+        MigrationConfig { auto: false, ..MigrationConfig::default() },
+    );
+    for i in 0..preload {
+        svc.handle(&format!("PUT k{i} v{i}"));
+    }
+
+    // Admin half: kills, drain, restores, drain — every admin rtt
+    // sampled, every executed plan's keys counted.
+    let mut admin_ns: Vec<u64> = Vec::with_capacity(2 * kills);
+    let mut admin = |line: &str| {
+        let t0 = Instant::now();
+        let resp = svc.handle(line);
+        admin_ns.push(memento::metrics::duration_to_ns(t0.elapsed()));
+        assert!(
+            resp.starts_with("KILLED") || resp.starts_with("ADDED"),
+            "admin command failed: {resp}"
+        );
+    };
+    for b in 0..kills {
+        admin(&format!("KILL {b}"));
+    }
+    let t0 = Instant::now();
+    let moved_out = svc.migration.run_pending();
+    let mut drain = t0.elapsed();
+    for _ in 0..kills {
+        admin("ADD");
+    }
+    let t0 = Instant::now();
+    let moved_back = svc.migration.run_pending();
+    drain += t0.elapsed();
+
+    let drain_keys = moved_out + moved_back;
+    let drain_ms = drain.as_secs_f64() * 1e3;
+    let admin_ns_avg = admin_ns.iter().sum::<u64>() as f64 / admin_ns.len() as f64;
+    let admin_ns_max = admin_ns.iter().copied().max().unwrap_or(0);
+    assert!(drain_keys > 0, "churn over a preloaded cluster must move keys");
+    Cell {
+        frac,
+        kills,
+        admin_ns_avg,
+        admin_ns_max,
+        drain_keys,
+        drain_ms,
+        drain_keys_per_s: drain_keys as f64 / drain.as_secs_f64().max(1e-9),
+    }
+}
+
+fn main() {
+    let preload: u64 = std::env::var("MEMENTO_MIGRATION_PRELOAD")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60_000);
+    println!("migration smoke: {NODES} nodes, {preload} preloaded records\n");
+
+    let mut table = Table::new(
+        "migration",
+        &[
+            "removed_frac",
+            "kills",
+            "admin_ns_avg",
+            "admin_ns_max",
+            "drain_keys",
+            "drain_ms",
+            "drain_keys_per_s",
+        ],
+    );
+    let mut cells = Vec::new();
+    for &frac in &FRACS {
+        let c = run_cell(frac, preload);
+        table.push_row(vec![
+            format!("{:.5}", c.frac),
+            c.kills.to_string(),
+            format!("{:.0}", c.admin_ns_avg),
+            c.admin_ns_max.to_string(),
+            c.drain_keys.to_string(),
+            format!("{:.3}", c.drain_ms),
+            format!("{:.0}", c.drain_keys_per_s),
+        ]);
+        cells.push(c);
+    }
+    table.emit("migration");
+
+    // Gate figures: the slowest cell bounds both metrics.
+    let mut admin_ops_s_min = f64::INFINITY;
+    let mut drain_keys_per_s_min = f64::INFINITY;
+    for c in &cells {
+        admin_ops_s_min = admin_ops_s_min.min(1e9 / c.admin_ns_avg.max(1.0));
+        drain_keys_per_s_min = drain_keys_per_s_min.min(c.drain_keys_per_s);
+    }
+    println!(
+        "admin ops/s (worst cell): {admin_ops_s_min:.0}, \
+         drain keys/s (worst cell): {drain_keys_per_s_min:.0}"
+    );
+
+    let cell_rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"removed_frac\": {:.5}, \"kills\": {}, \"admin_ns_avg\": {:.0}, \
+                 \"admin_ns_max\": {}, \"drain_keys\": {}, \"drain_ms\": {:.3}, \
+                 \"drain_keys_per_s\": {:.1}}}",
+                c.frac, c.kills, c.admin_ns_avg, c.admin_ns_max, c.drain_keys, c.drain_ms,
+                c.drain_keys_per_s
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"migration\",\n  \"algo\": \"memento\",\n  \"nodes\": {NODES},\n  \
+         \"preload\": {preload},\n  \"cells\": [\n    {}\n  ],\n  \
+         \"admin_ops_s_min\": {admin_ops_s_min:.1},\n  \
+         \"drain_keys_per_s_min\": {drain_keys_per_s_min:.1}\n}}\n",
+        cell_rows.join(",\n    ")
+    );
+    // Like bench_router_scaling: the committed reference and the CI gate
+    // live at the workspace root, and a failed write must fail the bench
+    // so a stale reference can never pass the gate silently.
+    let path = std::env::var("MEMENTO_MIGRATION_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_migration.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

@@ -15,7 +15,7 @@
 //! examples of Fig. 7–16 are unit tests below.
 
 use super::replmap::ReplMap;
-use super::traits::{AlgoError, ConsistentHasher, LookupTrace};
+use super::traits::{AlgoError, ConsistentHasher, LookupTrace, MoveDelta};
 use super::{jump_hash, jump_hash_traced, rehash};
 use crate::hashing::Hasher64;
 
@@ -132,6 +132,78 @@ impl Memento {
                         }
                     }
                     b = d;
+                }
+            }
+        }
+    }
+
+    /// The working buckets that can hold keys which route to `b` once `b`
+    /// is restored: Alg. 4's walk, run in reverse over `b`'s diversion
+    /// range.
+    ///
+    /// A key that routes to removed `b` is diverted to
+    /// `d = rehash(key, b) mod c_b` with `d ∈ [0, c_b)` — regardless of
+    /// whether the lookup reached `b` from the Jump walk or from another
+    /// bucket's chain, because Alg. 4's outer loop restarts the same
+    /// diversion at `b` either way. From `d` the inner loop follows
+    /// replacements while `u ≥ c_b`; when the guard breaks at a removed
+    /// bucket with a smaller `c`, the outer loop re-diverts over that
+    /// bucket's own `[0, c)` range. The reachable *working* endpoints of
+    /// this walk are exactly the buckets that hold movable keys, so a
+    /// migration planner only scans those donors (the Tentpole of the
+    /// epoch-delta pipeline; see `coordinator::migration`).
+    ///
+    /// Returns `None` if `b` has no replacement entry (working, or tail
+    /// growth — where Jump pulls keys from everywhere and no chain bound
+    /// exists).
+    pub fn restore_sources(&self, b: u32) -> Option<Vec<u32>> {
+        let (c, _p) = self.repl.get(b)?;
+        let mut out = std::collections::BTreeSet::new();
+        let mut visited = std::collections::BTreeSet::new();
+        visited.insert(b);
+        self.chain_sources(c, &mut out, &mut visited);
+        Some(out.into_iter().collect())
+    }
+
+    /// Accumulate the working endpoints reachable from a diversion range
+    /// `[0, c0)` under Alg. 4's `u ≥ c` inner guard, expanding through
+    /// removed buckets whose guard breaks (the outer-loop restart).
+    /// Iterative worklist — recursion here would nest one frame per
+    /// guard-break level, O(r) deep on adversarial removal orders.
+    /// `visited` memoizes removed buckets whose ranges were already
+    /// queued, bounding the walk at O(n · r).
+    fn chain_sources(
+        &self,
+        c0: u32,
+        out: &mut std::collections::BTreeSet<u32>,
+        visited: &mut std::collections::BTreeSet<u32>,
+    ) {
+        let mut ranges = vec![c0];
+        while let Some(c) = ranges.pop() {
+            for d0 in 0..c {
+                let mut d = d0;
+                loop {
+                    match self.repl.get(d) {
+                        None => {
+                            out.insert(d);
+                            break;
+                        }
+                        Some((u, _p)) => {
+                            if u >= c {
+                                // Same step the lookup's inner loop takes;
+                                // the guard's shrinking ranges rule out
+                                // cycles (Prop. VI.2).
+                                d = u;
+                            } else {
+                                // Guard break: the lookup restarts its
+                                // diversion at `d` over [0, u).
+                                if visited.insert(d) {
+                                    ranges.push(u);
+                                }
+                                break;
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -319,6 +391,43 @@ impl ConsistentHasher for Memento {
 
     fn clone_box(&self) -> Box<dyn ConsistentHasher> {
         Box::new(self.clone())
+    }
+
+    /// The structural delta the paper's guarantees make exact:
+    ///
+    /// * a **removed** bucket donates only its own keys (minimal
+    ///   disruption, Prop. VI.3) — one source;
+    /// * a **restored** bucket pulls keys only from the working buckets
+    ///   along its replacement-chain diversion
+    ///   ([`Memento::restore_sources`]) — monotonicity (Prop. VI.5) says
+    ///   nothing else moves;
+    /// * **tail growth** (an added bucket with no replacement entry) falls
+    ///   back to the conservative full scan: in the dense regime Memento
+    ///   is exactly Jump, which moves ~1/(n+1) of keys from *every*
+    ///   bucket.
+    fn delta_sources(&self, new: &dyn ConsistentHasher) -> MoveDelta {
+        let old_wb = self.working_buckets();
+        let mut sources = std::collections::BTreeSet::new();
+        let mut visited = std::collections::BTreeSet::new();
+        for &b in &old_wb {
+            if !new.is_working(b) {
+                sources.insert(b);
+            }
+        }
+        for b in new.working_buckets() {
+            if self.is_working(b) {
+                continue;
+            }
+            match self.repl.get(b) {
+                Some((c, _p)) => {
+                    visited.insert(b);
+                    self.chain_sources(c, &mut sources, &mut visited);
+                }
+                // Tail growth: no chain bound exists.
+                None => return MoveDelta { sources: old_wb, full_scan: true },
+            }
+        }
+        MoveDelta { sources: sources.into_iter().collect(), full_scan: false }
     }
 }
 
@@ -613,6 +722,113 @@ mod tests {
         for k in 0..2000u64 {
             let key = crate::hashing::mix::splitmix64_mix(k);
             assert!(m.lookup(key) < 9);
+        }
+    }
+
+    /// Soundness harness for delta tests: every key that moved between
+    /// `old` and `new` must have lived on a delta source bucket.
+    fn assert_delta_sound(old: &Memento, new: &Memento, keys: u64) {
+        let delta = old.delta_sources(new);
+        for k in 0..keys {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let (b0, b1) = (old.lookup(key), new.lookup(key));
+            if b0 != b1 {
+                assert!(
+                    delta.is_source(b0),
+                    "key {k} moved {b0}->{b1} but {b0} is not a planned source \
+                     (sources {:?}, full_scan {})",
+                    delta.sources,
+                    delta.full_scan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delta_sources_on_remove_is_exactly_the_removed_bucket() {
+        let old = Memento::new(20);
+        let mut new = old.clone();
+        new.remove(7).unwrap();
+        let delta = old.delta_sources(&new);
+        assert_eq!(delta.sources, vec![7]);
+        assert!(!delta.full_scan);
+        assert_delta_sound(&old, &new, 20_000);
+    }
+
+    #[test]
+    fn delta_sources_on_restore_follows_the_chain() {
+        let mut old = Memento::new(12);
+        for b in [2u32, 9, 5] {
+            old.remove(b).unwrap();
+        }
+        // Restore the last-removed bucket (5): its diversion range is
+        // [0, c_5) with c_5 = 9 (working count after its removal).
+        let mut new = old.clone();
+        assert_eq!(new.add().unwrap(), 5);
+        let chain = old.restore_sources(5).unwrap();
+        let delta = old.delta_sources(&new);
+        assert!(!delta.full_scan, "restore must not fall back to a full scan");
+        assert_eq!(delta.sources, chain, "restore delta is the chain source set");
+        // Chain sources are a subset of the old working set and bounded by
+        // the diversion range.
+        let (c, _) = old.replacement(5).unwrap();
+        assert_eq!(c, 9);
+        for &s in &chain {
+            assert!(old.is_working(s), "source {s} must be old-working");
+        }
+        assert!(chain.len() <= c as usize);
+        assert_delta_sound(&old, &new, 20_000);
+    }
+
+    #[test]
+    fn delta_sources_restore_skips_unreachable_donors() {
+        // Deep removal makes the diversion range [0, c) much smaller than
+        // the working set: high-id survivors cannot donate keys to the
+        // restored bucket and must be excluded from the scan.
+        let mut old = Memento::new(32);
+        for b in [1u32, 3, 6, 10, 14, 18, 22, 26, 30, 2, 7, 12] {
+            old.remove(b).unwrap();
+        }
+        let mut new = old.clone();
+        assert_eq!(new.add().unwrap(), 12);
+        let delta = old.delta_sources(&new);
+        assert!(!delta.full_scan);
+        assert!(
+            delta.sources.len() < old.working(),
+            "chain planning must beat the full scan: {} sources vs {} working",
+            delta.sources.len(),
+            old.working()
+        );
+        assert_delta_sound(&old, &new, 40_000);
+    }
+
+    #[test]
+    fn delta_sources_tail_growth_falls_back_to_full_scan() {
+        let old = Memento::new(10);
+        let mut new = old.clone();
+        assert_eq!(new.add().unwrap(), 10);
+        let delta = old.delta_sources(&new);
+        assert!(delta.full_scan, "Jump-regime growth pulls from everywhere");
+        assert_eq!(delta.sources, old.working_buckets());
+        assert_delta_sound(&old, &new, 20_000);
+    }
+
+    #[test]
+    fn delta_sources_survives_chained_and_self_replacements() {
+        // Build the §V-D self-replacement state plus deeper chains, then
+        // audit every remove/restore step against brute-force movement.
+        let mut m = Memento::new(10);
+        m.remove(9).unwrap(); // tail shrink
+        m.remove(5).unwrap(); // ⟨5→8, 9⟩
+        m.remove(7).unwrap(); // ⟨7→7, 5⟩ — self-replacement
+        m.remove(8).unwrap(); // chains through 5's replacement
+        // Restore everything step by step, checking each delta.
+        for _ in 0..3 {
+            let old = m.clone();
+            m.add().unwrap();
+            assert_delta_sound(&old, &m, 30_000);
+            let delta = old.delta_sources(&m);
+            assert!(!delta.full_scan);
         }
     }
 

@@ -31,7 +31,7 @@ pub mod serde;
 pub mod traits;
 
 pub use memento::Memento;
-pub use traits::{AlgoError, ConsistentHasher, LookupTrace, RemovalOrder};
+pub use traits::{AlgoError, ConsistentHasher, LookupTrace, MoveDelta, RemovalOrder};
 
 use crate::hashing::Hasher64;
 

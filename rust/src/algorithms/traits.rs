@@ -11,6 +11,10 @@ pub enum AlgoError {
     UnsupportedRemoval { bucket: u32, reason: &'static str },
     /// Bucket id is not currently a working bucket.
     NotWorking(u32),
+    /// Node id is not registered in the cluster at all (neither working
+    /// nor down) — distinct from [`AlgoError::NotWorking`], which names a
+    /// *bucket* that exists but is unbound.
+    UnknownNode(u64),
     /// The cluster is at its capacity bound (Anchor/Dx: `a`).
     CapacityExhausted { capacity: usize },
     /// The cluster would become empty.
@@ -24,6 +28,7 @@ impl fmt::Display for AlgoError {
                 write!(f, "cannot remove bucket {bucket}: {reason}")
             }
             AlgoError::NotWorking(b) => write!(f, "bucket {b} is not working"),
+            AlgoError::UnknownNode(id) => write!(f, "unknown node node-{id}"),
             AlgoError::CapacityExhausted { capacity } => {
                 write!(f, "cluster capacity {capacity} exhausted")
             }
@@ -47,6 +52,38 @@ pub struct LookupTrace {
     pub outer_iters: u32,
     /// Internal-loop iterations (Memento Prop. VII.2; Anchor inner chain).
     pub inner_iters: u32,
+}
+
+/// The moved-key delta between two placement states, expressed over the
+/// *old* placement's buckets: any key whose lookup differs between the two
+/// states resolved, under the **old** state, to one of `sources`.
+///
+/// This is the contract a migration planner needs: data at rest is indexed
+/// by where keys *used to* route, so knowing the old-side source set turns
+/// "rescan the whole cluster" into "scan exactly the donors". The paper's
+/// structural guarantees make the set small for Memento — minimal
+/// disruption (Prop. VI.3) pins a removal's sources to the removed bucket
+/// itself, and monotonicity (Prop. VI.5) plus the replacement-chain
+/// structure (Def. V.5) pin a restore's sources to the buckets reachable
+/// along the restored bucket's diversion chains.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MoveDelta {
+    /// Old-placement buckets whose resident keys may need to move,
+    /// ascending and deduplicated. Keys resident anywhere else are
+    /// guaranteed not to have changed placement.
+    pub sources: Vec<u32>,
+    /// `true` when the algorithm could not do better than "every old
+    /// working bucket is a potential source" (the conservative default,
+    /// and Memento's tail-growth case, where Jump moves keys onto the new
+    /// tail from everywhere).
+    pub full_scan: bool,
+}
+
+impl MoveDelta {
+    /// Whether `bucket` is one of the delta's source buckets.
+    pub fn is_source(&self, bucket: u32) -> bool {
+        self.sources.binary_search(&bucket).is_ok()
+    }
 }
 
 /// Removal ordering strategies used by the paper's scenarios (§VIII-A).
@@ -183,6 +220,23 @@ pub trait ConsistentHasher: Send + Sync {
         out
     }
 
+    /// The moved-key delta from `self` (the **old** state) to `new` (the
+    /// **after** state of the same logical cluster): which old-placement
+    /// buckets can hold keys whose placement changed.
+    ///
+    /// ## Contract
+    /// For every key `k` with `self.lookup(k) != new.lookup(k)`, the old
+    /// bucket `self.lookup(k)` is in the returned
+    /// [`MoveDelta::sources`]. Soundness (no mover outside the sources)
+    /// is mandatory; tightness is best-effort — the default
+    /// implementation is maximally conservative and returns every old
+    /// working bucket with [`MoveDelta::full_scan`] set. Algorithms with
+    /// structural disruption guarantees (Memento) override this to return
+    /// the minimal set.
+    fn delta_sources(&self, _new: &dyn ConsistentHasher) -> MoveDelta {
+        MoveDelta { sources: self.working_buckets(), full_scan: true }
+    }
+
     /// Clone the algorithm behind the trait (every implementation is
     /// `Clone`; this makes trait objects cloneable too). The router's
     /// snapshot publication relies on it: each membership change clones
@@ -210,6 +264,14 @@ mod tests {
         assert!(AlgoError::WouldBeEmpty.to_string().contains("last working"));
         assert!(AlgoError::CapacityExhausted { capacity: 8 }.to_string().contains('8'));
         assert!(AlgoError::NotWorking(2).to_string().contains('2'));
+        assert!(AlgoError::UnknownNode(7).to_string().contains("node-7"));
+    }
+
+    #[test]
+    fn move_delta_source_membership() {
+        let d = MoveDelta { sources: vec![1, 4, 9], full_scan: false };
+        assert!(d.is_source(4));
+        assert!(!d.is_source(5));
     }
 
     #[test]

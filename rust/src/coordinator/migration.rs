@@ -1,0 +1,608 @@
+//! Epoch-delta migration: plan data movement from placement diffs,
+//! execute it off the admin path (DESIGN.md §9).
+//!
+//! The paper's structural guarantees — minimal disruption (Prop. VI.3)
+//! and monotonicity (Prop. VI.5) — make the set of keys that move on a
+//! membership change *derivable* from the (old, new) placement pair, so
+//! an admin command never needs to touch data:
+//!
+//! ```text
+//!  KILL/ADD ──► Router::*_planned ──► ChangeSeed ──► MigrationPlan ──┐
+//!  (publish new epoch, O(1) in stored keys, return immediately)     │
+//!                                                                   ▼
+//!            Migrator worker ── per-source, per-shard batches ── storage
+//!            (route_batch planning → extract_shard_if → put_if_absent)
+//! ```
+//!
+//! * The **planner** is [`crate::algorithms::ConsistentHasher::delta_sources`]:
+//!   for Memento, a removal's only source is the removed bucket and a
+//!   restore's sources are the working buckets along the restored
+//!   bucket's replacement chain ([`crate::algorithms::Memento::restore_sources`]);
+//!   other algorithms fall back to a full scan of old working buckets.
+//! * The **executor** walks each source node shard by shard in bounded
+//!   batches ([`MigrationConfig::batch_keys`]), plans targets with one
+//!   batched `route_batch` dispatch per chunk, installs copies at the
+//!   destinations with `put_if_absent` (an in-flight copy never clobbers
+//!   a fresher concurrent client write) and only then removes the source
+//!   copies with the per-shard
+//!   [`super::storage::StorageNode::extract_shard_if`] — a mover is
+//!   never absent from every store mid-move. Up to
+//!   [`MigrationConfig::max_inflight`] source nodes migrate in parallel.
+//! * Reads during migration **fail over to the plan's old placement**:
+//!   [`Migrator::stale_locations`] tells the service where a key lived
+//!   before the change, so a GET that misses at the new primary finds
+//!   the not-yet-moved copy (`coordinator::service` wires this in).
+//!
+//! Progress is observable through the `MSTAT` protocol command and the
+//! `keys_planned` / `keys_moved` / `batches_inflight` / `migration_ns`
+//! counters on [`crate::metrics::RouterMetrics`].
+
+use super::membership::{Membership, NodeId};
+use super::router::{ChangeSeed, Placement, Router};
+use super::storage::{StorageCluster, StorageNode};
+use crate::sync::lock_recover;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+/// Executor tuning knobs.
+#[derive(Debug, Clone)]
+pub struct MigrationConfig {
+    /// Keys per planning/extraction batch (one `route_batch` dispatch and
+    /// one bounded shard-lock critical section each).
+    pub batch_keys: usize,
+    /// Source nodes migrated concurrently within one plan.
+    pub max_inflight: usize,
+    /// Execute plans on the background worker as they arrive. `false`
+    /// parks plans until [`Migrator::run_pending`] — deterministic mode
+    /// for tests and the plan-vs-execute split in `bench_migration`.
+    pub auto: bool,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        Self { batch_keys: 512, max_inflight: 2, auto: true }
+    }
+}
+
+/// What kind of movement a plan performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    /// A bucket was removed: drain the dead node to the survivors.
+    Drain,
+    /// A bucket was added/restored: pull its keys from the donor nodes.
+    Pull,
+}
+
+/// One enqueued unit of data movement, derived from a [`ChangeSeed`].
+pub struct MigrationPlan {
+    /// Epoch of the snapshot this plan migrates *toward*.
+    pub epoch: u64,
+    /// Drain (removal) or pull (restore/growth).
+    pub kind: PlanKind,
+    /// The changed bucket.
+    pub bucket: u32,
+    /// The node that failed (Drain) or was added/restored (Pull).
+    pub node: NodeId,
+    /// Source (old bucket, node) pairs the executor will scan — the
+    /// planner's delta, bound to nodes via the old membership.
+    pub sources: Vec<(u32, NodeId)>,
+    /// Whether the delta fell back to scanning every old working bucket.
+    pub full_scan: bool,
+    old_placement: Placement,
+    old_membership: Membership,
+}
+
+impl MigrationPlan {
+    /// Build a plan from a planned membership change. `kind` is `Drain`
+    /// when `seed.changed_bucket` was removed, `Pull` when it was added.
+    pub fn from_seed(kind: PlanKind, node: NodeId, seed: ChangeSeed) -> Self {
+        let sources = seed
+            .delta
+            .sources
+            .iter()
+            .filter_map(|&b| seed.old_membership.node_at(b).map(|n| (b, n)))
+            .collect();
+        Self {
+            epoch: seed.epoch,
+            kind,
+            bucket: seed.changed_bucket,
+            node,
+            sources,
+            full_scan: seed.delta.full_scan,
+            old_placement: seed.old_placement,
+            old_membership: seed.old_membership,
+        }
+    }
+
+    /// Where `key` lived under this plan's pre-change placement.
+    fn stale_location(&self, key: u64) -> Option<NodeId> {
+        self.old_membership.node_at(self.old_placement.algo().lookup(key))
+    }
+}
+
+/// Point-in-time migration queue state (the `MSTAT` payload's skeleton).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigrationStatus {
+    /// Plans waiting to start.
+    pub pending: usize,
+    /// Plans currently executing.
+    pub active: usize,
+    /// `pending == 0 && active == 0`.
+    pub idle: bool,
+}
+
+struct Queue {
+    pending: VecDeque<Arc<MigrationPlan>>,
+    active: Vec<Arc<MigrationPlan>>,
+}
+
+/// The migration subsystem: a plan queue plus the background executor.
+pub struct Migrator {
+    router: Arc<Router>,
+    storage: Arc<StorageCluster>,
+    cfg: MigrationConfig,
+    q: Mutex<Queue>,
+    wake: Condvar,
+    idle: Condvar,
+    /// Admin changes currently between "epoch published" and "plan
+    /// enqueued" (see [`Migrator::begin_change`]).
+    inflight: AtomicU64,
+    /// Plans enqueued and not yet finished (lock-free mirror of the
+    /// queue's size for [`Migrator::maybe_active`]).
+    queued: AtomicU64,
+}
+
+/// RAII marker for one admin membership change: taken *before* the router
+/// publishes the new epoch, released (dropped) once the matching plan is
+/// enqueued. The read path's [`Migrator::maybe_active`] hint therefore
+/// covers the publish→enqueue gap — a GET that routes under the new epoch
+/// before the plan is visible keeps retrying instead of misreporting a
+/// displaced key as missing.
+pub struct ChangeTicket<'a> {
+    m: &'a Migrator,
+}
+
+impl Drop for ChangeTicket<'_> {
+    fn drop(&mut self) {
+        self.m.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Migrator {
+    /// Build a migrator over the given router/storage pair and, in auto
+    /// mode, start its background worker. The worker holds only a weak
+    /// reference: dropping the last `Arc<Migrator>` retires the thread.
+    pub fn spawn(
+        router: Arc<Router>,
+        storage: Arc<StorageCluster>,
+        cfg: MigrationConfig,
+    ) -> Arc<Self> {
+        let auto = cfg.auto;
+        let m = Arc::new(Self {
+            router,
+            storage,
+            cfg,
+            q: Mutex::new(Queue { pending: VecDeque::new(), active: Vec::new() }),
+            wake: Condvar::new(),
+            idle: Condvar::new(),
+            inflight: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+        });
+        if auto {
+            let weak = Arc::downgrade(&m);
+            std::thread::Builder::new()
+                .name("memento-migrator".into())
+                .spawn(move || Self::worker(weak))
+                .expect("spawn migration worker");
+        }
+        m
+    }
+
+    /// Mark an admin membership change as in flight. Call *before* the
+    /// router mutation that publishes the new epoch and keep the ticket
+    /// alive until the plan is enqueued: the inc is sequenced before the
+    /// epoch's release-publish, so any reader that routes under the new
+    /// epoch also observes [`Migrator::maybe_active`] as true.
+    pub fn begin_change(&self) -> ChangeTicket<'_> {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        ChangeTicket { m: self }
+    }
+
+    /// Cheap hint (two relaxed loads, no lock) for the read path: `false`
+    /// means no admin change and no plan is anywhere in flight, so a miss
+    /// is a genuine miss and the failover probe can be skipped entirely.
+    pub fn maybe_active(&self) -> bool {
+        self.inflight.load(Ordering::Relaxed) > 0 || self.queued.load(Ordering::Relaxed) > 0
+    }
+
+    /// Enqueue a plan; returns its number of source nodes. O(1) beyond
+    /// the plan itself — no key is touched here.
+    pub fn enqueue(&self, plan: MigrationPlan) -> usize {
+        let sources = plan.sources.len();
+        self.router.metrics.plans_enqueued.inc();
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        let mut q = lock_recover(&self.q);
+        q.pending.push_back(Arc::new(plan));
+        drop(q);
+        self.wake.notify_all();
+        sources
+    }
+
+    /// Current queue state.
+    pub fn status(&self) -> MigrationStatus {
+        let q = lock_recover(&self.q);
+        MigrationStatus {
+            pending: q.pending.len(),
+            active: q.active.len(),
+            idle: q.pending.is_empty() && q.active.is_empty(),
+        }
+    }
+
+    /// Block until every enqueued plan has executed, up to `timeout`;
+    /// returns whether the queue drained. (In manual mode nothing drains
+    /// the queue except [`Migrator::run_pending`].)
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut q = lock_recover(&self.q);
+        while !(q.pending.is_empty() && q.active.is_empty()) {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) =
+                self.idle.wait_timeout(q, deadline - now).unwrap_or_else(|e| e.into_inner());
+            q = guard;
+        }
+        true
+    }
+
+    /// Execute every queued plan on the calling thread; returns records
+    /// moved. The synchronous twin of the background worker (manual mode,
+    /// benches, tests).
+    pub fn run_pending(&self) -> u64 {
+        let mut moved = 0u64;
+        while let Some(plan) = self.pop_plan() {
+            moved += self.execute(&plan);
+            self.finish_plan(&plan);
+        }
+        moved
+    }
+
+    /// Nodes that held `key` under the pre-change placement of any plan
+    /// still in flight — the read path's failover candidates during
+    /// migration. Deduplicated, oldest plan first.
+    pub fn stale_locations(&self, key: u64) -> Vec<NodeId> {
+        let q = lock_recover(&self.q);
+        let mut out: Vec<NodeId> = Vec::new();
+        for plan in q.active.iter().chain(q.pending.iter()) {
+            if let Some(n) = plan.stale_location(key) {
+                if !out.contains(&n) {
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+
+    fn pop_plan(&self) -> Option<Arc<MigrationPlan>> {
+        let mut q = lock_recover(&self.q);
+        let plan = q.pending.pop_front()?;
+        q.active.push(plan.clone());
+        Some(plan)
+    }
+
+    fn finish_plan(&self, plan: &Arc<MigrationPlan>) {
+        let mut q = lock_recover(&self.q);
+        q.active.retain(|p| !Arc::ptr_eq(p, plan));
+        self.queued.fetch_sub(1, Ordering::Relaxed);
+        self.router.metrics.plans_done.inc();
+        if q.pending.is_empty() && q.active.is_empty() {
+            drop(q);
+            self.idle.notify_all();
+        }
+    }
+
+    /// Background loop: upgrade → drain → park. The 50 ms park bound is
+    /// how a dropped service reclaims the thread without a shutdown
+    /// handshake.
+    fn worker(weak: Weak<Migrator>) {
+        loop {
+            let Some(m) = weak.upgrade() else { return };
+            match m.pop_plan() {
+                Some(plan) => {
+                    m.execute(&plan);
+                    m.finish_plan(&plan);
+                }
+                None => {
+                    let q = lock_recover(&m.q);
+                    let parked = m.wake.wait_timeout(q, Duration::from_millis(50));
+                    drop(parked.unwrap_or_else(|e| e.into_inner()));
+                }
+            }
+        }
+    }
+
+    /// Execute one plan: scan its source nodes (up to `max_inflight` in
+    /// parallel), batch by batch. Returns records moved.
+    fn execute(&self, plan: &MigrationPlan) -> u64 {
+        let t0 = Instant::now();
+        let work: Mutex<Vec<(u32, NodeId)>> = Mutex::new(plan.sources.clone());
+        let moved = AtomicU64::new(0);
+        let workers = plan.sources.len().min(self.cfg.max_inflight).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let src = lock_recover(&work).pop();
+                    let Some((b_src, n_src)) = src else { break };
+                    moved.fetch_add(self.execute_source(plan, b_src, n_src), Ordering::Relaxed);
+                });
+            }
+        });
+        self.router.metrics.migration_ns.add(crate::metrics::duration_to_ns(t0.elapsed()));
+        moved.load(Ordering::Relaxed)
+    }
+
+    fn execute_source(&self, plan: &MigrationPlan, b_src: u32, n_src: NodeId) -> u64 {
+        let src = self.storage.node(n_src);
+        // The dead node of a drain donates *everything* (its replica
+        // copies die with it); surviving donors give up only keys whose
+        // old primary was this source bucket — replica copies and
+        // unmoved keys stay where they are.
+        let drain_all = plan.kind == PlanKind::Drain && b_src == plan.bucket;
+        let mut moved = 0u64;
+        for shard in 0..StorageNode::SHARDS {
+            let keys = src.shard_keys(shard);
+            for chunk in keys.chunks(self.cfg.batch_keys.max(1)) {
+                moved += self.apply_chunk(plan, &src, b_src, n_src, shard, chunk, drain_all);
+            }
+        }
+        moved
+    }
+
+    /// Plan and apply one bounded batch: old-side filter → one batched
+    /// current-epoch route → extract movers under the shard lock →
+    /// relocate. Never blocks the admin path; holds no router pin across
+    /// the storage work.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_chunk(
+        &self,
+        plan: &MigrationPlan,
+        src: &StorageNode,
+        b_src: u32,
+        n_src: NodeId,
+        shard: usize,
+        chunk: &[u64],
+        drain_all: bool,
+    ) -> u64 {
+        let metrics = &self.router.metrics;
+        let candidates: Vec<u64> = if drain_all {
+            chunk.to_vec()
+        } else {
+            let algo = plan.old_placement.algo();
+            chunk.iter().copied().filter(|&k| algo.lookup(k) == b_src).collect()
+        };
+        if candidates.is_empty() {
+            return 0;
+        }
+        metrics.batches_inflight.inc();
+        // Current-epoch targets in one batched dispatch. Bucket → node
+        // resolution is re-pinned, so an epoch published between the two
+        // loads can leave a bucket unbound: re-route (the fresh route
+        // cannot return an unbound bucket). Converges in one retry per
+        // concurrent membership change; a sustained storm falls back to
+        // per-key resolution under one pinned snapshot, which cannot see
+        // an unbound bucket — a chunk is never abandoned.
+        let mut targets: HashMap<u64, NodeId> = HashMap::new();
+        let mut tries = 0u32;
+        loop {
+            let buckets = self.router.route_batch(&candidates);
+            let (_epoch, nodes) = self.router.try_nodes_for(&buckets);
+            if nodes.iter().all(|n| n.is_some()) {
+                for (&k, n) in candidates.iter().zip(nodes) {
+                    let n = n.expect("checked above");
+                    if n != n_src {
+                        targets.insert(k, n);
+                    }
+                }
+                break;
+            }
+            tries += 1;
+            if tries > 4 {
+                self.router.with_view(|a, m| {
+                    for &k in &candidates {
+                        let n = m.node_at(a.lookup(k)).expect("working bucket bound");
+                        if n != n_src {
+                            targets.insert(k, n);
+                        }
+                    }
+                });
+                break;
+            }
+            std::thread::yield_now();
+        }
+        if targets.is_empty() {
+            metrics.batches_inflight.dec();
+            return 0;
+        }
+        metrics.keys_planned.add(targets.len() as u64);
+        // Install copies at their destinations first, then drop the
+        // source copies in one bounded per-shard critical section: a
+        // mover is never absent from every store mid-move, so concurrent
+        // reads need no lock against the executor. `put_if_absent`: a
+        // concurrent client PUT at the destination is fresher than this
+        // in-flight copy and must win.
+        for (&k, &dst) in &targets {
+            if let Some(v) = src.get(k) {
+                self.storage.node(dst).put_if_absent(k, v);
+            }
+        }
+        let removed = src.extract_shard_if(shard, targets.len(), |k| targets.contains_key(&k));
+        let moved = removed.len() as u64;
+        metrics.keys_moved.add(moved);
+        metrics.batches_inflight.dec();
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn setup(nodes: usize) -> (Arc<Router>, Arc<StorageCluster>, Arc<Migrator>) {
+        let router = Router::new("memento", nodes, nodes * 10, None).unwrap();
+        let storage = Arc::new(StorageCluster::new());
+        let migrator = Migrator::spawn(
+            router.clone(),
+            storage.clone(),
+            MigrationConfig { auto: false, ..MigrationConfig::default() },
+        );
+        (router, storage, migrator)
+    }
+
+    fn load(router: &Router, storage: &StorageCluster, n: u64) {
+        for i in 0..n {
+            let key = crate::hashing::mix::splitmix64_mix(i);
+            let (_b, node) = router.route(key);
+            storage.node(node).put(key, key.to_le_bytes().to_vec());
+        }
+    }
+
+    #[test]
+    fn drain_plan_moves_exactly_the_dead_nodes_records() {
+        let (router, storage, migrator) = setup(8);
+        load(&router, &storage, 4_000);
+        let victim_bucket = 3u32;
+        let victim_node = router.with_view(|_a, m| m.node_at(victim_bucket)).unwrap();
+        let victim_keys: HashSet<u64> = storage.node(victim_node).keys().into_iter().collect();
+        let before_total = storage.total_records();
+
+        let (node, seed) = router.fail_bucket_planned(victim_bucket).unwrap();
+        assert_eq!(node, victim_node);
+        assert_eq!(seed.delta.sources, vec![victim_bucket]);
+        let plan = MigrationPlan::from_seed(PlanKind::Drain, node, seed);
+        assert_eq!(plan.sources, vec![(victim_bucket, victim_node)]);
+        migrator.enqueue(plan);
+
+        // Nothing moved yet: the admin path only enqueued.
+        assert_eq!(storage.node(victim_node).len(), victim_keys.len());
+        let moved = migrator.run_pending();
+        assert_eq!(moved as usize, victim_keys.len(), "exactly the dead node's records move");
+        assert!(storage.node(victim_node).is_empty());
+        assert_eq!(storage.total_records(), before_total, "no record lost");
+        // Every key now sits at its current primary.
+        for i in 0..4_000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(i);
+            let (_b, n) = router.route(key);
+            assert!(storage.node(n).get(key).is_some(), "key {i} missing at primary");
+        }
+        assert_eq!(router.metrics.keys_moved.get() as usize, victim_keys.len());
+        assert_eq!(router.metrics.plans_done.get(), 1);
+        assert_eq!(router.metrics.batches_inflight.get(), 0);
+    }
+
+    #[test]
+    fn pull_plan_scans_only_chain_sources_and_restores_placement() {
+        let (router, storage, migrator) = setup(10);
+        load(&router, &storage, 5_000);
+        // Kill and fully drain bucket 4 first.
+        let (node, seed) = router.fail_bucket_planned(4).unwrap();
+        migrator.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+        migrator.run_pending();
+
+        // Restore: the plan's sources are the chain donors, a strict
+        // subset relation to the working set is covered by the memento
+        // unit tests; here we check the executor touches only them.
+        let loads_before: std::collections::HashMap<NodeId, usize> =
+            storage.load_by_node().into_iter().collect();
+        let ((b, restored), seed) = router.add_node_planned().unwrap();
+        assert_eq!(b, 4);
+        assert!(!seed.delta.full_scan);
+        let plan = MigrationPlan::from_seed(PlanKind::Pull, restored, seed);
+        let donor_nodes: HashSet<NodeId> = plan.sources.iter().map(|(_b, n)| *n).collect();
+        migrator.enqueue(plan);
+        migrator.run_pending();
+
+        // Non-donor nodes kept every record.
+        for (node, before) in loads_before {
+            if !donor_nodes.contains(&node) && node != restored {
+                assert_eq!(
+                    storage.node(node).len(),
+                    before,
+                    "non-donor {node} must not be touched"
+                );
+            }
+        }
+        // Every key is at its current primary; the restored node holds
+        // what routes to it.
+        for i in 0..5_000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(i);
+            let (_b, n) = router.route(key);
+            assert!(storage.node(n).get(key).is_some(), "key {i} missing after restore");
+        }
+        assert!(!storage.node(restored).is_empty(), "restored node must receive keys");
+    }
+
+    #[test]
+    fn stale_locations_point_reads_at_unmoved_data() {
+        let (router, storage, migrator) = setup(8);
+        load(&router, &storage, 2_000);
+        let victim_node = router.with_view(|_a, m| m.node_at(2)).unwrap();
+        let victim_keys = storage.node(victim_node).keys();
+        let (node, seed) = router.fail_bucket_planned(2).unwrap();
+        migrator.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+        // Before execution, every displaced key's stale location is the
+        // dead node — where the data still is.
+        for &k in victim_keys.iter().take(50) {
+            assert_eq!(migrator.stale_locations(k), vec![victim_node]);
+            assert!(storage.node(victim_node).get(k).is_some());
+        }
+        migrator.run_pending();
+        assert!(migrator.status().idle);
+        assert!(migrator.stale_locations(victim_keys[0]).is_empty(), "no active plan left");
+    }
+
+    #[test]
+    fn auto_worker_drains_in_the_background() {
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let storage = Arc::new(StorageCluster::new());
+        let migrator =
+            Migrator::spawn(router.clone(), storage.clone(), MigrationConfig::default());
+        load(&router, &storage, 1_000);
+        let (node, seed) = router.fail_bucket_planned(1).unwrap();
+        migrator.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+        assert!(migrator.wait_idle(Duration::from_secs(10)), "background drain timed out");
+        assert!(storage.node(node).is_empty());
+        assert_eq!(router.metrics.plans_done.get(), 1);
+    }
+
+    #[test]
+    fn maybe_active_tracks_changes_and_plans() {
+        let (router, _storage, migrator) = setup(6);
+        assert!(!migrator.maybe_active());
+        let ticket = migrator.begin_change();
+        assert!(migrator.maybe_active(), "admin change in flight");
+        let (node, seed) = router.fail_bucket_planned(0).unwrap();
+        migrator.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+        drop(ticket);
+        assert!(migrator.maybe_active(), "plan queued");
+        migrator.run_pending();
+        assert!(!migrator.maybe_active(), "idle again");
+    }
+
+    #[test]
+    fn status_and_wait_idle_reflect_the_queue() {
+        let (router, _storage, migrator) = setup(6);
+        assert!(migrator.status().idle);
+        assert!(migrator.wait_idle(Duration::from_millis(1)), "empty queue is idle");
+        let (node, seed) = router.fail_bucket_planned(0).unwrap();
+        migrator.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+        let st = migrator.status();
+        assert_eq!((st.pending, st.active, st.idle), (1, 0, false));
+        assert!(!migrator.wait_idle(Duration::from_millis(10)), "manual mode never drains");
+        migrator.run_pending();
+        assert!(migrator.status().idle);
+    }
+}

@@ -28,6 +28,10 @@
 //!   feeding the engine; the paper's batched-lookup throughput path.
 //! * [`rebalancer`] — audits key movement across epochs against the
 //!   paper's minimal-disruption / monotonicity guarantees.
+//! * [`migration`] — the epoch-delta data-movement pipeline: membership
+//!   changes publish a snapshot and enqueue a plan derived from the
+//!   (old, new) placement diff; a background executor moves keys in
+//!   bounded batches while reads fail over to the pre-change placement.
 //! * [`storage`] — in-process simulated KV nodes (the cluster substrate:
 //!   data actually moves when membership changes); records are
 //!   lock-sharded by key hash so concurrent traffic contends per shard.
@@ -36,6 +40,7 @@
 
 pub mod batcher;
 pub mod membership;
+pub mod migration;
 pub mod rebalancer;
 pub mod replica;
 pub mod router;

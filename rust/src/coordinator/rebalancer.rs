@@ -18,13 +18,14 @@ pub struct Rebalancer {
 }
 
 struct State {
-    last_epoch: u64,
     last_assignment: Vec<u32>,
     /// Total keys relocated across all observed epochs.
     pub relocated: u64,
     /// Total collateral movements (bound violations).
     pub violations: u64,
     epochs_observed: u64,
+    /// Relocated fraction of the tracer set over the last observed epoch.
+    last_relocated_frac: f64,
 }
 
 /// Summary of the audit so far.
@@ -50,11 +51,11 @@ impl Rebalancer {
         Self {
             tracer_keys,
             state: Mutex::new(State {
-                last_epoch: router.epoch(),
                 last_assignment,
                 relocated: 0,
                 violations: 0,
                 epochs_observed: 0,
+                last_relocated_frac: 0.0,
             }),
         }
     }
@@ -68,14 +69,14 @@ impl Rebalancer {
         st.relocated += rep.relocated as u64;
         st.violations += rep.collateral as u64;
         st.epochs_observed += 1;
-        st.last_epoch = router.epoch();
         st.last_assignment = now;
+        st.last_relocated_frac = rep.relocated as f64 / self.tracer_keys.len().max(1) as f64;
         router.metrics.relocated_keys.add(rep.relocated as u64);
         RebalanceSummary {
             epochs_observed: st.epochs_observed,
             relocated: st.relocated,
             violations: st.violations,
-            last_relocated_frac: rep.relocated as f64 / self.tracer_keys.len().max(1) as f64,
+            last_relocated_frac: st.last_relocated_frac,
         }
     }
 
@@ -86,7 +87,7 @@ impl Rebalancer {
             epochs_observed: st.epochs_observed,
             relocated: st.relocated,
             violations: st.violations,
-            last_relocated_frac: 0.0,
+            last_relocated_frac: st.last_relocated_frac,
         }
     }
 }
@@ -137,5 +138,20 @@ mod tests {
         assert_eq!(s.epochs_observed, 3);
         assert!(s.relocated > 0);
         assert!(router.metrics.relocated_keys.get() > 0);
+    }
+
+    #[test]
+    fn summary_reports_the_real_last_relocated_frac() {
+        let router = Router::new("memento", 10, 100, None).unwrap();
+        let reb = Rebalancer::new(&router, 20_000, 0xDDD);
+        assert_eq!(reb.summary().last_relocated_frac, 0.0, "nothing observed yet");
+        router.fail_bucket(6).unwrap();
+        let observed = reb.observe_epoch(&router, &[6]);
+        let summarized = reb.summary();
+        assert!(observed.last_relocated_frac > 0.0);
+        assert_eq!(
+            summarized.last_relocated_frac, observed.last_relocated_frac,
+            "summary must report the last epoch's fraction, not a hardcoded zero"
+        );
     }
 }

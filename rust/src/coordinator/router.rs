@@ -11,7 +11,7 @@
 //! they never block readers.
 
 use super::membership::{Membership, NodeId};
-use crate::algorithms::{self, AlgoError, ConsistentHasher, Memento};
+use crate::algorithms::{self, AlgoError, ConsistentHasher, Memento, MoveDelta};
 use crate::error::Result;
 use crate::metrics::RouterMetrics;
 use crate::runtime::engine::EngineSnapshot;
@@ -117,6 +117,28 @@ impl RouterSnapshot {
 /// Build one snapshot; the engine table slot starts empty (lazy).
 fn build_snapshot(placement: Placement, membership: Membership) -> RouterSnapshot {
     RouterSnapshot { placement, membership, engine_snap: OnceLock::new() }
+}
+
+/// Everything a migration planner needs about one membership change,
+/// captured atomically with the change under the router's writer lock:
+/// the pre-change placement and binding, the structural moved-key delta
+/// ([`ConsistentHasher::delta_sources`]), the changed bucket and the epoch
+/// the new snapshot was published at.
+///
+/// Producing this is O(w) (the delta walk) — independent of how many keys
+/// the cluster stores, which is what keeps the admin path O(1) in data
+/// size.
+pub struct ChangeSeed {
+    /// The placement as it was *before* the change.
+    pub old_placement: Placement,
+    /// The bucket ↔ node binding before the change.
+    pub old_membership: Membership,
+    /// Old-side source buckets of every key the change moved.
+    pub delta: MoveDelta,
+    /// The bucket that was removed/restored/added.
+    pub changed_bucket: u32,
+    /// Epoch of the newly published snapshot.
+    pub epoch: u64,
 }
 
 /// The shared router handle.
@@ -236,37 +258,92 @@ impl Router {
             .collect()
     }
 
+    /// Resolve buckets to nodes under one pinned snapshot without
+    /// panicking on unbound buckets, returning the pinned epoch. A
+    /// `None` entry means the bucket is not bound *at that epoch* — the
+    /// caller routed against an older snapshot and should re-route (the
+    /// migration executor's retry path).
+    pub fn try_nodes_for(&self, buckets: &[u32]) -> (u64, Vec<Option<NodeId>>) {
+        let snap = self.published.load();
+        (snap.epoch(), buckets.iter().map(|b| snap.membership.node_at(*b)).collect())
+    }
+
     /// Fail the node on `bucket` (random failure / drain).
     pub fn fail_bucket(&self, bucket: u32) -> std::result::Result<NodeId, AlgoError> {
+        self.fail_bucket_planned(bucket).map(|(node, _seed)| node)
+    }
+
+    /// Like [`Router::fail_bucket`], additionally returning the
+    /// [`ChangeSeed`] a migration planner consumes. The pre-change state
+    /// is captured under the same writer-lock critical section that
+    /// publishes the new snapshot, so the (old, new) pair is exact even
+    /// under concurrent admin traffic.
+    pub fn fail_bucket_planned(
+        &self,
+        bucket: u32,
+    ) -> std::result::Result<(NodeId, ChangeSeed), AlgoError> {
         let _w = crate::sync::lock_recover(&self.writer);
-        let (mut placement, mut membership) = {
+        let (old_placement, old_membership) = {
             let snap = self.published.load();
             (snap.placement.clone(), snap.membership.clone())
         };
+        let mut placement = old_placement.clone();
+        let mut membership = old_membership.clone();
         placement.algo_mut().remove(bucket)?;
         let node = membership.unbind(bucket).expect("membership in sync with algorithm");
+        let delta = old_placement.algo().delta_sources(placement.algo());
+        let epoch = membership.epoch();
         self.published.publish(build_snapshot(placement, membership));
         self.metrics.epochs.inc();
-        Ok(node)
+        let seed = ChangeSeed {
+            old_placement,
+            old_membership,
+            delta,
+            changed_bucket: bucket,
+            epoch,
+        };
+        Ok((node, seed))
     }
 
     /// Fail the node with the given id.
     pub fn fail_node(&self, node: NodeId) -> std::result::Result<NodeId, AlgoError> {
+        self.fail_node_planned(node).map(|(n, _seed)| n)
+    }
+
+    /// Like [`Router::fail_node`], returning the planner seed. A node id
+    /// that is not currently bound surfaces as
+    /// [`AlgoError::UnknownNode`] (it may be genuinely unregistered or
+    /// already down — either way there is nothing to fail).
+    pub fn fail_node_planned(
+        &self,
+        node: NodeId,
+    ) -> std::result::Result<(NodeId, ChangeSeed), AlgoError> {
         let bucket = { self.published.load().membership.bucket_of(node) };
         match bucket {
-            Some(b) => self.fail_bucket(b),
-            None => Err(AlgoError::NotWorking(u32::MAX)),
+            Some(b) => self.fail_bucket_planned(b),
+            None => Err(AlgoError::UnknownNode(node.0)),
         }
     }
 
     /// Add capacity: restores the most recently failed node if any
     /// (Memento Alg. 3 restores its bucket), else registers a new node.
     pub fn add_node(&self) -> std::result::Result<(u32, NodeId), AlgoError> {
+        self.add_node_planned().map(|(bn, _seed)| bn)
+    }
+
+    /// Like [`Router::add_node`], additionally returning the
+    /// [`ChangeSeed`] a migration planner consumes (see
+    /// [`Router::fail_bucket_planned`] for the atomicity argument).
+    pub fn add_node_planned(
+        &self,
+    ) -> std::result::Result<((u32, NodeId), ChangeSeed), AlgoError> {
         let _w = crate::sync::lock_recover(&self.writer);
-        let (mut placement, mut membership) = {
+        let (old_placement, old_membership) = {
             let snap = self.published.load();
             (snap.placement.clone(), snap.membership.clone())
         };
+        let mut placement = old_placement.clone();
+        let mut membership = old_membership.clone();
         let bucket = placement.algo_mut().add()?;
         let down = membership.down_nodes();
         let node = if let Some(&node) = down.last() {
@@ -277,9 +354,14 @@ impl Router {
         } else {
             membership.bind_new(bucket, None)
         };
+        let delta = old_placement.algo().delta_sources(placement.algo());
+        let epoch = membership.epoch();
         self.published.publish(build_snapshot(placement, membership));
         self.metrics.epochs.inc();
-        Ok((bucket, node))
+        Ok((
+            (bucket, node),
+            ChangeSeed { old_placement, old_membership, delta, changed_bucket: bucket, epoch },
+        ))
     }
 
     /// Run `f` with a consistent read view of (algorithm, membership).
@@ -350,7 +432,47 @@ mod tests {
         let r = Router::new("memento", 5, 50, None).unwrap();
         let node = r.with_view(|_a, m| m.node_at(2)).unwrap();
         assert_eq!(r.fail_node(node).unwrap(), node);
-        assert!(r.fail_node(node).is_err(), "already down");
+        assert_eq!(
+            r.fail_node(node),
+            Err(AlgoError::UnknownNode(node.0)),
+            "an unbound node is unknown to the failure path, not bucket u32::MAX"
+        );
+        let e = r.fail_node(NodeId(999)).unwrap_err();
+        assert!(e.to_string().contains("node-999"), "{e}");
+    }
+
+    #[test]
+    fn planned_mutations_capture_the_pre_change_state() {
+        let r = Router::new("memento", 10, 100, None).unwrap();
+        let (node, seed) = r.fail_bucket_planned(4).unwrap();
+        assert_eq!(seed.changed_bucket, 4);
+        assert_eq!(seed.epoch, 1);
+        assert_eq!(seed.old_membership.node_at(4), Some(node), "old binding retained");
+        assert!(seed.old_placement.algo().is_working(4), "old placement predates the kill");
+        assert_eq!(seed.delta.sources, vec![4], "memento removal: one source bucket");
+        assert!(!seed.delta.full_scan);
+
+        let ((b, restored), seed) = r.add_node_planned().unwrap();
+        assert_eq!((b, restored), (4, node));
+        assert_eq!(seed.epoch, 2);
+        assert!(!seed.old_placement.algo().is_working(4));
+        assert!(!seed.delta.full_scan, "restore uses the chain, not a full scan");
+        for &s in &seed.delta.sources {
+            assert!(seed.old_placement.algo().is_working(s), "sources are old-working");
+        }
+    }
+
+    #[test]
+    fn try_nodes_for_reports_unbound_buckets() {
+        let r = Router::new("memento", 6, 60, None).unwrap();
+        let (epoch, nodes) = r.try_nodes_for(&[0, 5]);
+        assert_eq!(epoch, 0);
+        assert!(nodes.iter().all(|n| n.is_some()));
+        r.fail_bucket(5).unwrap();
+        let (epoch, nodes) = r.try_nodes_for(&[0, 5]);
+        assert_eq!(epoch, 1);
+        assert!(nodes[0].is_some());
+        assert_eq!(nodes[1], None, "killed bucket is unbound at the new epoch");
     }
 
     #[test]

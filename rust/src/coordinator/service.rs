@@ -7,19 +7,34 @@
 //!                                    dispatch for the whole line)
 //! PUT <key> <value>               → OK <node>
 //! GET <key>                       → VALUE <node> <value> | MISSING <node>
-//! KILL <bucket>                   → KILLED <node> MOVED <n-records>
+//! KILL <bucket>                   → KILLED <node> EPOCH <e> SOURCES <n>
+//! KILLN <node-id|node-name>       → KILLED <node> EPOCH <e> SOURCES <n>
 //! ADD                             → ADDED BUCKET <b> NODE <name>
+//!                                    EPOCH <e> SOURCES <n>
+//! MSTAT                           → MSTAT epoch=… pending=… active=…
+//!                                    idle=… keys_planned=… keys_moved=…
+//!                                    batches_inflight=… migration_ms=…
 //! STATS                           → STATS <metrics one-liner, with
 //!                                    latency p50/p99/p999 percentiles>
 //! EPOCH                           → EPOCH <e> WORKING <w>
 //! ```
 //!
+//! `KILL`/`KILLN`/`ADD` are **O(1) in stored keys**: they publish the new
+//! epoch, enqueue a migration plan derived from the placement diff
+//! ([`super::migration`]) and return — data moves on the migrator's
+//! background executor, observable via `MSTAT`. Reads issued while a plan
+//! is in flight fail over to the plan's pre-change placement, so a key
+//! whose new primary hasn't received it yet is still served from where it
+//! physically is.
+//!
 //! String keys are digested with xxHash64 at the edge (the paper's
 //! benchmark tool does the same); numeric keys are taken verbatim, so
 //! tests can exercise exact placements.
 
+use super::membership::NodeId;
+use super::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
 use super::rebalancer::Rebalancer;
-use super::router::Router;
+use super::router::{ChangeSeed, Router};
 use super::storage::StorageCluster;
 use crate::metrics::Histogram;
 use crate::netserver::{self, ServerHandle};
@@ -40,6 +55,9 @@ pub struct Service {
     pub storage: Arc<StorageCluster>,
     /// Live disruption/monotonicity auditor.
     pub rebalancer: Arc<Rebalancer>,
+    /// The epoch-delta migration pipeline (admin commands enqueue plans
+    /// here; the executor moves data off the admin path).
+    pub migration: Arc<Migrator>,
     /// Replication factor: PUT fans out to `replicas` distinct buckets,
     /// GET fails over along the replica set (reads survive failures even
     /// before migration completes).
@@ -57,11 +75,24 @@ impl Service {
 
     /// Service with PUT fan-out to `replicas` distinct buckets.
     pub fn with_replicas(router: Arc<Router>, replicas: usize) -> Arc<Self> {
+        Self::with_migration(router, replicas, MigrationConfig::default())
+    }
+
+    /// Service with an explicit migration configuration (manual-execution
+    /// mode is how tests and `bench_migration` split plan from execute).
+    pub fn with_migration(
+        router: Arc<Router>,
+        replicas: usize,
+        migration: MigrationConfig,
+    ) -> Arc<Self> {
         let rebalancer = Arc::new(Rebalancer::new(&router, 4_096, 0x7EACE));
+        let storage = Arc::new(StorageCluster::new());
+        let migration = Migrator::spawn(router.clone(), storage.clone(), migration);
         Arc::new(Self {
             router,
-            storage: Arc::new(StorageCluster::new()),
+            storage,
             rebalancer,
+            migration,
             replicas: replicas.max(1),
             latency: (0..LATENCY_SHARDS).map(|_| Mutex::new(Histogram::new())).collect(),
         })
@@ -109,6 +140,64 @@ impl Service {
         })
     }
 
+    /// Failover read for keys displaced by an in-flight migration: probe
+    /// the current primary again plus the pre-change locations of every
+    /// in-flight plan. The steady-state miss (no migration anywhere)
+    /// pays two relaxed loads and returns immediately; while a change is
+    /// in flight, the bounded retry also covers the admin thread's
+    /// publish→enqueue gap
+    /// (see [`super::migration::Migrator::begin_change`]).
+    fn migration_read(&self, key: u64) -> Option<(NodeId, Vec<u8>)> {
+        if !self.migration.maybe_active() {
+            return None;
+        }
+        for attempt in 0..8 {
+            // Probe order matters: stale locations first, then the
+            // current primary. The executor installs a mover at its
+            // destination *before* removing the source copy, so a key
+            // absent from every stale location at probe time has already
+            // been installed at a current-epoch primary — which is
+            // probed afterwards. The reverse order can sandwich the
+            // executor's install+remove between the two probes and
+            // misreport a present key as missing.
+            let stale = self.migration.stale_locations(key);
+            for node in &stale {
+                if let Some(v) = self.storage.node(*node).get(key) {
+                    return Some((*node, v));
+                }
+            }
+            let (_b, node) = self.router.route(key);
+            if let Some(v) = self.storage.node(node).get(key) {
+                return Some((node, v));
+            }
+            // A genuine miss and an in-flight race (epoch churn between
+            // the probes, or the admin thread's publish→enqueue gap)
+            // look identical for one iteration: retry briefly while
+            // anything is in flight, then report the miss.
+            if !self.migration.maybe_active() {
+                return None;
+            }
+            if attempt < 2 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+        None
+    }
+
+    /// The shared tail of every admin membership change: enqueue the
+    /// migration plan built from the planner seed, audit the epoch, and
+    /// report. O(1) in stored keys — no record is read or moved here.
+    fn enqueue_change(&self, kind: PlanKind, node: NodeId, seed: ChangeSeed) -> (u64, usize) {
+        let bucket = seed.changed_bucket;
+        let epoch = seed.epoch;
+        let plan = MigrationPlan::from_seed(kind, node, seed);
+        let sources = self.migration.enqueue(plan);
+        self.rebalancer.observe_epoch(&self.router, &[bucket]);
+        (epoch, sources)
+    }
+
     /// Digest a key token: decimal u64 passes through, anything else is
     /// hashed.
     pub fn digest_key(token: &str) -> u64 {
@@ -118,10 +207,10 @@ impl Service {
     }
 
     /// Handle one protocol line, recording service latency for data-path
-    /// requests (`LOOKUP`/`GET`/`PUT`). Admin commands (`KILL`/`ADD`
-    /// migrate data and run for milliseconds; `STATS`/`EPOCH` are
-    /// introspection) stay out of the histogram so the reported tail
-    /// reflects serving behavior, not churn injection.
+    /// requests (`LOOKUP`/`GET`/`PUT`). Admin and introspection commands
+    /// (`KILL`/`KILLN`/`ADD` publish-and-enqueue; `MSTAT`/`STATS`/`EPOCH`
+    /// report) stay out of the histogram so the reported tail reflects
+    /// serving behavior, not churn injection.
     pub fn handle(&self, line: &str) -> String {
         let data_path =
             matches!(line.split_whitespace().next(), Some("LOOKUP" | "LOOKUPB" | "GET" | "PUT"));
@@ -173,10 +262,14 @@ impl Service {
                 let Some(tok) = parts.next() else { return "ERR GET needs a key".into() };
                 let key = Self::digest_key(tok);
                 if self.replicas == 1 {
-                    // Single-copy fast path: primary only.
+                    // Single-copy fast path: primary, then (only if a
+                    // migration is in flight) the pre-change placement.
                     let (_b, node) = self.router.route(key);
-                    return match self.storage.node(node).get(key) {
-                        Some(v) => format!("VALUE {node} {}", String::from_utf8_lossy(&v)),
+                    if let Some(v) = self.storage.node(node).get(key) {
+                        return format!("VALUE {node} {}", String::from_utf8_lossy(&v));
+                    }
+                    return match self.migration_read(key) {
+                        Some((n, v)) => format!("VALUE {n} {}", String::from_utf8_lossy(&v)),
                         None => format!("MISSING {node}"),
                     };
                 }
@@ -187,51 +280,67 @@ impl Service {
                         return format!("VALUE {node} {}", String::from_utf8_lossy(&v));
                     }
                 }
-                format!("MISSING {}", candidates[0])
+                match self.migration_read(key) {
+                    Some((n, v)) => format!("VALUE {n} {}", String::from_utf8_lossy(&v)),
+                    None => format!("MISSING {}", candidates[0]),
+                }
             }
             Some("KILL") => {
                 let Some(tok) = parts.next() else { return "ERR KILL needs a bucket".into() };
                 let Ok(bucket) = tok.parse::<u32>() else {
                     return "ERR KILL needs a numeric bucket".into();
                 };
-                match self.router.fail_bucket(bucket) {
-                    Ok(node) => {
-                        // Migrate the failed node's data to the survivors.
-                        let router = self.router.clone();
-                        let moved = self
-                            .storage
-                            .migrate_from(node, |k| router.route(k).1);
-                        self.rebalancer.observe_epoch(&self.router, &[bucket]);
-                        format!("KILLED {node} MOVED {moved}")
+                // Publish the new epoch and enqueue the drain plan; the
+                // executor moves the dead node's data in the background.
+                // The ticket makes the read path retry across the
+                // publish→enqueue gap instead of misreporting a miss.
+                let _change = self.migration.begin_change();
+                match self.router.fail_bucket_planned(bucket) {
+                    Ok((node, seed)) => {
+                        let (epoch, sources) = self.enqueue_change(PlanKind::Drain, node, seed);
+                        format!("KILLED {node} EPOCH {epoch} SOURCES {sources}")
                     }
                     Err(e) => format!("ERR {e}"),
                 }
             }
-            Some("ADD") => match self.router.add_node() {
-                Ok((b, node)) => {
-                    // Monotone migration: pull keys that now belong to the
-                    // new node from every survivor.
-                    let router = self.router.clone();
-                    let mut moved = 0usize;
-                    for (id, _) in self.storage.load_by_node() {
-                        if id == node {
-                            continue;
-                        }
-                        let src = self.storage.node(id);
-                        for k in src.keys() {
-                            if router.route(k).1 == node {
-                                if let Some(v) = src.delete(k) {
-                                    self.storage.node(node).put(k, v);
-                                    moved += 1;
-                                }
-                            }
-                        }
+            Some("KILLN") => {
+                let Some(tok) = parts.next() else { return "ERR KILLN needs a node id".into() };
+                let Ok(id) = tok.trim_start_matches("node-").parse::<u64>() else {
+                    return "ERR KILLN needs a node id like 5 or node-5".into();
+                };
+                let _change = self.migration.begin_change();
+                match self.router.fail_node_planned(NodeId(id)) {
+                    Ok((node, seed)) => {
+                        let (epoch, sources) = self.enqueue_change(PlanKind::Drain, node, seed);
+                        format!("KILLED {node} EPOCH {epoch} SOURCES {sources}")
                     }
-                    self.rebalancer.observe_epoch(&self.router, &[b]);
-                    format!("ADDED BUCKET {b} NODE {node} MOVED {moved}")
+                    Err(e) => format!("ERR {e}"),
                 }
-                Err(e) => format!("ERR {e}"),
-            },
+            }
+            Some("ADD") => {
+                let _change = self.migration.begin_change();
+                match self.router.add_node_planned() {
+                    Ok(((b, node), seed)) => {
+                        // Monotone pull: the plan's sources are the donors
+                        // the delta derived (for Memento, the
+                        // replacement-chain nodes — not a full scan).
+                        let (epoch, sources) = self.enqueue_change(PlanKind::Pull, node, seed);
+                        format!("ADDED BUCKET {b} NODE {node} EPOCH {epoch} SOURCES {sources}")
+                    }
+                    Err(e) => format!("ERR {e}"),
+                }
+            }
+            Some("MSTAT") => {
+                let st = self.migration.status();
+                format!(
+                    "MSTAT epoch={} pending={} active={} idle={} {}",
+                    self.router.epoch(),
+                    st.pending,
+                    st.active,
+                    st.idle,
+                    self.router.metrics.migration_summary()
+                )
+            }
             Some("STATS") => {
                 let reb = self.rebalancer.summary();
                 let lat = {
@@ -318,17 +427,123 @@ mod tests {
         for i in 0..500 {
             s.handle(&format!("PUT key{i} v{i}"));
         }
-        // Find a bucket with data and kill it.
+        // Kill a bucket: the admin reply is immediate, the drain runs in
+        // the background.
         let resp = s.handle("KILL 3");
         assert!(resp.starts_with("KILLED"), "{resp}");
-        // Every record must still be readable (migrated to survivors).
+        assert!(resp.contains("SOURCES 1"), "memento drain has one source: {resp}");
+        // Every record must be readable throughout the drain (migrated
+        // copies at the new primary, unmoved ones via stale failover).
         for i in 0..500 {
             let r = s.handle(&format!("GET key{i}"));
             assert!(r.contains(&format!("v{i}")), "key{i}: {r}");
         }
+        assert!(
+            s.migration.wait_idle(std::time::Duration::from_secs(10)),
+            "background drain timed out"
+        );
+        // After the drain the dead node is empty and reads still work.
+        for i in 0..500 {
+            let r = s.handle(&format!("GET key{i}"));
+            assert!(r.contains(&format!("v{i}")), "post-drain key{i}: {r}");
+        }
         // Rebalance audit: zero violations.
         let stats = s.handle("STATS");
         assert!(stats.contains("violations=0"), "{stats}");
+    }
+
+    #[test]
+    fn admin_commands_do_not_scan_stored_keys() {
+        // Manual-execution migrator: if KILL/ADD touched records inline,
+        // the dead node would drain during the admin call. It must not.
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let manual = MigrationConfig { auto: false, ..MigrationConfig::default() };
+        let s = Service::with_migration(router, 1, manual);
+        for i in 0..5_000 {
+            s.handle(&format!("PUT k{i} v{i}"));
+        }
+        let victim = s.router.with_view(|_a, m| m.node_at(5)).unwrap();
+        let held = s.storage.node(victim).len();
+        assert!(held > 300, "bucket 5 should hold ~1/8 of 5k records, got {held}");
+
+        let t0 = std::time::Instant::now();
+        let resp = s.handle("KILL 5");
+        let kill_elapsed = t0.elapsed();
+        assert!(resp.starts_with("KILLED"), "{resp}");
+        assert_eq!(
+            s.storage.node(victim).len(),
+            held,
+            "KILL must not move or drop a single record inline"
+        );
+        let t0 = std::time::Instant::now();
+        let resp = s.handle("ADD");
+        let add_elapsed = t0.elapsed();
+        assert!(resp.starts_with("ADDED"), "{resp}");
+        assert_eq!(s.storage.node(victim).len(), held, "ADD must not move records inline");
+        // Latency pin: both commands did O(w + tracers) work — generous
+        // absolute bound that a 5k-record scan-and-move would not meet on
+        // a loaded CI runner, while the structural asserts above pin the
+        // mechanism exactly.
+        assert!(kill_elapsed < std::time::Duration::from_millis(250), "{kill_elapsed:?}");
+        assert!(add_elapsed < std::time::Duration::from_millis(250), "{add_elapsed:?}");
+
+        // Reads are correct the whole time; then drain and re-verify.
+        for i in (0..5_000).step_by(13) {
+            let r = s.handle(&format!("GET k{i}"));
+            assert!(r.contains(&format!("v{i}")), "k{i} during pending plans: {r}");
+        }
+        s.migration.run_pending();
+        for i in 0..5_000 {
+            let r = s.handle(&format!("GET k{i}"));
+            assert!(r.contains(&format!("v{i}")), "k{i} after drain: {r}");
+        }
+        let stats = s.handle("STATS");
+        assert!(stats.contains("violations=0"), "{stats}");
+    }
+
+    #[test]
+    fn mstat_reports_migration_progress() {
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let manual = MigrationConfig { auto: false, ..MigrationConfig::default() };
+        let s = Service::with_migration(router, 1, manual);
+        for i in 0..400 {
+            s.handle(&format!("PUT mk{i} mv{i}"));
+        }
+        let r = s.handle("MSTAT");
+        assert!(r.starts_with("MSTAT epoch=0 pending=0 active=0 idle=true"), "{r}");
+        s.handle("KILL 2");
+        let r = s.handle("MSTAT");
+        assert!(r.contains("pending=1"), "{r}");
+        assert!(r.contains("idle=false"), "{r}");
+        s.migration.run_pending();
+        let r = s.handle("MSTAT");
+        assert!(r.contains("idle=true"), "{r}");
+        assert!(r.contains("plans_done=1"), "{r}");
+        let planned = s.router.metrics.keys_planned.get();
+        let moved = s.router.metrics.keys_moved.get();
+        assert!(moved > 0, "{r}");
+        assert_eq!(planned, moved, "executor must move exactly the planned keys: {r}");
+    }
+
+    #[test]
+    fn killn_fails_nodes_by_id_and_rejects_unknown_ones() {
+        let s = service();
+        for i in 0..100 {
+            s.handle(&format!("PUT nk{i} nv{i}"));
+        }
+        let resp = s.handle("KILLN node-3");
+        assert!(resp.starts_with("KILLED node-3"), "{resp}");
+        // Numeric form, already-down node: unknown to the failure path.
+        let resp = s.handle("KILLN 3");
+        assert_eq!(resp, "ERR unknown node node-3");
+        let resp = s.handle("KILLN 999");
+        assert_eq!(resp, "ERR unknown node node-999");
+        assert!(s.handle("KILLN").starts_with("ERR"));
+        assert!(s.handle("KILLN abc").starts_with("ERR"));
+        for i in 0..100 {
+            let r = s.handle(&format!("GET nk{i}"));
+            assert!(r.contains(&format!("nv{i}")), "nk{i}: {r}");
+        }
     }
 
     #[test]

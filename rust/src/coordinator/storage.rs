@@ -101,6 +101,51 @@ impl StorageNode {
     pub fn shard_loads(&self) -> Vec<usize> {
         self.shards.iter().map(|s| lock_recover(s).len()).collect()
     }
+
+    /// Store a record only if the key is absent; returns whether it was
+    /// stored. The migration executor relocates with this instead of
+    /// [`StorageNode::put`]: a concurrent client PUT that already landed
+    /// on the destination is strictly fresher than the copy in flight, so
+    /// the relocated value must never clobber it.
+    pub fn put_if_absent(&self, key: u64, value: Vec<u8>) -> bool {
+        self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut shard = lock_recover(&self.shards[Self::shard_of(key)]);
+        match shard.entry(key) {
+            std::collections::hash_map::Entry::Occupied(_) => false,
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(value);
+                true
+            }
+        }
+    }
+
+    /// Keys of one shard only (bounded snapshot for batched migration
+    /// planning — [`StorageNode::keys`] walks every shard).
+    pub fn shard_keys(&self, shard: usize) -> Vec<u64> {
+        lock_recover(&self.shards[shard]).keys().copied().collect()
+    }
+
+    /// Remove and return up to `limit` records of shard `shard` whose key
+    /// satisfies `pred` (an `extract_if` in spirit; that std API is not
+    /// stable in the offline toolchain). One shard lock is held for the
+    /// scan, so concurrent traffic on the other shards proceeds; callers
+    /// bound `limit` to keep the critical section short.
+    pub fn extract_shard_if(
+        &self,
+        shard: usize,
+        limit: usize,
+        mut pred: impl FnMut(u64) -> bool,
+    ) -> Vec<(u64, Vec<u8>)> {
+        let mut guard = lock_recover(&self.shards[shard]);
+        let picked: Vec<u64> = guard.keys().copied().filter(|&k| pred(k)).take(limit).collect();
+        picked
+            .into_iter()
+            .map(|k| {
+                let v = guard.remove(&k).expect("picked under the same lock");
+                (k, v)
+            })
+            .collect()
+    }
 }
 
 /// The fleet of storage nodes, keyed by stable node id.
@@ -230,6 +275,59 @@ mod tests {
         let drained = n.drain();
         assert_eq!(drained.len(), 512);
         assert!(n.is_empty());
+    }
+
+    #[test]
+    fn put_if_absent_never_clobbers() {
+        let n = StorageNode::default();
+        assert!(n.put_if_absent(1, b"migrated".to_vec()));
+        n.put(2, b"fresh".to_vec());
+        assert!(!n.put_if_absent(2, b"stale".to_vec()));
+        assert_eq!(n.get(2), Some(b"fresh".to_vec()));
+        assert_eq!(n.get(1), Some(b"migrated".to_vec()));
+    }
+
+    #[test]
+    fn extract_shard_if_is_bounded_and_selective() {
+        let n = StorageNode::default();
+        for k in 0..512u64 {
+            n.put(k, vec![k as u8]);
+        }
+        let mut extracted = Vec::new();
+        for s in 0..StorageNode::SHARDS {
+            // Pull even keys only, in batches of 8 per call.
+            loop {
+                let batch = n.extract_shard_if(s, 8, |k| k % 2 == 0);
+                assert!(batch.len() <= 8);
+                if batch.is_empty() {
+                    break;
+                }
+                extracted.extend(batch);
+            }
+        }
+        assert_eq!(extracted.len(), 256);
+        for (k, v) in &extracted {
+            assert_eq!(*k % 2, 0);
+            assert_eq!(v, &vec![*k as u8]);
+        }
+        assert_eq!(n.len(), 256, "odd keys stay put");
+        let mut keys = n.keys();
+        keys.sort_unstable();
+        assert!(keys.iter().all(|k| k % 2 == 1));
+    }
+
+    #[test]
+    fn shard_keys_matches_full_key_walk() {
+        let n = StorageNode::default();
+        for k in 0..200u64 {
+            n.put(k, vec![0]);
+        }
+        let mut union: Vec<u64> =
+            (0..StorageNode::SHARDS).flat_map(|s| n.shard_keys(s)).collect();
+        union.sort_unstable();
+        let mut all = n.keys();
+        all.sort_unstable();
+        assert_eq!(union, all);
     }
 
     #[test]

@@ -13,9 +13,74 @@
 //! The injector is deliberately protocol-only: it discovers killable
 //! buckets by trying ids and reading responses, so it works against any
 //! live service, in-process or remote.
+//!
+//! Each event records the **availability window** end to end: the admin
+//! round trip (the epoch publish a client waits for) and the drain time
+//! until `MSTAT` reports the enqueued migration idle — the measured
+//! counterpart of the O(1)-admin / background-migration split
+//! (`coordinator::migration`).
 
 use super::target::Target;
 use std::time::{Duration, Instant};
+
+/// Longest the injector polls `MSTAT` for one event's drain before
+/// giving up (also capped by the next scheduled event's due time, so
+/// measurement never delays the churn schedule).
+const DRAIN_POLL_BUDGET: Duration = Duration::from_secs(2);
+
+/// One executed churn event with its end-to-end availability window:
+/// how long the admin command took to *ack* (the epoch publish) and how
+/// long until the migration it enqueued *drained*.
+#[derive(Debug, Clone)]
+pub struct ChurnEvent {
+    /// Offset from run start when the event fired, in milliseconds.
+    pub offset_ms: u64,
+    /// `kill`, `add`, `kill-skipped` or `error`.
+    pub action: &'static str,
+    /// Epoch the service reported for the change (0 when unparsed).
+    pub epoch: u64,
+    /// Admin-command round trip in nanoseconds — the epoch-publish
+    /// latency a client observes (O(1) in stored keys on this stack).
+    pub admin_rtt_ns: u64,
+    /// Milliseconds from the admin ack until `MSTAT` reported the
+    /// migration queue idle; `None` when the drain outlived the event's
+    /// polling budget (or the target has no `MSTAT`).
+    pub drain_ms: Option<f64>,
+    /// Human-readable log line.
+    pub line: String,
+}
+
+/// Parse `EPOCH <e>` out of a `KILLED …`/`ADDED …` response.
+fn parse_epoch(resp: &str) -> u64 {
+    let mut toks = resp.split_whitespace();
+    while let Some(t) = toks.next() {
+        if t == "EPOCH" {
+            return toks.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// Poll `MSTAT` until the migration queue reports idle; returns the
+/// elapsed drain time in ms, or `None` if `budget` ran out (or the
+/// target does not speak `MSTAT`).
+fn measure_drain(admin: &mut Box<dyn Target>, budget: Duration) -> Option<f64> {
+    let t0 = Instant::now();
+    loop {
+        match admin.call("MSTAT") {
+            Ok(r) if r.starts_with("MSTAT") => {
+                if r.contains("idle=true") {
+                    return Some(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            _ => return None,
+        }
+        if t0.elapsed() >= budget {
+            return None;
+        }
+        std::thread::sleep(Duration::from_micros(300));
+    }
+}
 
 /// What the injector does at one scheduled point.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,57 +156,108 @@ impl ChurnScenario {
 }
 
 /// Drive `plan` against an admin connection. `buckets` bounds the bucket
-/// ids probed for `KILL` (pass the initial cluster size). Returns a log of
-/// what actually happened, one line per event.
+/// ids probed for `KILL` (pass the initial cluster size). Returns one
+/// [`ChurnEvent`] per plan entry: the log line plus the measured
+/// availability window — admin round trip (epoch publish) and drain time
+/// (`MSTAT` polled until the migration queue is idle, within a budget
+/// that never delays the next scheduled event).
 pub fn inject(
     mut admin: Box<dyn Target>,
     plan: &[(Duration, ChurnAction)],
     start: Instant,
     buckets: u32,
-) -> Vec<String> {
-    let mut log = Vec::with_capacity(plan.len());
+) -> Vec<ChurnEvent> {
+    let mut events: Vec<ChurnEvent> = Vec::with_capacity(plan.len());
     let mut cursor = 0u32;
-    for (at, action) in plan {
+    for (i, (at, action)) in plan.iter().enumerate() {
         let elapsed = start.elapsed();
         if *at > elapsed {
             std::thread::sleep(*at - elapsed);
         }
-        let stamp = start.elapsed().as_millis();
-        match action {
+        let stamp = start.elapsed().as_millis() as u64;
+        // The drain poll may use at most the gap to the next scheduled
+        // event (a oneshot burst must not serialize into kill→drain→kill).
+        let drain_budget = match plan.get(i + 1) {
+            Some((next_at, _)) => {
+                DRAIN_POLL_BUDGET.min((start + *next_at).saturating_duration_since(Instant::now()))
+            }
+            None => DRAIN_POLL_BUDGET,
+        };
+        let event = match action {
             ChurnAction::Kill => {
                 // Probe bucket ids until one KILL is accepted (a bucket may
                 // already be down; the service answers ERR and we move on).
-                let mut killed = false;
+                let mut found = None;
                 for _ in 0..buckets.max(1) {
                     let b = cursor % buckets.max(1);
                     cursor = cursor.wrapping_add(1);
+                    let t0 = Instant::now();
                     match admin.call(&format!("KILL {b}")) {
                         Ok(r) if r.starts_with("KILLED") => {
-                            log.push(format!("[{stamp}ms] KILL {b} -> {r}"));
-                            killed = true;
+                            found = Some((b, r, t0.elapsed()));
                             break;
                         }
                         Ok(_) => continue,
                         Err(e) => {
-                            log.push(format!("[{stamp}ms] admin connection lost: {e}"));
-                            return log;
+                            events.push(ChurnEvent {
+                                offset_ms: stamp,
+                                action: "error",
+                                epoch: 0,
+                                admin_rtt_ns: 0,
+                                drain_ms: None,
+                                line: format!("[{stamp}ms] admin connection lost: {e}"),
+                            });
+                            return events;
                         }
                     }
                 }
-                if !killed {
-                    log.push(format!("[{stamp}ms] KILL skipped: no killable bucket"));
+                match found {
+                    Some((b, r, rtt)) => ChurnEvent {
+                        offset_ms: stamp,
+                        action: "kill",
+                        epoch: parse_epoch(&r),
+                        admin_rtt_ns: crate::metrics::duration_to_ns(rtt),
+                        drain_ms: measure_drain(&mut admin, drain_budget),
+                        line: format!("[{stamp}ms] KILL {b} -> {r}"),
+                    },
+                    None => ChurnEvent {
+                        offset_ms: stamp,
+                        action: "kill-skipped",
+                        epoch: 0,
+                        admin_rtt_ns: 0,
+                        drain_ms: None,
+                        line: format!("[{stamp}ms] KILL skipped: no killable bucket"),
+                    },
                 }
             }
-            ChurnAction::Restore => match admin.call("ADD") {
-                Ok(r) => log.push(format!("[{stamp}ms] ADD -> {r}")),
-                Err(e) => {
-                    log.push(format!("[{stamp}ms] admin connection lost: {e}"));
-                    return log;
+            ChurnAction::Restore => {
+                let t0 = Instant::now();
+                match admin.call("ADD") {
+                    Ok(r) => ChurnEvent {
+                        offset_ms: stamp,
+                        action: "add",
+                        epoch: parse_epoch(&r),
+                        admin_rtt_ns: crate::metrics::duration_to_ns(t0.elapsed()),
+                        drain_ms: measure_drain(&mut admin, drain_budget),
+                        line: format!("[{stamp}ms] ADD -> {r}"),
+                    },
+                    Err(e) => {
+                        events.push(ChurnEvent {
+                            offset_ms: stamp,
+                            action: "error",
+                            epoch: 0,
+                            admin_rtt_ns: 0,
+                            drain_ms: None,
+                            line: format!("[{stamp}ms] admin connection lost: {e}"),
+                        });
+                        return events;
+                    }
                 }
-            },
-        }
+            }
+        };
+        events.push(event);
     }
-    log
+    events
 }
 
 #[cfg(test)]
@@ -198,11 +314,31 @@ mod tests {
             (Duration::ZERO, ChurnAction::Kill),
             (Duration::ZERO, ChurnAction::Restore),
         ];
-        let log = inject(admin, &plan, Instant::now(), 6);
-        assert_eq!(log.len(), 3, "{log:?}");
-        assert!(log[0].contains("KILLED"), "{}", log[0]);
-        assert!(log[1].contains("KILLED"), "{}", log[1]);
-        assert!(log[2].contains("ADDED"), "{}", log[2]);
+        let events = inject(admin, &plan, Instant::now(), 6);
+        assert_eq!(events.len(), 3, "{events:?}");
+        assert!(events[0].line.contains("KILLED"), "{}", events[0].line);
+        assert!(events[1].line.contains("KILLED"), "{}", events[1].line);
+        assert!(events[2].line.contains("ADDED"), "{}", events[2].line);
         assert_eq!(router.working(), 5);
+        // The availability window is measured end to end: the admin rtt
+        // is always captured, the epoch is parsed from the response, and
+        // the last event (with a real polling budget) sees the drain.
+        for e in &events[..2] {
+            assert_eq!(e.action, "kill");
+            assert!(e.admin_rtt_ns > 0, "{e:?}");
+        }
+        assert_eq!(events[0].epoch, 1, "{events:?}");
+        assert_eq!(events[1].epoch, 2, "{events:?}");
+        assert_eq!(events[2].action, "add");
+        assert_eq!(events[2].epoch, 3, "{events:?}");
+        assert!(events[2].drain_ms.is_some(), "final drain must complete: {events:?}");
+    }
+
+    #[test]
+    fn epoch_parsing_tolerates_other_responses() {
+        assert_eq!(parse_epoch("KILLED node-3 EPOCH 4 SOURCES 1"), 4);
+        assert_eq!(parse_epoch("ADDED BUCKET 2 NODE node-2 EPOCH 7 SOURCES 3"), 7);
+        assert_eq!(parse_epoch("KILLED node-3 MOVED 42"), 0, "legacy response shape");
+        assert_eq!(parse_epoch("ERR whatever"), 0);
     }
 }

@@ -25,7 +25,7 @@ pub mod report;
 pub mod target;
 pub mod workload;
 
-pub use churn::{ChurnAction, ChurnScenario};
+pub use churn::{ChurnAction, ChurnEvent, ChurnScenario};
 pub use report::{RunReport, WorkerStats};
 pub use target::{Target, TargetFactory};
 pub use workload::{Op, Workload};
@@ -205,7 +205,7 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
         let stats = w.join().map_err(|_| "a loadgen worker panicked".to_string())?;
         merged.merge(&stats);
     }
-    let churn_log = match churn_thread {
+    let churn_events = match churn_thread {
         Some(t) => t.join().map_err(|_| "the churn injector panicked".to_string())?,
         None => Vec::new(),
     };
@@ -227,7 +227,7 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
         acked_puts: merged.acked_puts,
         corrected: merged.corrected,
         naive: merged.naive,
-        churn_log,
+        churn_events,
     })
 }
 
@@ -351,7 +351,18 @@ mod tests {
         let rep = run(&cfg, &factory).unwrap();
         assert_eq!(router.epoch(), 2, "both kills must land");
         assert_eq!(router.working(), 6);
-        assert_eq!(rep.churn_log.len(), 2, "{:?}", rep.churn_log);
+        // The availability window is recorded per event.
+        assert_eq!(rep.churn_events.len(), 2, "{:?}", rep.churn_events);
+        for e in &rep.churn_events {
+            assert_eq!(e.action, "kill", "{e:?}");
+            assert!(e.admin_rtt_ns > 0, "{e:?}");
+            assert!(e.epoch > 0, "{e:?}");
+        }
+        assert!(
+            rep.churn_events[1].drain_ms.is_some(),
+            "the last event has the full polling budget: {:?}",
+            rep.churn_events
+        );
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! humans and emitted as CSV (via [`crate::benchkit::report`]) and JSON so
 //! results land in the benchmark trajectory next to the figure CSVs.
 
+use super::churn::ChurnEvent;
 use crate::benchkit::{self, report::Table};
 use crate::metrics::Histogram;
 use std::time::Duration;
@@ -72,8 +73,10 @@ pub struct RunReport {
     pub corrected: Histogram,
     /// Merged naive (send-to-response) latency histogram (nanoseconds).
     pub naive: Histogram,
-    /// Churn injector log, one line per event.
-    pub churn_log: Vec<String>,
+    /// Structured churn events with the measured availability window
+    /// (epoch, admin rtt, drain time) and the human log line — see
+    /// [`ChurnEvent`].
+    pub churn_events: Vec<ChurnEvent>,
 }
 
 impl RunReport {
@@ -131,13 +134,53 @@ impl RunReport {
             q(&self.naive, 0.999),
             benchkit::fmt_ns(self.naive.max() as f64)
         ));
-        if !self.churn_log.is_empty() {
+        if !self.churn_events.is_empty() {
             out.push_str("churn events:\n");
-            for line in &self.churn_log {
-                out.push_str(&format!("  {line}\n"));
+            for e in &self.churn_events {
+                out.push_str(&format!("  {}\n", e.line));
+            }
+            let rtts: Vec<u64> =
+                self.churn_events.iter().map(|e| e.admin_rtt_ns).filter(|&n| n > 0).collect();
+            let drains: Vec<f64> = self.churn_events.iter().filter_map(|e| e.drain_ms).collect();
+            if let Some(&max_rtt) = rtts.iter().max() {
+                out.push_str(&format!(
+                    "availability: admin_rtt max={} over {} events",
+                    benchkit::fmt_ns(max_rtt as f64),
+                    rtts.len()
+                ));
+                if !drains.is_empty() {
+                    let max_drain = drains.iter().copied().fold(f64::MIN, f64::max);
+                    out.push_str(&format!(
+                        ", drain max={max_drain:.1}ms ({} measured)",
+                        drains.len()
+                    ));
+                }
+                out.push('\n');
             }
         }
         out
+    }
+
+    /// Per-event availability table for the `results/` CSV trajectory
+    /// (`None` when the run had no churn). Unmeasured drains emit -1.
+    pub fn events_table(&self) -> Option<Table> {
+        if self.churn_events.is_empty() {
+            return None;
+        }
+        let mut t = Table::new(
+            "loadgen_churn_events",
+            &["offset_ms", "action", "epoch", "admin_rtt_us", "drain_ms"],
+        );
+        for e in &self.churn_events {
+            t.push_row(vec![
+                e.offset_ms.to_string(),
+                e.action.to_string(),
+                e.epoch.to_string(),
+                format!("{:.1}", e.admin_rtt_ns as f64 / 1e3),
+                e.drain_ms.map_or("-1".to_string(), |d| format!("{d:.3}")),
+            ]);
+        }
+        Some(t)
     }
 
     /// One-row table for the CSV trajectory under `results/`.
@@ -185,8 +228,22 @@ impl RunReport {
                 h.max()
             )
         };
-        let events: Vec<String> =
-            self.churn_log.iter().map(|e| format!("\"{}\"", json_escape(e))).collect();
+        let events: Vec<String> = self
+            .churn_events
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"offset_ms\": {}, \"action\": \"{}\", \"epoch\": {}, \
+                     \"admin_rtt_ns\": {}, \"drain_ms\": {}, \"line\": \"{}\"}}",
+                    e.offset_ms,
+                    e.action,
+                    e.epoch,
+                    e.admin_rtt_ns,
+                    e.drain_ms.map_or("null".to_string(), |d| format!("{d:.3}")),
+                    json_escape(&e.line)
+                )
+            })
+            .collect();
         format!(
             "{{\n  \"mode\": \"{}\",\n  \"workload\": \"{}\",\n  \"churn\": \"{}\",\n  \
              \"threads\": {},\n  \"target_rate\": {:.1},\n  \"elapsed_s\": {:.3},\n  \
@@ -252,7 +309,14 @@ mod tests {
             acked_puts: 300,
             corrected,
             naive,
-            churn_log: vec!["[500ms] KILL 3 -> KILLED node-3 MOVED 42".into()],
+            churn_events: vec![ChurnEvent {
+                offset_ms: 500,
+                action: "kill",
+                epoch: 1,
+                admin_rtt_ns: 84_000,
+                drain_ms: Some(3.2),
+                line: "[500ms] KILL 3 -> KILLED node-3 EPOCH 1 SOURCES 1".into(),
+            }],
         }
     }
 
@@ -298,7 +362,35 @@ mod tests {
         let j = sample_report().to_json();
         assert!(j.contains("\"p99\""), "{j}");
         assert!(j.contains("\"churn_events\""), "{j}");
+        assert!(j.contains("\"admin_rtt_ns\": 84000"), "{j}");
+        assert!(j.contains("\"drain_ms\": 3.200"), "{j}");
+        assert!(j.contains("\"epoch\": 1"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn events_table_rows_match_events() {
+        let rep = sample_report();
+        let t = rep.events_table().expect("one churn event");
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], "500");
+        assert_eq!(t.rows[0][1], "kill");
+        assert_eq!(t.rows[0][2], "1");
+        assert_eq!(t.rows[0][3], "84.0");
+        assert_eq!(t.rows[0][4], "3.200");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("offset_ms,action,epoch,admin_rtt_us,drain_ms"), "{csv}");
+        // A run without churn has no events table.
+        let mut rep = rep;
+        rep.churn_events.clear();
+        assert!(rep.events_table().is_none());
+    }
+
+    #[test]
+    fn render_summarizes_the_availability_window() {
+        let r = sample_report().render();
+        assert!(r.contains("availability:"), "{r}");
+        assert!(r.contains("drain max=3.2ms"), "{r}");
     }
 }

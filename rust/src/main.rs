@@ -349,6 +349,13 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
             Ok(p) => println!("[saved {}]", p.display()),
             Err(e) => eprintln!("[csv save failed: {e}]"),
         }
+        // Per-event availability window (epoch, admin rtt, drain time).
+        if let Some(events) = report.events_table() {
+            match events.save_csv(&format!("{stem}_events")) {
+                Ok(p) => println!("[saved {}]", p.display()),
+                Err(e) => eprintln!("[events csv save failed: {e}]"),
+            }
+        }
     }
     let json_path = args.get("json");
     if !json_path.is_empty() {

@@ -44,6 +44,39 @@ impl Counter {
     }
 }
 
+/// An up/down gauge (e.g. in-flight batch count). Unlike [`Counter`] it
+/// can decrease; reads are point-in-time racy, which is fine for metrics.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub const fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Subtract one (saturating: a stray extra `dec` clamps at zero
+    /// instead of wrapping to u64::MAX).
+    #[inline]
+    pub fn dec(&self) {
+        let sat_dec = |v: u64| Some(v.saturating_sub(1));
+        let _ = self.v.fetch_update(Ordering::Relaxed, Ordering::Relaxed, sat_dec);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
 /// Stripes of a [`ShardedCounter`]. Power of two; stripe selection is
 /// the crate-wide [`crate::sync::thread_stripe`] assignment.
 const COUNTER_STRIPES: usize = 8;
@@ -110,6 +143,19 @@ pub struct RouterMetrics {
     pub rejects: Counter,
     /// Keys relocated by resizes (rebalance audit).
     pub relocated_keys: Counter,
+    /// Keys the migration planner identified as movers (batched planning
+    /// stage of `coordinator::migration`).
+    pub keys_planned: Counter,
+    /// Records the migration executor actually relocated.
+    pub keys_moved: Counter,
+    /// Migration batches currently being planned/applied.
+    pub batches_inflight: Gauge,
+    /// Wall-clock nanoseconds spent executing migration plans.
+    pub migration_ns: Counter,
+    /// Migration plans enqueued by admin commands.
+    pub plans_enqueued: Counter,
+    /// Migration plans fully executed.
+    pub plans_done: Counter,
 }
 
 impl RouterMetrics {
@@ -121,13 +167,30 @@ impl RouterMetrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "lookups: scalar={} batched={} (batches={}), epochs={}, rejects={}, relocated={}",
+            "lookups: scalar={} batched={} (batches={}), epochs={}, rejects={}, relocated={}, \
+             migration: planned={} moved={}",
             self.lookups_scalar.get(),
             self.lookups_batched.get(),
             self.batches.get(),
             self.epochs.get(),
             self.rejects.get(),
-            self.relocated_keys.get()
+            self.relocated_keys.get(),
+            self.keys_planned.get(),
+            self.keys_moved.get()
+        )
+    }
+
+    /// Migration-focused one-liner (the `MSTAT` protocol payload).
+    pub fn migration_summary(&self) -> String {
+        format!(
+            "keys_planned={} keys_moved={} batches_inflight={} migration_ms={:.3} \
+             plans_enqueued={} plans_done={}",
+            self.keys_planned.get(),
+            self.keys_moved.get(),
+            self.batches_inflight.get(),
+            self.migration_ns.get() as f64 / 1e6,
+            self.plans_enqueued.get(),
+            self.plans_done.get()
         )
     }
 }
@@ -199,5 +262,22 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("scalar=10"));
         assert!(s.contains("batches=1"));
+        m.keys_planned.add(5);
+        m.keys_moved.add(4);
+        let ms = m.migration_summary();
+        assert!(ms.contains("keys_planned=5"), "{ms}");
+        assert!(ms.contains("keys_moved=4"), "{ms}");
+    }
+
+    #[test]
+    fn gauge_saturates_at_zero() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0, "extra dec must clamp, not wrap");
     }
 }

@@ -3,7 +3,7 @@
 //! assuming them. Used by the integration tests, the rebalance tracker in
 //! the coordinator, and the ablation benches.
 
-use crate::algorithms::ConsistentHasher;
+use crate::algorithms::{ConsistentHasher, MoveDelta};
 
 /// Balance audit over a key set.
 #[derive(Debug, Clone)]
@@ -107,6 +107,55 @@ pub fn disruption(
             rep.collateral += 1;
         }
     }
+    rep
+}
+
+/// How a planner's [`MoveDelta`] compares against the *observed* key
+/// movement between two placements — the runtime check that the
+/// migration pipeline's structural planning is sound and tight.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaCoverageReport {
+    /// Keys whose placement differs between the two states.
+    pub moved: usize,
+    /// Moved keys whose old bucket is **not** in the delta's sources —
+    /// the planner would have stranded them. Must be 0 (soundness).
+    pub missed: usize,
+    /// Keys that stayed put although their old bucket is a source — the
+    /// scan overhead the planner pays (zero extra scans would mean the
+    /// delta is exactly the moved set; some slack is inherent, e.g. the
+    /// unmoved majority on a restore donor).
+    pub scanned_unmoved: usize,
+    /// Source buckets no moved key came from (informational tightness
+    /// measure; nonzero is legal — a chain donor may hold no affected
+    /// key for a given tracer set).
+    pub unused_sources: usize,
+}
+
+/// Audit `delta` (planned from `old` → `new`) against the observed
+/// movement of `keys`: every key that actually moved must come from a
+/// planned source bucket.
+pub fn delta_coverage(
+    old: &dyn ConsistentHasher,
+    new: &dyn ConsistentHasher,
+    delta: &MoveDelta,
+    keys: &[u64],
+) -> DeltaCoverageReport {
+    let mut rep = DeltaCoverageReport::default();
+    let mut used = std::collections::BTreeSet::new();
+    for &k in keys {
+        let (b0, b1) = (old.lookup(k), new.lookup(k));
+        if b0 != b1 {
+            rep.moved += 1;
+            if delta.is_source(b0) {
+                used.insert(b0);
+            } else {
+                rep.missed += 1;
+            }
+        } else if delta.is_source(b0) {
+            rep.scanned_unmoved += 1;
+        }
+    }
+    rep.unused_sources = delta.sources.iter().filter(|b| !used.contains(b)).count();
     rep
 }
 
@@ -217,6 +266,44 @@ mod tests {
         assert_eq!(rep.relocated, 1);
         assert_eq!(rep.collateral, 1);
         assert!(rep.collateral_frac() > 0.2);
+    }
+
+    #[test]
+    fn delta_coverage_confirms_memento_planning() {
+        let ks = keys(30_000);
+        let mut old = Memento::new(16);
+        old.remove(11).unwrap();
+        old.remove(3).unwrap();
+        // Removal: planner says "only bucket 6", observation must agree.
+        let mut new = old.clone();
+        new.remove(6).unwrap();
+        let delta = old.delta_sources(&new);
+        let rep = delta_coverage(&old, &new, &delta, &ks);
+        assert!(rep.moved > 0);
+        assert_eq!(rep.missed, 0, "planner delta must cover every mover");
+        assert_eq!(rep.scanned_unmoved, 0, "a removal's source donates everything");
+        assert_eq!(rep.unused_sources, 0);
+        // Restore: chain sources cover every mover; unmoved keys on the
+        // donors are the inherent scan slack.
+        let old2 = new.clone();
+        let mut new2 = new;
+        new2.add().unwrap();
+        let delta = old2.delta_sources(&new2);
+        let rep = delta_coverage(&old2, &new2, &delta, &ks);
+        assert!(rep.moved > 0);
+        assert_eq!(rep.missed, 0, "restore chain must cover every mover");
+    }
+
+    #[test]
+    fn delta_coverage_flags_an_unsound_delta() {
+        let ks = keys(10_000);
+        let old = Memento::new(8);
+        let mut new = old.clone();
+        new.remove(2).unwrap();
+        let bogus = MoveDelta { sources: vec![5], full_scan: false };
+        let rep = delta_coverage(&old, &new, &bogus, &ks);
+        assert!(rep.missed > 0, "movers from bucket 2 are not covered by source 5");
+        assert!(rep.unused_sources >= 1);
     }
 
     #[test]

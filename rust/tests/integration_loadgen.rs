@@ -190,7 +190,7 @@ fn open_loop_with_incremental_churn_over_tcp() {
     // 3 kills + 3 restores bump the epoch six times.
     assert_eq!(router.epoch(), 6, "churn must fire through the protocol");
     assert_eq!(router.working(), 12, "restores must bring capacity back");
-    assert_eq!(rep.churn_log.len(), 6, "{:?}", rep.churn_log);
+    assert_eq!(rep.churn_events.len(), 6, "{:?}", rep.churn_events);
     // Placement audit stays clean across the whole schedule.
     let stats = svc.handle("STATS");
     assert!(stats.contains("violations=0"), "{stats}");

@@ -1,0 +1,239 @@
+//! Integration: the epoch-delta migration pipeline end to end — O(1)
+//! admin commands, background drain, read availability during movement,
+//! planner-delta soundness against observed key movement, and the
+//! full-scan fallback for algorithms without structural deltas.
+
+use memento::algorithms::ConsistentHasher;
+use memento::coordinator::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::netserver::Client;
+use memento::simulator::audit;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+fn wait_mstat_idle(c: &mut Client, timeout: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        let r = c.request("MSTAT").unwrap();
+        assert!(r.starts_with("MSTAT"), "{r}");
+        if r.contains("idle=true") {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    false
+}
+
+/// The satellite scenario: pipelined GET/PUT clients drive a replicated
+/// service through KILL → drain → ADD → drain. No acknowledged write may
+/// be lost, the admin commands must ack within a bounded window, and the
+/// executor must move exactly what the planner planned.
+#[test]
+fn kill_drain_add_under_pipelined_traffic() {
+    let router = Router::new("memento", 10, 100, None).unwrap();
+    let svc = Service::with_replicas(router, 2);
+    let server = svc.serve("127.0.0.1:0", 64).unwrap();
+    let addr = server.addr();
+
+    let start_line = Arc::new(Barrier::new(9)); // 8 writers + the churner
+    let writers: Vec<_> = (0..8)
+        .map(|t| {
+            let start_line = start_line.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                start_line.wait();
+                let mut acked: Vec<String> = Vec::new();
+                for i in 0..600 {
+                    let key = format!("m{t}k{i}");
+                    let r = c.request(&format!("PUT {key} val{t}x{i}")).unwrap();
+                    if r.starts_with("OK") {
+                        acked.push(key);
+                    }
+                    // Keep GETs in flight through the churn: every write
+                    // must be readable the moment it is acknowledged.
+                    if i % 3 == 0 {
+                        if let Some(k) = acked.last() {
+                            let r = c.request(&format!("GET {k}")).unwrap();
+                            assert!(r.starts_with("VALUE"), "read-your-write {k}: {r}");
+                        }
+                    }
+                }
+                acked
+            })
+        })
+        .collect();
+
+    let churner = {
+        let start_line = start_line.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            start_line.wait();
+            std::thread::sleep(Duration::from_millis(5));
+            // KILL acks fast (it only publishes + enqueues)…
+            let t0 = Instant::now();
+            let r = c.request("KILL 4").unwrap();
+            let kill_rtt = t0.elapsed();
+            assert!(r.starts_with("KILLED"), "{r}");
+            assert!(kill_rtt < Duration::from_millis(250), "KILL ack took {kill_rtt:?}");
+            // …and the availability window (drain) is bounded.
+            assert!(
+                wait_mstat_idle(&mut c, Duration::from_secs(10)),
+                "drain after KILL timed out"
+            );
+            let t0 = Instant::now();
+            let r = c.request("ADD").unwrap();
+            let add_rtt = t0.elapsed();
+            assert!(r.contains("BUCKET 4"), "restore must reuse bucket 4: {r}");
+            assert!(add_rtt < Duration::from_millis(250), "ADD ack took {add_rtt:?}");
+            assert!(
+                wait_mstat_idle(&mut c, Duration::from_secs(10)),
+                "drain after ADD timed out"
+            );
+        })
+    };
+
+    let acked: Vec<String> = writers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    churner.join().unwrap();
+    assert_eq!(acked.len(), 8 * 600, "every PUT must be acknowledged");
+    assert!(svc.migration.wait_idle(Duration::from_secs(10)), "queue must drain");
+
+    // Zero acknowledged-write loss across the whole churn cycle.
+    let mut c = Client::connect(&addr).unwrap();
+    for key in &acked {
+        let r = c.request(&format!("GET {key}")).unwrap();
+        assert!(r.starts_with("VALUE"), "acknowledged write {key} lost: {r}");
+    }
+    // The executor moved exactly the planner's key set: every planned
+    // mover was extracted and relocated, nothing else was touched.
+    let planned = svc.router.metrics.keys_planned.get();
+    let moved = svc.router.metrics.keys_moved.get();
+    assert!(moved > 0, "the drain must have moved records");
+    assert_eq!(planned, moved, "executor must move exactly the planned set");
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("violations=0"), "collateral movement: {stats}");
+    drop(c);
+    assert_eq!(server.shutdown(), 0, "connections must drain on shutdown");
+}
+
+/// Property test over random churn: the planner's delta always covers
+/// the observed tracer-key movement (zero stranded keys), Memento never
+/// falls back to a full scan for kills/restores, and a restore's scanned
+/// set is exactly the replacement-chain source set.
+#[test]
+fn planner_delta_matches_observed_movement_across_random_churn() {
+    let tracers: Vec<u64> = (0..20_000u64).map(memento::hashing::mix::splitmix64_mix).collect();
+    let router = Router::new("memento", 24, 240, None).unwrap();
+    // Deterministic “random” schedule: kills and restores interleaved.
+    let kills = [7u32, 19, 3, 11, 22, 5, 15, 9];
+    let mut step = 0usize;
+    let mut do_step = |restore: bool| {
+        let seed = if restore {
+            let ((_b, _n), seed) = router.add_node_planned().unwrap();
+            seed
+        } else {
+            let (_n, seed) = router.fail_bucket_planned(kills[step % kills.len()]).unwrap();
+            step += 1;
+            seed
+        };
+        let delta = seed.delta.clone();
+        assert!(!delta.full_scan, "memento kills/restores must never full-scan");
+        // Soundness: observed movement ⊆ planned sources.
+        let old_algo = seed.old_placement.algo();
+        router.with_view(|new_algo, _m| {
+            let rep = audit::delta_coverage(old_algo, new_algo, &delta, &tracers);
+            assert_eq!(rep.missed, 0, "stranded movers (restore={restore}): {rep:?}");
+            assert!(rep.moved > 0, "churn must move tracer keys");
+        });
+        // Restores scan exactly the replacement-chain sources.
+        if restore {
+            let old_memento = seed.old_placement.memento_snapshot().expect("memento placement");
+            let chain = old_memento.restore_sources(seed.changed_bucket).unwrap();
+            assert_eq!(delta.sources, chain, "restore delta must equal the chain source set");
+            assert!(
+                chain.len() <= old_memento.working(),
+                "chain sources cannot exceed the working set"
+            );
+        }
+    };
+    // kill, kill, restore, kill, restore, restore, kill, kill, kill,
+    // restore ×3, kill — exercises chained replacements both ways.
+    for &restore in
+        &[false, false, true, false, true, true, false, false, false, true, true, true, false]
+    {
+        do_step(restore);
+    }
+}
+
+/// Algorithms without a structural delta (here: anchor) migrate through
+/// the conservative full-scan plan — slower, but still correct and still
+/// off the admin path.
+#[test]
+fn non_memento_algorithms_fall_back_to_full_scan_plans() {
+    let router = Router::new("anchor", 8, 80, None).unwrap();
+    let svc = Service::new(router);
+    for i in 0..400 {
+        svc.handle(&format!("PUT a{i} av{i}"));
+    }
+    let resp = svc.handle("KILL 3");
+    assert!(resp.starts_with("KILLED"), "{resp}");
+    assert!(
+        resp.contains("SOURCES 8"),
+        "anchor has no delta override: all 8 old buckets are sources: {resp}"
+    );
+    for i in 0..400 {
+        let r = svc.handle(&format!("GET a{i}"));
+        assert!(r.contains(&format!("av{i}")), "a{i}: {r}");
+    }
+    assert!(svc.migration.wait_idle(Duration::from_secs(10)));
+    for i in 0..400 {
+        let r = svc.handle(&format!("GET a{i}"));
+        assert!(r.contains(&format!("av{i}")), "post-drain a{i}: {r}");
+    }
+    let stats = svc.handle("STATS");
+    assert!(stats.contains("violations=0"), "{stats}");
+}
+
+/// Manual-mode pipeline driven directly (no protocol): drain + pull with
+/// explicit plans, asserting the moved set equals the planner's set key
+/// by key — no collateral movement at the record level.
+#[test]
+fn executor_moves_exactly_the_planned_records() {
+    let router = Router::new("memento", 12, 120, None).unwrap();
+    let storage = Arc::new(memento::coordinator::storage::StorageCluster::new());
+    let migrator = Migrator::spawn(
+        router.clone(),
+        storage.clone(),
+        MigrationConfig { auto: false, batch_keys: 64, max_inflight: 4 },
+    );
+    let keys: Vec<u64> = (0..6_000u64).map(memento::hashing::mix::splitmix64_mix).collect();
+    for &k in &keys {
+        let (_b, n) = router.route(k);
+        storage.node(n).put(k, k.to_le_bytes().to_vec());
+    }
+    // Keys expected to move on KILL 6: exactly the victim's records.
+    let victim = router.with_view(|_a, m| m.node_at(6)).unwrap();
+    let mut expected: Vec<u64> = storage.node(victim).keys();
+    expected.sort_unstable();
+
+    let (node, seed) = router.fail_bucket_planned(6).unwrap();
+    let before: Vec<(memento::coordinator::membership::NodeId, usize)> = storage.load_by_node();
+    migrator.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+    let moved = migrator.run_pending();
+    assert_eq!(moved as usize, expected.len());
+    // Every expected key is at its new primary; every other node only
+    // gained keys (drain targets), never lost one.
+    for &k in &expected {
+        let (_b, n) = router.route(k);
+        assert_eq!(storage.node(n).get(k), Some(k.to_le_bytes().to_vec()));
+    }
+    for (id, n_before) in before {
+        if id != victim {
+            assert!(
+                storage.node(id).len() >= n_before,
+                "survivor {id} lost records during a drain of {victim}"
+            );
+        }
+    }
+    assert_eq!(storage.total_records(), keys.len(), "no record lost or duplicated");
+}

@@ -38,6 +38,7 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="BENCH_router_scaling.json from this run")
     ap.add_argument("--loadgen", help="BENCH_loadgen_smoke.json from this run (optional)")
+    ap.add_argument("--migration", help="BENCH_migration.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
@@ -70,6 +71,21 @@ def main():
         if int(smoke.get("errors", 0)) != 0:
             failures.append("loadgen smoke reported errors")
             checks.append(("loadgen smoke errors", smoke["errors"], 0, 0, False))
+
+    if args.migration:
+        mig = load(args.migration)
+        # Admin ops/s is the O(1)-admin-path pin: key scanning creeping
+        # back into KILL/ADD shows up as a cliff here, not jitter.
+        gate(
+            "migration admin ops/s (worst cell)",
+            float(mig["admin_ops_s_min"]),
+            baseline["migration_admin_ops_s"],
+        )
+        gate(
+            "migration drain keys/s (worst cell)",
+            float(mig["drain_keys_per_s_min"]),
+            baseline["migration_drain_keys_per_s"],
+        )
 
     width = max(len(c[0]) for c in checks)
     for name, measured, floor, threshold, ok in checks:
