@@ -46,9 +46,10 @@ perf-smoke:
 	  --json BENCH_loadgen_smoke.json
 	cargo bench --bench bench_router_scaling
 	cargo bench --bench bench_migration
+	cargo bench --bench bench_weighted
 	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
 	  --loadgen BENCH_loadgen_smoke.json --migration BENCH_migration.json \
-	  --baseline ci/perf-baseline.json
+	  --weighted BENCH_weighted.json --baseline ci/perf-baseline.json
 
 # AOT-compile the PJRT kernel variants (requires the python/JAX toolchain;
 # see python/compile/aot.py and DESIGN.md §5).

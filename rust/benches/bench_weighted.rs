@@ -1,0 +1,143 @@
+//! Weighted-membership smoke bench — the measurement behind the CI
+//! perf-smoke gate's `BENCH_weighted.json` (DESIGN.md §10).
+//!
+//! For each weight skew (the heaviest node's weight vs the weight-1
+//! rest), an 8-node router is resized and measured on two axes:
+//!
+//! * **lookup throughput** — scalar `route()` over mixed keys. Weighting
+//!   lives entirely in the node layer (more buckets, same algorithm), so
+//!   the hot path must not regress as skew grows; the gate's
+//!   `weighted_lookup_ops_s` floor trips if it does.
+//! * **balance error** — max relative deviation of any node's observed
+//!   key share from its weight share `w/Σw`. Gated as an absolute
+//!   ceiling (`weighted_balance_err_max`): the bucket-set construction
+//!   must track the configured weights.
+//!
+//! Emits `results/weighted.csv` plus `BENCH_weighted.json` (override the
+//! JSON path with `MEMENTO_WEIGHTED_JSON`; key count with
+//! `MEMENTO_WEIGHTED_KEYS`). CI compares the JSON against
+//! `ci/perf-baseline.json`.
+
+use memento::benchkit::report::Table;
+use memento::coordinator::router::Router;
+use std::time::Instant;
+
+const NODES: usize = 8;
+/// Heaviest node's weight; the other 7 nodes stay at weight 1.
+const SKEWS: [u32; 4] = [1, 2, 4, 8];
+
+struct Cell {
+    skew: u32,
+    buckets: usize,
+    lookup_ops_s: f64,
+    balance_err_max: f64,
+}
+
+fn run_cell(skew: u32, keys: u64) -> Cell {
+    let router = Router::new("memento", NODES, NODES * 32, None).expect("router");
+    let heavy = router.with_view(|_a, m| m.node_at(0)).expect("node 0");
+    if skew > 1 {
+        router.set_weight(heavy, skew).expect("resize");
+    }
+    let (buckets, total_weight) = router.with_view(|a, m| (a.working(), m.total_weight()));
+
+    // Balance: per-node key counts over the probe set.
+    let mut counts = std::collections::BTreeMap::new();
+    let probe: Vec<u64> = (0..keys).map(memento::hashing::mix::splitmix64_mix).collect();
+    for &k in &probe {
+        let (_b, node) = router.route(k);
+        *counts.entry(node).or_insert(0u64) += 1;
+    }
+    let mut balance_err_max = 0.0f64;
+    router.with_view(|_a, m| {
+        for info in m.nodes() {
+            let held = counts.get(&info.id).copied().unwrap_or(0);
+            let share = held as f64 / keys as f64;
+            let want = f64::from(info.weight) / total_weight as f64;
+            balance_err_max = balance_err_max.max((share - want).abs() / want);
+        }
+    });
+
+    // Throughput: timed scalar route() sweep over the same keys.
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for &k in &probe {
+        sink = sink.wrapping_add(u64::from(router.route(k).0));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert!(sink > 0, "routing must touch every key");
+    Cell {
+        skew,
+        buckets,
+        lookup_ops_s: keys as f64 / elapsed.max(1e-9),
+        balance_err_max,
+    }
+}
+
+fn main() {
+    let keys: u64 = std::env::var("MEMENTO_WEIGHTED_KEYS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    println!("weighted smoke: {NODES} nodes, heaviest-node skews {SKEWS:?}, {keys} keys\n");
+
+    let mut table =
+        Table::new("weighted", &["skew", "buckets", "lookup_ops_s", "balance_err_max"]);
+    let mut cells = Vec::new();
+    for &skew in &SKEWS {
+        let c = run_cell(skew, keys);
+        println!(
+            "skew {:>2}: {:>2} buckets, {:>12.0} lookups/s, balance err {:.4}",
+            c.skew, c.buckets, c.lookup_ops_s, c.balance_err_max
+        );
+        table.push_row(vec![
+            c.skew.to_string(),
+            c.buckets.to_string(),
+            format!("{:.0}", c.lookup_ops_s),
+            format!("{:.4}", c.balance_err_max),
+        ]);
+        cells.push(c);
+    }
+    table.emit("weighted");
+
+    let mut lookup_ops_s_min = f64::INFINITY;
+    let mut balance_err_max = 0.0f64;
+    for c in &cells {
+        lookup_ops_s_min = lookup_ops_s_min.min(c.lookup_ops_s);
+        balance_err_max = balance_err_max.max(c.balance_err_max);
+    }
+    println!(
+        "\nlookup ops/s (worst cell): {lookup_ops_s_min:.0}, \
+         balance err (worst cell): {balance_err_max:.4}"
+    );
+
+    let cell_rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"skew\": {}, \"buckets\": {}, \"lookup_ops_s\": {:.1}, \
+                 \"balance_err_max\": {:.5}}}",
+                c.skew, c.buckets, c.lookup_ops_s, c.balance_err_max
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"weighted\",\n  \"algo\": \"memento\",\n  \"nodes\": {NODES},\n  \
+         \"keys\": {keys},\n  \"cells\": [\n    {}\n  ],\n  \
+         \"lookup_ops_s_min\": {lookup_ops_s_min:.1},\n  \
+         \"balance_err_max\": {balance_err_max:.5}\n}}\n",
+        cell_rows.join(",\n    ")
+    );
+    // Like bench_migration: the committed reference and the CI gate live
+    // at the workspace root, and a failed write must fail the bench so a
+    // stale reference can never pass the gate silently.
+    let path = std::env::var("MEMENTO_WEIGHTED_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_weighted.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

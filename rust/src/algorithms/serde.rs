@@ -1,23 +1,33 @@
 //! Compact binary serialization of algorithm state — the state-transfer
 //! substrate for replicated routers ([`crate::coordinator::replica`]).
 //!
-//! Memento's whole state is `⟨n, R, l⟩` (Def. VI.1): a snapshot is
-//! `13 + 12r` bytes. Format (little-endian):
+//! Memento's whole state is `⟨n, R, l⟩` (Def. VI.1); version 2 appends
+//! the **per-node weight table** so a weighted cluster's node layer
+//! (DESIGN.md §10) transfers with the placement state. Format
+//! (little-endian):
 //!
 //! ```text
-//! [magic u8 = 0xM3][version u8][n u32][l u32][r u32] then r × [b u32][c u32][p u32]
+//! [magic u8 = 0xA3][version u8 = 2][n u32][l u32][r u32]
+//!   then r × [b u32][c u32][p u32]          (replacement tuples)
+//!   then [wcount u32]                        (v2 only)
+//!   then wcount × [node u64][weight u32]     (ascending node id)
 //! ```
+//!
+//! Version 1 snapshots (no weight table) still decode: they describe a
+//! homogeneous cluster, so the table decodes as empty ⇒ *all weights 1*.
 //!
 //! The replacement tuples are emitted in **restore order** (l-chain from
 //! most recent to first removed) so a receiver can rebuild by replaying
 //! removals — this also self-validates the chain: a corrupted snapshot
 //! fails to decode rather than producing a silently divergent router.
+//! The weight table is validated the same way (ascending unique node
+//! ids, nonzero weights).
 
 use super::memento::Memento;
 use super::traits::ConsistentHasher;
 
 const MAGIC: u8 = 0xA3;
-const VERSION: u8 = 1;
+const VERSION: u8 = 2;
 
 /// Snapshot decode errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -27,6 +37,9 @@ pub enum DecodeError {
     BadVersion(u8),
     /// The l-chain did not contain exactly r valid replacements.
     BrokenChain(&'static str),
+    /// The v2 per-node weight table is malformed (zero weight,
+    /// duplicate/descending node id).
+    BadWeightTable(&'static str),
     TrailingBytes(usize),
 }
 
@@ -37,6 +50,7 @@ impl std::fmt::Display for DecodeError {
             DecodeError::BadMagic(m) => write!(f, "bad magic {m:#x}"),
             DecodeError::BadVersion(v) => write!(f, "unsupported version {v}"),
             DecodeError::BrokenChain(why) => write!(f, "broken replacement chain: {why}"),
+            DecodeError::BadWeightTable(why) => write!(f, "bad weight table: {why}"),
             DecodeError::TrailingBytes(n) => write!(f, "{n} trailing bytes"),
         }
     }
@@ -44,10 +58,18 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
-/// Serialize a Memento state snapshot.
+/// Serialize a Memento state snapshot with an empty weight table (a
+/// homogeneous cluster; decodes as all-weight-1).
 pub fn encode_memento(m: &Memento) -> Vec<u8> {
+    encode_weighted(m, &[])
+}
+
+/// Serialize a Memento state snapshot plus the `(node id, weight)` table
+/// (ascending node id — [`crate::coordinator::Membership::weight_table`]
+/// produces it in this order).
+pub fn encode_weighted(m: &Memento, weights: &[(u64, u32)]) -> Vec<u8> {
     let r = m.removed();
-    let mut out = Vec::with_capacity(14 + 12 * r);
+    let mut out = Vec::with_capacity(18 + 12 * r + 12 * weights.len());
     out.push(MAGIC);
     out.push(VERSION);
     out.extend_from_slice(&(m.size() as u32).to_le_bytes());
@@ -64,6 +86,11 @@ pub fn encode_memento(m: &Memento) -> Vec<u8> {
         out.extend_from_slice(&p.to_le_bytes());
         b = p;
     }
+    out.extend_from_slice(&(weights.len() as u32).to_le_bytes());
+    for &(node, weight) in weights {
+        out.extend_from_slice(&node.to_le_bytes());
+        out.extend_from_slice(&weight.to_le_bytes());
+    }
     out
 }
 
@@ -73,26 +100,37 @@ fn read_u32(buf: &[u8], at: usize) -> Result<u32, DecodeError> {
         .ok_or(DecodeError::TooShort)
 }
 
-/// Decode a snapshot produced by [`encode_memento`].
+fn read_u64(buf: &[u8], at: usize) -> Result<u64, DecodeError> {
+    buf.get(at..at + 8)
+        .map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+        .ok_or(DecodeError::TooShort)
+}
+
+/// Decode a snapshot, discarding the weight table (v1 compatibility
+/// surface; weighted receivers use [`decode_weighted`]).
 pub fn decode_memento(buf: &[u8]) -> Result<Memento, DecodeError> {
+    decode_weighted(buf).map(|(m, _w)| m)
+}
+
+/// Decode a snapshot produced by [`encode_weighted`] (or a v1
+/// [`encode_memento`] snapshot, whose weight table is empty — every node
+/// weighs 1).
+pub fn decode_weighted(buf: &[u8]) -> Result<(Memento, Vec<(u64, u32)>), DecodeError> {
     if buf.len() < 14 {
         return Err(DecodeError::TooShort);
     }
     if buf[0] != MAGIC {
         return Err(DecodeError::BadMagic(buf[0]));
     }
-    if buf[1] != VERSION {
+    if buf[1] != 1 && buf[1] != VERSION {
         return Err(DecodeError::BadVersion(buf[1]));
     }
     let n = read_u32(buf, 2)?;
     let l = read_u32(buf, 6)?;
     let r = read_u32(buf, 10)? as usize;
-    let expect_len = 14 + 12 * r;
-    if buf.len() < expect_len {
+    let tuples_end = 14 + 12 * r;
+    if buf.len() < tuples_end {
         return Err(DecodeError::TooShort);
-    }
-    if buf.len() > expect_len {
-        return Err(DecodeError::TrailingBytes(buf.len() - expect_len));
     }
 
     // Tuples are newest-first along the l-chain; replay removals in
@@ -121,6 +159,40 @@ pub fn decode_memento(buf: &[u8]) -> Result<Memento, DecodeError> {
         return Err(DecodeError::BrokenChain("chain does not terminate at n"));
     }
 
+    // v1: no weight table — homogeneous, all weights 1.
+    let weights = if buf[1] == 1 {
+        if buf.len() > tuples_end {
+            return Err(DecodeError::TrailingBytes(buf.len() - tuples_end));
+        }
+        Vec::new()
+    } else {
+        let wcount = read_u32(buf, tuples_end)? as usize;
+        let table_end = tuples_end + 4 + 12 * wcount;
+        if buf.len() < table_end {
+            return Err(DecodeError::TooShort);
+        }
+        if buf.len() > table_end {
+            return Err(DecodeError::TrailingBytes(buf.len() - table_end));
+        }
+        let mut weights = Vec::with_capacity(wcount);
+        let mut at = tuples_end + 4;
+        let mut last_node: Option<u64> = None;
+        for _ in 0..wcount {
+            let node = read_u64(buf, at)?;
+            let weight = read_u32(buf, at + 8)?;
+            if weight == 0 {
+                return Err(DecodeError::BadWeightTable("zero weight"));
+            }
+            if last_node.is_some_and(|p| p >= node) {
+                return Err(DecodeError::BadWeightTable("node ids not ascending"));
+            }
+            last_node = Some(node);
+            weights.push((node, weight));
+            at += 12;
+        }
+        weights
+    };
+
     let mut m = Memento::new(n as usize);
     for &(b, c, _p) in tuples.iter().rev() {
         // Re-derive via the public API so every invariant re-checks.
@@ -130,7 +202,7 @@ pub fn decode_memento(buf: &[u8]) -> Result<Memento, DecodeError> {
             return Err(DecodeError::BrokenChain("replacement value mismatch"));
         }
     }
-    Ok(m)
+    Ok((m, weights))
 }
 
 #[cfg(test)]
@@ -141,14 +213,24 @@ mod tests {
     use crate::simulator::scenario;
     use crate::testkit::{forall_noshrink, Config};
 
+    /// Re-encode a v2 snapshot as its v1 equivalent: version byte 1 and
+    /// no trailing weight table (what a pre-weighting peer emits).
+    fn as_v1(buf: &[u8], r: usize) -> Vec<u8> {
+        let mut v1 = buf[..14 + 12 * r].to_vec();
+        v1[1] = 1;
+        v1
+    }
+
     #[test]
     fn roundtrip_empty() {
         let m = Memento::new(10);
         let buf = encode_memento(&m);
-        assert_eq!(buf.len(), 14);
-        let m2 = decode_memento(&buf).unwrap();
+        assert_eq!(buf.len(), 18, "14-byte header + empty weight table");
+        assert_eq!(buf[1], 2, "current wire version");
+        let (m2, w) = decode_weighted(&buf).unwrap();
         assert_eq!(m2.size(), 10);
         assert_eq!(m2.removed(), 0);
+        assert!(w.is_empty());
     }
 
     #[test]
@@ -158,7 +240,7 @@ mod tests {
             m.remove(b).unwrap();
         }
         let buf = encode_memento(&m);
-        assert_eq!(buf.len(), 14 + 12 * 5);
+        assert_eq!(buf.len(), 18 + 12 * 5);
         let mut m2 = decode_memento(&buf).unwrap();
         for k in 0..5000u64 {
             let key = crate::hashing::mix::splitmix64_mix(k);
@@ -167,6 +249,38 @@ mod tests {
         // Restore order must survive the roundtrip.
         assert_eq!(m2.add().unwrap(), 25);
         assert_eq!(m2.add().unwrap(), 2);
+    }
+
+    #[test]
+    fn weight_table_roundtrips() {
+        let mut m = Memento::new(16);
+        m.remove(3).unwrap();
+        let table = vec![(0u64, 4u32), (1, 1), (2, 2), (7, 8)];
+        let buf = encode_weighted(&m, &table);
+        let (m2, w) = decode_weighted(&buf).unwrap();
+        assert_eq!(w, table);
+        assert_eq!(m2.removed(), 1);
+        // decode_memento ignores the table but still validates it.
+        assert_eq!(decode_memento(&buf).unwrap().size(), 16);
+    }
+
+    #[test]
+    fn v1_snapshots_decode_as_all_weight_1() {
+        let mut m = Memento::new(20);
+        for b in [4u32, 11] {
+            m.remove(b).unwrap();
+        }
+        let v1 = as_v1(&encode_memento(&m), 2);
+        let (m2, w) = decode_weighted(&v1).unwrap();
+        assert!(w.is_empty(), "v1 carries no table: homogeneous, all weights 1");
+        for k in 0..2000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            assert_eq!(m.lookup(key), m2.lookup(key));
+        }
+        // A v1 snapshot with trailing bytes is still rejected.
+        let mut bad = v1.clone();
+        bad.push(0);
+        assert!(matches!(decode_weighted(&bad), Err(DecodeError::TrailingBytes(1))));
     }
 
     #[test]
@@ -188,7 +302,15 @@ mod tests {
                         let _ = m.add();
                     }
                 }
-                let m2 = decode_memento(&encode_memento(&m)).map_err(|e| e.to_string())?;
+                // Random weight table over ascending synthetic node ids.
+                let table: Vec<(u64, u32)> = (0..rng.next_below(10))
+                    .map(|i| (i * 3 + rng.next_below(3), 1 + rng.next_below(8) as u32))
+                    .collect();
+                let (m2, t2) =
+                    decode_weighted(&encode_weighted(&m, &table)).map_err(|e| e.to_string())?;
+                if t2 != table {
+                    return Err("weight table mismatch".into());
+                }
                 if m2.size() != m.size() || m2.removed() != m.removed() {
                     return Err("size/r mismatch".into());
                 }
@@ -208,7 +330,7 @@ mod tests {
         let mut m = Memento::new(20);
         let mut rng = Xoshiro256::new(1);
         scenario::apply_removals(&mut m, 6, RemovalOrder::Random, &mut rng);
-        let good = encode_memento(&m);
+        let good = encode_weighted(&m, &[(0, 2), (1, 1)]);
 
         assert_eq!(decode_memento(&[]).unwrap_err(), DecodeError::TooShort);
         let mut bad = good.clone();
@@ -226,5 +348,35 @@ mod tests {
         let mut bad = good.clone();
         bad[14] ^= 0xFF; // first tuple's b
         assert!(matches!(decode_memento(&bad), Err(DecodeError::BrokenChain(_))));
+    }
+
+    #[test]
+    fn corrupted_weight_tables_rejected() {
+        let m = Memento::new(8);
+        // Zero weight.
+        let bad = encode_weighted(&m, &[(0, 1), (3, 0)]);
+        assert_eq!(
+            decode_weighted(&bad).unwrap_err(),
+            DecodeError::BadWeightTable("zero weight")
+        );
+        // Duplicate / descending node ids.
+        let bad = encode_weighted(&m, &[(5, 2), (5, 3)]);
+        assert_eq!(
+            decode_weighted(&bad).unwrap_err(),
+            DecodeError::BadWeightTable("node ids not ascending")
+        );
+        let bad = encode_weighted(&m, &[(9, 2), (4, 3)]);
+        assert!(matches!(decode_weighted(&bad), Err(DecodeError::BadWeightTable(_))));
+        // Truncated mid-table.
+        let good = encode_weighted(&m, &[(0, 1), (1, 2)]);
+        assert_eq!(
+            decode_weighted(&good[..good.len() - 3]).unwrap_err(),
+            DecodeError::TooShort
+        );
+        // A lying wcount (claims more entries than present).
+        let mut bad = encode_weighted(&m, &[(0, 1)]);
+        let at = bad.len() - 12 - 4;
+        bad[at..at + 4].copy_from_slice(&9u32.to_le_bytes());
+        assert_eq!(decode_weighted(&bad).unwrap_err(), DecodeError::TooShort);
     }
 }

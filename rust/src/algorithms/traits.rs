@@ -19,6 +19,10 @@ pub enum AlgoError {
     CapacityExhausted { capacity: usize },
     /// The cluster would become empty.
     WouldBeEmpty,
+    /// A node weight outside the accepted range (weights are ≥ 1; the
+    /// node layer maps weight to a bucket-set size, and an empty bucket
+    /// set is spelled *remove the node*, not weight 0).
+    InvalidWeight(u32),
 }
 
 impl fmt::Display for AlgoError {
@@ -33,6 +37,7 @@ impl fmt::Display for AlgoError {
                 write!(f, "cluster capacity {capacity} exhausted")
             }
             AlgoError::WouldBeEmpty => write!(f, "cannot remove the last working bucket"),
+            AlgoError::InvalidWeight(w) => write!(f, "invalid node weight {w} (must be >= 1)"),
         }
     }
 }
@@ -188,32 +193,60 @@ pub trait ConsistentHasher: Send + Sync {
     /// distinct working buckets (filled deterministically from the working
     /// set if the draws stall). Use for placement fan-out; NOT stable
     /// across resizes the way the independent slots are.
+    ///
+    /// This is the **single-weight fast path**: with a 1:1 bucket ↔ node
+    /// binding, bucket-distinct *is* node-distinct. Weighted deployments
+    /// (a node owning several buckets) must use
+    /// [`ConsistentHasher::lookup_replicas_distinct_by`] keyed by node —
+    /// two distinct buckets of the same physical node would silently
+    /// destroy replication's fault tolerance.
     fn lookup_replicas_distinct(&self, key: u64, k: usize) -> Vec<u32> {
+        self.lookup_replicas_distinct_by(key, k, &|b| u64::from(b))
+    }
+
+    /// Generalized distinct-replica placement: `k` buckets whose
+    /// `group_of` images are pairwise distinct, drawn from the same
+    /// deterministic draw sequence as
+    /// [`ConsistentHasher::lookup_replicas_distinct`] (identity grouping
+    /// reproduces it exactly) and filled deterministically from the
+    /// working set if the draws stall. The router passes
+    /// `group_of = bucket → node id` so replica sets land on distinct
+    /// *physical nodes* under weighted membership. `k` is clamped to the
+    /// working-bucket count; callers clamp further to their group count
+    /// (the trait cannot know how many distinct groups exist).
+    fn lookup_replicas_distinct_by(
+        &self,
+        key: u64,
+        k: usize,
+        group_of: &dyn Fn(u32) -> u64,
+    ) -> Vec<u32> {
         let k = k.min(self.working());
         let mut out: Vec<u32> = Vec::with_capacity(k);
+        let mut groups: Vec<u64> = Vec::with_capacity(k);
         if k == 0 {
             return out;
         }
-        out.push(self.lookup(key));
+        let push = |b: u32, out: &mut Vec<u32>, groups: &mut Vec<u64>| {
+            let g = group_of(b);
+            if !groups.contains(&g) {
+                groups.push(g);
+                out.push(b);
+            }
+        };
+        push(self.lookup(key), &mut out, &mut groups);
         let mut salt = 0u64;
         let budget = 16 * k as u64 + 64;
         while out.len() < k && salt < budget {
             salt += 1;
-            let b = self.lookup(crate::hashing::mix::mix2(key, salt));
-            if !out.contains(&b) {
-                out.push(b);
-            }
+            push(self.lookup(crate::hashing::mix::mix2(key, salt)), &mut out, &mut groups);
         }
         if out.len() < k {
             let wb = self.working_buckets();
             let start = (crate::hashing::mix::mix2(key, 0xF111) % wb.len() as u64) as usize;
             for i in 0..wb.len() {
-                let b = wb[(start + i) % wb.len()];
-                if !out.contains(&b) {
-                    out.push(b);
-                    if out.len() == k {
-                        break;
-                    }
+                push(wb[(start + i) % wb.len()], &mut out, &mut groups);
+                if out.len() == k {
+                    break;
                 }
             }
         }
@@ -265,6 +298,30 @@ mod tests {
         assert!(AlgoError::CapacityExhausted { capacity: 8 }.to_string().contains('8'));
         assert!(AlgoError::NotWorking(2).to_string().contains('2'));
         assert!(AlgoError::UnknownNode(7).to_string().contains("node-7"));
+        assert!(AlgoError::InvalidWeight(0).to_string().contains("weight 0"));
+    }
+
+    #[test]
+    fn grouped_distinct_replicas_respect_the_grouping() {
+        // 12 buckets in 4 groups of 3 (bucket → bucket/3): the grouped
+        // draw must never return two buckets of one group, and identity
+        // grouping must reproduce lookup_replicas_distinct exactly.
+        let algo = crate::algorithms::Memento::new(12);
+        for k in 0..200u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let set = algo.lookup_replicas_distinct_by(key, 3, &|b| u64::from(b / 3));
+            assert_eq!(set.len(), 3, "4 groups available, 3 requested");
+            let mut groups: Vec<u64> = set.iter().map(|b| u64::from(b / 3)).collect();
+            groups.sort_unstable();
+            groups.dedup();
+            assert_eq!(groups.len(), 3, "duplicate group in {set:?}");
+            assert_eq!(set[0], algo.lookup(key), "slot 0 is always the primary");
+            assert_eq!(
+                algo.lookup_replicas_distinct_by(key, 3, &|b| u64::from(b)),
+                algo.lookup_replicas_distinct(key, 3),
+                "identity grouping is the bucket-distinct fast path"
+            );
+        }
     }
 
     #[test]

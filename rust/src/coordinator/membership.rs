@@ -1,9 +1,25 @@
-//! Cluster membership: node registry, bucket binding, epochs.
+//! Cluster membership: node registry, weighted bucket binding, epochs.
 //!
 //! The consistent-hash algorithms speak *buckets* (dense small integers);
 //! deployments speak *nodes* (names/addresses). `Membership` owns the
 //! binding and versions every change with an epoch so snapshots, batched
 //! engines and the rebalance auditor can reason about "before vs after".
+//!
+//! ## Weighted nodes
+//!
+//! Production clusters are heterogeneous: a 64-core box should absorb
+//! proportionally more keys than a 4-core one. Following the classical
+//! weighted construction (AnchorHash's bucket-vs-node split, weighted
+//! rendezvous), a node of integer weight `w` owns `w` *buckets* — the
+//! algorithms stay unweighted and keep every per-bucket guarantee
+//! (balance, minimal disruption, monotonicity), while the node layer
+//! makes the `bucket → node` binding many-to-one. A node's share of the
+//! keyspace is then `w / Σweights` by per-bucket balance, and resizing a
+//! node is a sequence of ordinary single-bucket membership changes.
+//!
+//! `weight` is the *configured target*; `buckets_of(node).len()` is the
+//! actual bound count, which can fall below the target while individual
+//! buckets are failed (`unbind`) without the whole node being down.
 
 use std::collections::BTreeMap;
 
@@ -17,13 +33,36 @@ impl std::fmt::Display for NodeId {
     }
 }
 
-/// Lifecycle state of a registered node.
+/// Lifecycle state of a registered node. The bucket set lives on
+/// [`NodeInfo::buckets`]; `Down` is equivalent to that set being empty.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NodeState {
-    /// Bound to a bucket and serving.
-    Working { bucket: u32 },
+    /// Bound to at least one bucket and serving.
+    Working,
     /// Known but not currently bound (failed or drained).
     Down,
+}
+
+/// Declarative description of a node joining the cluster.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSpec {
+    /// Display name (`None` defaults to `node-<id>`).
+    pub name: Option<String>,
+    /// Integer weight ≥ 1: how many buckets the node owns.
+    pub weight: u32,
+}
+
+impl NodeSpec {
+    /// An anonymous node of the given weight.
+    pub fn weighted(weight: u32) -> Self {
+        Self { name: None, weight }
+    }
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        Self { name: None, weight: 1 }
+    }
 }
 
 /// Node metadata.
@@ -33,9 +72,42 @@ pub struct NodeInfo {
     pub id: NodeId,
     /// Display name (defaults to `node-<id>`).
     pub name: String,
-    /// Current lifecycle state.
+    /// Configured weight: the target bucket count.
+    pub weight: u32,
+    /// Currently bound buckets, in attachment order (resizes detach the
+    /// most recently attached bucket first).
+    pub buckets: Vec<u32>,
+    /// Current lifecycle state (`Down` ⇔ `buckets.is_empty()`).
     pub state: NodeState,
 }
+
+/// Typed membership-mutation errors (replaces the stringly
+/// `Result<_, String>` returns; the router converts these into
+/// [`crate::algorithms::AlgoError`] / service replies at the call sites).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipError {
+    /// The bucket is already bound to a node.
+    BucketBound(u32),
+    /// The bucket is not currently bound to any node.
+    BucketUnbound(u32),
+    /// The node id is not registered at all.
+    UnknownNode(NodeId),
+    /// A node weight must be ≥ 1.
+    ZeroWeight,
+}
+
+impl std::fmt::Display for MembershipError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MembershipError::BucketBound(b) => write!(f, "bucket {b} already bound"),
+            MembershipError::BucketUnbound(b) => write!(f, "bucket {b} not bound"),
+            MembershipError::UnknownNode(n) => write!(f, "unknown node {n}"),
+            MembershipError::ZeroWeight => write!(f, "node weight must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for MembershipError {}
 
 /// The membership table. Mutations go through the router (which owns the
 /// algorithm state); this structure keeps the node ↔ bucket binding
@@ -52,15 +124,14 @@ pub struct Membership {
 }
 
 impl Membership {
-    /// Create with `n` initial nodes bound to buckets `0..n`.
+    /// Create with `n` initial weight-1 nodes bound to buckets `0..n`.
     pub fn with_initial(n: usize) -> Self {
         let mut m = Self::default();
         for b in 0..n as u32 {
-            let id = m.fresh_id();
-            m.nodes.insert(
-                id,
-                NodeInfo { id, name: format!("{id}"), state: NodeState::Working { bucket: b } },
-            );
+            let id = m.register(NodeSpec::default());
+            let info = m.nodes.get_mut(&id).expect("just registered");
+            info.state = NodeState::Working;
+            info.buckets.push(b);
             m.by_bucket.insert(b, id);
         }
         m
@@ -72,14 +143,30 @@ impl Membership {
         id
     }
 
-    /// Current epoch (bumps on every binding change).
+    /// Current epoch (bumps on every binding or weight change).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
 
-    /// Number of working nodes.
+    /// Number of **working nodes** (distinct physical nodes with at
+    /// least one bound bucket) — under weighting this is no longer the
+    /// bucket count; see [`Membership::bound_buckets`].
     pub fn working_count(&self) -> usize {
+        self.nodes.values().filter(|i| i.state == NodeState::Working).count()
+    }
+
+    /// Number of bound buckets (equals the algorithm's working set size).
+    pub fn bound_buckets(&self) -> usize {
         self.by_bucket.len()
+    }
+
+    /// Sum of configured weights over working nodes.
+    pub fn total_weight(&self) -> u64 {
+        self.nodes
+            .values()
+            .filter(|i| i.state == NodeState::Working)
+            .map(|i| u64::from(i.weight))
+            .sum()
     }
 
     /// Node currently bound to `bucket`.
@@ -87,12 +174,22 @@ impl Membership {
         self.by_bucket.get(&bucket).copied()
     }
 
-    /// Bucket currently bound to `node`.
+    /// The node's *primary* (first-attached) bucket — the single-weight
+    /// compatibility view. Weighted callers use
+    /// [`Membership::buckets_of`].
     pub fn bucket_of(&self, node: NodeId) -> Option<u32> {
-        match self.nodes.get(&node)?.state {
-            NodeState::Working { bucket } => Some(bucket),
-            NodeState::Down => None,
-        }
+        self.nodes.get(&node)?.buckets.first().copied()
+    }
+
+    /// All buckets bound to `node`, in attachment order (empty for down
+    /// or unknown nodes).
+    pub fn buckets_of(&self, node: NodeId) -> &[u32] {
+        self.nodes.get(&node).map_or(&[], |i| &i.buckets)
+    }
+
+    /// Metadata for one node.
+    pub fn node(&self, node: NodeId) -> Option<&NodeInfo> {
+        self.nodes.get(&node)
     }
 
     /// All node infos (registry order).
@@ -100,49 +197,91 @@ impl Membership {
         self.nodes.values()
     }
 
-    /// Register a brand-new node and bind it to `bucket` (from `add()`).
-    pub fn bind_new(&mut self, bucket: u32, name: Option<String>) -> NodeId {
+    /// Register a node with no buckets yet (the caller attaches buckets
+    /// via [`Membership::bind_existing`], one epoch per bucket). Does not
+    /// bump the epoch by itself — an unbound registration changes no
+    /// placement. Callers validate `spec.weight >= 1` beforehand; a zero
+    /// weight is clamped to 1 here rather than panicking.
+    pub fn register(&mut self, spec: NodeSpec) -> NodeId {
         let id = self.fresh_id();
-        let name = name.unwrap_or_else(|| format!("{id}"));
-        self.nodes.insert(id, NodeInfo { id, name, state: NodeState::Working { bucket } });
-        let prev = self.by_bucket.insert(bucket, id);
-        debug_assert!(prev.is_none(), "bucket {bucket} double-bound");
-        self.epoch += 1;
+        let name = spec.name.unwrap_or_else(|| format!("{id}"));
+        let info = NodeInfo {
+            id,
+            name,
+            weight: spec.weight.max(1),
+            buckets: Vec::new(),
+            state: NodeState::Down,
+        };
+        self.nodes.insert(id, info);
         id
     }
 
-    /// Re-bind an existing down node to `bucket` (restore path).
-    pub fn bind_existing(&mut self, node: NodeId, bucket: u32) -> Result<(), String> {
+    /// Register a brand-new weight-1 node and bind it to `bucket`
+    /// (single-weight compatibility path for `add()`).
+    pub fn bind_new(&mut self, bucket: u32, name: Option<String>) -> NodeId {
+        let id = self.register(NodeSpec { name, weight: 1 });
+        self.bind_existing(id, bucket).expect("fresh node, caller-validated bucket");
+        id
+    }
+
+    /// Attach `bucket` to a registered node: the restore path *and* the
+    /// weight-grow path. A down node becomes working on its first
+    /// attached bucket and leaves the restore queue.
+    pub fn bind_existing(&mut self, node: NodeId, bucket: u32) -> Result<(), MembershipError> {
         // Validate everything before mutating (no partial state on error).
         if self.by_bucket.contains_key(&bucket) {
-            return Err(format!("bucket {bucket} already bound"));
+            return Err(MembershipError::BucketBound(bucket));
         }
-        let info = self.nodes.get_mut(&node).ok_or_else(|| format!("unknown node {node}"))?;
-        if info.state != NodeState::Down {
-            return Err(format!("{node} is not down"));
-        }
-        info.state = NodeState::Working { bucket };
+        let info = self.nodes.get_mut(&node).ok_or(MembershipError::UnknownNode(node))?;
+        info.state = NodeState::Working;
+        info.buckets.push(bucket);
         self.by_bucket.insert(bucket, node);
         self.down_order.retain(|n| *n != node);
         self.epoch += 1;
         Ok(())
     }
 
-    /// Mark the node on `bucket` as down and unbind it (failure path).
-    pub fn unbind(&mut self, bucket: u32) -> Result<NodeId, String> {
-        let id = self
-            .by_bucket
-            .remove(&bucket)
-            .ok_or_else(|| format!("bucket {bucket} not bound"))?;
-        self.nodes.get_mut(&id).unwrap().state = NodeState::Down;
-        self.down_order.push(id);
+    /// Detach `bucket` from its node (failure / weight-shrink path). The
+    /// node goes `Down` — and joins the restore queue — only when it
+    /// loses its **last** bucket.
+    pub fn unbind(&mut self, bucket: u32) -> Result<NodeId, MembershipError> {
+        let id = self.by_bucket.remove(&bucket).ok_or(MembershipError::BucketUnbound(bucket))?;
+        let info = self.nodes.get_mut(&id).expect("by_bucket points at a registered node");
+        info.buckets.retain(|b| *b != bucket);
+        if info.buckets.is_empty() {
+            info.state = NodeState::Down;
+            self.down_order.push(id);
+        }
         self.epoch += 1;
         Ok(id)
+    }
+
+    /// Update a node's configured weight (the binding steps that realize
+    /// it are the router's job). Bumps the epoch: snapshots carry the
+    /// weight table, so a weight change must be observable.
+    pub fn set_weight(&mut self, node: NodeId, weight: u32) -> Result<(), MembershipError> {
+        if weight == 0 {
+            return Err(MembershipError::ZeroWeight);
+        }
+        let info = self.nodes.get_mut(&node).ok_or(MembershipError::UnknownNode(node))?;
+        info.weight = weight;
+        self.epoch += 1;
+        Ok(())
     }
 
     /// Down nodes available for restore, most recently failed **last**.
     pub fn down_nodes(&self) -> Vec<NodeId> {
         self.down_order.clone()
+    }
+
+    /// The `(node id, weight)` table over working nodes, ascending by id
+    /// — the wire-format v2 payload ([`crate::algorithms::serde`]).
+    pub fn weight_table(&self) -> Vec<(u64, u32)> {
+        self.nodes
+            .values()
+            .filter(|i| i.state == NodeState::Working)
+            .map(|i| (i.id.0, i.weight))
+            .collect()
     }
 }
 
@@ -154,10 +293,13 @@ mod tests {
     fn initial_binding() {
         let m = Membership::with_initial(4);
         assert_eq!(m.working_count(), 4);
+        assert_eq!(m.bound_buckets(), 4);
+        assert_eq!(m.total_weight(), 4);
         assert_eq!(m.epoch(), 0);
         for b in 0..4 {
             let id = m.node_at(b).unwrap();
             assert_eq!(m.bucket_of(id), Some(b));
+            assert_eq!(m.buckets_of(id), &[b]);
         }
         assert_eq!(m.node_at(4), None);
     }
@@ -170,6 +312,8 @@ mod tests {
         assert_eq!(m.epoch(), 1);
         assert_eq!(m.working_count(), 2);
         assert_eq!(m.bucket_of(victim), None);
+        assert!(m.buckets_of(victim).is_empty());
+        assert_eq!(m.node(victim).unwrap().state, NodeState::Down);
         assert_eq!(m.down_nodes(), vec![victim]);
 
         m.bind_existing(victim, 1).unwrap();
@@ -185,17 +329,60 @@ mod tests {
         assert_eq!(m.node_at(2), Some(id));
         assert_eq!(m.working_count(), 3);
         assert_eq!(m.nodes().count(), 3);
+        assert_eq!(m.node(id).unwrap().name, "extra");
     }
 
     #[test]
-    fn error_paths() {
+    fn weighted_node_owns_a_bucket_set() {
         let mut m = Membership::with_initial(2);
-        assert!(m.unbind(9).is_err());
+        let id = m.register(NodeSpec::weighted(3));
+        assert_eq!(m.node(id).unwrap().state, NodeState::Down);
+        assert!(m.down_nodes().is_empty(), "a fresh registration is not a restore candidate");
+        for b in [2u32, 3, 4] {
+            m.bind_existing(id, b).unwrap();
+        }
+        assert_eq!(m.buckets_of(id), &[2, 3, 4]);
+        assert_eq!(m.bucket_of(id), Some(2), "primary = first attached");
+        assert_eq!(m.working_count(), 3, "nodes, not buckets");
+        assert_eq!(m.bound_buckets(), 5);
+        assert_eq!(m.total_weight(), 5);
+        assert_eq!(m.weight_table(), vec![(0, 1), (1, 1), (2, 3)]);
+        // Losing one bucket keeps the node working…
+        assert_eq!(m.unbind(3).unwrap(), id);
+        assert_eq!(m.node(id).unwrap().state, NodeState::Working);
+        assert_eq!(m.buckets_of(id), &[2, 4]);
+        assert!(m.down_nodes().is_empty());
+        // …losing the last one downs it.
+        m.unbind(2).unwrap();
+        m.unbind(4).unwrap();
+        assert_eq!(m.node(id).unwrap().state, NodeState::Down);
+        assert_eq!(m.down_nodes(), vec![id]);
+    }
+
+    #[test]
+    fn set_weight_updates_the_target() {
+        let mut m = Membership::with_initial(2);
+        let id = m.node_at(0).unwrap();
+        let e0 = m.epoch();
+        m.set_weight(id, 4).unwrap();
+        assert_eq!(m.node(id).unwrap().weight, 4);
+        assert_eq!(m.epoch(), e0 + 1, "weight changes are epoch-visible");
+        assert_eq!(m.set_weight(id, 0), Err(MembershipError::ZeroWeight));
+        assert_eq!(m.set_weight(NodeId(99), 2), Err(MembershipError::UnknownNode(NodeId(99))));
+    }
+
+    #[test]
+    fn error_paths_are_typed() {
+        let mut m = Membership::with_initial(2);
+        assert_eq!(m.unbind(9), Err(MembershipError::BucketUnbound(9)));
         let v = m.node_at(0).unwrap();
         m.unbind(0).unwrap();
-        assert!(m.bind_existing(v, 1).is_err(), "bucket 1 already bound");
-        assert!(m.bind_existing(NodeId(99), 5).is_err(), "unknown node");
+        assert_eq!(m.bind_existing(v, 1), Err(MembershipError::BucketBound(1)));
+        assert_eq!(m.bind_existing(NodeId(99), 5), Err(MembershipError::UnknownNode(NodeId(99))));
         m.bind_existing(v, 0).unwrap();
-        assert!(m.bind_existing(v, 0).is_err(), "not down anymore");
+        // Errors display usable messages (the service forwards them).
+        assert!(MembershipError::BucketBound(1).to_string().contains("bucket 1"));
+        assert!(MembershipError::UnknownNode(NodeId(7)).to_string().contains("node-7"));
+        assert!(MembershipError::ZeroWeight.to_string().contains(">= 1"));
     }
 }

@@ -81,36 +81,52 @@ pub struct MigrationPlan {
     pub epoch: u64,
     /// Drain (removal) or pull (restore/growth).
     pub kind: PlanKind,
-    /// The changed bucket.
-    pub bucket: u32,
-    /// The node that failed (Drain) or was added/restored (Pull).
+    /// The changed buckets (one for single-bucket changes; all of a
+    /// node's buckets for a whole-node failure under weighting).
+    pub buckets: Vec<u32>,
+    /// The node that failed / shrank (Drain) or was added/restored/grown
+    /// (Pull).
     pub node: NodeId,
     /// Source (old bucket, node) pairs the executor will scan — the
-    /// planner's delta, bound to nodes via the old membership.
+    /// planner's delta, bound to nodes via the old membership. Under
+    /// weighting several source buckets can map to one node; the
+    /// executor groups them so each donor node is scanned once.
     pub sources: Vec<(u32, NodeId)>,
     /// Whether the delta fell back to scanning every old working bucket.
     pub full_scan: bool,
+    /// Whether `node` lost **every** bucket it held (whole-node drain):
+    /// only then does its store donate unfiltered — replica copies and
+    /// all. A bucket-level drain (`fail_bucket` / `SETW` shrink) of a
+    /// node that keeps other buckets must move only the removed buckets'
+    /// keys; the node's remaining records stay put.
+    drain_fully: bool,
     old_placement: Placement,
     old_membership: Membership,
 }
 
 impl MigrationPlan {
     /// Build a plan from a planned membership change. `kind` is `Drain`
-    /// when `seed.changed_bucket` was removed, `Pull` when it was added.
+    /// when `seed.changed_buckets` were removed, `Pull` when they were
+    /// added.
     pub fn from_seed(kind: PlanKind, node: NodeId, seed: ChangeSeed) -> Self {
-        let sources = seed
+        let sources: Vec<(u32, NodeId)> = seed
             .delta
             .sources
             .iter()
             .filter_map(|&b| seed.old_membership.node_at(b).map(|n| (b, n)))
             .collect();
+        let node_buckets = seed.old_membership.buckets_of(node);
+        let drain_fully = kind == PlanKind::Drain
+            && !node_buckets.is_empty()
+            && node_buckets.iter().all(|b| seed.changed_buckets.contains(b));
         Self {
             epoch: seed.epoch,
             kind,
-            bucket: seed.changed_bucket,
+            buckets: seed.changed_buckets,
             node,
             sources,
             full_scan: seed.delta.full_scan,
+            drain_fully,
             old_placement: seed.old_placement,
             old_membership: seed.old_membership,
         }
@@ -324,19 +340,29 @@ impl Migrator {
         }
     }
 
-    /// Execute one plan: scan its source nodes (up to `max_inflight` in
-    /// parallel), batch by batch. Returns records moved.
+    /// Execute one plan: scan its source **nodes** (up to `max_inflight`
+    /// in parallel), batch by batch. Source buckets are grouped by their
+    /// owning node first — under weighting one donor can own several
+    /// source buckets, and it must be scanned once with the union filter,
+    /// not once per bucket. Returns records moved.
     fn execute(&self, plan: &MigrationPlan) -> u64 {
         let t0 = Instant::now();
-        let work: Mutex<Vec<(u32, NodeId)>> = Mutex::new(plan.sources.clone());
+        let mut grouped: Vec<(NodeId, Vec<u32>)> = Vec::new();
+        for &(b, n) in &plan.sources {
+            match grouped.iter_mut().find(|(id, _)| *id == n) {
+                Some((_, bs)) => bs.push(b),
+                None => grouped.push((n, vec![b])),
+            }
+        }
+        let workers = grouped.len().min(self.cfg.max_inflight).max(1);
+        let work: Mutex<Vec<(NodeId, Vec<u32>)>> = Mutex::new(grouped);
         let moved = AtomicU64::new(0);
-        let workers = plan.sources.len().min(self.cfg.max_inflight).max(1);
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
                     let src = lock_recover(&work).pop();
-                    let Some((b_src, n_src)) = src else { break };
-                    moved.fetch_add(self.execute_source(plan, b_src, n_src), Ordering::Relaxed);
+                    let Some((n_src, b_srcs)) = src else { break };
+                    moved.fetch_add(self.execute_source(plan, &b_srcs, n_src), Ordering::Relaxed);
                 });
             }
         });
@@ -344,18 +370,19 @@ impl Migrator {
         moved.load(Ordering::Relaxed)
     }
 
-    fn execute_source(&self, plan: &MigrationPlan, b_src: u32, n_src: NodeId) -> u64 {
+    fn execute_source(&self, plan: &MigrationPlan, b_srcs: &[u32], n_src: NodeId) -> u64 {
         let src = self.storage.node(n_src);
-        // The dead node of a drain donates *everything* (its replica
-        // copies die with it); surviving donors give up only keys whose
-        // old primary was this source bucket — replica copies and
-        // unmoved keys stay where they are.
-        let drain_all = plan.kind == PlanKind::Drain && b_src == plan.bucket;
+        // A fully dead node donates *everything* (its replica copies die
+        // with it); surviving donors — including a node that lost only
+        // some of its buckets — give up only keys whose old primary was
+        // one of this donor's source buckets; replica copies and unmoved
+        // keys stay where they are.
+        let drain_all = plan.kind == PlanKind::Drain && n_src == plan.node && plan.drain_fully;
         let mut moved = 0u64;
         for shard in 0..StorageNode::SHARDS {
             let keys = src.shard_keys(shard);
             for chunk in keys.chunks(self.cfg.batch_keys.max(1)) {
-                moved += self.apply_chunk(plan, &src, b_src, n_src, shard, chunk, drain_all);
+                moved += self.apply_chunk(plan, &src, b_srcs, n_src, shard, chunk, drain_all);
             }
         }
         moved
@@ -370,7 +397,7 @@ impl Migrator {
         &self,
         plan: &MigrationPlan,
         src: &StorageNode,
-        b_src: u32,
+        b_srcs: &[u32],
         n_src: NodeId,
         shard: usize,
         chunk: &[u64],
@@ -381,7 +408,7 @@ impl Migrator {
             chunk.to_vec()
         } else {
             let algo = plan.old_placement.algo();
-            chunk.iter().copied().filter(|&k| algo.lookup(k) == b_src).collect()
+            chunk.iter().copied().filter(|&k| b_srcs.contains(&algo.lookup(k))).collect()
         };
         if candidates.is_empty() {
             return 0;
@@ -590,6 +617,75 @@ mod tests {
         assert!(migrator.maybe_active(), "plan queued");
         migrator.run_pending();
         assert!(!migrator.maybe_active(), "idle again");
+    }
+
+    #[test]
+    fn whole_node_drain_empties_a_weighted_node() {
+        let (router, storage, migrator) = setup(6);
+        let node = router.with_view(|_a, m| m.node_at(2)).unwrap();
+        router.set_weight(node, 3).unwrap();
+        load(&router, &storage, 3_000);
+        let held = storage.node(node).len();
+        assert!(held > 800, "a weight-3 node of Σw=8 should hold ~3/8: {held}");
+        let before_total = storage.total_records();
+
+        let (failed, seed) = router.fail_node_planned(node).unwrap();
+        assert_eq!(failed, node);
+        assert_eq!(seed.changed_buckets.len(), 3);
+        let plan = MigrationPlan::from_seed(PlanKind::Drain, node, seed);
+        assert!(plan.sources.iter().all(|(_b, n)| *n == node), "drain sources are the dead node");
+        migrator.enqueue(plan);
+        let moved = migrator.run_pending();
+        assert_eq!(moved as usize, held, "everything the dead node held moves exactly once");
+        assert!(storage.node(node).is_empty());
+        assert_eq!(storage.total_records(), before_total);
+        for i in 0..3_000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(i);
+            let (_b, n) = router.route(key);
+            assert!(storage.node(n).get(key).is_some(), "key {i} missing after node drain");
+        }
+    }
+
+    #[test]
+    fn bucket_level_shrink_leaves_the_nodes_other_records_alone() {
+        let (router, storage, migrator) = setup(8);
+        let node = router.with_view(|_a, m| m.node_at(5)).unwrap();
+        router.set_weight(node, 3).unwrap();
+        load(&router, &storage, 4_000);
+        let primary_bucket = 5u32;
+        // Keys the node serves through its *surviving* bucket must not
+        // move when the weight shrinks back to 1.
+        let keep: Vec<u64> = storage
+            .node(node)
+            .keys()
+            .into_iter()
+            .filter(|&k| router.with_view(|a, _| a.lookup(k)) == primary_bucket)
+            .collect();
+        assert!(!keep.is_empty());
+
+        let (change, seeds) = router.set_weight_planned(node, 1).unwrap();
+        assert_eq!(change.removed.len(), 2);
+        assert_eq!(seeds.len(), 2);
+        for seed in seeds {
+            let plan = MigrationPlan::from_seed(PlanKind::Drain, node, seed);
+            assert!(!plan.drain_fully, "the node keeps bucket 5: no unfiltered drain");
+            migrator.enqueue(plan);
+        }
+        migrator.run_pending();
+        assert_eq!(router.with_view(|_a, m| m.buckets_of(node).to_vec()), vec![primary_bucket]);
+        for &k in &keep {
+            assert!(
+                storage.node(node).get(k).is_some(),
+                "surviving-bucket key {k:#x} was yanked by the shrink"
+            );
+        }
+        // Every key is still at its current primary.
+        for i in 0..4_000u64 {
+            let key = crate::hashing::mix::splitmix64_mix(i);
+            let (_b, n) = router.route(key);
+            assert!(storage.node(n).get(key).is_some(), "key {i} missing after shrink");
+        }
+        assert_eq!(storage.total_records(), 4_000);
     }
 
     #[test]

@@ -18,8 +18,8 @@
 //!             └────────────┘                  └──────────────┘
 //! ```
 //!
-//! * [`membership`] — node registry, bucket ↔ node binding, epochs,
-//!   failure/restore events.
+//! * [`membership`] — node registry, weighted (many-to-one) bucket ↔
+//!   node binding, epochs, failure/restore events.
 //! * [`router`] — placement: the consistent-hash algorithm + membership +
 //!   optional batched engine. Each epoch is one immutable published
 //!   snapshot ([`crate::sync::epoch::EpochPtr`]); the lookup path is
@@ -47,5 +47,5 @@ pub mod router;
 pub mod service;
 pub mod storage;
 
-pub use membership::{Membership, NodeId, NodeState};
-pub use router::{Placement, Router};
+pub use membership::{Membership, MembershipError, NodeId, NodeInfo, NodeSpec, NodeState};
+pub use router::{Placement, Router, SetWeightChange};

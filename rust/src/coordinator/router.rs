@@ -10,7 +10,7 @@
 //! among themselves on a writer mutex the read path never touches, and
 //! they never block readers.
 
-use super::membership::{Membership, NodeId};
+use super::membership::{Membership, NodeId, NodeSpec, NodeState};
 use crate::algorithms::{self, AlgoError, ConsistentHasher, Memento, MoveDelta};
 use crate::error::Result;
 use crate::metrics::RouterMetrics;
@@ -122,8 +122,8 @@ fn build_snapshot(placement: Placement, membership: Membership) -> RouterSnapsho
 /// Everything a migration planner needs about one membership change,
 /// captured atomically with the change under the router's writer lock:
 /// the pre-change placement and binding, the structural moved-key delta
-/// ([`ConsistentHasher::delta_sources`]), the changed bucket and the epoch
-/// the new snapshot was published at.
+/// ([`ConsistentHasher::delta_sources`]), the changed buckets and the
+/// epoch the new snapshot was published at.
 ///
 /// Producing this is O(w) (the delta walk) — independent of how many keys
 /// the cluster stores, which is what keeps the admin path O(1) in data
@@ -133,12 +133,32 @@ pub struct ChangeSeed {
     pub old_placement: Placement,
     /// The bucket ↔ node binding before the change.
     pub old_membership: Membership,
-    /// Old-side source buckets of every key the change moved.
+    /// Old-side source buckets of every key the change moved. For a
+    /// multi-bucket change ([`Router::fail_node`] of a weighted node)
+    /// this is the delta of the whole old → new diff — the union of the
+    /// per-bucket deltas, still structurally tight for Memento.
     pub delta: MoveDelta,
-    /// The bucket that was removed/restored/added.
-    pub changed_bucket: u32,
+    /// The buckets removed/restored/added by this change, in change
+    /// order. Single-bucket changes carry exactly one entry.
+    pub changed_buckets: Vec<u32>,
     /// Epoch of the newly published snapshot.
     pub epoch: u64,
+}
+
+/// Outcome of one [`Router::set_weight`] resize.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SetWeightChange {
+    /// The resized node.
+    pub node: NodeId,
+    /// Weight before the resize.
+    pub old_weight: u32,
+    /// The new configured weight.
+    pub new_weight: u32,
+    /// Buckets attached to the node (grow direction), in change order.
+    pub added: Vec<u32>,
+    /// Buckets detached from the node (shrink direction), in change
+    /// order (most recently attached first).
+    pub removed: Vec<u32>,
 }
 
 /// The shared router handle.
@@ -268,7 +288,35 @@ impl Router {
         (snap.epoch(), buckets.iter().map(|b| snap.membership.node_at(*b)).collect())
     }
 
-    /// Fail the node on `bucket` (random failure / drain).
+    /// One membership step under the (already held) writer lock: clone
+    /// the published state, apply `mutate` (which returns the changed
+    /// buckets), publish, and return the planner seed. Errors abort
+    /// before publication — a failed step changes nothing.
+    fn publish_step(
+        &self,
+        mutate: impl FnOnce(
+            &mut Placement,
+            &mut Membership,
+        ) -> std::result::Result<Vec<u32>, AlgoError>,
+    ) -> std::result::Result<ChangeSeed, AlgoError> {
+        let (old_placement, old_membership) = {
+            let snap = self.published.load();
+            (snap.placement.clone(), snap.membership.clone())
+        };
+        let mut placement = old_placement.clone();
+        let mut membership = old_membership.clone();
+        let changed_buckets = mutate(&mut placement, &mut membership)?;
+        let delta = old_placement.algo().delta_sources(placement.algo());
+        let epoch = membership.epoch();
+        self.published.publish(build_snapshot(placement, membership));
+        self.metrics.epochs.inc();
+        Ok(ChangeSeed { old_placement, old_membership, delta, changed_buckets, epoch })
+    }
+
+    /// Fail the node on `bucket` (random failure / drain). Under
+    /// weighting this detaches **one** bucket; the owning node keeps
+    /// serving through its remaining buckets and goes down only when its
+    /// last bucket fails. [`Router::fail_node`] takes a whole node out.
     pub fn fail_bucket(&self, bucket: u32) -> std::result::Result<NodeId, AlgoError> {
         self.fail_bucket_planned(bucket).map(|(node, _seed)| node)
     }
@@ -283,85 +331,284 @@ impl Router {
         bucket: u32,
     ) -> std::result::Result<(NodeId, ChangeSeed), AlgoError> {
         let _w = crate::sync::lock_recover(&self.writer);
-        let (old_placement, old_membership) = {
-            let snap = self.published.load();
-            (snap.placement.clone(), snap.membership.clone())
-        };
-        let mut placement = old_placement.clone();
-        let mut membership = old_membership.clone();
-        placement.algo_mut().remove(bucket)?;
-        let node = membership.unbind(bucket).expect("membership in sync with algorithm");
-        let delta = old_placement.algo().delta_sources(placement.algo());
-        let epoch = membership.epoch();
-        self.published.publish(build_snapshot(placement, membership));
-        self.metrics.epochs.inc();
-        let seed = ChangeSeed {
-            old_placement,
-            old_membership,
-            delta,
-            changed_bucket: bucket,
-            epoch,
-        };
-        Ok((node, seed))
+        let mut failed = None;
+        let seed = self.publish_step(|placement, membership| {
+            placement.algo_mut().remove(bucket)?;
+            failed = Some(membership.unbind(bucket).expect("membership in sync with algorithm"));
+            Ok(vec![bucket])
+        })?;
+        Ok((failed.expect("publish_step ran the mutation"), seed))
     }
 
-    /// Fail the node with the given id.
+    /// Fail the node with the given id: removes **all** of its buckets.
     pub fn fail_node(&self, node: NodeId) -> std::result::Result<NodeId, AlgoError> {
         self.fail_node_planned(node).map(|(n, _seed)| n)
     }
 
-    /// Like [`Router::fail_node`], returning the planner seed. A node id
-    /// that is not currently bound surfaces as
-    /// [`AlgoError::UnknownNode`] (it may be genuinely unregistered or
-    /// already down — either way there is nothing to fail).
+    /// Like [`Router::fail_node`], returning the planner seed. All of
+    /// the node's buckets are removed in one atomic change (one epoch,
+    /// one snapshot publish); the seed's delta is the old → new diff, so
+    /// its sources are the union across the removed buckets and the
+    /// migration planner stays sound. A node id that is not currently
+    /// bound surfaces as [`AlgoError::UnknownNode`] (it may be genuinely
+    /// unregistered or already down — either way there is nothing to
+    /// fail).
     pub fn fail_node_planned(
         &self,
         node: NodeId,
     ) -> std::result::Result<(NodeId, ChangeSeed), AlgoError> {
-        let bucket = { self.published.load().membership.bucket_of(node) };
-        match bucket {
-            Some(b) => self.fail_bucket_planned(b),
-            None => Err(AlgoError::UnknownNode(node.0)),
+        let _w = crate::sync::lock_recover(&self.writer);
+        let buckets: Vec<u32> = {
+            let snap = self.published.load();
+            // Remove most-recently-attached first so LIFO restores
+            // reattach in the original attachment order.
+            snap.membership.buckets_of(node).iter().rev().copied().collect()
+        };
+        if buckets.is_empty() {
+            return Err(AlgoError::UnknownNode(node.0));
         }
+        let seed = self.publish_step(|placement, membership| {
+            for &b in &buckets {
+                placement.algo_mut().remove(b)?;
+                membership.unbind(b).expect("membership in sync with algorithm");
+            }
+            Ok(buckets.clone())
+        })?;
+        Ok((node, seed))
     }
 
     /// Add capacity: restores the most recently failed node if any
-    /// (Memento Alg. 3 restores its bucket), else registers a new node.
+    /// (Memento Alg. 3 restores its buckets LIFO, so a whole weighted
+    /// node comes back in one call), else registers a new weight-1 node.
+    /// Returns the node's first (re)bound bucket.
     pub fn add_node(&self) -> std::result::Result<(u32, NodeId), AlgoError> {
-        self.add_node_planned().map(|(bn, _seed)| bn)
+        self.add_node_planned().map(|(bn, _seeds)| bn)
     }
 
     /// Like [`Router::add_node`], additionally returning the
-    /// [`ChangeSeed`] a migration planner consumes (see
-    /// [`Router::fail_bucket_planned`] for the atomicity argument).
+    /// [`ChangeSeed`]s a migration planner consumes — one per restored
+    /// bucket, since each bucket step is a normal epoch publish with its
+    /// own structurally tight delta (see [`Router::fail_bucket_planned`]
+    /// for the atomicity argument). Weight-1 nodes produce exactly one
+    /// seed. If a mid-restore step fails (e.g. capacity exhausted), the
+    /// already-published steps stand and their seeds are returned — the
+    /// node is partially restored, below its configured weight.
     pub fn add_node_planned(
         &self,
-    ) -> std::result::Result<((u32, NodeId), ChangeSeed), AlgoError> {
+    ) -> std::result::Result<((u32, NodeId), Vec<ChangeSeed>), AlgoError> {
         let _w = crate::sync::lock_recover(&self.writer);
-        let (old_placement, old_membership) = {
+        let down_last = {
             let snap = self.published.load();
-            (snap.placement.clone(), snap.membership.clone())
+            let m = &snap.membership;
+            m.down_nodes()
+                .last()
+                .map(|&n| (n, m.node(n).map_or(1, |i| i.weight).max(1)))
         };
-        let mut placement = old_placement.clone();
-        let mut membership = old_membership.clone();
-        let bucket = placement.algo_mut().add()?;
-        let down = membership.down_nodes();
-        let node = if let Some(&node) = down.last() {
-            membership
-                .bind_existing(node, bucket)
-                .expect("restore binding consistent");
-            node
+        if let Some((node, weight)) = down_last {
+            let mut seeds = Vec::with_capacity(weight as usize);
+            let mut first = None;
+            for _ in 0..weight {
+                let step = self.publish_step(|placement, membership| {
+                    let b = placement.algo_mut().add()?;
+                    membership.bind_existing(node, b).expect("restore binding consistent");
+                    Ok(vec![b])
+                });
+                match step {
+                    Ok(seed) => {
+                        if first.is_none() {
+                            first = seed.changed_buckets.first().copied();
+                        }
+                        seeds.push(seed);
+                    }
+                    Err(e) if seeds.is_empty() => return Err(e),
+                    Err(_) => break,
+                }
+            }
+            Ok(((first.expect("at least one step succeeded"), node), seeds))
         } else {
-            membership.bind_new(bucket, None)
+            let mut added = None;
+            let seed = self.publish_step(|placement, membership| {
+                let b = placement.algo_mut().add()?;
+                added = Some((b, membership.bind_new(b, None)));
+                Ok(vec![b])
+            })?;
+            Ok((added.expect("publish_step ran the mutation"), vec![seed]))
+        }
+    }
+
+    /// Register a brand-new node of `spec.weight` buckets. Each bucket
+    /// is an ordinary single-bucket membership change with its own epoch
+    /// publish and planner seed, so minimal disruption (Prop. VI.3)
+    /// holds bucket-wise throughout the join. If a mid-join step fails,
+    /// the node stays registered with the buckets acquired so far
+    /// (below its configured weight; `set_weight` can finish the job) —
+    /// unless the *first* step failed, in which case nothing changed.
+    pub fn add_node_weighted(
+        &self,
+        spec: NodeSpec,
+    ) -> std::result::Result<(Vec<u32>, NodeId), AlgoError> {
+        self.add_node_weighted_planned(spec).map(|(bn, _seeds)| bn)
+    }
+
+    /// Like [`Router::add_node_weighted`], returning one planner seed
+    /// per acquired bucket.
+    #[allow(clippy::type_complexity)]
+    pub fn add_node_weighted_planned(
+        &self,
+        spec: NodeSpec,
+    ) -> std::result::Result<((Vec<u32>, NodeId), Vec<ChangeSeed>), AlgoError> {
+        if spec.weight == 0 {
+            return Err(AlgoError::InvalidWeight(0));
+        }
+        let _w = crate::sync::lock_recover(&self.writer);
+        let weight = spec.weight;
+        let mut node = None;
+        let mut buckets = Vec::with_capacity(weight as usize);
+        let mut seeds = Vec::with_capacity(weight as usize);
+        for _ in 0..weight {
+            let spec_step = spec.clone();
+            let step = self.publish_step(|placement, membership| {
+                let b = placement.algo_mut().add()?;
+                let id = match node {
+                    Some(id) => id,
+                    None => {
+                        let id = membership.register(spec_step);
+                        node = Some(id);
+                        id
+                    }
+                };
+                membership.bind_existing(id, b).expect("fresh bucket binds cleanly");
+                Ok(vec![b])
+            });
+            match step {
+                Ok(seed) => {
+                    buckets.extend(seed.changed_buckets.iter().copied());
+                    seeds.push(seed);
+                }
+                Err(e) if seeds.is_empty() => return Err(e),
+                Err(_) => break,
+            }
+        }
+        Ok(((buckets, node.expect("first step registered the node")), seeds))
+    }
+
+    /// Resize a working node to `weight` buckets: grow attaches buckets
+    /// (restores or tail growth), shrink detaches the node's most
+    /// recently attached buckets. Every step is a normal single-bucket
+    /// epoch publish, so each epoch's disruption is the per-bucket bound.
+    pub fn set_weight(
+        &self,
+        node: NodeId,
+        weight: u32,
+    ) -> std::result::Result<SetWeightChange, AlgoError> {
+        self.set_weight_planned(node, weight).map(|(c, _seeds)| c)
+    }
+
+    /// Like [`Router::set_weight`], returning one planner seed per
+    /// bucket step. A resize that changes only the configured weight
+    /// (bucket count already matches) publishes the weight-table update
+    /// but produces no seeds — there is no data to move. On a mid-resize
+    /// step failure the completed steps stand (the node sits between the
+    /// old and new bucket counts, with the new weight recorded).
+    pub fn set_weight_planned(
+        &self,
+        node: NodeId,
+        weight: u32,
+    ) -> std::result::Result<(SetWeightChange, Vec<ChangeSeed>), AlgoError> {
+        if weight == 0 {
+            return Err(AlgoError::InvalidWeight(0));
+        }
+        let _w = crate::sync::lock_recover(&self.writer);
+        let (old_weight, bound) = {
+            let snap = self.published.load();
+            let info = snap
+                .membership
+                .node(node)
+                .filter(|i| i.state == NodeState::Working)
+                .ok_or(AlgoError::UnknownNode(node.0))?;
+            (info.weight, info.buckets.len())
         };
-        let delta = old_placement.algo().delta_sources(placement.algo());
-        let epoch = membership.epoch();
-        self.published.publish(build_snapshot(placement, membership));
-        self.metrics.epochs.inc();
-        Ok((
-            (bucket, node),
-            ChangeSeed { old_placement, old_membership, delta, changed_bucket: bucket, epoch },
-        ))
+        let mut change = SetWeightChange {
+            node,
+            old_weight,
+            new_weight: weight,
+            added: Vec::new(),
+            removed: Vec::new(),
+        };
+        let mut seeds = Vec::new();
+        let mut weight_recorded = false;
+        let target = weight as usize;
+        while bound - change.removed.len() > target {
+            let record = !std::mem::replace(&mut weight_recorded, true);
+            let step = self.publish_step(|placement, membership| {
+                let &b = membership
+                    .buckets_of(node)
+                    .last()
+                    .expect("shrink target keeps >= 1 bucket");
+                placement.algo_mut().remove(b)?;
+                membership.unbind(b).expect("membership in sync with algorithm");
+                if record {
+                    membership.set_weight(node, weight).expect("node exists");
+                }
+                Ok(vec![b])
+            });
+            match step {
+                Ok(seed) => {
+                    change.removed.extend(seed.changed_buckets.iter().copied());
+                    seeds.push(seed);
+                }
+                Err(e) if seeds.is_empty() => return Err(e),
+                Err(_) => return Ok((change, seeds)),
+            }
+        }
+        while bound + change.added.len() < target {
+            let record = !std::mem::replace(&mut weight_recorded, true);
+            let step = self.publish_step(|placement, membership| {
+                let b = placement.algo_mut().add()?;
+                membership.bind_existing(node, b).expect("fresh bucket binds cleanly");
+                if record {
+                    membership.set_weight(node, weight).expect("node exists");
+                }
+                Ok(vec![b])
+            });
+            match step {
+                Ok(seed) => {
+                    change.added.extend(seed.changed_buckets.iter().copied());
+                    seeds.push(seed);
+                }
+                Err(e) if seeds.is_empty() => return Err(e),
+                Err(_) => return Ok((change, seeds)),
+            }
+        }
+        if !weight_recorded && weight != old_weight {
+            // Metadata-only resize: publish the weight table update; no
+            // bucket moved, so no migration seed exists.
+            self.publish_step(|_placement, membership| {
+                membership.set_weight(node, weight).expect("node exists");
+                Ok(Vec::new())
+            })?;
+        }
+        Ok((change, seeds))
+    }
+
+    /// The key's replica placement on `k` **distinct physical nodes**
+    /// under one pinned snapshot. Under weighted membership two distinct
+    /// buckets can belong to one node, so the bucket-distinct draw
+    /// ([`ConsistentHasher::lookup_replicas_distinct`]) is not enough
+    /// for replication — this is the node-aware path the storage /
+    /// replication layer uses for placement fan-out. `k` clamps to the
+    /// working **node** count.
+    pub fn replicas_on_distinct_nodes(&self, key: u64, k: usize) -> Vec<(u32, NodeId)> {
+        let snap = self.published.load();
+        let m = snap.membership();
+        let k = k.min(m.working_count());
+        let buckets = snap.placement.algo().lookup_replicas_distinct_by(key, k, &|b| {
+            m.node_at(b).map_or(u64::MAX, |n| n.0)
+        });
+        buckets
+            .into_iter()
+            .map(|b| (b, m.node_at(b).expect("working bucket bound")))
+            .collect()
     }
 
     /// Run `f` with a consistent read view of (algorithm, membership).
@@ -445,21 +692,133 @@ mod tests {
     fn planned_mutations_capture_the_pre_change_state() {
         let r = Router::new("memento", 10, 100, None).unwrap();
         let (node, seed) = r.fail_bucket_planned(4).unwrap();
-        assert_eq!(seed.changed_bucket, 4);
+        assert_eq!(seed.changed_buckets, vec![4]);
         assert_eq!(seed.epoch, 1);
         assert_eq!(seed.old_membership.node_at(4), Some(node), "old binding retained");
         assert!(seed.old_placement.algo().is_working(4), "old placement predates the kill");
         assert_eq!(seed.delta.sources, vec![4], "memento removal: one source bucket");
         assert!(!seed.delta.full_scan);
 
-        let ((b, restored), seed) = r.add_node_planned().unwrap();
+        let ((b, restored), seeds) = r.add_node_planned().unwrap();
         assert_eq!((b, restored), (4, node));
+        assert_eq!(seeds.len(), 1, "weight-1 restore is a single step");
+        let seed = &seeds[0];
         assert_eq!(seed.epoch, 2);
         assert!(!seed.old_placement.algo().is_working(4));
         assert!(!seed.delta.full_scan, "restore uses the chain, not a full scan");
         for &s in &seed.delta.sources {
             assert!(seed.old_placement.algo().is_working(s), "sources are old-working");
         }
+    }
+
+    #[test]
+    fn weighted_join_resizes_by_bucket_steps() {
+        let r = Router::new("memento", 4, 80, None).unwrap();
+        let ((buckets, node), seeds) = r.add_node_weighted_planned(NodeSpec::weighted(3)).unwrap();
+        assert_eq!(buckets, vec![4, 5, 6], "tail growth: three new buckets");
+        assert_eq!(seeds.len(), 3, "one seed per bucket step");
+        assert_eq!(r.epoch(), 3, "each step is a normal epoch publish");
+        r.with_view(|a, m| {
+            assert_eq!(a.working(), 7);
+            assert_eq!(m.buckets_of(node), &[4, 5, 6]);
+            assert_eq!(m.node(node).unwrap().weight, 3);
+            assert_eq!(m.working_count(), 5, "5 physical nodes");
+        });
+        for (i, s) in seeds.iter().enumerate() {
+            assert_eq!(s.changed_buckets.len(), 1);
+            assert_eq!(s.epoch, 1 + i as u64);
+        }
+        assert!(r.add_node_weighted_planned(NodeSpec::weighted(0)).is_err());
+    }
+
+    #[test]
+    fn set_weight_grows_and_shrinks_one_bucket_at_a_time() {
+        let r = Router::new("memento", 4, 80, None).unwrap();
+        let node = r.with_view(|_a, m| m.node_at(2)).unwrap();
+        let (change, seeds) = r.set_weight_planned(node, 4).unwrap();
+        assert_eq!(change.added.len(), 3);
+        assert!(change.removed.is_empty());
+        assert_eq!((change.old_weight, change.new_weight), (1, 4));
+        assert_eq!(seeds.len(), 3);
+        r.with_view(|a, m| {
+            assert_eq!(m.buckets_of(node).len(), 4);
+            assert_eq!(m.node(node).unwrap().weight, 4);
+            assert_eq!(a.working(), 7);
+        });
+        // Shrink back: detaches the most recently attached buckets.
+        let (change, seeds) = r.set_weight_planned(node, 2).unwrap();
+        assert_eq!(change.removed.len(), 2);
+        assert_eq!(seeds.len(), 2);
+        r.with_view(|a, m| {
+            assert_eq!(m.buckets_of(node).len(), 2);
+            assert_eq!(m.node(node).unwrap().weight, 2);
+            assert_eq!(a.working(), 5);
+        });
+        // No-op resize to the current bucket count: weight table updates,
+        // no data-movement seeds.
+        let epoch_before = r.epoch();
+        let (change, seeds) = r.set_weight_planned(node, 2).unwrap();
+        assert!(change.added.is_empty() && change.removed.is_empty());
+        assert!(seeds.is_empty());
+        assert_eq!(r.epoch(), epoch_before, "same weight: nothing published");
+        // Errors are typed.
+        assert_eq!(r.set_weight(node, 0), Err(AlgoError::InvalidWeight(0)));
+        assert_eq!(r.set_weight(NodeId(99), 2), Err(AlgoError::UnknownNode(99)));
+    }
+
+    #[test]
+    fn fail_node_removes_every_bucket_with_a_union_delta() {
+        let r = Router::new("memento", 6, 120, None).unwrap();
+        let node = r.with_view(|_a, m| m.node_at(1)).unwrap();
+        r.set_weight(node, 3).unwrap();
+        let buckets: Vec<u32> = r.with_view(|_a, m| m.buckets_of(node).to_vec());
+        assert_eq!(buckets.len(), 3);
+        let epoch_before = r.epoch();
+
+        let (failed, seed) = r.fail_node_planned(node).unwrap();
+        assert_eq!(failed, node);
+        // One atomic change (a single snapshot publish, a single seed),
+        // though the epoch counter advances once per unbound bucket.
+        assert_eq!(r.epoch(), epoch_before + 3);
+        assert_eq!(r.metrics.epochs.get(), 3, "set_weight's 2 steps + fail_node's 1 publish");
+        let mut expect = buckets.clone();
+        expect.reverse();
+        assert_eq!(seed.changed_buckets, expect, "most recently attached removed first");
+        assert!(!seed.delta.full_scan, "memento multi-removal stays structural");
+        for b in &buckets {
+            assert!(seed.delta.is_source(*b), "every removed bucket is a source");
+            assert!(!r.with_view(|a, _| a.is_working(*b)));
+        }
+        r.with_view(|_a, m| {
+            assert!(m.buckets_of(node).is_empty());
+            assert_eq!(m.down_nodes(), vec![node]);
+        });
+        // Restore brings the whole node back on its old buckets.
+        let ((first, restored), seeds) = r.add_node_planned().unwrap();
+        assert_eq!(restored, node);
+        assert_eq!(first, buckets[0], "LIFO restore reattaches in attachment order");
+        assert_eq!(seeds.len(), 3, "one seed per restored bucket");
+        assert_eq!(r.with_view(|_a, m| m.buckets_of(node).to_vec()), buckets);
+    }
+
+    #[test]
+    fn replicas_land_on_distinct_physical_nodes_under_weighting() {
+        let r = Router::new("memento", 4, 200, None).unwrap();
+        // Heavily skewed: node 0 owns 8 of 11 buckets.
+        let heavy = r.with_view(|_a, m| m.node_at(0)).unwrap();
+        r.set_weight(heavy, 8).unwrap();
+        for k in 0..500u64 {
+            let key = crate::hashing::mix::splitmix64_mix(k);
+            let set = r.replicas_on_distinct_nodes(key, 3);
+            assert_eq!(set.len(), 3);
+            let nodes: std::collections::HashSet<NodeId> = set.iter().map(|(_b, n)| *n).collect();
+            assert_eq!(nodes.len(), 3, "replicas share a physical node: {set:?}");
+            assert_eq!(set[0].0, r.route(key).0, "slot 0 is the primary");
+            assert_eq!(set, r.replicas_on_distinct_nodes(key, 3), "deterministic");
+        }
+        // k clamps to the physical node count, not the bucket count.
+        let all = r.replicas_on_distinct_nodes(7, 64);
+        assert_eq!(all.len(), 4, "only 4 physical nodes exist");
     }
 
     #[test]

@@ -9,29 +9,43 @@
 //! GET <key>                       → VALUE <node> <value> | MISSING <node>
 //! KILL <bucket>                   → KILLED <node> EPOCH <e> SOURCES <n>
 //! KILLN <node-id|node-name>       → KILLED <node> EPOCH <e> SOURCES <n>
+//!                                    BUCKETS <k>   (all k of the node's
+//!                                    buckets fail together)
 //! ADD                             → ADDED BUCKET <b> NODE <name>
 //!                                    EPOCH <e> SOURCES <n>
+//! ADDW <weight>                   → ADDED NODE <name> WEIGHT <w>
+//!                                    BUCKETS <b…> EPOCH <e> SOURCES <n>
+//! SETW <node> <weight>            → RESIZED <node> WEIGHT <w> ADDED <a>
+//!                                    REMOVED <r> EPOCH <e> SOURCES <n>
+//! NODES                           → NODES <name>:<weight>:<buckets>:
+//!                                    <records>:<gets>:<puts> …
 //! MSTAT                           → MSTAT epoch=… pending=… active=…
 //!                                    idle=… keys_planned=… keys_moved=…
 //!                                    batches_inflight=… migration_ms=…
 //! STATS                           → STATS <metrics one-liner, with
-//!                                    latency p50/p99/p999 percentiles>
+//!                                    latency p50/p99/p999 percentiles
+//!                                    and the node/weight summary>
 //! EPOCH                           → EPOCH <e> WORKING <w>
 //! ```
 //!
-//! `KILL`/`KILLN`/`ADD` are **O(1) in stored keys**: they publish the new
-//! epoch, enqueue a migration plan derived from the placement diff
-//! ([`super::migration`]) and return — data moves on the migrator's
-//! background executor, observable via `MSTAT`. Reads issued while a plan
-//! is in flight fail over to the plan's pre-change placement, so a key
-//! whose new primary hasn't received it yet is still served from where it
-//! physically is.
+//! `KILL`/`KILLN`/`ADD`/`ADDW`/`SETW` are **O(1) in stored keys**: they
+//! publish the new epoch(s), enqueue migration plans derived from the
+//! placement diff ([`super::migration`]) and return — data moves on the
+//! migrator's background executor, observable via `MSTAT`. Reads issued
+//! while a plan is in flight fail over to the plan's pre-change
+//! placement, so a key whose new primary hasn't received it yet is still
+//! served from where it physically is.
+//!
+//! Under weighted membership (`ADDW`/`SETW`, DESIGN.md §10) replica
+//! placement is **node-distinct**: PUT fan-out goes through
+//! [`Router::replicas_on_distinct_nodes`], so two copies never share a
+//! physical node even when that node owns many buckets.
 //!
 //! String keys are digested with xxHash64 at the edge (the paper's
 //! benchmark tool does the same); numeric keys are taken verbatim, so
 //! tests can exercise exact placements.
 
-use super::membership::NodeId;
+use super::membership::{NodeId, NodeSpec};
 use super::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
 use super::rebalancer::Rebalancer;
 use super::router::{ChangeSeed, Router};
@@ -98,15 +112,12 @@ impl Service {
         })
     }
 
-    /// The (bucket, node) placement set for a key under the current epoch:
-    /// the first `replicas` distinct buckets of the key's draw sequence.
+    /// The (bucket, node) placement set for a key under the current
+    /// epoch: the first `replicas` draws landing on **distinct physical
+    /// nodes**. Bucket-distinct is not enough once a node owns several
+    /// buckets — two "distinct" replicas on one box die together.
     fn replica_nodes(&self, key: u64) -> Vec<(u32, super::membership::NodeId)> {
-        self.router.with_view(|a, m| {
-            a.lookup_replicas_distinct(key, self.replicas)
-                .into_iter()
-                .map(|b| (b, m.node_at(b).expect("working bucket bound")))
-                .collect()
-        })
+        self.router.replicas_on_distinct_nodes(key, self.replicas)
     }
 
     /// Failover read candidates, Dynamo-preference-list style: the key's
@@ -119,11 +130,16 @@ impl Service {
         self.router.with_view(|a, m| {
             let budget = 16 * self.replicas as u64 + 64;
             let mut seen = Vec::new();
-            let mut out = Vec::new();
-            let push = |b: u32, seen: &mut Vec<u32>, out: &mut Vec<_>| {
+            let mut out: Vec<super::membership::NodeId> = Vec::new();
+            // Deduplicate by node: under weighting several buckets share
+            // one store, and probing it twice buys nothing.
+            let push = |b: u32, seen: &mut Vec<u32>, out: &mut Vec<super::membership::NodeId>| {
                 if !seen.contains(&b) {
                     seen.push(b);
-                    out.push(m.node_at(b).expect("working bucket bound"));
+                    let n = m.node_at(b).expect("working bucket bound");
+                    if !out.contains(&n) {
+                        out.push(n);
+                    }
                 }
             };
             push(a.lookup(key), &mut seen, &mut out);
@@ -186,16 +202,35 @@ impl Service {
         None
     }
 
-    /// The shared tail of every admin membership change: enqueue the
-    /// migration plan built from the planner seed, audit the epoch, and
-    /// report. O(1) in stored keys — no record is read or moved here.
-    fn enqueue_change(&self, kind: PlanKind, node: NodeId, seed: ChangeSeed) -> (u64, usize) {
-        let bucket = seed.changed_bucket;
-        let epoch = seed.epoch;
-        let plan = MigrationPlan::from_seed(kind, node, seed);
-        let sources = self.migration.enqueue(plan);
-        self.rebalancer.observe_epoch(&self.router, &[bucket]);
+    /// The shared tail of every admin membership change: enqueue one
+    /// migration plan per planner seed (multi-step resizes produce one
+    /// seed per bucket epoch), audit the whole change, and report the
+    /// last epoch plus the total source count. O(1) in stored keys — no
+    /// record is read or moved here.
+    ///
+    /// The rebalance audit runs **once per admin command** with the
+    /// union of the changed buckets: all bucket steps are already
+    /// published when this runs, so a per-step audit would misread step
+    /// N's movement as collateral while holding step 1's changed set.
+    fn enqueue_change(&self, kind: PlanKind, node: NodeId, seeds: Vec<ChangeSeed>) -> (u64, usize) {
+        let mut epoch = self.router.epoch();
+        let mut sources = 0usize;
+        let mut changed: Vec<u32> = Vec::new();
+        for seed in seeds {
+            changed.extend(seed.changed_buckets.iter().copied());
+            epoch = seed.epoch;
+            let plan = MigrationPlan::from_seed(kind, node, seed);
+            sources += self.migration.enqueue(plan);
+        }
+        if !changed.is_empty() {
+            self.rebalancer.observe_epoch(&self.router, &changed);
+        }
         (epoch, sources)
+    }
+
+    /// Parse a `node-5` / `5` token into a [`NodeId`].
+    fn parse_node(token: &str) -> Option<NodeId> {
+        token.trim_start_matches("node-").parse::<u64>().ok().map(NodeId)
     }
 
     /// Digest a key token: decimal u64 passes through, anything else is
@@ -297,7 +332,8 @@ impl Service {
                 let _change = self.migration.begin_change();
                 match self.router.fail_bucket_planned(bucket) {
                     Ok((node, seed)) => {
-                        let (epoch, sources) = self.enqueue_change(PlanKind::Drain, node, seed);
+                        let (epoch, sources) =
+                            self.enqueue_change(PlanKind::Drain, node, vec![seed]);
                         format!("KILLED {node} EPOCH {epoch} SOURCES {sources}")
                     }
                     Err(e) => format!("ERR {e}"),
@@ -305,14 +341,16 @@ impl Service {
             }
             Some("KILLN") => {
                 let Some(tok) = parts.next() else { return "ERR KILLN needs a node id".into() };
-                let Ok(id) = tok.trim_start_matches("node-").parse::<u64>() else {
+                let Some(id) = Self::parse_node(tok) else {
                     return "ERR KILLN needs a node id like 5 or node-5".into();
                 };
                 let _change = self.migration.begin_change();
-                match self.router.fail_node_planned(NodeId(id)) {
+                match self.router.fail_node_planned(id) {
                     Ok((node, seed)) => {
-                        let (epoch, sources) = self.enqueue_change(PlanKind::Drain, node, seed);
-                        format!("KILLED {node} EPOCH {epoch} SOURCES {sources}")
+                        let buckets = seed.changed_buckets.len();
+                        let (epoch, sources) =
+                            self.enqueue_change(PlanKind::Drain, node, vec![seed]);
+                        format!("KILLED {node} EPOCH {epoch} SOURCES {sources} BUCKETS {buckets}")
                     }
                     Err(e) => format!("ERR {e}"),
                 }
@@ -320,15 +358,80 @@ impl Service {
             Some("ADD") => {
                 let _change = self.migration.begin_change();
                 match self.router.add_node_planned() {
-                    Ok(((b, node), seed)) => {
+                    Ok(((b, node), seeds)) => {
                         // Monotone pull: the plan's sources are the donors
                         // the delta derived (for Memento, the
                         // replacement-chain nodes — not a full scan).
-                        let (epoch, sources) = self.enqueue_change(PlanKind::Pull, node, seed);
+                        let (epoch, sources) = self.enqueue_change(PlanKind::Pull, node, seeds);
                         format!("ADDED BUCKET {b} NODE {node} EPOCH {epoch} SOURCES {sources}")
                     }
                     Err(e) => format!("ERR {e}"),
                 }
+            }
+            Some("ADDW") => {
+                let Some(tok) = parts.next() else { return "ERR ADDW needs a weight".into() };
+                let Ok(weight) = tok.parse::<u32>() else {
+                    return "ERR ADDW needs a numeric weight".into();
+                };
+                let _change = self.migration.begin_change();
+                match self.router.add_node_weighted_planned(NodeSpec::weighted(weight)) {
+                    Ok(((buckets, node), seeds)) => {
+                        let (epoch, sources) = self.enqueue_change(PlanKind::Pull, node, seeds);
+                        let list =
+                            buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" ");
+                        format!(
+                            "ADDED NODE {node} WEIGHT {weight} BUCKETS {list} \
+                             EPOCH {epoch} SOURCES {sources}"
+                        )
+                    }
+                    Err(e) => format!("ERR {e}"),
+                }
+            }
+            Some("SETW") => {
+                let (Some(ntok), Some(wtok)) = (parts.next(), parts.next()) else {
+                    return "ERR SETW needs a node id and a weight".into();
+                };
+                let Some(id) = Self::parse_node(ntok) else {
+                    return "ERR SETW needs a node id like 5 or node-5".into();
+                };
+                let Ok(weight) = wtok.parse::<u32>() else {
+                    return "ERR SETW needs a numeric weight".into();
+                };
+                let _change = self.migration.begin_change();
+                match self.router.set_weight_planned(id, weight) {
+                    Ok((change, seeds)) => {
+                        let kind = if change.removed.is_empty() {
+                            PlanKind::Pull
+                        } else {
+                            PlanKind::Drain
+                        };
+                        let (added, removed) = (change.added.len(), change.removed.len());
+                        let (epoch, sources) = self.enqueue_change(kind, id, seeds);
+                        format!(
+                            "RESIZED {id} WEIGHT {weight} ADDED {added} REMOVED {removed} \
+                             EPOCH {epoch} SOURCES {sources}"
+                        )
+                    }
+                    Err(e) => format!("ERR {e}"),
+                }
+            }
+            Some("NODES") => {
+                let infos: Vec<(String, u32, usize, NodeId)> = self.router.with_view(|_a, m| {
+                    m.nodes()
+                        .filter(|i| i.state == super::membership::NodeState::Working)
+                        .map(|i| (i.name.clone(), i.weight, i.buckets.len(), i.id))
+                        .collect()
+                });
+                let mut out = String::from("NODES");
+                for (name, weight, buckets, id) in infos {
+                    let store = self.storage.node(id);
+                    let (gets, puts) = store.op_counts();
+                    out.push_str(&format!(
+                        " {name}:{weight}:{buckets}:{}:{gets}:{puts}",
+                        store.len()
+                    ));
+                }
+                out
             }
             Some("MSTAT") => {
                 let st = self.migration.status();
@@ -357,13 +460,21 @@ impl Service {
                         h.max()
                     )
                 };
+                let (working, down, weight, buckets) = self.router.with_view(|a, m| {
+                    (m.working_count(), m.down_nodes().len(), m.total_weight(), a.working())
+                });
                 format!(
-                    "STATS {} | rebalance: epochs={} relocated={} violations={} | {}",
+                    "STATS {} | rebalance: epochs={} relocated={} violations={} | {} | \
+                     nodes: working={} down={} buckets={} weight={}",
                     self.router.metrics.summary(),
                     reb.epochs_observed,
                     reb.relocated,
                     reb.violations,
-                    lat
+                    lat,
+                    working,
+                    down,
+                    buckets,
+                    weight
                 )
             }
             Some("EPOCH") => {
@@ -572,6 +683,73 @@ mod tests {
         assert!(s.handle("KILL 999").starts_with("ERR"));
         assert!(s.handle("FROB").starts_with("ERR"));
         assert!(s.handle("").starts_with("ERR"));
+        assert!(s.handle("ADDW").starts_with("ERR"));
+        assert!(s.handle("ADDW zero").starts_with("ERR"));
+        assert!(s.handle("ADDW 0").starts_with("ERR"));
+        assert!(s.handle("SETW").starts_with("ERR"));
+        assert!(s.handle("SETW node-0").starts_with("ERR"));
+        assert!(s.handle("SETW node-0 x").starts_with("ERR"));
+        assert_eq!(s.handle("SETW node-99 2"), "ERR unknown node node-99");
+    }
+
+    #[test]
+    fn addw_and_setw_resize_weighted_nodes_through_the_protocol() {
+        let s = service(); // 8 weight-1 nodes
+        for i in 0..400 {
+            s.handle(&format!("PUT wk{i} wv{i}"));
+        }
+        // A weight-3 node joins: three tail buckets, three epoch steps.
+        let resp = s.handle("ADDW 3");
+        assert!(resp.starts_with("ADDED NODE node-8 WEIGHT 3 BUCKETS 8 9 10"), "{resp}");
+        assert!(resp.contains("EPOCH 3"), "three bucket steps: {resp}");
+        assert_eq!(s.handle("EPOCH"), "EPOCH 3 WORKING 11");
+        // Shrink it to weight 1 (two drain steps).
+        let resp = s.handle("SETW node-8 1");
+        assert!(resp.starts_with("RESIZED node-8 WEIGHT 1 ADDED 0 REMOVED 2"), "{resp}");
+        // Grow a founding node.
+        let resp = s.handle("SETW 2 2");
+        assert!(resp.starts_with("RESIZED node-2 WEIGHT 2 ADDED 1 REMOVED 0"), "{resp}");
+        assert!(
+            s.migration.wait_idle(std::time::Duration::from_secs(10)),
+            "resize drains timed out"
+        );
+        // Every record survives the whole resize churn.
+        for i in 0..400 {
+            let r = s.handle(&format!("GET wk{i}"));
+            assert!(r.contains(&format!("wv{i}")), "wk{i}: {r}");
+        }
+        let stats = s.handle("STATS");
+        assert!(stats.contains("violations=0"), "{stats}");
+        assert!(stats.contains("nodes: working=9"), "{stats}");
+        assert!(stats.contains("weight=10"), "7×1 + node-2 at 2 + node-8 at 1: {stats}");
+    }
+
+    #[test]
+    fn nodes_reports_weights_and_observed_load() {
+        let s = service();
+        s.handle("SETW 0 4");
+        for i in 0..600 {
+            s.handle(&format!("PUT nk{i} nv{i}"));
+            s.handle(&format!("GET nk{i}"));
+        }
+        let resp = s.handle("NODES");
+        assert!(resp.starts_with("NODES "), "{resp}");
+        let rows: Vec<&str> = resp["NODES ".len()..].split_whitespace().collect();
+        assert_eq!(rows.len(), 8, "8 working nodes: {resp}");
+        let mut by_name = std::collections::HashMap::new();
+        for row in rows {
+            let f: Vec<&str> = row.split(':').collect();
+            assert_eq!(f.len(), 6, "name:weight:buckets:records:gets:puts — {row}");
+            let weight = f[1].parse::<u32>().unwrap();
+            let buckets = f[2].parse::<usize>().unwrap();
+            let records = f[3].parse::<u64>().unwrap();
+            by_name.insert(f[0].to_string(), (weight, buckets, records));
+        }
+        let (w0, b0, r0) = by_name["node-0"];
+        assert_eq!((w0, b0), (4, 4));
+        let (w1, b1, r1) = by_name["node-1"];
+        assert_eq!((w1, b1), (1, 1));
+        assert!(r0 > r1, "a weight-4 node must hold more records than a weight-1 node: {resp}");
     }
 
     #[test]

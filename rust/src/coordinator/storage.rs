@@ -102,6 +102,16 @@ impl StorageNode {
         self.shards.iter().map(|s| lock_recover(s).len()).collect()
     }
 
+    /// `(gets, puts)` served so far — the observed-load figure the
+    /// weighted-balance reporting (`NODES`, loadgen) compares against a
+    /// node's configured weight share.
+    pub fn op_counts(&self) -> (u64, u64) {
+        (
+            self.gets.load(std::sync::atomic::Ordering::Relaxed),
+            self.puts.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
     /// Store a record only if the key is absent; returns whether it was
     /// stored. The migration executor relocates with this instead of
     /// [`StorageNode::put`]: a concurrent client PUT that already landed
@@ -219,6 +229,7 @@ mod tests {
         assert_eq!(n.delete(2), Some(b"b".to_vec()));
         assert_eq!(n.len(), 1);
         assert_eq!(n.gets.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(n.op_counts(), (2, 2), "2 gets, 2 puts");
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod target;
 pub mod workload;
 
 pub use churn::{ChurnAction, ChurnEvent, ChurnScenario};
-pub use report::{RunReport, WorkerStats};
+pub use report::{NodeLoad, RunReport, WorkerStats};
 pub use target::{Target, TargetFactory};
 pub use workload::{Op, Workload};
 
@@ -210,6 +210,7 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
         None => Vec::new(),
     };
     let elapsed = start.elapsed();
+    let node_loads = sample_node_loads(factory);
 
     Ok(RunReport {
         mode: cfg.mode.name().to_string(),
@@ -228,7 +229,19 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
         corrected: merged.corrected,
         naive: merged.naive,
         churn_events,
+        node_loads,
     })
+}
+
+/// End-of-run per-node load sample via the `NODES` protocol command:
+/// observed load vs configured weight for the report's balance section.
+/// Best-effort — a target that cannot answer yields an empty sample, not
+/// a failed run.
+fn sample_node_loads(factory: &TargetFactory) -> Vec<NodeLoad> {
+    let Ok(mut admin) = factory() else { return Vec::new() };
+    let Ok(resp) = admin.call("NODES") else { return Vec::new() };
+    let Some(rows) = resp.strip_prefix("NODES ") else { return Vec::new() };
+    rows.split_whitespace().filter_map(NodeLoad::parse).collect()
 }
 
 fn worker_loop(
@@ -319,6 +332,41 @@ mod tests {
         assert_eq!(rep.ops, rep.naive.count());
         assert!(rep.acked_puts > 0);
         assert!(rep.throughput() > 0.0);
+        // The end-of-run NODES sample feeds the balance section.
+        assert_eq!(rep.node_loads.len(), 8, "{:?}", rep.node_loads);
+        assert!(rep.node_loads.iter().all(|n| n.weight == 1));
+        assert!(rep.node_loads.iter().map(|n| n.ops()).sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn weighted_cluster_load_follows_the_weights() {
+        let router = Router::new("memento", 8, 160, None).unwrap();
+        let heavy = router.with_view(|_a, m| m.node_at(0)).unwrap();
+        router.set_weight(heavy, 8).unwrap();
+        let svc = Service::new(router);
+        let factory = target::inproc_factory(svc);
+        let cfg = LoadgenConfig {
+            workload: Workload::uniform(5_000, 0.5),
+            threads: 2,
+            duration: Duration::from_millis(250),
+            ..LoadgenConfig::default()
+        };
+        let rep = run(&cfg, &factory).unwrap();
+        let loads = &rep.node_loads;
+        assert_eq!(loads.len(), 8);
+        let total: u64 = loads.iter().map(|n| n.ops()).sum();
+        let heavy_name = heavy.to_string();
+        let heavy_row = loads.iter().find(|n| n.node == heavy_name).unwrap();
+        assert_eq!(heavy_row.weight, 8);
+        assert_eq!(heavy_row.buckets, 8);
+        // Weight 8 of 15 → expect a bit over half the traffic; the gate
+        // is generous (uniform keys, short run).
+        let share = heavy_row.observed_share(total);
+        assert!(
+            (0.35..0.72).contains(&share),
+            "weight-8/15 node served share {share:.3} of {total} ops"
+        );
+        assert!(rep.render().contains("weighted balance: max relative error="));
     }
 
     #[test]

@@ -7,6 +7,80 @@ use crate::benchkit::{self, report::Table};
 use crate::metrics::Histogram;
 use std::time::Duration;
 
+/// One node's end-of-run load sample, parsed from the service's `NODES`
+/// reply (`name:weight:buckets:records:gets:puts`). The interesting
+/// figure for weighted clusters is observed share vs configured weight
+/// share — see [`NodeLoad::observed_share`] / [`RunReport::node_table`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeLoad {
+    /// Node display name.
+    pub node: String,
+    /// Configured weight.
+    pub weight: u32,
+    /// Bound bucket count at sample time.
+    pub buckets: u32,
+    /// Records held at sample time.
+    pub records: u64,
+    /// GETs served.
+    pub gets: u64,
+    /// PUTs served.
+    pub puts: u64,
+}
+
+impl NodeLoad {
+    /// Parse one `name:weight:buckets:records:gets:puts` token.
+    pub fn parse(token: &str) -> Option<NodeLoad> {
+        let mut f = token.split(':');
+        let node = f.next()?.to_string();
+        let mut num = || f.next()?.parse::<u64>().ok();
+        let (weight, buckets, records, gets, puts) = (num()?, num()?, num()?, num()?, num()?);
+        if f.next().is_some() {
+            return None;
+        }
+        Some(NodeLoad {
+            node,
+            weight: weight as u32,
+            buckets: buckets as u32,
+            records,
+            gets,
+            puts,
+        })
+    }
+
+    /// Operations this node served (GET + PUT).
+    pub fn ops(&self) -> u64 {
+        self.gets + self.puts
+    }
+
+    /// This node's share of `total_ops`.
+    pub fn observed_share(&self, total_ops: u64) -> f64 {
+        self.ops() as f64 / total_ops.max(1) as f64
+    }
+}
+
+/// One node's computed balance figures: observed traffic share vs the
+/// weight share it should carry. Produced by `RunReport::balance_rows`.
+#[derive(Debug, Clone, Copy)]
+struct BalanceRow {
+    /// The node's share of all sampled operations.
+    observed: f64,
+    /// `weight / Σweights` — the share the configuration asks for.
+    want: f64,
+}
+
+impl BalanceRow {
+    /// Signed absolute error (`observed - want`).
+    fn err(&self) -> f64 {
+        self.observed - self.want
+    }
+
+    /// Relative error `|observed - want| / want`, guarded against a
+    /// zero weight share.
+    fn rel_err(&self) -> f64 {
+        self.err().abs() / self.want.max(f64::EPSILON)
+    }
+}
+
 /// What one worker thread measured. Merged across threads at the end of a
 /// run via [`Histogram::merge`].
 #[derive(Debug, Default)]
@@ -77,6 +151,10 @@ pub struct RunReport {
     /// (epoch, admin rtt, drain time) and the human log line — see
     /// [`ChurnEvent`].
     pub churn_events: Vec<ChurnEvent>,
+    /// End-of-run per-node load (from the `NODES` protocol command):
+    /// observed load vs configured weight, so weighted runs show balance
+    /// error end to end. Empty when the target did not answer `NODES`.
+    pub node_loads: Vec<NodeLoad>,
 }
 
 impl RunReport {
@@ -134,6 +212,26 @@ impl RunReport {
             q(&self.naive, 0.999),
             benchkit::fmt_ns(self.naive.max() as f64)
         ));
+        if !self.node_loads.is_empty() {
+            out.push_str("per-node load (observed share vs weight share):\n");
+            let mut err_max = 0.0f64;
+            for (n, b) in self.balance_rows() {
+                err_max = err_max.max(b.rel_err());
+                out.push_str(&format!(
+                    "  {:<10} w={:<2} buckets={:<2} records={:<7} ops={:<8} \
+                     share={:.3} want={:.3} err={:+.3}\n",
+                    n.node,
+                    n.weight,
+                    n.buckets,
+                    n.records,
+                    n.ops(),
+                    b.observed,
+                    b.want,
+                    b.err()
+                ));
+            }
+            out.push_str(&format!("weighted balance: max relative error={err_max:.3}\n"));
+        }
         if !self.churn_events.is_empty() {
             out.push_str("churn events:\n");
             for e in &self.churn_events {
@@ -178,6 +276,53 @@ impl RunReport {
                 e.epoch.to_string(),
                 format!("{:.1}", e.admin_rtt_ns as f64 / 1e3),
                 e.drain_ms.map_or("-1".to_string(), |d| format!("{d:.3}")),
+            ]);
+        }
+        Some(t)
+    }
+
+    /// Per-node balance figures (observed share vs weight share), the
+    /// single source both [`RunReport::render`] and
+    /// [`RunReport::node_table`] consume so the definition cannot drift
+    /// between the human and CSV views.
+    fn balance_rows(&self) -> Vec<(&NodeLoad, BalanceRow)> {
+        let total_ops: u64 = self.node_loads.iter().map(|n| n.ops()).sum();
+        let total_weight: u64 = self.node_loads.iter().map(|n| u64::from(n.weight)).sum();
+        self.node_loads
+            .iter()
+            .map(|n| {
+                let observed = n.observed_share(total_ops);
+                let want = f64::from(n.weight) / total_weight.max(1) as f64;
+                (n, BalanceRow { observed, want })
+            })
+            .collect()
+    }
+
+    /// Per-node observed-load vs configured-weight table for the
+    /// `results/` CSV trajectory (`None` when the run collected no node
+    /// loads).
+    pub fn node_table(&self) -> Option<Table> {
+        if self.node_loads.is_empty() {
+            return None;
+        }
+        let mut t = Table::new(
+            "loadgen_nodes",
+            &[
+                "node", "weight", "buckets", "records", "gets", "puts", "observed_share",
+                "weight_share", "balance_err",
+            ],
+        );
+        for (n, b) in self.balance_rows() {
+            t.push_row(vec![
+                n.node.clone(),
+                n.weight.to_string(),
+                n.buckets.to_string(),
+                n.records.to_string(),
+                n.gets.to_string(),
+                n.puts.to_string(),
+                format!("{:.4}", b.observed),
+                format!("{:.4}", b.want),
+                format!("{:+.4}", b.err()),
             ]);
         }
         Some(t)
@@ -317,6 +462,24 @@ mod tests {
                 drain_ms: Some(3.2),
                 line: "[500ms] KILL 3 -> KILLED node-3 EPOCH 1 SOURCES 1".into(),
             }],
+            node_loads: vec![
+                NodeLoad {
+                    node: "node-0".into(),
+                    weight: 3,
+                    buckets: 3,
+                    records: 600,
+                    gets: 450,
+                    puts: 150,
+                },
+                NodeLoad {
+                    node: "node-1".into(),
+                    weight: 1,
+                    buckets: 1,
+                    records: 200,
+                    gets: 150,
+                    puts: 50,
+                },
+            ],
         }
     }
 
@@ -392,5 +555,43 @@ mod tests {
         let r = sample_report().render();
         assert!(r.contains("availability:"), "{r}");
         assert!(r.contains("drain max=3.2ms"), "{r}");
+    }
+
+    #[test]
+    fn node_load_parses_the_wire_token() {
+        let n = NodeLoad::parse("node-7:4:4:1234:900:100").unwrap();
+        assert_eq!(n.node, "node-7");
+        assert_eq!((n.weight, n.buckets), (4, 4));
+        assert_eq!((n.records, n.gets, n.puts), (1234, 900, 100));
+        assert_eq!(n.ops(), 1000);
+        assert!((n.observed_share(2000) - 0.5).abs() < 1e-9);
+        assert!(NodeLoad::parse("node-7:4:4:1234:900").is_none(), "short token");
+        assert!(NodeLoad::parse("node-7:4:4:1234:900:100:9").is_none(), "long token");
+        assert!(NodeLoad::parse("node-7:x:4:1234:900:100").is_none(), "non-numeric");
+    }
+
+    #[test]
+    fn render_and_csv_show_observed_load_vs_weight() {
+        let rep = sample_report();
+        let r = rep.render();
+        // node-0 carries weight 3 of 4 → want 0.75, observed 600/800.
+        assert!(r.contains("per-node load"), "{r}");
+        assert!(r.contains("node-0"), "{r}");
+        assert!(r.contains("want=0.750"), "{r}");
+        assert!(r.contains("weighted balance: max relative error="), "{r}");
+        let t = rep.node_table().expect("two node loads");
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "node-0");
+        assert_eq!(t.rows[0][1], "3");
+        assert_eq!(t.rows[0][6], "0.7500", "600 of 800 ops");
+        assert_eq!(t.rows[0][7], "0.7500", "weight 3 of 4");
+        assert_eq!(t.rows[0][8], "+0.0000");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("node,weight,buckets,records"), "{csv}");
+        // No node loads → no table, no render section.
+        let mut rep = rep;
+        rep.node_loads.clear();
+        assert!(rep.node_table().is_none());
+        assert!(!rep.render().contains("per-node load"));
     }
 }

@@ -261,6 +261,7 @@ fn cmd_loadgen(raw: &[String]) -> i32 {
         .flag("kills", "0", "churn failures to inject (0 = nodes/4)")
         .flag("algo", "memento", "consistent-hash algorithm")
         .flag("nodes", "16", "initial nodes")
+        .flag("weights", "", "comma list of node weights, e.g. 4,1,1,2 (unlisted nodes stay 1)")
         .flag("replicas", "2", "PUT replication factor")
         .flag("target", "inproc", "inproc | tcp (loopback netserver)")
         .flag("preload", "10000", "keys written before the run starts")
@@ -306,6 +307,28 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
 
     let router = Router::new(args.get("algo"), nodes, nodes * 10, None)
         .map_err(|e| e.to_string())?;
+    // Heterogeneous cluster: apply the weight list before traffic starts
+    // (each resize is a normal sequence of epoch-published bucket steps).
+    let weights = args.get("weights");
+    if !weights.is_empty() {
+        for (i, tok) in weights.split(',').enumerate() {
+            // Index against the configured node count, not node_at():
+            // earlier weight growth attaches tail buckets, so node_at(i)
+            // can resolve for i ≥ nodes and silently resize the wrong
+            // node instead of erroring.
+            if i >= nodes {
+                return Err(format!("--weights lists more nodes than --nodes {nodes}"));
+            }
+            let w: u32 = tok
+                .trim()
+                .parse()
+                .map_err(|_| format!("--weights: cannot parse '{tok}'"))?;
+            let node = router
+                .with_view(|_a, m| m.node_at(i as u32))
+                .expect("initial nodes are bound to buckets 0..nodes");
+            router.set_weight(node, w).map_err(|e| format!("--weights node {i}: {e}"))?;
+        }
+    }
     let service = Service::with_replicas(router, replicas);
     let (factory, server) = match args.get("target") {
         "inproc" => (loadgen::target::inproc_factory(service.clone()), None),
@@ -354,6 +377,13 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
             match events.save_csv(&format!("{stem}_events")) {
                 Ok(p) => println!("[saved {}]", p.display()),
                 Err(e) => eprintln!("[events csv save failed: {e}]"),
+            }
+        }
+        // Per-node observed-load vs configured-weight balance.
+        if let Some(nodes) = report.node_table() {
+            match nodes.save_csv(&format!("{stem}_nodes")) {
+                Ok(p) => println!("[saved {}]", p.display()),
+                Err(e) => eprintln!("[nodes csv save failed: {e}]"),
             }
         }
     }

@@ -151,6 +151,54 @@ fn prop_balance_under_removals() {
     }
 }
 
+/// Invariant 4b — weighted balance: under the bucket-set construction
+/// (a node of weight w owns w buckets; DESIGN.md §10), each node's key
+/// share is proportional to its weight. Per-bucket balance (invariant 4)
+/// lifts to per-node balance by summation; this pins the composition for
+/// Memento, Anchor and Dx across random weight vectors.
+#[test]
+fn prop_weighted_balance_share_proportional_to_weight() {
+    let probe = keys(120_000, 0x77);
+    for name in ["memento", "anchor", "dx"] {
+        forall_noshrink(
+            &format!("weighted-balance/{name}"),
+            Config::with_cases(6),
+            |rng| (2 + rng.next_below(6) as usize, rng.next_u64()),
+            |&(nodes, seed)| {
+                let mut rng = Xoshiro256::new(seed);
+                let weights: Vec<usize> =
+                    (0..nodes).map(|_| 1 + rng.next_below(5) as usize).collect();
+                let total: usize = weights.iter().sum();
+                let algo = build(name, total);
+                // bucket → owning node, contiguous weight-sized ranges.
+                let mut owner = Vec::with_capacity(total);
+                for (i, w) in weights.iter().enumerate() {
+                    for _ in 0..*w {
+                        owner.push(i);
+                    }
+                }
+                let mut counts = vec![0usize; nodes];
+                for &k in &probe {
+                    counts[owner[algo.lookup(k) as usize]] += 1;
+                }
+                for i in 0..nodes {
+                    let share = counts[i] as f64 / probe.len() as f64;
+                    let want = weights[i] as f64 / total as f64;
+                    let rel = (share - want).abs() / want;
+                    if rel > 0.10 {
+                        return Err(format!(
+                            "{name}: node {i} (w={} of {total}) share {share:.4}, \
+                             want {want:.4} (rel err {rel:.3})",
+                            weights[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
 /// Invariant 5 — LIFO equivalence: under tail-only churn Memento IS Jump,
 /// with an empty replacement set and Θ(1)-equivalent memory.
 #[test]

@@ -129,8 +129,9 @@ fn planner_delta_matches_observed_movement_across_random_churn() {
     let mut step = 0usize;
     let mut do_step = |restore: bool| {
         let seed = if restore {
-            let ((_b, _n), seed) = router.add_node_planned().unwrap();
-            seed
+            let ((_b, _n), mut seeds) = router.add_node_planned().unwrap();
+            assert_eq!(seeds.len(), 1, "weight-1 restore is one bucket step");
+            seeds.pop().unwrap()
         } else {
             let (_n, seed) = router.fail_bucket_planned(kills[step % kills.len()]).unwrap();
             step += 1;
@@ -148,7 +149,7 @@ fn planner_delta_matches_observed_movement_across_random_churn() {
         // Restores scan exactly the replacement-chain sources.
         if restore {
             let old_memento = seed.old_placement.memento_snapshot().expect("memento placement");
-            let chain = old_memento.restore_sources(seed.changed_bucket).unwrap();
+            let chain = old_memento.restore_sources(seed.changed_buckets[0]).unwrap();
             assert_eq!(delta.sources, chain, "restore delta must equal the chain source set");
             assert!(
                 chain.len() <= old_memento.working(),
@@ -163,6 +164,86 @@ fn planner_delta_matches_observed_movement_across_random_churn() {
     {
         do_step(restore);
     }
+}
+
+/// Weighted churn: every bucket step of `SETW` / `ADDW`, every
+/// whole-node `fail_node` union delta, and every multi-bucket restore
+/// stays sound (planner `delta_coverage` missed == 0) **and** confined —
+/// a resize of one node moves only keys whose old or new bucket belongs
+/// to that resize. Each step's (old, new) pair is reconstructed from
+/// consecutive seeds (step i's "new" state is step i+1's old state; the
+/// last step's is the live router).
+#[test]
+fn weighted_resize_deltas_cover_observed_movement() {
+    use memento::coordinator::membership::NodeSpec;
+    use memento::coordinator::router::ChangeSeed;
+
+    let tracers: Vec<u64> = (0..20_000u64).map(memento::hashing::mix::splitmix64_mix).collect();
+    let router = Router::new("memento", 12, 240, None).unwrap();
+
+    let verify = |router: &Router, seeds: &[ChangeSeed]| {
+        for (i, seed) in seeds.iter().enumerate() {
+            let old = seed.old_placement.algo();
+            let check = |new_algo: &dyn ConsistentHasher| {
+                let rep = audit::delta_coverage(old, new_algo, &seed.delta, &tracers);
+                assert_eq!(rep.missed, 0, "stranded movers in step {i}: {rep:?}");
+                for &k in tracers.iter().take(4_000) {
+                    let (b0, b1) = (old.lookup(k), new_algo.lookup(k));
+                    if b0 != b1 {
+                        assert!(
+                            seed.changed_buckets.contains(&b0)
+                                || seed.changed_buckets.contains(&b1),
+                            "collateral move {b0}->{b1} outside changed {:?}",
+                            seed.changed_buckets
+                        );
+                    }
+                }
+            };
+            match seeds.get(i + 1) {
+                Some(next) => check(next.old_placement.algo()),
+                None => router.with_view(|a, _m| check(a)),
+            }
+        }
+    };
+
+    // Grow a founding node to weight 3 (tail growth, 2 bucket steps).
+    let n3 = router.with_view(|_a, m| m.node_at(3)).unwrap();
+    let (_change, seeds) = router.set_weight_planned(n3, 3).unwrap();
+    assert_eq!(seeds.len(), 2);
+    verify(&router, &seeds);
+
+    // A weight-2 node joins.
+    let ((_buckets, heavy), seeds) =
+        router.add_node_weighted_planned(NodeSpec::weighted(2)).unwrap();
+    assert_eq!(seeds.len(), 2);
+    verify(&router, &seeds);
+
+    // Whole-node failure of the weight-3 node: one atomic change whose
+    // delta is the union across its three buckets.
+    let (_n, seed) = router.fail_node_planned(n3).unwrap();
+    assert_eq!(seed.changed_buckets.len(), 3);
+    assert!(!seed.delta.full_scan, "memento multi-removal stays structural");
+    verify(&router, std::slice::from_ref(&seed));
+
+    // Shrink the joined node back to weight 1: each drain step's delta
+    // is exactly its removed bucket (minimal disruption, Prop. VI.3).
+    let (change, seeds) = router.set_weight_planned(heavy, 1).unwrap();
+    assert_eq!(change.removed.len(), 1);
+    for s in &seeds {
+        assert_eq!(s.delta.sources, s.changed_buckets, "shrink delta = the removed bucket");
+        assert!(!s.delta.full_scan);
+    }
+    verify(&router, &seeds);
+
+    // Restore the failed weight-3 node: three bucket steps, each a tight
+    // replacement-chain pull.
+    let ((_b, restored), seeds) = router.add_node_planned().unwrap();
+    assert_eq!(restored, n3);
+    assert_eq!(seeds.len(), 3, "restore reattaches the node's full weight");
+    for s in &seeds {
+        assert!(!s.delta.full_scan, "restores pull through the chain, not a full scan");
+    }
+    verify(&router, &seeds);
 }
 
 /// Algorithms without a structural delta (here: anchor) migrate through

@@ -39,6 +39,7 @@ def main():
     ap.add_argument("--current", required=True, help="BENCH_router_scaling.json from this run")
     ap.add_argument("--loadgen", help="BENCH_loadgen_smoke.json from this run (optional)")
     ap.add_argument("--migration", help="BENCH_migration.json from this run (optional)")
+    ap.add_argument("--weighted", help="BENCH_weighted.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
@@ -51,6 +52,14 @@ def main():
         threshold = floor / REGRESSION_FACTOR
         ok = measured >= threshold
         checks.append((name, measured, floor, threshold, ok))
+        if not ok:
+            failures.append(name)
+
+    def gate_ceiling(name, measured, ceiling):
+        # Absolute ceiling (no noise factor): correctness-shaped figures
+        # like balance error don't jitter the way throughput does.
+        ok = measured <= ceiling
+        checks.append((name, measured, ceiling, ceiling, ok))
         if not ok:
             failures.append(name)
 
@@ -87,12 +96,33 @@ def main():
             baseline["migration_drain_keys_per_s"],
         )
 
+    if args.weighted:
+        wtd = load(args.weighted)
+        # Weighting is node-layer only: the lookup hot path must not
+        # slow down as skew grows.
+        gate(
+            "weighted lookup ops/s (worst cell)",
+            float(wtd["lookup_ops_s_min"]),
+            baseline["weighted_lookup_ops_s"],
+        )
+        # Balance error vs configured weights is a ceiling, not a floor.
+        gate_ceiling(
+            "weighted balance err (worst cell, ceiling)",
+            float(wtd["balance_err_max"]),
+            baseline["weighted_balance_err_max"],
+        )
+
     width = max(len(c[0]) for c in checks)
+
+    def fmt(v):
+        # Sub-unit figures (balance error) need decimals; throughputs don't.
+        return f"{v:>12.4f}" if abs(v) < 10 else f"{v:>12.0f}"
+
     for name, measured, floor, threshold, ok in checks:
         verdict = "ok" if ok else "REGRESSION"
         print(
-            f"{name:<{width}}  measured {measured:>12.0f}  "
-            f"baseline {floor:>12.0f}  floor(/{REGRESSION_FACTOR:g}) {threshold:>12.0f}  {verdict}"
+            f"{name:<{width}}  measured {fmt(measured)}  "
+            f"baseline {fmt(floor)}  gate {fmt(threshold)}  {verdict}"
         )
 
     scaling = current.get("loadgen_speedup_8v1")
