@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate needs none of these — `cargo build`
 # is dependency-free; `artifacts` is only for the optional PJRT path.
 
-.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke
+.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke crash-drill refresh-baselines
 
 build:
 	cargo build --release
@@ -47,9 +47,26 @@ perf-smoke:
 	cargo bench --bench bench_router_scaling
 	cargo bench --bench bench_migration
 	cargo bench --bench bench_weighted
+	cargo bench --bench bench_wal
 	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
 	  --loadgen BENCH_loadgen_smoke.json --migration BENCH_migration.json \
-	  --weighted BENCH_weighted.json --baseline ci/perf-baseline.json
+	  --weighted BENCH_weighted.json --wal BENCH_wal.json \
+	  --baseline ci/perf-baseline.json
+
+# Mirror of the ci.yml `crash-drill` job: kill the service at each of
+# the four crash sites across 8 fixed seeds, recover, and fail on any
+# acked-write loss or stranded mover. A failing drill prints its seed;
+# reproduce one with:
+#   cargo run --release -- crashdrill --site <site> --seed <seed>
+crash-drill:
+	cargo run --release -- crashdrill --seeds 8
+
+# Install measured perf-smoke figures over the committed PROJECTED
+# references: download the `perf-smoke` workflow artifact first, e.g.
+#   gh run download --name perf-smoke --dir /tmp/perf-smoke
+#   make refresh-baselines ARTIFACT_DIR=/tmp/perf-smoke
+refresh-baselines:
+	python3 scripts/refresh_baselines.py $(ARTIFACT_DIR) --ratchet
 
 # AOT-compile the PJRT kernel variants (requires the python/JAX toolchain;
 # see python/compile/aot.py and DESIGN.md §5).

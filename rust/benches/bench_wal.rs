@@ -1,0 +1,153 @@
+//! WAL group-commit smoke bench — the measurement behind the CI
+//! perf-smoke gate's `BENCH_wal.json` (DESIGN.md §11.2).
+//!
+//! One durable 16-shard `StorageNode`, one single-threaded writer, one
+//! cell per fsync policy: `always` (fsync before every ack — the
+//! durability ceiling the crash drills rely on), `batch(8|64|512)`
+//! (group commit: one fsync amortized over N appends) and `osonly`
+//! (no explicit fsync — the page-cache throughput bound). The spread
+//! between `always` and the batch cells is the group-commit win; the
+//! gap to `osonly` is what fsync latency still costs.
+//!
+//! Emits `results/wal.csv` plus `BENCH_wal.json` (override the JSON
+//! path with `MEMENTO_WAL_JSON`; record count with
+//! `MEMENTO_WAL_RECORDS`). CI gates the `batch64` and `osonly` cells
+//! against `ci/perf-baseline.json` — `always` is reported but not
+//! gated: its figure is the runner's raw fsync latency, which varies
+//! by an order of magnitude across shared-runner disks.
+
+use memento::benchkit::report::Table;
+use memento::coordinator::storage::StorageNode;
+use memento::coordinator::wal::{FsyncPolicy, WalOptions};
+use memento::hashing::mix::splitmix64_mix;
+use memento::metrics::WalMetrics;
+use std::sync::Arc;
+use std::time::Instant;
+
+const VALUE_BYTES: usize = 64;
+
+struct Cell {
+    policy: &'static str,
+    records: u64,
+    ms: f64,
+    puts_per_s: f64,
+    fsyncs: u64,
+    group_commits: u64,
+}
+
+fn run_cell(policy: FsyncPolicy, label: &'static str, records: u64) -> Cell {
+    let dir = std::env::temp_dir()
+        .join(format!("memento-bench-wal-{}-{label}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let metrics = Arc::new(WalMetrics::new());
+    let (node, _stats) = StorageNode::durable(
+        &dir,
+        WalOptions { fsync: policy, compact_bytes: 0 },
+        metrics.clone(),
+    )
+    .expect("open durable node");
+    let value = vec![0x5A_u8; VALUE_BYTES];
+    let t0 = Instant::now();
+    for i in 0..records {
+        node.put(splitmix64_mix(i), value.clone());
+    }
+    // The batch/osonly tails pay their deferred fsyncs inside the timed
+    // window, so every cell ends with the same on-disk guarantee.
+    node.sync();
+    let elapsed = t0.elapsed();
+    assert_eq!(node.len() as u64, records, "every put must land");
+    drop(node);
+    let _ = std::fs::remove_dir_all(&dir);
+    Cell {
+        policy: label,
+        records,
+        ms: elapsed.as_secs_f64() * 1e3,
+        puts_per_s: records as f64 / elapsed.as_secs_f64().max(1e-9),
+        fsyncs: metrics.fsyncs.get(),
+        group_commits: metrics.group_commits.get(),
+    }
+}
+
+fn main() {
+    let records: u64 = std::env::var("MEMENTO_WAL_RECORDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8_000);
+    println!(
+        "wal smoke: {records} puts of {VALUE_BYTES} B over {} shards, one writer\n",
+        StorageNode::SHARDS
+    );
+
+    let cells: Vec<Cell> = [
+        (FsyncPolicy::Always, "always"),
+        (FsyncPolicy::Batch(8), "batch8"),
+        (FsyncPolicy::Batch(64), "batch64"),
+        (FsyncPolicy::Batch(512), "batch512"),
+        (FsyncPolicy::OsOnly, "osonly"),
+    ]
+    .into_iter()
+    .map(|(p, label)| run_cell(p, label, records))
+    .collect();
+
+    let mut table = Table::new(
+        "wal",
+        &["policy", "records", "ms", "puts_per_s", "fsyncs", "group_commits"],
+    );
+    for c in &cells {
+        table.push_row(vec![
+            c.policy.to_string(),
+            c.records.to_string(),
+            format!("{:.3}", c.ms),
+            format!("{:.0}", c.puts_per_s),
+            c.fsyncs.to_string(),
+            c.group_commits.to_string(),
+        ]);
+    }
+    table.emit("wal");
+
+    let by = |label: &str| {
+        cells.iter().find(|c| c.policy == label).expect("cell")
+    };
+    let always = by("always");
+    let batch64 = by("batch64");
+    let osonly = by("osonly");
+    let speedup = batch64.puts_per_s / always.puts_per_s.max(1e-9);
+    println!(
+        "group-commit speedup batch64 vs always: {speedup:.1}x \
+         ({:.0} -> {:.0} puts/s; {} -> {} fsyncs)",
+        always.puts_per_s, batch64.puts_per_s, always.fsyncs, batch64.fsyncs
+    );
+
+    let cell_rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"policy\": \"{}\", \"records\": {}, \"ms\": {:.3}, \
+                 \"puts_per_s\": {:.1}, \"fsyncs\": {}, \"group_commits\": {}}}",
+                c.policy, c.records, c.ms, c.puts_per_s, c.fsyncs, c.group_commits
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"wal\",\n  \"shards\": {},\n  \"records\": {records},\n  \
+         \"value_bytes\": {VALUE_BYTES},\n  \"cells\": [\n    {}\n  ],\n  \
+         \"wal_batch_puts_per_s\": {:.1},\n  \"wal_osonly_puts_per_s\": {:.1},\n  \
+         \"wal_group_commit_speedup\": {speedup:.2}\n}}\n",
+        StorageNode::SHARDS,
+        cell_rows.join(",\n    "),
+        batch64.puts_per_s,
+        osonly.puts_per_s
+    );
+    // Like the other perf-smoke benches: the committed reference and the
+    // CI gate live at the workspace root, and a failed write must fail
+    // the bench so a stale reference can never pass the gate silently.
+    let path = std::env::var("MEMENTO_WAL_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_wal.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

@@ -283,6 +283,57 @@ impl Membership {
             .map(|i| (i.id.0, i.weight))
             .collect()
     }
+
+    /// The next node id [`Membership::register`] would hand out. Part of
+    /// the durable state: recovery must not reuse ids of nodes that ever
+    /// existed, or a restored cluster could alias old storage directories.
+    pub fn next_node_id(&self) -> u64 {
+        self.next_node
+    }
+
+    /// Rebuild a membership table from its durable parts (the
+    /// [`crate::coordinator::wal`] epoch record). `by_bucket` is derived
+    /// from each node's bucket list; internal consistency is re-validated
+    /// rather than trusted:
+    ///
+    /// * a bucket bound to two nodes → [`MembershipError::BucketBound`]
+    /// * a down-queue entry naming an unknown or working node →
+    ///   [`MembershipError::UnknownNode`]
+    /// * a zero weight → [`MembershipError::ZeroWeight`]
+    ///
+    /// `state` is re-derived from the bucket set (the one invariant the
+    /// wire format cannot express two ways), so a decoded record can
+    /// never import a `Working` node with no buckets.
+    pub fn from_parts(
+        infos: Vec<NodeInfo>,
+        down_order: Vec<NodeId>,
+        next_node: u64,
+        epoch: u64,
+    ) -> Result<Self, MembershipError> {
+        let mut m = Self { next_node, epoch, ..Self::default() };
+        for mut info in infos {
+            if info.weight == 0 {
+                return Err(MembershipError::ZeroWeight);
+            }
+            info.state = if info.buckets.is_empty() { NodeState::Down } else { NodeState::Working };
+            for &b in &info.buckets {
+                if m.by_bucket.insert(b, info.id).is_some() {
+                    return Err(MembershipError::BucketBound(b));
+                }
+            }
+            let id = info.id;
+            if m.nodes.insert(id, info).is_some() {
+                return Err(MembershipError::UnknownNode(id)); // duplicate id
+            }
+        }
+        for id in down_order {
+            match m.nodes.get(&id) {
+                Some(info) if info.state == NodeState::Down => m.down_order.push(id),
+                _ => return Err(MembershipError::UnknownNode(id)),
+            }
+        }
+        Ok(m)
+    }
 }
 
 #[cfg(test)]
@@ -369,6 +420,42 @@ mod tests {
         assert_eq!(m.epoch(), e0 + 1, "weight changes are epoch-visible");
         assert_eq!(m.set_weight(id, 0), Err(MembershipError::ZeroWeight));
         assert_eq!(m.set_weight(NodeId(99), 2), Err(MembershipError::UnknownNode(NodeId(99))));
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_validates() {
+        let mut m = Membership::with_initial(3);
+        let heavy = m.register(NodeSpec::weighted(2));
+        m.bind_existing(heavy, 3).unwrap();
+        m.bind_existing(heavy, 4).unwrap();
+        m.unbind(1).unwrap(); // node 1 goes down, joins the restore queue
+
+        let infos: Vec<NodeInfo> = m.nodes().cloned().collect();
+        let m2 =
+            Membership::from_parts(infos.clone(), m.down_nodes(), m.next_node_id(), m.epoch())
+                .unwrap();
+        assert_eq!(m2.epoch(), m.epoch());
+        assert_eq!(m2.next_node_id(), m.next_node_id());
+        assert_eq!(m2.down_nodes(), m.down_nodes());
+        assert_eq!(m2.weight_table(), m.weight_table());
+        for b in [0u32, 2, 3, 4] {
+            assert_eq!(m2.node_at(b), m.node_at(b));
+        }
+        assert_eq!(m2.node_at(1), None);
+        assert_eq!(m2.node(NodeId(1)).unwrap().state, NodeState::Down);
+
+        // A doubly-bound bucket is rejected.
+        let mut dup = infos.clone();
+        dup[0].buckets = vec![3];
+        assert!(matches!(
+            Membership::from_parts(dup, vec![], 10, 0),
+            Err(MembershipError::BucketBound(3))
+        ));
+        // A down-queue entry pointing at a working node is rejected.
+        assert!(matches!(
+            Membership::from_parts(infos, vec![NodeId(0)], 10, 0),
+            Err(MembershipError::UnknownNode(NodeId(0)))
+        ));
     }
 
     #[test]

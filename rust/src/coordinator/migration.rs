@@ -37,10 +37,12 @@
 //! `keys_planned` / `keys_moved` / `batches_inflight` / `migration_ns`
 //! counters on [`crate::metrics::RouterMetrics`].
 
-use super::membership::{Membership, NodeId};
+use super::membership::NodeId;
 use super::router::{ChangeSeed, Placement, Router};
 use super::storage::{StorageCluster, StorageNode};
+use super::wal::CoordinatorWal;
 use crate::sync::lock_recover;
+use crate::testkit::crashdrill;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
@@ -99,9 +101,16 @@ pub struct MigrationPlan {
     /// all. A bucket-level drain (`fail_bucket` / `SETW` shrink) of a
     /// node that keeps other buckets must move only the removed buckets'
     /// keys; the node's remaining records stay put.
-    drain_fully: bool,
-    old_placement: Placement,
-    old_membership: Membership,
+    ///
+    /// `pub(crate)` (with the two fields below) so the WAL layer can
+    /// rebuild a plan literally from its logged record.
+    pub(crate) drain_fully: bool,
+    pub(crate) old_placement: Placement,
+    /// The pre-change bucket → node binding, sorted by bucket. A plan
+    /// carries the *binding* rather than the whole old [`super::membership::Membership`]:
+    /// it is all the failover path needs, and it has an obvious wire
+    /// format for the plan's WAL record.
+    pub(crate) old_binding: Vec<(u32, NodeId)>,
 }
 
 impl MigrationPlan {
@@ -119,6 +128,12 @@ impl MigrationPlan {
         let drain_fully = kind == PlanKind::Drain
             && !node_buckets.is_empty()
             && node_buckets.iter().all(|b| seed.changed_buckets.contains(b));
+        let mut old_binding: Vec<(u32, NodeId)> = seed
+            .old_membership
+            .nodes()
+            .flat_map(|i| i.buckets.iter().map(move |&b| (b, i.id)))
+            .collect();
+        old_binding.sort_unstable_by_key(|&(b, _)| b);
         Self {
             epoch: seed.epoch,
             kind,
@@ -128,13 +143,17 @@ impl MigrationPlan {
             full_scan: seed.delta.full_scan,
             drain_fully,
             old_placement: seed.old_placement,
-            old_membership: seed.old_membership,
+            old_binding,
         }
     }
 
     /// Where `key` lived under this plan's pre-change placement.
     fn stale_location(&self, key: u64) -> Option<NodeId> {
-        self.old_membership.node_at(self.old_placement.algo().lookup(key))
+        let bucket = self.old_placement.algo().lookup(key);
+        self.old_binding
+            .binary_search_by_key(&bucket, |&(b, _)| b)
+            .ok()
+            .map(|i| self.old_binding[i].1)
     }
 }
 
@@ -168,6 +187,8 @@ pub struct Migrator {
     /// Plans enqueued and not yet finished (lock-free mirror of the
     /// queue's size for [`Migrator::maybe_active`]).
     queued: AtomicU64,
+    /// Control log for plan begin/end records (durable services only).
+    wal: Option<Arc<CoordinatorWal>>,
 }
 
 /// RAII marker for one admin membership change: taken *before* the router
@@ -195,6 +216,20 @@ impl Migrator {
         storage: Arc<StorageCluster>,
         cfg: MigrationConfig,
     ) -> Arc<Self> {
+        Self::spawn_with_wal(router, storage, cfg, None)
+    }
+
+    /// [`Migrator::spawn`] with a control log: every enqueue writes a
+    /// `PlanBegin` record before the plan becomes visible and every
+    /// completion writes `PlanEnd`, so a crash mid-plan is recoverable
+    /// (the pending records replay through
+    /// [`Migrator::enqueue_recovered`]).
+    pub fn spawn_with_wal(
+        router: Arc<Router>,
+        storage: Arc<StorageCluster>,
+        cfg: MigrationConfig,
+        wal: Option<Arc<CoordinatorWal>>,
+    ) -> Arc<Self> {
         let auto = cfg.auto;
         let m = Arc::new(Self {
             router,
@@ -205,6 +240,7 @@ impl Migrator {
             idle: Condvar::new(),
             inflight: AtomicU64::new(0),
             queued: AtomicU64::new(0),
+            wal,
         });
         if auto {
             let weak = Arc::downgrade(&m);
@@ -234,8 +270,26 @@ impl Migrator {
     }
 
     /// Enqueue a plan; returns its number of source nodes. O(1) beyond
-    /// the plan itself — no key is touched here.
+    /// the plan itself — no key is touched here. On a durable service
+    /// the plan's `PlanBegin` record is fsynced *before* the plan
+    /// becomes visible: once any effect of the plan can be observed, a
+    /// crash replays it.
     pub fn enqueue(&self, plan: MigrationPlan) -> usize {
+        if let Some(w) = &self.wal {
+            w.log_plan_begin(&plan);
+        }
+        self.enqueue_inner(plan)
+    }
+
+    /// Enqueue a plan recovered from the control log: identical to
+    /// [`Migrator::enqueue`] except the `PlanBegin` record is *not*
+    /// rewritten — it is already on disk (and re-logging it would turn
+    /// a crash loop into unbounded log growth).
+    pub fn enqueue_recovered(&self, plan: MigrationPlan) -> usize {
+        self.enqueue_inner(plan)
+    }
+
+    fn enqueue_inner(&self, plan: MigrationPlan) -> usize {
         let sources = plan.sources.len();
         self.router.metrics.plans_enqueued.inc();
         self.queued.fetch_add(1, Ordering::Relaxed);
@@ -310,6 +364,13 @@ impl Migrator {
     }
 
     fn finish_plan(&self, plan: &Arc<MigrationPlan>) {
+        // End-record first: if we crash right here the plan replays in
+        // full, which is safe (put_if_absent installs, delta-filtered
+        // extraction) — whereas marking it done before the last batch
+        // landed could strand keys.
+        if let Some(w) = &self.wal {
+            w.log_plan_end(plan.epoch);
+        }
         let mut q = lock_recover(&self.q);
         q.active.retain(|p| !Arc::ptr_eq(p, plan));
         self.queued.fetch_sub(1, Ordering::Relaxed);
@@ -413,6 +474,7 @@ impl Migrator {
         if candidates.is_empty() {
             return 0;
         }
+        crashdrill::hit(crashdrill::MIGRATION_BATCH);
         metrics.batches_inflight.inc();
         // Current-epoch targets in one batched dispatch. Bucket → node
         // resolution is re-pinned, so an epoch published between the two
@@ -465,6 +527,9 @@ impl Migrator {
                 self.storage.node(dst).put_if_absent(k, v);
             }
         }
+        // The widest crash window the copy-install-remove invariant must
+        // cover: copies are installed but the source still holds them.
+        crashdrill::hit(crashdrill::MIGRATION_INSTALL);
         let removed = src.extract_shard_if(shard, targets.len(), |k| targets.contains_key(&k));
         let moved = removed.len() as u64;
         metrics.keys_moved.add(moved);
@@ -686,6 +751,63 @@ mod tests {
             assert!(storage.node(n).get(key).is_some(), "key {i} missing after shrink");
         }
         assert_eq!(storage.total_records(), 4_000);
+    }
+
+    #[test]
+    fn durable_migrator_replays_a_logged_plan_across_a_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("memento-migration-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let metrics = Arc::new(crate::metrics::WalMetrics::new());
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let storage = Arc::new(StorageCluster::new());
+        load(&router, &storage, 2_000);
+        let victim = router.with_view(|_a, m| m.node_at(3)).unwrap();
+        let held = storage.node(victim).len();
+
+        // "First process": log the plan's begin record, then vanish
+        // without executing — the crash window recovery must cover.
+        {
+            let (wal, state) = CoordinatorWal::open(&dir, metrics.clone()).unwrap();
+            assert!(state.pending.is_empty());
+            let m1 = Migrator::spawn_with_wal(
+                router.clone(),
+                storage.clone(),
+                MigrationConfig { auto: false, ..MigrationConfig::default() },
+                Some(Arc::new(wal)),
+            );
+            let (node, seed) = router.fail_bucket_planned(3).unwrap();
+            m1.enqueue(MigrationPlan::from_seed(PlanKind::Drain, node, seed));
+            assert_eq!(metrics.plans_logged.get(), 1);
+        }
+        assert_eq!(storage.node(victim).len(), held, "nothing executed yet");
+
+        // "Second process": the pending record rebuilds the same plan.
+        let metrics2 = Arc::new(crate::metrics::WalMetrics::new());
+        {
+            let (wal, state) = CoordinatorWal::open(&dir, metrics2.clone()).unwrap();
+            assert_eq!(state.pending.len(), 1);
+            let rec = &state.pending[0];
+            assert_eq!(rec.node, victim);
+            let plan = rec.to_plan();
+            let m2 = Migrator::spawn_with_wal(
+                router.clone(),
+                storage.clone(),
+                MigrationConfig { auto: false, ..MigrationConfig::default() },
+                Some(Arc::new(wal)),
+            );
+            m2.enqueue_recovered(plan);
+            assert_eq!(metrics2.plans_logged.get(), 0, "recovered plans are not re-logged");
+            let moved = m2.run_pending();
+            assert_eq!(moved as usize, held);
+        }
+        assert!(storage.node(victim).is_empty());
+
+        // "Third process": the end record retired the plan.
+        let (_wal, state) = CoordinatorWal::open(&dir, Arc::new(crate::metrics::WalMetrics::new()))
+            .unwrap();
+        assert!(state.pending.is_empty(), "PlanEnd must retire the record");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

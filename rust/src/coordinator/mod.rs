@@ -37,6 +37,10 @@
 //!   lock-sharded by key hash so concurrent traffic contends per shard.
 //! * [`service`] — the TCP line-protocol front-end (`LOOKUP`/`PUT`/`GET`/
 //!   `KILL`/`RESTORE`/`STATS`).
+//! * [`wal`] — the durability layer: per-shard write-ahead logs with
+//!   group commit, compacted snapshots, a coordinator control log, and
+//!   crash recovery that replays half-finished migrations (DESIGN.md
+//!   §11).
 
 pub mod batcher;
 pub mod membership;
@@ -46,6 +50,7 @@ pub mod replica;
 pub mod router;
 pub mod service;
 pub mod storage;
+pub mod wal;
 
 pub use membership::{Membership, MembershipError, NodeId, NodeInfo, NodeSpec, NodeState};
 pub use router::{Placement, Router, SetWeightChange};

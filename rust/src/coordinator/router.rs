@@ -192,6 +192,35 @@ impl Router {
         }))
     }
 
+    /// Rebuild a router from recovered state (the durability layer's
+    /// epoch record): an already-populated placement + membership pair,
+    /// published as the initial snapshot. The pair must be internally
+    /// consistent — every working bucket bound, every bound bucket
+    /// working; [`crate::coordinator::wal`] validates this before calling.
+    pub fn from_recovered(
+        placement: Placement,
+        membership: Membership,
+        engine: Option<EngineHandle>,
+    ) -> Arc<Self> {
+        let snapshot = build_snapshot(placement, membership);
+        Arc::new(Self {
+            published: EpochPtr::new(snapshot),
+            engine,
+            writer: Mutex::new(()),
+            metrics: RouterMetrics::new(),
+        })
+    }
+
+    /// The durable view of the current snapshot — `(memento, membership)`
+    /// observed under one pin — or `None` when the placement is not
+    /// Memento (only the concrete algorithm has a wire format; durability
+    /// is a Memento-only feature, rejected at service construction for
+    /// other algorithms).
+    pub fn durable_state(&self) -> Option<(Memento, Membership)> {
+        let snap = self.published.load();
+        snap.placement.memento_snapshot().map(|m| (m, snap.membership.clone()))
+    }
+
     /// Pin the current snapshot: epoch, placement, membership and engine
     /// table, all observed at one instant. Wait-free. Keep the guard
     /// short-lived — do not block or mutate the router while holding it

@@ -26,6 +26,15 @@
 //!                                    latency p50/p99/p999 percentiles
 //!                                    and the node/weight summary>
 //! EPOCH                           → EPOCH <e> WORKING <w>
+//! FSYNC                           → SYNCED files=<n>   (flush every
+//!                                    unsynced WAL file; durable mode)
+//! WALSTAT                         → WALSTAT durable=<bool> <wal
+//!                                    counters one-liner>
+//! COMPACT                         → COMPACTED nodes=<n>  (snapshot every
+//!                                    node's shards, truncate the logs)
+//! RECOVER                         → RECOVERED epoch=… wal_records=… …
+//!                                    (what recovery replayed; ERR on a
+//!                                    service that did not recover)
 //! ```
 //!
 //! `KILL`/`KILLN`/`ADD`/`ADDW`/`SETW` are **O(1) in stored keys**: they
@@ -48,9 +57,12 @@
 use super::membership::{NodeId, NodeSpec};
 use super::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
 use super::rebalancer::Rebalancer;
-use super::router::{ChangeSeed, Router};
+use super::router::{ChangeSeed, Placement, Router};
 use super::storage::StorageCluster;
-use crate::metrics::Histogram;
+use super::wal::{
+    self, CoordinatorWal, DurabilityConfig, RecoveryReport, StorageDurability,
+};
+use crate::metrics::{Histogram, WalMetrics};
 use crate::netserver::{self, ServerHandle};
 use crate::sync::lock_recover;
 use std::sync::{Arc, Mutex};
@@ -79,6 +91,13 @@ pub struct Service {
     /// Per-request handle latency (ns), sharded by recording thread;
     /// `STATS` merges the shards and reports percentiles.
     latency: Vec<Mutex<Histogram>>,
+    /// Control log (durable services only).
+    wal: Option<Arc<CoordinatorWal>>,
+    /// WAL counters (all zero on a volatile service).
+    pub wal_metrics: Arc<WalMetrics>,
+    /// What recovery replayed, when this service came from
+    /// [`Service::recover`] (the `RECOVER` protocol payload).
+    recovery: Option<RecoveryReport>,
 }
 
 impl Service {
@@ -99,9 +118,22 @@ impl Service {
         replicas: usize,
         migration: MigrationConfig,
     ) -> Arc<Self> {
-        let rebalancer = Arc::new(Rebalancer::new(&router, 4_096, 0x7EACE));
         let storage = Arc::new(StorageCluster::new());
         let migration = Migrator::spawn(router.clone(), storage.clone(), migration);
+        Self::assemble(router, replicas, storage, migration, None, Arc::new(WalMetrics::new()), None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        router: Arc<Router>,
+        replicas: usize,
+        storage: Arc<StorageCluster>,
+        migration: Arc<Migrator>,
+        wal: Option<Arc<CoordinatorWal>>,
+        wal_metrics: Arc<WalMetrics>,
+        recovery: Option<RecoveryReport>,
+    ) -> Arc<Self> {
+        let rebalancer = Arc::new(Rebalancer::new(&router, 4_096, 0x7EACE));
         Arc::new(Self {
             router,
             storage,
@@ -109,7 +141,130 @@ impl Service {
             migration,
             replicas: replicas.max(1),
             latency: (0..LATENCY_SHARDS).map(|_| Mutex::new(Histogram::new())).collect(),
+            wal,
+            wal_metrics,
+            recovery,
         })
+    }
+
+    /// A fresh **durable** service rooted at `durability.dir`: every PUT
+    /// is WAL-logged before it is acked, admin changes write epoch +
+    /// plan records to the control log, and [`Service::recover`] can
+    /// rebuild the whole cluster after a crash. Requires a Memento
+    /// placement (the only algorithm with a wire format) and an empty —
+    /// or never-initialized — data directory; a directory that already
+    /// holds an epoch record must go through [`Service::recover`]
+    /// instead, or a crash's surviving data would be silently shadowed.
+    pub fn durable(
+        router: Arc<Router>,
+        replicas: usize,
+        migration: MigrationConfig,
+        durability: &DurabilityConfig,
+    ) -> crate::Result<Arc<Self>> {
+        let Some((memento, membership)) = router.durable_state() else {
+            crate::bail!("durable mode requires the memento placement");
+        };
+        // Probe read-only first: open() compacts the log in place, which
+        // must never happen under a live owner of this directory.
+        if CoordinatorWal::is_initialized(&durability.dir) {
+            crate::bail!(
+                "data dir {} already holds an epoch record — recover instead of initializing",
+                durability.dir.display()
+            );
+        }
+        let metrics = Arc::new(WalMetrics::new());
+        let (cwal, _state) = CoordinatorWal::open(&durability.dir, metrics.clone())?;
+        let cwal = Arc::new(cwal);
+        let (storage, _stats) = StorageCluster::durable(StorageDurability {
+            root: durability.dir.clone(),
+            opts: durability.opts,
+            metrics: metrics.clone(),
+        })?;
+        let storage = Arc::new(storage);
+        let migration =
+            Migrator::spawn_with_wal(router.clone(), storage.clone(), migration, Some(cwal.clone()));
+        // The initial epoch record: recovery needs a routing state even
+        // if the service dies before its first admin change.
+        cwal.log_epoch(&memento, &membership);
+        Ok(Self::assemble(router, replicas, storage, migration, Some(cwal), metrics, None))
+    }
+
+    /// Rebuild a durable service from its data directory after a crash
+    /// (DESIGN.md §11's recovery state machine):
+    ///
+    /// 1. replay the control log — last epoch record wins, `PlanBegin`
+    ///    without `PlanEnd` is a pending plan;
+    /// 2. cross-check the epoch record ([`wal::check_consistency`]) and
+    ///    rebuild the router from it;
+    /// 3. open every `node-*` store (snapshot + shard-log replay,
+    ///    torn-tail repair);
+    /// 4. re-enqueue the pending plans and run them to completion — the
+    ///    copy-install-remove invariant makes full re-execution safe;
+    /// 5. sweep misplaced keys back to their replica sets
+    ///    ([`wal::reconcile`]) — covers acked writes that landed at a
+    ///    newly published primary whose epoch record didn't reach disk.
+    pub fn recover(
+        durability: &DurabilityConfig,
+        replicas: usize,
+        migration: MigrationConfig,
+    ) -> crate::Result<(Arc<Self>, RecoveryReport)> {
+        let metrics = Arc::new(WalMetrics::new());
+        let (cwal, state) = CoordinatorWal::open(&durability.dir, metrics.clone())?;
+        let Some(rec) = state.epoch else {
+            crate::bail!(
+                "data dir {} has no epoch record — nothing to recover",
+                durability.dir.display()
+            );
+        };
+        wal::check_consistency(&rec.memento, &rec.membership)?;
+        let router = Router::from_recovered(
+            Placement::Memento(rec.memento),
+            rec.membership,
+            None,
+        );
+        let cwal = Arc::new(cwal);
+        let (storage, replay) = StorageCluster::durable(StorageDurability {
+            root: durability.dir.clone(),
+            opts: durability.opts,
+            metrics: metrics.clone(),
+        })?;
+        let storage = Arc::new(storage);
+        let migrator = Migrator::spawn_with_wal(
+            router.clone(),
+            storage.clone(),
+            migration,
+            Some(cwal.clone()),
+        );
+        for plan in &state.pending {
+            metrics.plans_recovered.inc();
+            migrator.enqueue_recovered(plan.to_plan());
+        }
+        // Run the replayed plans to completion before serving: recovery
+        // returns a cluster whose data is where the routing state says.
+        // (In auto mode the background worker may race us for plans;
+        // wait_idle covers whatever it grabbed.)
+        migrator.run_pending();
+        migrator.wait_idle(std::time::Duration::from_secs(60));
+        let plan_moved = router.metrics.keys_moved.get();
+        let reconciled = wal::reconcile(&router, &storage, replicas);
+        let report = RecoveryReport {
+            epoch: router.epoch(),
+            nodes: storage.nodes().len(),
+            replay,
+            plans: state.pending,
+            plan_moved,
+            reconciled,
+        };
+        let svc = Self::assemble(
+            router,
+            replicas,
+            storage,
+            migrator,
+            Some(cwal),
+            metrics,
+            Some(report.clone()),
+        );
+        Ok((svc, report))
     }
 
     /// The (bucket, node) placement set for a key under the current
@@ -213,6 +368,17 @@ impl Service {
     /// published when this runs, so a per-step audit would misread step
     /// N's movement as collateral while holding step 1's changed set.
     fn enqueue_change(&self, kind: PlanKind, node: NodeId, seeds: Vec<ChangeSeed>) -> (u64, usize) {
+        // Durable mode: the post-change routing state goes to the
+        // control log *before* the plan records — recovery rebuilds the
+        // router first, then replays plans against it. (One epoch record
+        // covers a multi-seed change: the seeds' epochs are superseded
+        // by the final published state, and each plan record carries its
+        // own pre-change placement.)
+        if let Some(w) = &self.wal {
+            if let Some((memento, membership)) = self.router.durable_state() {
+                w.log_epoch(&memento, &membership);
+            }
+        }
         let mut epoch = self.router.epoch();
         let mut sources = 0usize;
         let mut changed: Vec<u32> = Vec::new();
@@ -480,6 +646,37 @@ impl Service {
             Some("EPOCH") => {
                 format!("EPOCH {} WORKING {}", self.router.epoch(), self.router.working())
             }
+            Some("FSYNC") => {
+                let mut files = self.storage.sync_all();
+                if let Some(w) = &self.wal {
+                    w.sync();
+                    files += 1;
+                }
+                format!("SYNCED files={files}")
+            }
+            Some("WALSTAT") => {
+                format!("WALSTAT durable={} {}", self.wal.is_some(), self.wal_metrics.summary())
+            }
+            Some("COMPACT") => {
+                let nodes = self.storage.nodes().len();
+                self.storage.compact_all();
+                format!("COMPACTED nodes={nodes}")
+            }
+            Some("RECOVER") => match &self.recovery {
+                Some(r) => format!(
+                    "RECOVERED epoch={} nodes={} wal_records={} snapshot_records={} \
+                     torn_tails={} plans={} plan_moved={} reconciled={}",
+                    r.epoch,
+                    r.nodes,
+                    r.replay.wal_records,
+                    r.replay.snapshot_records,
+                    r.replay.torn_tails,
+                    r.plans.len(),
+                    r.plan_moved,
+                    r.reconciled
+                ),
+                None => "ERR this service did not start from recovery".into(),
+            },
             Some(cmd) => format!("ERR unknown command {cmd}"),
             None => "ERR empty request".into(),
         }
@@ -789,6 +986,82 @@ mod tests {
     fn numeric_keys_pass_through() {
         assert_eq!(Service::digest_key("12345"), 12345);
         assert_ne!(Service::digest_key("abc"), 0);
+    }
+
+    #[test]
+    fn durable_service_recovers_data_and_pending_plans() {
+        let dir = std::env::temp_dir()
+            .join(format!("memento-service-durable-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let manual = MigrationConfig { auto: false, ..MigrationConfig::default() };
+        let cfg = DurabilityConfig::new(&dir);
+        {
+            let router = Router::new("memento", 6, 60, None).unwrap();
+            let s = Service::durable(router, 1, manual.clone(), &cfg).unwrap();
+            for i in 0..200 {
+                assert!(s.handle(&format!("PUT dk{i} dv{i}")).starts_with("OK"));
+            }
+            let r = s.handle("WALSTAT");
+            assert!(r.starts_with("WALSTAT durable=true"), "{r}");
+            assert!(s.handle("FSYNC").starts_with("SYNCED files="));
+            // Publish a change whose plan never executes (manual mode):
+            // the crash window between PlanBegin and PlanEnd.
+            assert!(s.handle("KILL 2").starts_with("KILLED"), "plan left pending");
+            assert!(s.handle("RECOVER").starts_with("ERR"), "fresh service has no recovery");
+            // A second durable() on a live dir must refuse.
+            let router2 = Router::new("memento", 6, 60, None).unwrap();
+            assert!(Service::durable(router2, 1, manual.clone(), &cfg).is_err());
+        }
+        let (s2, report) = Service::recover(&cfg, 1, manual.clone()).unwrap();
+        assert_eq!(report.plans.len(), 1, "the unfinished KILL plan replays");
+        assert!(report.replay.wal_records > 0);
+        assert!(report.plan_moved > 0, "the dead node's records moved during recovery");
+        assert_eq!(report.epoch, 1);
+        for i in 0..200 {
+            let r = s2.handle(&format!("GET dk{i}"));
+            assert!(r.contains(&format!("dv{i}")), "dk{i} lost across recovery: {r}");
+        }
+        assert!(s2.handle("RECOVER").starts_with("RECOVERED epoch=1"), "report served");
+        drop(s2);
+        // Second recovery: the plan was retired (PlanEnd), nothing to do.
+        let (s3, report2) = Service::recover(&cfg, 1, manual).unwrap();
+        assert_eq!(report2.plans.len(), 0, "finished plan must not replay again");
+        assert_eq!(report2.reconciled, 0, "recovered state is already in place");
+        for i in 0..200 {
+            let r = s3.handle(&format!("GET dk{i}"));
+            assert!(r.contains(&format!("dv{i}")), "dk{i} lost on second recovery: {r}");
+        }
+        drop(s3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_then_recover_serves_from_snapshots() {
+        let dir = std::env::temp_dir()
+            .join(format!("memento-service-compact-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let manual = MigrationConfig { auto: false, ..MigrationConfig::default() };
+        let cfg = DurabilityConfig::new(&dir);
+        {
+            let router = Router::new("memento", 4, 40, None).unwrap();
+            let s = Service::durable(router, 1, manual.clone(), &cfg).unwrap();
+            for i in 0..150 {
+                s.handle(&format!("PUT ck{i} cv{i}"));
+            }
+            assert!(s.handle("COMPACT").starts_with("COMPACTED"));
+            for i in 150..300 {
+                s.handle(&format!("PUT ck{i} cv{i}"));
+            }
+        }
+        let (s2, report) = Service::recover(&cfg, 1, manual).unwrap();
+        assert!(report.replay.snapshot_records > 0, "compaction snapshot replayed");
+        assert!(report.replay.wal_records > 0, "post-compaction writes replayed");
+        for i in 0..300 {
+            let r = s2.handle(&format!("GET ck{i}"));
+            assert!(r.contains(&format!("cv{i}")), "ck{i}: {r}");
+        }
+        drop(s2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

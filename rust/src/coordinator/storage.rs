@@ -11,17 +11,28 @@
 //! threads contends per shard instead of serializing on one node-wide
 //! `Mutex` (DESIGN.md §8). All locks follow the crate's recover-on-poison
 //! policy ([`crate::sync::lock_recover`]).
+//!
+//! A node is either **volatile** ([`StorageNode::default`], the original
+//! in-memory substrate) or **durable** ([`StorageNode::durable`]): the
+//! durable flavor logs every mutation to a per-shard write-ahead log
+//! *before* the map changes and commits (group-commit fsync) after the
+//! shard lock drops, so an acked write survives a crash (DESIGN.md §11).
 
 use super::membership::NodeId;
+use super::wal::{NodeWal, ReplayStats, StorageDurability, WalOptions};
+use crate::metrics::WalMetrics;
 use crate::sync::{lock_recover, read_recover, write_recover};
 use std::collections::HashMap;
-use std::sync::{Mutex, RwLock};
+use std::path::Path;
+use std::sync::{Arc, Mutex, RwLock};
 
 /// One simulated storage node.
 #[derive(Debug)]
 pub struct StorageNode {
     /// Record shards, indexed by the key's mixed hash.
     shards: Vec<Mutex<HashMap<u64, Vec<u8>>>>,
+    /// Write-ahead log (`None` = volatile node).
+    wal: Option<NodeWal>,
     /// GET counter (load measurement for the balance figures).
     pub gets: std::sync::atomic::AtomicU64,
     /// PUT counter.
@@ -32,6 +43,7 @@ impl Default for StorageNode {
     fn default() -> Self {
         Self {
             shards: (0..Self::SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            wal: None,
             gets: Default::default(),
             puts: Default::default(),
         }
@@ -52,10 +64,61 @@ impl StorageNode {
         (crate::hashing::mix::splitmix64_mix(key) as usize) & (Self::SHARDS - 1)
     }
 
-    /// Store a record.
+    /// Open a durable node rooted at `dir`: replay its WAL + snapshots
+    /// into the shard maps and keep logging from here on. Returns the
+    /// node alongside what replay found.
+    pub fn durable(
+        dir: &Path,
+        opts: WalOptions,
+        metrics: Arc<WalMetrics>,
+    ) -> crate::Result<(Self, ReplayStats)> {
+        let (wal, maps, stats) = NodeWal::open(dir, opts, metrics)?;
+        Ok((
+            Self {
+                shards: maps.into_iter().map(Mutex::new).collect(),
+                wal: Some(wal),
+                gets: Default::default(),
+                puts: Default::default(),
+            },
+            stats,
+        ))
+    }
+
+    /// Whether mutations are WAL-backed.
+    pub fn is_durable(&self) -> bool {
+        self.wal.is_some()
+    }
+
+    /// Auto-compact shard `s` if its log outgrew the configured
+    /// threshold. Call with the shard map lock held (the snapshot must
+    /// match the exact state the log prefix produced).
+    fn maybe_compact(&self, s: usize, guard: &HashMap<u64, Vec<u8>>) -> bool {
+        match &self.wal {
+            Some(w) if w.compact_threshold() > 0 && w.shard_bytes(s) >= w.compact_threshold() => {
+                w.compact_shard(s, guard);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Store a record. On a durable node the WAL record is written
+    /// before the map mutates and fsynced (per policy) before returning,
+    /// so returning *is* the durability ack.
     pub fn put(&self, key: u64, value: Vec<u8>) {
         self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        lock_recover(&self.shards[Self::shard_of(key)]).insert(key, value);
+        let s = Self::shard_of(key);
+        let mut guard = lock_recover(&self.shards[s]);
+        let seq = self.wal.as_ref().map(|w| w.append_put(s, key, &value));
+        guard.insert(key, value);
+        // Compaction fsyncs the snapshot, which covers the new record.
+        let compacted = self.maybe_compact(s, &guard);
+        drop(guard);
+        if let (Some(w), Some(seq)) = (&self.wal, seq) {
+            if !compacted {
+                w.commit(s, seq);
+            }
+        }
     }
 
     /// Read a record.
@@ -66,7 +129,15 @@ impl StorageNode {
 
     /// Remove a record, returning its value.
     pub fn delete(&self, key: u64) -> Option<Vec<u8>> {
-        lock_recover(&self.shards[Self::shard_of(key)]).remove(&key)
+        let s = Self::shard_of(key);
+        let mut guard = lock_recover(&self.shards[s]);
+        let seq = self.wal.as_ref().map(|w| w.append_del(s, key));
+        let prev = guard.remove(&key);
+        drop(guard);
+        if let (Some(w), Some(seq)) = (&self.wal, seq) {
+            w.commit(s, seq);
+        }
+        prev
     }
 
     /// Number of stored records.
@@ -79,11 +150,18 @@ impl StorageNode {
         self.shards.iter().all(|s| lock_recover(s).is_empty())
     }
 
-    /// Drain all records (node decommission / failure with handoff).
+    /// Drain all records (node decommission / failure with handoff). On
+    /// a durable node each emptied shard is compacted to an empty
+    /// snapshot — one atomic, fsynced write per shard instead of a
+    /// delete record per key.
     pub fn drain(&self) -> Vec<(u64, Vec<u8>)> {
         let mut out = Vec::new();
-        for s in &self.shards {
-            out.extend(lock_recover(s).drain());
+        for (s, m) in self.shards.iter().enumerate() {
+            let mut guard = lock_recover(m);
+            out.extend(guard.drain());
+            if let Some(w) = &self.wal {
+                w.compact_shard(s, &guard);
+            }
         }
         out
     }
@@ -119,14 +197,21 @@ impl StorageNode {
     /// the relocated value must never clobber it.
     pub fn put_if_absent(&self, key: u64, value: Vec<u8>) -> bool {
         self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut shard = lock_recover(&self.shards[Self::shard_of(key)]);
-        match shard.entry(key) {
-            std::collections::hash_map::Entry::Occupied(_) => false,
-            std::collections::hash_map::Entry::Vacant(v) => {
-                v.insert(value);
-                true
+        let s = Self::shard_of(key);
+        let mut shard = lock_recover(&self.shards[s]);
+        if shard.contains_key(&key) {
+            return false;
+        }
+        let seq = self.wal.as_ref().map(|w| w.append_put(s, key, &value));
+        shard.insert(key, value);
+        let compacted = self.maybe_compact(s, &shard);
+        drop(shard);
+        if let (Some(w), Some(seq)) = (&self.wal, seq) {
+            if !compacted {
+                w.commit(s, seq);
             }
         }
+        true
     }
 
     /// Keys of one shard only (bounded snapshot for batched migration
@@ -148,13 +233,66 @@ impl StorageNode {
     ) -> Vec<(u64, Vec<u8>)> {
         let mut guard = lock_recover(&self.shards[shard]);
         let picked: Vec<u64> = guard.keys().copied().filter(|&k| pred(k)).take(limit).collect();
-        picked
+        let mut last_seq = None;
+        if let Some(w) = &self.wal {
+            for &k in &picked {
+                last_seq = Some(w.append_del(shard, k));
+            }
+        }
+        let out: Vec<(u64, Vec<u8>)> = picked
             .into_iter()
             .map(|k| {
                 let v = guard.remove(&k).expect("picked under the same lock");
                 (k, v)
             })
-            .collect()
+            .collect();
+        drop(guard);
+        if let (Some(w), Some(seq)) = (&self.wal, last_seq) {
+            w.commit(shard, seq);
+        }
+        out
+    }
+
+    /// Fsync every shard log with unsynced records; returns files synced
+    /// (0 on a volatile node).
+    pub fn sync(&self) -> usize {
+        self.wal.as_ref().map_or(0, |w| w.sync_all())
+    }
+
+    /// Compact every shard to a snapshot (explicit `COMPACT`); no-op on
+    /// a volatile node.
+    pub fn compact(&self) {
+        if let Some(w) = &self.wal {
+            for (s, m) in self.shards.iter().enumerate() {
+                let guard = lock_recover(m);
+                w.compact_shard(s, &guard);
+            }
+        }
+    }
+
+    /// Order-independent digest of one shard's contents (keys sorted,
+    /// values folded in). Two nodes hold identical shard state iff the
+    /// digests match — the recovery-idempotence tests compare these
+    /// across repeated replays.
+    pub fn shard_digest(&self, shard: usize) -> u64 {
+        let guard = lock_recover(&self.shards[shard]);
+        let mut keys: Vec<u64> = guard.keys().copied().collect();
+        keys.sort_unstable();
+        let mut h = 0x9E37_79B9_7F4A_7C15u64 ^ keys.len() as u64;
+        for k in keys {
+            h = crate::hashing::xxhash::xxhash64(&k.to_le_bytes(), h);
+            h = crate::hashing::xxhash::xxhash64(&guard[&k], h);
+        }
+        h
+    }
+
+    /// Digest of the whole node (all shards, fixed order).
+    pub fn content_digest(&self) -> u64 {
+        let mut h = 0u64;
+        for s in 0..Self::SHARDS {
+            h = crate::hashing::xxhash::xxhash64(&self.shard_digest(s).to_le_bytes(), h);
+        }
+        h
     }
 }
 
@@ -162,6 +300,8 @@ impl StorageNode {
 #[derive(Debug, Default)]
 pub struct StorageCluster {
     nodes: RwLock<HashMap<NodeId, std::sync::Arc<StorageNode>>>,
+    /// When set, nodes open as durable stores under `root/node-<id>`.
+    durability: Option<StorageDurability>,
 }
 
 impl StorageCluster {
@@ -170,15 +310,86 @@ impl StorageCluster {
         Self::default()
     }
 
-    /// Get-or-create the store for a node.
+    /// Open a durable fleet rooted at `durability.root`: every existing
+    /// `node-<id>` directory is replayed eagerly (so recovery sees all
+    /// surviving data, not just nodes the first requests happen to
+    /// touch); nodes created later open their own WAL directory lazily.
+    pub fn durable(durability: StorageDurability) -> crate::Result<(Self, ReplayStats)> {
+        std::fs::create_dir_all(&durability.root)
+            .map_err(|e| crate::err!("create data dir {}: {e}", durability.root.display()))?;
+        let mut nodes = HashMap::new();
+        let mut stats = ReplayStats::default();
+        let entries = std::fs::read_dir(&durability.root)
+            .map_err(|e| crate::err!("scan data dir {}: {e}", durability.root.display()))?;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| crate::err!("scan {}: {e}", durability.root.display()))?;
+            let name = entry.file_name();
+            let Some(id) = name
+                .to_str()
+                .and_then(|n| n.strip_prefix("node-"))
+                .and_then(|n| n.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            let (node, st) = StorageNode::durable(
+                &entry.path(),
+                durability.opts,
+                durability.metrics.clone(),
+            )?;
+            stats.merge(st);
+            nodes.insert(NodeId(id), std::sync::Arc::new(node));
+        }
+        Ok((Self { nodes: RwLock::new(nodes), durability: Some(durability) }, stats))
+    }
+
+    /// Whether this fleet persists.
+    pub fn is_durable(&self) -> bool {
+        self.durability.is_some()
+    }
+
+    /// Get-or-create the store for a node. On a durable fleet a fresh
+    /// node opens its WAL directory; an I/O failure there panics (the
+    /// caller was promised a durable store — see the WAL's fsync-panic
+    /// policy).
     pub fn node(&self, id: NodeId) -> std::sync::Arc<StorageNode> {
         if let Some(n) = read_recover(&self.nodes).get(&id) {
             return n.clone();
         }
         write_recover(&self.nodes)
             .entry(id)
-            .or_insert_with(|| std::sync::Arc::new(StorageNode::default()))
+            .or_insert_with(|| match &self.durability {
+                None => std::sync::Arc::new(StorageNode::default()),
+                Some(d) => {
+                    let dir = d.root.join(format!("{id}"));
+                    let (node, _stats) = StorageNode::durable(&dir, d.opts, d.metrics.clone())
+                        .unwrap_or_else(|e| {
+                            panic!("open durable store {}: {e}", dir.display())
+                        });
+                    std::sync::Arc::new(node)
+                }
+            })
             .clone()
+    }
+
+    /// Snapshot of the fleet, sorted by node id.
+    pub fn nodes(&self) -> Vec<(NodeId, std::sync::Arc<StorageNode>)> {
+        let mut v: Vec<_> =
+            read_recover(&self.nodes).iter().map(|(id, n)| (*id, n.clone())).collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
+    /// Fsync every node's unsynced shard logs; returns files synced.
+    pub fn sync_all(&self) -> usize {
+        self.nodes().iter().map(|(_id, n)| n.sync()).sum()
+    }
+
+    /// Compact every node's shards to snapshots.
+    pub fn compact_all(&self) {
+        for (_id, n) in self.nodes() {
+            n.compact();
+        }
     }
 
     /// Total records across the fleet.
@@ -339,6 +550,87 @@ mod tests {
         let mut all = n.keys();
         all.sort_unstable();
         assert_eq!(union, all);
+    }
+
+    #[test]
+    fn durable_node_survives_reopen_with_identical_digest() {
+        let dir = std::env::temp_dir()
+            .join(format!("memento-storage-durable-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let metrics = Arc::new(WalMetrics::new());
+        let digest = {
+            let (n, stats) =
+                StorageNode::durable(&dir, WalOptions::default(), metrics.clone()).unwrap();
+            assert_eq!(stats, ReplayStats::default());
+            assert!(n.is_durable());
+            for k in 0..100u64 {
+                n.put(k, format!("v{k}").into_bytes());
+            }
+            assert!(n.put_if_absent(200, b"pia".to_vec()));
+            assert!(!n.put_if_absent(200, b"clobber".to_vec()));
+            n.delete(3);
+            n.content_digest()
+        };
+        let (n2, stats) =
+            StorageNode::durable(&dir, WalOptions::default(), metrics).unwrap();
+        assert_eq!(n2.len(), 100, "100 puts + 1 put_if_absent - 1 delete");
+        assert_eq!(n2.get(7), Some(b"v7".to_vec()));
+        assert_eq!(n2.get(200), Some(b"pia".to_vec()));
+        assert_eq!(n2.get(3), None, "delete replayed");
+        assert_eq!(n2.content_digest(), digest, "replay reproduces state exactly");
+        assert_eq!(
+            stats.wal_records, 102,
+            "100 puts + 1 accepted put_if_absent + 1 del (the rejected pia logs nothing)"
+        );
+        drop(n2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_cluster_scans_node_dirs_eagerly() {
+        let root = std::env::temp_dir()
+            .join(format!("memento-storage-cluster-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let d = || StorageDurability {
+            root: root.clone(),
+            opts: WalOptions::default(),
+            metrics: Arc::new(WalMetrics::new()),
+        };
+        {
+            let (c, _stats) = StorageCluster::durable(d()).unwrap();
+            c.node(NodeId(1)).put(10, b"one".to_vec());
+            c.node(NodeId(4)).put(11, b"four".to_vec());
+            assert!(c.is_durable());
+        }
+        let (c2, stats) = StorageCluster::durable(d()).unwrap();
+        assert_eq!(stats.wal_records, 2);
+        let ids: Vec<NodeId> = c2.nodes().iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![NodeId(1), NodeId(4)], "eager scan, sorted");
+        assert_eq!(c2.node(NodeId(1)).get(10), Some(b"one".to_vec()));
+        assert_eq!(c2.node(NodeId(4)).get(11), Some(b"four".to_vec()));
+        assert_eq!(c2.sync_all(), 0, "everything replayed is already durable");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn auto_compaction_triggers_on_log_growth() {
+        let dir = std::env::temp_dir()
+            .join(format!("memento-storage-autocompact-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let metrics = Arc::new(WalMetrics::new());
+        let opts = WalOptions { compact_bytes: 256, ..WalOptions::default() };
+        {
+            let (n, _s) = StorageNode::durable(&dir, opts, metrics.clone()).unwrap();
+            for k in 0..600u64 {
+                n.put(k, vec![0u8; 16]);
+            }
+        }
+        assert!(metrics.snapshots.get() > 0, "256-byte threshold must have tripped");
+        let (n2, stats) = StorageNode::durable(&dir, opts, metrics).unwrap();
+        assert_eq!(n2.len(), 600);
+        assert!(stats.snapshot_records > 0, "reopen loads from snapshots");
+        drop(n2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,1337 @@
+//! `wal` — the durability layer: per-shard write-ahead logs with group
+//! commit, compacted snapshots, a coordinator control log, and the
+//! recovery state machine (DESIGN.md §11).
+//!
+//! Layout under one data directory:
+//!
+//! ```text
+//! <dir>/coordinator.wal          control log: epoch + migration-plan records
+//! <dir>/node-<id>/shard-<s>.wal  data log, one per StorageNode shard
+//! <dir>/node-<id>/shard-<s>.snap compacted snapshot (one CRC frame)
+//! ```
+//!
+//! Every record — data or control — is one [`crate::algorithms::serde`]
+//! frame: `[len u32][crc32 u32][payload]`, little-endian. A torn tail
+//! (truncated or CRC-failing final frame, the only corruption a crash
+//! can produce on an append-only file) is detected on replay, counted,
+//! and truncated away on open-for-append; a CRC-valid frame whose
+//! payload fails to parse is *real* corruption and a hard error.
+//!
+//! **Write path** (`StorageNode` with a [`NodeWal`]): append the record
+//! under the shard lock (WAL-first — the log is written before the map
+//! mutates), release the map lock, then *commit*. Commit under
+//! [`FsyncPolicy::Always`] is a *group commit*: committers serialize on
+//! a per-shard sync mutex, and a committer whose record another thread's
+//! fsync already covered returns without syncing (the `group_commits`
+//! metric counts these piggybacks). [`FsyncPolicy::Batch`] defers the
+//! fsync until `n` records accumulate; [`FsyncPolicy::OsOnly`] leaves
+//! flushing to the kernel. I/O failure on the write path panics with
+//! context rather than dropping a write the caller believes durable
+//! (the post-fsync-error state of a file is unknowable — continuing
+//! would ack writes that may not exist; compare PostgreSQL's
+//! fsync-panic decision).
+//!
+//! **Snapshots**: compaction writes the shard's records (sorted by key,
+//! so equal state produces byte-identical files) as one frame to a temp
+//! file, fsyncs, renames over the old snapshot, fsyncs the directory,
+//! and only then truncates the shard log. A crash anywhere in that
+//! sequence leaves either the old (snapshot, log) pair or the new
+//! snapshot with a log whose replay is idempotent on top of it.
+//!
+//! **Recovery** ([`super::service::Service::recover`]) replays the
+//! coordinator log (last epoch record wins; `PlanBegin` without a
+//! matching `PlanEnd` is a pending plan), rebuilds the router from the
+//! epoch record, opens every `node-*` directory (snapshot + log replay,
+//! torn-tail repair), re-enqueues pending plans, executes them, and
+//! finishes with [`reconcile`] — a sweep that re-homes any key living
+//! on a node outside its replica set, closing the gap between an epoch
+//! publish and its epoch record reaching the log.
+
+use super::membership::{Membership, NodeId, NodeInfo, NodeState};
+use super::migration::{MigrationPlan, PlanKind};
+use super::router::{Placement, Router};
+use super::storage::{StorageCluster, StorageNode};
+use crate::algorithms::serde::{self, FrameError};
+use crate::algorithms::{ConsistentHasher, Memento};
+use crate::error::Context;
+use crate::metrics::WalMetrics;
+use crate::sync::lock_recover;
+use crate::testkit::crashdrill;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shard-log record: `[0x01][key u64][vlen u32][value]`.
+const REC_PUT: u8 = 0x01;
+/// Shard-log record: `[0x02][key u64]`.
+const REC_DEL: u8 = 0x02;
+/// Coordinator record: the full routing state at one epoch.
+const REC_EPOCH: u8 = 0x10;
+/// Coordinator record: a migration plan was enqueued.
+const REC_PLAN_BEGIN: u8 = 0x11;
+/// Coordinator record: the matching plan finished executing.
+const REC_PLAN_END: u8 = 0x12;
+/// Snapshot payload magic (distinct from the memento snapshot's 0xA3).
+const SNAP_MAGIC: u8 = 0xA4;
+const SNAP_VERSION: u8 = 1;
+
+/// When the commit path calls `fdatasync`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Every commit is durable before the ack (group commit coalesces
+    /// concurrent committers into one fsync).
+    Always,
+    /// Fsync once at least this many records accumulated since the last
+    /// sync (bounded data-loss window, much higher throughput).
+    Batch(u64),
+    /// Never fsync from the commit path (kernel writeback only; `FSYNC`
+    /// and clean shutdown still sync).
+    OsOnly,
+}
+
+/// Durability tuning for one node/cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct WalOptions {
+    /// Commit policy.
+    pub fsync: FsyncPolicy,
+    /// Auto-compact a shard once its log exceeds this many bytes
+    /// (0 disables auto-compaction; `COMPACT` still works).
+    pub compact_bytes: u64,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        Self { fsync: FsyncPolicy::Always, compact_bytes: 8 << 20 }
+    }
+}
+
+/// Where and how a service persists (the `--data-dir` surface).
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Root data directory (created if absent).
+    pub dir: PathBuf,
+    /// Shard-WAL tuning.
+    pub opts: WalOptions,
+}
+
+impl DurabilityConfig {
+    /// Default options rooted at `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), opts: WalOptions::default() }
+    }
+}
+
+/// What replay found on disk (summed over shards/nodes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Data records replayed from shard logs.
+    pub wal_records: u64,
+    /// Records loaded from shard snapshots.
+    pub snapshot_records: u64,
+    /// Torn tails detected (≤ 1 per log file per crash).
+    pub torn_tails: u64,
+    /// Bytes the torn tails held (truncated away on open-for-append).
+    pub torn_bytes: u64,
+}
+
+impl ReplayStats {
+    /// Accumulate another shard's/node's stats.
+    pub fn merge(&mut self, o: ReplayStats) {
+        self.wal_records += o.wal_records;
+        self.snapshot_records += o.snapshot_records;
+        self.torn_tails += o.torn_tails;
+        self.torn_bytes += o.torn_bytes;
+    }
+}
+
+fn io_panic<T>(r: std::io::Result<T>, what: &str, path: &Path) -> T {
+    r.unwrap_or_else(|e| {
+        panic!("wal {what} ({}): {e} — cannot continue past a durability failure", path.display())
+    })
+}
+
+/// Best-effort directory fsync (makes a rename durable on Linux).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard record codec
+// ---------------------------------------------------------------------------
+
+fn put_record(key: u64, value: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13 + value.len());
+    out.push(REC_PUT);
+    out.extend_from_slice(&key.to_le_bytes());
+    out.extend_from_slice(&(value.len() as u32).to_le_bytes());
+    out.extend_from_slice(value);
+    out
+}
+
+fn del_record(key: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9);
+    out.push(REC_DEL);
+    out.extend_from_slice(&key.to_le_bytes());
+    out
+}
+
+/// Cursor readers for record payloads. A short read here means a
+/// CRC-valid frame carries a malformed record — real corruption, not a
+/// torn write — so these are hard errors.
+fn take_u8(buf: &[u8], at: &mut usize) -> crate::Result<u8> {
+    let v = *buf.get(*at).ok_or_else(|| crate::err!("record truncated at byte {at}"))?;
+    *at += 1;
+    Ok(v)
+}
+
+fn take_u32(buf: &[u8], at: &mut usize) -> crate::Result<u32> {
+    let s = buf
+        .get(*at..*at + 4)
+        .ok_or_else(|| crate::err!("record truncated at byte {at}"))?;
+    *at += 4;
+    Ok(u32::from_le_bytes(s.try_into().expect("4 bytes")))
+}
+
+fn take_u64(buf: &[u8], at: &mut usize) -> crate::Result<u64> {
+    let s = buf
+        .get(*at..*at + 8)
+        .ok_or_else(|| crate::err!("record truncated at byte {at}"))?;
+    *at += 8;
+    Ok(u64::from_le_bytes(s.try_into().expect("8 bytes")))
+}
+
+fn take_bytes<'b>(buf: &'b [u8], at: &mut usize, len: usize) -> crate::Result<&'b [u8]> {
+    let s = buf
+        .get(*at..*at + len)
+        .ok_or_else(|| crate::err!("record truncated at byte {at}"))?;
+    *at += len;
+    Ok(s)
+}
+
+fn apply_record(payload: &[u8], map: &mut HashMap<u64, Vec<u8>>) -> crate::Result<()> {
+    let mut at = 0usize;
+    match take_u8(payload, &mut at)? {
+        REC_PUT => {
+            let key = take_u64(payload, &mut at)?;
+            let vlen = take_u32(payload, &mut at)? as usize;
+            let value = take_bytes(payload, &mut at, vlen)?.to_vec();
+            if at != payload.len() {
+                crate::bail!("put record carries {} trailing bytes", payload.len() - at);
+            }
+            map.insert(key, value);
+        }
+        REC_DEL => {
+            let key = take_u64(payload, &mut at)?;
+            if at != payload.len() {
+                crate::bail!("del record carries {} trailing bytes", payload.len() - at);
+            }
+            map.remove(&key);
+        }
+        tag => crate::bail!("unknown shard record tag {tag:#x}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Per-shard log
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct ShardFile {
+    /// Append handle (`O_APPEND`).
+    f: File,
+    /// Log size in bytes (mirrors the file length).
+    bytes: u64,
+    /// Records in the log since the last compaction.
+    records: u64,
+}
+
+#[derive(Debug)]
+struct SyncState {
+    /// A dup of the append handle: fsync proceeds without holding the
+    /// append lock, so appenders on other threads are never stalled
+    /// behind a disk flush.
+    f: File,
+    /// Highest record count known durable.
+    synced: u64,
+}
+
+#[derive(Debug)]
+struct ShardWal {
+    file: Mutex<ShardFile>,
+    sync: Mutex<SyncState>,
+    /// Lock-free mirror of `file.records` for the commit path.
+    appended: AtomicU64,
+}
+
+/// The write-ahead log of one [`StorageNode`]: one log + snapshot pair
+/// per storage shard, under a `node-<id>` directory.
+#[derive(Debug)]
+pub struct NodeWal {
+    dir: PathBuf,
+    opts: WalOptions,
+    shards: Vec<ShardWal>,
+    metrics: Arc<WalMetrics>,
+}
+
+fn wal_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(format!("shard-{s}.wal"))
+}
+
+fn snap_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(format!("shard-{s}.snap"))
+}
+
+fn snap_tmp_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(format!("shard-{s}.snap.tmp"))
+}
+
+/// Load one shard's state: snapshot first, then the log on top.
+/// Returns `(map, stats, good_offset)` where `good_offset` is the byte
+/// offset of the first torn frame (== file length when the tail is
+/// clean). Read-only — repair is `open`'s job.
+fn load_shard(
+    dir: &Path,
+    s: usize,
+) -> crate::Result<(HashMap<u64, Vec<u8>>, ReplayStats, u64)> {
+    let mut map = HashMap::new();
+    let mut stats = ReplayStats::default();
+    let sp = snap_path(dir, s);
+    match fs::read(&sp) {
+        Ok(bytes) => {
+            // Snapshots are written atomically (tmp + rename): any
+            // frame damage here is corruption, never a torn write.
+            let (payload, used) = serde::decode_frame(&bytes)
+                .map_err(|e| crate::err!("snapshot {}: {e}", sp.display()))?;
+            if used != bytes.len() {
+                crate::bail!("snapshot {}: {} trailing bytes", sp.display(), bytes.len() - used);
+            }
+            let mut at = 0usize;
+            let magic = take_u8(payload, &mut at)?;
+            if magic != SNAP_MAGIC {
+                crate::bail!("snapshot {}: bad magic {magic:#x}", sp.display());
+            }
+            let version = take_u8(payload, &mut at)?;
+            if version != SNAP_VERSION {
+                crate::bail!("snapshot {}: unsupported version {version}", sp.display());
+            }
+            let count = take_u64(payload, &mut at)?;
+            for _ in 0..count {
+                let key = take_u64(payload, &mut at)?;
+                let vlen = take_u32(payload, &mut at)? as usize;
+                let value = take_bytes(payload, &mut at, vlen)?.to_vec();
+                map.insert(key, value);
+            }
+            if at != payload.len() {
+                crate::bail!("snapshot {}: {} trailing bytes", sp.display(), payload.len() - at);
+            }
+            stats.snapshot_records += count;
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e).with_context(|| format!("read snapshot {}", sp.display())),
+    }
+
+    let wp = wal_path(dir, s);
+    let mut good = 0u64;
+    match fs::read(&wp) {
+        Ok(bytes) => {
+            let mut at = 0usize;
+            while at < bytes.len() {
+                match serde::decode_frame(&bytes[at..]) {
+                    Ok((payload, used)) => {
+                        apply_record(payload, &mut map)
+                            .with_context(|| format!("replay {} at byte {at}", wp.display()))?;
+                        at += used;
+                        stats.wal_records += 1;
+                    }
+                    Err(FrameError::Truncated | FrameError::BadCrc { .. } | FrameError::Oversize(_)) => {
+                        // The torn tail a crash legitimately produces:
+                        // everything before it is intact.
+                        stats.torn_tails += 1;
+                        stats.torn_bytes += (bytes.len() - at) as u64;
+                        break;
+                    }
+                }
+            }
+            good = at as u64;
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e).with_context(|| format!("read wal {}", wp.display())),
+    }
+    Ok((map, stats, good))
+}
+
+impl NodeWal {
+    /// Open (or create) a node's WAL directory for appending: replay
+    /// every shard, truncate torn tails, remove stray snapshot temp
+    /// files, and return the recovered shard maps alongside the log.
+    pub fn open(
+        dir: &Path,
+        opts: WalOptions,
+        metrics: Arc<WalMetrics>,
+    ) -> crate::Result<(Self, Vec<HashMap<u64, Vec<u8>>>, ReplayStats)> {
+        fs::create_dir_all(dir).with_context(|| format!("create wal dir {}", dir.display()))?;
+        let mut maps = Vec::with_capacity(StorageNode::SHARDS);
+        let mut shards = Vec::with_capacity(StorageNode::SHARDS);
+        let mut stats = ReplayStats::default();
+        for s in 0..StorageNode::SHARDS {
+            // An interrupted compaction can leave a temp snapshot; it
+            // was never renamed into place, so it holds nothing the
+            // (snapshot, log) pair doesn't.
+            let _ = fs::remove_file(snap_tmp_path(dir, s));
+            let (map, st, good) = load_shard(dir, s)?;
+            let wp = wal_path(dir, s);
+            {
+                let f = OpenOptions::new()
+                    .create(true)
+                    .write(true)
+                    .open(&wp)
+                    .with_context(|| format!("open wal {}", wp.display()))?;
+                let len = f
+                    .metadata()
+                    .with_context(|| format!("stat wal {}", wp.display()))?
+                    .len();
+                if len > good {
+                    // Truncate the torn tail so appends extend a clean
+                    // frame boundary.
+                    f.set_len(good).with_context(|| format!("repair wal {}", wp.display()))?;
+                    f.sync_data().with_context(|| format!("sync wal {}", wp.display()))?;
+                }
+            }
+            let f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&wp)
+                .with_context(|| format!("open wal {} for append", wp.display()))?;
+            let fdup = f.try_clone().with_context(|| format!("dup wal fd {}", wp.display()))?;
+            let records = st.wal_records;
+            shards.push(ShardWal {
+                file: Mutex::new(ShardFile { f, bytes: good, records }),
+                // Everything surviving replay is on disk by definition.
+                sync: Mutex::new(SyncState { f: fdup, synced: records }),
+                appended: AtomicU64::new(records),
+            });
+            maps.push(map);
+            stats.merge(st);
+        }
+        metrics.replayed_records.add(stats.wal_records);
+        metrics.snapshot_records.add(stats.snapshot_records);
+        metrics.torn_tails.add(stats.torn_tails);
+        Ok((Self { dir: dir.to_path_buf(), opts, shards, metrics }, maps, stats))
+    }
+
+    /// Read-only replay: the shard maps a fresh [`NodeWal::open`] would
+    /// recover, with **no repair** — files are untouched, so calling
+    /// this twice is trivially byte-identical (the recovery-idempotence
+    /// tests lean on this).
+    pub fn load(dir: &Path) -> crate::Result<(Vec<HashMap<u64, Vec<u8>>>, ReplayStats)> {
+        let mut maps = Vec::with_capacity(StorageNode::SHARDS);
+        let mut stats = ReplayStats::default();
+        for s in 0..StorageNode::SHARDS {
+            let (map, st, _good) = load_shard(dir, s)?;
+            maps.push(map);
+            stats.merge(st);
+        }
+        Ok((maps, stats))
+    }
+
+    /// This WAL's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Current log size of one shard in bytes (the auto-compaction
+    /// trigger reads this).
+    pub fn shard_bytes(&self, s: usize) -> u64 {
+        lock_recover(&self.shards[s].file).bytes
+    }
+
+    /// Auto-compaction threshold (0 = disabled).
+    pub fn compact_threshold(&self) -> u64 {
+        self.opts.compact_bytes
+    }
+
+    fn append(&self, s: usize, payload: &[u8]) -> u64 {
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        serde::frame_into(&mut frame, payload);
+        let w = &self.shards[s];
+        let mut g = lock_recover(&w.file);
+        io_panic(g.f.write_all(&frame), "append", &self.dir);
+        crashdrill::hit(crashdrill::WAL_APPEND);
+        g.bytes += frame.len() as u64;
+        g.records += 1;
+        let seq = g.records;
+        w.appended.store(seq, Ordering::Release);
+        drop(g);
+        self.metrics.appends.inc();
+        self.metrics.bytes_appended.add(frame.len() as u64);
+        seq
+    }
+
+    /// Append a PUT record to shard `s`; returns the commit sequence to
+    /// pass to [`NodeWal::commit`]. Call while holding the shard's map
+    /// lock (WAL-first ordering); commit after releasing it.
+    pub fn append_put(&self, s: usize, key: u64, value: &[u8]) -> u64 {
+        self.append(s, &put_record(key, value))
+    }
+
+    /// Append a DELETE record to shard `s`.
+    pub fn append_del(&self, s: usize, key: u64) -> u64 {
+        self.append(s, &del_record(key))
+    }
+
+    /// Make the record `seq` of shard `s` durable per the fsync policy.
+    /// Under `Always` this is the group-commit point: committers whose
+    /// record an earlier fsync already covered return immediately.
+    pub fn commit(&self, s: usize, seq: u64) {
+        let w = &self.shards[s];
+        match self.opts.fsync {
+            FsyncPolicy::OsOnly => {}
+            FsyncPolicy::Always => {
+                let mut g = lock_recover(&w.sync);
+                if g.synced >= seq {
+                    self.metrics.group_commits.inc();
+                    return;
+                }
+                crashdrill::hit(crashdrill::WAL_PRE_FSYNC);
+                // Load the appended high-water mark *before* syncing:
+                // records appended after the load are also covered by
+                // the fsync, and claiming less than reality is safe.
+                let high = w.appended.load(Ordering::Acquire);
+                io_panic(g.f.sync_data(), "fsync", &self.dir);
+                g.synced = high;
+                self.metrics.fsyncs.inc();
+            }
+            FsyncPolicy::Batch(n) => {
+                let mut g = lock_recover(&w.sync);
+                let high = w.appended.load(Ordering::Acquire);
+                if high.saturating_sub(g.synced) >= n.max(1) {
+                    crashdrill::hit(crashdrill::WAL_PRE_FSYNC);
+                    io_panic(g.f.sync_data(), "fsync", &self.dir);
+                    g.synced = high;
+                    self.metrics.fsyncs.inc();
+                }
+            }
+        }
+    }
+
+    /// Fsync every shard log with unsynced records (the `FSYNC` command
+    /// and clean shutdown); returns the number of files synced.
+    pub fn sync_all(&self) -> usize {
+        let mut synced = 0usize;
+        for w in &self.shards {
+            let mut g = lock_recover(&w.sync);
+            let high = w.appended.load(Ordering::Acquire);
+            if high > g.synced {
+                io_panic(g.f.sync_data(), "fsync", &self.dir);
+                g.synced = high;
+                self.metrics.fsyncs.inc();
+                synced += 1;
+            }
+        }
+        synced
+    }
+
+    /// Replace shard `s`'s (snapshot, log) pair with one snapshot of
+    /// `records`: write sorted records to a temp file, fsync, rename
+    /// over the old snapshot, fsync the directory, then truncate the
+    /// log. Call while holding the shard's map lock so `records` is the
+    /// state the log prefix produced. Crash-safe at every step — see
+    /// the module docs.
+    pub fn compact_shard(&self, s: usize, records: &HashMap<u64, Vec<u8>>) {
+        let mut keys: Vec<u64> = records.keys().copied().collect();
+        keys.sort_unstable();
+        let mut payload = Vec::with_capacity(10 + records.len() * 24);
+        payload.push(SNAP_MAGIC);
+        payload.push(SNAP_VERSION);
+        payload.extend_from_slice(&(records.len() as u64).to_le_bytes());
+        for k in keys {
+            let v = &records[&k];
+            payload.extend_from_slice(&k.to_le_bytes());
+            payload.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            payload.extend_from_slice(v);
+        }
+        let framed = serde::encode_frame(&payload);
+        let tmp = snap_tmp_path(&self.dir, s);
+        let fin = snap_path(&self.dir, s);
+        {
+            let mut f = io_panic(File::create(&tmp), "create snapshot temp", &tmp);
+            io_panic(f.write_all(&framed), "write snapshot", &tmp);
+            io_panic(f.sync_data(), "sync snapshot", &tmp);
+        }
+        io_panic(fs::rename(&tmp, &fin), "install snapshot", &fin);
+        sync_dir(&self.dir);
+        // The snapshot now covers everything the log held: reset it.
+        let w = &self.shards[s];
+        let mut g = lock_recover(&w.file);
+        io_panic(g.f.set_len(0), "truncate log after snapshot", &self.dir);
+        io_panic(g.f.sync_data(), "sync truncated log", &self.dir);
+        g.bytes = 0;
+        g.records = 0;
+        w.appended.store(0, Ordering::Release);
+        drop(g);
+        lock_recover(&w.sync).synced = 0;
+        self.metrics.snapshots.inc();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator control log
+// ---------------------------------------------------------------------------
+
+/// A decoded epoch record: the routing state to rebuild the router from.
+#[derive(Clone)]
+pub struct EpochRecord {
+    /// The placement algorithm state.
+    pub memento: Memento,
+    /// The bucket ↔ node binding at the same epoch.
+    pub membership: Membership,
+}
+
+impl std::fmt::Debug for EpochRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EpochRecord")
+            .field("epoch", &self.membership.epoch())
+            .field("working", &self.memento.working())
+            .finish()
+    }
+}
+
+/// A decoded `PlanBegin` record: everything needed to re-enqueue the
+/// migration plan after a crash.
+#[derive(Clone)]
+pub struct PlanRecord {
+    /// Plan id == the epoch the plan migrates toward.
+    pub epoch: u64,
+    /// Drain or pull.
+    pub kind: PlanKind,
+    /// The changed buckets.
+    pub buckets: Vec<u32>,
+    /// The node that changed.
+    pub node: NodeId,
+    /// Source (old bucket, node) pairs.
+    pub sources: Vec<(u32, NodeId)>,
+    /// Whether the delta fell back to a full scan.
+    pub full_scan: bool,
+    /// Whether the node lost every bucket (unfiltered drain).
+    pub drain_fully: bool,
+    /// The pre-change placement.
+    pub old_memento: Memento,
+    /// The pre-change bucket → node binding, sorted by bucket.
+    pub old_binding: Vec<(u32, NodeId)>,
+}
+
+impl std::fmt::Debug for PlanRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanRecord")
+            .field("epoch", &self.epoch)
+            .field("kind", &self.kind)
+            .field("node", &self.node)
+            .field("buckets", &self.buckets)
+            .field("sources", &self.sources.len())
+            .field("full_scan", &self.full_scan)
+            .field("drain_fully", &self.drain_fully)
+            .finish()
+    }
+}
+
+impl PlanRecord {
+    /// Rebuild the executable plan.
+    pub fn to_plan(&self) -> MigrationPlan {
+        MigrationPlan {
+            epoch: self.epoch,
+            kind: self.kind,
+            buckets: self.buckets.clone(),
+            node: self.node,
+            sources: self.sources.clone(),
+            full_scan: self.full_scan,
+            drain_fully: self.drain_fully,
+            old_placement: Placement::Memento(self.old_memento.clone()),
+            old_binding: self.old_binding.clone(),
+        }
+    }
+}
+
+/// What replaying the coordinator log produced.
+#[derive(Debug)]
+pub struct CoordinatorState {
+    /// The last epoch record (`None` on a fresh directory).
+    pub epoch: Option<EpochRecord>,
+    /// Plans with a `PlanBegin` but no `PlanEnd`, sorted by plan id —
+    /// the half-finished work recovery must re-run.
+    pub pending: Vec<PlanRecord>,
+    /// Whether the log ended in a torn frame (truncated on open).
+    pub torn_tail: bool,
+}
+
+fn encode_membership(m: &Membership, out: &mut Vec<u8>) {
+    out.extend_from_slice(&m.epoch().to_le_bytes());
+    out.extend_from_slice(&m.next_node_id().to_le_bytes());
+    let infos: Vec<&NodeInfo> = m.nodes().collect();
+    out.extend_from_slice(&(infos.len() as u32).to_le_bytes());
+    for i in infos {
+        out.extend_from_slice(&i.id.0.to_le_bytes());
+        out.extend_from_slice(&i.weight.to_le_bytes());
+        let name = i.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(i.buckets.len() as u32).to_le_bytes());
+        for &b in &i.buckets {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+    let down = m.down_nodes();
+    out.extend_from_slice(&(down.len() as u32).to_le_bytes());
+    for d in down {
+        out.extend_from_slice(&d.0.to_le_bytes());
+    }
+}
+
+fn decode_membership(buf: &[u8], at: &mut usize) -> crate::Result<Membership> {
+    let epoch = take_u64(buf, at)?;
+    let next_node = take_u64(buf, at)?;
+    let ncount = take_u32(buf, at)? as usize;
+    let mut infos = Vec::with_capacity(ncount);
+    for _ in 0..ncount {
+        let id = NodeId(take_u64(buf, at)?);
+        let weight = take_u32(buf, at)?;
+        let nlen = take_u32(buf, at)? as usize;
+        let name = String::from_utf8(take_bytes(buf, at, nlen)?.to_vec())
+            .map_err(|_| crate::err!("node name is not UTF-8"))?;
+        let bcount = take_u32(buf, at)? as usize;
+        let mut buckets = Vec::with_capacity(bcount);
+        for _ in 0..bcount {
+            buckets.push(take_u32(buf, at)?);
+        }
+        // State is re-derived by from_parts; Down is a placeholder.
+        infos.push(NodeInfo { id, name, weight, buckets, state: NodeState::Down });
+    }
+    let dcount = take_u32(buf, at)? as usize;
+    let mut down_order = Vec::with_capacity(dcount);
+    for _ in 0..dcount {
+        down_order.push(NodeId(take_u64(buf, at)?));
+    }
+    Membership::from_parts(infos, down_order, next_node, epoch)
+        .map_err(|e| crate::err!("epoch record rejected by membership validation: {e}"))
+}
+
+fn encode_epoch_record(memento: &Memento, membership: &Membership) -> Vec<u8> {
+    let mut out = vec![REC_EPOCH];
+    encode_membership(membership, &mut out);
+    let snap = serde::encode_weighted(memento, &membership.weight_table());
+    out.extend_from_slice(&(snap.len() as u32).to_le_bytes());
+    out.extend_from_slice(&snap);
+    out
+}
+
+fn decode_epoch_record(payload: &[u8]) -> crate::Result<EpochRecord> {
+    let mut at = 1usize; // tag consumed by the caller
+    let membership = decode_membership(payload, &mut at)?;
+    let mlen = take_u32(payload, &mut at)? as usize;
+    let snap = take_bytes(payload, &mut at, mlen)?;
+    if at != payload.len() {
+        crate::bail!("epoch record carries {} trailing bytes", payload.len() - at);
+    }
+    let (memento, weights) = serde::decode_weighted(snap)
+        .map_err(|e| crate::err!("epoch record memento snapshot: {e}"))?;
+    if weights != membership.weight_table() {
+        crate::bail!("epoch record weight table disagrees with its membership");
+    }
+    Ok(EpochRecord { memento, membership })
+}
+
+fn encode_plan_begin(plan: &MigrationPlan) -> Option<Vec<u8>> {
+    let memento = plan.old_placement.memento_snapshot()?;
+    let mut out = vec![REC_PLAN_BEGIN];
+    out.extend_from_slice(&plan.epoch.to_le_bytes());
+    out.push(match plan.kind {
+        PlanKind::Drain => 0,
+        PlanKind::Pull => 1,
+    });
+    out.extend_from_slice(&plan.node.0.to_le_bytes());
+    let flags = u8::from(plan.full_scan) | (u8::from(plan.drain_fully) << 1);
+    out.push(flags);
+    out.extend_from_slice(&(plan.buckets.len() as u32).to_le_bytes());
+    for &b in &plan.buckets {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    out.extend_from_slice(&(plan.sources.len() as u32).to_le_bytes());
+    for &(b, n) in &plan.sources {
+        out.extend_from_slice(&b.to_le_bytes());
+        out.extend_from_slice(&n.0.to_le_bytes());
+    }
+    out.extend_from_slice(&(plan.old_binding.len() as u32).to_le_bytes());
+    for &(b, n) in &plan.old_binding {
+        out.extend_from_slice(&b.to_le_bytes());
+        out.extend_from_slice(&n.0.to_le_bytes());
+    }
+    let snap = serde::encode_memento(&memento);
+    out.extend_from_slice(&(snap.len() as u32).to_le_bytes());
+    out.extend_from_slice(&snap);
+    Some(out)
+}
+
+fn decode_plan_begin(payload: &[u8]) -> crate::Result<PlanRecord> {
+    let mut at = 1usize;
+    let epoch = take_u64(payload, &mut at)?;
+    let kind = match take_u8(payload, &mut at)? {
+        0 => PlanKind::Drain,
+        1 => PlanKind::Pull,
+        k => crate::bail!("unknown plan kind {k}"),
+    };
+    let node = NodeId(take_u64(payload, &mut at)?);
+    let flags = take_u8(payload, &mut at)?;
+    let bcount = take_u32(payload, &mut at)? as usize;
+    let mut buckets = Vec::with_capacity(bcount);
+    for _ in 0..bcount {
+        buckets.push(take_u32(payload, &mut at)?);
+    }
+    let scount = take_u32(payload, &mut at)? as usize;
+    let mut sources = Vec::with_capacity(scount);
+    for _ in 0..scount {
+        let b = take_u32(payload, &mut at)?;
+        let n = NodeId(take_u64(payload, &mut at)?);
+        sources.push((b, n));
+    }
+    let obcount = take_u32(payload, &mut at)? as usize;
+    let mut old_binding = Vec::with_capacity(obcount);
+    let mut last: Option<u32> = None;
+    for _ in 0..obcount {
+        let b = take_u32(payload, &mut at)?;
+        let n = NodeId(take_u64(payload, &mut at)?);
+        if last.is_some_and(|p| p >= b) {
+            crate::bail!("plan old binding not strictly ascending");
+        }
+        last = Some(b);
+        old_binding.push((b, n));
+    }
+    let mlen = take_u32(payload, &mut at)? as usize;
+    let snap = take_bytes(payload, &mut at, mlen)?;
+    if at != payload.len() {
+        crate::bail!("plan record carries {} trailing bytes", payload.len() - at);
+    }
+    let old_memento = serde::decode_memento(snap)
+        .map_err(|e| crate::err!("plan record memento snapshot: {e}"))?;
+    Ok(PlanRecord {
+        epoch,
+        kind,
+        buckets,
+        node,
+        sources,
+        full_scan: flags & 1 != 0,
+        drain_fully: flags & 2 != 0,
+        old_memento,
+        old_binding,
+    })
+}
+
+/// The coordinator's control log: epoch records and migration-plan
+/// begin/end markers, one file, always fsynced (control records are
+/// rare and must never lag the data they describe).
+#[derive(Debug)]
+pub struct CoordinatorWal {
+    path: PathBuf,
+    file: Mutex<File>,
+    metrics: Arc<WalMetrics>,
+}
+
+impl CoordinatorWal {
+    /// Read-only probe: does `<dir>/coordinator.wal` already hold an
+    /// epoch record? Unlike [`CoordinatorWal::open`] this touches
+    /// nothing on disk, so an initializer can refuse an already-claimed
+    /// directory *before* the open-time compaction rewrite would swap
+    /// the file out from under a live owner.
+    pub fn is_initialized(dir: &Path) -> bool {
+        let Ok(bytes) = fs::read(dir.join("coordinator.wal")) else { return false };
+        let mut at = 0usize;
+        while at < bytes.len() {
+            match serde::decode_frame(&bytes[at..]) {
+                Ok((payload, used)) => {
+                    if payload.first() == Some(&REC_EPOCH) {
+                        return true;
+                    }
+                    at += used;
+                }
+                Err(_) => break,
+            }
+        }
+        false
+    }
+
+    /// Open (or create) `<dir>/coordinator.wal`: replay it, then
+    /// rewrite it compacted — the surviving state is one epoch record
+    /// plus the pending plan records, so restart chains never grow the
+    /// log unboundedly. The rewrite goes through a temp file + rename,
+    /// so a crash mid-compaction keeps the old log.
+    pub fn open(dir: &Path, metrics: Arc<WalMetrics>) -> crate::Result<(Self, CoordinatorState)> {
+        fs::create_dir_all(dir).with_context(|| format!("create data dir {}", dir.display()))?;
+        let path = dir.join("coordinator.wal");
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+        };
+        let mut epoch_payload: Option<Vec<u8>> = None;
+        let mut epoch: Option<EpochRecord> = None;
+        let mut pending_payloads: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        let mut pending: BTreeMap<u64, PlanRecord> = BTreeMap::new();
+        let mut torn_tail = false;
+        let mut at = 0usize;
+        while at < bytes.len() {
+            match serde::decode_frame(&bytes[at..]) {
+                Ok((payload, used)) => {
+                    let tag = *payload
+                        .first()
+                        .ok_or_else(|| crate::err!("{}: empty record", path.display()))?;
+                    match tag {
+                        REC_EPOCH => {
+                            // Last record wins: it describes the newest
+                            // published routing state.
+                            epoch = Some(decode_epoch_record(payload)
+                                .with_context(|| format!("{} at byte {at}", path.display()))?);
+                            epoch_payload = Some(payload.to_vec());
+                        }
+                        REC_PLAN_BEGIN => {
+                            let rec = decode_plan_begin(payload)
+                                .with_context(|| format!("{} at byte {at}", path.display()))?;
+                            pending_payloads.insert(rec.epoch, payload.to_vec());
+                            pending.insert(rec.epoch, rec);
+                        }
+                        REC_PLAN_END => {
+                            let mut p = 1usize;
+                            let id = take_u64(payload, &mut p)?;
+                            pending_payloads.remove(&id);
+                            pending.remove(&id);
+                        }
+                        t => crate::bail!("{}: unknown control record tag {t:#x}", path.display()),
+                    }
+                    at += used;
+                }
+                Err(_) => {
+                    torn_tail = true;
+                    break;
+                }
+            }
+        }
+
+        // Compacted rewrite (also discards any torn tail).
+        let tmp = dir.join("coordinator.wal.tmp");
+        {
+            let mut out = Vec::new();
+            if let Some(p) = &epoch_payload {
+                serde::frame_into(&mut out, p);
+            }
+            for p in pending_payloads.values() {
+                serde::frame_into(&mut out, p);
+            }
+            let mut f =
+                File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&out).with_context(|| format!("write {}", tmp.display()))?;
+            f.sync_data().with_context(|| format!("sync {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, &path).with_context(|| format!("install {}", path.display()))?;
+        sync_dir(dir);
+        if torn_tail {
+            metrics.torn_tails.inc();
+        }
+
+        let f = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open {} for append", path.display()))?;
+        let state =
+            CoordinatorState { epoch, pending: pending.into_values().collect(), torn_tail };
+        Ok((Self { path, file: Mutex::new(f), metrics }, state))
+    }
+
+    fn append(&self, payload: &[u8]) {
+        let frame = serde::encode_frame(payload);
+        let mut f = lock_recover(&self.file);
+        io_panic(f.write_all(&frame), "append control record", &self.path);
+        io_panic(f.sync_data(), "fsync control log", &self.path);
+        drop(f);
+        self.metrics.appends.inc();
+        self.metrics.bytes_appended.add(frame.len() as u64);
+        self.metrics.fsyncs.inc();
+    }
+
+    /// Log the routing state at the current epoch. Call *before* the
+    /// plans of the change are logged: recovery rebuilds the router the
+    /// plans then run against.
+    pub fn log_epoch(&self, memento: &Memento, membership: &Membership) {
+        self.append(&encode_epoch_record(memento, membership));
+    }
+
+    /// Log a plan enqueue; returns `false` (and logs nothing) when the
+    /// plan's old placement has no wire format (non-Memento).
+    pub fn log_plan_begin(&self, plan: &MigrationPlan) -> bool {
+        match encode_plan_begin(plan) {
+            Some(payload) => {
+                self.append(&payload);
+                self.metrics.plans_logged.inc();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Log a plan completion (idempotent: an end without a begin is a
+    /// no-op on replay).
+    pub fn log_plan_end(&self, plan_epoch: u64) {
+        let mut out = vec![REC_PLAN_END];
+        out.extend_from_slice(&plan_epoch.to_le_bytes());
+        self.append(&out);
+    }
+
+    /// Fsync the control log (appends already sync; this covers the
+    /// `FSYNC` command's all-files contract).
+    pub fn sync(&self) {
+        let f = lock_recover(&self.file);
+        io_panic(f.sync_data(), "fsync control log", &self.path);
+        self.metrics.fsyncs.inc();
+    }
+}
+
+/// Cross-check an epoch record's two halves: every bucket the
+/// membership binds must be working in the algorithm state and vice
+/// versa (counts + setwise).
+pub fn check_consistency(memento: &Memento, membership: &Membership) -> crate::Result<()> {
+    let working: HashSet<u32> = memento.working_buckets().into_iter().collect();
+    let mut bound = 0usize;
+    for info in membership.nodes() {
+        for &b in &info.buckets {
+            if !working.contains(&b) {
+                crate::bail!("epoch record binds bucket {b} which the algorithm has removed");
+            }
+            bound += 1;
+        }
+    }
+    if bound != working.len() {
+        crate::bail!(
+            "epoch record binds {bound} buckets but the algorithm has {} working",
+            working.len()
+        );
+    }
+    Ok(())
+}
+
+/// How a durable [`StorageCluster`] opens node stores on demand.
+#[derive(Debug)]
+pub struct StorageDurability {
+    /// Root data directory (node dirs are `<root>/node-<id>`).
+    pub root: PathBuf,
+    /// Shard-WAL tuning, shared by every node.
+    pub opts: WalOptions,
+    /// The service-wide metric bundle.
+    pub metrics: Arc<WalMetrics>,
+}
+
+/// Post-replay sweep: move any key stored on a node outside its replica
+/// set to its current primary (install there, then remove locally —
+/// same copy-install-remove order as the migration executor). Closes
+/// the race where an epoch was published and acked but the process died
+/// before its epoch record hit the control log: the data wrote to the
+/// *new* primary's WAL while recovery rebuilt the *old* routing state.
+/// Replica copies on legitimate replica nodes are left alone. Returns
+/// keys moved.
+pub fn reconcile(router: &Router, storage: &StorageCluster, replicas: usize) -> u64 {
+    let replicas = replicas.max(1);
+    let mut moved = 0u64;
+    for (id, node) in storage.nodes() {
+        for shard in 0..StorageNode::SHARDS {
+            let keys = node.shard_keys(shard);
+            if keys.is_empty() {
+                continue;
+            }
+            let misplaced: HashSet<u64> = keys
+                .into_iter()
+                .filter(|&k| {
+                    !router
+                        .replicas_on_distinct_nodes(k, replicas)
+                        .iter()
+                        .any(|&(_b, n)| n == id)
+                })
+                .collect();
+            if misplaced.is_empty() {
+                continue;
+            }
+            for &k in &misplaced {
+                if let Some(v) = node.get(k) {
+                    let (_b, primary) = router.route(k);
+                    storage.node(primary).put_if_absent(k, v);
+                }
+            }
+            let removed =
+                node.extract_shard_if(shard, misplaced.len(), |k| misplaced.contains(&k));
+            moved += removed.len() as u64;
+        }
+    }
+    moved
+}
+
+/// What [`super::service::Service::recover`] did, for the `RECOVER`
+/// protocol reply and the crash-drill report.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Epoch of the recovered routing state.
+    pub epoch: u64,
+    /// Node stores opened from disk.
+    pub nodes: usize,
+    /// Shard replay totals.
+    pub replay: ReplayStats,
+    /// Pending plans that were re-enqueued and executed.
+    pub plans: Vec<PlanRecord>,
+    /// Records the replayed plans moved.
+    pub plan_moved: u64,
+    /// Keys the reconcile sweep re-homed.
+    pub reconciled: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Router;
+
+    fn tdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("memento-wal-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn metrics() -> Arc<WalMetrics> {
+        Arc::new(WalMetrics::new())
+    }
+
+    #[test]
+    fn shard_wal_roundtrips_puts_and_dels() {
+        let dir = tdir("roundtrip");
+        {
+            let (wal, maps, stats) = NodeWal::open(&dir, WalOptions::default(), metrics()).unwrap();
+            assert_eq!(stats, ReplayStats::default());
+            assert!(maps.iter().all(|m| m.is_empty()));
+            for k in 0..50u64 {
+                let s = (k % StorageNode::SHARDS as u64) as usize;
+                let seq = wal.append_put(s, k, format!("v{k}").as_bytes());
+                wal.commit(s, seq);
+            }
+            let seq = wal.append_del(3, 3);
+            wal.commit(3, seq);
+        }
+        let (wal2, maps, stats) = NodeWal::open(&dir, WalOptions::default(), metrics()).unwrap();
+        assert_eq!(stats.wal_records, 51);
+        assert_eq!(stats.torn_tails, 0);
+        let total: usize = maps.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 49, "50 puts, one deleted");
+        assert_eq!(maps[7].get(&7), Some(&b"v7".to_vec()));
+        assert!(!maps[3].contains_key(&3), "delete replayed");
+        drop(wal2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_detected_truncated_and_appendable() {
+        let dir = tdir("torn");
+        {
+            let (wal, _maps, _s) = NodeWal::open(&dir, WalOptions::default(), metrics()).unwrap();
+            for k in 0..10u64 {
+                let seq = wal.append_put(2, k, b"val");
+                wal.commit(2, seq);
+            }
+        }
+        // Simulate a torn write: garbage appended past the last frame.
+        let wp = wal_path(&dir, 2);
+        let clean_len = fs::metadata(&wp).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&wp).unwrap();
+        f.write_all(&[0xDE, 0xAD, 0xBE]).unwrap();
+        drop(f);
+
+        // Read-only load tolerates it without touching the file.
+        let (maps, stats) = NodeWal::load(&dir).unwrap();
+        assert_eq!(stats.wal_records, 10);
+        assert_eq!(stats.torn_tails, 1);
+        assert_eq!(stats.torn_bytes, 3);
+        assert_eq!(maps[2].len(), 10);
+        assert_eq!(fs::metadata(&wp).unwrap().len(), clean_len + 3, "load must not repair");
+
+        // Open repairs, and the log accepts appends on the clean boundary.
+        let (wal, maps, stats) = NodeWal::open(&dir, WalOptions::default(), metrics()).unwrap();
+        assert_eq!(stats.torn_tails, 1);
+        assert_eq!(maps[2].len(), 10);
+        assert_eq!(fs::metadata(&wp).unwrap().len(), clean_len, "torn tail truncated");
+        let seq = wal.append_put(2, 99, b"after-repair");
+        wal.commit(2, seq);
+        drop(wal);
+        let (maps, stats) = NodeWal::load(&dir).unwrap();
+        assert_eq!(stats.torn_tails, 0, "repaired log has a clean tail");
+        assert_eq!(maps[2].len(), 11);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_snapshots_and_resets_the_log() {
+        let dir = tdir("compact");
+        let mut state: HashMap<u64, Vec<u8>> = HashMap::new();
+        {
+            let (wal, _maps, _s) = NodeWal::open(&dir, WalOptions::default(), metrics()).unwrap();
+            for k in 0..40u64 {
+                let seq = wal.append_put(5, k, format!("x{k}").as_bytes());
+                wal.commit(5, seq);
+                state.insert(k, format!("x{k}").into_bytes());
+            }
+            assert!(wal.shard_bytes(5) > 0);
+            wal.compact_shard(5, &state);
+            assert_eq!(wal.shard_bytes(5), 0, "log reset after snapshot");
+            // Post-snapshot writes land in the fresh log.
+            let seq = wal.append_put(5, 100, b"post");
+            wal.commit(5, seq);
+        }
+        let (maps, stats) = NodeWal::load(&dir).unwrap();
+        assert_eq!(stats.snapshot_records, 40);
+        assert_eq!(stats.wal_records, 1);
+        assert_eq!(maps[5].len(), 41);
+        assert_eq!(maps[5].get(&100), Some(&b"post".to_vec()));
+        // Determinism: compacting equal state twice produces identical
+        // snapshot bytes (sorted keys).
+        let (wal, _m, _s) = NodeWal::open(&dir, WalOptions::default(), metrics()).unwrap();
+        state.insert(100, b"post".to_vec());
+        wal.compact_shard(5, &state);
+        let first = fs::read(snap_path(&dir, 5)).unwrap();
+        wal.compact_shard(5, &state);
+        let second = fs::read(snap_path(&dir, 5)).unwrap();
+        assert_eq!(first, second, "equal state must snapshot byte-identically");
+        drop(wal);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_batches_fsyncs() {
+        let dir = tdir("batchsync");
+        let m = metrics();
+        let (wal, _maps, _s) =
+            NodeWal::open(&dir, WalOptions { fsync: FsyncPolicy::Batch(8), compact_bytes: 0 }, m.clone())
+                .unwrap();
+        for k in 0..20u64 {
+            let seq = wal.append_put(0, k, b"v");
+            wal.commit(0, seq);
+        }
+        assert_eq!(m.fsyncs.get(), 2, "20 records / batch of 8 → 2 fsyncs");
+        assert_eq!(wal.sync_all(), 1, "one shard still has 4 unsynced records");
+        assert_eq!(m.fsyncs.get(), 3);
+        assert_eq!(wal.sync_all(), 0, "everything durable → no file touched");
+        drop(wal);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn coordinator_log_epoch_and_plan_lifecycle() {
+        let dir = tdir("coord");
+        let router = Router::new("memento", 5, 64, None).unwrap();
+        let (memento, membership) = router.durable_state().unwrap();
+        {
+            let (cw, state) = CoordinatorWal::open(&dir, metrics()).unwrap();
+            assert!(state.epoch.is_none());
+            assert!(state.pending.is_empty());
+            cw.log_epoch(&memento, &membership);
+        }
+        // A change + plan, logged and then recovered as pending.
+        let (node, seed) = router.fail_bucket_planned(2).unwrap();
+        let plan = MigrationPlan::from_seed(PlanKind::Drain, node, seed);
+        let (m2, mem2) = router.durable_state().unwrap();
+        {
+            let (cw, state) = CoordinatorWal::open(&dir, metrics()).unwrap();
+            assert!(state.epoch.is_some(), "epoch record survived reopen");
+            cw.log_epoch(&m2, &mem2);
+            assert!(cw.log_plan_begin(&plan), "memento plans are loggable");
+        }
+        {
+            let (cw, state) = CoordinatorWal::open(&dir, metrics()).unwrap();
+            let rec = state.epoch.expect("epoch");
+            assert_eq!(rec.membership.epoch(), 1);
+            check_consistency(&rec.memento, &rec.membership).unwrap();
+            assert_eq!(state.pending.len(), 1, "begin without end is pending");
+            let p = &state.pending[0];
+            assert_eq!(p.epoch, plan.epoch);
+            assert_eq!(p.kind, PlanKind::Drain);
+            assert_eq!(p.node, node);
+            assert_eq!(p.sources, plan.sources);
+            let rebuilt = p.to_plan();
+            assert_eq!(rebuilt.buckets, plan.buckets);
+            cw.log_plan_end(p.epoch);
+        }
+        let (_cw, state) = CoordinatorWal::open(&dir, metrics()).unwrap();
+        assert!(state.pending.is_empty(), "ended plan is not pending");
+        assert!(state.epoch.is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn coordinator_log_torn_tail_is_dropped_by_compaction() {
+        let dir = tdir("coordtorn");
+        let router = Router::new("memento", 4, 48, None).unwrap();
+        let (memento, membership) = router.durable_state().unwrap();
+        {
+            let (cw, _s) = CoordinatorWal::open(&dir, metrics()).unwrap();
+            cw.log_epoch(&memento, &membership);
+        }
+        let path = dir.join("coordinator.wal");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[9, 9, 9, 9, 9]).unwrap();
+        drop(f);
+        let (_cw, state) = CoordinatorWal::open(&dir, metrics()).unwrap();
+        assert!(state.torn_tail);
+        assert!(state.epoch.is_some(), "intact prefix survives");
+        // The compacted rewrite dropped the garbage.
+        let (_cw2, state2) = CoordinatorWal::open(&dir, metrics()).unwrap();
+        assert!(!state2.torn_tail);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn membership_wire_roundtrip_with_weights_and_down_nodes() {
+        let router = Router::new("memento", 6, 72, None).unwrap();
+        let n2 = router.with_view(|_a, m| m.node_at(2)).unwrap();
+        router.set_weight(n2, 3).unwrap();
+        router.fail_bucket(4).unwrap();
+        let (_m, membership) = router.durable_state().unwrap();
+        let mut buf = Vec::new();
+        encode_membership(&membership, &mut buf);
+        let mut at = 0usize;
+        let back = decode_membership(&buf, &mut at).unwrap();
+        assert_eq!(at, buf.len(), "codec must consume exactly its bytes");
+        assert_eq!(back.epoch(), membership.epoch());
+        assert_eq!(back.next_node_id(), membership.next_node_id());
+        assert_eq!(back.weight_table(), membership.weight_table());
+        assert_eq!(back.down_nodes(), membership.down_nodes());
+        assert_eq!(back.bound_buckets(), membership.bound_buckets());
+    }
+
+    #[test]
+    fn reconcile_rehomes_misplaced_keys_only() {
+        let router = Router::new("memento", 4, 48, None).unwrap();
+        let storage = StorageCluster::new();
+        // A key at its primary stays; a key parked on the wrong node
+        // moves to the primary.
+        let key_ok = 77u64;
+        let (_b, primary_ok) = router.route(key_ok);
+        storage.node(primary_ok).put(key_ok, b"stay".to_vec());
+        let key_bad = 123u64;
+        let (_b, primary_bad) = router.route(key_bad);
+        let wrong = router
+            .with_view(|_a, m| m.nodes().map(|i| i.id).find(|&id| id != primary_bad))
+            .unwrap();
+        storage.node(wrong).put(key_bad, b"move".to_vec());
+
+        let moved = reconcile(&router, &storage, 1);
+        assert_eq!(moved, 1);
+        assert_eq!(storage.node(primary_ok).get(key_ok), Some(b"stay".to_vec()));
+        assert_eq!(storage.node(primary_bad).get(key_bad), Some(b"move".to_vec()));
+        assert!(storage.node(wrong).get(key_bad).is_none());
+        assert_eq!(reconcile(&router, &storage, 1), 0, "second sweep is a no-op");
+    }
+}

@@ -7,6 +7,9 @@
 //!   traffic and mid-run churn;
 //! * `lookup`   — one-shot key lookups against a fresh cluster (debugging);
 //! * `drill`    — scripted failure drill with rebalance audit;
+//! * `crashdrill` — kill-mid-run durability drills against the WAL
+//!   (child process aborted at a seed-selected crash site, then
+//!   recovered and checked — DESIGN.md §11.4);
 //! * `info`     — environment report (algorithms, artifacts, PJRT).
 
 use memento::cli::ArgSpec;
@@ -26,6 +29,7 @@ fn main() {
         Some("loadgen") => cmd_loadgen(&args[1..]),
         Some("lookup") => cmd_lookup(&args[1..]),
         Some("drill") => cmd_drill(&args[1..]),
+        Some("crashdrill") => cmd_crashdrill(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -42,7 +46,7 @@ fn main() {
 
 fn top_usage() -> &'static str {
     "memento — MementoHash consistent-hash router (paper reproduction)\n\n\
-     USAGE:\n  memento <serve|figures|loadgen|lookup|drill|replay|info> [flags]\n\n\
+     USAGE:\n  memento <serve|figures|loadgen|lookup|drill|crashdrill|replay|info> [flags]\n\n\
      Run `memento <subcommand> --help` for details."
 }
 
@@ -166,6 +170,11 @@ fn cmd_serve(raw: &[String]) -> i32 {
         .flag("nodes", "0", "override: initial node count")
         .flag("bind", "", "override: TCP bind address")
         .flag("max-conns", "256", "maximum concurrent connections")
+        .flag(
+            "data-dir",
+            "",
+            "durable WAL directory (fresh dir: initialize; dir with an epoch record: recover)",
+        )
         .switch("no-engine", "disable the batched lookup engine")
         .positional("config", "optional router.toml");
     let args = match spec.parse(raw) {
@@ -182,14 +191,65 @@ fn cmd_serve(raw: &[String]) -> i32 {
             return 2;
         }
     };
-    let router = match build_router(&cfg, !args.switch("no-engine")) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("router error: {e}");
-            return 1;
+    let data_dir = args.get("data-dir").to_string();
+    let service = if data_dir.is_empty() {
+        let router = match build_router(&cfg, !args.switch("no-engine")) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("router error: {e}");
+                return 1;
+            }
+        };
+        Service::new(router)
+    } else {
+        use memento::coordinator::migration::MigrationConfig;
+        use memento::coordinator::wal::{CoordinatorWal, DurabilityConfig};
+        let durability = DurabilityConfig::new(std::path::PathBuf::from(&data_dir));
+        if CoordinatorWal::is_initialized(&durability.dir) {
+            // An epoch record exists: the WAL is the source of truth for
+            // membership, so the config's algo/nodes are ignored (the
+            // recovered router is scalar-path — no batched engine).
+            match Service::recover(&durability, 1, MigrationConfig::default()) {
+                Ok((svc, report)) => {
+                    println!(
+                        "recovered {data_dir}: epoch={} nodes={} wal_records={} \
+                         snapshot_records={} torn_tails={} plans={} plan_moved={} reconciled={}",
+                        report.epoch,
+                        report.nodes,
+                        report.replay.wal_records,
+                        report.replay.snapshot_records,
+                        report.replay.torn_tails,
+                        report.plans.len(),
+                        report.plan_moved,
+                        report.reconciled
+                    );
+                    svc
+                }
+                Err(e) => {
+                    eprintln!("recovery from {data_dir} failed: {e}");
+                    return 1;
+                }
+            }
+        } else {
+            let router = match build_router(&cfg, !args.switch("no-engine")) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("router error: {e}");
+                    return 1;
+                }
+            };
+            match Service::durable(router, 1, MigrationConfig::default(), &durability) {
+                Ok(svc) => {
+                    println!("initialized durable state under {data_dir}");
+                    svc
+                }
+                Err(e) => {
+                    eprintln!("cannot initialize {data_dir}: {e}");
+                    return 1;
+                }
+            }
         }
     };
-    let service = Service::new(router);
     let max_conns: usize = args.get_parsed("max-conns").unwrap_or(256);
     match service.serve(&cfg.bind, max_conns) {
         Ok(handle) => {
@@ -505,6 +565,130 @@ fn cmd_drill(raw: &[String]) -> i32 {
         return 1;
     }
     0
+}
+
+fn cmd_crashdrill(raw: &[String]) -> i32 {
+    use memento::testkit::crashdrill::{self, DrillConfig, ALL_SITES};
+    let spec = ArgSpec::new("crashdrill", "kill-mid-run durability drills (DESIGN.md §11.4)")
+        .flag("site", "", "one crash site (default: every site)")
+        .flag("seed", "", "one drill seed (default: the fixed CI seed set)")
+        .flag("seeds", "8", "seeds per site when --seed is unset")
+        .flag("dir", "", "scratch directory (default: under the OS temp dir)")
+        .flag("nodes", "8", "initial cluster size")
+        .flag("preload", "2000", "acked PUTs before the admin command")
+        .flag("keyspace", "1200", "distinct keys (< preload forces overwrites)")
+        .switch("child", "internal: run the armed workload child");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nodes: usize = args.get_parsed("nodes").unwrap_or(8);
+    let preload: usize = args.get_parsed("preload").unwrap_or(2000);
+    let keyspace: usize = args.get_parsed("keyspace").unwrap_or(1200);
+
+    if args.switch("child") {
+        // Internal interface: spawned by run_drill with MEMENTO_CRASH_AT
+        // armed. Runs the workload and (normally) dies mid-call.
+        let seed: u64 = match args.get_parsed("seed") {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("crashdrill --child: {e}");
+                return 2;
+            }
+        };
+        let site = args.get("site");
+        let dir = args.get("dir");
+        if site.is_empty() || dir.is_empty() {
+            eprintln!("crashdrill --child needs --site and --dir");
+            return 2;
+        }
+        let exe = std::env::current_exe().unwrap_or_default();
+        let mut cfg = DrillConfig::new(seed, site, dir, exe);
+        cfg.nodes = nodes;
+        cfg.preload = preload;
+        cfg.keyspace = keyspace;
+        return match crashdrill::run_child(&cfg) {
+            Ok(code) => code as i32,
+            Err(e) => {
+                eprintln!("drill child failed: {e}");
+                1
+            }
+        };
+    }
+
+    let exe = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot locate own binary for the drill child: {e}");
+            return 1;
+        }
+    };
+    let base = if args.get("dir").is_empty() {
+        std::env::temp_dir().join(format!("memento-crashdrill-{}", std::process::id()))
+    } else {
+        std::path::PathBuf::from(args.get("dir"))
+    };
+    let sites: Vec<String> = if args.get("site").is_empty() {
+        ALL_SITES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![args.get("site").to_string()]
+    };
+    // The fixed CI seed set is a pure function of the index so the same
+    // byte-exact crash locations replay on every run.
+    let seeds: Vec<u64> = if args.get("seed").is_empty() {
+        let n: u64 = args.get_parsed("seeds").unwrap_or(8);
+        (0..n).map(|i| 0xC0DE + i * 0x9E37).collect()
+    } else {
+        match args.get_parsed("seed") {
+            Ok(s) => vec![s],
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+
+    let mut failures = 0usize;
+    for site in &sites {
+        for &seed in &seeds {
+            let dir = base.join(format!("{site}-{seed:x}"));
+            let mut cfg = DrillConfig::new(seed, site.clone(), dir, exe.clone());
+            cfg.nodes = nodes;
+            cfg.preload = preload;
+            cfg.keyspace = keyspace;
+            match crashdrill::run_drill(&cfg) {
+                Ok(rep) if rep.pass() => println!("PASS {}", rep.summary()),
+                Ok(rep) => {
+                    failures += 1;
+                    println!("FAIL {}", rep.summary());
+                    for l in rep.lost.iter().take(5) {
+                        eprintln!("  lost: {l}");
+                    }
+                    eprintln!(
+                        "  reproduce: memento crashdrill --site {site} --seed {seed}  \
+                         (scratch kept at {})",
+                        cfg.dir.display()
+                    );
+                }
+                Err(e) => {
+                    failures += 1;
+                    eprintln!("FAIL site={site} seed={seed:#x}: {e}");
+                    eprintln!("  reproduce: memento crashdrill --site {site} --seed {seed}");
+                }
+            }
+        }
+    }
+    if failures == 0 {
+        let _ = std::fs::remove_dir_all(&base);
+        println!("crashdrill: {} drills passed", sites.len() * seeds.len());
+        0
+    } else {
+        eprintln!("crashdrill: {failures} of {} drills FAILED", sites.len() * seeds.len());
+        1
+    }
 }
 
 fn cmd_info(_raw: &[String]) -> i32 {

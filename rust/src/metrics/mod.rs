@@ -195,6 +195,59 @@ impl RouterMetrics {
     }
 }
 
+/// Durability-layer counters (one bundle per [`crate::coordinator::Service`],
+/// shared by every node WAL and the coordinator log). The `WALSTAT`
+/// protocol command reports [`WalMetrics::summary`].
+#[derive(Debug, Default)]
+pub struct WalMetrics {
+    /// Records appended (data + control).
+    pub appends: Counter,
+    /// Bytes appended (framed size).
+    pub bytes_appended: Counter,
+    /// `fsync` calls issued.
+    pub fsyncs: Counter,
+    /// Commits whose durability was covered by another writer's fsync
+    /// (group-commit piggybacks; high is good under concurrency).
+    pub group_commits: Counter,
+    /// Shard snapshots written by compaction.
+    pub snapshots: Counter,
+    /// Data records replayed from shard WALs during recovery.
+    pub replayed_records: Counter,
+    /// Records loaded from shard snapshots during recovery.
+    pub snapshot_records: Counter,
+    /// Torn tails truncated during recovery (≤ 1 per log file per crash).
+    pub torn_tails: Counter,
+    /// Migration plans logged (`PlanBegin`).
+    pub plans_logged: Counter,
+    /// Pending migration plans re-enqueued by recovery.
+    pub plans_recovered: Counter,
+}
+
+impl WalMetrics {
+    /// A zeroed bundle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line summary (the `WALSTAT` protocol payload).
+    pub fn summary(&self) -> String {
+        format!(
+            "appends={} bytes={} fsyncs={} group_commits={} snapshots={} \
+             replayed={} snapshot_records={} torn_tails={} plans_logged={} plans_recovered={}",
+            self.appends.get(),
+            self.bytes_appended.get(),
+            self.fsyncs.get(),
+            self.group_commits.get(),
+            self.snapshots.get(),
+            self.replayed_records.get(),
+            self.snapshot_records.get(),
+            self.torn_tails.get(),
+            self.plans_logged.get(),
+            self.plans_recovered.get()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +320,16 @@ mod tests {
         let ms = m.migration_summary();
         assert!(ms.contains("keys_planned=5"), "{ms}");
         assert!(ms.contains("keys_moved=4"), "{ms}");
+    }
+
+    #[test]
+    fn wal_metrics_summary() {
+        let w = WalMetrics::new();
+        w.appends.add(7);
+        w.torn_tails.inc();
+        let s = w.summary();
+        assert!(s.contains("appends=7"), "{s}");
+        assert!(s.contains("torn_tails=1"), "{s}");
     }
 
     #[test]

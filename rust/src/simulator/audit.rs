@@ -159,6 +159,23 @@ pub fn delta_coverage(
     rep
 }
 
+/// [`delta_coverage`] over a *recovered* migration plan: rebuilds the
+/// plan's [`MoveDelta`] from the source buckets + full-scan flag its WAL
+/// record carried and audits it against the (old, recovered) placement
+/// pair. `missed == 0` is the crash-drill acceptance bar: no key the
+/// half-finished plan was responsible for fell outside the replayed
+/// sources.
+pub fn recovery_coverage(
+    old: &dyn ConsistentHasher,
+    recovered: &dyn ConsistentHasher,
+    sources: &[u32],
+    full_scan: bool,
+    keys: &[u64],
+) -> DeltaCoverageReport {
+    let delta = MoveDelta { sources: sources.to_vec(), full_scan };
+    delta_coverage(old, recovered, &delta, keys)
+}
+
 /// Monotonicity audit result for one `add()` event.
 #[derive(Debug, Clone)]
 pub struct MonotonicityReport {

@@ -1,0 +1,428 @@
+//! `crashdrill` — deterministic kill-mid-run recovery drills for the
+//! durability layer (DESIGN.md §11.4).
+//!
+//! The drill protocol, adapted from persistent-memory recovery testing
+//! to a WAL: run a storage workload in a **child process**, abort it at
+//! a seed-selected crash point inside the durability code, recover from
+//! the surviving files in the parent, and check every acknowledged
+//! write against a shadow model the child maintained outside the
+//! process under test.
+//!
+//! * **Crash points** are named sites compiled into the WAL and
+//!   migration executor (`hit()` is a no-op unless the process is
+//!   armed, so production runs pay one branch). The child is armed via
+//!   the `MEMENTO_CRASH_AT=<site>:<count>` environment variable: the
+//!   `count`-th visit to `site` calls [`std::process::abort`] — a
+//!   SIGABRT, so nothing flushes, exactly like a SIGKILL except the
+//!   kernel keeps the already-`write(2)`-ten bytes. Which visit dies is
+//!   derived from the drill seed, so one seed pins one byte-exact crash
+//!   location and the whole drill is reproducible from the printed seed.
+//! * **The acked-write invariant**: the child appends `P <key> <value>`
+//!   to `shadow.log` only *after* the service acknowledged the PUT.
+//!   Every complete shadow line must therefore be readable after
+//!   recovery — fsync-before-ack is the property under test. A torn
+//!   final shadow line means the crash hit between ack and shadow
+//!   append; skipping it only under-checks, never over-checks.
+//! * **Migration drills** preload, then issue one `KILLN` and crash the
+//!   executor mid-plan (between install and extract for the
+//!   `migration-install` site). Recovery must replay the logged plan
+//!   and end with `delta_coverage` `missed == 0` — the copy-install-
+//!   remove invariant surviving a process death.
+
+use crate::coordinator::migration::MigrationConfig;
+use crate::coordinator::router::Router;
+use crate::coordinator::service::Service;
+use crate::coordinator::wal::{DurabilityConfig, FsyncPolicy, WalOptions};
+use crate::error::Context;
+use crate::hashing::mix::splitmix64_mix;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Crash site: right after a WAL record's frame is `write(2)`-ten,
+/// before the commit fsync — the record is in the page cache only.
+pub const WAL_APPEND: &str = "wal-append";
+/// Crash site: inside commit, after deciding to fsync but before the
+/// `fdatasync` call — the largest window where acked state could lag
+/// disk state if the ack ordering were wrong.
+pub const WAL_PRE_FSYNC: &str = "wal-pre-fsync";
+/// Crash site: top of a migration batch, after candidate selection but
+/// before any install — the plan is half-executed at a batch boundary.
+pub const MIGRATION_BATCH: &str = "migration-batch";
+/// Crash site: after a batch's movers are installed at their
+/// destinations but before `extract_shard_if` removes the source
+/// copies — the copy-install-remove invariant's double-copy window.
+pub const MIGRATION_INSTALL: &str = "migration-install";
+
+/// All drill sites, in CI matrix order.
+pub const ALL_SITES: [&str; 4] = [WAL_APPEND, WAL_PRE_FSYNC, MIGRATION_BATCH, MIGRATION_INSTALL];
+
+/// Visit the named crash site. No-op unless this process was armed via
+/// `MEMENTO_CRASH_AT=<site>:<count>`; the `count`-th visit aborts the
+/// process (SIGABRT — no flush, no unwind, no drop glue).
+pub fn hit(site: &str) {
+    static ARMED: OnceLock<Option<(String, AtomicU64)>> = OnceLock::new();
+    let armed = ARMED.get_or_init(|| {
+        let v = std::env::var("MEMENTO_CRASH_AT").ok()?;
+        let (s, n) = v.rsplit_once(':')?;
+        let n: u64 = n.parse().ok()?;
+        if n == 0 {
+            return None;
+        }
+        Some((s.to_string(), AtomicU64::new(n)))
+    });
+    if let Some((armed_site, left)) = armed {
+        if armed_site == site && left.fetch_sub(1, Ordering::Relaxed) == 1 {
+            std::process::abort();
+        }
+    }
+}
+
+/// One drill: seed, site, scratch directory and workload shape. The
+/// same config must be passed to the child (via CLI flags) and the
+/// parent — both derive the kill count and the workload from it.
+#[derive(Debug, Clone)]
+pub struct DrillConfig {
+    /// Drill seed: selects the kill visit count, the workload values
+    /// and (for migration sites) the victim node.
+    pub seed: u64,
+    /// Crash site name (one of [`ALL_SITES`]).
+    pub site: String,
+    /// Scratch directory; holds `data/` (the durable state under test)
+    /// and `shadow.log` (the child's ack journal).
+    pub dir: PathBuf,
+    /// The `memento` binary to spawn as the child.
+    pub child_exe: PathBuf,
+    /// Initial cluster size.
+    pub nodes: usize,
+    /// PUTs issued before the admin command (every one acked + shadowed).
+    pub preload: usize,
+    /// Distinct keys (`< preload` forces overwrites, exercising
+    /// last-write-wins replay).
+    pub keyspace: usize,
+}
+
+impl DrillConfig {
+    /// Standard drill shape: 8 nodes, 2000 preload PUTs over 1200 keys.
+    pub fn new(
+        seed: u64,
+        site: impl Into<String>,
+        dir: impl Into<PathBuf>,
+        child_exe: impl Into<PathBuf>,
+    ) -> Self {
+        Self {
+            seed,
+            site: site.into(),
+            dir: dir.into(),
+            child_exe: child_exe.into(),
+            nodes: 8,
+            preload: 2000,
+            keyspace: 1200,
+        }
+    }
+
+    /// Which visit to the armed site dies, derived from the seed. WAL
+    /// sites see one visit per preload PUT, so any count in
+    /// `1..=preload` fires during the workload; migration sites see one
+    /// visit per non-empty executor batch (≥ ~14 of 16 shards for this
+    /// workload shape), so the count stays small.
+    pub fn kill_count(&self) -> u64 {
+        match self.site.as_str() {
+            WAL_APPEND | WAL_PRE_FSYNC => 1 + splitmix64_mix(self.seed) % self.preload.max(1) as u64,
+            _ => 1 + splitmix64_mix(self.seed ^ 0x9E37_79B9_7F4A_7C15) % 6,
+        }
+    }
+
+    /// The victim node for migration drills (always initially working).
+    pub fn victim(&self) -> u64 {
+        splitmix64_mix(self.seed ^ 0xD1B5_4A32_D192_ED03) % self.nodes.max(1) as u64
+    }
+
+    fn is_migration_site(&self) -> bool {
+        self.site == MIGRATION_BATCH || self.site == MIGRATION_INSTALL
+    }
+
+    fn data_dir(&self) -> PathBuf {
+        self.dir.join("data")
+    }
+
+    fn shadow_path(&self) -> PathBuf {
+        self.dir.join("shadow.log")
+    }
+}
+
+/// Child exit code: the workload completed without the crash firing
+/// (the site/count pair never armed — a drill configuration bug).
+pub const EXIT_NO_CRASH: u8 = 3;
+/// Child exit code: the service returned a protocol error mid-workload.
+pub const EXIT_PROTOCOL: u8 = 4;
+
+/// The child side: run the workload against a durable service until
+/// the armed crash point aborts the process. Returns an exit code only
+/// if the crash never fires.
+pub fn run_child(cfg: &DrillConfig) -> crate::Result<u8> {
+    let router = Router::new("memento", cfg.nodes, cfg.nodes * 10 + 64, None)?;
+    let durability = DurabilityConfig {
+        dir: cfg.data_dir(),
+        // Always-fsync with manual-only compaction: the visit counts at
+        // every site are then a pure function of the workload.
+        opts: WalOptions { fsync: FsyncPolicy::Always, compact_bytes: 0 },
+    };
+    let svc = Service::durable(router, 1, MigrationConfig::default(), &durability)?;
+    let mut shadow = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(cfg.shadow_path())
+        .context("open shadow.log")?;
+    for i in 0..cfg.preload {
+        let key = format!("k{}", i % cfg.keyspace.max(1));
+        let val = format!("v{}x{}", cfg.seed, i);
+        let resp = svc.handle(&format!("PUT {key} {val}"));
+        if !resp.starts_with("OK") {
+            eprintln!("drill child: PUT rejected: {resp}");
+            return Ok(EXIT_PROTOCOL);
+        }
+        // Ack first, then shadow: a crash between the two under-checks.
+        shadow
+            .write_all(format!("P {key} {val}\n").as_bytes())
+            .context("append shadow.log")?;
+    }
+    if cfg.is_migration_site() {
+        let victim = cfg.victim();
+        let resp = svc.handle(&format!("KILLN node-{victim}"));
+        if !resp.starts_with("KILLED") {
+            eprintln!("drill child: KILLN rejected: {resp}");
+            return Ok(EXIT_PROTOCOL);
+        }
+        shadow
+            .write_all(format!("A KILLN node-{victim}\n").as_bytes())
+            .context("append shadow.log")?;
+        // No concurrent writes: the executor's visit sequence is
+        // deterministic. The crash fires inside this wait.
+        svc.migration.wait_idle(Duration::from_secs(60));
+    }
+    Ok(EXIT_NO_CRASH)
+}
+
+/// The outcome of one drill, checked by [`DrillReport::pass`].
+#[derive(Debug, Clone)]
+pub struct DrillReport {
+    /// The drill seed (print on failure: it reproduces the run).
+    pub seed: u64,
+    /// Crash site name.
+    pub site: String,
+    /// Which visit to the site died.
+    pub kill_count: u64,
+    /// Acked writes in the shadow model (complete lines only).
+    pub acked: usize,
+    /// Acked writes missing or mismatched after recovery. Must be empty.
+    pub lost: Vec<String>,
+    /// Torn WAL tails truncated during recovery.
+    pub torn_tails: u64,
+    /// Data records replayed from shard WALs.
+    pub wal_records: u64,
+    /// Pending migration plans replayed by recovery.
+    pub plans_replayed: usize,
+    /// Records the replayed plans moved.
+    pub plan_moved: u64,
+    /// Keys relocated by the post-replay reconcile sweep.
+    pub reconciled: u64,
+    /// `delta_coverage` missed sum over replayed plans. Must be zero.
+    pub coverage_missed: usize,
+    /// Whether the child acked the admin command before dying
+    /// (migration sites after the preload always do).
+    pub admin_acked: bool,
+}
+
+impl DrillReport {
+    /// Zero acked-write loss and zero stranded movers.
+    pub fn pass(&self) -> bool {
+        self.lost.is_empty() && self.coverage_missed == 0
+    }
+
+    /// One line for the CI log.
+    pub fn summary(&self) -> String {
+        format!(
+            "site={} seed={:#x} kill_count={} acked={} lost={} torn_tails={} \
+             wal_records={} plans_replayed={} plan_moved={} reconciled={} coverage_missed={}",
+            self.site,
+            self.seed,
+            self.kill_count,
+            self.acked,
+            self.lost.len(),
+            self.torn_tails,
+            self.wal_records,
+            self.plans_replayed,
+            self.plan_moved,
+            self.reconciled,
+            self.coverage_missed
+        )
+    }
+}
+
+/// The parent side: spawn the armed child, expect it to die by signal,
+/// recover from the surviving files and check every acked write against
+/// the shadow model. The scratch directory is removed on pass and kept
+/// on failure for post-mortem.
+pub fn run_drill(cfg: &DrillConfig) -> crate::Result<DrillReport> {
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+    std::fs::create_dir_all(&cfg.dir)
+        .with_context(|| format!("create drill dir {}", cfg.dir.display()))?;
+    let kill_count = cfg.kill_count();
+    let status = std::process::Command::new(&cfg.child_exe)
+        .args([
+            "crashdrill",
+            "--child",
+            "--seed",
+            &cfg.seed.to_string(),
+            "--site",
+            &cfg.site,
+            "--dir",
+            &cfg.dir.display().to_string(),
+            "--nodes",
+            &cfg.nodes.to_string(),
+            "--preload",
+            &cfg.preload.to_string(),
+            "--keyspace",
+            &cfg.keyspace.to_string(),
+        ])
+        .env("MEMENTO_CRASH_AT", format!("{}:{}", cfg.site, kill_count))
+        .stdout(std::process::Stdio::null())
+        .status()
+        .with_context(|| format!("spawn drill child {}", cfg.child_exe.display()))?;
+    if let Some(code) = status.code() {
+        crate::bail!(
+            "drill child exited with code {code} instead of dying at {}:{} (seed {:#x}) — \
+             the kill point never fired",
+            cfg.site,
+            kill_count,
+            cfg.seed
+        );
+    }
+
+    // Recover in-process (manual migrator: Service::recover replays any
+    // pending plan inline before returning).
+    let durability = DurabilityConfig::new(cfg.data_dir());
+    let (svc, recovery) = Service::recover(
+        &durability,
+        1,
+        MigrationConfig { auto: false, ..MigrationConfig::default() },
+    )?;
+
+    // Shadow model: complete lines only. A torn final line means the
+    // crash hit after the ack but mid-shadow-append; skipping it can
+    // only under-check.
+    let shadow_raw = std::fs::read_to_string(cfg.shadow_path()).unwrap_or_default();
+    let mut lines: Vec<&str> = shadow_raw.split('\n').collect();
+    if !shadow_raw.ends_with('\n') {
+        lines.pop();
+    }
+    let mut model: HashMap<&str, &str> = HashMap::new();
+    let mut admin_acked = false;
+    for line in lines {
+        let mut p = line.split_whitespace();
+        match p.next() {
+            Some("P") => {
+                if let (Some(k), Some(v)) = (p.next(), p.next()) {
+                    model.insert(k, v);
+                }
+            }
+            Some("A") => admin_acked = true,
+            _ => {}
+        }
+    }
+    let mut lost = Vec::new();
+    for (&k, &v) in &model {
+        let resp = svc.handle(&format!("GET {k}"));
+        let got = resp.split_whitespace().nth(2);
+        if !resp.starts_with("VALUE") || got != Some(v) {
+            lost.push(format!("{k}={v} -> {resp}"));
+        }
+    }
+    lost.sort();
+
+    // Every replayed plan must cover the observed post-recovery
+    // movement: zero stranded movers (delta_coverage missed == 0).
+    let keys: Vec<u64> = svc
+        .storage
+        .nodes()
+        .iter()
+        .flat_map(|(_id, n)| n.keys())
+        .collect();
+    let mut coverage_missed = 0usize;
+    for plan in &recovery.plans {
+        let sources: Vec<u32> = plan.sources.iter().map(|(b, _n)| *b).collect();
+        let rep = svc.router.with_view(|algo, _m| {
+            crate::simulator::audit::recovery_coverage(
+                &plan.old_memento,
+                algo,
+                &sources,
+                plan.full_scan,
+                &keys,
+            )
+        });
+        coverage_missed += rep.missed;
+    }
+
+    let report = DrillReport {
+        seed: cfg.seed,
+        site: cfg.site.clone(),
+        kill_count,
+        acked: model.len(),
+        lost,
+        torn_tails: recovery.replay.torn_tails,
+        wal_records: recovery.replay.wal_records,
+        plans_replayed: recovery.plans.len(),
+        plan_moved: recovery.plan_moved,
+        reconciled: recovery.reconciled,
+        coverage_missed,
+        admin_acked,
+    };
+    if report.pass() {
+        let _ = std::fs::remove_dir_all(&cfg.dir);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_count_is_deterministic_and_in_range() {
+        for seed in [0u64, 1, 7, 0xDEAD_BEEF] {
+            for site in ALL_SITES {
+                let cfg = DrillConfig::new(seed, site, "/tmp/x", "/bin/true");
+                let a = cfg.kill_count();
+                assert_eq!(a, cfg.kill_count(), "kill_count must be a pure function");
+                assert!(a >= 1);
+                if site == WAL_APPEND || site == WAL_PRE_FSYNC {
+                    assert!(a <= cfg.preload as u64);
+                } else {
+                    assert!(a <= 6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn victim_is_a_valid_initial_node() {
+        for seed in 0..32u64 {
+            let cfg = DrillConfig::new(seed, MIGRATION_INSTALL, "/tmp/x", "/bin/true");
+            assert!(cfg.victim() < cfg.nodes as u64);
+        }
+    }
+
+    #[test]
+    fn hit_is_a_noop_when_unarmed() {
+        // The test process has no MEMENTO_CRASH_AT: a million visits
+        // must neither abort nor slow to a crawl.
+        for _ in 0..1_000 {
+            hit(WAL_APPEND);
+            hit(MIGRATION_INSTALL);
+        }
+    }
+}

@@ -9,6 +9,8 @@
 //!   (removal sequences, cluster operation scripts — see [`script`]).
 //! * Deterministic: every run derives its cases from a fixed seed (override
 //!   with `MEMENTO_TEST_SEED` to explore; it is printed on failure).
+//! * [`crashdrill`] — deterministic kill-mid-run recovery drills for the
+//!   durability layer (child process + seed-selected crash points).
 
 #[allow(unused_imports)] // Rng64 brings the generator methods into scope for callers
 pub use crate::hashing::prng::Rng64;
@@ -16,6 +18,7 @@ pub use crate::hashing::prng::Rng64;
 use crate::hashing::prng::Xoshiro256;
 use std::fmt::Debug;
 
+pub mod crashdrill;
 pub mod script;
 
 /// Property-run configuration.

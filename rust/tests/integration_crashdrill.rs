@@ -1,0 +1,94 @@
+//! Integration: the crash-drill harness itself (DESIGN.md §11.4). Each
+//! test spawns the real `memento` binary as an armed child, aborts it
+//! at a deterministic crash site, recovers from the surviving files and
+//! checks the acked-write invariant. A failure prints the seed — rerun
+//! with `memento crashdrill --site <site> --seed <seed>`.
+
+use memento::testkit::crashdrill::{
+    run_drill, DrillConfig, MIGRATION_BATCH, MIGRATION_INSTALL, WAL_APPEND, WAL_PRE_FSYNC,
+};
+
+const CHILD: &str = env!("CARGO_BIN_EXE_memento");
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("memento-itdrill-{}-{name}", std::process::id()))
+}
+
+fn assert_drill_passes(cfg: &DrillConfig) {
+    let rep = run_drill(cfg).unwrap_or_else(|e| {
+        panic!("drill {}:{:#x} failed to run: {e}", cfg.site, cfg.seed)
+    });
+    assert!(
+        rep.pass(),
+        "crash drill failed — reproduce with `memento crashdrill --site {} --seed {}`\n  {}\n  lost: {:?}",
+        cfg.site,
+        cfg.seed,
+        rep.summary(),
+        rep.lost
+    );
+}
+
+/// The acceptance drill: abort the executor between install and extract
+/// (the copy-install-remove double-copy window) mid-drain of a killed
+/// node. Recovery must replay the logged plan with zero acked-write
+/// loss and zero stranded movers.
+#[test]
+fn kill_between_install_and_extract_recovers_losslessly() {
+    let mut cfg =
+        DrillConfig::new(0xA11CE, MIGRATION_INSTALL, scratch("install"), CHILD);
+    cfg.preload = 900;
+    cfg.keyspace = 540;
+    let rep = run_drill(&cfg).expect("drill must run");
+    assert!(
+        rep.pass(),
+        "reproduce with `memento crashdrill --site {} --seed {}`\n  {}\n  lost: {:?}",
+        cfg.site,
+        cfg.seed,
+        rep.summary(),
+        rep.lost
+    );
+    assert!(rep.admin_acked, "the KILLN was acked before the crash");
+    assert_eq!(rep.plans_replayed, 1, "the half-finished drain must replay");
+    assert_eq!(rep.coverage_missed, 0, "delta_coverage missed == 0 post-recovery");
+}
+
+/// Abort at a batch boundary: the plan is half-executed with some
+/// batches fully moved and the rest untouched.
+#[test]
+fn kill_at_a_migration_batch_boundary_recovers_losslessly() {
+    let mut cfg = DrillConfig::new(0xBA7C4, MIGRATION_BATCH, scratch("batch"), CHILD);
+    cfg.preload = 900;
+    cfg.keyspace = 540;
+    assert_drill_passes(&cfg);
+}
+
+/// Abort right after a record's bytes are written (pre-fsync page-cache
+/// state) and inside the commit path before the fsync call, across a
+/// few seeds each — every acked PUT must survive.
+#[test]
+fn kills_inside_the_wal_write_path_lose_no_acked_write() {
+    for (i, site) in [WAL_APPEND, WAL_PRE_FSYNC].into_iter().enumerate() {
+        for seed in [3u64, 0x5EED] {
+            let mut cfg =
+                DrillConfig::new(seed, site, scratch(&format!("wal{i}-{seed:x}")), CHILD);
+            cfg.nodes = 6;
+            cfg.preload = 500;
+            cfg.keyspace = 300;
+            assert_drill_passes(&cfg);
+        }
+    }
+}
+
+/// A site the child never visits must be flagged as a drill
+/// configuration bug (the child exits instead of dying by signal).
+#[test]
+fn a_drill_that_never_crashes_is_an_error() {
+    let mut cfg =
+        DrillConfig::new(7, "no-such-site", scratch("nocrash"), CHILD);
+    cfg.preload = 50;
+    cfg.keyspace = 50;
+    let err = run_drill(&cfg).expect_err("an unvisited site cannot pass");
+    let msg = err.to_string();
+    assert!(msg.contains("never fired"), "unexpected error: {msg}");
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+}

@@ -40,6 +40,7 @@ def main():
     ap.add_argument("--loadgen", help="BENCH_loadgen_smoke.json from this run (optional)")
     ap.add_argument("--migration", help="BENCH_migration.json from this run (optional)")
     ap.add_argument("--weighted", help="BENCH_weighted.json from this run (optional)")
+    ap.add_argument("--wal", help="BENCH_wal.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
@@ -110,6 +111,23 @@ def main():
             "weighted balance err (worst cell, ceiling)",
             float(wtd["balance_err_max"]),
             baseline["weighted_balance_err_max"],
+        )
+
+    if args.wal:
+        wal = load(args.wal)
+        # Group commit (one fsync amortized over 64 appends) and the
+        # page-cache bound. The `always` cell is deliberately not gated:
+        # it measures the shared runner's raw fsync latency, which
+        # varies by >10x across runner disks.
+        gate(
+            "wal batch64 puts/s (group commit)",
+            float(wal["wal_batch_puts_per_s"]),
+            baseline["wal_batch_puts_per_s"],
+        )
+        gate(
+            "wal osonly puts/s (page-cache bound)",
+            float(wal["wal_osonly_puts_per_s"]),
+            baseline["wal_osonly_puts_per_s"],
         )
 
     width = max(len(c[0]) for c in checks)

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Install measured perf-smoke figures over the committed references.
+
+The committed BENCH_*.json files at the repo root started life as
+PROJECTED references (the authoring environment had no Rust toolchain —
+see CHANGES.md PR 3/PR 6). Every CI perf-smoke run uploads the real
+measured JSONs as the `perf-smoke` workflow artifact. This script takes
+a downloaded artifact directory and replaces the committed references
+with those measured runs, refusing anything that still carries a
+PROJECTED note or is missing its gate figures:
+
+    gh run download --name perf-smoke --dir /tmp/perf-smoke
+    python3 scripts/refresh_baselines.py /tmp/perf-smoke
+    git diff BENCH_*.json   # review, then commit
+
+With --ratchet it also prints suggested ci/perf-baseline.json floors
+(2/3 of each measured gate figure: tighter than the deliberately loose
+pre-measurement floors, still slack enough for shared-runner jitter).
+Stdlib only; no third-party packages.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Committed reference -> the keys a measured run must carry (the gate
+# figures perf_compare.py reads, plus the rows they are derived from).
+REFERENCES = {
+    "BENCH_router_scaling.json": ["loadgen_closed", "route_only"],
+    "BENCH_migration.json": ["admin_ops_s_min", "drain_keys_per_s_min"],
+    "BENCH_weighted.json": ["lookup_ops_s_min", "balance_err_max"],
+    "BENCH_wal.json": ["wal_batch_puts_per_s", "wal_osonly_puts_per_s"],
+}
+
+# (baseline key, source file, gate figure key) for --ratchet.
+RATCHETS = [
+    ("migration_admin_ops_s", "BENCH_migration.json", "admin_ops_s_min"),
+    ("migration_drain_keys_per_s", "BENCH_migration.json", "drain_keys_per_s_min"),
+    ("weighted_lookup_ops_s", "BENCH_weighted.json", "lookup_ops_s_min"),
+    ("wal_batch_puts_per_s", "BENCH_wal.json", "wal_batch_puts_per_s"),
+    ("wal_osonly_puts_per_s", "BENCH_wal.json", "wal_osonly_puts_per_s"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact_dir", help="downloaded perf-smoke artifact directory")
+    ap.add_argument("--repo-root", default=os.path.join(os.path.dirname(__file__), ".."))
+    ap.add_argument(
+        "--ratchet",
+        action="store_true",
+        help="also print suggested ci/perf-baseline.json floors (2/3 of measured)",
+    )
+    args = ap.parse_args()
+
+    installed, skipped = [], []
+    for name, required in REFERENCES.items():
+        src = os.path.join(args.artifact_dir, name)
+        if not os.path.exists(src):
+            skipped.append((name, "not in artifact"))
+            continue
+        with open(src) as f:
+            data = json.load(f)
+        if "PROJECTED" in str(data.get("note", "")):
+            skipped.append((name, "still carries a PROJECTED note — not a measured run"))
+            continue
+        missing = [k for k in required if k not in data]
+        if missing:
+            skipped.append((name, f"missing gate figures {missing}"))
+            continue
+        dst = os.path.join(args.repo_root, name)
+        with open(dst, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        installed.append(name)
+        print(f"installed {name} (measured run -> {dst})")
+
+    for name, why in skipped:
+        print(f"skipped {name}: {why}")
+
+    if args.ratchet and installed:
+        print("\nsuggested ci/perf-baseline.json floors (2/3 of measured):")
+        for key, src_name, figure in RATCHETS:
+            if src_name not in installed:
+                continue
+            with open(os.path.join(args.repo_root, src_name)) as f:
+                measured = float(json.load(f)[figure])
+            print(f'  "{key}": {int(measured * 2 / 3)},')
+
+    if not installed:
+        print("nothing installed — is this a perf-smoke artifact directory?")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
