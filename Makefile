@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate needs none of these — `cargo build`
 # is dependency-free; `artifacts` is only for the optional PJRT path.
 
-.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke crash-drill refresh-baselines
+.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke obs-smoke crash-drill refresh-baselines
 
 build:
 	cargo build --release
@@ -48,10 +48,21 @@ perf-smoke:
 	cargo bench --bench bench_migration
 	cargo bench --bench bench_weighted
 	cargo bench --bench bench_wal
+	cargo bench --bench bench_obs
 	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
 	  --loadgen BENCH_loadgen_smoke.json --migration BENCH_migration.json \
 	  --weighted BENCH_weighted.json --wal BENCH_wal.json \
+	  --obs BENCH_obs.json \
 	  --baseline ci/perf-baseline.json
+
+# Mirror of the ci.yml `obs-smoke` step: a short churny loadgen run that
+# writes the METRICS exposition to a file, validated by a strict
+# stdlib-only scraper (scripts/check_exposition.py).
+obs-smoke:
+	cargo run --release -- loadgen --mode closed --workload uniform \
+	  --churn oneshot --threads 4 --duration 1 --no-csv \
+	  --expose exposition.txt
+	python3 scripts/check_exposition.py exposition.txt
 
 # Mirror of the ci.yml `crash-drill` job: kill the service at each of
 # the four crash sites across 8 fixed seeds, recover, and fail on any

@@ -1,0 +1,109 @@
+//! Observability overhead bench — proves the per-stage span
+//! instrumentation does not tax the wait-free read path (DESIGN.md §12).
+//!
+//! Two cells over the same key stream against one router:
+//!
+//! * `raw`  — `router.route(key)` alone, the PR-6 hot path;
+//! * `span` — the instrumented call-site shape the service uses:
+//!   `obs::timer(Stage::Route)` (1-in-`SAMPLE_PERIOD` sampled), the
+//!   route, then the timer drop.
+//!
+//! The cells run interleaved (raw, span, raw, span, …) for several
+//! rounds and each takes its best round, so CPU-frequency drift on a
+//! shared runner biases neither side. CI gates the span cell's absolute
+//! throughput (floor) and the relative overhead (ceiling,
+//! `obs_route_overhead_pct_max` in `ci/perf-baseline.json`).
+//!
+//! Emits `results/obs.csv` plus `BENCH_obs.json` (path override
+//! `MEMENTO_OBS_JSON`; key count `MEMENTO_OBS_KEYS`).
+
+use memento::benchkit::{black_box, report::Table};
+use memento::coordinator::router::Router;
+use memento::hashing::mix::splitmix64_mix;
+use memento::obs::{self, Stage};
+use std::time::Instant;
+
+const NODES: usize = 64;
+const ROUNDS: usize = 5;
+
+fn run_raw(router: &Router, keys: u64) -> f64 {
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for i in 0..keys {
+        let (b, _node) = router.route(splitmix64_mix(i));
+        acc ^= u64::from(b);
+    }
+    black_box(acc);
+    keys as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+fn run_span(router: &Router, keys: u64) -> f64 {
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for i in 0..keys {
+        let t = obs::timer(Stage::Route);
+        let (b, _node) = router.route(splitmix64_mix(i));
+        drop(t);
+        acc ^= u64::from(b);
+    }
+    black_box(acc);
+    keys as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+fn main() {
+    let keys: u64 = std::env::var("MEMENTO_OBS_KEYS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    let router = Router::new("memento", NODES, NODES * 10, None).expect("router");
+    println!(
+        "obs smoke: {keys} routes on {NODES} nodes, raw vs spanned \
+         (1-in-{} sampling), best of {ROUNDS} interleaved rounds\n",
+        obs::SAMPLE_PERIOD
+    );
+
+    // Warm-up: fault in the table and let the branch predictors settle
+    // before anything is timed.
+    run_raw(&router, keys / 10);
+
+    let (mut raw_best, mut span_best) = (0.0f64, 0.0f64);
+    for _ in 0..ROUNDS {
+        raw_best = raw_best.max(run_raw(&router, keys));
+        span_best = span_best.max(run_span(&router, keys));
+    }
+    let overhead_pct = (raw_best / span_best.max(1e-9) - 1.0) * 100.0;
+
+    let mut table = Table::new("obs", &["cell", "keys", "ops_per_s", "ns_per_op"]);
+    for (cell, ops) in [("raw", raw_best), ("span", span_best)] {
+        table.push_row(vec![
+            cell.to_string(),
+            keys.to_string(),
+            format!("{ops:.0}"),
+            format!("{:.2}", 1e9 / ops.max(1e-9)),
+        ]);
+    }
+    table.emit("obs");
+    println!(
+        "span overhead: {overhead_pct:.2}% ({:.0} -> {:.0} ops/s)",
+        raw_best, span_best
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"keys\": {keys},\n  \"nodes\": {NODES},\n  \
+         \"sample_period\": {},\n  \"obs_route_raw_ops_s\": {raw_best:.1},\n  \
+         \"obs_route_span_ops_s\": {span_best:.1},\n  \
+         \"obs_route_overhead_pct\": {overhead_pct:.3}\n}}\n",
+        obs::SAMPLE_PERIOD
+    );
+    // Like the other perf-smoke benches: the gate input lives at the
+    // workspace root, and a failed write must fail the bench.
+    let path = std::env::var("MEMENTO_OBS_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_obs.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

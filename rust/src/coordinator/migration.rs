@@ -292,6 +292,11 @@ impl Migrator {
     fn enqueue_inner(&self, plan: MigrationPlan) -> usize {
         let sources = plan.sources.len();
         self.router.metrics.plans_enqueued.inc();
+        crate::obs::recorder().record(
+            crate::obs::EventKind::PlanBegin,
+            plan.epoch,
+            sources as u64,
+        );
         self.queued.fetch_add(1, Ordering::Relaxed);
         let mut q = lock_recover(&self.q);
         q.pending.push_back(Arc::new(plan));
@@ -375,6 +380,7 @@ impl Migrator {
         q.active.retain(|p| !Arc::ptr_eq(p, plan));
         self.queued.fetch_sub(1, Ordering::Relaxed);
         self.router.metrics.plans_done.inc();
+        crate::obs::recorder().record(crate::obs::EventKind::PlanEnd, plan.epoch, 0);
         if q.pending.is_empty() && q.active.is_empty() {
             drop(q);
             self.idle.notify_all();
@@ -465,12 +471,14 @@ impl Migrator {
         drain_all: bool,
     ) -> u64 {
         let metrics = &self.router.metrics;
+        let t_plan = crate::obs::timer_always(crate::obs::Stage::MigPlan);
         let candidates: Vec<u64> = if drain_all {
             chunk.to_vec()
         } else {
             let algo = plan.old_placement.algo();
             chunk.iter().copied().filter(|&k| b_srcs.contains(&algo.lookup(k))).collect()
         };
+        t_plan.finish();
         if candidates.is_empty() {
             return 0;
         }
@@ -483,6 +491,7 @@ impl Migrator {
         // concurrent membership change; a sustained storm falls back to
         // per-key resolution under one pinned snapshot, which cannot see
         // an unbound bucket — a chunk is never abandoned.
+        let t_route = crate::obs::timer_always(crate::obs::Stage::MigRouteBatch);
         let mut targets: HashMap<u64, NodeId> = HashMap::new();
         let mut tries = 0u32;
         loop {
@@ -511,6 +520,7 @@ impl Migrator {
             }
             std::thread::yield_now();
         }
+        t_route.finish();
         if targets.is_empty() {
             metrics.batches_inflight.dec();
             return 0;
@@ -522,18 +532,23 @@ impl Migrator {
         // reads need no lock against the executor. `put_if_absent`: a
         // concurrent client PUT at the destination is fresher than this
         // in-flight copy and must win.
+        let t_install = crate::obs::timer_always(crate::obs::Stage::MigInstall);
         for (&k, &dst) in &targets {
             if let Some(v) = src.get(k) {
                 self.storage.node(dst).put_if_absent(k, v);
             }
         }
+        t_install.finish();
         // The widest crash window the copy-install-remove invariant must
         // cover: copies are installed but the source still holds them.
         crashdrill::hit(crashdrill::MIGRATION_INSTALL);
+        let t_extract = crate::obs::timer_always(crate::obs::Stage::MigExtract);
         let removed = src.extract_shard_if(shard, targets.len(), |k| targets.contains_key(&k));
+        t_extract.finish();
         let moved = removed.len() as u64;
         metrics.keys_moved.add(moved);
         metrics.batches_inflight.dec();
+        crate::obs::recorder().record(crate::obs::EventKind::BatchDone, moved, plan.epoch);
         moved
     }
 }

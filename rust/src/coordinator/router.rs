@@ -339,6 +339,11 @@ impl Router {
         let epoch = membership.epoch();
         self.published.publish(build_snapshot(placement, membership));
         self.metrics.epochs.inc();
+        crate::obs::recorder().record(
+            crate::obs::EventKind::EpochPublish,
+            epoch,
+            changed_buckets.len() as u64,
+        );
         Ok(ChangeSeed { old_placement, old_membership, delta, changed_buckets, epoch })
     }
 

@@ -108,15 +108,27 @@ impl StorageNode {
     pub fn put(&self, key: u64, value: Vec<u8>) {
         self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let s = Self::shard_of(key);
+        let t_lock = crate::obs::timer(crate::obs::Stage::ShardLockWait);
         let mut guard = lock_recover(&self.shards[s]);
-        let seq = self.wal.as_ref().map(|w| w.append_put(s, key, &value));
+        drop(t_lock);
+        let seq = match &self.wal {
+            Some(w) => {
+                let t_append = crate::obs::timer(crate::obs::Stage::WalAppend);
+                let seq = w.append_put(s, key, &value);
+                drop(t_append);
+                Some(seq)
+            }
+            None => None,
+        };
         guard.insert(key, value);
         // Compaction fsyncs the snapshot, which covers the new record.
         let compacted = self.maybe_compact(s, &guard);
         drop(guard);
         if let (Some(w), Some(seq)) = (&self.wal, seq) {
             if !compacted {
+                let t_sync = crate::obs::timer(crate::obs::Stage::FsyncWait);
                 w.commit(s, seq);
+                drop(t_sync);
             }
         }
     }
@@ -198,17 +210,29 @@ impl StorageNode {
     pub fn put_if_absent(&self, key: u64, value: Vec<u8>) -> bool {
         self.puts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let s = Self::shard_of(key);
+        let t_lock = crate::obs::timer(crate::obs::Stage::ShardLockWait);
         let mut shard = lock_recover(&self.shards[s]);
+        drop(t_lock);
         if shard.contains_key(&key) {
             return false;
         }
-        let seq = self.wal.as_ref().map(|w| w.append_put(s, key, &value));
+        let seq = match &self.wal {
+            Some(w) => {
+                let t_append = crate::obs::timer(crate::obs::Stage::WalAppend);
+                let seq = w.append_put(s, key, &value);
+                drop(t_append);
+                Some(seq)
+            }
+            None => None,
+        };
         shard.insert(key, value);
         let compacted = self.maybe_compact(s, &shard);
         drop(shard);
         if let (Some(w), Some(seq)) = (&self.wal, seq) {
             if !compacted {
+                let t_sync = crate::obs::timer(crate::obs::Stage::FsyncWait);
                 w.commit(s, seq);
+                drop(t_sync);
             }
         }
         true

@@ -506,6 +506,7 @@ impl NodeWal {
                 io_panic(g.f.sync_data(), "fsync", &self.dir);
                 g.synced = high;
                 self.metrics.fsyncs.inc();
+                crate::obs::recorder().record(crate::obs::EventKind::Fsync, s as u64, high);
             }
             FsyncPolicy::Batch(n) => {
                 let mut g = lock_recover(&w.sync);
@@ -515,6 +516,7 @@ impl NodeWal {
                     io_panic(g.f.sync_data(), "fsync", &self.dir);
                     g.synced = high;
                     self.metrics.fsyncs.inc();
+                    crate::obs::recorder().record(crate::obs::EventKind::Fsync, s as u64, high);
                 }
             }
         }

@@ -27,6 +27,10 @@
 //! * [`sync`] — concurrency substrates: epoch-published snapshots behind
 //!   the router's wait-free lookup path ([`sync::epoch::EpochPtr`]) and the
 //!   crate-wide recover-on-poison lock policy.
+//! * [`obs`] — the observability layer: a metrics registry with
+//!   Prometheus-style exposition (`METRICS`/`MSAMPLE`/`SERIES`), sampled
+//!   per-stage latency spans (`STAGES`) and an always-on flight recorder
+//!   with dump-on-panic (`DUMP`).
 //! * [`error`], [`benchkit`], [`testkit`], [`config`], [`cli`], [`metrics`],
 //!   [`netserver`] — substrates built from scratch for the offline
 //!   environment (no anyhow/criterion/proptest/tokio/serde/clap available).
@@ -48,6 +52,7 @@ pub mod hashing;
 pub mod loadgen;
 pub mod metrics;
 pub mod netserver;
+pub mod obs;
 pub mod runtime;
 pub mod simulator;
 pub mod sync;

@@ -26,7 +26,7 @@ pub mod target;
 pub mod workload;
 
 pub use churn::{ChurnAction, ChurnEvent, ChurnScenario};
-pub use report::{NodeLoad, RunReport, WorkerStats};
+pub use report::{NodeLoad, RunReport, StageSnap, TimeSample, WorkerStats};
 pub use target::{Target, TargetFactory};
 pub use workload::{Op, Workload};
 
@@ -163,6 +163,9 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
     } else {
         Some(factory().map_err(|e| format!("churn target: {e}"))?)
     };
+    // The scraper's own connection — best-effort: a target that cannot
+    // open one more connection costs the time series, not the run.
+    let scrape_admin = factory().ok();
 
     let start = Instant::now();
     let mut workers = Vec::with_capacity(threads);
@@ -187,6 +190,13 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
             .map_err(|e| format!("spawn worker {w}: {e}"))?;
         workers.push(handle);
     }
+    let scrape_thread = scrape_admin.and_then(|admin| {
+        let duration = cfg.duration;
+        std::thread::Builder::new()
+            .name("loadgen-scrape".into())
+            .spawn(move || scrape_loop(admin, start, duration))
+            .ok()
+    });
     let churn_thread = match churn_admin {
         Some(admin) => {
             let buckets = cfg.cluster_buckets;
@@ -207,6 +217,10 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
     }
     let churn_events = match churn_thread {
         Some(t) => t.join().map_err(|_| "the churn injector panicked".to_string())?,
+        None => Vec::new(),
+    };
+    let timeseries = match scrape_thread {
+        Some(t) => t.join().unwrap_or_default(),
         None => Vec::new(),
     };
     let elapsed = start.elapsed();
@@ -230,7 +244,38 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
         naive: merged.naive,
         churn_events,
         node_loads,
+        timeseries,
     })
+}
+
+/// Scrape cadence: 16 samples across the run, floored at 50 ms so short
+/// smoke runs don't hammer the admin connection and capped at 1 s so
+/// long runs still resolve churn events.
+fn scrape_cadence(duration: Duration) -> Duration {
+    (duration / 16).clamp(Duration::from_millis(50), Duration::from_secs(1))
+}
+
+/// The mid-run scraper: poll `MSAMPLE` + `STAGES` on a fixed cadence
+/// until the schedule ends, stamping each sample with its offset from
+/// run start. Best-effort — a failed call ends the scrape with whatever
+/// was collected (the run itself is unaffected).
+fn scrape_loop(
+    mut admin: Box<dyn Target>,
+    start: Instant,
+    duration: Duration,
+) -> Vec<report::TimeSample> {
+    let cadence = scrape_cadence(duration);
+    let mut out = Vec::new();
+    while start.elapsed() < duration {
+        std::thread::sleep(cadence);
+        let offset_ms = start.elapsed().as_millis() as u64;
+        let Ok(sample) = admin.call("MSAMPLE") else { break };
+        let Ok(stages) = admin.call("STAGES") else { break };
+        let Some(scalars) = report::parse_msample(&sample) else { break };
+        let stages = report::parse_stages(&stages).unwrap_or_default();
+        out.push(report::TimeSample { offset_ms, scalars, stages });
+    }
+    out
 }
 
 /// End-of-run per-node load sample via the `NODES` protocol command:
@@ -411,6 +456,15 @@ mod tests {
             "the last event has the full polling budget: {:?}",
             rep.churn_events
         );
+        // The scraper ran alongside: a 300 ms run at the 50 ms floor
+        // collects several samples, each with live scalar values.
+        assert!(!rep.timeseries.is_empty(), "mid-run scrapes missing");
+        let last = rep.timeseries.last().unwrap();
+        assert!(
+            last.scalar("memento_router_lookups_scalar").unwrap_or(0) > 0,
+            "{last:?}"
+        );
+        assert!(rep.timeseries_table().is_some());
     }
 
     #[test]

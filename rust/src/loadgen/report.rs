@@ -58,6 +58,106 @@ impl NodeLoad {
     }
 }
 
+/// One mid-run scrape of the service's observability surface: the
+/// `MSAMPLE` scalar snapshot plus the `STAGES` per-stage latency line,
+/// stamped with the scraper's offset from run start. A sequence of these
+/// is what lets a report *attribute* a latency spike: the sample where
+/// `epochs` jumps is the churn event, and the stage whose p999 moves with
+/// it names the culprit.
+#[derive(Debug, Clone)]
+pub struct TimeSample {
+    /// Milliseconds since the run started (scraper clock, not the
+    /// service's registry clock).
+    pub offset_ms: u64,
+    /// `metric=value` pairs from `MSAMPLE`, in wire order.
+    pub scalars: Vec<(String, u64)>,
+    /// Per-stage cumulative latency snapshots from `STAGES`.
+    pub stages: Vec<StageSnap>,
+}
+
+impl TimeSample {
+    /// Look up one scalar by its full exposition name.
+    pub fn scalar(&self, name: &str) -> Option<u64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// One stage's cumulative histogram summary parsed from a `STAGES` token
+/// (`route:n=12,mean=140,p50=120,p99=300,p999=410`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSnap {
+    /// Stage name (`route`, `wal_append`, `mig_install`, …).
+    pub stage: String,
+    /// Samples recorded so far.
+    pub n: u64,
+    /// Mean latency in ns.
+    pub mean_ns: u64,
+    /// Median latency in ns.
+    pub p50_ns: u64,
+    /// 99th-percentile latency in ns.
+    pub p99_ns: u64,
+    /// 99.9th-percentile latency in ns.
+    pub p999_ns: u64,
+}
+
+/// Parse an `MSAMPLE` reply (`OK t=<ms> <metric>=<v> …`) into scalar
+/// pairs; the registry's own `t=` stamp is dropped in favor of the
+/// scraper's run-relative offset. Returns `None` on a non-OK reply.
+pub fn parse_msample(line: &str) -> Option<Vec<(String, u64)>> {
+    let rest = line.strip_prefix("OK ")?;
+    let mut out = Vec::new();
+    for tok in rest.split_whitespace() {
+        let (name, val) = tok.split_once('=')?;
+        if name == "t" {
+            continue;
+        }
+        out.push((name.to_string(), val.parse().ok()?));
+    }
+    Some(out)
+}
+
+/// Parse a `STAGES` reply into per-stage snapshots. Returns `None` on a
+/// non-STAGES reply; unparseable tokens are skipped, not fatal — a
+/// half-understood scrape is still a scrape.
+pub fn parse_stages(line: &str) -> Option<Vec<StageSnap>> {
+    let rest = line.strip_prefix("STAGES")?;
+    let mut out = Vec::new();
+    for tok in rest.split_whitespace() {
+        let Some((stage, fields)) = tok.split_once(':') else { continue };
+        let mut snap = StageSnap {
+            stage: stage.to_string(),
+            n: 0,
+            mean_ns: 0,
+            p50_ns: 0,
+            p99_ns: 0,
+            p999_ns: 0,
+        };
+        let mut ok = true;
+        for kv in fields.split(',') {
+            let Some((k, v)) = kv.split_once('=') else {
+                ok = false;
+                break;
+            };
+            let Ok(v) = v.parse::<u64>() else {
+                ok = false;
+                break;
+            };
+            match k {
+                "n" => snap.n = v,
+                "mean" => snap.mean_ns = v,
+                "p50" => snap.p50_ns = v,
+                "p99" => snap.p99_ns = v,
+                "p999" => snap.p999_ns = v,
+                _ => {}
+            }
+        }
+        if ok {
+            out.push(snap);
+        }
+    }
+    Some(out)
+}
+
 /// One node's computed balance figures: observed traffic share vs the
 /// weight share it should carry. Produced by `RunReport::balance_rows`.
 #[derive(Debug, Clone, Copy)]
@@ -155,6 +255,10 @@ pub struct RunReport {
     /// observed load vs configured weight, so weighted runs show balance
     /// error end to end. Empty when the target did not answer `NODES`.
     pub node_loads: Vec<NodeLoad>,
+    /// Mid-run scrapes of `MSAMPLE` + `STAGES` at a fixed cadence: the
+    /// time axis that attributes a latency spike to a churn event and a
+    /// named stage. Empty when the target did not answer the scrapes.
+    pub timeseries: Vec<TimeSample>,
 }
 
 impl RunReport {
@@ -232,6 +336,21 @@ impl RunReport {
             }
             out.push_str(&format!("weighted balance: max relative error={err_max:.3}\n"));
         }
+        if !self.timeseries.is_empty() {
+            out.push_str("time series (cumulative stage p999, scraped mid-run):\n");
+            for s in &self.timeseries {
+                let lookups = s.scalar("memento_router_lookups_scalar").unwrap_or(0);
+                let epochs = s.scalar("memento_router_epochs").unwrap_or(0);
+                out.push_str(&format!(
+                    "  [t={:>5}ms] lookups={lookups} epochs={epochs}",
+                    s.offset_ms
+                ));
+                for st in s.stages.iter().filter(|st| st.n > 0) {
+                    out.push_str(&format!(" {}.p999={}", st.stage, st.p999_ns));
+                }
+                out.push('\n');
+            }
+        }
         if !self.churn_events.is_empty() {
             out.push_str("churn events:\n");
             for e in &self.churn_events {
@@ -277,6 +396,61 @@ impl RunReport {
                 format!("{:.1}", e.admin_rtt_ns as f64 / 1e3),
                 e.drain_ms.map_or("-1".to_string(), |d| format!("{d:.3}")),
             ]);
+        }
+        Some(t)
+    }
+
+    /// The mid-run scrape trajectory for the `results/` CSV trajectory
+    /// (`None` when the run collected no samples). One row per (sample,
+    /// active stage): the `offset_ms`/`epochs_total` columns line a row
+    /// up with the churn events table, `ops_per_s` is the lookup-counter
+    /// delta against the previous sample, and the stage columns carry
+    /// that stage's cumulative latency summary — so a post-kill p999
+    /// spike reads straight off the CSV with its stage name attached.
+    pub fn timeseries_table(&self) -> Option<Table> {
+        if self.timeseries.is_empty() {
+            return None;
+        }
+        let mut t = Table::new(
+            "loadgen_timeseries",
+            &[
+                "offset_ms", "lookups_total", "epochs_total", "ops_per_s", "stage", "n",
+                "mean_ns", "p50_ns", "p99_ns", "p999_ns",
+            ],
+        );
+        let mut prev: Option<(u64, u64)> = None; // (offset_ms, lookups)
+        for s in &self.timeseries {
+            let lookups = s.scalar("memento_router_lookups_scalar").unwrap_or(0);
+            let epochs = s.scalar("memento_router_epochs").unwrap_or(0);
+            let rate = match prev {
+                Some((t0, l0)) if s.offset_ms > t0 => {
+                    lookups.saturating_sub(l0) as f64 * 1e3 / (s.offset_ms - t0) as f64
+                }
+                _ => 0.0,
+            };
+            prev = Some((s.offset_ms, lookups));
+            let active: Vec<&StageSnap> = s.stages.iter().filter(|st| st.n > 0).collect();
+            let mut push = |stage: &str, n: u64, mean: u64, p50: u64, p99: u64, p999: u64| {
+                t.push_row(vec![
+                    s.offset_ms.to_string(),
+                    lookups.to_string(),
+                    epochs.to_string(),
+                    format!("{rate:.0}"),
+                    stage.to_string(),
+                    n.to_string(),
+                    mean.to_string(),
+                    p50.to_string(),
+                    p99.to_string(),
+                    p999.to_string(),
+                ]);
+            };
+            if active.is_empty() {
+                push("-", 0, 0, 0, 0, 0);
+            } else {
+                for st in active {
+                    push(&st.stage, st.n, st.mean_ns, st.p50_ns, st.p99_ns, st.p999_ns);
+                }
+            }
         }
         Some(t)
     }
@@ -395,7 +569,7 @@ impl RunReport {
              \"ops\": {},\n  \"errors\": {},\n  \"aborted_workers\": {},\n  \
              \"acked_puts\": {},\n  \
              \"throughput\": {:.1},\n  \"latency_ns\": {},\n  \"naive_latency_ns\": {},\n  \
-             \"churn_events\": [{}]\n}}\n",
+             \"churn_events\": [{}],\n  \"timeseries_samples\": {}\n}}\n",
             json_escape(&self.mode),
             json_escape(&self.workload),
             json_escape(&self.churn),
@@ -409,7 +583,8 @@ impl RunReport {
             self.throughput(),
             hist(&self.corrected),
             hist(&self.naive),
-            events.join(", ")
+            events.join(", "),
+            self.timeseries.len()
         )
     }
 }
@@ -478,6 +653,38 @@ mod tests {
                     records: 200,
                     gets: 150,
                     puts: 50,
+                },
+            ],
+            timeseries: vec![
+                TimeSample {
+                    offset_ms: 250,
+                    scalars: vec![
+                        ("memento_router_lookups_scalar".into(), 400),
+                        ("memento_router_epochs".into(), 0),
+                    ],
+                    stages: vec![StageSnap {
+                        stage: "route".into(),
+                        n: 6,
+                        mean_ns: 140,
+                        p50_ns: 120,
+                        p99_ns: 300,
+                        p999_ns: 410,
+                    }],
+                },
+                TimeSample {
+                    offset_ms: 750,
+                    scalars: vec![
+                        ("memento_router_lookups_scalar".into(), 900),
+                        ("memento_router_epochs".into(), 1),
+                    ],
+                    stages: vec![StageSnap {
+                        stage: "route".into(),
+                        n: 14,
+                        mean_ns: 500,
+                        p50_ns: 130,
+                        p99_ns: 2_000,
+                        p999_ns: 9_000,
+                    }],
                 },
             ],
         }
@@ -555,6 +762,67 @@ mod tests {
         let r = sample_report().render();
         assert!(r.contains("availability:"), "{r}");
         assert!(r.contains("drain max=3.2ms"), "{r}");
+    }
+
+    #[test]
+    fn msample_and_stages_parse_the_wire_lines() {
+        let scalars =
+            parse_msample("OK t=1234 memento_router_lookups_scalar=42 memento_wal_appends=7")
+                .unwrap();
+        assert_eq!(scalars.len(), 2, "the t= stamp is dropped: {scalars:?}");
+        assert_eq!(scalars[0], ("memento_router_lookups_scalar".to_string(), 42));
+        assert_eq!(scalars[1], ("memento_wal_appends".to_string(), 7));
+        assert!(parse_msample("ERR nope").is_none());
+
+        let stages = parse_stages(
+            "STAGES route:n=12,mean=140,p50=120,p99=300,p999=410 wal_append:n=0,mean=0,p50=0,p99=0,p999=0",
+        )
+        .unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(
+            stages[0],
+            StageSnap {
+                stage: "route".into(),
+                n: 12,
+                mean_ns: 140,
+                p50_ns: 120,
+                p99_ns: 300,
+                p999_ns: 410,
+            }
+        );
+        assert_eq!(stages[1].n, 0);
+        assert!(parse_stages("ERR nope").is_none());
+        // Unparseable tokens are skipped, not fatal.
+        assert_eq!(parse_stages("STAGES garbage route:n=1,mean=2,p50=2,p99=2,p999=2")
+            .unwrap()
+            .len(), 1);
+    }
+
+    #[test]
+    fn timeseries_table_attributes_rate_and_stage_tails() {
+        let rep = sample_report();
+        let t = rep.timeseries_table().expect("two samples");
+        assert_eq!(t.rows.len(), 2, "one active stage per sample");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("offset_ms,lookups_total,epochs_total,ops_per_s,stage"), "{csv}");
+        // First sample has no predecessor → rate 0; second is
+        // (900-400) lookups over 500 ms = 1000 ops/s.
+        assert_eq!(t.rows[0][3], "0");
+        assert_eq!(t.rows[1][3], "1000");
+        assert_eq!(t.rows[1][2], "1", "the epoch bump rides the same row");
+        assert_eq!(t.rows[1][4], "route");
+        assert_eq!(t.rows[1][9], "9000", "the spike is attributable by stage");
+        // The render section shows the same trajectory.
+        let r = rep.render();
+        assert!(r.contains("time series (cumulative stage p999"), "{r}");
+        assert!(r.contains("route.p999=9000"), "{r}");
+        // JSON carries the sample count.
+        assert!(rep.to_json().contains("\"timeseries_samples\": 2"));
+        // No samples → no table, no render section.
+        let mut rep = rep;
+        rep.timeseries.clear();
+        assert!(rep.timeseries_table().is_none());
+        assert!(!rep.render().contains("time series"));
     }
 
     #[test]

@@ -22,6 +22,9 @@ use memento::simulator::{figures, Scale, ScenarioConfig};
 use std::sync::Arc;
 
 fn main() {
+    // Always-on: a crash in any subcommand dumps the flight-recorder
+    // tail to stderr before the default panic message.
+    memento::obs::install_panic_hook();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
@@ -327,6 +330,7 @@ fn cmd_loadgen(raw: &[String]) -> i32 {
         .flag("preload", "10000", "keys written before the run starts")
         .flag("seed", "7", "workload rng seed")
         .flag("json", "", "also write the report as JSON to this path")
+        .flag("expose", "", "write the end-of-run METRICS exposition to this path")
         .switch("no-csv", "skip the results/ CSV");
     let args = match spec.parse(raw) {
         Ok(a) => a,
@@ -446,12 +450,28 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
                 Err(e) => eprintln!("[nodes csv save failed: {e}]"),
             }
         }
+        // The mid-run MSAMPLE/STAGES trajectory: spike attribution.
+        if let Some(ts) = report.timeseries_table() {
+            match ts.save_csv(&format!("{stem}_timeseries")) {
+                Ok(p) => println!("[saved {}]", p.display()),
+                Err(e) => eprintln!("[timeseries csv save failed: {e}]"),
+            }
+        }
     }
     let json_path = args.get("json");
     if !json_path.is_empty() {
         std::fs::write(json_path, report.to_json())
             .map_err(|e| format!("write {json_path}: {e}"))?;
         println!("[saved {json_path}]");
+    }
+
+    // Machine-readable exposition for the obs-smoke CI check: written
+    // straight off the service (no TCP framing concerns for a file).
+    let expose_path = args.get("expose");
+    if !expose_path.is_empty() {
+        std::fs::write(expose_path, service.handle("METRICS"))
+            .map_err(|e| format!("write {expose_path}: {e}"))?;
+        println!("[saved {expose_path}]");
     }
 
     // The service's own view of the run.

@@ -14,6 +14,49 @@ pub fn duration_to_ns(d: std::time::Duration) -> u64 {
     d.as_nanos().min(u128::from(u64::MAX)) as u64
 }
 
+/// How a scalar metric behaves over time (drives the exposition `# TYPE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically increasing.
+    Counter,
+    /// Can go up and down.
+    Gauge,
+}
+
+/// One named scalar sample. The metric bundles below enumerate
+/// themselves as `Vec<MetricSpec>`, and everything downstream — the
+/// `summary()` one-liners, the `MSTAT` filter, and the
+/// [`crate::obs::Registry`] exposition — is generated from that one
+/// enumeration, so the views cannot drift apart (a metric added to a
+/// bundle appears everywhere or nowhere).
+#[derive(Debug, Clone)]
+pub struct MetricSpec {
+    /// Stable metric name (one-liner label and exposition suffix).
+    pub name: &'static str,
+    /// One-line help text for exposition.
+    pub help: &'static str,
+    /// Counter or gauge.
+    pub kind: MetricKind,
+    /// The value at enumeration time.
+    pub value: u64,
+}
+
+impl MetricSpec {
+    fn counter(name: &'static str, help: &'static str, value: u64) -> Self {
+        Self { name, help, kind: MetricKind::Counter, value }
+    }
+
+    fn gauge(name: &'static str, help: &'static str, value: u64) -> Self {
+        Self { name, help, kind: MetricKind::Gauge, value }
+    }
+
+    fn join(specs: &[MetricSpec]) -> String {
+        let parts: Vec<String> =
+            specs.iter().map(|s| format!("{}={}", s.name, s.value)).collect();
+        parts.join(" ")
+    }
+}
+
 /// A monotonically increasing counter, safe to share across threads.
 #[derive(Debug, Default)]
 pub struct Counter {
@@ -164,34 +207,102 @@ impl RouterMetrics {
         Self::default()
     }
 
-    /// One-line summary for logs.
-    pub fn summary(&self) -> String {
-        format!(
-            "lookups: scalar={} batched={} (batches={}), epochs={}, rejects={}, relocated={}, \
-             migration: planned={} moved={}",
-            self.lookups_scalar.get(),
-            self.lookups_batched.get(),
-            self.batches.get(),
-            self.epochs.get(),
-            self.rejects.get(),
-            self.relocated_keys.get(),
-            self.keys_planned.get(),
-            self.keys_moved.get()
-        )
+    /// The metric names [`RouterMetrics::migration_summary`] selects out
+    /// of the full enumeration.
+    const MIGRATION_METRICS: [&'static str; 6] = [
+        "keys_planned",
+        "keys_moved",
+        "batches_inflight",
+        "migration_ns",
+        "plans_enqueued",
+        "plans_done",
+    ];
+
+    /// Point-in-time enumeration of every router metric — the single
+    /// source of truth behind [`RouterMetrics::summary`],
+    /// [`RouterMetrics::migration_summary`] and the registry exposition
+    /// (`METRICS`), so no view can silently omit a metric again.
+    pub fn metric_specs(&self) -> Vec<MetricSpec> {
+        vec![
+            MetricSpec::counter(
+                "lookups_scalar",
+                "Lookups served on the wait-free scalar path.",
+                self.lookups_scalar.get(),
+            ),
+            MetricSpec::counter(
+                "lookups_batched",
+                "Lookups served via the batched engine.",
+                self.lookups_batched.get(),
+            ),
+            MetricSpec::counter(
+                "batches",
+                "Batches dispatched to the engine.",
+                self.batches.get(),
+            ),
+            MetricSpec::counter(
+                "epochs",
+                "Membership epochs published (resize events).",
+                self.epochs.get(),
+            ),
+            MetricSpec::counter(
+                "rejects",
+                "Requests rejected (no capacity / bad input).",
+                self.rejects.get(),
+            ),
+            MetricSpec::counter(
+                "relocated_keys",
+                "Keys relocated by resizes (rebalance audit).",
+                self.relocated_keys.get(),
+            ),
+            MetricSpec::counter(
+                "keys_planned",
+                "Keys the migration planner identified as movers.",
+                self.keys_planned.get(),
+            ),
+            MetricSpec::counter(
+                "keys_moved",
+                "Records the migration executor relocated.",
+                self.keys_moved.get(),
+            ),
+            MetricSpec::gauge(
+                "batches_inflight",
+                "Migration batches currently being planned or applied.",
+                self.batches_inflight.get(),
+            ),
+            MetricSpec::counter(
+                "migration_ns",
+                "Wall-clock nanoseconds spent executing migration plans.",
+                self.migration_ns.get(),
+            ),
+            MetricSpec::counter(
+                "plans_enqueued",
+                "Migration plans enqueued by admin commands.",
+                self.plans_enqueued.get(),
+            ),
+            MetricSpec::counter(
+                "plans_done",
+                "Migration plans fully executed.",
+                self.plans_done.get(),
+            ),
+        ]
     }
 
-    /// Migration-focused one-liner (the `MSTAT` protocol payload).
+    /// One-line summary for logs (`STATS`), generated from
+    /// [`RouterMetrics::metric_specs`] — every metric the exposition
+    /// shows appears here too.
+    pub fn summary(&self) -> String {
+        MetricSpec::join(&self.metric_specs())
+    }
+
+    /// Migration-focused one-liner (the `MSTAT` protocol payload): the
+    /// same enumeration, filtered to the migration metrics.
     pub fn migration_summary(&self) -> String {
-        format!(
-            "keys_planned={} keys_moved={} batches_inflight={} migration_ms={:.3} \
-             plans_enqueued={} plans_done={}",
-            self.keys_planned.get(),
-            self.keys_moved.get(),
-            self.batches_inflight.get(),
-            self.migration_ns.get() as f64 / 1e6,
-            self.plans_enqueued.get(),
-            self.plans_done.get()
-        )
+        let specs: Vec<MetricSpec> = self
+            .metric_specs()
+            .into_iter()
+            .filter(|s| Self::MIGRATION_METRICS.contains(&s.name))
+            .collect();
+        MetricSpec::join(&specs)
     }
 }
 
@@ -229,22 +340,64 @@ impl WalMetrics {
         Self::default()
     }
 
-    /// One-line summary (the `WALSTAT` protocol payload).
+    /// Point-in-time enumeration of every WAL metric (see
+    /// [`RouterMetrics::metric_specs`] for the single-source-of-truth
+    /// contract).
+    pub fn metric_specs(&self) -> Vec<MetricSpec> {
+        vec![
+            MetricSpec::counter(
+                "appends",
+                "WAL records appended (data + control).",
+                self.appends.get(),
+            ),
+            MetricSpec::counter(
+                "bytes_appended",
+                "WAL bytes appended (framed size).",
+                self.bytes_appended.get(),
+            ),
+            MetricSpec::counter("fsyncs", "fsync calls issued.", self.fsyncs.get()),
+            MetricSpec::counter(
+                "group_commits",
+                "Commits covered by another writer's fsync (group-commit piggybacks).",
+                self.group_commits.get(),
+            ),
+            MetricSpec::counter(
+                "snapshots",
+                "Shard snapshots written by compaction.",
+                self.snapshots.get(),
+            ),
+            MetricSpec::counter(
+                "replayed_records",
+                "Data records replayed from shard WALs during recovery.",
+                self.replayed_records.get(),
+            ),
+            MetricSpec::counter(
+                "snapshot_records",
+                "Records loaded from shard snapshots during recovery.",
+                self.snapshot_records.get(),
+            ),
+            MetricSpec::counter(
+                "torn_tails",
+                "Torn tails truncated during recovery.",
+                self.torn_tails.get(),
+            ),
+            MetricSpec::counter(
+                "plans_logged",
+                "Migration plans logged to the coordinator WAL.",
+                self.plans_logged.get(),
+            ),
+            MetricSpec::counter(
+                "plans_recovered",
+                "Pending migration plans re-enqueued by recovery.",
+                self.plans_recovered.get(),
+            ),
+        ]
+    }
+
+    /// One-line summary (the `WALSTAT` protocol payload), generated from
+    /// [`WalMetrics::metric_specs`].
     pub fn summary(&self) -> String {
-        format!(
-            "appends={} bytes={} fsyncs={} group_commits={} snapshots={} \
-             replayed={} snapshot_records={} torn_tails={} plans_logged={} plans_recovered={}",
-            self.appends.get(),
-            self.bytes_appended.get(),
-            self.fsyncs.get(),
-            self.group_commits.get(),
-            self.snapshots.get(),
-            self.replayed_records.get(),
-            self.snapshot_records.get(),
-            self.torn_tails.get(),
-            self.plans_logged.get(),
-            self.plans_recovered.get()
-        )
+        MetricSpec::join(&self.metric_specs())
     }
 }
 
@@ -330,6 +483,45 @@ mod tests {
         let s = w.summary();
         assert!(s.contains("appends=7"), "{s}");
         assert!(s.contains("torn_tails=1"), "{s}");
+    }
+
+    #[test]
+    fn summaries_are_generated_from_the_spec_enumeration() {
+        // The drift this guards against: summary() used to hand-format a
+        // subset, omitting batches_inflight / migration_ns / plans_*.
+        let m = RouterMetrics::new();
+        m.batches_inflight.inc();
+        m.plans_enqueued.inc();
+        let s = m.summary();
+        for spec in m.metric_specs() {
+            assert!(
+                s.contains(&format!("{}={}", spec.name, spec.value)),
+                "summary {s:?} omits {}",
+                spec.name
+            );
+        }
+        assert!(s.contains("batches_inflight=1"), "{s}");
+        assert!(s.contains("migration_ns=0"), "{s}");
+        assert!(s.contains("plans_enqueued=1"), "{s}");
+        // MSTAT's filter selects only names that exist in the enumeration.
+        let names: Vec<&str> = m.metric_specs().iter().map(|sp| sp.name).collect();
+        for want in RouterMetrics::MIGRATION_METRICS {
+            assert!(names.contains(&want), "MSTAT filter references unknown {want}");
+        }
+        // Names are unique: they key the registry exposition.
+        let dedup: std::collections::HashSet<&str> = names.iter().copied().collect();
+        assert_eq!(dedup.len(), names.len());
+
+        let w = WalMetrics::new();
+        w.group_commits.add(3);
+        let ws = w.summary();
+        for spec in w.metric_specs() {
+            assert!(
+                ws.contains(&format!("{}={}", spec.name, spec.value)),
+                "wal summary {ws:?} omits {}",
+                spec.name
+            );
+        }
     }
 
     #[test]

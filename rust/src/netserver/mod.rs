@@ -208,6 +208,39 @@ impl Client {
         Ok(resp.trim_end().to_string())
     }
 
+    /// Send one request line, read a **multi-line** response until (and
+    /// including) the line that equals `terminator` — the shape of the
+    /// `METRICS` exposition, whose body is many lines ended by `# EOF`.
+    ///
+    /// The server frames every response with one trailing newline of its
+    /// own; for a body that already ends in `\n` that frame byte arrives
+    /// as an empty line, which this method consumes so the next request
+    /// starts on a line boundary. A single-line `ERR …` reply (no
+    /// terminator will ever come) is returned as-is instead of blocking.
+    pub fn request_multiline(&mut self, line: &str, terminator: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut out = String::new();
+        loop {
+            let mut l = String::new();
+            if self.reader.read_line(&mut l)? == 0 {
+                break; // peer closed mid-body
+            }
+            let done = l.trim_end() == terminator;
+            let err = out.is_empty() && l.starts_with("ERR");
+            out.push_str(&l);
+            if err {
+                break;
+            }
+            if done {
+                let mut frame = String::new();
+                self.reader.read_line(&mut frame)?;
+                break;
+            }
+        }
+        Ok(out)
+    }
+
     /// Pipelined batch: write a bounded chunk of requests in one flush,
     /// read its responses (the server answers in order), repeat. Turns N
     /// round trips into N/64 for bulk operations like loadgen preload.
@@ -274,6 +307,36 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiline_responses_preserve_framing() {
+        // A handler that answers EXPO with a multi-line, EOF-terminated
+        // body (the METRICS shape) and everything else with one line.
+        let server = serve(
+            "127.0.0.1:0",
+            16,
+            Arc::new(|req: &str| {
+                if req == "EXPO" {
+                    "# TYPE a counter\na 1\n# EOF\n".to_string()
+                } else if req == "BAD" {
+                    "ERR no such exposition".to_string()
+                } else {
+                    format!("echo:{req}")
+                }
+            }),
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.addr()).unwrap();
+        let body = c.request_multiline("EXPO", "# EOF").unwrap();
+        assert_eq!(body, "# TYPE a counter\na 1\n# EOF\n");
+        // The frame newline was consumed: the connection still lines up.
+        assert_eq!(c.request("after").unwrap(), "echo:after");
+        // Single-line ERR replies return instead of blocking forever.
+        let err = c.request_multiline("BAD", "# EOF").unwrap();
+        assert_eq!(err.trim_end(), "ERR no such exposition");
+        assert_eq!(c.request("again").unwrap(), "echo:again");
         server.shutdown();
     }
 

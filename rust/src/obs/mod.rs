@@ -1,0 +1,46 @@
+//! `obs` — the dependency-free observability layer (DESIGN.md §12).
+//!
+//! Three pieces, each usable on its own:
+//!
+//! * [`registry`] — named registration of the crate's counters, gauges
+//!   and histograms with Prometheus-style text exposition (`METRICS`),
+//!   a single-line scalar snapshot (`MSAMPLE`) and an in-process
+//!   time-series ring (`SERIES <metric>`);
+//! * [`span`] — per-stage latency spans: monotonic-clock stamps into
+//!   thread-striped stage histograms ([`Stage`]), sampled 1-in-64 on
+//!   the request hot path (overhead gated by `bench_obs`), always-on
+//!   for batch-granularity migration stages, surfaced via `STAGES`;
+//! * [`recorder`] — the always-on flight recorder: a fixed-size
+//!   lock-free ring journal of structured events ([`EventKind`]) with a
+//!   `DUMP` command and an automatic dump-on-panic hook.
+//!
+//! The stage set and the recorder are **process-global** (reachable
+//! from any subsystem without threading handles through every
+//! constructor — the same trade [`crate::sync::thread_stripe`] makes);
+//! the [`Registry`] is per-[`Service`](crate::coordinator::service)
+//! instance so tests don't share a namespace.
+
+pub mod recorder;
+pub mod registry;
+pub mod span;
+
+pub use recorder::{install_panic_hook, EventKind, Recorder};
+pub use registry::Registry;
+pub use span::{timer, timer_always, Stage, StageSet, StageTimer, SAMPLE_PERIOD};
+
+use std::sync::OnceLock;
+
+static STAGES: OnceLock<StageSet> = OnceLock::new();
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-global per-stage histogram bank ([`StageTimer`] records
+/// here on drop; `STAGES` renders it).
+pub fn stages() -> &'static StageSet {
+    STAGES.get_or_init(StageSet::new)
+}
+
+/// The process-global flight recorder (`DUMP` and the panic hook read
+/// it; every subsystem writes to it).
+pub fn recorder() -> &'static Recorder {
+    RECORDER.get_or_init(Recorder::new)
+}

@@ -1,0 +1,374 @@
+//! The flight recorder: an always-on, fixed-size, lock-free journal of
+//! structured events (epoch publishes, plan lifecycle, fsyncs, node
+//! kills, recovery steps), dumped on demand (`DUMP`) or automatically on
+//! panic. It answers "what happened just before this went wrong" for
+//! crash drills and CI failures where a metrics counter only says *how
+//! often*, never *in what order*.
+//!
+//! ## Ring format (DESIGN.md §12.3)
+//!
+//! [`RING_STRIPES`] rings × [`RING_SLOTS`] slots, writers picking a ring
+//! by [`crate::sync::thread_stripe`] so unrelated threads don't contend
+//! on one head pointer. A slot is five `AtomicU64` words:
+//! `(seq, ts_ns, kind, a, b)`. `seq` is a globally unique, monotonically
+//! increasing sequence number drawn from one shared counter — it both
+//! orders events across rings *and* acts as the seqlock generation for
+//! its slot (0 = never written). A writer invalidates the slot
+//! (`seq = 0`), publishes the payload, then stores the new `seq`; a
+//! reader accepts a slot only if it observes the same nonzero `seq`
+//! before and after copying the payload. `SeqCst` fences bracket the
+//! relaxed payload accesses on both sides — events are rare (epoch /
+//! fsync / batch granularity, not per-request), so the fence cost is
+//! irrelevant and the torn-read protection is not.
+//!
+//! Overwrites are *by design*: the recorder keeps the most recent
+//! `RING_STRIPES × RING_SLOTS` events per stripe pattern and counts the
+//! rest in [`Recorder::dropped_events`], so a dump can always say how
+//! much history it is missing.
+
+use crate::sync::thread_stripe;
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Number of per-thread-stripe rings (power of two).
+pub const RING_STRIPES: usize = 16;
+
+/// Slots per ring; the recorder retains at most
+/// `RING_STRIPES × RING_SLOTS` events before overwriting.
+pub const RING_SLOTS: usize = 1024;
+
+/// What happened. Codes are stable (`empty = 0`, then this order), so a
+/// dump from an old binary stays decodable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A new routing epoch was published. `a` = epoch, `b` = buckets
+    /// whose placement changed.
+    EpochPublish,
+    /// A migration plan was enqueued. `a` = epoch, `b` = source buckets.
+    PlanBegin,
+    /// A migration plan fully executed. `a` = epoch.
+    PlanEnd,
+    /// One migration batch installed and extracted. `a` = keys moved,
+    /// `b` = plan epoch.
+    BatchDone,
+    /// A WAL fsync hit the platter. `a` = shard, `b` = high-water seq.
+    Fsync,
+    /// A node was administratively killed. `a` = node id, `b` = epoch.
+    NodeKill,
+    /// A node joined. `a` = node id, `b` = epoch.
+    NodeAdd,
+    /// A node's weight changed. `a` = node id, `b` = new weight.
+    WeightSet,
+    /// One step of crash recovery completed. `a` = step ordinal,
+    /// `b` = step-specific count.
+    RecoveryStep,
+    /// An admin request was rejected. `a`/`b` unused.
+    Reject,
+}
+
+impl EventKind {
+    /// Every kind, in code order (`code = index + 1`).
+    pub const ALL: [EventKind; 10] = [
+        EventKind::EpochPublish,
+        EventKind::PlanBegin,
+        EventKind::PlanEnd,
+        EventKind::BatchDone,
+        EventKind::Fsync,
+        EventKind::NodeKill,
+        EventKind::NodeAdd,
+        EventKind::WeightSet,
+        EventKind::RecoveryStep,
+        EventKind::Reject,
+    ];
+
+    /// Stable lowercase name, used in dumps and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::EpochPublish => "epoch_publish",
+            EventKind::PlanBegin => "plan_begin",
+            EventKind::PlanEnd => "plan_end",
+            EventKind::BatchDone => "batch_done",
+            EventKind::Fsync => "fsync",
+            EventKind::NodeKill => "node_kill",
+            EventKind::NodeAdd => "node_add",
+            EventKind::WeightSet => "weight_set",
+            EventKind::RecoveryStep => "recovery_step",
+            EventKind::Reject => "reject",
+        }
+    }
+
+    /// Wire code; 0 is reserved for "empty slot".
+    fn code(self) -> u64 {
+        self as u64 + 1
+    }
+
+    fn from_code(code: u64) -> Option<EventKind> {
+        let i = usize::try_from(code.checked_sub(1)?).ok()?;
+        Self::ALL.get(i).copied()
+    }
+}
+
+/// One seqlock-protected slot: `(seq, ts_ns, kind, a, b)`.
+struct Slot {
+    seq: AtomicU64,
+    ts: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    const fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            ts: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One stripe's ring: a write cursor plus its slots.
+struct Ring {
+    /// Total events ever written to this ring (cursor = written % slots).
+    written: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Self {
+            written: AtomicU64::new(0),
+            slots: (0..RING_SLOTS).map(|_| Slot::new()).collect(),
+        }
+    }
+}
+
+/// One decoded recorder event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Globally unique sequence number (total order across all rings).
+    pub seq: u64,
+    /// Nanoseconds since the recorder was created.
+    pub ts_ns: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// First payload word (kind-specific, see [`EventKind`]).
+    pub a: u64,
+    /// Second payload word (kind-specific).
+    pub b: u64,
+}
+
+/// The result of one [`Recorder::dump`].
+#[derive(Debug)]
+pub struct Dump {
+    /// Retained events, oldest first (sorted by `seq`).
+    pub events: Vec<Event>,
+    /// Events overwritten before this dump could read them.
+    pub dropped: u64,
+    /// Slots skipped because a writer was mid-update (racy dumps only;
+    /// a quiescent dump always reads 0 here).
+    pub torn: u64,
+    /// Events ever recorded.
+    pub total: u64,
+}
+
+/// The flight recorder itself. One process-global instance lives behind
+/// [`crate::obs::recorder`]; tests may build private instances.
+pub struct Recorder {
+    rings: Vec<Ring>,
+    next_seq: AtomicU64,
+    start: Instant,
+}
+
+impl Recorder {
+    pub(crate) fn new() -> Self {
+        Self {
+            rings: (0..RING_STRIPES).map(|_| Ring::new()).collect(),
+            next_seq: AtomicU64::new(0),
+            start: Instant::now(),
+        }
+    }
+
+    /// Record one event. Lock-free: a unique-seq claim, one ring-cursor
+    /// bump, five atomic stores and two fences — safe from any thread,
+    /// including inside a panic hook.
+    pub fn record(&self, kind: EventKind, a: u64, b: u64) {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let ts = crate::metrics::duration_to_ns(self.start.elapsed());
+        let ring = &self.rings[thread_stripe(RING_STRIPES)];
+        let at = ring.written.fetch_add(1, Ordering::Relaxed) as usize % RING_SLOTS;
+        let slot = &ring.slots[at];
+        // Seqlock write: invalidate, publish payload between fences, then
+        // re-validate with the (globally unique, hence ABA-proof) seq.
+        slot.seq.store(0, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        slot.ts.store(ts, Ordering::Relaxed);
+        slot.kind.store(kind.code(), Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        slot.seq.store(seq, Ordering::SeqCst);
+    }
+
+    /// Events ever recorded.
+    pub fn total_events(&self) -> u64 {
+        self.next_seq.load(Ordering::SeqCst)
+    }
+
+    /// Events overwritten by ring wraparound (bounded-loss accounting:
+    /// at quiescence, `retained + dropped == total`).
+    pub fn dropped_events(&self) -> u64 {
+        self.rings
+            .iter()
+            .map(|r| r.written.load(Ordering::SeqCst).saturating_sub(RING_SLOTS as u64))
+            .sum()
+    }
+
+    /// Snapshot the newest `max` retained events (sorted by `seq`,
+    /// oldest first). Safe to run concurrently with writers: a slot
+    /// being rewritten is counted in `torn` and skipped, never emitted
+    /// half-written.
+    pub fn dump(&self, max: usize) -> Dump {
+        let mut events = Vec::new();
+        let mut torn = 0u64;
+        for ring in &self.rings {
+            for slot in &ring.slots {
+                let s1 = slot.seq.load(Ordering::SeqCst);
+                if s1 == 0 {
+                    continue; // empty or mid-write
+                }
+                fence(Ordering::SeqCst);
+                let ts = slot.ts.load(Ordering::Relaxed);
+                let code = slot.kind.load(Ordering::Relaxed);
+                let a = slot.a.load(Ordering::Relaxed);
+                let b = slot.b.load(Ordering::Relaxed);
+                fence(Ordering::SeqCst);
+                let s2 = slot.seq.load(Ordering::SeqCst);
+                if s1 != s2 {
+                    torn += 1;
+                    continue;
+                }
+                let Some(kind) = EventKind::from_code(code) else {
+                    torn += 1;
+                    continue;
+                };
+                events.push(Event { seq: s1, ts_ns: ts, kind, a, b });
+            }
+        }
+        events.sort_unstable_by_key(|e| e.seq);
+        if events.len() > max {
+            events.drain(..events.len() - max);
+        }
+        Dump { events, dropped: self.dropped_events(), torn, total: self.total_events() }
+    }
+
+    /// The single-line `DUMP` payload: loss accounting up front, then the
+    /// newest `max` events oldest-first as `kind#seq@<t>us a=.. b=..`.
+    pub fn render_line(&self, max: usize) -> String {
+        let d = self.dump(max);
+        let mut out = format!(
+            "DUMP {} total={} dropped={} torn={}",
+            d.events.len(),
+            d.total,
+            d.dropped,
+            d.torn
+        );
+        for e in &d.events {
+            out.push_str(&format!(
+                " | {}#{}@{}us a={} b={}",
+                e.kind.name(),
+                e.seq,
+                e.ts_ns / 1_000,
+                e.a,
+                e.b
+            ));
+        }
+        out
+    }
+}
+
+/// Guard so chained panic hooks are installed at most once per process.
+static PANIC_HOOK: OnceLock<()> = OnceLock::new();
+/// Re-entrancy latch: a panic *inside* the dump must not recurse.
+static PANIC_DEPTH: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (once) a panic hook that dumps the flight-recorder tail to
+/// stderr before delegating to the previously installed hook. Idempotent;
+/// `serve`, `loadgen` and `crashdrill` all call it at startup so any
+/// panic ships the event timeline with the backtrace.
+pub fn install_panic_hook() {
+    PANIC_HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if PANIC_DEPTH.fetch_add(1, Ordering::SeqCst) == 0 {
+                eprintln!("=== memento flight recorder (dump on panic) ===");
+                eprintln!("{}", crate::obs::recorder().render_line(64));
+            }
+            PANIC_DEPTH.fetch_sub(1, Ordering::SeqCst);
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_codes_round_trip_and_zero_is_empty() {
+        assert_eq!(EventKind::from_code(0), None);
+        assert_eq!(EventKind::from_code(u64::MAX), None);
+        for kind in EventKind::ALL {
+            assert_eq!(EventKind::from_code(kind.code()), Some(kind));
+        }
+        // Names are unique (dump grep-ability depends on it).
+        let names: std::collections::HashSet<_> =
+            EventKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn single_thread_round_trip_with_wraparound_accounting() {
+        let rec = Recorder::new();
+        rec.record(EventKind::EpochPublish, 1, 4);
+        rec.record(EventKind::NodeKill, 7, 1);
+        let d = rec.dump(usize::MAX);
+        assert_eq!(d.total, 2);
+        assert_eq!(d.dropped, 0);
+        assert_eq!(d.torn, 0);
+        assert_eq!(d.events.len(), 2);
+        assert_eq!(d.events[0].kind, EventKind::EpochPublish);
+        assert_eq!((d.events[0].a, d.events[0].b), (1, 4));
+        assert!(d.events[0].seq < d.events[1].seq);
+
+        // Overflow one ring: this thread writes one stripe only, so
+        // after RING_SLOTS + k events exactly k are dropped.
+        let extra = RING_SLOTS as u64 + 10 - 2;
+        for i in 0..extra {
+            rec.record(EventKind::Fsync, i, 0);
+        }
+        let d = rec.dump(usize::MAX);
+        assert_eq!(d.total, RING_SLOTS as u64 + 10);
+        assert_eq!(d.dropped, 10);
+        assert_eq!(d.events.len(), RING_SLOTS);
+        assert_eq!(d.events.len() as u64 + d.dropped, d.total);
+        // `max` keeps the newest tail.
+        let tail = rec.dump(3);
+        assert_eq!(tail.events.len(), 3);
+        assert_eq!(tail.events[2].seq, d.total);
+    }
+
+    #[test]
+    fn render_line_is_one_line_with_loss_accounting() {
+        let rec = Recorder::new();
+        rec.record(EventKind::RecoveryStep, 3, 99);
+        let line = rec.render_line(8);
+        assert!(line.starts_with("DUMP 1 total=1 dropped=0 torn=0"), "{line}");
+        assert!(line.contains("recovery_step#1@"), "{line}");
+        assert!(line.contains("a=3 b=99"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+}

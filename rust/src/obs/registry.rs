@@ -1,0 +1,290 @@
+//! The metrics registry: named registration of the crate's counters,
+//! gauges and histograms, a Prometheus-style text exposition
+//! (`METRICS`), a single-line scalar snapshot (`MSAMPLE`) and an
+//! in-process time-series ring (`SERIES <metric>`), so rates and deltas
+//! are computable without an external scraper.
+//!
+//! ## Exposition grammar (DESIGN.md §12.1)
+//!
+//! ```text
+//! exposition := { family } "# EOF" "\n"
+//! family     := "# HELP " name " " help "\n"
+//!               "# TYPE " name " " ("counter"|"gauge"|"summary") "\n"
+//!               { sample "\n" }
+//! sample     := name [ "{quantile=\"" q "\"}" ] " " value
+//!             | name "_sum " value | name "_count " value
+//! name       := "memento_" prefix "_" metric
+//! ```
+//!
+//! Scalars register as *closures over live handles* — every scrape
+//! re-enumerates current values, so the registry holds no copies and
+//! cannot go stale. Histograms are exposed as summaries with
+//! `quantile="0.5|0.9|0.99|0.999"` samples plus `_sum`/`_count`
+//! (`_sum` is `mean × count`, the log-linear histogram's resolution).
+
+use crate::metrics::{duration_to_ns, Histogram, MetricKind, MetricSpec};
+use crate::sync::lock_recover;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Snapshots retained by the time-series ring.
+const SERIES_CAP: usize = 256;
+
+/// Minimum spacing between retained snapshots: scrape-driven ticks
+/// arriving faster than this are coalesced into the previous one.
+const SERIES_MIN_INTERVAL_MS: u64 = 20;
+
+type ScalarGroup = Box<dyn Fn() -> Vec<MetricSpec> + Send + Sync>;
+type HistGroup = Box<dyn Fn() -> Vec<(String, Histogram)> + Send + Sync>;
+
+/// Bounded ring of periodic scalar snapshots.
+struct SeriesRing {
+    /// `(offset_ms, [(full_name, value)])`, oldest first.
+    samples: VecDeque<(u64, Vec<(String, u64)>)>,
+    last_ms: Option<u64>,
+}
+
+/// A per-service metrics registry. Subsystems register groups at
+/// assembly time; `METRICS`/`MSAMPLE`/`SERIES` read through it.
+pub struct Registry {
+    scalars: Vec<(String, ScalarGroup)>,
+    hists: Vec<(String, HistGroup)>,
+    series: Mutex<SeriesRing>,
+    start: Instant,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self {
+            scalars: Vec::new(),
+            hists: Vec::new(),
+            series: Mutex::new(SeriesRing { samples: VecDeque::new(), last_ms: None }),
+            start: Instant::now(),
+        }
+    }
+
+    /// Register a group of scalar metrics under `memento_<prefix>_…`.
+    /// The closure re-enumerates live values on every scrape.
+    pub fn register_scalars(
+        &mut self,
+        prefix: &str,
+        group: impl Fn() -> Vec<MetricSpec> + Send + Sync + 'static,
+    ) {
+        self.scalars.push((prefix.to_string(), Box::new(group)));
+    }
+
+    /// Register a group of named histograms under `memento_<prefix>_…`,
+    /// exposed as Prometheus summaries.
+    pub fn register_histograms(
+        &mut self,
+        prefix: &str,
+        group: impl Fn() -> Vec<(String, Histogram)> + Send + Sync + 'static,
+    ) {
+        self.hists.push((prefix.to_string(), Box::new(group)));
+    }
+
+    fn elapsed_ms(&self) -> u64 {
+        duration_to_ns(self.start.elapsed()) / 1_000_000
+    }
+
+    /// Live `(full_name, spec)` for every registered scalar.
+    fn scalar_rows(&self) -> Vec<(String, MetricSpec)> {
+        let mut out = Vec::new();
+        for (prefix, group) in &self.scalars {
+            for spec in group() {
+                out.push((format!("memento_{prefix}_{}", spec.name), spec));
+            }
+        }
+        out
+    }
+
+    /// Every registered full metric name (scalars then histograms) — the
+    /// single-source-of-truth contract: each of these must appear in
+    /// [`Registry::expose`] output.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> =
+            self.scalar_rows().into_iter().map(|(name, _)| name).collect();
+        for (prefix, group) in &self.hists {
+            for (hname, _) in group() {
+                out.push(format!("memento_{prefix}_{hname}"));
+            }
+        }
+        out
+    }
+
+    /// The `METRICS` payload: text exposition terminated by `# EOF`.
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (name, spec) in self.scalar_rows() {
+            let kind = match spec.kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+            };
+            out.push_str(&format!("# HELP {name} {}\n", spec.help));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            out.push_str(&format!("{name} {}\n", spec.value));
+        }
+        for (prefix, group) in &self.hists {
+            for (hname, h) in group() {
+                let name = format!("memento_{prefix}_{hname}");
+                out.push_str(&format!(
+                    "# HELP {name} Latency distribution in nanoseconds.\n"
+                ));
+                out.push_str(&format!("# TYPE {name} summary\n"));
+                for q in ["0.5", "0.9", "0.99", "0.999"] {
+                    let v = h.quantile(q.parse().expect("static quantile literal"));
+                    out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+                }
+                out.push_str(&format!("{name}_sum {:.0}\n", h.mean() * h.count() as f64));
+                out.push_str(&format!("{name}_count {}\n", h.count()));
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// Record one time-series snapshot of every scalar. Scrape-driven:
+    /// `METRICS`/`MSAMPLE` call this, and snapshots arriving closer than
+    /// the coalescing interval are skipped, so a hot scraper cannot
+    /// flush history.
+    pub fn tick(&self) {
+        let now = self.elapsed_ms();
+        let mut ring = lock_recover(&self.series);
+        if let Some(last) = ring.last_ms {
+            if now.saturating_sub(last) < SERIES_MIN_INTERVAL_MS {
+                return;
+            }
+        }
+        ring.last_ms = Some(now);
+        let vals: Vec<(String, u64)> =
+            self.scalar_rows().into_iter().map(|(name, s)| (name, s.value)).collect();
+        if ring.samples.len() >= SERIES_CAP {
+            ring.samples.pop_front();
+        }
+        ring.samples.push_back((now, vals));
+    }
+
+    /// The `MSAMPLE` payload: one line, `OK t=<ms> <name>=<value> …`.
+    pub fn sample_line(&self) -> String {
+        let mut out = format!("OK t={}", self.elapsed_ms());
+        for (name, spec) in self.scalar_rows() {
+            out.push_str(&format!(" {name}={}", spec.value));
+        }
+        out
+    }
+
+    /// The `SERIES <metric>` payload: every retained snapshot of one
+    /// scalar as `<t_ms>:<value>` pairs, oldest first. Unknown metrics
+    /// get an `ERR` line.
+    pub fn series_line(&self, metric: &str) -> String {
+        let ring = lock_recover(&self.series);
+        let mut pairs = Vec::new();
+        for (t, vals) in &ring.samples {
+            if let Some((_, v)) = vals.iter().find(|(name, _)| name == metric) {
+                pairs.push(format!("{t}:{v}"));
+            }
+        }
+        drop(ring);
+        if pairs.is_empty() && !self.scalar_rows().iter().any(|(name, _)| name == metric) {
+            return format!("ERR unknown metric {metric}");
+        }
+        let mut out = format!("SERIES {metric} n={}", pairs.len());
+        for p in pairs {
+            out.push(' ');
+            out.push_str(&p);
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Counter;
+    use std::sync::Arc;
+
+    fn test_registry() -> (Registry, Arc<Counter>) {
+        let c = Arc::new(Counter::new());
+        let mut reg = Registry::new();
+        let c2 = c.clone();
+        reg.register_scalars("test", move || {
+            vec![
+                MetricSpec {
+                    name: "hits",
+                    help: "Test hits.",
+                    kind: MetricKind::Counter,
+                    value: c2.get(),
+                },
+                MetricSpec {
+                    name: "depth",
+                    help: "Test depth.",
+                    kind: MetricKind::Gauge,
+                    value: 3,
+                },
+            ]
+        });
+        reg.register_histograms("test", || {
+            let mut h = Histogram::new();
+            h.record(1_000);
+            h.record(2_000);
+            vec![("lat_ns".to_string(), h)]
+        });
+        (reg, c)
+    }
+
+    #[test]
+    fn exposition_covers_every_name_and_terminates() {
+        let (reg, c) = test_registry();
+        c.add(7);
+        let out = reg.expose();
+        assert!(out.ends_with("# EOF\n"), "{out}");
+        for name in reg.names() {
+            assert!(out.contains(&format!("# TYPE {name} ")), "{out} missing {name}");
+        }
+        assert!(out.contains("# TYPE memento_test_hits counter\nmemento_test_hits 7\n"));
+        assert!(out.contains("# TYPE memento_test_depth gauge\nmemento_test_depth 3\n"));
+        assert!(out.contains("# TYPE memento_test_lat_ns summary\n"));
+        assert!(out.contains("memento_test_lat_ns{quantile=\"0.99\"}"));
+        assert!(out.contains("memento_test_lat_ns_count 2\n"));
+    }
+
+    #[test]
+    fn scrapes_read_live_values_not_copies() {
+        let (reg, c) = test_registry();
+        assert!(reg.sample_line().contains(" memento_test_hits=0"));
+        c.add(5);
+        assert!(reg.sample_line().contains(" memento_test_hits=5"));
+    }
+
+    #[test]
+    fn series_ring_accumulates_and_coalesces() {
+        let (reg, c) = test_registry();
+        c.add(1);
+        reg.tick();
+        // Immediate re-tick coalesces (under the minimum interval).
+        reg.tick();
+        let line = reg.series_line("memento_test_hits");
+        assert!(line.starts_with("SERIES memento_test_hits n=1 "), "{line}");
+        assert!(line.ends_with(":1"), "{line}");
+        std::thread::sleep(std::time::Duration::from_millis(
+            SERIES_MIN_INTERVAL_MS + 10,
+        ));
+        c.add(1);
+        reg.tick();
+        let line = reg.series_line("memento_test_hits");
+        assert!(line.starts_with("SERIES memento_test_hits n=2 "), "{line}");
+        assert!(line.ends_with(":2"), "{line}");
+        assert!(reg.series_line("nope").starts_with("ERR unknown metric"));
+        // A known metric with no retained snapshots is not an error.
+        let (fresh, _c) = test_registry();
+        assert_eq!(fresh.series_line("memento_test_depth"), "SERIES memento_test_depth n=0");
+    }
+}

@@ -1,0 +1,240 @@
+//! Per-stage latency spans: monotonic-clock stamps recorded into
+//! thread-striped per-stage histograms, so a moving whole-request p999
+//! can be attributed to the pipeline stage that paid it (route vs
+//! shard-lock wait vs WAL fsync vs replica fan-out vs migration work).
+//!
+//! ## Cost model (DESIGN.md §12.2)
+//!
+//! Request-path stages use [`timer`], which is *sampled*: 1 request in
+//! [`SAMPLE_PERIOD`] takes two `Instant::now()` stamps and one striped
+//! mutex lock; the other 63 pay a single thread-local counter bump.
+//! That keeps the wait-free route path within the ≤5% overhead ceiling
+//! gated by `bench_obs`. Migration stages run at batch granularity
+//! (thousands of keys per span), so they use [`timer_always`] and every
+//! batch is measured. No allocation happens on either path.
+
+use crate::metrics::{duration_to_ns, Histogram};
+use crate::sync::{lock_recover, thread_stripe};
+use std::cell::Cell;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Stripes per stage histogram (power of two; matches the crate's other
+/// thread-striped structures).
+const STAGE_STRIPES: usize = 8;
+
+/// Request-path sampling period: 1 in this many calls to [`timer`]
+/// actually measures.
+pub const SAMPLE_PERIOD: u32 = 64;
+
+thread_local! {
+    /// Per-thread sampling tick shared by every request-path call site.
+    static SAMPLE_TICK: Cell<u32> = const { Cell::new(0) };
+}
+
+/// One instrumented pipeline stage. Request stages come first, then the
+/// four migration-batch stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Wait-free routing decision (`Router::route` / replica selection).
+    Route,
+    /// Waiting on a storage shard mutex.
+    ShardLockWait,
+    /// Serializing + writing one record into the WAL file.
+    WalAppend,
+    /// Waiting for the WAL durability point (group commit / fsync).
+    FsyncWait,
+    /// Writing a PUT to every replica node.
+    ReplicaFanout,
+    /// Migration batch: filtering the candidate keys for a source bucket.
+    MigPlan,
+    /// Migration batch: routing the batch against the live epoch
+    /// (including the bounded retry loop under concurrent churn).
+    MigRouteBatch,
+    /// Migration batch: installing keys at their target nodes.
+    MigInstall,
+    /// Migration batch: extracting moved keys from the source shard.
+    MigExtract,
+}
+
+impl Stage {
+    /// Every stage, in display order.
+    pub const ALL: [Stage; 9] = [
+        Stage::Route,
+        Stage::ShardLockWait,
+        Stage::WalAppend,
+        Stage::FsyncWait,
+        Stage::ReplicaFanout,
+        Stage::MigPlan,
+        Stage::MigRouteBatch,
+        Stage::MigInstall,
+        Stage::MigExtract,
+    ];
+
+    /// Stable lowercase name (the `STAGES` payload and the exposition
+    /// metric suffix `memento_stage_<name>_ns`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Route => "route",
+            Stage::ShardLockWait => "shard_lock_wait",
+            Stage::WalAppend => "wal_append",
+            Stage::FsyncWait => "fsync_wait",
+            Stage::ReplicaFanout => "replica_fanout",
+            Stage::MigPlan => "mig_plan",
+            Stage::MigRouteBatch => "mig_route_batch",
+            Stage::MigInstall => "mig_install",
+            Stage::MigExtract => "mig_extract",
+        }
+    }
+}
+
+/// The per-stage histogram bank: `Stage::ALL.len()` stages ×
+/// [`STAGE_STRIPES`] thread-striped shards. One process-global instance
+/// lives behind [`crate::obs::stages`]; tests may build private ones.
+pub struct StageSet {
+    shards: Vec<Vec<Mutex<Histogram>>>,
+}
+
+impl StageSet {
+    pub(crate) fn new() -> Self {
+        Self {
+            shards: (0..Stage::ALL.len())
+                .map(|_| (0..STAGE_STRIPES).map(|_| Mutex::new(Histogram::new())).collect())
+                .collect(),
+        }
+    }
+
+    /// Record one span of `stage` lasting `ns` nanoseconds.
+    pub fn record(&self, stage: Stage, ns: u64) {
+        let s = thread_stripe(STAGE_STRIPES);
+        lock_recover(&self.shards[stage as usize][s]).record(ns);
+    }
+
+    /// Merged (cross-stripe) histogram of one stage.
+    pub fn merged(&self, stage: Stage) -> Histogram {
+        let mut h = Histogram::new();
+        for m in &self.shards[stage as usize] {
+            h.merge(&lock_recover(m));
+        }
+        h
+    }
+
+    /// `(stage, merged histogram)` for every stage, in display order.
+    pub fn snapshot(&self) -> Vec<(Stage, Histogram)> {
+        Stage::ALL.iter().map(|&s| (s, self.merged(s))).collect()
+    }
+
+    /// The single-line `STAGES` payload:
+    /// `STAGES <name>:n=..,mean=..,p50=..,p99=..,p999=.. …` (nanoseconds,
+    /// cumulative since process start).
+    pub fn render_line(&self) -> String {
+        let mut out = String::from("STAGES");
+        for (s, h) in self.snapshot() {
+            out.push_str(&format!(
+                " {}:n={},mean={:.0},p50={},p99={},p999={}",
+                s.name(),
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.quantile(0.999)
+            ));
+        }
+        out
+    }
+}
+
+/// A running stage span. Recording happens on drop, into the
+/// process-global [`StageSet`] — so the measurement boundary is the
+/// timer's scope (or an explicit [`StageTimer::finish`] / `drop`).
+#[derive(Debug)]
+pub struct StageTimer {
+    stage: Stage,
+    t0: Instant,
+}
+
+impl StageTimer {
+    /// Stop the span and record it. Equivalent to dropping the timer;
+    /// this form makes the boundary explicit at the call site.
+    pub fn finish(self) {}
+}
+
+impl Drop for StageTimer {
+    fn drop(&mut self) {
+        super::stages().record(self.stage, duration_to_ns(self.t0.elapsed()));
+    }
+}
+
+/// A sampled request-path timer: `Some` for 1 call in [`SAMPLE_PERIOD`],
+/// `None` (one thread-local counter bump, no clock read) otherwise.
+/// Dropping a `None` is free, so call sites can treat the result
+/// uniformly.
+#[inline]
+pub fn timer(stage: Stage) -> Option<StageTimer> {
+    let sampled = SAMPLE_TICK.with(|c| {
+        let t = c.get().wrapping_add(1);
+        c.set(t);
+        t % SAMPLE_PERIOD == 0
+    });
+    if sampled {
+        Some(StageTimer { stage, t0: Instant::now() })
+    } else {
+        None
+    }
+}
+
+/// An always-on timer for cold stages (migration batches), where spans
+/// are rare and every one should be measured.
+#[inline]
+pub fn timer_always(stage: Stage) -> StageTimer {
+    StageTimer { stage, t0: Instant::now() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_unique_and_ordered() {
+        let names: Vec<_> = Stage::ALL.iter().map(|s| s.name()).collect();
+        let dedup: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(names.len(), dedup.len());
+        // Enum discriminants index the histogram bank.
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+        }
+    }
+
+    #[test]
+    fn stage_set_records_and_renders_one_line() {
+        let set = StageSet::new();
+        set.record(Stage::Route, 100);
+        set.record(Stage::Route, 300);
+        set.record(Stage::FsyncWait, 5_000);
+        let route = set.merged(Stage::Route);
+        assert_eq!(route.count(), 2);
+        assert!(route.quantile(0.5) > 0);
+        assert!(route.mean() > 0.0);
+        let line = set.render_line();
+        assert!(line.starts_with("STAGES route:n=2,mean="), "{line}");
+        assert!(line.contains("fsync_wait:n=1,"), "{line}");
+        assert!(line.contains("mig_extract:n=0,"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn sampled_timer_fires_once_per_period() {
+        // The thread-local tick is shared across call sites, so over any
+        // SAMPLE_PERIOD consecutive calls exactly one samples.
+        let fired: u32 = (0..SAMPLE_PERIOD)
+            .map(|_| match timer(Stage::Route) {
+                Some(t) => {
+                    t.finish();
+                    1
+                }
+                None => 0,
+            })
+            .sum();
+        assert_eq!(fired, 1);
+    }
+}

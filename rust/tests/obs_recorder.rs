@@ -1,0 +1,146 @@
+//! Flight-recorder integration drills (own process, so the process-global
+//! recorder's accounting can be checked exactly):
+//!
+//! 1. concurrent writers racing a dumping reader — no torn events leak,
+//!    loss is bounded and *exactly* accounted at quiescence, and the
+//!    event order across a live epoch publish matches the admin path's
+//!    causal order;
+//! 2. dump-on-panic — a child process installs the hook, records a
+//!    marker event and panics; the parent asserts the recorder tail
+//!    reached stderr.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::obs::{self, EventKind};
+
+const WRITERS: usize = 8;
+const PER_WRITER: u64 = 40_000;
+
+#[test]
+fn recorder_survives_concurrent_writers_and_accounts_for_loss() {
+    let rec = obs::recorder();
+    let base_total = rec.total_events();
+
+    // Phase 1: hammer the rings from 8 threads while a reader dumps.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let reader = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let rec = obs::recorder();
+            let mut dumps = 0u32;
+            while dumps < 50 && !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let d = rec.dump(usize::MAX);
+                let mut prev_seq = 0u64;
+                for e in &d.events {
+                    assert!(e.seq > prev_seq, "seqs must be strictly increasing");
+                    prev_seq = e.seq;
+                    if e.kind == EventKind::BatchDone {
+                        assert!(e.a < WRITERS as u64, "torn payload leaked: {e:?}");
+                        assert!(e.b < PER_WRITER, "torn payload leaked: {e:?}");
+                    }
+                }
+                dumps += 1;
+            }
+        })
+    };
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let rec = obs::recorder();
+                for i in 0..PER_WRITER {
+                    rec.record(EventKind::BatchDone, w as u64, i);
+                }
+            })
+        })
+        .collect();
+    for t in writers {
+        t.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    reader.join().unwrap();
+
+    // Phase 2: quiescent accounting is exact — every event ever recorded
+    // is either in the dump or counted as dropped, and nothing is torn.
+    let d = rec.dump(usize::MAX);
+    assert_eq!(d.torn, 0, "no writer is live; a quiescent dump cannot tear");
+    assert!(
+        d.total - base_total >= (WRITERS as u64) * PER_WRITER,
+        "total {} base {base_total}",
+        d.total
+    );
+    assert!(d.dropped > 0, "320k events must overflow 16x1024 slots");
+    assert_eq!(
+        d.events.len() as u64 + d.dropped,
+        d.total,
+        "retained + dropped must account for every event exactly"
+    );
+
+    // Phase 3: a real admin sequence journals in causal order. The
+    // KILL handler publishes the epoch, enqueues the plan, then records
+    // the kill; ADD repeats the pattern at the next epoch.
+    let router = Router::new("memento", 8, 80, None).unwrap();
+    let s = Service::new(router);
+    for i in 0..50 {
+        s.handle(&format!("PUT ok{i} ov{i}"));
+    }
+    assert!(s.handle("KILL 3").starts_with("KILLED"));
+    assert!(s.handle("ADD").starts_with("ADDED"));
+    assert!(s.migration.wait_idle(std::time::Duration::from_secs(10)));
+
+    let d = rec.dump(usize::MAX);
+    let seq_of = |kind: EventKind, a: Option<u64>| -> u64 {
+        d.events
+            .iter()
+            .find(|e| {
+                e.kind == kind
+                    && match a {
+                        Some(want) => e.a == want,
+                        None => true,
+                    }
+            })
+            .unwrap_or_else(|| panic!("no {kind:?} a={a:?} event in dump"))
+            .seq
+    };
+    let publish1 = seq_of(EventKind::EpochPublish, Some(1));
+    let publish2 = seq_of(EventKind::EpochPublish, Some(2));
+    let plan1 = seq_of(EventKind::PlanBegin, Some(1));
+    let kill = seq_of(EventKind::NodeKill, None);
+    let add = seq_of(EventKind::NodeAdd, None);
+    assert!(publish1 < plan1, "the epoch publishes before its plan enqueues");
+    assert!(plan1 < kill, "the kill is journaled after its plan");
+    assert!(kill < publish2, "epochs are ordered across admin commands");
+    assert!(publish2 < add, "the add is journaled after its publish");
+}
+
+#[test]
+fn dump_on_panic_emits_the_recorder_tail() {
+    if std::env::var("MEMENTO_OBS_PANIC_CHILD").is_ok() {
+        // Child branch: arm the hook, leave a marker in the journal, die.
+        obs::install_panic_hook();
+        obs::recorder().record(EventKind::RecoveryStep, 41, 42);
+        panic!("armed panic for the dump-on-panic drill");
+    }
+    let exe = std::env::current_exe().unwrap();
+    let out = std::process::Command::new(exe)
+        .args([
+            "dump_on_panic_emits_the_recorder_tail",
+            "--exact",
+            "--nocapture",
+            "--test-threads=1",
+        ])
+        .env("MEMENTO_OBS_PANIC_CHILD", "1")
+        .output()
+        .expect("spawn the panic child");
+    assert!(!out.status.success(), "the child must die of its panic");
+    let combined = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        combined.contains("flight recorder (dump on panic)"),
+        "panic hook banner missing:\n{combined}"
+    );
+    assert!(combined.contains("recovery_step"), "marker event missing:\n{combined}");
+    assert!(combined.contains("a=41 b=42"), "marker payload missing:\n{combined}");
+}

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Validate a `METRICS` text exposition written by `memento loadgen
+--expose <path>` (the obs-smoke CI step).
+
+Checks, in the spirit of a strict Prometheus/OpenMetrics scraper:
+
+* every sample line parses as `name{quantile="q"}? value`;
+* every sample's metric has a `# TYPE` (summary samples resolve their
+  `_sum`/`_count`/quantile series to the base name);
+* every `# TYPE` has at least one sample and a matching `# HELP`;
+* no metric is TYPE-declared twice;
+* the exposition ends with the `# EOF` terminator;
+* at least MIN_METRICS metrics are present (an empty-but-well-formed
+  file means the registry wiring silently fell off).
+
+Stdlib only; exit 0 on a valid exposition, 1 with a message otherwise.
+"""
+
+import re
+import sys
+
+MIN_METRICS = 10
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>[0-9]+(?:\.[0-9]+)?|[+-]?(?:Inf|NaN))$"
+)
+KINDS = {"counter", "gauge", "summary"}
+
+
+def fail(msg):
+    print(f"check_exposition: FAIL: {msg}")
+    sys.exit(1)
+
+
+def base_name(sample_name, typed):
+    """Resolve a summary's _sum/_count series to its TYPE-declared base."""
+    if sample_name in typed:
+        return sample_name
+    for suffix in ("_sum", "_count"):
+        if sample_name.endswith(suffix):
+            stem = sample_name[: -len(suffix)]
+            if stem in typed:
+                return stem
+    return sample_name
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} <exposition.txt>")
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+
+    if not text.endswith("# EOF\n"):
+        fail("exposition must end with the '# EOF' terminator line")
+
+    typed = {}  # name -> kind
+    helped = set()
+    sampled = set()  # TYPE-resolved base names with >=1 sample
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if line == "# EOF":
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not parts[3].strip():
+                fail(f"line {lineno}: HELP without text: {line!r}")
+            if not NAME_RE.match(parts[2]):
+                fail(f"line {lineno}: bad HELP metric name: {line!r}")
+            helped.add(parts[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4:
+                fail(f"line {lineno}: malformed TYPE: {line!r}")
+            name, kind = parts[2], parts[3]
+            if not NAME_RE.match(name):
+                fail(f"line {lineno}: bad TYPE metric name: {line!r}")
+            if kind not in KINDS:
+                fail(f"line {lineno}: unknown kind {kind!r} (want {sorted(KINDS)})")
+            if name in typed:
+                fail(f"line {lineno}: duplicate TYPE for {name}")
+            typed[name] = kind
+            continue
+        if line.startswith("#"):
+            fail(f"line {lineno}: unknown comment directive: {line!r}")
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"line {lineno}: unparseable sample: {line!r}")
+        base = base_name(m.group("name"), typed)
+        if base not in typed:
+            fail(f"line {lineno}: sample for undeclared metric {m.group('name')!r}")
+        labels = m.group("labels")
+        if labels and not re.match(r'^quantile="[0-9.]+"$', labels):
+            fail(f"line {lineno}: unexpected labels {labels!r}")
+        sampled.add(base)
+
+    unsampled = sorted(set(typed) - sampled)
+    if unsampled:
+        fail(f"TYPE declared but no samples: {unsampled}")
+    unhelped = sorted(set(typed) - helped)
+    if unhelped:
+        fail(f"TYPE without HELP: {unhelped}")
+    orphan_help = sorted(helped - set(typed))
+    if orphan_help:
+        fail(f"HELP without TYPE: {orphan_help}")
+    if len(typed) < MIN_METRICS:
+        fail(f"only {len(typed)} metrics exposed (expected >= {MIN_METRICS})")
+
+    kinds = {}
+    for kind in typed.values():
+        kinds[kind] = kinds.get(kind, 0) + 1
+    summary = " ".join(f"{k}={v}" for k, v in sorted(kinds.items()))
+    print(f"check_exposition: OK: {len(typed)} metrics ({summary})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,6 +41,7 @@ def main():
     ap.add_argument("--migration", help="BENCH_migration.json from this run (optional)")
     ap.add_argument("--weighted", help="BENCH_weighted.json from this run (optional)")
     ap.add_argument("--wal", help="BENCH_wal.json from this run (optional)")
+    ap.add_argument("--obs", help="BENCH_obs.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
@@ -128,6 +129,24 @@ def main():
             "wal osonly puts/s (page-cache bound)",
             float(wal["wal_osonly_puts_per_s"]),
             baseline["wal_osonly_puts_per_s"],
+        )
+
+    if args.obs:
+        obs = load(args.obs)
+        # The spanned route path must stay fast in absolute terms...
+        gate(
+            "obs route-span ops/s",
+            float(obs["obs_route_span_ops_s"]),
+            baseline["obs_route_span_ops_s"],
+        )
+        # ...and the relative tax of instrumentation on the wait-free
+        # read path is a hard ceiling: both cells run interleaved on the
+        # same runner, so the ratio is noise-resistant in a way absolute
+        # throughput is not.
+        gate_ceiling(
+            "obs route-span overhead pct (ceiling)",
+            float(obs["obs_route_overhead_pct"]),
+            baseline["obs_route_overhead_pct_max"],
         )
 
     width = max(len(c[0]) for c in checks)
