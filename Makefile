@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate needs none of these — `cargo build`
 # is dependency-free; `artifacts` is only for the optional PJRT path.
 
-.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke obs-smoke crash-drill refresh-baselines
+.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke obs-smoke conn-smoke crash-drill refresh-baselines
 
 build:
 	cargo build --release
@@ -49,11 +49,22 @@ perf-smoke:
 	cargo bench --bench bench_weighted
 	cargo bench --bench bench_wal
 	cargo bench --bench bench_obs
+	cargo bench --bench bench_conn
 	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
 	  --loadgen BENCH_loadgen_smoke.json --migration BENCH_migration.json \
 	  --weighted BENCH_weighted.json --wal BENCH_wal.json \
-	  --obs BENCH_obs.json \
+	  --obs BENCH_obs.json --conn BENCH_conn.json \
 	  --baseline ci/perf-baseline.json
+
+# Mirror of the ci.yml `conn-smoke` step: 1024 open-loop binary
+# connections (8 workers x 128 conns) against the event-driven
+# netserver, with a hard process-wide thread ceiling — connection count
+# must be a poller registration count, not a thread count.
+conn-smoke:
+	cargo run --release -- loadgen --mode open --rate 20000 \
+	  --workload uniform --churn stable --threads 8 --conns 128 \
+	  --target tcp --proto binary --duration 2 --no-csv \
+	  --assert-max-threads 64
 
 # Mirror of the ci.yml `obs-smoke` step: a short churny loadgen run that
 # writes the METRICS exposition to a file, validated by a strict

@@ -1,0 +1,149 @@
+//! Connection-scaling smoke bench — the measurement behind CI's
+//! `conn-smoke` job and `BENCH_conn.json`.
+//!
+//! Three cells against a live loopback netserver:
+//!
+//! * **single-connection text LOOKUP** — one client, one pipelined
+//!   text connection, back-to-back lookups;
+//! * **single-connection binary LOOKUP** — the same traffic as typed
+//!   length-prefixed frames (no line rendering/parsing on the hot
+//!   path; the acceptance expectation is binary ≥ text);
+//! * **high-connection open-loop** — `MEMENTO_CONN_COUNT` (default
+//!   1024) binary connections fanned out from a bounded worker count,
+//!   paced at `MEMENTO_CONN_RATE` ops/s total, CO-corrected p99.9.
+//!   This is the event-loop contract: connection count is a poller
+//!   registration count, not a thread count.
+//!
+//! Emits `BENCH_conn.json` at the workspace root (override with
+//! `MEMENTO_BENCH_JSON`; cell seconds with `MEMENTO_CONN_SECS`). CI
+//! compares the JSON against `ci/perf-baseline.json` floors via
+//! `scripts/perf_compare.py --conn`.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::loadgen::{self, ChurnScenario, LoadgenConfig, Mode, Workload};
+use memento::netserver::{Client, ServerConfig};
+use memento::proto::Request;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn fresh_server(max_conns: usize) -> (Arc<Service>, memento::netserver::ServerHandle) {
+    let router = Router::new("memento", 16, 160, None).expect("router");
+    let service = Service::with_replicas(router, 1);
+    let server = service
+        .serve_config("127.0.0.1:0", ServerConfig { max_conns, ..Default::default() })
+        .expect("bind");
+    (service, server)
+}
+
+/// Back-to-back LOOKUPs on one connection for `secs`: ops/s.
+fn single_conn_cell(binary: bool, secs: f64) -> f64 {
+    let (_svc, server) = fresh_server(8);
+    let mut client = if binary {
+        Client::connect_binary(&server.addr()).expect("connect")
+    } else {
+        Client::connect(&server.addr()).expect("connect")
+    };
+    let deadline = Instant::now() + Duration::from_secs_f64(secs);
+    let start = Instant::now();
+    let mut ops = 0u64;
+    let mut key = 1u64;
+    while Instant::now() < deadline {
+        for _ in 0..256 {
+            if binary {
+                client.call(&Request::Lookup { key }).expect("binary lookup");
+            } else {
+                let resp = client.request(&format!("LOOKUP {key}")).expect("text lookup");
+                assert!(resp.starts_with("BUCKET "), "unexpected response {resp}");
+            }
+            key = key.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        ops += 256;
+    }
+    let tput = ops as f64 / start.elapsed().as_secs_f64();
+    drop(client);
+    server.shutdown();
+    tput
+}
+
+/// Open-loop traffic over `conns` binary connections from 8 workers:
+/// (achieved ops/s, CO-corrected p99.9 in microseconds, live conns,
+/// server worker threads).
+fn high_conn_cell(conns: usize, rate: f64, secs: f64) -> (f64, f64, usize, usize) {
+    memento::netserver::raise_fd_limit();
+    let threads = 8usize;
+    let (_svc, server) = fresh_server(conns + 16);
+    let per_worker = conns.div_ceil(threads);
+    let factory = loadgen::target::fanout_factory(server.addr(), per_worker, true);
+    loadgen::preload(&factory, 10_000).expect("preload");
+    let cfg = LoadgenConfig {
+        mode: Mode::Open { rate },
+        workload: Workload::uniform(100_000, 0.7),
+        threads,
+        duration: Duration::from_secs_f64(secs),
+        churn: ChurnScenario::Stable,
+        ..LoadgenConfig::default()
+    };
+    let rep = loadgen::run(&cfg, &factory).expect("open-loop run");
+    assert_eq!(rep.errors, 0, "conn smoke run must be error-free");
+    let live = server.live_connections();
+    let workers = server.worker_threads();
+    let tput = rep.throughput();
+    let p999_us = rep.corrected.quantile(0.999) as f64 / 1_000.0;
+    server.shutdown();
+    (tput, p999_us, live, workers)
+}
+
+fn main() {
+    let secs = env_f64("MEMENTO_CONN_SECS", 1.0);
+    let rate = env_f64("MEMENTO_CONN_RATE", 20_000.0);
+    let conns = env_usize("MEMENTO_CONN_COUNT", 1024);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("connection smoke: {cores} cores, {secs}s per cell, {conns} conns @ {rate} ops/s\n");
+
+    let text = single_conn_cell(false, secs);
+    println!("single-conn text LOOKUP:   {text:>10.0} ops/s");
+    let bin = single_conn_cell(true, secs);
+    println!("single-conn binary LOOKUP: {bin:>10.0} ops/s ({:.2}x text)", bin / text.max(1.0));
+
+    let (open_tput, p999_us, live, workers) = high_conn_cell(conns, rate, secs.max(1.0) * 2.0);
+    println!(
+        "{conns}-conn open loop:      {open_tput:>10.0} ops/s, p99.9 {p999_us:.0}us \
+         ({live} live conns on {workers} worker threads)"
+    );
+    assert!(
+        live >= conns,
+        "expected all {conns} connections open at end of run, saw {live}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"conn\",\n  \"cores\": {cores},\n  \"cell_secs\": {secs},\n  \
+         \"conns\": {conns},\n  \"rate\": {rate},\n  \
+         \"worker_threads\": {workers},\n  \
+         \"conn_text_lookup_ops_s\": {text:.1},\n  \
+         \"conn_bin_lookup_ops_s\": {bin:.1},\n  \
+         \"bin_vs_text\": {:.2},\n  \
+         \"conn_1k_ops_s\": {open_tput:.1},\n  \
+         \"conn_p999_us\": {p999_us:.1}\n}}\n",
+        bin / text.max(1.0)
+    );
+    // Cargo runs bench binaries with CWD = the package root (rust/); the
+    // committed reference and the CI gate live at the workspace root.
+    let path = std::env::var("MEMENTO_BENCH_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_conn.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

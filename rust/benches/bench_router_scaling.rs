@@ -1,11 +1,15 @@
 //! Router thread-scaling smoke bench — the measurement behind CI's
 //! `perf-smoke` job and `BENCH_router_scaling.json`.
 //!
-//! Two sweeps over 1/2/4/8 worker threads:
+//! Three sweeps over 1/2/4/8 worker threads:
 //!
 //! * **closed-loop loadgen** against an in-process replicated service
 //!   (no TCP: isolates router + sharded storage scaling — the data path
 //!   this repo made wait-free, DESIGN.md §8);
+//! * **closed-loop loadgen over TCP** against the event-driven
+//!   netserver on loopback — the same traffic with real framing, the
+//!   epoll loop, and the worker pool in the path (the informational
+//!   `tcp_vs_inproc_8t` ratio is the whole-stack protocol overhead);
 //! * **route-only**: threads hammering `Router::route` back to back —
 //!   the bare wait-free snapshot path with no storage behind it.
 //!
@@ -42,6 +46,27 @@ fn loadgen_cell(threads: usize, secs: f64) -> (u64, f64, u64) {
     let rep = loadgen::run(&cfg, &factory).expect("loadgen run");
     assert_eq!(rep.errors, 0, "smoke run must be error-free");
     (rep.ops, rep.throughput(), rep.corrected.quantile(0.99))
+}
+
+/// One closed-loop loadgen cell over loopback TCP: throughput ops/s.
+fn tcp_cell(threads: usize, secs: f64) -> f64 {
+    let router = Router::new("memento", 16, 160, None).expect("router");
+    let service = Service::with_replicas(router, 2);
+    let server = service.serve("127.0.0.1:0", threads + 8).expect("bind");
+    let factory = loadgen::target::tcp_factory(server.addr());
+    loadgen::preload(&factory, 10_000).expect("preload");
+    let cfg = LoadgenConfig {
+        mode: Mode::Closed,
+        workload: Workload::uniform(100_000, 0.7),
+        threads,
+        duration: Duration::from_secs_f64(secs),
+        ..LoadgenConfig::default()
+    };
+    let rep = loadgen::run(&cfg, &factory).expect("tcp loadgen run");
+    assert_eq!(rep.errors, 0, "tcp smoke run must be error-free");
+    let tput = rep.throughput();
+    server.shutdown();
+    tput
 }
 
 /// One route-only cell: throughput of bare `Router::route` calls.
@@ -84,42 +109,63 @@ fn main() {
 
     let mut table = Table::new(
         "router_scaling",
-        &["threads", "loadgen_ops", "loadgen_ops_s", "loadgen_p99_ns", "route_only_ops_s"],
+        &[
+            "threads",
+            "loadgen_ops",
+            "loadgen_ops_s",
+            "loadgen_p99_ns",
+            "tcp_ops_s",
+            "route_only_ops_s",
+        ],
     );
     let mut loadgen_rows = Vec::new();
+    let mut tcp_rows = Vec::new();
     let mut route_rows = Vec::new();
     let mut loadgen_tputs = Vec::new();
+    let mut tcp_tputs = Vec::new();
     let mut route_tputs = Vec::new();
     for &t in &THREADS {
         let (ops, tput, p99) = loadgen_cell(t, secs);
+        let tcp = tcp_cell(t, secs * 0.6);
         let route = route_only_cell(t, secs * 0.4);
         table.push_row(vec![
             t.to_string(),
             ops.to_string(),
             format!("{tput:.0}"),
             p99.to_string(),
+            format!("{tcp:.0}"),
             format!("{route:.0}"),
         ]);
         loadgen_rows.push(format!(
             "{{\"threads\": {t}, \"ops\": {ops}, \"throughput\": {tput:.1}, \"p99_ns\": {p99}}}"
         ));
+        tcp_rows.push(format!("{{\"threads\": {t}, \"throughput\": {tcp:.1}}}"));
         route_rows.push(format!("{{\"threads\": {t}, \"throughput\": {route:.1}}}"));
         loadgen_tputs.push(tput);
+        tcp_tputs.push(tcp);
         route_tputs.push(route);
     }
     table.emit("router_scaling");
 
     let loadgen_speedup = loadgen_tputs[THREADS.len() - 1] / loadgen_tputs[0].max(1.0);
     let route_speedup = route_tputs[THREADS.len() - 1] / route_tputs[0].max(1.0);
+    // Informational: how much of the in-process throughput survives the
+    // whole TCP stack (framing + event loop + worker pool) at 8 threads.
+    let tcp_vs_inproc =
+        tcp_tputs[THREADS.len() - 1] / loadgen_tputs[THREADS.len() - 1].max(1.0);
     println!("\nspeedup 8 threads vs 1: loadgen {loadgen_speedup:.2}x, route-only {route_speedup:.2}x");
+    println!("tcp vs inproc at 8 threads: {tcp_vs_inproc:.2}x");
 
     let json = format!(
         "{{\n  \"bench\": \"router_scaling\",\n  \"algo\": \"memento\",\n  \"nodes\": 16,\n  \
          \"cores\": {cores},\n  \"cell_secs\": {secs},\n  \
-         \"loadgen_closed\": [\n    {}\n  ],\n  \"route_only\": [\n    {}\n  ],\n  \
+         \"loadgen_closed\": [\n    {}\n  ],\n  \"loadgen_tcp\": [\n    {}\n  ],\n  \
+         \"route_only\": [\n    {}\n  ],\n  \
          \"loadgen_speedup_8v1\": {loadgen_speedup:.2},\n  \
-         \"route_speedup_8v1\": {route_speedup:.2}\n}}\n",
+         \"route_speedup_8v1\": {route_speedup:.2},\n  \
+         \"tcp_vs_inproc_8t\": {tcp_vs_inproc:.2}\n}}\n",
         loadgen_rows.join(",\n    "),
+        tcp_rows.join(",\n    "),
         route_rows.join(",\n    ")
     );
     // Cargo runs bench binaries with CWD = the package root (rust/), but

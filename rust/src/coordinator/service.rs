@@ -1,4 +1,8 @@
-//! The TCP front-end: a line protocol over [`crate::netserver`].
+//! The TCP front-end: the typed router protocol ([`crate::proto`])
+//! served over [`crate::netserver`]'s event loop. Every command below
+//! is one [`Request`] variant; the text lines shown are the canonical
+//! renderings (the binary framing carries the same requests as
+//! length-prefixed frames — `DESIGN.md` §13).
 //!
 //! ```text
 //! LOOKUP <key-u64-or-string>      → BUCKET <b> NODE <name>
@@ -64,6 +68,13 @@
 //! String keys are digested with xxHash64 at the edge (the paper's
 //! benchmark tool does the same); numeric keys are taken verbatim, so
 //! tests can exercise exact placements.
+//!
+//! Errors are structured: every failure is a
+//! [`ProtoError`]`{ code, msg }`, rendered `ERR <CODE> <msg>` on the
+//! text protocol (`ERR PARSE LOOKUP needs a key`,
+//! `ERR REFUSED unknown node node-9`) and as a numeric-code `ERR` frame
+//! on the binary protocol. Placement refusals (`REFUSED`) are counted
+//! and journaled; parse-level rejects are not.
 
 use super::membership::{NodeId, NodeSpec};
 use super::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
@@ -76,6 +87,7 @@ use super::wal::{
 use crate::metrics::{Histogram, MetricSpec, WalMetrics};
 use crate::netserver::{self, ServerHandle};
 use crate::obs::{self, EventKind, Stage};
+use crate::proto::{ProtoError, Request, Response};
 use crate::sync::lock_recover;
 use std::sync::{Arc, Mutex};
 
@@ -182,6 +194,7 @@ impl Service {
                 },
             ]
         });
+        reg.register_scalars("net", || crate::netserver::net_metrics().metric_specs());
         {
             let lat = latency.clone();
             reg.register_histograms("service", move || {
@@ -467,89 +480,85 @@ impl Service {
     }
 
     /// The shared tail of every refused admin change: count it, journal
-    /// it, report it. Parse-level errors ("ERR KILL needs a bucket")
-    /// stay out — the reject counter tracks placement-state refusals
-    /// (unknown node, last bucket, bad resize), not typos.
-    fn reject(&self, e: impl std::fmt::Display) -> String {
+    /// it, report it as a typed [`ErrCode::Refused`] error. Parse-level
+    /// errors ("KILL needs a bucket") stay out — the reject counter
+    /// tracks placement-state refusals (unknown node, last bucket, bad
+    /// resize), not typos.
+    ///
+    /// [`ErrCode::Refused`]: crate::proto::ErrCode::Refused
+    fn reject(&self, e: impl std::fmt::Display) -> ProtoError {
         self.router.metrics.rejects.inc();
         obs::recorder().record(EventKind::Reject, 0, 0);
-        format!("ERR {e}")
-    }
-
-    /// Parse a `node-5` / `5` token into a [`NodeId`].
-    fn parse_node(token: &str) -> Option<NodeId> {
-        token.trim_start_matches("node-").parse::<u64>().ok().map(NodeId)
+        ProtoError::refused(e.to_string())
     }
 
     /// Digest a key token: decimal u64 passes through, anything else is
-    /// hashed.
+    /// hashed. Delegates to [`crate::proto::digest_key`] (the codecs
+    /// digest at parse time; this re-export keeps old callers working).
     pub fn digest_key(token: &str) -> u64 {
-        token
-            .parse::<u64>()
-            .unwrap_or_else(|_| crate::hashing::xxhash::xxhash64(token.as_bytes(), 0))
+        crate::proto::digest_key(token)
     }
 
-    /// Handle one protocol line, recording service latency for data-path
-    /// requests (`LOOKUP`/`GET`/`PUT`). Admin and introspection commands
-    /// (`KILL`/`KILLN`/`ADD` publish-and-enqueue; `MSTAT`/`STATS`/`EPOCH`
-    /// report) stay out of the histogram so the reported tail reflects
-    /// serving behavior, not churn injection.
+    /// Handle one protocol line: parse into a typed [`Request`],
+    /// dispatch, render. Kept as the line-oriented shim over
+    /// [`Service::handle_request`] — errors render as
+    /// `ERR <CODE> <msg>`.
     pub fn handle(&self, line: &str) -> String {
-        let data_path =
-            matches!(line.split_whitespace().next(), Some("LOOKUP" | "LOOKUPB" | "GET" | "PUT"));
-        if !data_path {
-            return self.handle_inner(line);
+        match Request::parse_text(line) {
+            Ok(req) => match self.handle_request(&req) {
+                Ok(resp) => resp.render_text(),
+                Err(e) => e.render_text(),
+            },
+            Err(e) => e.render_text(),
+        }
+    }
+
+    /// Execute one typed request, recording service latency for
+    /// data-path requests (`LOOKUP`/`LOOKUPB`/`GET`/`PUT`). Admin and
+    /// introspection commands (`KILL`/`KILLN`/`ADD` publish-and-enqueue;
+    /// `MSTAT`/`STATS`/`EPOCH` report) stay out of the histogram so the
+    /// reported tail reflects serving behavior, not churn injection.
+    pub fn handle_request(&self, req: &Request) -> Result<Response, ProtoError> {
+        if !req.is_data_path() {
+            return self.dispatch(req);
         }
         let t0 = std::time::Instant::now();
-        let resp = self.handle_inner(line);
+        let resp = self.dispatch(req);
         let ns = crate::metrics::duration_to_ns(t0.elapsed());
         let shard = crate::sync::thread_stripe(LATENCY_SHARDS);
         lock_recover(&self.latency[shard]).record(ns);
         resp
     }
 
-    fn handle_inner(&self, line: &str) -> String {
-        let mut parts = line.split_whitespace();
-        match parts.next() {
-            Some("LOOKUP") => {
-                let Some(tok) = parts.next() else { return "ERR LOOKUP needs a key".into() };
-                let key = Self::digest_key(tok);
+    fn dispatch(&self, req: &Request) -> Result<Response, ProtoError> {
+        match req {
+            Request::Lookup { key } => {
                 let t = obs::timer(Stage::Route);
-                let (b, node) = self.router.route(key);
+                let (b, node) = self.router.route(*key);
                 drop(t);
-                format!("BUCKET {b} NODE {node}")
+                Ok(Response::Bucket { bucket: b, node: node.to_string() })
             }
-            Some("LOOKUPB") => {
-                let keys: Vec<u64> = parts.map(Self::digest_key).collect();
+            Request::LookupBatch { keys } => {
                 if keys.is_empty() {
-                    return "ERR LOOKUPB needs at least one key".into();
+                    // Both codecs reject empty batches; this guards
+                    // direct in-process callers.
+                    return Err(ProtoError::parse("LOOKUPB needs at least one key"));
                 }
-                let buckets = self.router.route_batch(&keys);
-                let mut out = String::from("BUCKETS");
-                for b in buckets {
-                    out.push(' ');
-                    out.push_str(&b.to_string());
-                }
-                out
+                Ok(Response::Buckets(self.router.route_batch(keys)))
             }
-            Some("PUT") => {
-                let (Some(tok), Some(val)) = (parts.next(), parts.next()) else {
-                    return "ERR PUT needs key and value".into();
-                };
-                let key = Self::digest_key(tok);
+            Request::Put { key, value } => {
                 let t = obs::timer(Stage::Route);
-                let set = self.replica_nodes(key);
+                let set = self.replica_nodes(*key);
                 drop(t);
                 let t = obs::timer(Stage::ReplicaFanout);
                 for (_b, node) in &set {
-                    self.storage.node(*node).put(key, val.as_bytes().to_vec());
+                    self.storage.node(*node).put(*key, value.as_bytes().to_vec());
                 }
                 drop(t);
-                format!("OK {}", set[0].1)
+                Ok(Response::Ok { node: set[0].1.to_string() })
             }
-            Some("GET") => {
-                let Some(tok) = parts.next() else { return "ERR GET needs a key".into() };
-                let key = Self::digest_key(tok);
+            Request::Get { key } => {
+                let key = *key;
                 if self.replicas == 1 {
                     // Single-copy fast path: primary, then (only if a
                     // migration is in flight) the pre-change placement.
@@ -557,50 +566,57 @@ impl Service {
                     let (_b, node) = self.router.route(key);
                     drop(t);
                     if let Some(v) = self.storage.node(node).get(key) {
-                        return format!("VALUE {node} {}", String::from_utf8_lossy(&v));
+                        return Ok(Response::Value {
+                            node: node.to_string(),
+                            value: String::from_utf8_lossy(&v).into_owned(),
+                        });
                     }
-                    return match self.migration_read(key) {
-                        Some((n, v)) => format!("VALUE {n} {}", String::from_utf8_lossy(&v)),
-                        None => format!("MISSING {node}"),
-                    };
+                    return Ok(match self.migration_read(key) {
+                        Some((n, v)) => Response::Value {
+                            node: n.to_string(),
+                            value: String::from_utf8_lossy(&v).into_owned(),
+                        },
+                        None => Response::Missing { node: node.to_string() },
+                    });
                 }
                 // Failover read along the stable draw sequence.
                 let candidates = self.read_candidates(key);
                 for node in &candidates {
                     if let Some(v) = self.storage.node(*node).get(key) {
-                        return format!("VALUE {node} {}", String::from_utf8_lossy(&v));
+                        return Ok(Response::Value {
+                            node: node.to_string(),
+                            value: String::from_utf8_lossy(&v).into_owned(),
+                        });
                     }
                 }
-                match self.migration_read(key) {
-                    Some((n, v)) => format!("VALUE {n} {}", String::from_utf8_lossy(&v)),
-                    None => format!("MISSING {}", candidates[0]),
-                }
+                Ok(match self.migration_read(key) {
+                    Some((n, v)) => Response::Value {
+                        node: n.to_string(),
+                        value: String::from_utf8_lossy(&v).into_owned(),
+                    },
+                    None => Response::Missing { node: candidates[0].to_string() },
+                })
             }
-            Some("KILL") => {
-                let Some(tok) = parts.next() else { return "ERR KILL needs a bucket".into() };
-                let Ok(bucket) = tok.parse::<u32>() else {
-                    return "ERR KILL needs a numeric bucket".into();
-                };
+            Request::Kill { bucket } => {
                 // Publish the new epoch and enqueue the drain plan; the
                 // executor moves the dead node's data in the background.
                 // The ticket makes the read path retry across the
                 // publish→enqueue gap instead of misreporting a miss.
                 let _change = self.migration.begin_change();
-                match self.router.fail_bucket_planned(bucket) {
+                match self.router.fail_bucket_planned(*bucket) {
                     Ok((node, seed)) => {
                         let (epoch, sources) =
                             self.enqueue_change(PlanKind::Drain, node, vec![seed]);
                         obs::recorder().record(EventKind::NodeKill, node.0, epoch);
-                        format!("KILLED {node} EPOCH {epoch} SOURCES {sources}")
+                        Ok(Response::Info(format!(
+                            "KILLED {node} EPOCH {epoch} SOURCES {sources}"
+                        )))
                     }
-                    Err(e) => self.reject(e),
+                    Err(e) => Err(self.reject(e)),
                 }
             }
-            Some("KILLN") => {
-                let Some(tok) = parts.next() else { return "ERR KILLN needs a node id".into() };
-                let Some(id) = Self::parse_node(tok) else {
-                    return "ERR KILLN needs a node id like 5 or node-5".into();
-                };
+            Request::KillNode { node } => {
+                let id = NodeId(*node);
                 let _change = self.migration.begin_change();
                 match self.router.fail_node_planned(id) {
                     Ok((node, seed)) => {
@@ -608,12 +624,14 @@ impl Service {
                         let (epoch, sources) =
                             self.enqueue_change(PlanKind::Drain, node, vec![seed]);
                         obs::recorder().record(EventKind::NodeKill, node.0, epoch);
-                        format!("KILLED {node} EPOCH {epoch} SOURCES {sources} BUCKETS {buckets}")
+                        Ok(Response::Info(format!(
+                            "KILLED {node} EPOCH {epoch} SOURCES {sources} BUCKETS {buckets}"
+                        )))
                     }
-                    Err(e) => self.reject(e),
+                    Err(e) => Err(self.reject(e)),
                 }
             }
-            Some("ADD") => {
+            Request::Add => {
                 let _change = self.migration.begin_change();
                 match self.router.add_node_planned() {
                     Ok(((b, node), seeds)) => {
@@ -622,16 +640,15 @@ impl Service {
                         // replacement-chain nodes — not a full scan).
                         let (epoch, sources) = self.enqueue_change(PlanKind::Pull, node, seeds);
                         obs::recorder().record(EventKind::NodeAdd, node.0, epoch);
-                        format!("ADDED BUCKET {b} NODE {node} EPOCH {epoch} SOURCES {sources}")
+                        Ok(Response::Info(format!(
+                            "ADDED BUCKET {b} NODE {node} EPOCH {epoch} SOURCES {sources}"
+                        )))
                     }
-                    Err(e) => self.reject(e),
+                    Err(e) => Err(self.reject(e)),
                 }
             }
-            Some("ADDW") => {
-                let Some(tok) = parts.next() else { return "ERR ADDW needs a weight".into() };
-                let Ok(weight) = tok.parse::<u32>() else {
-                    return "ERR ADDW needs a numeric weight".into();
-                };
+            Request::AddWeighted { weight } => {
+                let weight = *weight;
                 let _change = self.migration.begin_change();
                 match self.router.add_node_weighted_planned(NodeSpec::weighted(weight)) {
                     Ok(((buckets, node), seeds)) => {
@@ -639,24 +656,16 @@ impl Service {
                         obs::recorder().record(EventKind::NodeAdd, node.0, epoch);
                         let list =
                             buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" ");
-                        format!(
+                        Ok(Response::Info(format!(
                             "ADDED NODE {node} WEIGHT {weight} BUCKETS {list} \
                              EPOCH {epoch} SOURCES {sources}"
-                        )
+                        )))
                     }
-                    Err(e) => self.reject(e),
+                    Err(e) => Err(self.reject(e)),
                 }
             }
-            Some("SETW") => {
-                let (Some(ntok), Some(wtok)) = (parts.next(), parts.next()) else {
-                    return "ERR SETW needs a node id and a weight".into();
-                };
-                let Some(id) = Self::parse_node(ntok) else {
-                    return "ERR SETW needs a node id like 5 or node-5".into();
-                };
-                let Ok(weight) = wtok.parse::<u32>() else {
-                    return "ERR SETW needs a numeric weight".into();
-                };
+            Request::SetWeight { node, weight } => {
+                let (id, weight) = (NodeId(*node), *weight);
                 let _change = self.migration.begin_change();
                 match self.router.set_weight_planned(id, weight) {
                     Ok((change, seeds)) => {
@@ -668,15 +677,15 @@ impl Service {
                         let (added, removed) = (change.added.len(), change.removed.len());
                         let (epoch, sources) = self.enqueue_change(kind, id, seeds);
                         obs::recorder().record(EventKind::WeightSet, id.0, weight as u64);
-                        format!(
+                        Ok(Response::Info(format!(
                             "RESIZED {id} WEIGHT {weight} ADDED {added} REMOVED {removed} \
                              EPOCH {epoch} SOURCES {sources}"
-                        )
+                        )))
                     }
-                    Err(e) => self.reject(e),
+                    Err(e) => Err(self.reject(e)),
                 }
             }
-            Some("NODES") => {
+            Request::Nodes => {
                 let infos: Vec<(String, u32, usize, NodeId)> = self.router.with_view(|_a, m| {
                     m.nodes()
                         .filter(|i| i.state == super::membership::NodeState::Working)
@@ -692,20 +701,20 @@ impl Service {
                         store.len()
                     ));
                 }
-                out
+                Ok(Response::Info(out))
             }
-            Some("MSTAT") => {
+            Request::MStat => {
                 let st = self.migration.status();
-                format!(
+                Ok(Response::Info(format!(
                     "MSTAT epoch={} pending={} active={} idle={} {}",
                     self.router.epoch(),
                     st.pending,
                     st.active,
                     st.idle,
                     self.router.metrics.migration_summary()
-                )
+                )))
             }
-            Some("STATS") => {
+            Request::Stats => {
                 let reb = self.rebalancer.summary();
                 let lat = {
                     let mut h = Histogram::new();
@@ -724,7 +733,7 @@ impl Service {
                 let (working, down, weight, buckets) = self.router.with_view(|a, m| {
                     (m.working_count(), m.down_nodes().len(), m.total_weight(), a.working())
                 });
-                format!(
+                Ok(Response::Info(format!(
                     "STATS {} | rebalance: epochs={} relocated={} violations={} | {} | \
                      nodes: working={} down={} buckets={} weight={}",
                     self.router.metrics.summary(),
@@ -736,29 +745,33 @@ impl Service {
                     down,
                     buckets,
                     weight
-                )
+                )))
             }
-            Some("EPOCH") => {
-                format!("EPOCH {} WORKING {}", self.router.epoch(), self.router.working())
-            }
-            Some("FSYNC") => {
+            Request::Epoch => Ok(Response::Info(format!(
+                "EPOCH {} WORKING {}",
+                self.router.epoch(),
+                self.router.working()
+            ))),
+            Request::Fsync => {
                 let mut files = self.storage.sync_all();
                 if let Some(w) = &self.wal {
                     w.sync();
                     files += 1;
                 }
-                format!("SYNCED files={files}")
+                Ok(Response::Info(format!("SYNCED files={files}")))
             }
-            Some("WALSTAT") => {
-                format!("WALSTAT durable={} {}", self.wal.is_some(), self.wal_metrics.summary())
-            }
-            Some("COMPACT") => {
+            Request::WalStat => Ok(Response::Info(format!(
+                "WALSTAT durable={} {}",
+                self.wal.is_some(),
+                self.wal_metrics.summary()
+            ))),
+            Request::Compact => {
                 let nodes = self.storage.nodes().len();
                 self.storage.compact_all();
-                format!("COMPACTED nodes={nodes}")
+                Ok(Response::Info(format!("COMPACTED nodes={nodes}")))
             }
-            Some("RECOVER") => match &self.recovery {
-                Some(r) => format!(
+            Request::Recover => match &self.recovery {
+                Some(r) => Ok(Response::Info(format!(
                     "RECOVERED epoch={} nodes={} wal_records={} snapshot_records={} \
                      torn_tails={} plans={} plan_moved={} reconciled={}",
                     r.epoch,
@@ -769,35 +782,58 @@ impl Service {
                     r.plans.len(),
                     r.plan_moved,
                     r.reconciled
-                ),
-                None => "ERR this service did not start from recovery".into(),
+                ))),
+                None => {
+                    Err(ProtoError::unavailable("this service did not start from recovery"))
+                }
             },
-            Some("METRICS") => {
+            Request::Metrics => {
                 self.obs.tick();
-                self.obs.expose()
+                Ok(Response::Body(self.obs.expose()))
             }
-            Some("MSAMPLE") => {
+            Request::MSample => {
                 self.obs.tick();
-                self.obs.sample_line()
+                Ok(Response::Info(self.obs.sample_line()))
             }
-            Some("SERIES") => match parts.next() {
-                Some(metric) => self.obs.series_line(metric),
-                None => "ERR SERIES needs a metric name".into(),
-            },
-            Some("STAGES") => obs::stages().render_line(),
-            Some("DUMP") => {
-                let max = parts.next().and_then(|t| t.parse::<usize>().ok()).unwrap_or(32);
-                obs::recorder().render_line(max)
+            Request::Series { metric } => {
+                let line = self.obs.series_line(metric);
+                // The registry reports a miss as a pre-typed ERR line.
+                match line.strip_prefix("ERR ") {
+                    Some(msg) => Err(ProtoError::refused(msg)),
+                    None => Ok(Response::Info(line)),
+                }
             }
-            Some(cmd) => format!("ERR unknown command {cmd}"),
-            None => "ERR empty request".into(),
+            Request::Stages => Ok(Response::Info(obs::stages().render_line())),
+            Request::Dump { max } => {
+                Ok(Response::Info(obs::recorder().render_line(max.unwrap_or(32))))
+            }
         }
     }
 
-    /// Bind the TCP front-end.
+    /// Bind the TCP front-end with default worker sizing.
     pub fn serve(self: &Arc<Self>, bind: &str, max_conns: usize) -> std::io::Result<ServerHandle> {
-        let svc = self.clone();
-        netserver::serve(bind, max_conns, Arc::new(move |line: &str| svc.handle(line)))
+        self.serve_config(bind, netserver::ServerConfig { max_conns, ..Default::default() })
+    }
+
+    /// Bind the TCP front-end with explicit sizing (connection cap +
+    /// worker pool), serving both wire protocols through the typed
+    /// dispatch.
+    pub fn serve_config(
+        self: &Arc<Self>,
+        bind: &str,
+        cfg: netserver::ServerConfig,
+    ) -> std::io::Result<ServerHandle> {
+        netserver::serve_typed(bind, cfg, self.clone())
+    }
+}
+
+impl netserver::ProtocolHandler for Service {
+    fn handle_request(&self, req: &Request) -> Result<Response, ProtoError> {
+        Service::handle_request(self, req)
+    }
+
+    fn handle_line(&self, line: &str) -> String {
+        self.handle(line)
     }
 }
 
@@ -955,9 +991,9 @@ mod tests {
         assert!(resp.starts_with("KILLED node-3"), "{resp}");
         // Numeric form, already-down node: unknown to the failure path.
         let resp = s.handle("KILLN 3");
-        assert_eq!(resp, "ERR unknown node node-3");
+        assert_eq!(resp, "ERR REFUSED unknown node node-3");
         let resp = s.handle("KILLN 999");
-        assert_eq!(resp, "ERR unknown node node-999");
+        assert_eq!(resp, "ERR REFUSED unknown node node-999");
         assert!(s.handle("KILLN").starts_with("ERR"));
         assert!(s.handle("KILLN abc").starts_with("ERR"));
         for i in 0..100 {
@@ -998,7 +1034,7 @@ mod tests {
         assert!(s.handle("SETW").starts_with("ERR"));
         assert!(s.handle("SETW node-0").starts_with("ERR"));
         assert!(s.handle("SETW node-0 x").starts_with("ERR"));
-        assert_eq!(s.handle("SETW node-99 2"), "ERR unknown node node-99");
+        assert_eq!(s.handle("SETW node-99 2"), "ERR REFUSED unknown node node-99");
     }
 
     #[test]
@@ -1262,8 +1298,8 @@ mod tests {
         assert!(!sample.contains('\n'), "MSAMPLE must be one line: {sample}");
         let series = s.handle("SERIES memento_router_lookups_scalar");
         assert!(series.starts_with("SERIES memento_router_lookups_scalar n="), "{series}");
-        assert!(s.handle("SERIES no_such_metric").starts_with("ERR unknown metric"));
-        assert!(s.handle("SERIES").starts_with("ERR SERIES needs"));
+        assert!(s.handle("SERIES no_such_metric").starts_with("ERR REFUSED unknown metric"));
+        assert!(s.handle("SERIES").starts_with("ERR PARSE SERIES needs"));
         // 200 PUTs sample the route stage at least thrice (1-in-64).
         let stages = s.handle("STAGES");
         assert!(stages.starts_with("STAGES route:n="), "{stages}");

@@ -53,6 +53,7 @@ pub mod loadgen;
 pub mod metrics;
 pub mod netserver;
 pub mod obs;
+pub mod proto;
 pub mod runtime;
 pub mod simulator;
 pub mod sync;

@@ -7,14 +7,23 @@
 //! * [`InProcTarget`] calls the service directly (isolates engine +
 //!   storage cost from protocol overhead);
 //! * [`TcpTarget`] goes through a real socket to a live
-//!   [`crate::netserver`] front-end (measures the whole stack).
+//!   [`crate::netserver`] front-end (measures the whole stack), on
+//!   either wire protocol — text lines or binary frames
+//!   ([`tcp_binary_factory`]); binary targets parse each line into a
+//!   typed [`Request`] and render the typed [`Response`] back, so the
+//!   generator's line-oriented bookkeeping (including `ERR `-prefix
+//!   error counting) is protocol-agnostic;
+//! * [`FanoutTarget`] holds many connections per worker and
+//!   round-robins requests across them — the connection-scaling cells
+//!   (1k+ open sockets) come from here, not from 1k threads.
 //!
 //! Each worker thread gets its own target from a [`TargetFactory`], so
 //! TCP workers hold independent connections and in-process workers share
 //! the service through its own internal synchronization.
 
 use crate::coordinator::service::Service;
-use crate::netserver::Client;
+use crate::netserver::{Client, ClientError};
+use crate::proto::Request;
 use std::net::SocketAddr;
 use std::sync::Arc;
 
@@ -54,25 +63,116 @@ impl Target for InProcTarget {
     }
 }
 
-/// Drives a live TCP front-end over one pipelined connection.
+/// Issue one line over a binary-mode client: parse → typed call →
+/// render. Protocol errors (parse rejects and server `ERR` frames)
+/// come back as `ERR <CODE> <msg>` lines so the generator counts them
+/// exactly like text-protocol errors; only transport failures surface
+/// as `io::Error`.
+fn call_typed(client: &mut Client, line: &str) -> std::io::Result<String> {
+    let req = match Request::parse_text(line) {
+        Ok(req) => req,
+        Err(e) => return Ok(e.render_text()),
+    };
+    match client.call(&req) {
+        Ok(resp) => Ok(resp.render_text()),
+        Err(ClientError::Proto(e)) => Ok(e.render_text()),
+        Err(ClientError::Io(e)) => Err(e),
+    }
+}
+
+/// Drives a live TCP front-end over one pipelined connection, on
+/// either wire protocol.
 pub struct TcpTarget {
     client: Client,
+    binary: bool,
 }
 
 impl TcpTarget {
-    /// Connect to a running server.
+    /// Connect to a running server on the text protocol.
     pub fn connect(addr: &SocketAddr) -> std::io::Result<Self> {
-        Ok(Self { client: Client::connect(addr)? })
+        Ok(Self { client: Client::connect(addr)?, binary: false })
+    }
+
+    /// Connect to a running server on the binary frame protocol.
+    pub fn connect_binary(addr: &SocketAddr) -> std::io::Result<Self> {
+        Ok(Self { client: Client::connect_binary(addr)?, binary: true })
     }
 }
 
 impl Target for TcpTarget {
     fn call(&mut self, line: &str) -> std::io::Result<String> {
-        self.client.request(line)
+        if self.binary {
+            call_typed(&mut self.client, line)
+        } else {
+            self.client.request(line)
+        }
     }
 
     fn call_many(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
-        self.client.request_pipelined(lines)
+        if !self.binary {
+            return self.client.request_pipelined(lines);
+        }
+        // Parse every line up front; unparseable slots answer locally
+        // and only the typed requests ride the pipelined batch, keeping
+        // responses aligned with their request index.
+        let mut out: Vec<Option<String>> = Vec::with_capacity(lines.len());
+        let mut reqs = Vec::with_capacity(lines.len());
+        for line in lines {
+            match Request::parse_text(line) {
+                Ok(req) => {
+                    out.push(None);
+                    reqs.push(req);
+                }
+                Err(e) => out.push(Some(e.render_text())),
+            }
+        }
+        let mut answers = self.client.call_many(&reqs)?.into_iter();
+        Ok(out
+            .into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| match answers.next() {
+                    Some(Ok(resp)) => resp.render_text(),
+                    Some(Err(e)) => e.render_text(),
+                    None => {
+                        crate::proto::ProtoError::unavailable("pipelined response missing")
+                            .render_text()
+                    }
+                })
+            })
+            .collect())
+    }
+}
+
+/// Round-robins requests across many connections from one worker
+/// thread — the connection-count scaling cells. Each call uses the
+/// next connection, so N in-flight workers keep `conns × workers`
+/// sockets open against the server with a bounded thread count.
+pub struct FanoutTarget {
+    conns: Vec<TcpTarget>,
+    next: usize,
+}
+
+impl FanoutTarget {
+    /// Open `conns` connections to a running server.
+    pub fn connect(addr: &SocketAddr, conns: usize, binary: bool) -> std::io::Result<Self> {
+        let conns = conns.max(1);
+        let mut v = Vec::with_capacity(conns);
+        for _ in 0..conns {
+            v.push(if binary {
+                TcpTarget::connect_binary(addr)?
+            } else {
+                TcpTarget::connect(addr)?
+            });
+        }
+        Ok(Self { conns: v, next: 0 })
+    }
+}
+
+impl Target for FanoutTarget {
+    fn call(&mut self, line: &str) -> std::io::Result<String> {
+        let i = self.next;
+        self.next = (self.next + 1) % self.conns.len();
+        self.conns[i].call(line)
     }
 }
 
@@ -81,9 +181,21 @@ pub fn inproc_factory(svc: Arc<Service>) -> TargetFactory {
     Arc::new(move || Ok(Box::new(InProcTarget::new(svc.clone())) as Box<dyn Target>))
 }
 
-/// Factory producing one TCP connection per worker.
+/// Factory producing one text-protocol TCP connection per worker.
 pub fn tcp_factory(addr: SocketAddr) -> TargetFactory {
     Arc::new(move || TcpTarget::connect(&addr).map(|t| Box::new(t) as Box<dyn Target>))
+}
+
+/// Factory producing one binary-protocol TCP connection per worker.
+pub fn tcp_binary_factory(addr: SocketAddr) -> TargetFactory {
+    Arc::new(move || TcpTarget::connect_binary(&addr).map(|t| Box::new(t) as Box<dyn Target>))
+}
+
+/// Factory producing `conns` connections per worker, round-robined.
+pub fn fanout_factory(addr: SocketAddr, conns: usize, binary: bool) -> TargetFactory {
+    Arc::new(move || {
+        FanoutTarget::connect(&addr, conns, binary).map(|t| Box::new(t) as Box<dyn Target>)
+    })
 }
 
 #[cfg(test)]
@@ -129,6 +241,43 @@ mod tests {
         assert_eq!(a.len(), 50);
         assert_eq!(a, b, "pipelined TCP must answer in order with identical responses");
         drop(tcp);
+        server.shutdown();
+    }
+
+    #[test]
+    fn binary_target_matches_text_target() {
+        let router = Router::new("memento", 4, 40, None).unwrap();
+        let svc = Service::new(router);
+        let server = svc.serve("127.0.0.1:0", 8).unwrap();
+        let mut text = tcp_factory(server.addr())().unwrap();
+        let mut bin = tcp_binary_factory(server.addr())().unwrap();
+        for line in ["PUT k1 v1", "GET k1", "LOOKUP k1", "GET nope", "FROB"] {
+            assert_eq!(
+                text.call(line).unwrap(),
+                bin.call(line).unwrap(),
+                "text and binary targets must agree on {line:?}"
+            );
+        }
+        let lines: Vec<String> = (0..40).map(|i| format!("LOOKUP key{i}")).collect();
+        assert_eq!(text.call_many(&lines).unwrap(), bin.call_many(&lines).unwrap());
+        drop((text, bin));
+        server.shutdown();
+    }
+
+    #[test]
+    fn fanout_target_opens_many_connections() {
+        let router = Router::new("memento", 4, 40, None).unwrap();
+        let svc = Service::new(router);
+        let server = svc.serve("127.0.0.1:0", 64).unwrap();
+        let mut t = fanout_factory(server.addr(), 8, true)().unwrap();
+        for i in 0..32 {
+            assert!(t.call(&format!("LOOKUP key{i}")).unwrap().starts_with("BUCKET "));
+        }
+        assert!(
+            server.live_connections() >= 8,
+            "fanout target should hold all its connections open"
+        );
+        drop(t);
         server.shutdown();
     }
 }

@@ -327,6 +327,13 @@ fn cmd_loadgen(raw: &[String]) -> i32 {
         .flag("weights", "", "comma list of node weights, e.g. 4,1,1,2 (unlisted nodes stay 1)")
         .flag("replicas", "2", "PUT replication factor")
         .flag("target", "inproc", "inproc | tcp (loopback netserver)")
+        .flag("proto", "text", "tcp wire protocol: text | binary")
+        .flag("conns", "1", "tcp connections per worker (>1 round-robins a fanout)")
+        .flag(
+            "assert-max-threads",
+            "0",
+            "fail if the process ever needs more than this many threads (0 = off)",
+        )
         .flag("preload", "10000", "keys written before the run starts")
         .flag("seed", "7", "workload rng seed")
         .flag("json", "", "also write the report as JSON to this path")
@@ -393,15 +400,47 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
             router.set_weight(node, w).map_err(|e| format!("--weights node {i}: {e}"))?;
         }
     }
+    let binary = match args.get("proto") {
+        "text" => false,
+        "binary" => true,
+        other => return Err(format!("unknown proto '{other}' (text|binary)")),
+    };
+    let conns: usize = args.get_parsed("conns")?;
+    let assert_max_threads: usize = args.get_parsed("assert-max-threads")?;
+    let conns = conns.max(1);
+
     let service = Service::with_replicas(router, replicas);
     let (factory, server) = match args.get("target") {
-        "inproc" => (loadgen::target::inproc_factory(service.clone()), None),
+        "inproc" => {
+            if binary || conns > 1 {
+                return Err("--proto binary / --conns need --target tcp".into());
+            }
+            (loadgen::target::inproc_factory(service.clone()), None)
+        }
         "tcp" => {
+            // +3 headroom: preload, churn injector, end-of-run admin.
+            let want = threads * conns + 3;
+            memento::netserver::raise_fd_limit();
             let server = service
-                .serve("127.0.0.1:0", threads + 8)
+                .serve_config(
+                    "127.0.0.1:0",
+                    memento::netserver::ServerConfig { max_conns: want + 8, ..Default::default() },
+                )
                 .map_err(|e| format!("bind: {e}"))?;
-            println!("loadgen: serving on {}", server.addr());
-            (loadgen::target::tcp_factory(server.addr()), Some(server))
+            println!(
+                "loadgen: serving on {} (proto={} conns/worker={conns} workers={})",
+                server.addr(),
+                args.get("proto"),
+                server.worker_threads()
+            );
+            let f = if conns > 1 {
+                loadgen::target::fanout_factory(server.addr(), conns, binary)
+            } else if binary {
+                loadgen::target::tcp_binary_factory(server.addr())
+            } else {
+                loadgen::target::tcp_factory(server.addr())
+            };
+            (f, Some(server))
         }
         other => return Err(format!("unknown target '{other}' (inproc|tcp)")),
     };
@@ -426,6 +465,20 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
     );
 
     let report = loadgen::run(&cfg, &factory)?;
+    // Event-loop contract: connection count must not become thread
+    // count. Checked while the server (loop + worker pool) is still up.
+    if assert_max_threads > 0 {
+        match current_thread_count() {
+            Some(n) if n > assert_max_threads => {
+                return Err(format!(
+                    "thread ceiling exceeded: {n} threads alive > --assert-max-threads \
+                     {assert_max_threads}"
+                ));
+            }
+            Some(n) => println!("loadgen: {n} threads alive (ceiling {assert_max_threads})"),
+            None => eprintln!("[thread ceiling unchecked: /proc/self/status unavailable]"),
+        }
+    }
     println!("{}", report.render());
     if !args.switch("no-csv") {
         let stem = format!(
@@ -488,6 +541,16 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Live thread count from `/proc/self/status` (`Threads:` line).
+/// `None` where procfs is unavailable.
+fn current_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
 }
 
 fn cmd_lookup(raw: &[String]) -> i32 {

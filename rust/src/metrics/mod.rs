@@ -42,11 +42,11 @@ pub struct MetricSpec {
 }
 
 impl MetricSpec {
-    fn counter(name: &'static str, help: &'static str, value: u64) -> Self {
+    pub(crate) fn counter(name: &'static str, help: &'static str, value: u64) -> Self {
         Self { name, help, kind: MetricKind::Counter, value }
     }
 
-    fn gauge(name: &'static str, help: &'static str, value: u64) -> Self {
+    pub(crate) fn gauge(name: &'static str, help: &'static str, value: u64) -> Self {
         Self { name, help, kind: MetricKind::Gauge, value }
     }
 

@@ -1,0 +1,345 @@
+//! `client` — the blocking client for both wire protocols: typed
+//! framed calls ([`Client::call`] / [`Client::call_many`]) over either
+//! the newline text protocol or the length-prefixed binary framing,
+//! plus the historical line-oriented shims (`request*`) kept for
+//! existing callers.
+//!
+//! One connected [`Client`] speaks exactly one protocol, chosen at
+//! connect time ([`Client::connect`] → text,
+//! [`Client::connect_binary`] / [`Client::connect_binary_crc`] →
+//! binary); the magic byte is sent on connect so the server locks the
+//! mode before the first request.
+
+use crate::proto::{try_frame, ProtoError, Request, Response, MAGIC_BINARY, MAGIC_BINARY_CRC};
+use std::fmt;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Bounded pipelining chunk for [`Client::call_many`] /
+/// [`Client::request_pipelined`].
+///
+/// The chunking is load-bearing, not just a batching knob: writing an
+/// *unbounded* batch before reading anything deadlocks once the request
+/// bytes in flight fill the client-send and server-receive buffers
+/// while the server blocks writing responses nobody is draining.
+/// Draining responses after every chunk bounds the in-flight bytes well
+/// below any socket-buffer size.
+const PIPELINE_CHUNK: usize = 64;
+
+/// Which protocol this client speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ClientMode {
+    Text,
+    Binary { crc: bool },
+}
+
+/// A client-side failure: either the transport died or the server
+/// answered a typed protocol error.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Socket-level failure; the connection is dead.
+    Io(io::Error),
+    /// The server answered a typed `ERR`; the connection stays usable
+    /// unless the error was a framing violation (`BAD_FRAME`), after
+    /// which the server closes.
+    Proto(ProtoError),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Proto(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Proto(e) => Some(e),
+        }
+    }
+}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<ProtoError> for ClientError {
+    fn from(e: ProtoError) -> Self {
+        ClientError::Proto(e)
+    }
+}
+
+/// A blocking client for the router protocol (tests / examples / CLI /
+/// loadgen).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    mode: ClientMode,
+    /// Unconsumed binary frame bytes.
+    rbuf: Vec<u8>,
+}
+
+impl Client {
+    /// Open a **text-protocol** connection to a running server.
+    pub fn connect(addr: &SocketAddr) -> io::Result<Self> {
+        Self::connect_mode(addr, ClientMode::Text)
+    }
+
+    /// Open a **binary-protocol** connection (no CRC). The magic byte
+    /// is sent immediately so the server locks the mode.
+    pub fn connect_binary(addr: &SocketAddr) -> io::Result<Self> {
+        Self::connect_mode(addr, ClientMode::Binary { crc: false })
+    }
+
+    /// Open a **binary-protocol** connection with per-frame CRC32.
+    pub fn connect_binary_crc(addr: &SocketAddr) -> io::Result<Self> {
+        Self::connect_mode(addr, ClientMode::Binary { crc: true })
+    }
+
+    fn connect_mode(addr: &SocketAddr, mode: ClientMode) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let mut writer = stream.try_clone()?;
+        match mode {
+            ClientMode::Binary { crc: false } => writer.write_all(&[MAGIC_BINARY])?,
+            ClientMode::Binary { crc: true } => writer.write_all(&[MAGIC_BINARY_CRC])?,
+            ClientMode::Text => {}
+        }
+        Ok(Self { reader: BufReader::new(stream), writer, mode, rbuf: Vec::new() })
+    }
+
+    /// Execute one typed request and return the typed response, or the
+    /// server's typed error ([`ClientError::Proto`]), or a transport
+    /// failure ([`ClientError::Io`]). Works on both protocols; in text
+    /// mode multi-line responses (`METRICS`) are reassembled before
+    /// classification.
+    pub fn call(&mut self, req: &Request) -> Result<Response, ClientError> {
+        match self.mode {
+            ClientMode::Text => {
+                self.send_text_line(&req.render_text())?;
+                let payload = self.recv_text_payload(req)?;
+                Response::parse_text(payload.trim_end_matches('\n')).map_err(ClientError::Proto)
+            }
+            ClientMode::Binary { crc } => {
+                self.writer.write_all(&req.encode_binary(crc))?;
+                self.recv_binary(crc)?.map_err(ClientError::Proto)
+            }
+        }
+    }
+
+    /// Pipelined batch: write a bounded chunk of requests in one flush,
+    /// read its responses (the server answers in order), repeat. Turns
+    /// N round trips into N/[`PIPELINE_CHUNK`] for bulk operations like
+    /// loadgen preload. Per-request protocol errors come back in the
+    /// result slots; a transport error aborts the whole batch.
+    pub fn call_many(
+        &mut self,
+        reqs: &[Request],
+    ) -> io::Result<Vec<Result<Response, ProtoError>>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        match self.mode {
+            ClientMode::Binary { crc } => {
+                for chunk in reqs.chunks(PIPELINE_CHUNK) {
+                    let mut buf = Vec::new();
+                    for r in chunk {
+                        buf.extend_from_slice(&r.encode_binary(crc));
+                    }
+                    self.writer.write_all(&buf)?;
+                    for _ in chunk {
+                        out.push(self.recv_binary(crc)?);
+                    }
+                }
+            }
+            ClientMode::Text => {
+                for chunk in reqs.chunks(PIPELINE_CHUNK) {
+                    let mut buf = String::with_capacity(
+                        chunk.iter().map(|r| r.render_text().len() + 1).sum(),
+                    );
+                    for r in chunk {
+                        buf.push_str(&r.render_text());
+                        buf.push('\n');
+                    }
+                    self.writer.write_all(buf.as_bytes())?;
+                    for r in chunk {
+                        let payload = self.recv_text_payload(r)?;
+                        out.push(Response::parse_text(payload.trim_end_matches('\n')));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // -- text-mode internals ------------------------------------------------
+
+    fn check_text(&self) -> io::Result<()> {
+        if self.mode != ClientMode::Text {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "text-line API used on a binary-mode client; use call()/call_many()",
+            ));
+        }
+        Ok(())
+    }
+
+    fn send_text_line(&mut self, line: &str) -> io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")
+    }
+
+    /// Read the payload for one request: a single line, or (for
+    /// requests with a [`Request::multiline_terminator`]) the full
+    /// multi-line body including the terminator line.
+    fn recv_text_payload(&mut self, req: &Request) -> io::Result<String> {
+        match req.multiline_terminator() {
+            Some(term) => self.read_multiline(term),
+            None => {
+                let mut resp = String::new();
+                self.reader.read_line(&mut resp)?;
+                Ok(resp.trim_end().to_string())
+            }
+        }
+    }
+
+    /// Multi-line read until (and including) the `terminator` line. The
+    /// server frames every response with one trailing newline of its
+    /// own; for a body that already ends in `\n` that frame byte
+    /// arrives as an empty line, which this method consumes so the next
+    /// request starts on a line boundary. A single-line `ERR …` reply
+    /// (no terminator will ever come) is returned as-is.
+    fn read_multiline(&mut self, terminator: &str) -> io::Result<String> {
+        let mut out = String::new();
+        loop {
+            let mut l = String::new();
+            if self.reader.read_line(&mut l)? == 0 {
+                break; // peer closed mid-body
+            }
+            let done = l.trim_end() == terminator;
+            let err = out.is_empty() && l.starts_with("ERR");
+            out.push_str(&l);
+            if err {
+                break;
+            }
+            if done {
+                let mut frame = String::new();
+                self.reader.read_line(&mut frame)?;
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    // -- binary-mode internals ----------------------------------------------
+
+    /// Read one frame and decode it: `Ok(Err(_))` is a typed server
+    /// error; the outer `Err` is a dead transport (including a torn or
+    /// corrupt frame — the stream cannot be resynchronized).
+    fn recv_binary(&mut self, crc: bool) -> io::Result<Result<Response, ProtoError>> {
+        let (opcode, payload) = self.read_frame(crc)?;
+        Ok(Response::decode_binary(opcode, &payload))
+    }
+
+    fn read_frame(&mut self, crc: bool) -> io::Result<(u8, Vec<u8>)> {
+        loop {
+            match try_frame(&self.rbuf, crc) {
+                Ok(Some((opcode, payload, consumed))) => {
+                    self.rbuf.drain(..consumed);
+                    return Ok((opcode, payload));
+                }
+                Ok(None) => {}
+                Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e)),
+            }
+            let mut tmp = [0u8; 4096];
+            let n = self.reader.read(&mut tmp)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            self.rbuf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    // -- line-oriented shims (kept for existing callers) --------------------
+
+    /// Send one request line, read one response line. **Deprecated
+    /// shim** (text mode only) — prefer [`Client::call`], which returns
+    /// typed responses and typed errors on both protocols.
+    pub fn request(&mut self, line: &str) -> io::Result<String> {
+        self.check_text()?;
+        self.send_text_line(line)?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Ok(resp.trim_end().to_string())
+    }
+
+    /// Send one request line, read a multi-line response until (and
+    /// including) the line that equals `terminator` — the shape of the
+    /// `METRICS` exposition, whose body is many lines ended by `# EOF`.
+    /// **Deprecated shim** (text mode only) — prefer [`Client::call`],
+    /// which picks the terminator from the request.
+    pub fn request_multiline(&mut self, line: &str, terminator: &str) -> io::Result<String> {
+        self.check_text()?;
+        self.send_text_line(line)?;
+        self.read_multiline(terminator)
+    }
+
+    /// Pipelined raw-line batch, chunked like [`Client::call_many`].
+    /// **Deprecated shim** (text mode only) — prefer
+    /// [`Client::call_many`], which returns typed per-request results.
+    pub fn request_pipelined(&mut self, lines: &[String]) -> io::Result<Vec<String>> {
+        self.check_text()?;
+        let mut out = Vec::with_capacity(lines.len());
+        for chunk in lines.chunks(PIPELINE_CHUNK) {
+            let mut buf = String::with_capacity(chunk.iter().map(|l| l.len() + 1).sum());
+            for line in chunk {
+                buf.push_str(line);
+                buf.push('\n');
+            }
+            self.writer.write_all(buf.as_bytes())?;
+            for _ in chunk {
+                let mut resp = String::new();
+                self.reader.read_line(&mut resp)?;
+                out.push(resp.trim_end().to_string());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_api_is_rejected_on_a_binary_client() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let mut c = Client::connect_binary(&addr).unwrap();
+        let held = hold.join().unwrap().unwrap();
+        let err = c.request("LOOKUP 1").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        let err = c.request_multiline("METRICS", "# EOF").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        let err = c.request_pipelined(&["LOOKUP 1".to_string()]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        drop(held);
+    }
+
+    #[test]
+    fn client_error_display_and_source() {
+        let io_err: ClientError = io::Error::other("boom").into();
+        assert!(io_err.to_string().contains("boom"));
+        let proto: ClientError = ProtoError::refused("nope").into();
+        assert_eq!(proto.to_string(), "REFUSED: nope");
+        assert!(std::error::Error::source(&proto).is_some());
+    }
+}

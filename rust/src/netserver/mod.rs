@@ -1,29 +1,908 @@
-//! `netserver` — a minimal threaded TCP request/response server (tokio is
-//! not in the offline crate set; the router protocol is strict
-//! request/response, so blocking I/O + a bounded thread pool is the right
-//! shape anyway).
+//! `netserver` — a dependency-free event-driven TCP front-end: one
+//! readiness loop (epoll on Linux, poll(2) elsewhere — see [`poll`])
+//! drives nonblocking accept plus per-connection read/write state
+//! machines, and a **fixed worker pool** executes parsed requests. A
+//! thousand open connections cost a thousand small buffers, not a
+//! thousand threads.
 //!
-//! Protocol: newline-delimited UTF-8 lines; the handler maps one request
-//! line to one response line. Connections are long-lived (pipelining of
-//! sequential requests is supported). `QUIT` closes a connection;
-//! shutdown is cooperative via [`ServerHandle::shutdown`].
+//! ## Wire protocols
+//!
+//! The first byte of a connection negotiates the protocol:
+//!
+//! * [`crate::proto::MAGIC_BINARY`] (`0xB1`) or
+//!   [`crate::proto::MAGIC_BINARY_CRC`] (`0xB2`) selects the
+//!   **length-prefixed binary framing** (`[len u32le][opcode][payload]`,
+//!   optional trailing CRC32) defined in [`crate::proto::binary`].
+//! * Anything else (in practice the first byte of an ASCII verb) selects
+//!   the historical **newline text protocol**: one request line in, one
+//!   `\n`-framed response out. `QUIT` answers `BYE` and closes.
+//!
+//! Both protocols speak to the same [`ProtocolHandler`]; responses to
+//! pipelined requests are written strictly in request order (a
+//! connection is serviced by at most one worker at a time).
+//!
+//! ## Architecture
+//!
+//! ```text
+//! event loop (1 thread)            worker pool (N threads)
+//! ──────────────────────           ───────────────────────
+//! poll_wait ──► accept             pop ready conn
+//!           ──► read → parse  ──►  execute request (net_dispatch)
+//!           ◄── flush / close ◄──  encode + write    (net_write)
+//! ```
+//!
+//! The loop owns the poller and every socket's registration; workers
+//! never touch the poller. Workers write responses directly when the
+//! socket has room and stash the remainder in the connection's output
+//! buffer otherwise; the loop arms write interest and finishes the
+//! flush. A self-pipe waker lets workers nudge the loop (flush backlog,
+//! close after `QUIT`) without a timeout race.
+//!
+//! Failure policy: a recoverable decode error (bad payload in a
+//! well-formed frame) answers a typed `ERR` and keeps the connection; a
+//! framing violation (oversized/torn length, CRC mismatch) answers a
+//! typed `ERR` and closes, because the byte stream can no longer be
+//! trusted.
 
-use std::io::{BufRead, BufReader, Write};
+pub mod poll;
+
+mod client;
+
+pub use client::{Client, ClientError};
+pub use poll::raise_fd_limit;
+
+use crate::metrics::{Counter, Gauge, MetricSpec};
+use crate::obs::{self, Stage};
+use crate::proto::{ProtoError, Request, Response, MAGIC_BINARY, MAGIC_BINARY_CRC};
+use crate::sync::lock_recover;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// A request handler: one request line in, one response line out.
+/// A request handler: one request line in, one response line out. The
+/// historical line-oriented shape, kept for tests/examples; typed
+/// servers implement [`ProtocolHandler`] instead.
 pub type Handler = Arc<dyn Fn(&str) -> String + Send + Sync>;
+
+/// The typed server-side protocol surface. One implementation serves
+/// both wire protocols: binary frames dispatch through
+/// [`ProtocolHandler::handle_request`], text lines through
+/// [`ProtocolHandler::handle_line`] (whose default parses the line,
+/// dispatches, and renders — so typed handlers get the text protocol
+/// for free).
+pub trait ProtocolHandler: Send + Sync {
+    /// Execute one typed request.
+    fn handle_request(&self, req: &Request) -> Result<Response, ProtoError>;
+
+    /// Execute one text request line and render the response line.
+    fn handle_line(&self, line: &str) -> String {
+        match Request::parse_text(line) {
+            Ok(req) => match self.handle_request(&req) {
+                Ok(resp) => resp.render_text(),
+                Err(e) => e.render_text(),
+            },
+            Err(e) => e.render_text(),
+        }
+    }
+}
+
+/// Adapt a line-oriented [`Handler`] into a [`ProtocolHandler`]: text
+/// requests pass through verbatim; binary requests are rendered to a
+/// line, handled, and the response line parsed back into a typed
+/// [`Response`].
+pub fn line_handler(f: Handler) -> Arc<dyn ProtocolHandler> {
+    struct LineHandler(Handler);
+    impl ProtocolHandler for LineHandler {
+        fn handle_request(&self, req: &Request) -> Result<Response, ProtoError> {
+            let resp = (self.0)(&req.render_text());
+            Response::parse_text(&resp)
+        }
+        fn handle_line(&self, line: &str) -> String {
+            (self.0)(line)
+        }
+    }
+    Arc::new(LineHandler(f))
+}
+
+/// Server sizing knobs for [`serve_typed`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Maximum simultaneously open connections; excess accepts are
+    /// refused with a `BUSY` line and closed.
+    pub max_conns: usize,
+    /// Worker threads executing requests (≥ 1). Independent of the
+    /// connection count — that is the point of the event loop.
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_conns: 1024, workers: default_workers() }
+    }
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8)
+}
+
+// ---------------------------------------------------------------------------
+// Metrics.
+// ---------------------------------------------------------------------------
+
+/// Network front-end counters, exposed through the obs registry under
+/// the `net` bundle.
+pub struct NetMetrics {
+    /// Currently open connections (gauge).
+    pub connections: Gauge,
+    /// Connections accepted since process start.
+    pub accepted: Counter,
+    /// Connections refused at the `max_conns` cap (`BUSY`).
+    pub refused: Counter,
+    /// Text-protocol requests executed.
+    pub requests_text: Counter,
+    /// Binary-protocol requests executed.
+    pub requests_binary: Counter,
+    /// Binary frames rejected (decode errors + framing violations).
+    pub bad_frames: Counter,
+}
+
+impl NetMetrics {
+    const fn new_static() -> Self {
+        Self {
+            connections: Gauge::new(),
+            accepted: Counter::new(),
+            refused: Counter::new(),
+            requests_text: Counter::new(),
+            requests_binary: Counter::new(),
+            bad_frames: Counter::new(),
+        }
+    }
+
+    /// Enumerate every metric for registry exposition.
+    pub fn metric_specs(&self) -> Vec<MetricSpec> {
+        vec![
+            MetricSpec::gauge(
+                "connections",
+                "Currently open TCP connections.",
+                self.connections.get(),
+            ),
+            MetricSpec::counter(
+                "accepted",
+                "TCP connections accepted since start.",
+                self.accepted.get(),
+            ),
+            MetricSpec::counter(
+                "refused",
+                "TCP connections refused at the max_conns cap.",
+                self.refused.get(),
+            ),
+            MetricSpec::counter(
+                "requests_text",
+                "Text-protocol requests executed.",
+                self.requests_text.get(),
+            ),
+            MetricSpec::counter(
+                "requests_binary",
+                "Binary-protocol requests executed.",
+                self.requests_binary.get(),
+            ),
+            MetricSpec::counter(
+                "bad_frames",
+                "Binary frames rejected (decode or framing errors).",
+                self.bad_frames.get(),
+            ),
+        ]
+    }
+}
+
+/// The process-global network metrics instance (every server in the
+/// process shares it, matching the other obs bundles).
+pub fn net_metrics() -> &'static NetMetrics {
+    static M: NetMetrics = NetMetrics::new_static();
+    &M
+}
+
+// ---------------------------------------------------------------------------
+// Connection state machine.
+// ---------------------------------------------------------------------------
+
+/// Poller token of the listening socket.
+const LISTENER: u64 = 0;
+/// Poller token of the self-pipe waker.
+const WAKER: u64 = 1;
+/// First token handed to an accepted connection.
+const FIRST_CONN: u64 = 2;
+
+/// Longest accepted text request line (bytes before a newline); beyond
+/// this the connection is answered with a typed error and closed.
+const MAX_LINE: usize = 1 << 20;
+
+/// How long [`ServerHandle::shutdown`] waits for in-flight connections
+/// to drain before forcing teardown.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Wire protocol of one connection, negotiated by its first byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+enum Mode {
+    /// No bytes seen yet.
+    #[default]
+    Detect,
+    /// Newline text protocol.
+    Text,
+    /// Length-prefixed binary framing.
+    Binary {
+        /// Frames carry a trailing CRC32.
+        crc: bool,
+    },
+}
+
+/// One parsed inbound item, queued for a worker.
+enum Inbound {
+    /// A text request line.
+    Line(String),
+    /// A decoded binary request.
+    Typed(Request),
+    /// A well-formed frame whose payload failed to decode: answer the
+    /// error, keep the connection.
+    Reject(ProtoError),
+    /// A framing violation: answer the error, then close — the byte
+    /// stream is no longer trustworthy.
+    Fatal(ProtoError),
+    /// Text `QUIT`: answer `BYE`, then close.
+    Quit,
+}
+
+#[derive(Default)]
+struct ConnState {
+    mode: Mode,
+    /// Unparsed inbound bytes.
+    rbuf: Vec<u8>,
+    /// Parsed requests awaiting a worker.
+    pending: VecDeque<Inbound>,
+    /// Response bytes awaiting socket room (flushed by the loop).
+    out: Vec<u8>,
+    /// Stop parsing further input (post-QUIT / post-fatal).
+    stopped: bool,
+    /// Close once `out` drains and no work is pending or in flight.
+    close_when_flushed: bool,
+    /// Write interest is currently armed in the poller.
+    writing: bool,
+    /// Connection is torn down; drop all further work.
+    closed: bool,
+}
+
+struct Conn {
+    token: u64,
+    stream: TcpStream,
+    state: Mutex<ConnState>,
+    /// True while a worker owns this connection's pending queue. The
+    /// single-owner invariant keeps pipelined responses in order.
+    scheduled: AtomicBool,
+}
+
+struct Shared {
+    handler: Arc<dyn ProtocolHandler>,
+    /// Stop accepting; drain and exit.
+    stop: AtomicBool,
+    /// Abandon the drain and tear down now.
+    force: AtomicBool,
+    /// Workers exit once set (and the ready queue is empty).
+    workers_done: AtomicBool,
+    /// Open connections (authoritative for the shutdown drain).
+    live: AtomicUsize,
+    /// Connections with parsed requests awaiting a worker.
+    ready: Mutex<VecDeque<Arc<Conn>>>,
+    ready_cv: Condvar,
+    /// Tokens the loop should service (flush/close), pushed by workers.
+    cmds: Mutex<Vec<u64>>,
+    /// Write side of the self-pipe waker.
+    waker_tx: Mutex<UnixStream>,
+}
+
+impl Shared {
+    /// Nudge the event loop out of `poll_wait`. A full pipe already
+    /// guarantees a pending wakeup, so errors are ignored.
+    fn wake(&self) {
+        let _ = lock_recover(&self.waker_tx).write_all(&[1]);
+    }
+
+    /// Hand a connection (with pending requests) to the worker pool.
+    fn enqueue_ready(&self, conn: Arc<Conn>) {
+        lock_recover(&self.ready).push_back(conn);
+        self.ready_cv.notify_one();
+    }
+
+    /// Ask the loop to flush/close `token` at its next iteration.
+    fn request_service(&self, token: u64) {
+        lock_recover(&self.cmds).push(token);
+        self.wake();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing (event-loop side, under the connection lock).
+// ---------------------------------------------------------------------------
+
+/// Split `rbuf` into pending inbound items according to the mode.
+fn parse_inbound(st: &mut ConnState) {
+    if st.stopped {
+        st.rbuf.clear();
+        return;
+    }
+    if st.mode == Mode::Detect {
+        let Some(&first) = st.rbuf.first() else { return };
+        st.mode = match first {
+            MAGIC_BINARY => {
+                st.rbuf.remove(0);
+                Mode::Binary { crc: false }
+            }
+            MAGIC_BINARY_CRC => {
+                st.rbuf.remove(0);
+                Mode::Binary { crc: true }
+            }
+            _ => Mode::Text,
+        };
+    }
+    match st.mode {
+        Mode::Text => parse_text_lines(st),
+        Mode::Binary { crc } => parse_binary_frames(st, crc),
+        Mode::Detect => {}
+    }
+}
+
+fn parse_text_lines(st: &mut ConnState) {
+    let mut start = 0;
+    while let Some(pos) = st.rbuf[start..].iter().position(|&b| b == b'\n') {
+        let line = String::from_utf8_lossy(&st.rbuf[start..start + pos]);
+        let req = line.trim_end().to_string();
+        start += pos + 1;
+        if req == "QUIT" {
+            st.pending.push_back(Inbound::Quit);
+            st.stopped = true;
+            start = st.rbuf.len();
+            break;
+        }
+        st.pending.push_back(Inbound::Line(req));
+    }
+    st.rbuf.drain(..start);
+    if !st.stopped && st.rbuf.len() > MAX_LINE {
+        st.pending.push_back(Inbound::Fatal(ProtoError::parse(format!(
+            "request line exceeds {MAX_LINE} bytes"
+        ))));
+        st.stopped = true;
+        st.rbuf.clear();
+    }
+}
+
+fn parse_binary_frames(st: &mut ConnState, crc: bool) {
+    loop {
+        match crate::proto::try_frame(&st.rbuf, crc) {
+            Ok(Some((opcode, payload, consumed))) => {
+                st.rbuf.drain(..consumed);
+                match Request::decode_binary(opcode, &payload) {
+                    Ok(req) => st.pending.push_back(Inbound::Typed(req)),
+                    Err(e) => {
+                        net_metrics().bad_frames.inc();
+                        st.pending.push_back(Inbound::Reject(e));
+                    }
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                net_metrics().bad_frames.inc();
+                st.pending.push_back(Inbound::Fatal(e));
+                st.stopped = true;
+                st.rbuf.clear();
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool.
+// ---------------------------------------------------------------------------
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let conn = {
+            let mut q = lock_recover(&shared.ready);
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break c;
+                }
+                if shared.workers_done.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.ready_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        drive_conn(&shared, &conn);
+    }
+}
+
+/// Drain one connection's pending queue. Exactly one worker runs this
+/// per connection at a time (the `scheduled` flag), so responses go out
+/// in request order.
+fn drive_conn(shared: &Shared, conn: &Arc<Conn>) {
+    loop {
+        let popped = {
+            let mut st = lock_recover(&conn.state);
+            if st.closed {
+                st.pending.clear();
+                None
+            } else {
+                let mode = st.mode;
+                st.pending.pop_front().map(|i| (i, mode))
+            }
+        };
+        let Some((inbound, mode)) = popped else {
+            let close = {
+                let st = lock_recover(&conn.state);
+                st.close_when_flushed && st.out.is_empty() && !st.closed
+            };
+            conn.scheduled.store(false, Ordering::Release);
+            if close {
+                shared.request_service(conn.token);
+            }
+            // Re-check: a parse may have raced the unschedule above. If
+            // new work arrived and nobody claimed the connection yet,
+            // claim it back and keep draining.
+            let refill = !lock_recover(&conn.state).pending.is_empty();
+            if refill && !conn.scheduled.swap(true, Ordering::AcqRel) {
+                continue;
+            }
+            return;
+        };
+        execute(shared, conn, inbound, mode);
+    }
+}
+
+/// Execute one inbound item and write its response.
+fn execute(shared: &Shared, conn: &Arc<Conn>, inbound: Inbound, mode: Mode) {
+    let crc = matches!(mode, Mode::Binary { crc: true });
+    match inbound {
+        Inbound::Line(line) => {
+            net_metrics().requests_text.inc();
+            let t = obs::timer(Stage::NetDispatch);
+            let resp = shared.handler.handle_line(&line);
+            drop(t);
+            let mut bytes = resp.into_bytes();
+            bytes.push(b'\n');
+            write_response(shared, conn, &bytes, false);
+        }
+        Inbound::Typed(req) => {
+            net_metrics().requests_binary.inc();
+            let t = obs::timer(Stage::NetDispatch);
+            let result = shared.handler.handle_request(&req);
+            drop(t);
+            let bytes = match &result {
+                Ok(resp) => resp.encode_binary(crc),
+                Err(e) => e.encode_binary(crc),
+            };
+            write_response(shared, conn, &bytes, false);
+        }
+        Inbound::Reject(e) => {
+            write_response(shared, conn, &e.encode_binary(crc), false);
+        }
+        Inbound::Fatal(e) => {
+            let bytes = match mode {
+                Mode::Binary { crc } => e.encode_binary(crc),
+                _ => {
+                    let mut b = e.render_text().into_bytes();
+                    b.push(b'\n');
+                    b
+                }
+            };
+            write_response(shared, conn, &bytes, true);
+        }
+        Inbound::Quit => write_response(shared, conn, b"BYE\n", true),
+    }
+}
+
+/// Write response bytes: directly to the socket while it has room,
+/// spilling the remainder into the connection's output buffer for the
+/// loop to flush under write interest.
+fn write_response(shared: &Shared, conn: &Arc<Conn>, bytes: &[u8], close_after: bool) {
+    let t = obs::timer(Stage::NetWrite);
+    let mut st = lock_recover(&conn.state);
+    if st.closed {
+        return;
+    }
+    if st.out.is_empty() {
+        let mut off = 0;
+        while off < bytes.len() {
+            match (&conn.stream).write(&bytes[off..]) {
+                Ok(0) => {
+                    st.close_when_flushed = true;
+                    break;
+                }
+                Ok(n) => off += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    st.out.extend_from_slice(&bytes[off..]);
+                    break;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    st.out.clear();
+                    st.close_when_flushed = true;
+                    break;
+                }
+            }
+        }
+    } else {
+        st.out.extend_from_slice(bytes);
+    }
+    if close_after {
+        st.close_when_flushed = true;
+        st.stopped = true;
+        // Anything pipelined after a QUIT/fatal is dead on arrival.
+        st.pending.clear();
+    }
+    let need_service = (!st.out.is_empty() && !st.writing)
+        || (st.close_when_flushed && st.out.is_empty() && st.pending.is_empty());
+    drop(st);
+    drop(t);
+    if need_service {
+        shared.request_service(conn.token);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event loop.
+// ---------------------------------------------------------------------------
+
+struct EventLoop {
+    poller: poll::Poller,
+    listener: TcpListener,
+    waker_rx: UnixStream,
+    shared: Arc<Shared>,
+    max_conns: usize,
+    conns: HashMap<u64, Arc<Conn>>,
+    next_token: u64,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events: Vec<poll::PollEvent> = Vec::new();
+        let mut chunk = vec![0u8; 16 * 1024];
+        loop {
+            if self.shared.force.load(Ordering::SeqCst) {
+                break;
+            }
+            let draining = self.shared.stop.load(Ordering::SeqCst);
+            if draining && self.conns.is_empty() {
+                break;
+            }
+            let timeout_ms = if draining { 10 } else { 200 };
+            let t = obs::timer_always(Stage::PollWait);
+            let waited = self.poller.wait(&mut events, timeout_ms);
+            t.finish();
+            if waited.is_err() {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            if self.shared.force.load(Ordering::SeqCst) {
+                break;
+            }
+            self.drain_waker();
+            let cmds = std::mem::take(&mut *lock_recover(&self.shared.cmds));
+            for tok in cmds {
+                self.service_conn(tok);
+            }
+            for ev in &events {
+                match ev.token {
+                    LISTENER => self.accept_ready(draining),
+                    WAKER => {}
+                    tok => {
+                        if ev.writable {
+                            self.service_conn(tok);
+                        }
+                        if ev.readable {
+                            self.conn_read(tok, &mut chunk);
+                        }
+                    }
+                }
+            }
+            if draining {
+                self.close_idle_conns();
+            }
+        }
+        let toks: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in toks {
+            self.close_conn(tok);
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.waker_rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+
+    fn accept_ready(&mut self, draining: bool) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if draining {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    if self.conns.len() >= self.max_conns {
+                        net_metrics().refused.inc();
+                        let mut s = stream;
+                        let _ = s.set_nodelay(true);
+                        let _ = s.write_all(b"BUSY\n");
+                        let _ = s.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    self.install_conn(stream);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn install_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        // Request/response ping-pong dies under Nagle + delayed ACK.
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.register(stream.as_raw_fd(), token, true, false).is_err() {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        let conn = Arc::new(Conn {
+            token,
+            stream,
+            state: Mutex::new(ConnState::default()),
+            scheduled: AtomicBool::new(false),
+        });
+        self.conns.insert(token, conn);
+        self.shared.live.fetch_add(1, Ordering::Release);
+        net_metrics().connections.inc();
+        net_metrics().accepted.inc();
+    }
+
+    /// Readable: pull bytes, parse, and hand pending work to a worker.
+    fn conn_read(&mut self, tok: u64, chunk: &mut [u8]) {
+        let Some(conn) = self.conns.get(&tok).cloned() else { return };
+        let mut hard_close = false;
+        let (has_pending, closable) = {
+            let mut st = lock_recover(&conn.state);
+            loop {
+                match (&conn.stream).read(chunk) {
+                    Ok(0) => {
+                        // Peer closed its write side; answer anything
+                        // already pipelined, then close.
+                        st.close_when_flushed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        st.rbuf.extend_from_slice(&chunk[..n]);
+                        if n < chunk.len() {
+                            // Likely drained; level-triggered polling
+                            // re-reports any remainder next iteration.
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        hard_close = true;
+                        break;
+                    }
+                }
+            }
+            if !hard_close {
+                let t = obs::timer(Stage::NetParse);
+                parse_inbound(&mut st);
+                drop(t);
+            }
+            let closable = st.close_when_flushed && st.out.is_empty() && st.pending.is_empty();
+            (!st.pending.is_empty(), closable)
+        };
+        if hard_close {
+            self.close_conn(tok);
+            return;
+        }
+        if has_pending && !conn.scheduled.swap(true, Ordering::AcqRel) {
+            self.shared.enqueue_ready(conn.clone());
+        }
+        if closable && !conn.scheduled.load(Ordering::Acquire) {
+            self.close_conn(tok);
+        }
+    }
+
+    /// Flush the output buffer, maintain write interest, close when the
+    /// connection asked for it and everything has drained.
+    fn service_conn(&mut self, tok: u64) {
+        let Some(conn) = self.conns.get(&tok).cloned() else { return };
+        let close_now = {
+            let mut st = lock_recover(&conn.state);
+            if st.closed {
+                return;
+            }
+            while !st.out.is_empty() {
+                match (&conn.stream).write(&st.out) {
+                    Ok(0) => {
+                        st.out.clear();
+                        st.close_when_flushed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        st.out.drain(..n);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        st.out.clear();
+                        st.close_when_flushed = true;
+                        break;
+                    }
+                }
+            }
+            let fd = conn.stream.as_raw_fd();
+            if !st.out.is_empty() && !st.writing {
+                st.writing = true;
+                let _ = self.poller.modify(fd, tok, true, true);
+            } else if st.out.is_empty() && st.writing {
+                st.writing = false;
+                let _ = self.poller.modify(fd, tok, true, false);
+            }
+            st.close_when_flushed
+                && st.out.is_empty()
+                && st.pending.is_empty()
+                && !conn.scheduled.load(Ordering::Acquire)
+        };
+        if close_now {
+            self.close_conn(tok);
+        }
+    }
+
+    /// During a drain, connections with nothing queued or buffered are
+    /// closed rather than waited on.
+    fn close_idle_conns(&mut self) {
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                if c.scheduled.load(Ordering::Acquire) {
+                    return false;
+                }
+                let st = lock_recover(&c.state);
+                st.pending.is_empty() && st.out.is_empty()
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for tok in idle {
+            self.close_conn(tok);
+        }
+    }
+
+    fn close_conn(&mut self, tok: u64) {
+        let Some(conn) = self.conns.remove(&tok) else { return };
+        {
+            let mut st = lock_recover(&conn.state);
+            st.closed = true;
+            st.stopped = true;
+            st.pending.clear();
+            st.out.clear();
+            st.rbuf.clear();
+        }
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        // Release so the shutdown drain's Acquire load sees it gone.
+        self.shared.live.fetch_sub(1, Ordering::Release);
+        net_metrics().connections.dec();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points + handle.
+// ---------------------------------------------------------------------------
+
+/// Start a server on `bind` (e.g. `"127.0.0.1:0"`) with a line-oriented
+/// [`Handler`] and default worker sizing. Connections are bounded by
+/// `max_conns` (excess accepts are refused with a `BUSY` line).
+pub fn serve(bind: &str, max_conns: usize, handler: Handler) -> io::Result<ServerHandle> {
+    serve_typed(bind, ServerConfig { max_conns, ..ServerConfig::default() }, line_handler(handler))
+}
+
+/// Start a server on `bind` with a typed [`ProtocolHandler`]. Both wire
+/// protocols (newline text and length-prefixed binary) are served; the
+/// first byte of each connection selects.
+pub fn serve_typed(
+    bind: &str,
+    cfg: ServerConfig,
+    handler: Arc<dyn ProtocolHandler>,
+) -> io::Result<ServerHandle> {
+    let listener = TcpListener::bind(bind)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let (waker_tx, waker_rx) = UnixStream::pair()?;
+    waker_tx.set_nonblocking(true)?;
+    waker_rx.set_nonblocking(true)?;
+    let mut poller = poll::Poller::new()?;
+    poller.register(listener.as_raw_fd(), LISTENER, true, false)?;
+    poller.register(waker_rx.as_raw_fd(), WAKER, true, false)?;
+
+    let shared = Arc::new(Shared {
+        handler,
+        stop: AtomicBool::new(false),
+        force: AtomicBool::new(false),
+        workers_done: AtomicBool::new(false),
+        live: AtomicUsize::new(0),
+        ready: Mutex::new(VecDeque::new()),
+        ready_cv: Condvar::new(),
+        cmds: Mutex::new(Vec::new()),
+        waker_tx: Mutex::new(waker_tx),
+    });
+
+    let n_workers = cfg.workers.max(1);
+    let mut workers = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        let sh = shared.clone();
+        match std::thread::Builder::new()
+            .name(format!("net-worker-{i}"))
+            .spawn(move || worker_loop(sh))
+        {
+            Ok(t) => workers.push(t),
+            Err(e) => {
+                release_workers(&shared, workers);
+                return Err(e);
+            }
+        }
+    }
+
+    let ev = EventLoop {
+        poller,
+        listener,
+        waker_rx,
+        shared: shared.clone(),
+        max_conns: cfg.max_conns,
+        conns: HashMap::new(),
+        next_token: FIRST_CONN,
+    };
+    let loop_thread = match std::thread::Builder::new().name("net-loop".into()).spawn(move || {
+        ev.run();
+    }) {
+        Ok(t) => t,
+        Err(e) => {
+            release_workers(&shared, workers);
+            return Err(e);
+        }
+    };
+
+    Ok(ServerHandle { addr, shared, loop_thread: Some(loop_thread), workers })
+}
+
+/// Unblock and join worker threads (spawn-failure cleanup path).
+fn release_workers(shared: &Shared, workers: Vec<JoinHandle<()>>) {
+    shared.workers_done.store(true, Ordering::Release);
+    shared.ready_cv.notify_all();
+    for t in workers {
+        let _ = t.join();
+    }
+}
 
 /// Control handle for a running server.
 pub struct ServerHandle {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    live_conns: Arc<AtomicUsize>,
+    shared: Arc<Shared>,
+    loop_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -34,249 +913,92 @@ impl ServerHandle {
 
     /// Number of currently open connections.
     pub fn live_connections(&self) -> usize {
-        self.live_conns.load(Ordering::Relaxed)
+        self.shared.live.load(Ordering::Acquire)
     }
 
-    /// Ask the accept loop to stop, join it, then drain open connections.
-    /// Connection threads finish their current request and observe the
-    /// stop flag at their next read or read-timeout (≤ `READ_TIMEOUT`), so
-    /// long-lived *idle* connections cannot stall teardown. Returns the
-    /// number of connections still open when the drain deadline expired —
-    /// 0 means a clean, fully-drained shutdown.
+    /// Number of worker threads executing requests — fixed at start,
+    /// independent of the connection count.
+    pub fn worker_threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stop accepting, drain open connections (bounded grace period),
+    /// then tear down the loop and worker pool. Returns the number of
+    /// connections still open when the drain deadline expired — 0 means
+    /// a clean, fully-drained shutdown.
     pub fn shutdown(mut self) -> usize {
-        self.begin_stop();
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-        // Drain: bounded grace period, comfortably above the per-
-        // connection read timeout that wakes idle readers.
-        let deadline = std::time::Instant::now() + 8 * READ_TIMEOUT;
-        while self.live_conns.load(Ordering::Acquire) > 0
-            && std::time::Instant::now() < deadline
-        {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
+        while self.shared.live.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(5));
         }
-        self.live_conns.load(Ordering::Acquire)
+        let remaining = self.shared.live.load(Ordering::Acquire);
+        self.teardown();
+        remaining
     }
 
-    /// Set the stop flag and poke the listener so `accept()` returns.
-    fn begin_stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
+    /// Idempotent hard teardown: force the loop out, join it, release
+    /// the worker pool.
+    fn teardown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.force.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
+        }
+        self.shared.workers_done.store(true, Ordering::Release);
+        self.shared.ready_cv.notify_all();
+        for t in self.workers.drain(..) {
+            let _ = t.join();
+        }
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        // Stop accepting and join the accept loop, but don't block on the
-        // connection drain here — dropped handles (tests, error paths)
-        // shouldn't pay the grace period; conn threads exit on their own
-        // within one read timeout.
-        self.begin_stop();
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-/// Start a server on `bind` (e.g. `"127.0.0.1:0"`). Each connection gets a
-/// thread, bounded by `max_conns` (excess connections are refused with a
-/// `BUSY` line).
-pub fn serve(bind: &str, max_conns: usize, handler: Handler) -> std::io::Result<ServerHandle> {
-    let listener = TcpListener::bind(bind)?;
-    let addr = listener.local_addr()?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let live = Arc::new(AtomicUsize::new(0));
-
-    let stop2 = stop.clone();
-    let live2 = live.clone();
-    let accept_thread = std::thread::Builder::new()
-        .name("memento-accept".into())
-        .spawn(move || {
-            for conn in listener.incoming() {
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = conn else { continue };
-                if live2.load(Ordering::Relaxed) >= max_conns {
-                    let mut s = stream;
-                    let _ = s.write_all(b"BUSY\n");
-                    let _ = s.shutdown(Shutdown::Both);
-                    continue;
-                }
-                live2.fetch_add(1, Ordering::Relaxed);
-                let handler = handler.clone();
-                let live3 = live2.clone();
-                let stop3 = stop2.clone();
-                let spawned = std::thread::Builder::new().name("memento-conn".into()).spawn(
-                    move || {
-                        let _ = handle_conn(stream, handler, stop3);
-                        // Release so the shutdown drain's Acquire load sees
-                        // this connection as gone.
-                        live3.fetch_sub(1, Ordering::Release);
-                    },
-                );
-                if spawned.is_err() {
-                    // The closure (and its decrement) never ran; undo the
-                    // increment or the count leaks and shutdown's drain
-                    // stalls on a phantom connection.
-                    live2.fetch_sub(1, Ordering::Release);
-                }
-            }
-        })?;
-
-    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), live_conns: live })
-}
-
-/// How long a connection thread blocks in `read` before re-checking the
-/// stop flag; bounds how long an idle connection can delay a drain.
-const READ_TIMEOUT: Duration = Duration::from_millis(250);
-
-fn handle_conn(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> std::io::Result<()> {
-    // Request/response ping-pong dies under Nagle + delayed-ACK (40 ms
-    // stalls); disable coalescing on the server side of every connection.
-    stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(READ_TIMEOUT))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    // Raw bytes, not read_line: on a read timeout, read_until leaves any
-    // partially-read line in `buf` for the next iteration to extend —
-    // read_line's UTF-8 guard would *discard* consumed bytes if the
-    // timeout split a multi-byte character, corrupting the stream.
-    let mut buf: Vec<u8> = Vec::new();
-    let mut draining = false;
-    loop {
-        match reader.read_until(b'\n', &mut buf) {
-            Ok(0) => return Ok(()), // peer closed (any partial line dies with it)
-            Ok(_) => {
-                let line = String::from_utf8_lossy(&buf);
-                let req = line.trim_end();
-                if req == "QUIT" {
-                    let _ = writer.write_all(b"BYE\n");
-                    return Ok(());
-                }
-                let resp = handler(req);
-                buf.clear();
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
-                // On shutdown, keep serving the pipelined backlog (both
-                // BufReader's and the kernel's) but shrink the read
-                // timeout: the first quiet gap ends the connection via the
-                // timeout arm below instead of a full READ_TIMEOUT wait.
-                if stop.load(Ordering::SeqCst) && !draining {
-                    draining = true;
-                    let _ = writer.set_read_timeout(Some(Duration::from_millis(10)));
-                }
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // A slow sender may have landed a partial line in `buf`
-                // before the timeout; keep it — the next read_until
-                // appends the rest.
-                if stop.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-            }
-            Err(e) => return Err(e),
-        }
-    }
-}
-
-/// A tiny blocking client for the line protocol (tests / examples / CLI).
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    /// Open a connection to a running server.
-    pub fn connect(addr: &SocketAddr) -> std::io::Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        let writer = stream.try_clone()?;
-        Ok(Self { reader: BufReader::new(stream), writer })
-    }
-
-    /// Send one request line, read one response line.
-    pub fn request(&mut self, line: &str) -> std::io::Result<String> {
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        Ok(resp.trim_end().to_string())
-    }
-
-    /// Send one request line, read a **multi-line** response until (and
-    /// including) the line that equals `terminator` — the shape of the
-    /// `METRICS` exposition, whose body is many lines ended by `# EOF`.
-    ///
-    /// The server frames every response with one trailing newline of its
-    /// own; for a body that already ends in `\n` that frame byte arrives
-    /// as an empty line, which this method consumes so the next request
-    /// starts on a line boundary. A single-line `ERR …` reply (no
-    /// terminator will ever come) is returned as-is instead of blocking.
-    pub fn request_multiline(&mut self, line: &str, terminator: &str) -> std::io::Result<String> {
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut out = String::new();
-        loop {
-            let mut l = String::new();
-            if self.reader.read_line(&mut l)? == 0 {
-                break; // peer closed mid-body
-            }
-            let done = l.trim_end() == terminator;
-            let err = out.is_empty() && l.starts_with("ERR");
-            out.push_str(&l);
-            if err {
-                break;
-            }
-            if done {
-                let mut frame = String::new();
-                self.reader.read_line(&mut frame)?;
-                break;
-            }
-        }
-        Ok(out)
-    }
-
-    /// Pipelined batch: write a bounded chunk of requests in one flush,
-    /// read its responses (the server answers in order), repeat. Turns N
-    /// round trips into N/64 for bulk operations like loadgen preload.
-    ///
-    /// The internal chunking is load-bearing, not just a batching knob:
-    /// writing an *unbounded* batch before reading anything deadlocks
-    /// once the request bytes in flight fill the client-send and
-    /// server-receive buffers while the server blocks writing responses
-    /// nobody is draining. Draining responses after every chunk bounds
-    /// the in-flight bytes well below any socket-buffer size.
-    pub fn request_pipelined(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
-        const PIPELINE_CHUNK: usize = 64;
-        let mut out = Vec::with_capacity(lines.len());
-        for chunk in lines.chunks(PIPELINE_CHUNK) {
-            let mut buf = String::with_capacity(chunk.iter().map(|l| l.len() + 1).sum());
-            for line in chunk {
-                buf.push_str(line);
-                buf.push('\n');
-            }
-            self.writer.write_all(buf.as_bytes())?;
-            for _ in chunk {
-                let mut resp = String::new();
-                self.reader.read_line(&mut resp)?;
-                out.push(resp.trim_end().to_string());
-            }
-        }
-        Ok(out)
+        // Dropped handles (tests, error paths) don't pay the drain
+        // grace period; sockets close with the loop.
+        self.teardown();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::BufRead;
 
     fn echo_server() -> ServerHandle {
         serve("127.0.0.1:0", 16, Arc::new(|req: &str| format!("echo:{req}"))).unwrap()
+    }
+
+    /// A typed handler: LOOKUP maps to a deterministic bucket/node,
+    /// GET is always missing, PUT acks, everything else is refused.
+    struct TypedEcho;
+    impl ProtocolHandler for TypedEcho {
+        fn handle_request(&self, req: &Request) -> Result<Response, ProtoError> {
+            match req {
+                Request::Lookup { key } => Ok(Response::Bucket {
+                    bucket: (*key % 7) as u32,
+                    node: format!("node-{}", key % 7),
+                }),
+                Request::LookupBatch { keys } => {
+                    Ok(Response::Buckets(keys.iter().map(|k| (*k % 7) as u32).collect()))
+                }
+                Request::Get { .. } => Ok(Response::Missing { node: "node-0".into() }),
+                Request::Put { key, .. } => Ok(Response::Ok { node: format!("node-{}", key % 7) }),
+                _ => Err(ProtoError::refused("typed echo only serves the data path")),
+            }
+        }
+    }
+
+    fn typed_server() -> ServerHandle {
+        serve_typed(
+            "127.0.0.1:0",
+            ServerConfig { max_conns: 1200, workers: 2 },
+            Arc::new(TypedEcho),
+        )
+        .unwrap()
     }
 
     #[test]
@@ -321,7 +1043,7 @@ mod tests {
                 if req == "EXPO" {
                     "# TYPE a counter\na 1\n# EOF\n".to_string()
                 } else if req == "BAD" {
-                    "ERR no such exposition".to_string()
+                    "ERR REFUSED no such exposition".to_string()
                 } else {
                     format!("echo:{req}")
                 }
@@ -335,7 +1057,7 @@ mod tests {
         assert_eq!(c.request("after").unwrap(), "echo:after");
         // Single-line ERR replies return instead of blocking forever.
         let err = c.request_multiline("BAD", "# EOF").unwrap();
-        assert_eq!(err.trim_end(), "ERR no such exposition");
+        assert_eq!(err.trim_end(), "ERR REFUSED no such exposition");
         assert_eq!(c.request("again").unwrap(), "echo:again");
         server.shutdown();
     }
@@ -343,25 +1065,26 @@ mod tests {
     #[test]
     fn connection_cap_returns_busy() {
         let server = serve("127.0.0.1:0", 0, Arc::new(|_: &str| String::new())).unwrap();
-        let mut c = Client::connect(&server.addr()).unwrap();
         // With max_conns=0 the server refuses immediately with BUSY.
+        let s = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = io::BufReader::new(s);
         let mut resp = String::new();
-        c.reader.read_line(&mut resp).unwrap();
+        reader.read_line(&mut resp).unwrap();
         assert_eq!(resp.trim_end(), "BUSY");
+        assert!(net_metrics().refused.get() >= 1);
         server.shutdown();
     }
 
     #[test]
-    fn slow_partial_lines_survive_the_read_timeout() {
+    fn slow_partial_lines_are_reassembled() {
         let server = echo_server();
         let mut s = TcpStream::connect(server.addr()).unwrap();
-        // Send half a request, stall past the server's read timeout, then
-        // finish it: the server must answer the whole line, not an
-        // empty/corrupt one.
+        // Send half a request, stall, then finish it: the event loop
+        // must answer the whole line, not an empty/corrupt one.
         s.write_all(b"hel").unwrap();
-        std::thread::sleep(READ_TIMEOUT + Duration::from_millis(100));
+        std::thread::sleep(Duration::from_millis(300));
         s.write_all(b"lo\n").unwrap();
-        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut reader = io::BufReader::new(s.try_clone().unwrap());
         let mut resp = String::new();
         reader.read_line(&mut resp).unwrap();
         assert_eq!(resp.trim_end(), "echo:hello");
@@ -369,16 +1092,16 @@ mod tests {
     }
 
     #[test]
-    fn utf8_character_split_across_timeout_survives() {
+    fn utf8_character_split_across_reads_survives() {
         let server = echo_server();
         let mut s = TcpStream::connect(server.addr()).unwrap();
         // "café\n" is 6 bytes; cut inside the 2-byte 'é' so the stall
         // lands mid-character.
         let msg = "caf\u{e9}\n".as_bytes();
         s.write_all(&msg[..4]).unwrap();
-        std::thread::sleep(READ_TIMEOUT + Duration::from_millis(100));
+        std::thread::sleep(Duration::from_millis(150));
         s.write_all(&msg[4..]).unwrap();
-        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut reader = io::BufReader::new(s.try_clone().unwrap());
         let mut resp = String::new();
         reader.read_line(&mut resp).unwrap();
         assert_eq!(resp.trim_end(), "echo:caf\u{e9}");
@@ -389,22 +1112,20 @@ mod tests {
     fn shutdown_drains_idle_connections() {
         let server = echo_server();
         let addr = server.addr();
-        // Two long-lived connections that never send a byte: without the
-        // drain they'd outlive shutdown, parked in read for up to the
-        // read timeout.
+        // Two long-lived connections that never send a byte: the drain
+        // must close them rather than wait for them to speak.
         let idle1 = TcpStream::connect(addr).unwrap();
         let idle2 = TcpStream::connect(addr).unwrap();
-        // Wait until the accept loop has registered both.
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         while server.live_connections() < 2 {
             assert!(t0.elapsed() < Duration::from_secs(2), "connections never registered");
             std::thread::sleep(Duration::from_millis(2));
         }
-        let t1 = std::time::Instant::now();
+        let t1 = Instant::now();
         let remaining = server.shutdown();
         assert_eq!(remaining, 0, "idle connections must not survive shutdown");
         assert!(
-            t1.elapsed() < 8 * READ_TIMEOUT,
+            t1.elapsed() < SHUTDOWN_GRACE,
             "drain exceeded the grace period: {:?}",
             t1.elapsed()
         );
@@ -417,7 +1138,7 @@ mod tests {
         let server = echo_server();
         let addr = server.addr();
         server.shutdown();
-        // Accept thread is gone; new connections either fail or are never
+        // Loop thread is gone; new connections either fail or are never
         // served. Allow a beat for the OS to tear down.
         std::thread::sleep(Duration::from_millis(50));
         if let Ok(mut c) = Client::connect(&addr) {
@@ -425,5 +1146,82 @@ mod tests {
             let r = c.request("x");
             assert!(r.is_err() || r.unwrap().is_empty());
         }
+    }
+
+    #[test]
+    fn binary_roundtrip_both_crc_modes() {
+        let server = typed_server();
+        for crc in [false, true] {
+            let mut c = if crc {
+                Client::connect_binary_crc(&server.addr()).unwrap()
+            } else {
+                Client::connect_binary(&server.addr()).unwrap()
+            };
+            let resp = c.call(&Request::Lookup { key: 15 }).unwrap();
+            assert_eq!(resp, Response::Bucket { bucket: 1, node: "node-1".into() });
+            let resp = c.call(&Request::LookupBatch { keys: vec![1, 8, 15] }).unwrap();
+            assert_eq!(resp, Response::Buckets(vec![1, 1, 1]));
+            // A refused admin command comes back as a typed error, and
+            // the connection keeps working.
+            let err = match c.call(&Request::Nodes) {
+                Err(ClientError::Proto(e)) => e,
+                other => panic!("expected a typed protocol error, got {other:?}"),
+            };
+            assert_eq!(err.code, crate::proto::ErrCode::Refused);
+            let resp = c.call(&Request::Lookup { key: 3 }).unwrap();
+            assert_eq!(resp, Response::Bucket { bucket: 3, node: "node-3".into() });
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_binary_preserves_order() {
+        let server = typed_server();
+        let mut c = Client::connect_binary(&server.addr()).unwrap();
+        let reqs: Vec<Request> = (0..500).map(|k| Request::Lookup { key: k }).collect();
+        let resps = c.call_many(&reqs).unwrap();
+        assert_eq!(resps.len(), 500);
+        for (k, r) in resps.into_iter().enumerate() {
+            let r = r.unwrap();
+            assert_eq!(
+                r,
+                Response::Bucket { bucket: (k % 7) as u32, node: format!("node-{}", k % 7) },
+                "response {k} out of order"
+            );
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn many_connections_few_threads() {
+        // The tentpole invariant: connections scale without threads.
+        let server = typed_server();
+        assert_eq!(server.worker_threads(), 2);
+        let addr = server.addr();
+        let mut clients: Vec<Client> =
+            (0..64).map(|_| Client::connect_binary(&addr).unwrap()).collect();
+        let t0 = Instant::now();
+        while server.live_connections() < 64 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "conns never registered");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Every connection still gets served.
+        for (i, c) in clients.iter_mut().enumerate() {
+            let r = c.call(&Request::Lookup { key: i as u64 }).unwrap();
+            assert!(matches!(r, Response::Bucket { .. }));
+        }
+        drop(clients);
+        server.shutdown();
+    }
+
+    #[test]
+    fn text_and_binary_agree_on_the_same_server() {
+        let server = typed_server();
+        let mut t = Client::connect(&server.addr()).unwrap();
+        let mut b = Client::connect_binary(&server.addr()).unwrap();
+        let text = t.request("LOOKUP 15").unwrap();
+        let bin = b.call(&Request::Lookup { key: 15 }).unwrap();
+        assert_eq!(text, bin.render_text());
+        server.shutdown();
     }
 }

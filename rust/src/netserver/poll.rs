@@ -1,0 +1,401 @@
+//! `poll` — a minimal readiness poller (mio's job, hand-rolled to stay
+//! dependency-free): **epoll** on Linux, **poll(2)** on every other
+//! unix. Level-triggered on both backends, so the event loop never
+//! needs to drain a socket completely to stay correct — unread bytes
+//! simply re-report on the next wait.
+//!
+//! The FFI surface is declared directly against the libc symbols the
+//! Rust standard library already links (`std` itself calls these), so
+//! no crate dependency is introduced. Struct layouts are transcribed
+//! from the kernel/glibc ABI:
+//!
+//! * `epoll_event` is **packed on x86-64 only** (glibc's
+//!   `__EPOLL_PACKED`); other architectures use natural alignment. The
+//!   per-arch `repr` below matches, or every event would decode shifted.
+//! * `pollfd` is three naturally-aligned fields on every unix; `nfds_t`
+//!   is `unsigned long` on Linux and `unsigned int` elsewhere — only
+//!   the non-Linux variant is compiled here.
+
+/// One readiness report. Error/hang-up conditions fold into `readable`:
+/// the next read observes the condition (`Ok(0)` / `Err`) and the
+/// connection tears down through the normal read path.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered under.
+    pub token: u64,
+    /// Ready for read (or in an error/HUP state).
+    pub readable: bool,
+    /// Ready for write.
+    pub writable: bool,
+}
+
+/// Raise the process soft `RLIMIT_NOFILE` to its hard limit and return
+/// the resulting soft limit. High-connection servers and loadgen cells
+/// call this before opening fds; on any FFI error the conservative
+/// historical default (1024) is returned untouched.
+pub fn raise_fd_limit() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        rlim_cur: u64,
+        rlim_max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+
+    let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+    // SAFETY: `lim` is a valid, writable RLimit; getrlimit writes it or
+    // fails without touching it (we check the return code).
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024;
+    }
+    if lim.rlim_cur >= lim.rlim_max {
+        return lim.rlim_cur;
+    }
+    let want = RLimit { rlim_cur: lim.rlim_max, rlim_max: lim.rlim_max };
+    // SAFETY: `want` is a valid RLimit passed by const pointer.
+    if unsafe { setrlimit(RLIMIT_NOFILE, &want) } == 0 {
+        want.rlim_cur
+    } else {
+        lim.rlim_cur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linux backend: epoll.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::PollEvent;
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    // glibc packs epoll_event on x86-64 (`__EPOLL_PACKED`) to match the
+    // kernel's 12-byte layout; other architectures pad to 16 bytes.
+    #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "x86")))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// The epoll-backed poller. Owns the epoll fd.
+    pub struct Poller {
+        epfd: RawFd,
+        /// Reused event buffer (no allocation per wait).
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            // SAFETY: plain syscall; the returned fd is owned by Poller.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn interest(readable: bool, writable: bool) -> u32 {
+            let mut ev = 0;
+            if readable {
+                ev |= EPOLLIN;
+            }
+            if writable {
+                ev |= EPOLLOUT;
+            }
+            ev
+        }
+
+        fn ctl(&mut self, op: i32, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            // SAFETY: `ev` is a valid epoll_event for the duration of the
+            // call; the kernel copies it.
+            if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, Self::interest(readable, writable))
+        }
+
+        pub fn modify(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, Self::interest(readable, writable))
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let n = loop {
+                // SAFETY: `buf` is a valid writable array of
+                // `buf.len()` epoll_events.
+                let n = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in &self.buf[..n] {
+                let bits = ev.events;
+                out.push(PollEvent {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: `epfd` came from epoll_create1 and is closed once.
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-Linux unix backend: poll(2) over a registered-fd table.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::PollEvent;
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    extern "C" {
+        // nfds_t is `unsigned int` on the BSDs and macOS (the only
+        // targets this backend compiles for).
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    struct Entry {
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    }
+
+    /// The poll(2)-backed poller: O(n) per wait, which is fine for the
+    /// development platforms it serves (production deploys are Linux).
+    pub struct Poller {
+        entries: Vec<Entry>,
+        buf: Vec<PollFd>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            Ok(Self { entries: Vec::new(), buf: Vec::new() })
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            if self.entries.iter().any(|e| e.fd == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd registered"));
+            }
+            self.entries.push(Entry { fd, token, readable, writable });
+            Ok(())
+        }
+
+        pub fn modify(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            match self.entries.iter_mut().find(|e| e.fd == fd) {
+                Some(e) => {
+                    e.token = token;
+                    e.readable = readable;
+                    e.writable = writable;
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let before = self.entries.len();
+            self.entries.retain(|e| e.fd != fd);
+            if self.entries.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            self.buf.clear();
+            for e in &self.entries {
+                let mut events = 0;
+                if e.readable {
+                    events |= POLLIN;
+                }
+                if e.writable {
+                    events |= POLLOUT;
+                }
+                self.buf.push(PollFd { fd: e.fd, events, revents: 0 });
+            }
+            let n = loop {
+                // SAFETY: `buf` is a valid writable pollfd array of the
+                // declared length.
+                let n = unsafe { poll(self.buf.as_mut_ptr(), self.buf.len() as u32, timeout_ms) };
+                if n >= 0 {
+                    break n;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            if n == 0 {
+                return Ok(());
+            }
+            for (pf, e) in self.buf.iter().zip(&self.entries) {
+                if pf.revents == 0 {
+                    continue;
+                }
+                out.push(PollEvent {
+                    token: e.token,
+                    readable: pf.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                    writable: pf.revents & POLLOUT != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+pub use imp::Poller;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn poller_reports_readability() {
+        let (mut tx, rx) = UnixStream::pair().unwrap();
+        rx.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(rx.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        // Nothing pending: a zero-timeout wait returns no events.
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+        tx.write_all(b"x").unwrap();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 7 && e.readable),
+            "byte in flight must report readable"
+        );
+        // Level-triggered: the unread byte re-reports.
+        p.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        p.deregister(rx.as_raw_fd()).unwrap();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "deregistered fd must not report");
+    }
+
+    #[test]
+    fn poller_reports_writability_on_request() {
+        let (tx, _rx) = UnixStream::pair().unwrap();
+        tx.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(tx.as_raw_fd(), 3, false, true).unwrap();
+        let mut events = Vec::new();
+        p.wait(&mut events, 1000).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 3 && e.writable),
+            "an empty socket buffer must report writable"
+        );
+        // Back to read interest: writability stops reporting.
+        p.modify(tx.as_raw_fd(), 3, true, false).unwrap();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| !(e.token == 3 && e.writable)));
+    }
+
+    #[test]
+    fn fd_limit_is_sane() {
+        let lim = raise_fd_limit();
+        assert!(lim >= 256, "soft fd limit {lim} is unusably low");
+        // Idempotent: a second call reports the same (now-raised) limit.
+        assert_eq!(raise_fd_limit(), lim);
+    }
+}

@@ -33,7 +33,8 @@ thread_local! {
 }
 
 /// One instrumented pipeline stage. Request stages come first, then the
-/// four migration-batch stages.
+/// four migration-batch stages, then the four event-loop/netserver
+/// stages (`Route` stays first — the `STAGES` payload leads with it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
     /// Wait-free routing decision (`Router::route` / replica selection).
@@ -55,11 +56,24 @@ pub enum Stage {
     MigInstall,
     /// Migration batch: extracting moved keys from the source shard.
     MigExtract,
+    /// Event loop: blocked in the poller waiting for readiness
+    /// ([`timer_always`] — idle time is the signal here, not overhead).
+    PollWait,
+    /// Event loop: splitting read bytes into lines / binary frames and
+    /// decoding them into typed requests.
+    NetParse,
+    /// Worker pool: executing one parsed request against the service
+    /// (queue wait included — the span starts when the event loop hands
+    /// the request off).
+    NetDispatch,
+    /// Worker pool: encoding + writing the response bytes back to the
+    /// socket.
+    NetWrite,
 }
 
 impl Stage {
     /// Every stage, in display order.
-    pub const ALL: [Stage; 9] = [
+    pub const ALL: [Stage; 13] = [
         Stage::Route,
         Stage::ShardLockWait,
         Stage::WalAppend,
@@ -69,6 +83,10 @@ impl Stage {
         Stage::MigRouteBatch,
         Stage::MigInstall,
         Stage::MigExtract,
+        Stage::PollWait,
+        Stage::NetParse,
+        Stage::NetDispatch,
+        Stage::NetWrite,
     ];
 
     /// Stable lowercase name (the `STAGES` payload and the exposition
@@ -84,6 +102,10 @@ impl Stage {
             Stage::MigRouteBatch => "mig_route_batch",
             Stage::MigInstall => "mig_install",
             Stage::MigExtract => "mig_extract",
+            Stage::PollWait => "poll_wait",
+            Stage::NetParse => "net_parse",
+            Stage::NetDispatch => "net_dispatch",
+            Stage::NetWrite => "net_write",
         }
     }
 }

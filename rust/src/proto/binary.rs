@@ -1,0 +1,439 @@
+//! The length-prefixed binary codec.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! [len u32][opcode u8][payload …][crc u32]?
+//! ```
+//!
+//! `len` counts every byte after the length prefix (opcode + payload +
+//! the optional CRC trailer), so a reader knows the full frame size
+//! from the first 4 bytes. The CRC trailer is per-connection, not
+//! per-frame: a connection opened with [`super::MAGIC_BINARY_CRC`]
+//! carries CRC32 (over opcode + payload) on **every** frame in both
+//! directions; one opened with [`super::MAGIC_BINARY`] carries none.
+//!
+//! The hot commands get dedicated opcodes with fixed layouts; every
+//! other command travels as a [`REQ_RAW`] frame whose payload is the
+//! text line — admin traffic is rare enough that re-using the text
+//! parser costs nothing, and it guarantees the binary surface can never
+//! lag the text surface. Responses mirror this: structured opcodes for
+//! the hot replies, `INFO`/`BODY` carriers for the rest, and a typed
+//! `ERR` frame (`[code u16][msg]`) for the error arm.
+
+use super::{validate_value, ErrCode, ProtoError, Request, Response};
+use crate::hashing::crc32::crc32;
+
+/// Hard ceiling on `len` (16 MiB): a torn or hostile length prefix must
+/// not look like a gigabyte allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+
+/// `LOOKUP` — payload `[key u64]`.
+pub const REQ_LOOKUP: u8 = 0x01;
+/// `LOOKUPB` — payload `[n u32][key u64]*n`.
+pub const REQ_LOOKUPB: u8 = 0x02;
+/// `GET` — payload `[key u64]`.
+pub const REQ_GET: u8 = 0x03;
+/// `PUT` — payload `[key u64][value utf8]`.
+pub const REQ_PUT: u8 = 0x04;
+/// Any non-hot command — payload is the UTF-8 text line.
+pub const REQ_RAW: u8 = 0x1F;
+
+/// `BUCKET` reply — payload `[bucket u32][node utf8]`.
+pub const RESP_BUCKET: u8 = 0x81;
+/// `BUCKETS` reply — payload `[n u32][bucket u32]*n`.
+pub const RESP_BUCKETS: u8 = 0x82;
+/// `OK` write ack — payload `[node utf8]`.
+pub const RESP_OK: u8 = 0x83;
+/// `VALUE` reply — payload `[node_len u16][node utf8][value utf8]`.
+pub const RESP_VALUE: u8 = 0x84;
+/// `MISSING` reply — payload `[node utf8]`.
+pub const RESP_MISSING: u8 = 0x85;
+/// Single-line admin reply — payload is the UTF-8 line.
+pub const RESP_INFO: u8 = 0x9E;
+/// Multi-line reply — payload is the UTF-8 body.
+pub const RESP_BODY: u8 = 0x9F;
+/// Typed error — payload `[code u16][msg utf8]`.
+pub const RESP_ERR: u8 = 0xFF;
+
+/// Frame `payload` under `opcode`, with the CRC trailer iff `crc`.
+pub fn encode_frame(opcode: u8, payload: &[u8], crc: bool) -> Vec<u8> {
+    let body_len = 1 + payload.len() + if crc { 4 } else { 0 };
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(opcode);
+    out.extend_from_slice(payload);
+    if crc {
+        let mut sum = Vec::with_capacity(1 + payload.len());
+        sum.push(opcode);
+        sum.extend_from_slice(payload);
+        out.extend_from_slice(&crc32(&sum).to_le_bytes());
+    }
+    out
+}
+
+/// Try to take one complete frame off the front of `buf`.
+///
+/// * `Ok(None)` — incomplete; read more bytes and call again.
+/// * `Ok(Some((opcode, payload, consumed)))` — one frame; drop the
+///   first `consumed` bytes of `buf` before the next call.
+/// * `Err(_)` — unrecoverable framing violation (oversized or
+///   undersized length, CRC mismatch); the connection cannot be
+///   resynced and must close after reporting the error.
+pub fn try_frame(buf: &[u8], crc: bool) -> Result<Option<(u8, Vec<u8>, usize)>, ProtoError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(ProtoError::bad_frame(format!(
+            "frame length {len} exceeds max {MAX_FRAME_LEN}"
+        )));
+    }
+    let min = 1 + if crc { 4 } else { 0 };
+    if len < min {
+        return Err(ProtoError::bad_frame(format!("frame length {len} below minimum {min}")));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let body = &buf[4..4 + len];
+    let (inner, trailer) = if crc { body.split_at(len - 4) } else { (body, &[][..]) };
+    if crc {
+        let want = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+        let got = crc32(inner);
+        if want != got {
+            return Err(ProtoError::bad_frame(format!(
+                "frame crc mismatch: header {want:#010x}, computed {got:#010x}"
+            )));
+        }
+    }
+    Ok(Some((inner[0], inner[1..].to_vec(), 4 + len)))
+}
+
+fn rd_u16(b: &[u8], what: &str) -> Result<u16, ProtoError> {
+    if b.len() < 2 {
+        return Err(ProtoError::bad_frame(format!("truncated {what}")));
+    }
+    Ok(u16::from_le_bytes([b[0], b[1]]))
+}
+
+fn rd_u32(b: &[u8], what: &str) -> Result<u32, ProtoError> {
+    if b.len() < 4 {
+        return Err(ProtoError::bad_frame(format!("truncated {what}")));
+    }
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn rd_u64(b: &[u8], what: &str) -> Result<u64, ProtoError> {
+    if b.len() < 8 {
+        return Err(ProtoError::bad_frame(format!("truncated {what}")));
+    }
+    Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+}
+
+fn rd_str(b: &[u8], what: &str) -> Result<String, ProtoError> {
+    String::from_utf8(b.to_vec())
+        .map_err(|_| ProtoError::bad_frame(format!("{what} is not utf-8")))
+}
+
+impl Request {
+    /// Decode one request frame body (opcode + payload, as
+    /// [`try_frame`] returned them).
+    pub fn decode_binary(opcode: u8, payload: &[u8]) -> Result<Request, ProtoError> {
+        match opcode {
+            REQ_LOOKUP => {
+                if payload.len() != 8 {
+                    return Err(ProtoError::bad_frame("LOOKUP payload must be 8 bytes"));
+                }
+                Ok(Request::Lookup { key: rd_u64(payload, "LOOKUP key")? })
+            }
+            REQ_GET => {
+                if payload.len() != 8 {
+                    return Err(ProtoError::bad_frame("GET payload must be 8 bytes"));
+                }
+                Ok(Request::Get { key: rd_u64(payload, "GET key")? })
+            }
+            REQ_LOOKUPB => {
+                let n = rd_u32(payload, "LOOKUPB count")? as usize;
+                if n == 0 {
+                    return Err(ProtoError::parse("LOOKUPB needs at least one key"));
+                }
+                let body = &payload[4..];
+                if body.len() != n * 8 {
+                    return Err(ProtoError::bad_frame(format!(
+                        "LOOKUPB declares {n} keys but carries {} bytes",
+                        body.len()
+                    )));
+                }
+                let keys = body
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                    .collect();
+                Ok(Request::LookupBatch { keys })
+            }
+            REQ_PUT => {
+                let key = rd_u64(payload, "PUT key")?;
+                let value = rd_str(&payload[8..], "PUT value")?;
+                // Binary *could* carry whitespace where text cannot;
+                // enforce the shared invariant so the codecs stay
+                // equivalent.
+                validate_value(&value)?;
+                Ok(Request::Put { key, value })
+            }
+            REQ_RAW => {
+                let line = rd_str(payload, "RAW line")?;
+                Request::parse_text(&line)
+            }
+            other => Err(ProtoError::bad_frame(format!("unknown request opcode {other:#04x}"))),
+        }
+    }
+
+    /// Encode this request as one full frame (length prefix included).
+    /// Hot commands use their dedicated opcodes; everything else ships
+    /// its canonical text line under [`REQ_RAW`].
+    pub fn encode_binary(&self, crc: bool) -> Vec<u8> {
+        match self {
+            Request::Lookup { key } => encode_frame(REQ_LOOKUP, &key.to_le_bytes(), crc),
+            Request::Get { key } => encode_frame(REQ_GET, &key.to_le_bytes(), crc),
+            Request::LookupBatch { keys } => {
+                let mut p = Vec::with_capacity(4 + keys.len() * 8);
+                p.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+                for k in keys {
+                    p.extend_from_slice(&k.to_le_bytes());
+                }
+                encode_frame(REQ_LOOKUPB, &p, crc)
+            }
+            Request::Put { key, value } => {
+                let mut p = Vec::with_capacity(8 + value.len());
+                p.extend_from_slice(&key.to_le_bytes());
+                p.extend_from_slice(value.as_bytes());
+                encode_frame(REQ_PUT, &p, crc)
+            }
+            other => encode_frame(REQ_RAW, other.render_text().as_bytes(), crc),
+        }
+    }
+}
+
+impl Response {
+    /// Decode one response frame body. A [`RESP_ERR`] frame decodes into
+    /// `Err` carrying the error the **server sent** — indistinguishable
+    /// on purpose from a local decode failure's `Err`, because a client
+    /// handles both the same way.
+    pub fn decode_binary(opcode: u8, payload: &[u8]) -> Result<Response, ProtoError> {
+        match opcode {
+            RESP_BUCKET => {
+                let bucket = rd_u32(payload, "BUCKET id")?;
+                Ok(Response::Bucket { bucket, node: rd_str(&payload[4..], "BUCKET node")? })
+            }
+            RESP_BUCKETS => {
+                let n = rd_u32(payload, "BUCKETS count")? as usize;
+                let body = &payload[4..];
+                if body.len() != n * 4 {
+                    return Err(ProtoError::bad_frame(format!(
+                        "BUCKETS declares {n} buckets but carries {} bytes",
+                        body.len()
+                    )));
+                }
+                Ok(Response::Buckets(
+                    body.chunks_exact(4)
+                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ))
+            }
+            RESP_OK => Ok(Response::Ok { node: rd_str(payload, "OK node")? }),
+            RESP_VALUE => {
+                let nlen = rd_u16(payload, "VALUE node length")? as usize;
+                if payload.len() < 2 + nlen {
+                    return Err(ProtoError::bad_frame("VALUE node overruns payload"));
+                }
+                Ok(Response::Value {
+                    node: rd_str(&payload[2..2 + nlen], "VALUE node")?,
+                    value: rd_str(&payload[2 + nlen..], "VALUE value")?,
+                })
+            }
+            RESP_MISSING => Ok(Response::Missing { node: rd_str(payload, "MISSING node")? }),
+            RESP_INFO => Ok(Response::Info(rd_str(payload, "INFO line")?)),
+            RESP_BODY => Ok(Response::Body(rd_str(payload, "BODY text")?)),
+            RESP_ERR => {
+                let code = ErrCode::from_u16(rd_u16(payload, "ERR code")?);
+                Err(ProtoError { code, msg: rd_str(&payload[2..], "ERR message")? })
+            }
+            other => Err(ProtoError::bad_frame(format!("unknown response opcode {other:#04x}"))),
+        }
+    }
+
+    /// Encode this response as one full frame.
+    pub fn encode_binary(&self, crc: bool) -> Vec<u8> {
+        match self {
+            Response::Bucket { bucket, node } => {
+                let mut p = Vec::with_capacity(4 + node.len());
+                p.extend_from_slice(&bucket.to_le_bytes());
+                p.extend_from_slice(node.as_bytes());
+                encode_frame(RESP_BUCKET, &p, crc)
+            }
+            Response::Buckets(buckets) => {
+                let mut p = Vec::with_capacity(4 + buckets.len() * 4);
+                p.extend_from_slice(&(buckets.len() as u32).to_le_bytes());
+                for b in buckets {
+                    p.extend_from_slice(&b.to_le_bytes());
+                }
+                encode_frame(RESP_BUCKETS, &p, crc)
+            }
+            Response::Ok { node } => encode_frame(RESP_OK, node.as_bytes(), crc),
+            Response::Value { node, value } => {
+                let mut p = Vec::with_capacity(2 + node.len() + value.len());
+                p.extend_from_slice(&(node.len() as u16).to_le_bytes());
+                p.extend_from_slice(node.as_bytes());
+                p.extend_from_slice(value.as_bytes());
+                encode_frame(RESP_VALUE, &p, crc)
+            }
+            Response::Missing { node } => encode_frame(RESP_MISSING, node.as_bytes(), crc),
+            Response::Info(line) => encode_frame(RESP_INFO, line.as_bytes(), crc),
+            Response::Body(body) => encode_frame(RESP_BODY, body.as_bytes(), crc),
+        }
+    }
+}
+
+impl ProtoError {
+    /// Encode this error as one full [`RESP_ERR`] frame.
+    pub fn encode_binary(&self, crc: bool) -> Vec<u8> {
+        let mut p = Vec::with_capacity(2 + self.msg.len());
+        p.extend_from_slice(&(self.code as u16).to_le_bytes());
+        p.extend_from_slice(self.msg.as_bytes());
+        encode_frame(RESP_ERR, &p, crc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn frame_round_trip_req(req: &Request, crc: bool) -> Request {
+        let frame = req.encode_binary(crc);
+        let (op, payload, consumed) = try_frame(&frame, crc).unwrap().unwrap();
+        assert_eq!(consumed, frame.len(), "one frame, fully consumed");
+        Request::decode_binary(op, &payload).unwrap()
+    }
+
+    #[test]
+    fn hot_requests_round_trip_both_crc_modes() {
+        for crc in [false, true] {
+            for req in [
+                Request::Lookup { key: 0 },
+                Request::Lookup { key: u64::MAX },
+                Request::Get { key: 42 },
+                Request::Put { key: 7, value: "hello".into() },
+                Request::LookupBatch { keys: (0..1000).collect() },
+            ] {
+                assert_eq!(frame_round_trip_req(&req, crc), req, "crc={crc}");
+            }
+        }
+    }
+
+    #[test]
+    fn admin_requests_travel_as_raw_text() {
+        let req = Request::SetWeight { node: 2, weight: 4 };
+        let frame = req.encode_binary(false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        assert_eq!(op, REQ_RAW);
+        assert_eq!(payload, b"SETW node-2 4");
+        assert_eq!(Request::decode_binary(op, &payload).unwrap(), req);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        for crc in [false, true] {
+            for resp in [
+                Response::Bucket { bucket: 3, node: "node-1".into() },
+                Response::Buckets(vec![]),
+                Response::Buckets((0..500).collect()),
+                Response::Ok { node: "node-0".into() },
+                Response::Value { node: "node-2".into(), value: "v".into() },
+                Response::Missing { node: "node-9".into() },
+                Response::Info("KILLED node-3 EPOCH 1 SOURCES 1".into()),
+                Response::Body("# TYPE a counter\na 1\n# EOF\n".into()),
+            ] {
+                let frame = resp.encode_binary(crc);
+                let (op, payload, consumed) = try_frame(&frame, crc).unwrap().unwrap();
+                assert_eq!(consumed, frame.len());
+                assert_eq!(Response::decode_binary(op, &payload).unwrap(), resp, "crc={crc}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_frames_round_trip() {
+        let e = ProtoError::refused("unknown node node-9");
+        let frame = e.encode_binary(true);
+        let (op, payload, _) = try_frame(&frame, true).unwrap().unwrap();
+        assert_eq!(Response::decode_binary(op, &payload).unwrap_err(), e);
+    }
+
+    #[test]
+    fn incomplete_frames_ask_for_more() {
+        let frame = Request::Lookup { key: 99 }.encode_binary(false);
+        for cut in 0..frame.len() {
+            assert!(try_frame(&frame[..cut], false).unwrap().is_none(), "cut at {cut}");
+        }
+        // Two frames back to back: the first consumes exactly its bytes.
+        let mut two = frame.clone();
+        two.extend_from_slice(&frame);
+        let (_, _, consumed) = try_frame(&two, false).unwrap().unwrap();
+        assert_eq!(consumed, frame.len());
+    }
+
+    #[test]
+    fn framing_violations_are_unrecoverable() {
+        // Oversized length prefix.
+        let mut buf = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        buf.push(REQ_LOOKUP);
+        let e = try_frame(&buf, false).unwrap_err();
+        assert_eq!(e.code, ErrCode::BadFrame);
+        // Zero-length frame (no room for an opcode).
+        let e = try_frame(&0u32.to_le_bytes(), false).unwrap_err();
+        assert_eq!(e.code, ErrCode::BadFrame);
+        // CRC mismatch.
+        let mut frame = Request::Lookup { key: 1 }.encode_binary(true);
+        let last = frame.len() - 1;
+        frame[last] ^= 0xFF;
+        let e = try_frame(&frame, true).unwrap_err();
+        assert_eq!(e.code, ErrCode::BadFrame);
+        // Unknown opcode decodes to BadFrame.
+        let frame = encode_frame(0x7E, &[], false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        let e = Request::decode_binary(op, &payload).unwrap_err();
+        assert_eq!(e.code, ErrCode::BadFrame);
+    }
+
+    #[test]
+    fn payload_shape_violations_are_typed() {
+        // Truncated LOOKUP key.
+        let frame = encode_frame(REQ_LOOKUP, &[1, 2, 3], false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        assert_eq!(Request::decode_binary(op, &payload).unwrap_err().code, ErrCode::BadFrame);
+        // LOOKUPB count/bytes mismatch.
+        let mut p = 3u32.to_le_bytes().to_vec();
+        p.extend_from_slice(&1u64.to_le_bytes());
+        let frame = encode_frame(REQ_LOOKUPB, &p, false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        assert_eq!(Request::decode_binary(op, &payload).unwrap_err().code, ErrCode::BadFrame);
+        // Empty batch is a *parse* reject (same as text), not a frame error.
+        let frame = encode_frame(REQ_LOOKUPB, &0u32.to_le_bytes(), false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        assert_eq!(Request::decode_binary(op, &payload).unwrap_err().code, ErrCode::Parse);
+        // PUT whitespace value violates the shared invariant.
+        let mut p = 7u64.to_le_bytes().to_vec();
+        p.extend_from_slice(b"two words");
+        let frame = encode_frame(REQ_PUT, &p, false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        assert_eq!(Request::decode_binary(op, &payload).unwrap_err().code, ErrCode::Parse);
+        // Non-UTF-8 value.
+        let mut p = 7u64.to_le_bytes().to_vec();
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        let frame = encode_frame(REQ_PUT, &p, false);
+        let (op, payload, _) = try_frame(&frame, false).unwrap().unwrap();
+        assert_eq!(Request::decode_binary(op, &payload).unwrap_err().code, ErrCode::BadFrame);
+    }
+}

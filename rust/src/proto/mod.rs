@@ -1,0 +1,387 @@
+//! `proto` — the typed protocol core (DESIGN.md §13).
+//!
+//! Every wire request and response is a value of [`Request`] /
+//! [`Response`], parsed **once** at the edge and dispatched as a typed
+//! enum. Two symmetric codecs target the same types:
+//!
+//! * [`text`] — the newline-delimited debug protocol (`LOOKUP 7`,
+//!   `BUCKET 3 NODE node-1`), kept because a human with `nc` can drive
+//!   the whole service;
+//! * [`binary`] — length-prefixed frames
+//!   (`[len u32le][opcode u8][payload][crc32le?]`) for the hot commands,
+//!   negotiated by the first byte on a connection ([`MAGIC_BINARY`] /
+//!   [`MAGIC_BINARY_CRC`]; any other first byte means text).
+//!
+//! Because `Service::handle_request` matches on the enum — not on
+//! whitespace-split tokens — the two codecs cannot drift: a command is
+//! either representable in both or in neither, and the round-trip
+//! property tests in `tests/integration_proto.rs` pin
+//! `decode(encode(x)) == x` for every variant on both codecs.
+//!
+//! Errors are typed too: [`ProtoError`] carries an [`ErrCode`] plus a
+//! message, rendered as `ERR <CODE> <msg>` in text and as a dedicated
+//! frame (`[code u16le][msg]`) in binary, so clients match on the code
+//! instead of sniffing `starts_with("ERR")`.
+
+pub mod binary;
+pub mod text;
+
+pub use binary::{encode_frame, try_frame, MAX_FRAME_LEN};
+
+/// First connection byte selecting binary framing (no per-frame CRC).
+pub const MAGIC_BINARY: u8 = 0xB1;
+/// First connection byte selecting binary framing with a CRC32 trailer
+/// on every frame (both directions).
+pub const MAGIC_BINARY_CRC: u8 = 0xB2;
+
+/// Typed error category, carried on the wire (`ERR <CODE> <msg>` in
+/// text, a `u16` in binary frames).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The request line/frame did not parse (missing or non-numeric
+    /// arguments).
+    Parse = 1,
+    /// The command verb itself is unknown.
+    UnknownCmd = 2,
+    /// Binary framing violation: truncated or oversized length prefix,
+    /// unknown opcode, malformed payload, CRC mismatch. The connection
+    /// closes after the reject — framing errors cannot be resynced.
+    BadFrame = 3,
+    /// The request parsed but the placement state refused it (unknown
+    /// node, last bucket, bad resize, no recovery report).
+    Refused = 4,
+    /// The server cannot take the work (connection capacity).
+    Unavailable = 5,
+    /// Anything else; also the decode fallback for unknown codes from a
+    /// newer peer.
+    Internal = 6,
+}
+
+impl ErrCode {
+    /// Stable wire token (the second word of a text `ERR` line).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::Parse => "PARSE",
+            ErrCode::UnknownCmd => "UNKNOWN_CMD",
+            ErrCode::BadFrame => "BAD_FRAME",
+            ErrCode::Refused => "REFUSED",
+            ErrCode::Unavailable => "UNAVAILABLE",
+            ErrCode::Internal => "INTERNAL",
+        }
+    }
+
+    /// Inverse of [`ErrCode::name`]; `None` for unknown tokens.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "PARSE" => ErrCode::Parse,
+            "UNKNOWN_CMD" => ErrCode::UnknownCmd,
+            "BAD_FRAME" => ErrCode::BadFrame,
+            "REFUSED" => ErrCode::Refused,
+            "UNAVAILABLE" => ErrCode::Unavailable,
+            "INTERNAL" => ErrCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Decode the binary `u16`; unknown values map to [`ErrCode::Internal`]
+    /// so a newer peer's codes degrade instead of failing the decode.
+    pub fn from_u16(v: u16) -> Self {
+        match v {
+            1 => ErrCode::Parse,
+            2 => ErrCode::UnknownCmd,
+            3 => ErrCode::BadFrame,
+            4 => ErrCode::Refused,
+            5 => ErrCode::Unavailable,
+            _ => ErrCode::Internal,
+        }
+    }
+}
+
+/// A typed protocol error: what went wrong and why, in a form both
+/// codecs can carry and clients can match on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    /// Error category (drives client handling).
+    pub code: ErrCode,
+    /// Human-readable detail.
+    pub msg: String,
+}
+
+impl ProtoError {
+    /// A [`ErrCode::Parse`] error.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Self { code: ErrCode::Parse, msg: msg.into() }
+    }
+
+    /// A [`ErrCode::UnknownCmd`] error.
+    pub fn unknown_cmd(cmd: &str) -> Self {
+        Self { code: ErrCode::UnknownCmd, msg: format!("unknown command {cmd}") }
+    }
+
+    /// A [`ErrCode::BadFrame`] error.
+    pub fn bad_frame(msg: impl Into<String>) -> Self {
+        Self { code: ErrCode::BadFrame, msg: msg.into() }
+    }
+
+    /// A [`ErrCode::Refused`] error.
+    pub fn refused(msg: impl Into<String>) -> Self {
+        Self { code: ErrCode::Refused, msg: msg.into() }
+    }
+
+    /// A [`ErrCode::Unavailable`] error.
+    pub fn unavailable(msg: impl Into<String>) -> Self {
+        Self { code: ErrCode::Unavailable, msg: msg.into() }
+    }
+
+    /// The text wire form: `ERR <CODE> <msg>`.
+    pub fn render_text(&self) -> String {
+        format!("ERR {} {}", self.code.name(), self.msg)
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// One parsed protocol request. The hot commands (`Lookup`, `LookupBatch`,
+/// `Get`, `Put`) carry structured payloads in both codecs; admin and
+/// introspection commands are first-class variants too, so the service
+/// dispatch is a single exhaustive `match`.
+///
+/// Keys are `u64` **after** edge digestion: the text codec passes decimal
+/// tokens through verbatim and xxHash64-digests anything else (exactly
+/// what `Service::digest_key` always did), so a string key normalizes to
+/// its digest when re-rendered. The binary codec carries the digested key
+/// directly — clients hash once, the server never re-parses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Route one key: `LOOKUP <key>`.
+    Lookup {
+        /// Digested key.
+        key: u64,
+    },
+    /// Route a batch in one engine dispatch: `LOOKUPB <key> …`.
+    LookupBatch {
+        /// Digested keys (at least one).
+        keys: Vec<u64>,
+    },
+    /// Read one record: `GET <key>`.
+    Get {
+        /// Digested key.
+        key: u64,
+    },
+    /// Write one record: `PUT <key> <value>`.
+    Put {
+        /// Digested key.
+        key: u64,
+        /// Value token — non-empty UTF-8 with no whitespace, the
+        /// invariant both codecs enforce so text and binary stay
+        /// equivalent ([`validate_value`]).
+        value: String,
+    },
+    /// Fail one bucket: `KILL <bucket>`.
+    Kill {
+        /// Bucket id.
+        bucket: u32,
+    },
+    /// Fail a whole node (all its buckets atomically): `KILLN node-<id>`.
+    KillNode {
+        /// Node id (the numeric part of `node-<id>`).
+        node: u64,
+    },
+    /// Restore/add one bucket: `ADD`.
+    Add,
+    /// Add a weighted node: `ADDW <weight>`.
+    AddWeighted {
+        /// Requested weight (buckets).
+        weight: u32,
+    },
+    /// Resize a node: `SETW node-<id> <weight>`.
+    SetWeight {
+        /// Node id.
+        node: u64,
+        /// New weight.
+        weight: u32,
+    },
+    /// Per-node membership + load table: `NODES`.
+    Nodes,
+    /// Migration status: `MSTAT`.
+    MStat,
+    /// One-line service stats: `STATS`.
+    Stats,
+    /// Current epoch + working count: `EPOCH`.
+    Epoch,
+    /// Flush every unsynced WAL file: `FSYNC`.
+    Fsync,
+    /// WAL counters: `WALSTAT`.
+    WalStat,
+    /// Snapshot + truncate every node's shards: `COMPACT`.
+    Compact,
+    /// The recovery report, if this service recovered: `RECOVER`.
+    Recover,
+    /// Full Prometheus-style exposition (multi-line): `METRICS`.
+    Metrics,
+    /// One-line scalar snapshot: `MSAMPLE`.
+    MSample,
+    /// In-process time series of one metric: `SERIES <metric>`.
+    Series {
+        /// Registered metric name.
+        metric: String,
+    },
+    /// Per-stage latency spans: `STAGES`.
+    Stages,
+    /// Flight-recorder tail: `DUMP [n]`.
+    Dump {
+        /// Max events to render (`None` = server default).
+        max: Option<usize>,
+    },
+}
+
+impl Request {
+    /// True for the data-path commands whose latency feeds the service
+    /// histogram (admin/introspection stays out so the reported tail
+    /// reflects serving, not churn injection).
+    pub fn is_data_path(&self) -> bool {
+        matches!(
+            self,
+            Request::Lookup { .. }
+                | Request::LookupBatch { .. }
+                | Request::Get { .. }
+                | Request::Put { .. }
+        )
+    }
+
+    /// For text transports: the terminator line of a multi-line response
+    /// body, when this request produces one (`METRICS`). Binary framing
+    /// needs no terminator — a body is one frame.
+    pub fn multiline_terminator(&self) -> Option<&'static str> {
+        match self {
+            Request::Metrics => Some("# EOF"),
+            _ => None,
+        }
+    }
+}
+
+/// One typed response. The hot replies are structured; everything the
+/// admin/introspection surface emits as a formatted one-liner travels as
+/// [`Response::Info`], and multi-line payloads (the `METRICS`
+/// exposition) as [`Response::Body`]. Errors are **not** a response
+/// variant — the dispatch returns `Result<Response, ProtoError>` and the
+/// codecs render the `Err` arm.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// `BUCKET <b> NODE <name>` — a routing decision.
+    Bucket {
+        /// Bucket id.
+        bucket: u32,
+        /// Owning node name.
+        node: String,
+    },
+    /// `BUCKETS <b> …` — batched routing decisions, one per input key.
+    Buckets(
+        /// Bucket per key, in request order.
+        Vec<u32>,
+    ),
+    /// `OK <node>` — an acknowledged write, naming the primary.
+    Ok {
+        /// Primary node name.
+        node: String,
+    },
+    /// `VALUE <node> <value>` — a successful read.
+    Value {
+        /// Serving node name.
+        node: String,
+        /// The stored value token.
+        value: String,
+    },
+    /// `MISSING <node>` — a clean miss, naming the probed primary.
+    Missing {
+        /// Probed node name.
+        node: String,
+    },
+    /// Any single-line reply rendered verbatim (`KILLED …`, `STATS …`,
+    /// `MSTAT …`). Keeping these as formatted lines preserves the
+    /// human-debuggable wire format while the hot path stays structured.
+    Info(String),
+    /// A multi-line reply (the `METRICS` exposition, `# EOF`-terminated,
+    /// trailing newline included).
+    Body(String),
+}
+
+/// Digest a key token: decimal `u64` passes through verbatim (so tests
+/// can exercise exact placements), anything else is xxHash64-digested —
+/// the paper's benchmark tool does the same at the edge.
+pub fn digest_key(token: &str) -> u64 {
+    token.parse::<u64>().unwrap_or_else(|_| crate::hashing::xxhash::xxhash64(token.as_bytes(), 0))
+}
+
+/// The value-token invariant shared by both codecs: non-empty UTF-8
+/// containing no whitespace. Text could never carry whitespace in a
+/// token; binary *could*, so it enforces the same rule to keep the
+/// codecs equivalent (a value storable via one wire is storable and
+/// re-renderable via the other).
+pub fn validate_value(value: &str) -> Result<(), ProtoError> {
+    if value.is_empty() {
+        return Err(ProtoError::parse("PUT value must be non-empty"));
+    }
+    if value.chars().any(|c| c.is_whitespace()) {
+        return Err(ProtoError::parse("PUT value must not contain whitespace"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn err_code_names_round_trip() {
+        for code in [
+            ErrCode::Parse,
+            ErrCode::UnknownCmd,
+            ErrCode::BadFrame,
+            ErrCode::Refused,
+            ErrCode::Unavailable,
+            ErrCode::Internal,
+        ] {
+            assert_eq!(ErrCode::by_name(code.name()), Some(code));
+            assert_eq!(ErrCode::from_u16(code as u16), code);
+        }
+        assert_eq!(ErrCode::by_name("NOPE"), None);
+        assert_eq!(ErrCode::from_u16(999), ErrCode::Internal);
+    }
+
+    #[test]
+    fn digest_passes_numeric_keys_through() {
+        assert_eq!(digest_key("12345"), 12345);
+        assert_ne!(digest_key("abc"), 0);
+        assert_eq!(digest_key("abc"), digest_key("abc"));
+    }
+
+    #[test]
+    fn value_validation() {
+        assert!(validate_value("hello").is_ok());
+        assert!(validate_value("").is_err());
+        assert!(validate_value("two words").is_err());
+        assert!(validate_value("tab\tbed").is_err());
+    }
+
+    #[test]
+    fn data_path_classification() {
+        assert!(Request::Lookup { key: 1 }.is_data_path());
+        assert!(Request::Put { key: 1, value: "v".into() }.is_data_path());
+        assert!(!Request::Kill { bucket: 1 }.is_data_path());
+        assert!(!Request::Stats.is_data_path());
+    }
+
+    #[test]
+    fn only_metrics_is_multiline() {
+        assert_eq!(Request::Metrics.multiline_terminator(), Some("# EOF"));
+        assert_eq!(Request::Stats.multiline_terminator(), None);
+        assert_eq!(Request::Dump { max: None }.multiline_terminator(), None);
+    }
+}

@@ -1,0 +1,340 @@
+//! The newline text codec: human-typeable lines (`LOOKUP 7`,
+//! `SETW node-2 3`) mapped onto [`Request`] / [`Response`] values.
+//!
+//! Parsing is strict in the same places the old `split_whitespace`
+//! dispatch was — a missing or non-numeric argument is a typed
+//! [`ErrCode::Parse`] reject, an unknown verb an
+//! [`ErrCode::UnknownCmd`] — and lenient in the same places too
+//! (`DUMP notanumber` falls back to the server default, extra `PUT`
+//! tokens are ignored). Rendering produces the canonical line, so
+//! `parse_text(render_text(r)) == r` for every variant (the round-trip
+//! suite pins this).
+
+use super::{digest_key, validate_value, ErrCode, ProtoError, Request, Response};
+
+impl Request {
+    /// Parse one request line into a typed [`Request`].
+    pub fn parse_text(line: &str) -> Result<Request, ProtoError> {
+        let mut parts = line.split_whitespace();
+        Ok(match parts.next() {
+            Some("LOOKUP") => {
+                let Some(tok) = parts.next() else {
+                    return Err(ProtoError::parse("LOOKUP needs a key"));
+                };
+                Request::Lookup { key: digest_key(tok) }
+            }
+            Some("LOOKUPB") => {
+                let keys: Vec<u64> = parts.map(digest_key).collect();
+                if keys.is_empty() {
+                    return Err(ProtoError::parse("LOOKUPB needs at least one key"));
+                }
+                Request::LookupBatch { keys }
+            }
+            Some("PUT") => {
+                let (Some(tok), Some(val)) = (parts.next(), parts.next()) else {
+                    return Err(ProtoError::parse("PUT needs key and value"));
+                };
+                validate_value(val)?;
+                Request::Put { key: digest_key(tok), value: val.to_string() }
+            }
+            Some("GET") => {
+                let Some(tok) = parts.next() else {
+                    return Err(ProtoError::parse("GET needs a key"));
+                };
+                Request::Get { key: digest_key(tok) }
+            }
+            Some("KILL") => {
+                let Some(tok) = parts.next() else {
+                    return Err(ProtoError::parse("KILL needs a bucket"));
+                };
+                let Ok(bucket) = tok.parse::<u32>() else {
+                    return Err(ProtoError::parse("KILL needs a numeric bucket"));
+                };
+                Request::Kill { bucket }
+            }
+            Some("KILLN") => {
+                let Some(tok) = parts.next() else {
+                    return Err(ProtoError::parse("KILLN needs a node id"));
+                };
+                let Some(node) = parse_node(tok) else {
+                    return Err(ProtoError::parse("KILLN needs a node id like 5 or node-5"));
+                };
+                Request::KillNode { node }
+            }
+            Some("ADD") => Request::Add,
+            Some("ADDW") => {
+                let Some(tok) = parts.next() else {
+                    return Err(ProtoError::parse("ADDW needs a weight"));
+                };
+                let Ok(weight) = tok.parse::<u32>() else {
+                    return Err(ProtoError::parse("ADDW needs a numeric weight"));
+                };
+                Request::AddWeighted { weight }
+            }
+            Some("SETW") => {
+                let (Some(ntok), Some(wtok)) = (parts.next(), parts.next()) else {
+                    return Err(ProtoError::parse("SETW needs a node id and a weight"));
+                };
+                let Some(node) = parse_node(ntok) else {
+                    return Err(ProtoError::parse("SETW needs a node id like 5 or node-5"));
+                };
+                let Ok(weight) = wtok.parse::<u32>() else {
+                    return Err(ProtoError::parse("SETW needs a numeric weight"));
+                };
+                Request::SetWeight { node, weight }
+            }
+            Some("NODES") => Request::Nodes,
+            Some("MSTAT") => Request::MStat,
+            Some("STATS") => Request::Stats,
+            Some("EPOCH") => Request::Epoch,
+            Some("FSYNC") => Request::Fsync,
+            Some("WALSTAT") => Request::WalStat,
+            Some("COMPACT") => Request::Compact,
+            Some("RECOVER") => Request::Recover,
+            Some("METRICS") => Request::Metrics,
+            Some("MSAMPLE") => Request::MSample,
+            Some("SERIES") => match parts.next() {
+                Some(metric) => Request::Series { metric: metric.to_string() },
+                None => return Err(ProtoError::parse("SERIES needs a metric name")),
+            },
+            Some("STAGES") => Request::Stages,
+            Some("DUMP") => {
+                // Lenient like the old dispatch: a non-numeric count falls
+                // back to the server default instead of rejecting.
+                Request::Dump { max: parts.next().and_then(|t| t.parse::<usize>().ok()) }
+            }
+            Some(cmd) => return Err(ProtoError::unknown_cmd(cmd)),
+            None => return Err(ProtoError::parse("empty request")),
+        })
+    }
+
+    /// The canonical request line for this value. String keys were
+    /// digested at parse time, so re-rendering normalizes them to the
+    /// digest — byte-identity holds from the typed value, not from an
+    /// arbitrary input line.
+    pub fn render_text(&self) -> String {
+        match self {
+            Request::Lookup { key } => format!("LOOKUP {key}"),
+            Request::LookupBatch { keys } => {
+                let mut out = String::from("LOOKUPB");
+                for k in keys {
+                    out.push(' ');
+                    out.push_str(&k.to_string());
+                }
+                out
+            }
+            Request::Get { key } => format!("GET {key}"),
+            Request::Put { key, value } => format!("PUT {key} {value}"),
+            Request::Kill { bucket } => format!("KILL {bucket}"),
+            Request::KillNode { node } => format!("KILLN node-{node}"),
+            Request::Add => "ADD".into(),
+            Request::AddWeighted { weight } => format!("ADDW {weight}"),
+            Request::SetWeight { node, weight } => format!("SETW node-{node} {weight}"),
+            Request::Nodes => "NODES".into(),
+            Request::MStat => "MSTAT".into(),
+            Request::Stats => "STATS".into(),
+            Request::Epoch => "EPOCH".into(),
+            Request::Fsync => "FSYNC".into(),
+            Request::WalStat => "WALSTAT".into(),
+            Request::Compact => "COMPACT".into(),
+            Request::Recover => "RECOVER".into(),
+            Request::Metrics => "METRICS".into(),
+            Request::MSample => "MSAMPLE".into(),
+            Request::Series { metric } => format!("SERIES {metric}"),
+            Request::Stages => "STAGES".into(),
+            Request::Dump { max: Some(n) } => format!("DUMP {n}"),
+            Request::Dump { max: None } => "DUMP".into(),
+        }
+    }
+}
+
+/// Parse a `node-5` / `5` token into the numeric node id.
+fn parse_node(token: &str) -> Option<u64> {
+    token.trim_start_matches("node-").parse::<u64>().ok()
+}
+
+impl Response {
+    /// Classify one response payload (single- or multi-line, as the
+    /// transport framed it) into a typed [`Response`], or a typed
+    /// [`ProtoError`] for `ERR` lines.
+    ///
+    /// Structured variants are recognized by shape; anything that
+    /// doesn't match a structured shape exactly is [`Response::Info`]
+    /// (the admin one-liners), so classification can never lose bytes —
+    /// `render_text` of the result reproduces the payload.
+    pub fn parse_text(payload: &str) -> Result<Response, ProtoError> {
+        if let Some(rest) = payload.strip_prefix("ERR ") {
+            return Err(parse_err(rest));
+        }
+        if payload == "ERR" {
+            return Err(ProtoError { code: ErrCode::Internal, msg: String::new() });
+        }
+        if payload.contains('\n') {
+            return Ok(Response::Body(payload.to_string()));
+        }
+        let toks: Vec<&str> = payload.split(' ').collect();
+        Ok(match toks.as_slice() {
+            ["BUCKET", b, "NODE", node] => match b.parse::<u32>() {
+                Ok(bucket) => Response::Bucket { bucket, node: node.to_string() },
+                Err(_) => Response::Info(payload.to_string()),
+            },
+            ["BUCKETS", rest @ ..] if !rest.is_empty() => {
+                match rest.iter().map(|t| t.parse::<u32>()).collect::<Result<Vec<u32>, _>>() {
+                    Ok(buckets) => Response::Buckets(buckets),
+                    Err(_) => Response::Info(payload.to_string()),
+                }
+            }
+            // `OK <node>` is a write ack; `OK t=… a=1 …` is the MSAMPLE
+            // one-liner — the `=`-free single token disambiguates.
+            ["OK", node] if !node.contains('=') => Response::Ok { node: node.to_string() },
+            ["VALUE", node, value] => {
+                Response::Value { node: node.to_string(), value: value.to_string() }
+            }
+            ["MISSING", node] => Response::Missing { node: node.to_string() },
+            _ => Response::Info(payload.to_string()),
+        })
+    }
+
+    /// The wire payload for this response (no transport framing — the
+    /// text transport appends its own `\n`).
+    pub fn render_text(&self) -> String {
+        match self {
+            Response::Bucket { bucket, node } => format!("BUCKET {bucket} NODE {node}"),
+            Response::Buckets(buckets) => {
+                let mut out = String::from("BUCKETS");
+                for b in buckets {
+                    out.push(' ');
+                    out.push_str(&b.to_string());
+                }
+                out
+            }
+            Response::Ok { node } => format!("OK {node}"),
+            Response::Value { node, value } => format!("VALUE {node} {value}"),
+            Response::Missing { node } => format!("MISSING {node}"),
+            Response::Info(line) => line.clone(),
+            Response::Body(body) => body.clone(),
+        }
+    }
+}
+
+/// Parse the remainder of an `ERR ` line. Lenient: an unknown (or
+/// missing) code token degrades to [`ErrCode::Internal`] with the whole
+/// remainder as the message, so pre-typed `ERR <msg>` peers still decode.
+fn parse_err(rest: &str) -> ProtoError {
+    let mut parts = rest.splitn(2, ' ');
+    let first = parts.next().unwrap_or("");
+    match ErrCode::by_name(first) {
+        Some(code) => ProtoError { code, msg: parts.next().unwrap_or("").to_string() },
+        None => ProtoError { code: ErrCode::Internal, msg: rest.to_string() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    #[test]
+    fn request_lines_parse_and_render() {
+        for (line, req) in [
+            ("LOOKUP 42", Request::Lookup { key: 42 }),
+            ("LOOKUPB 1 2 3", Request::LookupBatch { keys: vec![1, 2, 3] }),
+            ("GET 7", Request::Get { key: 7 }),
+            ("PUT 7 hello", Request::Put { key: 7, value: "hello".into() }),
+            ("KILL 3", Request::Kill { bucket: 3 }),
+            ("KILLN node-5", Request::KillNode { node: 5 }),
+            ("ADD", Request::Add),
+            ("ADDW 3", Request::AddWeighted { weight: 3 }),
+            ("SETW node-2 4", Request::SetWeight { node: 2, weight: 4 }),
+            ("NODES", Request::Nodes),
+            ("MSTAT", Request::MStat),
+            ("STATS", Request::Stats),
+            ("EPOCH", Request::Epoch),
+            ("FSYNC", Request::Fsync),
+            ("WALSTAT", Request::WalStat),
+            ("COMPACT", Request::Compact),
+            ("RECOVER", Request::Recover),
+            ("METRICS", Request::Metrics),
+            ("MSAMPLE", Request::MSample),
+            ("SERIES some_metric", Request::Series { metric: "some_metric".into() }),
+            ("STAGES", Request::Stages),
+            ("DUMP 99", Request::Dump { max: Some(99) }),
+            ("DUMP", Request::Dump { max: None }),
+        ] {
+            assert_eq!(Request::parse_text(line).unwrap(), req, "{line}");
+            assert_eq!(Request::parse_text(&req.render_text()).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn string_keys_digest_at_parse_time() {
+        let r = Request::parse_text("LOOKUP alpha").unwrap();
+        assert_eq!(r, Request::Lookup { key: digest_key("alpha") });
+        // Re-rendering normalizes to the digest, and re-parsing that is a
+        // fixed point (digests are numeric, so they pass through).
+        assert_eq!(Request::parse_text(&r.render_text()).unwrap(), r);
+    }
+
+    #[test]
+    fn parse_rejects_are_typed() {
+        for (line, code) in [
+            ("LOOKUP", ErrCode::Parse),
+            ("LOOKUPB", ErrCode::Parse),
+            ("PUT onlykey", ErrCode::Parse),
+            ("KILL notanumber", ErrCode::Parse),
+            ("KILLN abc", ErrCode::Parse),
+            ("ADDW zero", ErrCode::Parse),
+            ("SETW node-0", ErrCode::Parse),
+            ("SETW node-0 x", ErrCode::Parse),
+            ("SERIES", ErrCode::Parse),
+            ("", ErrCode::Parse),
+            ("FROB", ErrCode::UnknownCmd),
+        ] {
+            let e = Request::parse_text(line).unwrap_err();
+            assert_eq!(e.code, code, "{line}: {e}");
+        }
+    }
+
+    #[test]
+    fn dump_count_is_lenient() {
+        assert_eq!(Request::parse_text("DUMP xyz").unwrap(), Request::Dump { max: None });
+    }
+
+    #[test]
+    fn responses_classify_by_shape() {
+        for (payload, resp) in [
+            ("BUCKET 3 NODE node-1", Response::Bucket { bucket: 3, node: "node-1".into() }),
+            ("BUCKETS 1 2 3", Response::Buckets(vec![1, 2, 3])),
+            ("OK node-4", Response::Ok { node: "node-4".into() }),
+            (
+                "VALUE node-2 hello",
+                Response::Value { node: "node-2".into(), value: "hello".into() },
+            ),
+            ("MISSING node-0", Response::Missing { node: "node-0".into() }),
+            (
+                "KILLED node-3 EPOCH 1 SOURCES 1",
+                Response::Info("KILLED node-3 EPOCH 1 SOURCES 1".into()),
+            ),
+            ("OK t=12 a=1 b=2", Response::Info("OK t=12 a=1 b=2".into())),
+            (
+                "# TYPE a counter\na 1\n# EOF\n",
+                Response::Body("# TYPE a counter\na 1\n# EOF\n".into()),
+            ),
+        ] {
+            let parsed = Response::parse_text(payload).unwrap();
+            assert_eq!(parsed, resp, "{payload}");
+            assert_eq!(parsed.render_text(), payload, "render must reproduce the payload");
+        }
+    }
+
+    #[test]
+    fn err_lines_become_typed_errors() {
+        let e = Response::parse_text("ERR REFUSED unknown node node-9").unwrap_err();
+        assert_eq!(e.code, ErrCode::Refused);
+        assert_eq!(e.msg, "unknown node node-9");
+        assert_eq!(e.render_text(), "ERR REFUSED unknown node node-9");
+        // Legacy / unknown code tokens degrade to Internal, keeping the text.
+        let e = Response::parse_text("ERR something went wrong").unwrap_err();
+        assert_eq!(e.code, ErrCode::Internal);
+        assert_eq!(e.msg, "something went wrong");
+    }
+}

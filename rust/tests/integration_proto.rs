@@ -1,0 +1,322 @@
+//! Protocol integration: codec equivalence proven by round-trip over
+//! every `Request`/`Response` variant, text-vs-binary agreement against
+//! a live server, and malformed-frame handling at the wire (typed
+//! rejects, no worker hang, connections that cannot resync get closed).
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::netserver::{Client, ClientError};
+use memento::proto::{
+    self, encode_frame, try_frame, ErrCode, ProtoError, Request, Response, MAGIC_BINARY,
+    MAX_FRAME_LEN,
+};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start(max_conns: usize) -> (Arc<Service>, memento::netserver::ServerHandle) {
+    let router = Router::new("memento", 8, 80, None).expect("router");
+    let svc = Service::new(router);
+    let server = svc.serve("127.0.0.1:0", max_conns).expect("bind");
+    (svc, server)
+}
+
+/// Every request variant, with edge payloads on the hot commands.
+fn all_requests() -> Vec<Request> {
+    vec![
+        Request::Lookup { key: 0 },
+        Request::Lookup { key: u64::MAX },
+        Request::LookupBatch { keys: vec![7] },
+        Request::LookupBatch { keys: (0..1000).collect() },
+        Request::Get { key: 1 },
+        Request::Put { key: u64::MAX, value: "v".repeat(512) },
+        Request::Kill { bucket: 3 },
+        Request::KillNode { node: 5 },
+        Request::Add,
+        Request::AddWeighted { weight: 4 },
+        Request::SetWeight { node: 2, weight: 9 },
+        Request::Nodes,
+        Request::MStat,
+        Request::Stats,
+        Request::Epoch,
+        Request::Fsync,
+        Request::WalStat,
+        Request::Compact,
+        Request::Recover,
+        Request::Metrics,
+        Request::MSample,
+        Request::Series { metric: "service_requests".into() },
+        Request::Stages,
+        Request::Dump { max: Some(16) },
+        Request::Dump { max: None },
+    ]
+}
+
+#[test]
+fn every_request_variant_round_trips_both_codecs() {
+    for req in all_requests() {
+        let line = req.render_text();
+        assert_eq!(
+            Request::parse_text(&line).unwrap(),
+            req,
+            "text round trip must be identity for {line:?}"
+        );
+        for crc in [false, true] {
+            let frame = req.encode_binary(crc);
+            let (op, payload, consumed) =
+                try_frame(&frame, crc).unwrap().expect("one complete frame");
+            assert_eq!(consumed, frame.len());
+            assert_eq!(
+                Request::decode_binary(op, &payload).unwrap(),
+                req,
+                "binary round trip (crc={crc}) must be identity for {line:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_response_variant_round_trips_both_codecs() {
+    let responses = vec![
+        Response::Bucket { bucket: 0, node: "node-0".into() },
+        Response::Bucket { bucket: u32::MAX, node: "node-17".into() },
+        Response::Buckets((0..1000).collect()),
+        Response::Ok { node: "node-3".into() },
+        Response::Value { node: "node-1".into(), value: "payload-42".into() },
+        Response::Missing { node: "node-9".into() },
+        Response::Info("EPOCH 3 WORKING 4".into()),
+        Response::Body("# line one\n# line two\n# EOF".into()),
+    ];
+    for resp in responses {
+        let payload = resp.render_text();
+        assert_eq!(
+            Response::parse_text(&payload).unwrap(),
+            resp,
+            "text round trip must be identity for {payload:?}"
+        );
+        for crc in [false, true] {
+            let frame = resp.encode_binary(crc);
+            let (op, body, consumed) =
+                try_frame(&frame, crc).unwrap().expect("one complete frame");
+            assert_eq!(consumed, frame.len());
+            assert_eq!(
+                Response::decode_binary(op, &body).unwrap(),
+                resp,
+                "binary round trip (crc={crc}) must be identity"
+            );
+        }
+    }
+    // An empty bucket list renders as a bare `BUCKETS` token, which the
+    // lenient text classifier reads back as Info — the binary codec is
+    // the one that carries it losslessly.
+    let empty = Response::Buckets(vec![]);
+    let frame = empty.encode_binary(false);
+    let (op, body, _) = try_frame(&frame, false).unwrap().unwrap();
+    assert_eq!(Response::decode_binary(op, &body).unwrap(), empty);
+}
+
+#[test]
+fn proto_errors_round_trip_both_codecs() {
+    let errors = vec![
+        ProtoError::parse("LOOKUP needs a key"),
+        ProtoError::unknown_cmd("FROB"),
+        ProtoError::bad_frame("frame length 99999999 exceeds max"),
+        ProtoError::refused("unknown node node-99"),
+        ProtoError::unavailable("this service did not start from recovery"),
+        ProtoError { code: ErrCode::Internal, msg: "anything else".into() },
+    ];
+    for err in errors {
+        let line = err.render_text();
+        match Response::parse_text(&line) {
+            Err(back) => assert_eq!(back, err, "text round trip must be identity for {line:?}"),
+            Ok(r) => panic!("ERR line {line:?} parsed as a success response {r:?}"),
+        }
+        for crc in [false, true] {
+            let frame = err.encode_binary(crc);
+            let (op, body, _) = try_frame(&frame, crc).unwrap().expect("one complete frame");
+            match Response::decode_binary(op, &body) {
+                Err(back) => assert_eq!(back, err, "binary round trip (crc={crc})"),
+                Ok(r) => panic!("ERR frame decoded as a success response {r:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn text_and_binary_clients_agree_against_a_live_server() {
+    let (_svc, server) = start(16);
+    let mut text = Client::connect(&server.addr()).unwrap();
+    let mut bin = Client::connect_binary(&server.addr()).unwrap();
+    let mut bin_crc = Client::connect_binary_crc(&server.addr()).unwrap();
+
+    let key = proto::digest_key("user:42");
+    let reqs = vec![
+        Request::Put { key, value: "alice".into() },
+        Request::Get { key },
+        Request::Lookup { key },
+        Request::LookupBatch { keys: vec![1, 2, 3, key] },
+        Request::Get { key: proto::digest_key("missing-key") },
+        Request::Epoch,
+        Request::MStat,
+        Request::Nodes,
+        Request::WalStat,
+        Request::Stages,
+        Request::Metrics,
+        Request::Recover,
+        Request::Series { metric: "no_such_metric".into() },
+    ];
+    for req in reqs {
+        let label = req.render_text();
+        let a = text.call(&req);
+        let b = bin.call(&req);
+        let c = bin_crc.call(&req);
+        match (&a, &b, &c) {
+            (Ok(ra), Ok(rb), Ok(rc)) => {
+                // Counters move between calls, so only the stable
+                // responses are compared byte-for-byte; the rest must
+                // agree on shape.
+                assert_eq!(
+                    std::mem::discriminant(ra),
+                    std::mem::discriminant(rb),
+                    "text and binary disagree on shape for {label:?}"
+                );
+                assert_eq!(
+                    std::mem::discriminant(rb),
+                    std::mem::discriminant(rc),
+                    "crc and plain binary disagree on shape for {label:?}"
+                );
+                if req.is_data_path() {
+                    assert_eq!(ra, rb, "data-path responses must be identical for {label:?}");
+                    assert_eq!(rb, rc, "data-path responses must be identical for {label:?}");
+                }
+            }
+            (
+                Err(ClientError::Proto(ea)),
+                Err(ClientError::Proto(eb)),
+                Err(ClientError::Proto(ec)),
+            ) => {
+                assert_eq!(ea, eb, "typed errors must agree for {label:?}");
+                assert_eq!(eb, ec, "typed errors must agree for {label:?}");
+            }
+            _ => panic!("transports disagree on {label:?}: {a:?} vs {b:?} vs {c:?}"),
+        }
+    }
+    drop((text, bin, bin_crc));
+    server.shutdown();
+}
+
+/// Read everything the server sends until EOF or timeout.
+fn drain(stream: &mut TcpStream) -> Vec<u8> {
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => out.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    out
+}
+
+/// Decode exactly one complete frame from the front of `buf`.
+fn first_frame(buf: &[u8]) -> (u8, Vec<u8>) {
+    let (op, payload, _) = try_frame(buf, false)
+        .expect("server reply must be well-framed")
+        .expect("server reply must be complete");
+    (op, payload)
+}
+
+#[test]
+fn oversized_length_prefix_gets_a_typed_reject_and_a_close() {
+    let (_svc, server) = start(16);
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    raw.write_all(&[MAGIC_BINARY]).unwrap();
+    let huge = (MAX_FRAME_LEN as u32) + 1;
+    raw.write_all(&huge.to_le_bytes()).unwrap();
+    raw.write_all(b"garbage-that-should-never-be-read").unwrap();
+
+    let reply = drain(&mut raw);
+    let (op, payload) = first_frame(&reply);
+    match Response::decode_binary(op, &payload) {
+        Err(e) => assert_eq!(e.code, ErrCode::BadFrame, "oversized frame must reject as {e:?}"),
+        Ok(r) => panic!("oversized frame got a success response {r:?}"),
+    }
+    // drain() hit EOF, so the server closed the unresyncable connection.
+
+    // The server is still fully functional for new connections.
+    let mut c = Client::connect_binary(&server.addr()).unwrap();
+    assert!(c.call(&Request::Lookup { key: 9 }).is_ok());
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_opcode_rejects_but_the_connection_survives() {
+    let (_svc, server) = start(16);
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    raw.write_all(&[MAGIC_BINARY]).unwrap();
+    // Well-framed, meaningless opcode: a parse-level reject, not a
+    // framing violation — the connection must stay open.
+    raw.write_all(&encode_frame(0x7A, b"x", false)).unwrap();
+    // Pipeline a valid request behind it to prove resync.
+    raw.write_all(&Request::Lookup { key: 3 }.encode_binary(false)).unwrap();
+
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut frames = Vec::new();
+    while frames.len() < 2 {
+        let n = raw.read(&mut chunk).expect("server must answer both frames");
+        assert!(n > 0, "server closed a connection it should have kept");
+        buf.extend_from_slice(&chunk[..n]);
+        while let Some((op, payload, consumed)) = try_frame(&buf, false).unwrap() {
+            buf.drain(..consumed);
+            frames.push((op, payload));
+        }
+    }
+    match Response::decode_binary(frames[0].0, &frames[0].1) {
+        Err(e) => assert_eq!(e.code, ErrCode::BadFrame, "unknown opcode must reject as {e:?}"),
+        Ok(r) => panic!("unknown opcode got a success response {r:?}"),
+    }
+    match Response::decode_binary(frames[1].0, &frames[1].1) {
+        Ok(Response::Bucket { .. }) => {}
+        other => panic!("valid request after a reject must still answer, got {other:?}"),
+    }
+    drop(raw);
+    server.shutdown();
+}
+
+#[test]
+fn torn_mid_frame_disconnects_leave_the_worker_pool_healthy() {
+    let (_svc, server) = start(64);
+    // A wave of connections that each die mid-frame: magic, a length
+    // prefix promising more than they send, then an abrupt close.
+    for i in 0..16u32 {
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(&[MAGIC_BINARY]).unwrap();
+        raw.write_all(&64u32.to_le_bytes()).unwrap();
+        raw.write_all(&i.to_le_bytes()).unwrap();
+        drop(raw);
+    }
+    // A second wave that die mid-length-prefix.
+    for _ in 0..16 {
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(&[MAGIC_BINARY, 0x10]).unwrap();
+        drop(raw);
+    }
+    // No worker may be stuck waiting on those torn frames: a normal
+    // client gets 100 prompt answers.
+    let mut c = Client::connect_binary(&server.addr()).unwrap();
+    for key in 0..100 {
+        match c.call(&Request::Lookup { key }) {
+            Ok(Response::Bucket { .. }) => {}
+            other => panic!("lookup {key} failed after torn-frame wave: {other:?}"),
+        }
+    }
+    drop(c);
+    let remaining = server.shutdown();
+    assert_eq!(remaining, 0, "torn connections must not linger past shutdown drain");
+}

@@ -42,6 +42,7 @@ def main():
     ap.add_argument("--weighted", help="BENCH_weighted.json from this run (optional)")
     ap.add_argument("--wal", help="BENCH_wal.json from this run (optional)")
     ap.add_argument("--obs", help="BENCH_obs.json from this run (optional)")
+    ap.add_argument("--conn", help="BENCH_conn.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
@@ -148,6 +149,34 @@ def main():
             float(obs["obs_route_overhead_pct"]),
             baseline["obs_route_overhead_pct_max"],
         )
+
+    if args.conn:
+        conn = load(args.conn)
+        # The binary codec strips line rendering/parsing from the hot
+        # path; a single connection must clear the same kind of floor
+        # the text protocol does.
+        gate(
+            "conn binary lookup ops/s (1 conn)",
+            float(conn["conn_bin_lookup_ops_s"]),
+            baseline["conn_bin_lookup_ops_s"],
+        )
+        # The event-loop contract: 1k+ open connections served open-loop
+        # at the target rate by a bounded worker pool.
+        gate(
+            "conn 1k-connection open-loop ops/s",
+            float(conn["conn_1k_ops_s"]),
+            baseline["conn_1k_ops_s"],
+        )
+        # Tail ceiling in absolute microseconds: a stalled worker pool
+        # or a lost-wakeup bug shows up as a p99.9 cliff, not jitter.
+        gate_ceiling(
+            "conn 1k-connection p99.9 us (ceiling)",
+            float(conn["conn_p999_us"]),
+            baseline["conn_p999_us_max"],
+        )
+        ratio = conn.get("bin_vs_text")
+        if ratio is not None:
+            print(f"binary vs text single-conn LOOKUP: {ratio}x (informational)")
 
     width = max(len(c[0]) for c in checks)
 

@@ -31,6 +31,7 @@ REFERENCES = {
     "BENCH_migration.json": ["admin_ops_s_min", "drain_keys_per_s_min"],
     "BENCH_weighted.json": ["lookup_ops_s_min", "balance_err_max"],
     "BENCH_wal.json": ["wal_batch_puts_per_s", "wal_osonly_puts_per_s"],
+    "BENCH_conn.json": ["conn_bin_lookup_ops_s", "conn_1k_ops_s", "conn_p999_us"],
 }
 
 # (baseline key, source file, gate figure key) for --ratchet.
@@ -40,6 +41,8 @@ RATCHETS = [
     ("weighted_lookup_ops_s", "BENCH_weighted.json", "lookup_ops_s_min"),
     ("wal_batch_puts_per_s", "BENCH_wal.json", "wal_batch_puts_per_s"),
     ("wal_osonly_puts_per_s", "BENCH_wal.json", "wal_osonly_puts_per_s"),
+    ("conn_bin_lookup_ops_s", "BENCH_conn.json", "conn_bin_lookup_ops_s"),
+    ("conn_1k_ops_s", "BENCH_conn.json", "conn_1k_ops_s"),
 ]
 
 
