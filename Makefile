@@ -50,11 +50,12 @@ perf-smoke:
 	cargo bench --bench bench_wal
 	cargo bench --bench bench_obs
 	cargo bench --bench bench_conn
+	cargo bench --bench bench_hotset
 	python3 scripts/perf_compare.py --current BENCH_router_scaling.json \
 	  --loadgen BENCH_loadgen_smoke.json --migration BENCH_migration.json \
 	  --weighted BENCH_weighted.json --wal BENCH_wal.json \
 	  --obs BENCH_obs.json --conn BENCH_conn.json \
-	  --baseline ci/perf-baseline.json
+	  --hotset BENCH_hotset.json --baseline ci/perf-baseline.json
 
 # Mirror of the ci.yml `conn-smoke` step: 1024 open-loop binary
 # connections (8 workers x 128 conns) against the event-driven

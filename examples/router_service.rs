@@ -11,8 +11,25 @@
 
 use memento::coordinator::router::Router;
 use memento::coordinator::service::Service;
-use memento::netserver::Client;
+use memento::netserver::{Client, ClientError};
+use memento::proto::Request;
 use std::time::{Duration, Instant};
+
+/// One text-protocol request through the typed client API
+/// (`Client::call`); the response — or typed error — is rendered back
+/// to its wire line so output stays line-oriented. Replaces the
+/// deprecated raw-line `Client::request` shim (DESIGN.md §13).
+fn req(c: &mut Client, line: &str) -> String {
+    let parsed = match Request::parse_text(line) {
+        Ok(r) => r,
+        Err(e) => return e.render_text(),
+    };
+    match c.call(&parsed) {
+        Ok(resp) => resp.render_text(),
+        Err(ClientError::Proto(e)) => e.render_text(),
+        Err(ClientError::Io(e)) => panic!("transport failure on {line:?}: {e}"),
+    }
+}
 
 fn main() {
     let router = Router::new("memento", 16, 160, None).expect("router");
@@ -28,7 +45,7 @@ fn main() {
                 let mut c = Client::connect(&addr).unwrap();
                 let mut ok = 0u32;
                 for i in 0..2_000 {
-                    let r = c.request(&format!("PUT tenant{t}:obj{i} payload-{t}-{i}")).unwrap();
+                    let r = req(&mut c, &format!("PUT tenant{t}:obj{i} payload-{t}-{i}"));
                     assert!(r.starts_with("OK"), "{r}");
                     ok += 1;
                 }
@@ -42,12 +59,12 @@ fn main() {
         let mut c = Client::connect(&addr).unwrap();
         std::thread::sleep(Duration::from_millis(10));
         for bucket in [3u32, 11, 7] {
-            let r = c.request(&format!("KILL {bucket}")).unwrap();
+            let r = req(&mut c, &format!("KILL {bucket}"));
             println!("  chaos: {r}");
             std::thread::sleep(Duration::from_millis(15));
         }
         for _ in 0..3 {
-            let r = c.request("ADD").unwrap();
+            let r = req(&mut c, "ADD");
             println!("  chaos: {r}");
             std::thread::sleep(Duration::from_millis(10));
         }
@@ -68,14 +85,14 @@ fn main() {
     let mut verified = 0u32;
     for t in 0..6 {
         for i in (0..2_000).step_by(7) {
-            let r = c.request(&format!("GET tenant{t}:obj{i}")).unwrap();
+            let r = req(&mut c, &format!("GET tenant{t}:obj{i}"));
             assert!(r.contains(&format!("payload-{t}-{i}")), "lost tenant{t}:obj{i}: {r}");
             verified += 1;
         }
     }
     println!("verified {verified} sampled records post-chaos — zero loss");
-    println!("{}", c.request("STATS").unwrap());
-    println!("{}", c.request("EPOCH").unwrap());
+    println!("{}", req(&mut c, "STATS"));
+    println!("{}", req(&mut c, "EPOCH"));
     server.shutdown();
     println!("router_service OK");
 }

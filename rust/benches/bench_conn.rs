@@ -61,8 +61,11 @@ fn single_conn_cell(binary: bool, secs: f64) -> f64 {
             if binary {
                 client.call(&Request::Lookup { key }).expect("binary lookup");
             } else {
-                let resp = client.request(&format!("LOOKUP {key}")).expect("text lookup");
-                assert!(resp.starts_with("BUCKET "), "unexpected response {resp}");
+                let resp = client.call(&Request::Lookup { key }).expect("text lookup");
+                assert!(
+                    matches!(resp, memento::proto::Response::Bucket { .. }),
+                    "unexpected response {resp:?}"
+                );
             }
             key = key.wrapping_mul(6364136223846793005).wrapping_add(1);
         }

@@ -1,0 +1,286 @@
+//! Hot-key tier smoke bench — the measurement behind CI's perf-smoke
+//! `--hotset` gate and `BENCH_hotset.json`.
+//!
+//! Cells (all in-process `Service::handle`, the transport-free view of
+//! the GET path — the cache sits between route and storage, so the
+//! loopback stack would only dilute the effect being measured):
+//!
+//! * **cached vs uncached GET** under Zipf s ∈ {0.99, 1.2} and a
+//!   16-key/90% hot-set shape, multi-threaded. The cached service is
+//!   the default construction; the uncached baseline is
+//!   `Service::with_options(..., None)`. The headline figure is the
+//!   s=1.2 cached cell (`hotset_get_ops_s`) plus its hit rate;
+//!   speedups are reported per shape.
+//! * **churn staleness** — writer threads do PUT-then-GET on keys they
+//!   own and reader threads re-read constant preloaded keys, while an
+//!   admin thread cycles KILL/ADD epoch bumps (replication=2). Any
+//!   read that returns something other than the owner's last acked
+//!   write is a stale read; the gate ceiling for
+//!   `hotset_stale_reads` is **0**.
+//!
+//! Emits `BENCH_hotset.json` at the workspace root (override with
+//! `MEMENTO_BENCH_JSON`; cell seconds with `MEMENTO_HOTSET_SECS`, key
+//! count with `MEMENTO_HOTSET_KEYS`, threads with
+//! `MEMENTO_HOTSET_THREADS`). CI compares the JSON against
+//! `ci/perf-baseline.json` floors via `scripts/perf_compare.py
+//! --hotset`.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::hashing::prng::{Rng64, Xoshiro256};
+use memento::loadgen::ZipfTable;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Key-rank distribution for a GET cell.
+#[derive(Clone)]
+enum Shape {
+    Zipf(Arc<ZipfTable>),
+    /// `p` of the draws hit one of the first `hot` ranks, the rest are
+    /// uniform over all `n` — the classic flash-crowd shape.
+    Hot { hot: u64, p: f64, n: u64 },
+}
+
+impl Shape {
+    fn draw(&self, rng: &mut Xoshiro256) -> u64 {
+        match self {
+            Shape::Zipf(t) => t.sample(rng),
+            Shape::Hot { hot, p, n } => {
+                if rng.next_f64() < *p {
+                    rng.next_u64() % hot
+                } else {
+                    rng.next_u64() % n
+                }
+            }
+        }
+    }
+}
+
+fn fresh_service(keys: usize, cached: bool) -> Arc<Service> {
+    let router = Router::new("memento", 16, 160, None).expect("router");
+    let svc = if cached {
+        Service::with_replicas(router, 1)
+    } else {
+        Service::with_options(router, 1, Default::default(), None)
+    };
+    for i in 0..keys {
+        let r = svc.handle(&format!("PUT hk{i} val{i}"));
+        assert!(r.starts_with("OK"), "preload: {r}");
+    }
+    svc
+}
+
+/// Multi-threaded GET throughput for one (service, shape) cell; also
+/// returns the cache hit rate over the cell (1.0-denominator-safe, 0
+/// on an uncached service).
+fn get_cell(svc: &Arc<Service>, shape: &Shape, threads: usize, secs: f64) -> (f64, f64) {
+    let (h0, m0) = match &svc.cache {
+        Some(c) => {
+            let (h, m, _) = c.op_counts();
+            (h, m)
+        }
+        None => (0, 0),
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let workers: Vec<_> = (0..threads)
+        .map(|t| {
+            let svc = svc.clone();
+            let shape = shape.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(0xB0B5_1DE5 ^ ((t as u64) << 17));
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    for _ in 0..128 {
+                        let rank = shape.draw(&mut rng);
+                        let r = svc.handle(&format!("GET hk{rank}"));
+                        debug_assert!(r.starts_with("VALUE"), "{r}");
+                        std::hint::black_box(&r);
+                    }
+                    ops += 128;
+                }
+                ops
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Relaxed);
+    let ops: u64 = workers.into_iter().map(|w| w.join().expect("worker")).sum();
+    let tput = ops as f64 / start.elapsed().as_secs_f64();
+    let hit_rate = match &svc.cache {
+        Some(c) => {
+            let (h, m, _) = c.op_counts();
+            let (dh, dm) = (h - h0, m - m0);
+            dh as f64 / ((dh + dm).max(1)) as f64
+        }
+        None => 0.0,
+    };
+    (tput, hit_rate)
+}
+
+/// Freshness under churn: every read is checked against the last value
+/// its owner acked (writers) or the preloaded constant (readers) while
+/// KILL/ADD bumps the epoch. Returns (ops/s, stale reads, epoch bumps).
+fn churn_cell(secs: f64) -> (f64, u64, u64) {
+    let router = Router::new("memento", 12, 120, None).expect("router");
+    let svc = Service::with_replicas(router, 2);
+    const OWNED: usize = 256;
+    const STABLE: usize = 512;
+    for j in 0..STABLE {
+        let r = svc.handle(&format!("PUT stable{j} sv{j}"));
+        assert!(r.starts_with("OK"), "{r}");
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let stale = Arc::new(AtomicU64::new(0));
+    let start = Instant::now();
+
+    let writers: Vec<_> = (0..4usize)
+        .map(|t| {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            let stale = stale.clone();
+            std::thread::spawn(move || {
+                let mut ops = 0u64;
+                let mut ver = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    ver += 1;
+                    for i in 0..OWNED {
+                        let r = svc.handle(&format!("PUT w{t}k{i} v{ver}"));
+                        assert!(r.starts_with("OK"), "{r}");
+                        let r = svc.handle(&format!("GET w{t}k{i}"));
+                        // This thread is the key's only writer: anything
+                        // but the version it just acked is a stale read.
+                        if !r.ends_with(&format!(" v{ver}")) {
+                            stale.fetch_add(1, Ordering::Relaxed);
+                        }
+                        ops += 2;
+                    }
+                }
+                ops
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..2usize)
+        .map(|t| {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            let stale = stale.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(0xFEED ^ t as u64);
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let j = rng.next_u64() as usize % STABLE;
+                    let r = svc.handle(&format!("GET stable{j}"));
+                    if !r.ends_with(&format!(" sv{j}")) {
+                        stale.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ops += 1;
+                }
+                ops
+            })
+        })
+        .collect();
+    let admin = {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut bumps = 0u64;
+            let mut bucket = 1u32;
+            while !stop.load(Ordering::Relaxed) {
+                let r = svc.handle(&format!("KILL {bucket}"));
+                assert!(r.starts_with("KILLED"), "{r}");
+                std::thread::sleep(Duration::from_millis(20));
+                let r = svc.handle("ADD");
+                assert!(r.starts_with("ADDED"), "{r}");
+                bumps += 2;
+                bucket = 1 + (bucket + 1) % 10;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            bumps
+        })
+    };
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Relaxed);
+    let mut ops: u64 = writers.into_iter().map(|w| w.join().expect("writer")).sum();
+    ops += readers.into_iter().map(|r| r.join().expect("reader")).sum::<u64>();
+    let bumps = admin.join().expect("admin");
+    (ops as f64 / start.elapsed().as_secs_f64(), stale.load(Ordering::Relaxed), bumps)
+}
+
+fn main() {
+    let secs = env_f64("MEMENTO_HOTSET_SECS", 1.0);
+    let keys = env_usize("MEMENTO_HOTSET_KEYS", 50_000);
+    let threads = env_usize("MEMENTO_HOTSET_THREADS", 8);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("hot-set smoke: {cores} cores, {threads} threads, {keys} keys, {secs}s per cell\n");
+
+    let cached = fresh_service(keys, true);
+    let uncached = fresh_service(keys, false);
+    assert!(cached.cache.is_some() && uncached.cache.is_none());
+
+    let shapes: Vec<(&str, Shape)> = vec![
+        ("zipf s=0.99", Shape::Zipf(Arc::new(ZipfTable::new(keys as u64, 0.99)))),
+        ("zipf s=1.20", Shape::Zipf(Arc::new(ZipfTable::new(keys as u64, 1.2)))),
+        ("hot16 p=0.9", Shape::Hot { hot: 16, p: 0.9, n: keys as u64 }),
+    ];
+    let mut rows = Vec::new();
+    for (name, shape) in &shapes {
+        let (base, _) = get_cell(&uncached, shape, threads, secs);
+        let (fast, hit_rate) = get_cell(&cached, shape, threads, secs);
+        let speedup = fast / base.max(1.0);
+        println!(
+            "{name}: cached {fast:>10.0} ops/s (hit rate {hit_rate:.3}), \
+             uncached {base:>10.0} ops/s — {speedup:.2}x"
+        );
+        rows.push((*name, base, fast, hit_rate, speedup));
+    }
+    let (_, base12, fast12, hit12, speed12) = rows[1];
+    let (_, base099, fast099, _hit099, speed099) = rows[0];
+    let (_, basehot, fasthot, _hithot, speedhot) = rows[2];
+
+    let (churn_ops, stale, bumps) = churn_cell(secs.max(1.0) * 2.0);
+    println!(
+        "\nchurn cell: {churn_ops:.0} ops/s across {bumps} epoch bumps, {stale} stale reads"
+    );
+    assert_eq!(stale, 0, "the cache served a stale read under churn");
+    assert!(bumps >= 2, "the admin thread must drive epoch bumps");
+
+    let json = format!(
+        "{{\n  \"bench\": \"hotset\",\n  \"cores\": {cores},\n  \"cell_secs\": {secs},\n  \
+         \"keys\": {keys},\n  \"threads\": {threads},\n  \
+         \"hotset_get_ops_s\": {fast12:.1},\n  \
+         \"hotset_uncached_ops_s\": {base12:.1},\n  \
+         \"hotset_speedup_1_2\": {speed12:.2},\n  \
+         \"hotset_hit_rate\": {hit12:.4},\n  \
+         \"hotset_cached_ops_s_099\": {fast099:.1},\n  \
+         \"hotset_uncached_ops_s_099\": {base099:.1},\n  \
+         \"hotset_speedup_099\": {speed099:.2},\n  \
+         \"hotset_hot16_cached_ops_s\": {fasthot:.1},\n  \
+         \"hotset_hot16_uncached_ops_s\": {basehot:.1},\n  \
+         \"hotset_hot16_speedup\": {speedhot:.2},\n  \
+         \"hotset_churn_ops_s\": {churn_ops:.1},\n  \
+         \"hotset_epoch_bumps\": {bumps},\n  \
+         \"hotset_stale_reads\": {stale}\n}}\n"
+    );
+    // Cargo runs bench binaries with CWD = the package root (rust/); the
+    // committed reference and the CI gate live at the workspace root.
+    let path = std::env::var("MEMENTO_BENCH_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_hotset.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => {
+            eprintln!("[write {path} failed: {e}]");
+            std::process::exit(1);
+        }
+    }
+}

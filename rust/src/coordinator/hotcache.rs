@@ -1,0 +1,648 @@
+//! `hotcache` — the hot-key read tier: a sharded, fixed-capacity cache
+//! in front of the route + storage GET path, with epoch-validated
+//! entries and single-flight miss coalescing (DESIGN.md §14).
+//!
+//! Under the Zipf/hot-set workloads loadgen generates, a handful of keys
+//! take most of the read traffic, and every one of those GETs pays the
+//! full route + 16-way storage shard lock round trip. This tier answers
+//! repeat reads from a read-locked map probe instead. Three rules keep
+//! it correct without TTLs or cross-thread bookkeeping:
+//!
+//! * **Epoch validity.** Every entry carries the router epoch it was
+//!   filled at; a hit is served only if that epoch equals the caller's
+//!   current [`crate::coordinator::router::Router::snapshot`] epoch.
+//!   Epochs are monotone and never reused, so a KILL/ADD/SETW/migration
+//!   publish invalidates every cached entry *for free* — stale-epoch
+//!   entries simply never hit again and age out under CLOCK.
+//! * **Write-through invalidation.** A PUT removes the key's entry and
+//!   bumps the owning shard's generation counter inside the same write
+//!   lock, so an in-flight fill that read storage *before* the PUT can
+//!   never install the pre-PUT value afterwards (the fill re-checks the
+//!   generation under the write lock and aborts on mismatch).
+//! * **Single flight.** N concurrent misses on one key collapse into one
+//!   storage read: the first becomes the leader, the rest park on a
+//!   per-key in-flight slot and reuse the leader's result. A follower
+//!   whose join-time generation differs from the flight's performs its
+//!   own read instead — a GET that starts after a PUT's ack must never
+//!   consume a pre-PUT value published by an older leader.
+//!
+//! Values never change during migration (records relocate verbatim), so
+//! a `Found` value cached from any read path — including the migration
+//! failover path — is safe to serve for as long as its epoch matches.
+//! `Absent` results are never cached: a negative entry could mask a
+//! replica or migration install that no epoch bump announces.
+
+use crate::coordinator::membership::NodeId;
+use crate::metrics::{Counter, MetricSpec, ShardedCounter};
+use crate::sync::{lock_recover, read_recover, write_recover};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
+
+/// Sizing knobs for a [`HotCache`].
+#[derive(Debug, Clone, Copy)]
+pub struct HotCacheConfig {
+    /// Target total entry count across all shards. Rounded up so each
+    /// shard holds a power-of-two slot array (CLOCK hand arithmetic is
+    /// a mask).
+    pub capacity: usize,
+    /// Shard count (power of two). Hits take a per-shard *read* lock,
+    /// so concurrent readers of one hot key scale across threads; more
+    /// shards only reduce fill/invalidate write contention.
+    pub shards: usize,
+}
+
+impl Default for HotCacheConfig {
+    fn default() -> Self {
+        Self { capacity: 4096, shards: 16 }
+    }
+}
+
+/// The result of one storage read, as the cache sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Loaded {
+    /// The key exists on `NodeId` with this value (cacheable).
+    Found(NodeId, Arc<str>),
+    /// The key does not exist; `NodeId` is the primary that was asked
+    /// (never cached — see the module docs on negative entries).
+    Absent(NodeId),
+}
+
+/// One cached entry. `referenced` is the CLOCK second-chance bit, set
+/// under the shard *read* lock on every hit (an `AtomicBool` store, so
+/// hits never upgrade to the write lock).
+#[derive(Debug)]
+struct Slot {
+    key: u64,
+    epoch: u64,
+    node: NodeId,
+    value: Arc<str>,
+    referenced: AtomicBool,
+}
+
+/// The lock-guarded face of one shard: the slot array + index, the
+/// CLOCK hand, and the generation counter that serializes fills against
+/// invalidations (both hold the write lock, so the pair
+/// {check gen, insert} / {bump gen, remove} is atomic).
+#[derive(Debug)]
+struct ShardState {
+    slots: Vec<Option<Slot>>,
+    index: HashMap<u64, usize>,
+    hand: usize,
+    live: usize,
+    gen: u64,
+}
+
+/// A parked miss: the leader publishes its result here and wakes the
+/// followers. `gen0` is the shard generation the leader observed before
+/// reading storage — followers that join at a later generation must not
+/// consume the (possibly pre-PUT) result.
+#[derive(Debug)]
+struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+    gen0: u64,
+}
+
+#[derive(Debug)]
+enum FlightState {
+    Pending,
+    Done(Loaded),
+    /// The leader panicked or unwound without publishing; followers
+    /// fall back to their own storage read.
+    Failed,
+}
+
+#[derive(Debug)]
+struct Shard {
+    state: RwLock<ShardState>,
+    /// In-flight loads by key. Tiny map (one entry per concurrently
+    /// missing key in this shard), guarded separately from `state` so
+    /// parked followers never hold the cache lock.
+    flights: Mutex<HashMap<u64, Arc<Flight>>>,
+}
+
+impl Shard {
+    fn new(slots_per_shard: usize) -> Self {
+        Self {
+            state: RwLock::new(ShardState {
+                slots: (0..slots_per_shard).map(|_| None).collect(),
+                index: HashMap::new(),
+                hand: 0,
+                live: 0,
+                gen: 0,
+            }),
+            flights: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+/// Publishes the leader's flight outcome exactly once — on the success
+/// path via [`FlightGuard::publish`], or as `Failed` from `Drop` if the
+/// loader panics, so followers are never stranded on the condvar.
+struct FlightGuard<'a> {
+    shard: &'a Shard,
+    key: u64,
+    flight: Arc<Flight>,
+    done: bool,
+}
+
+impl FlightGuard<'_> {
+    fn publish(&mut self, result: Loaded) {
+        self.resolve(FlightState::Done(result));
+    }
+
+    fn resolve(&mut self, state: FlightState) {
+        *lock_recover(&self.flight.state) = state;
+        self.flight.cv.notify_all();
+        // Remove *after* publishing (and after the caller's cache fill):
+        // a thread that misses the flight map sees the filled cache on
+        // its leader re-probe instead of issuing a second storage read.
+        lock_recover(&self.shard.flights).remove(&self.key);
+        self.done = true;
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.resolve(FlightState::Failed);
+        }
+    }
+}
+
+/// The hot-key read tier. See the module docs for the validity rules.
+#[derive(Debug)]
+pub struct HotCache {
+    shards: Vec<Shard>,
+    /// Cache hits served (epoch matched). Striped: this ticks on the
+    /// read-locked hot path.
+    hits: ShardedCounter,
+    /// GETs that went to storage (cold key, stale epoch, coalesced wait,
+    /// or generation-bumped fallback). `hits + misses` equals the GETs
+    /// that entered the cache path.
+    misses: ShardedCounter,
+    /// Misses that reused a leader's storage read instead of their own.
+    coalesced: Counter,
+    /// Entries evicted by the CLOCK hand to make room.
+    evictions: Counter,
+    /// Entries removed by write-through invalidation (PUT on a cached
+    /// key).
+    invalidations: Counter,
+}
+
+impl HotCache {
+    /// Build a cache with `cfg.shards` shards of
+    /// `next_power_of_two(capacity / shards)` slots each.
+    pub fn new(cfg: HotCacheConfig) -> Self {
+        assert!(cfg.shards.is_power_of_two(), "shard count must be a power of two");
+        let per_shard = (cfg.capacity / cfg.shards).max(4).next_power_of_two();
+        Self {
+            shards: (0..cfg.shards).map(|_| Shard::new(per_shard)).collect(),
+            hits: ShardedCounter::new(),
+            misses: ShardedCounter::new(),
+            coalesced: Counter::new(),
+            evictions: Counter::new(),
+            invalidations: Counter::new(),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Shard {
+        let i = crate::hashing::mix::splitmix64_mix(key) as usize & (self.shards.len() - 1);
+        &self.shards[i]
+    }
+
+    /// Look the key up under the shard read lock. A hit requires the
+    /// entry's fill epoch to equal `epoch` (the caller's current router
+    /// epoch); anything else is a miss and the caller proceeds to
+    /// [`HotCache::load_coalesced`].
+    pub fn probe(&self, key: u64, epoch: u64) -> Option<(NodeId, Arc<str>)> {
+        let shard = self.shard(key);
+        let st = read_recover(&shard.state);
+        if let Some(&i) = st.index.get(&key) {
+            if let Some(slot) = &st.slots[i] {
+                if slot.epoch == epoch {
+                    slot.referenced.store(true, Ordering::Relaxed);
+                    self.hits.inc();
+                    return Some((slot.node, slot.value.clone()));
+                }
+            }
+        }
+        None
+    }
+
+    /// Resolve a miss with single-flight coalescing: the first caller
+    /// for `key` runs `loader` (one storage read) and fills the cache;
+    /// concurrent callers park and reuse its result. `epoch` tags the
+    /// fill — read it from the same router snapshot as the failed probe
+    /// (an epoch that has since moved on just yields an entry that never
+    /// hits, which is safe).
+    pub fn load_coalesced<F: FnOnce() -> Loaded>(
+        &self,
+        key: u64,
+        epoch: u64,
+        loader: F,
+    ) -> Loaded {
+        let shard = self.shard(key);
+        // Generation first, flight second: a PUT landing in between only
+        // makes gen0 stale, which disables the fill — never stales it.
+        let gen_now = read_recover(&shard.state).gen;
+        let (flight, is_leader) = {
+            let mut flights = lock_recover(&shard.flights);
+            match flights.get(&key) {
+                Some(f) => (f.clone(), false),
+                None => {
+                    let f = Arc::new(Flight {
+                        state: Mutex::new(FlightState::Pending),
+                        cv: Condvar::new(),
+                        gen0: gen_now,
+                    });
+                    flights.insert(key, f.clone());
+                    (f, true)
+                }
+            }
+        };
+
+        if is_leader {
+            let mut guard = FlightGuard { shard, key, flight, done: false };
+            // A prior leader may have completed between this thread's
+            // probe miss and the flight insertion above; its fill is
+            // visible before its flight removal, so a re-probe (not a
+            // second storage read) closes that race.
+            if let Some((node, value)) = self.probe(key, epoch) {
+                let loaded = Loaded::Found(node, value);
+                guard.publish(loaded.clone());
+                return loaded;
+            }
+            self.misses.inc();
+            let loaded = loader();
+            if let Loaded::Found(node, ref value) = loaded {
+                self.fill(shard, key, epoch, node, value.clone(), gen_now);
+            }
+            guard.publish(loaded.clone());
+            return loaded;
+        }
+
+        // Follower. If the shard generation moved past the leader's, a
+        // PUT was acknowledged after the leader started — this GET began
+        // after that ack, so the leader's value would be a stale read.
+        if gen_now != flight.gen0 {
+            self.misses.inc();
+            return loader();
+        }
+        let mut st = lock_recover(&flight.state);
+        loop {
+            match &*st {
+                FlightState::Pending => {
+                    st = flight.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+                FlightState::Done(loaded) => {
+                    let loaded = loaded.clone();
+                    drop(st);
+                    self.misses.inc();
+                    self.coalesced.inc();
+                    return loaded;
+                }
+                FlightState::Failed => {
+                    drop(st);
+                    self.misses.inc();
+                    return loader();
+                }
+            }
+        }
+    }
+
+    /// Install a loaded value, unless the shard generation moved since
+    /// the leader observed `gen0` (a PUT invalidated this key — or a
+    /// neighbor in the shard — mid-load; dropping the fill is the safe
+    /// side).
+    fn fill(&self, shard: &Shard, key: u64, epoch: u64, node: NodeId, value: Arc<str>, gen0: u64) {
+        let mut st = write_recover(&shard.state);
+        if st.gen != gen0 {
+            return;
+        }
+        // Cold insertion: the second-chance bit starts clear, so a key
+        // earns its lap of protection only on a repeat hit — one-shot
+        // scans cycle through the probation slot instead of flushing the
+        // established hot set.
+        let slot = Slot { key, epoch, node, value, referenced: AtomicBool::new(false) };
+        if let Some(&i) = st.index.get(&key) {
+            // Refresh in place (e.g. a stale-epoch entry for this key).
+            st.slots[i] = Some(slot);
+            return;
+        }
+        // CLOCK sweep: free slot, or the first entry whose second-chance
+        // bit is already clear. Bounded: one full lap clears every bit.
+        let mask = st.slots.len() - 1;
+        let mut i = st.hand;
+        let victim = loop {
+            let evict = match &st.slots[i] {
+                None => break i,
+                Some(s) => {
+                    if s.referenced.swap(false, Ordering::Relaxed) {
+                        None
+                    } else {
+                        Some(s.key)
+                    }
+                }
+            };
+            if let Some(k) = evict {
+                st.index.remove(&k);
+                st.live -= 1;
+                self.evictions.inc();
+                break i;
+            }
+            i = (i + 1) & mask;
+        };
+        st.slots[victim] = Some(slot);
+        st.index.insert(key, victim);
+        st.live += 1;
+        st.hand = (victim + 1) & mask;
+    }
+
+    /// Write-through invalidation: remove the key's entry and bump the
+    /// shard generation in one write-locked step, so no in-flight fill
+    /// that read storage before the write can land afterwards. Call
+    /// after the storage write, before acknowledging it.
+    pub fn invalidate(&self, key: u64) {
+        let shard = self.shard(key);
+        let mut st = write_recover(&shard.state);
+        st.gen = st.gen.wrapping_add(1);
+        if let Some(i) = st.index.remove(&key) {
+            st.slots[i] = None;
+            st.live -= 1;
+            self.invalidations.inc();
+        }
+    }
+
+    /// Live entry count across all shards (point-in-time).
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| read_recover(&s.state).live).sum()
+    }
+
+    /// `(hits, misses, coalesced)` since construction. `hits + misses`
+    /// equals the GETs that entered the cache path.
+    pub fn op_counts(&self) -> (u64, u64, u64) {
+        (self.hits.get(), self.misses.get(), self.coalesced.get())
+    }
+
+    /// Point-in-time enumeration of every cache metric — the single
+    /// source behind [`HotCache::summary`] and the registry exposition
+    /// (see [`crate::metrics::RouterMetrics::metric_specs`] for the
+    /// contract).
+    pub fn metric_specs(&self) -> Vec<MetricSpec> {
+        vec![
+            MetricSpec::counter(
+                "hits",
+                "Hot-key cache hits (entry epoch matched the router epoch).",
+                self.hits.get(),
+            ),
+            MetricSpec::counter(
+                "misses",
+                "GETs that went to storage (cold, stale epoch, or coalesced).",
+                self.misses.get(),
+            ),
+            MetricSpec::counter(
+                "coalesced",
+                "Misses that reused a concurrent leader's storage read.",
+                self.coalesced.get(),
+            ),
+            MetricSpec::counter(
+                "evictions",
+                "Entries evicted by the CLOCK hand.",
+                self.evictions.get(),
+            ),
+            MetricSpec::counter(
+                "invalidations",
+                "Entries removed by write-through invalidation.",
+                self.invalidations.get(),
+            ),
+            MetricSpec::gauge(
+                "entries",
+                "Live cached entries across all shards.",
+                self.entries() as u64,
+            ),
+        ]
+    }
+
+    /// One-line summary (the `CACHESTAT` protocol payload), generated
+    /// from [`HotCache::metric_specs`].
+    pub fn summary(&self) -> String {
+        MetricSpec::join(&self.metric_specs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+    use std::time::Duration;
+
+    fn one_shard(capacity: usize) -> HotCache {
+        HotCache::new(HotCacheConfig { capacity, shards: 1 })
+    }
+
+    fn found(node: u64, v: &str) -> Loaded {
+        Loaded::Found(NodeId(node), Arc::from(v))
+    }
+
+    #[test]
+    fn fill_then_hit_at_the_same_epoch() {
+        let c = one_shard(64);
+        assert!(c.probe(7, 0).is_none());
+        let l = c.load_coalesced(7, 0, || found(3, "v7"));
+        assert_eq!(l, found(3, "v7"));
+        let (node, value) = c.probe(7, 0).expect("filled entry must hit");
+        assert_eq!(node, NodeId(3));
+        assert_eq!(&*value, "v7");
+        let (hits, misses, coalesced) = c.op_counts();
+        assert_eq!((hits, misses, coalesced), (1, 1, 0));
+        assert_eq!(c.entries(), 1);
+    }
+
+    #[test]
+    fn an_epoch_bump_invalidates_every_entry() {
+        let c = one_shard(64);
+        for k in 0..10u64 {
+            c.load_coalesced(k, 4, || found(k, "x"));
+        }
+        for k in 0..10u64 {
+            assert!(c.probe(k, 4).is_some(), "k={k} valid at its fill epoch");
+            assert!(c.probe(k, 5).is_none(), "k={k} must not hit at a newer epoch");
+        }
+        // Refill at the new epoch reuses the slot in place.
+        c.load_coalesced(3, 5, || found(9, "y"));
+        let (node, _v) = c.probe(3, 5).unwrap();
+        assert_eq!(node, NodeId(9));
+        assert_eq!(c.entries(), 10, "refresh must not grow the cache");
+    }
+
+    #[test]
+    fn absent_results_are_never_cached() {
+        let c = one_shard(64);
+        let l = c.load_coalesced(11, 0, || Loaded::Absent(NodeId(2)));
+        assert_eq!(l, Loaded::Absent(NodeId(2)));
+        assert!(c.probe(11, 0).is_none(), "negative entries are not cached");
+        assert_eq!(c.entries(), 0);
+    }
+
+    #[test]
+    fn invalidate_removes_the_entry_and_aborts_in_flight_fills() {
+        let c = one_shard(64);
+        c.load_coalesced(1, 0, || found(5, "old"));
+        assert!(c.probe(1, 0).is_some());
+        c.invalidate(1);
+        assert!(c.probe(1, 0).is_none(), "write-through must remove the entry");
+        // A loader that races a PUT: the invalidate lands between the
+        // generation read and the fill, so the fill must be dropped.
+        let l = c.load_coalesced(1, 0, || {
+            c.invalidate(1);
+            found(5, "pre-put")
+        });
+        assert_eq!(l, found(5, "pre-put"), "the caller still gets its read");
+        assert!(c.probe(1, 0).is_none(), "a gen-bumped fill must not install");
+    }
+
+    #[test]
+    fn clock_eviction_caps_the_shard_and_spares_referenced_entries() {
+        let c = one_shard(8); // one shard, 8 slots
+        for k in 0..8u64 {
+            c.load_coalesced(k, 0, || found(k, "v"));
+        }
+        assert_eq!(c.entries(), 8);
+        // Touch key 0 so its second-chance bit is set, then overflow.
+        assert!(c.probe(0, 0).is_some());
+        for k in 100..104u64 {
+            c.load_coalesced(k, 0, || found(k, "v"));
+        }
+        assert_eq!(c.entries(), 8, "capacity is a hard cap");
+        assert!(c.probe(0, 0).is_some(), "referenced entry survives one sweep");
+        let evicted = (1..8u64).filter(|&k| c.probe(k, 0).is_none()).count();
+        assert_eq!(evicted, 4, "each overflow fill evicts exactly one entry");
+    }
+
+    #[test]
+    fn concurrent_misses_on_one_key_perform_one_load() {
+        let c = Arc::new(one_shard(64));
+        let loads = Arc::new(AtomicUsize::new(0));
+        let start = Arc::new(Barrier::new(8));
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let (c, loads, start) = (c.clone(), loads.clone(), start.clone());
+                std::thread::spawn(move || {
+                    start.wait();
+                    c.load_coalesced(42, 0, || {
+                        loads.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(20));
+                        found(1, "v42")
+                    })
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), found(1, "v42"));
+        }
+        assert_eq!(loads.load(Ordering::SeqCst), 1, "exactly one storage read");
+        let (hits, misses, _) = c.op_counts();
+        assert_eq!(hits + misses, 8, "every caller is either a hit or a miss");
+    }
+
+    #[test]
+    fn followers_at_a_newer_generation_do_their_own_read() {
+        let c = Arc::new(one_shard(64));
+        let release = Arc::new(Barrier::new(2));
+        let leader = {
+            let (c, release) = (c.clone(), release.clone());
+            std::thread::spawn(move || {
+                c.load_coalesced(7, 0, || {
+                    release.wait(); // flight is registered; let the test proceed
+                    std::thread::sleep(Duration::from_millis(30));
+                    found(1, "pre-put")
+                })
+            })
+        };
+        release.wait();
+        // A PUT acks while the leader is mid-read…
+        c.invalidate(7);
+        // …so a GET issued after that ack must not adopt the leader's
+        // (pre-PUT) result: the generation check forces a fresh read.
+        let own = Arc::new(AtomicUsize::new(0));
+        let l = {
+            let own = own.clone();
+            c.load_coalesced(7, 0, || {
+                own.fetch_add(1, Ordering::SeqCst);
+                found(1, "post-put")
+            })
+        };
+        assert_eq!(l, found(1, "post-put"));
+        assert_eq!(own.load(Ordering::SeqCst), 1, "follower must re-read");
+        assert_eq!(leader.join().unwrap(), found(1, "pre-put"));
+        // The leader's fill aborts on the generation mismatch; at most
+        // the fresh read may be installed, never the pre-PUT value.
+        if let Some((_n, v)) = c.probe(7, 0) {
+            assert_eq!(&*v, "post-put", "the pre-PUT value must never be cached");
+        }
+        let (_h, _m, coalesced) = c.op_counts();
+        assert_eq!(coalesced, 0, "a gen-mismatched follower is not a coalesced read");
+    }
+
+    #[test]
+    fn a_panicking_leader_does_not_strand_followers() {
+        let c = Arc::new(one_shard(64));
+        let release = Arc::new(Barrier::new(2));
+        let leader = {
+            let (c, release) = (c.clone(), release.clone());
+            std::thread::spawn(move || {
+                c.load_coalesced(9, 0, || -> Loaded {
+                    release.wait();
+                    std::thread::sleep(Duration::from_millis(20));
+                    panic!("storage exploded mid-read");
+                })
+            })
+        };
+        release.wait();
+        // Joins the pending flight, then recovers via its own read once
+        // the leader's guard publishes Failed.
+        let l = c.load_coalesced(9, 0, || found(2, "recovered"));
+        assert_eq!(l, found(2, "recovered"));
+        assert!(leader.join().is_err(), "the leader's panic propagates to it alone");
+        assert!(
+            lock_recover(&c.shard(9).flights).is_empty(),
+            "a failed flight must not leak"
+        );
+    }
+
+    #[test]
+    fn metric_specs_cover_the_summary_and_stay_unique() {
+        let c = one_shard(64);
+        c.load_coalesced(1, 0, || found(1, "v"));
+        c.probe(1, 0);
+        c.invalidate(1);
+        let s = c.summary();
+        for spec in c.metric_specs() {
+            assert!(
+                s.contains(&format!("{}={}", spec.name, spec.value)),
+                "summary {s:?} omits {}",
+                spec.name
+            );
+        }
+        let names: Vec<&str> = c.metric_specs().iter().map(|sp| sp.name).collect();
+        let dedup: std::collections::HashSet<&str> = names.iter().copied().collect();
+        assert_eq!(dedup.len(), names.len());
+        assert!(s.contains("hits=1"), "{s}");
+        assert!(s.contains("invalidations=1"), "{s}");
+        assert!(s.contains("entries=0"), "{s}");
+    }
+
+    #[test]
+    fn shard_selection_spreads_keys() {
+        let c = HotCache::new(HotCacheConfig { capacity: 1024, shards: 16 });
+        for k in 0..512u64 {
+            c.load_coalesced(k, 0, || found(k, "v"));
+        }
+        assert_eq!(c.entries(), 512);
+        let populated = c.shards.iter().filter(|s| read_recover(&s.state).live > 0).count();
+        assert!(populated >= 12, "512 keys must land on most of 16 shards: {populated}");
+    }
+}

@@ -35,6 +35,11 @@
 //! * [`storage`] — in-process simulated KV nodes (the cluster substrate:
 //!   data actually moves when membership changes); records are
 //!   lock-sharded by key hash so concurrent traffic contends per shard.
+//! * [`hotcache`] — the hot-key read tier: a sharded fixed-capacity
+//!   cache in front of the GET path whose entries are validated against
+//!   the router epoch (a snapshot publication is the invalidation
+//!   signal), with single-flight coalescing of concurrent misses
+//!   (DESIGN.md §14).
 //! * [`service`] — the TCP line-protocol front-end (`LOOKUP`/`PUT`/`GET`/
 //!   `KILL`/`RESTORE`/`STATS`).
 //! * [`wal`] — the durability layer: per-shard write-ahead logs with
@@ -43,6 +48,7 @@
 //!   §11).
 
 pub mod batcher;
+pub mod hotcache;
 pub mod membership;
 pub mod migration;
 pub mod rebalancer;
@@ -52,5 +58,6 @@ pub mod service;
 pub mod storage;
 pub mod wal;
 
+pub use hotcache::{HotCache, HotCacheConfig};
 pub use membership::{Membership, MembershipError, NodeId, NodeInfo, NodeSpec, NodeState};
 pub use router::{Placement, Router, SetWeightChange};

@@ -40,6 +40,12 @@
 //!                                    p99=…,p999=… …  (per-stage spans)
 //! DUMP [n]                        → DUMP <k> total=… dropped=… torn=…
 //!                                    | <event> …  (flight-recorder tail)
+//! CACHESTAT                       → CACHESTAT hits=… misses=…
+//!                                    coalesced=… evictions=…
+//!                                    invalidations=… entries=…
+//!                                    (hot-key tier counters;
+//!                                    `CACHESTAT disabled` on an
+//!                                    uncached service)
 //! EPOCH                           → EPOCH <e> WORKING <w>
 //! FSYNC                           → SYNCED files=<n>   (flush every
 //!                                    unsynced WAL file; durable mode)
@@ -76,6 +82,7 @@
 //! on the binary protocol. Placement refusals (`REFUSED`) are counted
 //! and journaled; parse-level rejects are not.
 
+use super::hotcache::{HotCache, HotCacheConfig, Loaded};
 use super::membership::{NodeId, NodeSpec};
 use super::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
 use super::rebalancer::Rebalancer;
@@ -112,6 +119,12 @@ pub struct Service {
     /// GET fails over along the replica set (reads survive failures even
     /// before migration completes).
     replicas: usize,
+    /// The hot-key read tier in front of the GET path (DESIGN.md §14):
+    /// entries are validated against the router epoch, PUTs invalidate
+    /// write-through, and concurrent misses coalesce into one storage
+    /// read. `None` on an explicitly uncached service (the baseline
+    /// `bench_hotset` measures against).
+    pub cache: Option<Arc<HotCache>>,
     /// Per-request handle latency (ns), sharded by recording thread;
     /// `STATS` merges the shards and reports percentiles. `Arc` so the
     /// metrics registry's histogram closure can read the same shards.
@@ -146,9 +159,30 @@ impl Service {
         replicas: usize,
         migration: MigrationConfig,
     ) -> Arc<Self> {
+        Self::with_options(router, replicas, migration, Some(HotCacheConfig::default()))
+    }
+
+    /// Service with an explicit hot-key cache policy: `None` disables
+    /// the tier entirely (every GET pays route + storage), which is the
+    /// uncached baseline `bench_hotset` compares against.
+    pub fn with_options(
+        router: Arc<Router>,
+        replicas: usize,
+        migration: MigrationConfig,
+        cache: Option<HotCacheConfig>,
+    ) -> Arc<Self> {
         let storage = Arc::new(StorageCluster::new());
         let migration = Migrator::spawn(router.clone(), storage.clone(), migration);
-        Self::assemble(router, replicas, storage, migration, None, Arc::new(WalMetrics::new()), None)
+        Self::assemble(
+            router,
+            replicas,
+            storage,
+            migration,
+            None,
+            Arc::new(WalMetrics::new()),
+            None,
+            cache,
+        )
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -160,7 +194,9 @@ impl Service {
         wal: Option<Arc<CoordinatorWal>>,
         wal_metrics: Arc<WalMetrics>,
         recovery: Option<RecoveryReport>,
+        cache: Option<HotCacheConfig>,
     ) -> Arc<Self> {
+        let cache = cache.map(|cfg| Arc::new(HotCache::new(cfg)));
         let rebalancer = Arc::new(Rebalancer::new(&router, 4_096, 0x7EACE));
         let latency: Arc<Vec<Mutex<Histogram>>> =
             Arc::new((0..LATENCY_SHARDS).map(|_| Mutex::new(Histogram::new())).collect());
@@ -195,6 +231,10 @@ impl Service {
             ]
         });
         reg.register_scalars("net", || crate::netserver::net_metrics().metric_specs());
+        if let Some(c) = &cache {
+            let c = c.clone();
+            reg.register_scalars("cache", move || c.metric_specs());
+        }
         {
             let lat = latency.clone();
             reg.register_histograms("service", move || {
@@ -218,6 +258,7 @@ impl Service {
             rebalancer,
             migration,
             replicas: replicas.max(1),
+            cache,
             latency,
             obs: reg,
             wal,
@@ -265,7 +306,16 @@ impl Service {
         // The initial epoch record: recovery needs a routing state even
         // if the service dies before its first admin change.
         cwal.log_epoch(&memento, &membership);
-        Ok(Self::assemble(router, replicas, storage, migration, Some(cwal), metrics, None))
+        Ok(Self::assemble(
+            router,
+            replicas,
+            storage,
+            migration,
+            Some(cwal),
+            metrics,
+            None,
+            Some(HotCacheConfig::default()),
+        ))
     }
 
     /// Rebuild a durable service from its data directory after a crash
@@ -348,6 +398,7 @@ impl Service {
             Some(cwal),
             metrics,
             Some(report.clone()),
+            Some(HotCacheConfig::default()),
         );
         Ok((svc, report))
     }
@@ -440,6 +491,50 @@ impl Service {
             }
         }
         None
+    }
+
+    /// One full uncached GET — route, storage probe, replica failover,
+    /// migration failover — reported as a [`Loaded`] so it can double as
+    /// the hot-cache miss loader (`Found` results are cacheable,
+    /// `Absent` never is).
+    fn read_uncached(&self, key: u64) -> Loaded {
+        if self.replicas == 1 {
+            // Single-copy fast path: primary, then (only if a migration
+            // is in flight) the pre-change placement.
+            let t = obs::timer(Stage::Route);
+            let (_b, node) = self.router.route(key);
+            drop(t);
+            if let Some(v) = self.storage.node(node).get(key) {
+                return Loaded::Found(node, String::from_utf8_lossy(&v).into_owned().into());
+            }
+            return match self.migration_read(key) {
+                Some((n, v)) => {
+                    Loaded::Found(n, String::from_utf8_lossy(&v).into_owned().into())
+                }
+                None => Loaded::Absent(node),
+            };
+        }
+        // Failover read along the stable draw sequence.
+        let candidates = self.read_candidates(key);
+        for node in &candidates {
+            if let Some(v) = self.storage.node(*node).get(key) {
+                return Loaded::Found(*node, String::from_utf8_lossy(&v).into_owned().into());
+            }
+        }
+        match self.migration_read(key) {
+            Some((n, v)) => Loaded::Found(n, String::from_utf8_lossy(&v).into_owned().into()),
+            None => Loaded::Absent(candidates[0]),
+        }
+    }
+
+    /// Render a [`Loaded`] as the GET wire response.
+    fn render_loaded(loaded: Loaded) -> Response {
+        match loaded {
+            Loaded::Found(node, value) => {
+                Response::Value { node: node.to_string(), value: value.to_string() }
+            }
+            Loaded::Absent(node) => Response::Missing { node: node.to_string() },
+        }
     }
 
     /// The shared tail of every admin membership change: enqueue one
@@ -555,47 +650,34 @@ impl Service {
                     self.storage.node(*node).put(*key, value.as_bytes().to_vec());
                 }
                 drop(t);
+                // Write-through invalidation: after the storage write,
+                // before the ack — a GET issued after this PUT returns
+                // can never be served a pre-PUT value from the cache.
+                if let Some(cache) = &self.cache {
+                    cache.invalidate(*key);
+                }
                 Ok(Response::Ok { node: set[0].1.to_string() })
             }
             Request::Get { key } => {
                 let key = *key;
-                if self.replicas == 1 {
-                    // Single-copy fast path: primary, then (only if a
-                    // migration is in flight) the pre-change placement.
-                    let t = obs::timer(Stage::Route);
-                    let (_b, node) = self.router.route(key);
-                    drop(t);
-                    if let Some(v) = self.storage.node(node).get(key) {
-                        return Ok(Response::Value {
-                            node: node.to_string(),
-                            value: String::from_utf8_lossy(&v).into_owned(),
-                        });
-                    }
-                    return Ok(match self.migration_read(key) {
-                        Some((n, v)) => Response::Value {
-                            node: n.to_string(),
-                            value: String::from_utf8_lossy(&v).into_owned(),
-                        },
-                        None => Response::Missing { node: node.to_string() },
+                let Some(cache) = &self.cache else {
+                    return Ok(Self::render_loaded(self.read_uncached(key)));
+                };
+                // One epoch read serves both the probe and the fill tag:
+                // an entry is valid exactly while the epoch it was
+                // filled at is still the published one.
+                let epoch = self.router.epoch();
+                let t = obs::timer(Stage::CacheLookup);
+                let hit = cache.probe(key, epoch);
+                drop(t);
+                if let Some((node, value)) = hit {
+                    return Ok(Response::Value {
+                        node: node.to_string(),
+                        value: value.to_string(),
                     });
                 }
-                // Failover read along the stable draw sequence.
-                let candidates = self.read_candidates(key);
-                for node in &candidates {
-                    if let Some(v) = self.storage.node(*node).get(key) {
-                        return Ok(Response::Value {
-                            node: node.to_string(),
-                            value: String::from_utf8_lossy(&v).into_owned(),
-                        });
-                    }
-                }
-                Ok(match self.migration_read(key) {
-                    Some((n, v)) => Response::Value {
-                        node: n.to_string(),
-                        value: String::from_utf8_lossy(&v).into_owned(),
-                    },
-                    None => Response::Missing { node: candidates[0].to_string() },
-                })
+                let loaded = cache.load_coalesced(key, epoch, || self.read_uncached(key));
+                Ok(Self::render_loaded(loaded))
             }
             Request::Kill { bucket } => {
                 // Publish the new epoch and enqueue the drain plan; the
@@ -804,6 +886,10 @@ impl Service {
                 }
             }
             Request::Stages => Ok(Response::Info(obs::stages().render_line())),
+            Request::CacheStat => Ok(Response::Info(match &self.cache {
+                Some(c) => format!("CACHESTAT {}", c.summary()),
+                None => "CACHESTAT disabled".into(),
+            })),
             Request::Dump { max } => {
                 Ok(Response::Info(obs::recorder().render_line(max.unwrap_or(32))))
             }
@@ -1311,6 +1397,48 @@ mod tests {
         assert!(dump.starts_with("DUMP "), "{dump}");
         assert!(dump.contains("node_kill"), "{dump}");
         assert!(!dump.contains('\n'), "DUMP must be one line: {dump}");
+    }
+
+    #[test]
+    fn gets_hit_the_hot_cache_and_puts_invalidate_write_through() {
+        let s = service();
+        s.handle("PUT hk hv");
+        assert!(s.handle("GET hk").contains("hv"));
+        assert!(s.handle("GET hk").contains("hv"));
+        let c = s.cache.as_ref().expect("cache is on by default");
+        let (hits, misses, _) = c.op_counts();
+        assert_eq!((hits, misses), (1, 1), "first GET fills, second hits");
+        let r = s.handle("CACHESTAT");
+        assert!(r.starts_with("CACHESTAT hits=1"), "{r}");
+        assert!(r.contains("entries=1"), "{r}");
+        // A PUT invalidates: the next GET must re-read storage and see
+        // the new value, never the cached one.
+        s.handle("PUT hk hv2");
+        let r = s.handle("GET hk");
+        assert!(r.contains("hv2"), "{r}");
+        let (_h, misses, _) = c.op_counts();
+        assert_eq!(misses, 2, "post-PUT GET is a fresh storage read");
+        // An epoch bump (admin change) invalidates every entry without
+        // touching the cache: the stale-epoch entry simply never hits.
+        assert!(s.handle("GET hk").contains("hv2"), "hit again at epoch 0");
+        s.handle("KILL 1");
+        assert!(s.handle("GET hk").contains("hv2"), "served at epoch 1");
+        let (_h, misses, _) = c.op_counts();
+        assert_eq!(misses, 3, "the epoch-1 GET must not hit the epoch-0 entry");
+        // The cache metrics are registered in the exposition.
+        let text = s.handle("METRICS");
+        assert!(text.contains("memento_cache_hits"), "{text}");
+    }
+
+    #[test]
+    fn an_uncached_service_serves_gets_and_reports_cachestat_disabled() {
+        let router = Router::new("memento", 8, 80, None).unwrap();
+        let s = Service::with_options(router, 1, MigrationConfig::default(), None);
+        assert!(s.cache.is_none());
+        s.handle("PUT uk uv");
+        assert!(s.handle("GET uk").contains("uv"));
+        assert!(s.handle("GET nothere").starts_with("MISSING"));
+        assert_eq!(s.handle("CACHESTAT"), "CACHESTAT disabled");
     }
 
     #[test]

@@ -10,10 +10,11 @@
 
 use super::prng::Rng64;
 
-/// Zipf distribution with exponent `alpha > 0` over ranks `1..=n`
-/// (returned 0-based).
+/// Zipf distribution with exponent `alpha > 0` over ranks `lo..=n`
+/// (returned 0-based; `lo` is 1 for the classic full-range sampler).
 #[derive(Debug, Clone)]
 pub struct Zipf {
+    lo: u64,
     n: u64,
     alpha: f64,
     // Precomputed constants of the rejection-inversion scheme.
@@ -23,17 +24,32 @@ pub struct Zipf {
 }
 
 impl Zipf {
-    /// Sampler over `n` ranks with exponent `alpha`.
+    /// Sampler over ranks `1..=n` with exponent `alpha`.
     pub fn new(n: u64, alpha: f64) -> Self {
-        assert!(n >= 1, "zipf needs at least one element");
-        assert!(alpha > 0.0, "zipf exponent must be positive");
-        let h_integral_x1 = h_integral(1.5, alpha) - 1.0;
-        let h_integral_num_elements = h_integral(n as f64 + 0.5, alpha);
-        let s = 2.0 - h_integral_inverse(h_integral(2.5, alpha) - h(2.0, alpha), alpha);
-        Self { n, alpha, h_integral_x1, h_integral_num_elements, s }
+        Self::new_restricted(1, n, alpha)
     }
 
-    /// Number of elements.
+    /// Sampler restricted to the rank window `lo..=n` (1-based), drawing
+    /// from the conditional distribution P(k) ∝ k^-α for k in the
+    /// window. This is the tail half of [`crate::loadgen::ZipfTable`]'s
+    /// head/tail split: the table answers the head ranks from a CDF and
+    /// delegates everything past its last tabulated rank here.
+    pub fn new_restricted(lo: u64, n: u64, alpha: f64) -> Self {
+        assert!(lo >= 1, "zipf ranks are 1-based");
+        assert!(n >= lo, "zipf needs at least one element in the window");
+        assert!(alpha > 0.0, "zipf exponent must be positive");
+        let lo_f = lo as f64;
+        let h_integral_x1 = h_integral(lo_f + 0.5, alpha) - h(lo_f, alpha);
+        let h_integral_num_elements = h_integral(n as f64 + 0.5, alpha);
+        let s = (lo_f + 1.0)
+            - h_integral_inverse(
+                h_integral(lo_f + 1.5, alpha) - h(lo_f + 1.0, alpha),
+                alpha,
+            );
+        Self { lo, n, alpha, h_integral_x1, h_integral_num_elements, s }
+    }
+
+    /// Number of elements (the top of the rank window).
     pub fn n(&self) -> u64 {
         self.n
     }
@@ -45,7 +61,7 @@ impl Zipf {
                 + rng.next_f64() * (self.h_integral_x1 - self.h_integral_num_elements);
             let x = h_integral_inverse(u, self.alpha);
             let mut k = (x + 0.5).floor();
-            k = k.clamp(1.0, self.n as f64);
+            k = k.clamp(self.lo as f64, self.n as f64);
             if k - x <= self.s
                 || u >= h_integral(k + 0.5, self.alpha) - h(k, self.alpha)
             {
@@ -53,6 +69,14 @@ impl Zipf {
             }
         }
     }
+}
+
+/// Approximate total probability weight of ranks `lo+1..=n` (the same
+/// `H(n + ½) − H(lo + ½)` integral the rejection-inversion sampler is
+/// built on), used by head/tail split samplers to weigh the tail branch
+/// against an exactly-summed head.
+pub(crate) fn tail_mass(lo: u64, n: u64, alpha: f64) -> f64 {
+    h_integral(n as f64 + 0.5, alpha) - h_integral(lo as f64 + 0.5, alpha)
 }
 
 /// H(x) = integral of x^-alpha.
@@ -136,6 +160,36 @@ mod tests {
         assert!((1.6..2.4).contains(&r01), "P0/P1 {r01}");
         let r03 = counts[0] as f64 / counts[3] as f64;
         assert!((3.0..5.0).contains(&r03), "P0/P3 {r03}");
+    }
+
+    #[test]
+    fn restricted_sampler_stays_in_its_rank_window() {
+        let z = Zipf::new_restricted(100, 1000, 1.1);
+        let mut rng = Xoshiro256::new(3);
+        let mut head = 0u32;
+        let mut deep = 0u32;
+        for _ in 0..40_000 {
+            let k = z.sample(&mut rng); // 0-based: window is 99..1000
+            assert!((99..1000).contains(&k), "rank {k} escaped the window");
+            if k < 99 + 90 {
+                head += 1;
+            }
+            if k >= 810 {
+                deep += 1;
+            }
+        }
+        // Within the window the law is still monotone decreasing: the
+        // first 90 ranks must outdraw an equally wide deep slice.
+        assert!(head > deep * 2, "head {head} vs deep {deep}");
+    }
+
+    #[test]
+    fn restricted_single_element_window_is_degenerate() {
+        let z = Zipf::new_restricted(42, 42, 1.3);
+        let mut rng = Xoshiro256::new(8);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 41);
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod workload;
 pub use churn::{ChurnAction, ChurnEvent, ChurnScenario};
 pub use report::{NodeLoad, RunReport, StageSnap, TimeSample, WorkerStats};
 pub use target::{Target, TargetFactory};
-pub use workload::{Op, Workload};
+pub use workload::{Op, Workload, ZipfTable};
 
 use crate::hashing::prng::Xoshiro256;
 use pacing::OpenLoopPacer;

@@ -9,8 +9,8 @@
 //! * [`TcpTarget`] goes through a real socket to a live
 //!   [`crate::netserver`] front-end (measures the whole stack), on
 //!   either wire protocol — text lines or binary frames
-//!   ([`tcp_binary_factory`]); binary targets parse each line into a
-//!   typed [`Request`] and render the typed [`Response`] back, so the
+//!   ([`tcp_binary_factory`]); every line is parsed into a typed
+//!   [`Request`] and the typed [`Response`] rendered back, so the
 //!   generator's line-oriented bookkeeping (including `ERR `-prefix
 //!   error counting) is protocol-agnostic;
 //! * [`FanoutTarget`] holds many connections per worker and
@@ -63,11 +63,13 @@ impl Target for InProcTarget {
     }
 }
 
-/// Issue one line over a binary-mode client: parse → typed call →
-/// render. Protocol errors (parse rejects and server `ERR` frames)
-/// come back as `ERR <CODE> <msg>` lines so the generator counts them
-/// exactly like text-protocol errors; only transport failures surface
-/// as `io::Error`.
+/// Issue one line over a client on either protocol: parse → typed call
+/// → render. Protocol errors (parse rejects and server `ERR` frames /
+/// lines) come back as `ERR <CODE> <msg>` lines so the generator counts
+/// them uniformly; only transport failures surface as `io::Error`.
+/// (This used to exist only for binary mode while text mode rode the
+/// raw-line `Client::request*` shims; those shims are deprecated —
+/// DESIGN.md §13 — and both modes now share the typed path.)
 fn call_typed(client: &mut Client, line: &str) -> std::io::Result<String> {
     let req = match Request::parse_text(line) {
         Ok(req) => req,
@@ -81,37 +83,30 @@ fn call_typed(client: &mut Client, line: &str) -> std::io::Result<String> {
 }
 
 /// Drives a live TCP front-end over one pipelined connection, on
-/// either wire protocol.
+/// either wire protocol (the mode is fixed at connect time; the typed
+/// client API covers both).
 pub struct TcpTarget {
     client: Client,
-    binary: bool,
 }
 
 impl TcpTarget {
     /// Connect to a running server on the text protocol.
     pub fn connect(addr: &SocketAddr) -> std::io::Result<Self> {
-        Ok(Self { client: Client::connect(addr)?, binary: false })
+        Ok(Self { client: Client::connect(addr)? })
     }
 
     /// Connect to a running server on the binary frame protocol.
     pub fn connect_binary(addr: &SocketAddr) -> std::io::Result<Self> {
-        Ok(Self { client: Client::connect_binary(addr)?, binary: true })
+        Ok(Self { client: Client::connect_binary(addr)? })
     }
 }
 
 impl Target for TcpTarget {
     fn call(&mut self, line: &str) -> std::io::Result<String> {
-        if self.binary {
-            call_typed(&mut self.client, line)
-        } else {
-            self.client.request(line)
-        }
+        call_typed(&mut self.client, line)
     }
 
     fn call_many(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
-        if !self.binary {
-            return self.client.request_pipelined(lines);
-        }
         // Parse every line up front; unparseable slots answer locally
         // and only the typed requests ride the pipelined batch, keeping
         // responses aligned with their request index.

@@ -13,7 +13,96 @@
 //! Orthogonally, `read_frac` splits every workload into a GET/PUT mix.
 
 use crate::hashing::prng::Rng64;
-use crate::hashing::zipf::Zipf;
+use crate::hashing::zipf::{self, Zipf};
+use std::sync::Arc;
+
+/// Head-rank budget for [`ZipfTable`]: ranks `1..=65536` get an exact
+/// precomputed CDF entry; everything deeper is sampled by the
+/// rejection-inversion tail sampler. 64Ki `f64`s is 512 KiB once per
+/// workload — shared by every worker thread via `Arc`, not per-thread.
+const ZIPF_TABLE_RANKS: u64 = 65_536;
+
+/// A Zipf(α) sampler tuned for the loadgen hot path: the head ranks —
+/// where virtually all of the probability mass of a skewed law lives —
+/// are drawn by binary search over a precomputed CDF (one `next_f64`
+/// plus ~16 comparisons, no `ln`/`exp`), and only the rare deep-tail
+/// draw falls back to the iterative rejection-inversion sampler.
+///
+/// The head CDF is exact (`Σ k^-α` summed term by term); the tail branch
+/// weight uses the same `H(·)` integral the rejection sampler is built
+/// on, so the head/tail split stays consistent with where the tail
+/// sampler puts its mass.
+#[derive(Debug)]
+pub struct ZipfTable {
+    /// `cdf[i]` = P(rank ≤ i) (0-based), normalized over the full
+    /// keyspace (head + tail mass).
+    cdf: Vec<f64>,
+    /// Conditional sampler for ranks past the table. `None` when the
+    /// table covers the whole keyspace.
+    tail: Option<Zipf>,
+    /// Total probability of landing in the head (== `cdf.last()`).
+    head_mass: f64,
+}
+
+impl ZipfTable {
+    /// Table over `0..n` keys (rank 0 hottest) with exponent `alpha`.
+    pub fn new(n: u64, alpha: f64) -> Self {
+        Self::with_head(n, alpha, ZIPF_TABLE_RANKS)
+    }
+
+    /// Table with an explicit head budget (tests shrink it to force the
+    /// tail path; production uses [`ZipfTable::new`]).
+    fn with_head(n: u64, alpha: f64, head_ranks: u64) -> Self {
+        assert!(n >= 1, "zipf needs at least one element");
+        assert!(alpha > 0.0, "zipf exponent must be positive");
+        let head = n.min(head_ranks.max(1));
+        let tail_mass = if head < n { zipf::tail_mass(head, n, alpha) } else { 0.0 };
+        let mut cdf = Vec::with_capacity(head as usize);
+        let mut acc = 0.0f64;
+        for k in 1..=head {
+            acc += (k as f64).powf(-alpha);
+        }
+        let total = acc + tail_mass;
+        let mut run = 0.0f64;
+        for k in 1..=head {
+            run += (k as f64).powf(-alpha);
+            cdf.push(run / total);
+        }
+        let tail = (head < n).then(|| Zipf::new_restricted(head + 1, n, alpha));
+        let head_mass = acc / total;
+        Self { cdf, tail, head_mass }
+    }
+
+    /// Analytic probability of the hottest key (rank 0) — what a perfect
+    /// hot-key cache's hit rate on the top-1 key converges to.
+    pub fn top1_mass(&self) -> f64 {
+        self.cdf[0]
+    }
+
+    /// Analytic probability of the top `k` ranks together.
+    pub fn head_mass(&self, k: usize) -> f64 {
+        match k {
+            0 => 0.0,
+            k if k >= self.cdf.len() => self.head_mass,
+            k => self.cdf[k - 1],
+        }
+    }
+
+    /// Draw one sample (0-based rank; 0 is the most popular).
+    pub fn sample<R: Rng64>(&self, rng: &mut R) -> u64 {
+        let r = rng.next_f64();
+        if r < self.head_mass {
+            // First index whose cumulative mass exceeds the draw.
+            return self.cdf.partition_point(|&c| c <= r) as u64;
+        }
+        match &self.tail {
+            Some(t) => t.sample(rng),
+            // r can tie head_mass on rounding even with no tail: clamp
+            // to the deepest tabulated rank.
+            None => self.cdf.len() as u64 - 1,
+        }
+    }
+}
 
 /// One generated operation, rendered to the service line protocol by
 /// [`Op::to_line`]. Keys are decimal u64 tokens, which the service takes
@@ -45,7 +134,9 @@ impl Op {
 #[derive(Debug, Clone)]
 enum KeyDist {
     Uniform,
-    Zipf(Zipf),
+    /// `Arc`-shared: every worker thread clones the `Workload`, and the
+    /// 512 KiB CDF table is built once, not once per worker.
+    Zipf(Arc<ZipfTable>),
     Hot {
         /// Fraction of traffic aimed at the hot set.
         hot_frac: f64,
@@ -81,7 +172,7 @@ impl Workload {
     pub fn zipf(keyspace: u64, alpha: f64, read_frac: f64) -> Self {
         let n = keyspace.max(1);
         Self {
-            dist: KeyDist::Zipf(Zipf::new(n, alpha)),
+            dist: KeyDist::Zipf(Arc::new(ZipfTable::new(n, alpha))),
             keyspace: n,
             read_frac: clamp01(read_frac),
         }
@@ -214,6 +305,57 @@ mod tests {
         }
         let frac = hot as f64 / 20_000.0;
         assert!((0.85..0.95).contains(&frac), "hot fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_table_top1_frequency_matches_the_analytic_mass() {
+        // The guarantee the hot-cache benchmarks lean on: the sampled
+        // top-1 frequency tracks the analytic Zipf mass, so measured hit
+        // rates can be compared against `top1_mass`/`head_mass` directly.
+        let t = ZipfTable::new(10_000, 1.2);
+        let mut rng = Xoshiro256::new(7);
+        let trials = 200_000u32;
+        let mut top1 = 0u32;
+        for _ in 0..trials {
+            if t.sample(&mut rng) == 0 {
+                top1 += 1;
+            }
+        }
+        let empirical = top1 as f64 / trials as f64;
+        let analytic = t.top1_mass();
+        let rel = ((empirical - analytic) / analytic).abs();
+        assert!(
+            rel < 0.05,
+            "top-1 frequency {empirical:.4} vs analytic {analytic:.4} (rel err {rel:.4})"
+        );
+        assert!(analytic > 0.15, "zipf(1.2) top-1 mass should be substantial: {analytic}");
+    }
+
+    #[test]
+    fn zipf_table_head_and_tail_masses_are_consistent() {
+        let t = ZipfTable::with_head(1_000, 1.0, 16);
+        // Head/tail split: the full head mass plus nothing is below 1,
+        // head_mass(k) is monotone, and sampling crosses the boundary.
+        assert!(t.head_mass(16) < 1.0, "a 1000-key space has tail mass");
+        assert!(t.head_mass(1) < t.head_mass(8));
+        assert_eq!(t.head_mass(0), 0.0);
+        let mut rng = Xoshiro256::new(13);
+        let trials = 100_000u32;
+        let mut in_head = 0u32;
+        for _ in 0..trials {
+            let k = t.sample(&mut rng);
+            assert!(k < 1_000, "sample {k} escaped the keyspace");
+            if k < 16 {
+                in_head += 1;
+            }
+        }
+        let empirical = in_head as f64 / trials as f64;
+        let analytic = t.head_mass(16);
+        let rel = ((empirical - analytic) / analytic).abs();
+        assert!(
+            rel < 0.05,
+            "head frequency {empirical:.4} vs analytic {analytic:.4} (rel err {rel:.4})"
+        );
     }
 
     #[test]

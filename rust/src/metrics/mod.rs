@@ -50,7 +50,7 @@ impl MetricSpec {
         Self { name, help, kind: MetricKind::Gauge, value }
     }
 
-    fn join(specs: &[MetricSpec]) -> String {
+    pub(crate) fn join(specs: &[MetricSpec]) -> String {
         let parts: Vec<String> =
             specs.iter().map(|s| format!("{}={}", s.name, s.value)).collect();
         parts.join(" ")

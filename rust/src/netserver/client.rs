@@ -267,11 +267,17 @@ impl Client {
         }
     }
 
-    // -- line-oriented shims (kept for existing callers) --------------------
+    // -- line-oriented shims (deprecated; removal tracked in DESIGN.md
+    // §13) ------------------------------------------------------------------
 
     /// Send one request line, read one response line. **Deprecated
     /// shim** (text mode only) — prefer [`Client::call`], which returns
     /// typed responses and typed errors on both protocols.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use Client::call — typed responses/errors on both protocols \
+                (removal tracked in DESIGN.md §13)"
+    )]
     pub fn request(&mut self, line: &str) -> io::Result<String> {
         self.check_text()?;
         self.send_text_line(line)?;
@@ -285,6 +291,11 @@ impl Client {
     /// `METRICS` exposition, whose body is many lines ended by `# EOF`.
     /// **Deprecated shim** (text mode only) — prefer [`Client::call`],
     /// which picks the terminator from the request.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use Client::call — it picks the terminator from the request \
+                (removal tracked in DESIGN.md §13)"
+    )]
     pub fn request_multiline(&mut self, line: &str, terminator: &str) -> io::Result<String> {
         self.check_text()?;
         self.send_text_line(line)?;
@@ -294,6 +305,11 @@ impl Client {
     /// Pipelined raw-line batch, chunked like [`Client::call_many`].
     /// **Deprecated shim** (text mode only) — prefer
     /// [`Client::call_many`], which returns typed per-request results.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use Client::call_many — typed per-request results \
+                (removal tracked in DESIGN.md §13)"
+    )]
     pub fn request_pipelined(&mut self, lines: &[String]) -> io::Result<Vec<String>> {
         self.check_text()?;
         let mut out = Vec::with_capacity(lines.len());
@@ -319,6 +335,9 @@ mod tests {
     use super::*;
 
     #[test]
+    // The deprecated shims' mode guard is still under test until the
+    // shims are removed (DESIGN.md §13).
+    #[allow(deprecated)]
     fn text_api_is_rejected_on_a_binary_client() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();

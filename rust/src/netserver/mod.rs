@@ -1002,6 +1002,10 @@ mod tests {
     }
 
     #[test]
+    // Raw-line echo handlers sit below the typed protocol, so the
+    // deprecated line shims are the right instrument here — they stay
+    // in use until the shims are removed (DESIGN.md §13).
+    #[allow(deprecated)]
     fn request_response_roundtrip() {
         let server = echo_server();
         let mut c = Client::connect(&server.addr()).unwrap();
@@ -1012,6 +1016,9 @@ mod tests {
     }
 
     #[test]
+    // Raw-line echo handler: the deprecated shims are the instrument
+    // (DESIGN.md §13).
+    #[allow(deprecated)]
     fn concurrent_clients() {
         let server = echo_server();
         let addr = server.addr();
@@ -1033,6 +1040,9 @@ mod tests {
     }
 
     #[test]
+    // Raw-line handler with a hand-rolled multiline shape: only the
+    // deprecated shims can speak it (DESIGN.md §13).
+    #[allow(deprecated)]
     fn multiline_responses_preserve_framing() {
         // A handler that answers EXPO with a multi-line, EOF-terminated
         // body (the METRICS shape) and everything else with one line.
@@ -1134,6 +1144,9 @@ mod tests {
     }
 
     #[test]
+    // Raw-line echo handler: the deprecated shim is the instrument
+    // (DESIGN.md §13).
+    #[allow(deprecated)]
     fn shutdown_terminates_accept_loop() {
         let server = echo_server();
         let addr = server.addr();
@@ -1219,9 +1232,9 @@ mod tests {
         let server = typed_server();
         let mut t = Client::connect(&server.addr()).unwrap();
         let mut b = Client::connect_binary(&server.addr()).unwrap();
-        let text = t.request("LOOKUP 15").unwrap();
+        let text = t.call(&Request::Lookup { key: 15 }).unwrap();
         let bin = b.call(&Request::Lookup { key: 15 }).unwrap();
-        assert_eq!(text, bin.render_text());
+        assert_eq!(text, bin, "both protocols must produce the same typed response");
         server.shutdown();
     }
 }

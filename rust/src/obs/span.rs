@@ -69,11 +69,15 @@ pub enum Stage {
     /// Worker pool: encoding + writing the response bytes back to the
     /// socket.
     NetWrite,
+    /// Hot-key cache probe on the GET path (sampled; the probe is a
+    /// shard hash + one read-locked map lookup, so this span is the
+    /// evidence the cache stays off the critical path on misses).
+    CacheLookup,
 }
 
 impl Stage {
     /// Every stage, in display order.
-    pub const ALL: [Stage; 13] = [
+    pub const ALL: [Stage; 14] = [
         Stage::Route,
         Stage::ShardLockWait,
         Stage::WalAppend,
@@ -87,6 +91,7 @@ impl Stage {
         Stage::NetParse,
         Stage::NetDispatch,
         Stage::NetWrite,
+        Stage::CacheLookup,
     ];
 
     /// Stable lowercase name (the `STAGES` payload and the exposition
@@ -106,6 +111,7 @@ impl Stage {
             Stage::NetParse => "net_parse",
             Stage::NetDispatch => "net_dispatch",
             Stage::NetWrite => "net_write",
+            Stage::CacheLookup => "cache_lookup",
         }
     }
 }

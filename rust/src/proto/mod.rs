@@ -239,6 +239,8 @@ pub enum Request {
         /// Max events to render (`None` = server default).
         max: Option<usize>,
     },
+    /// Hot-key cache counters: `CACHESTAT`.
+    CacheStat,
 }
 
 impl Request {

@@ -98,6 +98,7 @@ impl Request {
                 None => return Err(ProtoError::parse("SERIES needs a metric name")),
             },
             Some("STAGES") => Request::Stages,
+            Some("CACHESTAT") => Request::CacheStat,
             Some("DUMP") => {
                 // Lenient like the old dispatch: a non-numeric count falls
                 // back to the server default instead of rejecting.
@@ -142,6 +143,7 @@ impl Request {
             Request::MSample => "MSAMPLE".into(),
             Request::Series { metric } => format!("SERIES {metric}"),
             Request::Stages => "STAGES".into(),
+            Request::CacheStat => "CACHESTAT".into(),
             Request::Dump { max: Some(n) } => format!("DUMP {n}"),
             Request::Dump { max: None } => "DUMP".into(),
         }
@@ -257,6 +259,7 @@ mod tests {
             ("MSAMPLE", Request::MSample),
             ("SERIES some_metric", Request::Series { metric: "some_metric".into() }),
             ("STAGES", Request::Stages),
+            ("CACHESTAT", Request::CacheStat),
             ("DUMP 99", Request::Dump { max: Some(99) }),
             ("DUMP", Request::Dump { max: None }),
         ] {

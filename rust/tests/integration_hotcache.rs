@@ -1,0 +1,147 @@
+//! Integration: the hot-key cache tier end to end — epoch-invalidated
+//! cached reads staying fresh across KILL→drain→ADD churn with
+//! replication, and single-flight coalescing collapsing a concurrent
+//! miss storm into one storage read.
+
+use memento::coordinator::router::Router;
+use memento::coordinator::service::Service;
+use memento::netserver::{Client, ClientError};
+use memento::proto::Request;
+use std::sync::{Arc, Barrier};
+
+/// One text-protocol request through the typed client API
+/// (`Client::call`); the response — or typed error — is rendered back
+/// to its wire line so assertions stay line-oriented. Replaces the
+/// deprecated raw-line `Client::request` shim (DESIGN.md §13).
+fn req(c: &mut Client, line: &str) -> String {
+    let parsed = match Request::parse_text(line) {
+        Ok(r) => r,
+        Err(e) => return e.render_text(),
+    };
+    match c.call(&parsed) {
+        Ok(resp) => resp.render_text(),
+        Err(ClientError::Proto(e)) => e.render_text(),
+        Err(ClientError::Io(e)) => panic!("transport failure on {line:?}: {e}"),
+    }
+}
+
+const KEYS: usize = 200;
+
+/// Churn drill over TCP with replication=2: warmed cache entries must
+/// never serve a stale value across write-through overwrites and
+/// KILL/ADD epoch bumps, and no acknowledged write may be lost. The
+/// request sequence is single-connection and sequential, so the cache
+/// counters are fully deterministic and asserted exactly.
+#[test]
+fn cached_reads_stay_fresh_across_kill_drain_add_churn() {
+    let router = Router::new("memento", 10, 100, None).unwrap();
+    let svc = Service::with_replicas(router, 2);
+    let server = svc.serve("127.0.0.1:0", 32).unwrap();
+    let mut c = Client::connect(&server.addr()).unwrap();
+    let cache = svc.cache.as_ref().expect("the hot cache is on by default");
+
+    // Preload, then a fill pass (every key misses into the cache) and a
+    // verification pass (every key must now be a cache hit).
+    let mut latest: Vec<String> = Vec::new();
+    for i in 0..KEYS {
+        let v = format!("v0-{i}");
+        let r = req(&mut c, &format!("PUT ck{i} {v}"));
+        assert!(r.starts_with("OK"), "{r}");
+        latest.push(v);
+    }
+    for pass in 0..2 {
+        for i in 0..KEYS {
+            let r = req(&mut c, &format!("GET ck{i}"));
+            assert!(r.contains(&latest[i]), "pass {pass} ck{i}: {r}");
+        }
+    }
+    let (hits, misses, _) = cache.op_counts();
+    assert_eq!(
+        (hits, misses),
+        (KEYS as u64, KEYS as u64),
+        "first pass fills, second pass must be served from cache"
+    );
+
+    // Three churn rounds. Each round overwrites a third of the keys
+    // (write-through invalidation must beat the cached copy), kills a
+    // bucket (epoch bump: every cached entry goes stale at once), reads
+    // everything, restores the bucket (second epoch bump), and reads
+    // everything again.
+    for (round, bucket) in [3u32, 7, 5].into_iter().enumerate() {
+        for i in (0..KEYS).filter(|i| i % 3 == round) {
+            let v = format!("v{}-{i}", round + 1);
+            let r = req(&mut c, &format!("PUT ck{i} {v}"));
+            assert!(r.starts_with("OK"), "{r}");
+            latest[i] = v;
+        }
+        let r = req(&mut c, &format!("KILL {bucket}"));
+        assert!(r.starts_with("KILLED node-"), "{r}");
+        for i in 0..KEYS {
+            let r = req(&mut c, &format!("GET ck{i}"));
+            assert!(r.contains(&latest[i]), "stale or lost after KILL {bucket}, ck{i}: {r}");
+        }
+        let r = req(&mut c, "ADD");
+        assert!(r.contains(&format!("BUCKET {bucket}")), "{r}");
+        for i in 0..KEYS {
+            let r = req(&mut c, &format!("GET ck{i}"));
+            assert!(r.contains(&latest[i]), "stale or lost after ADD, ck{i}: {r}");
+        }
+    }
+    assert_eq!(req(&mut c, "EPOCH"), "EPOCH 6 WORKING 10");
+
+    // Exact counter bookkeeping: 2 warm passes (1 fill + 1 hit), then
+    // per round two full passes that each start right after an epoch
+    // bump, so every read is a miss-and-refill.
+    let (hits, misses, _) = cache.op_counts();
+    assert_eq!(hits, KEYS as u64, "post-bump passes must not hit stale epochs");
+    assert_eq!(misses, 7 * KEYS as u64, "fill pass + 6 post-bump passes");
+
+    // The placement audit saw no violations, and CACHESTAT exposes the
+    // same counters over the wire.
+    let stats = req(&mut c, "STATS");
+    assert!(stats.contains("violations=0"), "{stats}");
+    let cs = req(&mut c, "CACHESTAT");
+    assert!(cs.starts_with("CACHESTAT hits=200 misses=1400 "), "{cs}");
+    assert!(cs.contains("invalidations="), "{cs}");
+    server.shutdown();
+}
+
+/// Single-flight coalescing: 64 threads miss on the same key at the
+/// same time; the cache must collapse the storm into exactly one
+/// storage read, with every non-leader miss accounted as coalesced.
+#[test]
+fn concurrent_misses_on_one_key_do_exactly_one_storage_read() {
+    let router = Router::new("memento", 8, 80, None).unwrap();
+    let svc = Service::new(router);
+    let r = svc.handle("PUT hotkey warm");
+    assert!(r.starts_with("OK"), "{r}");
+    let gets_before: u64 = svc.storage.nodes().iter().map(|(_, n)| n.op_counts().0).sum();
+
+    const READERS: usize = 64;
+    let start_line = Arc::new(Barrier::new(READERS));
+    let threads: Vec<_> = (0..READERS)
+        .map(|_| {
+            let svc = svc.clone();
+            let start_line = start_line.clone();
+            std::thread::spawn(move || {
+                start_line.wait();
+                let r = svc.handle("GET hotkey");
+                assert!(r.contains("warm"), "{r}");
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let gets_after: u64 = svc.storage.nodes().iter().map(|(_, n)| n.op_counts().0).sum();
+    assert_eq!(
+        gets_after - gets_before,
+        1,
+        "single-flight must collapse {READERS} concurrent misses into one storage read"
+    );
+    let cache = svc.cache.as_ref().expect("the hot cache is on by default");
+    let (hits, misses, coalesced) = cache.op_counts();
+    assert_eq!(hits + misses, READERS as u64, "every GET is exactly one hit or miss");
+    assert_eq!(misses, coalesced + 1, "every miss but the flight leader must coalesce");
+}

@@ -5,9 +5,26 @@
 use memento::coordinator::router::Router;
 use memento::coordinator::service::Service;
 use memento::loadgen::{self, ChurnScenario, LoadgenConfig, Mode, Target, Workload};
-use memento::netserver::Client;
+use memento::netserver::{Client, ClientError};
+use memento::proto::Request;
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
+
+/// One text-protocol request through the typed client API
+/// (`Client::call`); the response — or typed error — is rendered back
+/// to its wire line so assertions stay line-oriented. Replaces the
+/// deprecated raw-line `Client::request` shim (DESIGN.md §13).
+fn req(c: &mut Client, line: &str) -> String {
+    let parsed = match Request::parse_text(line) {
+        Ok(r) => r,
+        Err(e) => return e.render_text(),
+    };
+    match c.call(&parsed) {
+        Ok(resp) => resp.render_text(),
+        Err(ClientError::Proto(e)) => e.render_text(),
+        Err(ClientError::Io(e)) => panic!("transport failure on {line:?}: {e}"),
+    }
+}
 
 /// ≥8 pipelined TCP clients issue PUT/GET while a KILL fires mid-load;
 /// with replication no acknowledged write may be lost.
@@ -28,7 +45,7 @@ fn pipelined_clients_survive_kill_without_losing_acked_writes() {
                 let mut acked: Vec<String> = Vec::new();
                 for i in 0..300 {
                     let key = format!("c{t}k{i}");
-                    let r = c.request(&format!("PUT {key} val{t}x{i}")).unwrap();
+                    let r = req(&mut c, &format!("PUT {key} val{t}x{i}"));
                     if r.starts_with("OK") {
                         acked.push(key);
                     }
@@ -36,7 +53,7 @@ fn pipelined_clients_survive_kill_without_losing_acked_writes() {
                     // GET/PUT mix in flight during the failure.
                     if i % 3 == 0 {
                         if let Some(k) = acked.last() {
-                            let r = c.request(&format!("GET {k}")).unwrap();
+                            let r = req(&mut c, &format!("GET {k}"));
                             assert!(r.starts_with("VALUE"), "read-your-write {k}: {r}");
                         }
                     }
@@ -51,7 +68,7 @@ fn pipelined_clients_survive_kill_without_losing_acked_writes() {
             let mut c = Client::connect(&addr).unwrap();
             start_line.wait();
             std::thread::sleep(Duration::from_millis(10));
-            let r = c.request("KILL 4").unwrap();
+            let r = req(&mut c, "KILL 4");
             assert!(r.starts_with("KILLED"), "{r}");
         })
     };
@@ -63,10 +80,10 @@ fn pipelined_clients_survive_kill_without_losing_acked_writes() {
     // Every acknowledged write must be readable after the failure.
     let mut c = Client::connect(&addr).unwrap();
     for key in &acked {
-        let r = c.request(&format!("GET {key}")).unwrap();
+        let r = req(&mut c, &format!("GET {key}"));
         assert!(r.starts_with("VALUE"), "acknowledged write {key} lost: {r}");
     }
-    let stats = c.request("STATS").unwrap();
+    let stats = req(&mut c, "STATS");
     assert!(stats.contains("violations=0"), "{stats}");
     drop(c);
     assert_eq!(server.shutdown(), 0, "connections must drain on shutdown");

@@ -7,15 +7,32 @@ use memento::algorithms::ConsistentHasher;
 use memento::coordinator::migration::{MigrationConfig, MigrationPlan, Migrator, PlanKind};
 use memento::coordinator::router::Router;
 use memento::coordinator::service::Service;
-use memento::netserver::Client;
+use memento::netserver::{Client, ClientError};
+use memento::proto::Request;
 use memento::simulator::audit;
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
+/// One text-protocol request through the typed client API
+/// (`Client::call`); the response — or typed error — is rendered back
+/// to its wire line so assertions stay line-oriented. Replaces the
+/// deprecated raw-line `Client::request` shim (DESIGN.md §13).
+fn req(c: &mut Client, line: &str) -> String {
+    let parsed = match Request::parse_text(line) {
+        Ok(r) => r,
+        Err(e) => return e.render_text(),
+    };
+    match c.call(&parsed) {
+        Ok(resp) => resp.render_text(),
+        Err(ClientError::Proto(e)) => e.render_text(),
+        Err(ClientError::Io(e)) => panic!("transport failure on {line:?}: {e}"),
+    }
+}
+
 fn wait_mstat_idle(c: &mut Client, timeout: Duration) -> bool {
     let t0 = Instant::now();
     while t0.elapsed() < timeout {
-        let r = c.request("MSTAT").unwrap();
+        let r = req(c, "MSTAT");
         assert!(r.starts_with("MSTAT"), "{r}");
         if r.contains("idle=true") {
             return true;
@@ -46,7 +63,7 @@ fn kill_drain_add_under_pipelined_traffic() {
                 let mut acked: Vec<String> = Vec::new();
                 for i in 0..600 {
                     let key = format!("m{t}k{i}");
-                    let r = c.request(&format!("PUT {key} val{t}x{i}")).unwrap();
+                    let r = req(&mut c, &format!("PUT {key} val{t}x{i}"));
                     if r.starts_with("OK") {
                         acked.push(key);
                     }
@@ -54,7 +71,7 @@ fn kill_drain_add_under_pipelined_traffic() {
                     // must be readable the moment it is acknowledged.
                     if i % 3 == 0 {
                         if let Some(k) = acked.last() {
-                            let r = c.request(&format!("GET {k}")).unwrap();
+                            let r = req(&mut c, &format!("GET {k}"));
                             assert!(r.starts_with("VALUE"), "read-your-write {k}: {r}");
                         }
                     }
@@ -72,7 +89,7 @@ fn kill_drain_add_under_pipelined_traffic() {
             std::thread::sleep(Duration::from_millis(5));
             // KILL acks fast (it only publishes + enqueues)…
             let t0 = Instant::now();
-            let r = c.request("KILL 4").unwrap();
+            let r = req(&mut c, "KILL 4");
             let kill_rtt = t0.elapsed();
             assert!(r.starts_with("KILLED"), "{r}");
             assert!(kill_rtt < Duration::from_millis(250), "KILL ack took {kill_rtt:?}");
@@ -82,7 +99,7 @@ fn kill_drain_add_under_pipelined_traffic() {
                 "drain after KILL timed out"
             );
             let t0 = Instant::now();
-            let r = c.request("ADD").unwrap();
+            let r = req(&mut c, "ADD");
             let add_rtt = t0.elapsed();
             assert!(r.contains("BUCKET 4"), "restore must reuse bucket 4: {r}");
             assert!(add_rtt < Duration::from_millis(250), "ADD ack took {add_rtt:?}");
@@ -101,7 +118,7 @@ fn kill_drain_add_under_pipelined_traffic() {
     // Zero acknowledged-write loss across the whole churn cycle.
     let mut c = Client::connect(&addr).unwrap();
     for key in &acked {
-        let r = c.request(&format!("GET {key}")).unwrap();
+        let r = req(&mut c, &format!("GET {key}"));
         assert!(r.starts_with("VALUE"), "acknowledged write {key} lost: {r}");
     }
     // The executor moved exactly the planner's key set: every planned
@@ -110,7 +127,7 @@ fn kill_drain_add_under_pipelined_traffic() {
     let moved = svc.router.metrics.keys_moved.get();
     assert!(moved > 0, "the drain must have moved records");
     assert_eq!(planned, moved, "executor must move exactly the planned set");
-    let stats = c.request("STATS").unwrap();
+    let stats = req(&mut c, "STATS");
     assert!(stats.contains("violations=0"), "collateral movement: {stats}");
     drop(c);
     assert_eq!(server.shutdown(), 0, "connections must drain on shutdown");

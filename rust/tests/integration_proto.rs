@@ -48,6 +48,7 @@ fn all_requests() -> Vec<Request> {
         Request::MSample,
         Request::Series { metric: "service_requests".into() },
         Request::Stages,
+        Request::CacheStat,
         Request::Dump { max: Some(16) },
         Request::Dump { max: None },
     ]

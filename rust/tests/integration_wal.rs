@@ -9,10 +9,27 @@ use memento::coordinator::service::Service;
 use memento::coordinator::storage::StorageCluster;
 use memento::coordinator::wal::{CoordinatorWal, DurabilityConfig, StorageDurability};
 use memento::metrics::WalMetrics;
-use memento::netserver::Client;
+use memento::netserver::{Client, ClientError};
+use memento::proto::Request;
 use memento::simulator::audit;
 use std::io::Write as _;
 use std::sync::Arc;
+
+/// One text-protocol request through the typed client API
+/// (`Client::call`); the response — or typed error — is rendered back
+/// to its wire line so assertions stay line-oriented. Replaces the
+/// deprecated raw-line `Client::request` shim (DESIGN.md §13).
+fn req(c: &mut Client, line: &str) -> String {
+    let parsed = match Request::parse_text(line) {
+        Ok(r) => r,
+        Err(e) => return e.render_text(),
+    };
+    match c.call(&parsed) {
+        Ok(resp) => resp.render_text(),
+        Err(ClientError::Proto(e)) => e.render_text(),
+        Err(ClientError::Io(e)) => panic!("transport failure on {line:?}: {e}"),
+    }
+}
 
 fn scratch(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("memento-itwal-{}-{name}", std::process::id()));
@@ -34,10 +51,10 @@ fn durable_service_survives_a_restart_over_tcp() {
         let server = svc.serve("127.0.0.1:0", 16).unwrap();
         let mut c = Client::connect(&server.addr()).unwrap();
         for i in 0..400 {
-            let r = c.request(&format!("PUT rk{i} rv{i}")).unwrap();
+            let r = req(&mut c, &format!("PUT rk{i} rv{i}"));
             assert!(r.starts_with("OK"), "{r}");
         }
-        let r = c.request("FSYNC").unwrap();
+        let r = req(&mut c, "FSYNC");
         assert!(r.starts_with("SYNCED"), "{r}");
         drop(c);
         server.shutdown();
@@ -50,7 +67,7 @@ fn durable_service_survives_a_restart_over_tcp() {
     let server = svc.serve("127.0.0.1:0", 16).unwrap();
     let mut c = Client::connect(&server.addr()).unwrap();
     for i in 0..400 {
-        let r = c.request(&format!("GET rk{i}")).unwrap();
+        let r = req(&mut c, &format!("GET rk{i}"));
         assert!(r.contains(&format!("rv{i}")), "rk{i} lost across restart: {r}");
     }
     drop(c);

@@ -19,7 +19,11 @@ Stdlib only; exit 0 on a valid exposition, 1 with a message otherwise.
 import re
 import sys
 
-MIN_METRICS = 10
+# 14: the pre-cache registry exposed well over 10; the hot-key tier
+# (memento_cache_hits/misses/coalesced/evictions/invalidations/entries)
+# raises the floor so the cache metrics falling off the registry fails
+# the obs-smoke scrape instead of passing silently.
+MIN_METRICS = 14
 
 NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 SAMPLE_RE = re.compile(

@@ -43,6 +43,7 @@ def main():
     ap.add_argument("--wal", help="BENCH_wal.json from this run (optional)")
     ap.add_argument("--obs", help="BENCH_obs.json from this run (optional)")
     ap.add_argument("--conn", help="BENCH_conn.json from this run (optional)")
+    ap.add_argument("--hotset", help="BENCH_hotset.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
@@ -177,6 +178,36 @@ def main():
         ratio = conn.get("bin_vs_text")
         if ratio is not None:
             print(f"binary vs text single-conn LOOKUP: {ratio}x (informational)")
+
+    if args.hotset:
+        hot = load(args.hotset)
+        # The cached GET path under Zipf s=1.2 skew is the tier's
+        # raison d'etre; a cache that stops serving hits regresses this
+        # cell to the uncached floor, a far bigger cliff than jitter.
+        gate(
+            "hotset cached GET ops/s (zipf s=1.2)",
+            float(hot["hotset_get_ops_s"]),
+            baseline["hotset_get_ops_s"],
+        )
+        # Hit rate is correctness-shaped (how much of the analytic head
+        # mass the CLOCK tier retains), so it gets an absolute floor —
+        # no noise factor.
+        hit = float(hot["hotset_hit_rate"])
+        floor = baseline["hotset_hit_rate_min"]
+        ok = hit >= floor
+        checks.append(("hotset hit rate (floor, absolute)", hit, floor, floor, ok))
+        if not ok:
+            failures.append("hotset hit rate (floor, absolute)")
+        # Epoch validity + write-through invalidation: a single stale
+        # read under churn is a consistency bug, never jitter.
+        gate_ceiling(
+            "hotset stale reads under churn (ceiling)",
+            float(hot["hotset_stale_reads"]),
+            0,
+        )
+        speed = hot.get("hotset_speedup_1_2")
+        if speed is not None:
+            print(f"hot-key cache speedup at zipf s=1.2: {speed}x (informational)")
 
     width = max(len(c[0]) for c in checks)
 

@@ -32,6 +32,7 @@ REFERENCES = {
     "BENCH_weighted.json": ["lookup_ops_s_min", "balance_err_max"],
     "BENCH_wal.json": ["wal_batch_puts_per_s", "wal_osonly_puts_per_s"],
     "BENCH_conn.json": ["conn_bin_lookup_ops_s", "conn_1k_ops_s", "conn_p999_us"],
+    "BENCH_hotset.json": ["hotset_get_ops_s", "hotset_hit_rate", "hotset_stale_reads"],
 }
 
 # (baseline key, source file, gate figure key) for --ratchet.
@@ -43,6 +44,7 @@ RATCHETS = [
     ("wal_osonly_puts_per_s", "BENCH_wal.json", "wal_osonly_puts_per_s"),
     ("conn_bin_lookup_ops_s", "BENCH_conn.json", "conn_bin_lookup_ops_s"),
     ("conn_1k_ops_s", "BENCH_conn.json", "conn_1k_ops_s"),
+    ("hotset_get_ops_s", "BENCH_hotset.json", "hotset_get_ops_s"),
 ]
 
 
