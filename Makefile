@@ -1,7 +1,7 @@
 # Convenience targets. The rust crate needs none of these — `cargo build`
 # is dependency-free; `artifacts` is only for the optional PJRT path.
 
-.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke obs-smoke conn-smoke crash-drill refresh-baselines
+.PHONY: build test bench artifacts doc fmt clippy loadgen ci perf-smoke obs-smoke conn-smoke crash-drill cluster-smoke refresh-baselines
 
 build:
 	cargo build --release
@@ -83,6 +83,18 @@ obs-smoke:
 #   cargo run --release -- crashdrill --site <site> --seed <seed>
 crash-drill:
 	cargo run --release -- crashdrill --seeds 8
+
+# Mirror of the ci.yml `cluster-smoke` job: a real multi-process cluster
+# (each node its own `memento node` child) under live write load, one
+# SIGKILL crash and one socket partition on schedule. The heartbeat
+# detector must confirm each fault (driving KILLN + drain), the node
+# must rejoin via ADD + snapshot install, and every acked write must
+# read back; the drill's JSON is then gated against the baseline.
+cluster-smoke:
+	cargo run --release -- cluster-drill --nodes 4 --faults crash,partition \
+	  --json BENCH_cluster.json
+	python3 scripts/perf_compare.py --cluster BENCH_cluster.json \
+	  --baseline ci/perf-baseline.json
 
 # Install measured perf-smoke figures over the committed PROJECTED
 # references: download the `perf-smoke` workflow artifact first, e.g.

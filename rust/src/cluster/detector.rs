@@ -1,0 +1,349 @@
+//! The heartbeat failure detector: a pure `Alive → Suspect → Dead`
+//! state machine over probe outcomes (DESIGN.md §15.2).
+//!
+//! The detector itself never touches a socket or a clock — the probe
+//! loop (see [`super::drill`]) feeds it one observation per node per
+//! round together with an injected timestamp, and the detector answers
+//! with at most one [`DetectorAction`] to execute. That split is what
+//! makes the state machine unit-testable to the edge: suspicion timing,
+//! flap suppression and the exactly-once `KILLN` guarantee are all
+//! properties of this module alone, checked without spawning a process.
+//!
+//! Confirmation counts, not single observations, drive every
+//! transition:
+//!
+//! * `suspect_after` consecutive probe failures move an `Alive` node to
+//!   `Suspect` — one dropped heartbeat is noise, not a failure;
+//! * `confirm_after` further failures confirm `Dead` and emit
+//!   [`DetectorAction::ConfirmDead`] exactly once — this is the edge
+//!   the coordinator turns into a `KILLN` and a migration drain;
+//! * a `Suspect` node that answers `recover_after` probes in a row
+//!   returns to `Alive` via [`DetectorAction::Recovered`] **without**
+//!   ever having been killed — the flap-suppression path;
+//! * a `Dead` node that answers `rejoin_after` probes in a row emits
+//!   [`DetectorAction::ReadyToRejoin`] once; the rejoin stays in flight
+//!   (no duplicate triggers) until the driver reports
+//!   [`FailureDetector::install_complete`] (snapshot installed → the
+//!   node is `Alive` again) or [`FailureDetector::rejoin_failed`]
+//!   (eligible again after a fresh success streak).
+
+use std::collections::BTreeMap;
+
+/// One node's health as the detector currently believes it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeHealth {
+    /// Answering probes (or not yet suspicious).
+    Alive,
+    /// Missed enough consecutive probes to be suspicious, but not yet
+    /// confirmed — no membership change has been issued.
+    Suspect,
+    /// Confirmed dead: the `ConfirmDead` action was emitted and the
+    /// coordinator has (or is about to have) drained the node.
+    Dead,
+}
+
+impl NodeHealth {
+    /// Stable lowercase name for logs and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeHealth::Alive => "alive",
+            NodeHealth::Suspect => "suspect",
+            NodeHealth::Dead => "dead",
+        }
+    }
+}
+
+/// What the driver must do in response to an observation — at most one
+/// per probe, and `ConfirmDead` / `ReadyToRejoin` at most once per
+/// death / recovery cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectorAction {
+    /// The node crossed the suspicion threshold. Informational: no
+    /// membership change yet.
+    Suspect,
+    /// The node is confirmed dead — issue `KILLN` and let the migration
+    /// drain run. Emitted exactly once per confirmed death.
+    ConfirmDead,
+    /// A suspect answered again before confirmation: the suspicion was
+    /// a flap and no `KILLN` was (or will be) issued for it.
+    Recovered,
+    /// A dead node is answering probes again — run the rejoin protocol
+    /// (`ADD` + snapshot install), then report `install_complete`.
+    ReadyToRejoin,
+}
+
+/// Confirmation thresholds, all in units of *consecutive probes*.
+#[derive(Debug, Clone)]
+pub struct DetectorConfig {
+    /// Consecutive failures before `Alive → Suspect`.
+    pub suspect_after: u32,
+    /// Further consecutive failures before `Suspect → Dead`.
+    pub confirm_after: u32,
+    /// Consecutive successes before `Suspect → Alive` (flap).
+    pub recover_after: u32,
+    /// Consecutive successes before a `Dead` node triggers rejoin.
+    pub rejoin_after: u32,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        // 2+2 probes to confirm: at the drill's 50 ms cadence with a
+        // 100 ms probe timeout that bounds detection around half a
+        // second while still absorbing one stray packet delay.
+        Self { suspect_after: 2, confirm_after: 2, recover_after: 2, rejoin_after: 2 }
+    }
+}
+
+/// Per-node bookkeeping: current health, the streak counters the
+/// thresholds run on, the exactly-once latches, and the timestamps the
+/// detection-latency figure is computed from.
+#[derive(Debug)]
+struct NodeRecord {
+    health: NodeHealth,
+    fail_streak: u32,
+    ok_streak: u32,
+    rejoin_in_flight: bool,
+    /// First failed probe of the current outage (detection latency t0).
+    down_since_ms: Option<u64>,
+    /// When the node was confirmed dead (detection latency t1).
+    confirmed_at_ms: Option<u64>,
+}
+
+impl NodeRecord {
+    fn fresh() -> Self {
+        Self {
+            health: NodeHealth::Alive,
+            fail_streak: 0,
+            ok_streak: 0,
+            rejoin_in_flight: false,
+            down_since_ms: None,
+            confirmed_at_ms: None,
+        }
+    }
+}
+
+/// The coordinator-side failure detector over all registered nodes.
+#[derive(Debug)]
+pub struct FailureDetector {
+    cfg: DetectorConfig,
+    nodes: BTreeMap<usize, NodeRecord>,
+}
+
+impl FailureDetector {
+    /// A detector with the given thresholds and no nodes yet.
+    pub fn new(cfg: DetectorConfig) -> Self {
+        Self { cfg, nodes: BTreeMap::new() }
+    }
+
+    /// Track a node (idempotent; probes on unknown nodes also register
+    /// them implicitly, as `Alive`).
+    pub fn register(&mut self, node: usize) {
+        self.nodes.entry(node).or_insert_with(NodeRecord::fresh);
+    }
+
+    fn record(&mut self, node: usize) -> &mut NodeRecord {
+        self.nodes.entry(node).or_insert_with(NodeRecord::fresh)
+    }
+
+    /// Observe one failed probe at `now_ms` (any monotonic millisecond
+    /// clock; only differences are ever used).
+    pub fn probe_failure(&mut self, node: usize, now_ms: u64) -> Option<DetectorAction> {
+        let suspect_after = self.cfg.suspect_after;
+        let confirm_total = self.cfg.suspect_after + self.cfg.confirm_after;
+        let r = self.record(node);
+        r.ok_streak = 0;
+        r.fail_streak = r.fail_streak.saturating_add(1);
+        if r.down_since_ms.is_none() {
+            r.down_since_ms = Some(now_ms);
+        }
+        match r.health {
+            NodeHealth::Alive if r.fail_streak >= suspect_after => {
+                r.health = NodeHealth::Suspect;
+                Some(DetectorAction::Suspect)
+            }
+            NodeHealth::Suspect if r.fail_streak >= confirm_total => {
+                // The one edge that commits a membership change; Dead
+                // absorbs every further failure silently, so the driver
+                // issues exactly one KILLN per confirmed death.
+                r.health = NodeHealth::Dead;
+                r.confirmed_at_ms = Some(now_ms);
+                Some(DetectorAction::ConfirmDead)
+            }
+            _ => None,
+        }
+    }
+
+    /// Observe one successful probe at `now_ms`.
+    pub fn probe_success(&mut self, node: usize, _now_ms: u64) -> Option<DetectorAction> {
+        let recover_after = self.cfg.recover_after;
+        let rejoin_after = self.cfg.rejoin_after;
+        let r = self.record(node);
+        r.fail_streak = 0;
+        r.ok_streak = r.ok_streak.saturating_add(1);
+        match r.health {
+            NodeHealth::Alive => {
+                // A partial outage that never reached Suspect leaves no
+                // trace — the next outage's latency starts from its own
+                // first failure.
+                r.down_since_ms = None;
+                None
+            }
+            NodeHealth::Suspect if r.ok_streak >= recover_after => {
+                *r = NodeRecord::fresh();
+                Some(DetectorAction::Recovered)
+            }
+            NodeHealth::Dead if r.ok_streak >= rejoin_after && !r.rejoin_in_flight => {
+                r.rejoin_in_flight = true;
+                Some(DetectorAction::ReadyToRejoin)
+            }
+            _ => None,
+        }
+    }
+
+    /// The rejoin protocol finished: the node's `ADD` landed and the
+    /// snapshot was installed — it is a full member again and a future
+    /// outage starts a fresh detection cycle (including a new `KILLN`).
+    pub fn install_complete(&mut self, node: usize) {
+        *self.record(node) = NodeRecord::fresh();
+    }
+
+    /// The rejoin attempt failed mid-protocol. The node stays `Dead`;
+    /// a fresh success streak re-arms `ReadyToRejoin`.
+    pub fn rejoin_failed(&mut self, node: usize) {
+        let r = self.record(node);
+        r.rejoin_in_flight = false;
+        r.ok_streak = 0;
+    }
+
+    /// The detector's current belief about a node (`Alive` if unknown).
+    pub fn health(&self, node: usize) -> NodeHealth {
+        self.nodes.get(&node).map_or(NodeHealth::Alive, |r| r.health)
+    }
+
+    /// `true` when every registered node is `Alive` — the drill's
+    /// "cluster fully recovered" condition.
+    pub fn all_alive(&self) -> bool {
+        self.nodes.values().all(|r| r.health == NodeHealth::Alive)
+    }
+
+    /// Milliseconds from the first failed probe of the current outage
+    /// to its `ConfirmDead` — the detection-latency figure
+    /// `BENCH_cluster.json` gates on. `None` until confirmed.
+    pub fn detection_latency_ms(&self, node: usize) -> Option<u64> {
+        let r = self.nodes.get(&node)?;
+        Some(r.confirmed_at_ms?.saturating_sub(r.down_since_ms?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detector() -> FailureDetector {
+        // suspect after 2 failures, confirm after 2 more, recover and
+        // rejoin after 2 successes — the defaults, spelled out so the
+        // assertions below read against concrete numbers.
+        FailureDetector::new(DetectorConfig::default())
+    }
+
+    /// Walk a node to `Dead`, asserting each edge fires exactly when
+    /// the threshold is crossed. Returns the detector for reuse.
+    fn kill_node(d: &mut FailureDetector, node: usize, t0: u64) {
+        assert_eq!(d.probe_failure(node, t0), None, "one failure is noise");
+        assert_eq!(d.health(node), NodeHealth::Alive);
+        assert_eq!(d.probe_failure(node, t0 + 50), Some(DetectorAction::Suspect));
+        assert_eq!(d.health(node), NodeHealth::Suspect);
+        assert_eq!(d.probe_failure(node, t0 + 100), None, "confirmation still pending");
+        assert_eq!(d.probe_failure(node, t0 + 150), Some(DetectorAction::ConfirmDead));
+        assert_eq!(d.health(node), NodeHealth::Dead);
+    }
+
+    #[test]
+    fn suspicion_and_confirmation_timing() {
+        let mut d = detector();
+        d.register(3);
+        kill_node(&mut d, 3, 1000);
+        // Latency is measured from the outage's *first* failed probe,
+        // not from the suspicion edge.
+        assert_eq!(d.detection_latency_ms(3), Some(150));
+    }
+
+    #[test]
+    fn flap_is_suppressed_without_a_kill() {
+        let mut d = detector();
+        d.register(0);
+        assert_eq!(d.probe_failure(0, 0), None);
+        assert_eq!(d.probe_failure(0, 50), Some(DetectorAction::Suspect));
+        // The node answers again before confirmation: one success is
+        // not enough, two bring it home — and no ConfirmDead was ever
+        // emitted, so no KILLN happened for this blip.
+        assert_eq!(d.probe_success(0, 100), None);
+        assert_eq!(d.health(0), NodeHealth::Suspect);
+        assert_eq!(d.probe_success(0, 150), Some(DetectorAction::Recovered));
+        assert_eq!(d.health(0), NodeHealth::Alive);
+        assert_eq!(d.detection_latency_ms(0), None, "nothing was confirmed");
+        // A mixed streak resets: failure, success, failure never
+        // reaches Suspect because the streaks are consecutive.
+        assert_eq!(d.probe_failure(0, 200), None);
+        assert_eq!(d.probe_success(0, 250), None);
+        assert_eq!(d.probe_failure(0, 300), None);
+        assert_eq!(d.health(0), NodeHealth::Alive);
+    }
+
+    #[test]
+    fn exactly_one_confirm_dead_per_death() {
+        let mut d = detector();
+        kill_node(&mut d, 1, 0);
+        // The outage continues: no matter how many more probes fail,
+        // Dead absorbs them without another ConfirmDead.
+        for t in 4..40u64 {
+            assert_eq!(d.probe_failure(1, t * 50), None, "duplicate kill at probe {t}");
+        }
+        assert_eq!(d.health(1), NodeHealth::Dead);
+    }
+
+    #[test]
+    fn rejoin_fires_once_and_only_after_install_completes() {
+        let mut d = detector();
+        kill_node(&mut d, 2, 0);
+        // The node comes back: rejoin triggers on the second
+        // consecutive success and stays in flight — further successes
+        // must not start a second concurrent rejoin.
+        assert_eq!(d.probe_success(2, 500), None);
+        assert_eq!(d.probe_success(2, 550), Some(DetectorAction::ReadyToRejoin));
+        for t in 12..20u64 {
+            assert_eq!(d.probe_success(2, t * 50), None, "duplicate rejoin at probe {t}");
+        }
+        assert_eq!(d.health(2), NodeHealth::Dead, "dead until the snapshot is installed");
+        assert!(!d.all_alive());
+        // Only install_complete makes it Alive again.
+        d.install_complete(2);
+        assert_eq!(d.health(2), NodeHealth::Alive);
+        assert!(d.all_alive());
+        // And the next outage is a fresh cycle: a new ConfirmDead (a
+        // new KILLN) is allowed and its latency is measured anew.
+        kill_node(&mut d, 2, 2000);
+        assert_eq!(d.detection_latency_ms(2), Some(150));
+    }
+
+    #[test]
+    fn failed_rejoin_rearms_after_a_fresh_streak() {
+        let mut d = detector();
+        kill_node(&mut d, 5, 0);
+        assert_eq!(d.probe_success(5, 300), None);
+        assert_eq!(d.probe_success(5, 350), Some(DetectorAction::ReadyToRejoin));
+        // The driver failed the rejoin (say the ADD timed out); the
+        // node needs a fresh success streak before the next attempt.
+        d.rejoin_failed(5);
+        assert_eq!(d.probe_success(5, 400), None, "streak restarted");
+        assert_eq!(d.probe_success(5, 450), Some(DetectorAction::ReadyToRejoin));
+        assert_eq!(d.health(5), NodeHealth::Dead);
+    }
+
+    #[test]
+    fn health_names_are_stable() {
+        assert_eq!(NodeHealth::Alive.name(), "alive");
+        assert_eq!(NodeHealth::Suspect.name(), "suspect");
+        assert_eq!(NodeHealth::Dead.name(), "dead");
+    }
+}

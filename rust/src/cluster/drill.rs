@@ -1,0 +1,604 @@
+//! The end-to-end cluster drill (DESIGN.md §15.4): real node processes,
+//! live write load, injected process faults, detector-driven recovery —
+//! and a zero-acked-write-loss verdict at the end.
+//!
+//! Shape of one drill:
+//!
+//! 1. An in-process coordinator [`Service`] (the measured data plane,
+//!    `--replicas 2`) plus one `memento node` child process per member,
+//!    each behind its own [`PartitionProxy`] via [`ClusterManager`] —
+//!    the processes are the *physical* cluster the detector watches.
+//! 2. Writer threads stream acked `PUT`s through the coordinator for
+//!    the whole drill, journaling every acknowledged `(key, value)` and
+//!    bucketing outcomes per second ([`WorkerStats::record_second`]) —
+//!    the availability trajectory.
+//! 3. The control loop probes every node each round (fresh binary
+//!    connection + read deadline) and feeds the [`FailureDetector`].
+//!    `ConfirmDead` becomes a real `KILLN` (migration drain included);
+//!    `ReadyToRejoin` runs the rejoin protocol: `ADD`, wait for the
+//!    drain to go idle, push the node's record snapshot to the process,
+//!    verify one installed record, then `install_complete`.
+//! 4. Faults fire on a fixed schedule; each is recovered (respawn /
+//!    `SIGCONT` / heal) a short beat *after* its `ConfirmDead`, so the
+//!    detector — not the schedule — is what drives the membership
+//!    changes.
+//! 5. After the schedule drains and every node is `Alive` again, every
+//!    journaled acked write is read back. Anything missing is a lost
+//!    acked write and fails the drill.
+//!
+//! The report serializes to the `BENCH_cluster.json` schema gated by
+//! `scripts/perf_compare.py --cluster`: detection latency, minimum
+//! per-second availability, acked/lost writes, rejoin count.
+
+use super::detector::{DetectorAction, DetectorConfig, FailureDetector};
+use super::manager::ClusterManager;
+use crate::coordinator::membership::NodeId;
+use crate::coordinator::router::Router;
+use crate::coordinator::service::Service;
+use crate::loadgen::target::{Target, TcpTarget};
+use crate::loadgen::WorkerStats;
+use crate::testkit::faults::FaultKind;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One drill's shape. [`ClusterDrillConfig::new`] fills the CI-sized
+/// defaults; fields are public for the CLI overrides.
+#[derive(Debug, Clone)]
+pub struct ClusterDrillConfig {
+    /// Binary to spawn node children from (`memento node`).
+    pub exe: PathBuf,
+    /// Cluster size (node processes and coordinator members).
+    pub nodes: usize,
+    /// PUT replication factor on the coordinator.
+    pub replicas: usize,
+    /// Concurrent writer threads.
+    pub writers: usize,
+    /// Scheduled drill length (settling may run past it).
+    pub duration: Duration,
+    /// Probe cadence.
+    pub probe_every: Duration,
+    /// Per-probe read deadline (the gray-failure bound).
+    pub probe_timeout: Duration,
+    /// How long after `ConfirmDead` the fault is recovered — long
+    /// enough that detection demonstrably preceded recovery.
+    pub recover_after_confirm: Duration,
+    /// Hard ceiling on post-schedule settling (detector must bring
+    /// every node back `Alive` within it).
+    pub settle_timeout: Duration,
+    /// The fault schedule, spaced evenly across `duration`; entry `k`
+    /// targets node `k % nodes`.
+    pub faults: Vec<FaultKind>,
+    /// Detector thresholds.
+    pub detector: DetectorConfig,
+}
+
+impl ClusterDrillConfig {
+    /// CI-sized defaults: 4 nodes, 2 writers, one crash + one
+    /// partition across a ~4 s run.
+    pub fn new(exe: PathBuf) -> Self {
+        Self {
+            exe,
+            nodes: 4,
+            replicas: 2,
+            writers: 2,
+            duration: Duration::from_secs(4),
+            probe_every: Duration::from_millis(50),
+            probe_timeout: Duration::from_millis(100),
+            recover_after_confirm: Duration::from_millis(300),
+            settle_timeout: Duration::from_secs(20),
+            faults: vec![FaultKind::Crash, FaultKind::Partition],
+            detector: DetectorConfig::default(),
+        }
+    }
+}
+
+/// What happened to one scheduled fault.
+#[derive(Debug, Clone)]
+pub struct FaultOutcome {
+    /// Fault family name (`crash` / `stall` / `partition`).
+    pub kind: &'static str,
+    /// Targeted node slot.
+    pub target: usize,
+    /// Injection time, ms since drill start.
+    pub injected_at_ms: u64,
+    /// Injection → `ConfirmDead` (the detector-driven `KILLN`), ms.
+    /// `None` means the detector never confirmed — a drill failure.
+    pub detect_ms: Option<u64>,
+    /// Whether the node completed the rejoin protocol afterwards.
+    pub rejoined: bool,
+}
+
+/// The drill's end-to-end verdict and its measured figures.
+#[derive(Debug)]
+pub struct ClusterDrillReport {
+    /// Cluster size.
+    pub nodes: usize,
+    /// Replication factor used.
+    pub replicas: usize,
+    /// Per-fault outcomes in schedule order.
+    pub faults: Vec<FaultOutcome>,
+    /// `ConfirmDead` count (must equal the fault count).
+    pub detections: u64,
+    /// Completed rejoins (must equal the fault count).
+    pub rejoins: u64,
+    /// Writes the coordinator acknowledged.
+    pub acked_writes: u64,
+    /// Acked writes that could not be read back (must be empty).
+    pub lost: Vec<String>,
+    /// Merged per-second `(ok, err)` buckets from the writers.
+    pub availability: Vec<(u64, u64)>,
+    /// Protocol / rejoin / settling failures collected along the way.
+    pub errors: Vec<String>,
+    /// Wall-clock drill length including settling.
+    pub elapsed: Duration,
+}
+
+impl ClusterDrillReport {
+    /// Worst `detect_ms` across confirmed faults (0 when none).
+    pub fn detect_ms_max(&self) -> u64 {
+        self.faults.iter().filter_map(|f| f.detect_ms).max().unwrap_or(0)
+    }
+
+    /// Lowest per-second write success rate (1.0 when no traffic).
+    pub fn availability_min(&self) -> f64 {
+        self.availability
+            .iter()
+            .filter(|(ok, err)| ok + err > 0)
+            .map(|(ok, err)| *ok as f64 / (ok + err) as f64)
+            .fold(1.0f64, f64::min)
+    }
+
+    /// The drill passes iff every fault was detected, every node
+    /// rejoined, nothing errored, and no acked write was lost.
+    pub fn pass(&self) -> bool {
+        self.lost.is_empty()
+            && self.errors.is_empty()
+            && self.detections == self.faults.len() as u64
+            && self.rejoins == self.faults.len() as u64
+            && self.faults.iter().all(|f| f.detect_ms.is_some() && f.rejoined)
+    }
+
+    /// One-line human summary (the drill's PASS/FAIL line).
+    pub fn summary(&self) -> String {
+        format!(
+            "nodes={} faults={} detections={} rejoins={} detect_ms_max={} \
+             acked={} lost={} avail_min={:.4} errors={} elapsed={:.2?}",
+            self.nodes,
+            self.faults.len(),
+            self.detections,
+            self.rejoins,
+            self.detect_ms_max(),
+            self.acked_writes,
+            self.lost.len(),
+            self.availability_min(),
+            self.errors.len(),
+            self.elapsed
+        )
+    }
+
+    /// The `BENCH_cluster.json` payload `perf_compare.py --cluster`
+    /// gates on (hand-rolled JSON; serde is not in the crate set).
+    pub fn to_json(&self) -> String {
+        let kinds: Vec<String> =
+            self.faults.iter().map(|f| format!("\"{}\"", f.kind)).collect();
+        format!(
+            "{{\n  \"bench\": \"cluster_drill\",\n  \"nodes\": {},\n  \"replicas\": {},\n  \
+             \"faults\": {},\n  \"fault_kinds\": [{}],\n  \"detections\": {},\n  \
+             \"rejoins\": {},\n  \"detect_ms_max\": {},\n  \"acked_writes\": {},\n  \
+             \"lost_writes\": {},\n  \"availability_min\": {:.4},\n  \"errors\": {},\n  \
+             \"elapsed_s\": {:.3},\n  \"pass\": {}\n}}\n",
+            self.nodes,
+            self.replicas,
+            self.faults.len(),
+            kinds.join(", "),
+            self.detections,
+            self.rejoins,
+            self.detect_ms_max(),
+            self.acked_writes,
+            self.lost.len(),
+            self.availability_min(),
+            self.errors.len(),
+            self.elapsed.as_secs_f64(),
+            self.pass()
+        )
+    }
+}
+
+/// Mutable control-loop state for one scheduled fault.
+struct FaultPlan {
+    kind: FaultKind,
+    target: usize,
+    due: Duration,
+    injected_at_ms: Option<u64>,
+    confirmed_at_ms: Option<u64>,
+    recovered: bool,
+    rejoined: bool,
+}
+
+/// Stream acked PUTs through the coordinator until `stop`, journaling
+/// every acknowledged `(key, value)` for the read-back check. Keys are
+/// writer-unique and never overwritten, so the journal is the exact
+/// set of values the post-drill verification must find.
+fn writer_loop(
+    svc: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    start: Instant,
+    id: usize,
+) -> (WorkerStats, Vec<(String, String)>) {
+    let mut stats = WorkerStats::new();
+    let mut journal = Vec::new();
+    let mut i = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        let key = format!("w{id}k{i}");
+        let val = format!("v{id}x{i}");
+        i += 1;
+        let sent = Instant::now();
+        let second = sent.duration_since(start).as_secs();
+        let resp = svc.handle(&format!("PUT {key} {val}"));
+        if resp.starts_with("OK") {
+            stats.ops += 1;
+            stats.acked_puts += 1;
+            stats.record_second(second, true);
+            journal.push((key, val));
+        } else {
+            stats.errors += 1;
+            stats.record_second(second, false);
+        }
+        // ~2k ops/s per writer: enough pressure to exercise every
+        // second of the drill without growing an unverifiable journal.
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    (stats, journal)
+}
+
+/// Run the rejoin protocol for one returned node: `ADD` on the
+/// coordinator, wait for the migration drain, push the (re)added
+/// coordinator node's record snapshot to the node process and verify
+/// one installed record. Returns the node's new coordinator name.
+fn rejoin_node(
+    svc: &Arc<Service>,
+    manager: &ClusterManager,
+    node: usize,
+    probe_timeout: Duration,
+) -> Result<String, String> {
+    let resp = svc.handle("ADD");
+    if !resp.starts_with("ADDED BUCKET") {
+        return Err(format!("rejoin node {node}: ADD answered {resp:?}"));
+    }
+    // "ADDED BUCKET <b> NODE <name> EPOCH <e> SOURCES <s>"
+    let name = resp
+        .split_whitespace()
+        .nth(3)
+        .ok_or_else(|| format!("rejoin node {node}: unparseable ADD reply {resp:?}"))?
+        .to_string();
+    if !svc.migration.wait_idle(Duration::from_secs(10)) {
+        return Err(format!("rejoin node {node}: migration drain never went idle"));
+    }
+    // Snapshot install: the drained coordinator node's records, pushed
+    // to the process in pipelined binary batches. The record keys are
+    // digests; any stable rendering works because the shadow's own
+    // digest is applied consistently on push and verify.
+    let id: u64 = name
+        .strip_prefix("node-")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("rejoin node {node}: unexpected node name {name:?}"))?;
+    let store = svc.storage.node(NodeId(id));
+    let lines: Vec<String> = store
+        .keys()
+        .into_iter()
+        .filter_map(|k| {
+            let val = store.get(k)?;
+            Some(format!("PUT s{k:016x} {}", String::from_utf8_lossy(&val)))
+        })
+        .collect();
+    let addr = manager.addr(node);
+    let mut tgt = TcpTarget::connect_binary(&addr)
+        .map_err(|e| format!("rejoin node {node}: dial {addr}: {e}"))?;
+    for chunk in lines.chunks(256) {
+        tgt.call_many(chunk).map_err(|e| format!("rejoin node {node}: push: {e}"))?;
+    }
+    // Installation check: the last pushed record must read back from
+    // the process before the node is declared a member again.
+    if let Some(last) = lines.last() {
+        let mut parts = last.splitn(3, ' ');
+        let (_, key, val) = (parts.next(), parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+        let got = tgt
+            .call(&format!("GET {key}"))
+            .map_err(|e| format!("rejoin node {node}: install check: {e}"))?;
+        if !got.contains(val) {
+            return Err(format!("rejoin node {node}: install check read {got:?}, want {val:?}"));
+        }
+    }
+    // The process must still answer probes through its proxy — a node
+    // that went away mid-install is not a completed rejoin.
+    if !manager.probe(node, probe_timeout) {
+        return Err(format!("rejoin node {node}: unreachable after install"));
+    }
+    Ok(name)
+}
+
+/// Run one full drill. Errors that abort setup (spawn failures) come
+/// back as `Err`; in-drill failures land in the report's `errors` /
+/// `lost` and fail [`ClusterDrillReport::pass`] instead.
+pub fn run_drill(cfg: &ClusterDrillConfig) -> Result<ClusterDrillReport, String> {
+    if cfg.nodes < 2 || cfg.faults.len() > cfg.nodes {
+        return Err(format!(
+            "need at least 2 nodes and at most one fault per node \
+             (nodes={}, faults={})",
+            cfg.nodes,
+            cfg.faults.len()
+        ));
+    }
+    let router = Router::new("memento", cfg.nodes, cfg.nodes * 10, None)
+        .map_err(|e| e.to_string())?;
+    let svc = Service::with_replicas(router, cfg.replicas.min(cfg.nodes));
+    let mut manager = ClusterManager::new(cfg.exe.clone());
+    for _ in 0..cfg.nodes {
+        manager.spawn_node().map_err(|e| format!("spawn node: {e}"))?;
+    }
+    // Coordinator member name per process slot; rejoins re-point it.
+    let mut names: Vec<String> = (0..cfg.nodes).map(|i| format!("node-{i}")).collect();
+    let mut detector = FailureDetector::new(cfg.detector.clone());
+    for i in 0..cfg.nodes {
+        detector.register(i);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let writers: Vec<_> = (0..cfg.writers.max(1))
+        .map(|id| {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name(format!("drill-writer-{id}"))
+                .spawn(move || writer_loop(svc, stop, start, id))
+                .map_err(|e| format!("spawn writer {id}: {e}"))
+        })
+        .collect::<Result<_, _>>()?;
+
+    // Faults spaced evenly across the schedule, distinct targets.
+    let mut plans: Vec<FaultPlan> = cfg
+        .faults
+        .iter()
+        .enumerate()
+        .map(|(k, &kind)| FaultPlan {
+            kind,
+            target: k % cfg.nodes,
+            due: cfg.duration * (k as u32 + 1) / (cfg.faults.len() as u32 + 1),
+            injected_at_ms: None,
+            confirmed_at_ms: None,
+            recovered: false,
+            rejoined: false,
+        })
+        .collect();
+
+    let mut errors: Vec<String> = Vec::new();
+    let mut detections = 0u64;
+    let mut rejoins = 0u64;
+    loop {
+        let now = start.elapsed();
+        let now_ms = now.as_millis() as u64;
+        let past_schedule = now >= cfg.duration;
+        for plan in &mut plans {
+            if plan.injected_at_ms.is_none() && now >= plan.due {
+                match manager.inject(plan.target, plan.kind) {
+                    Ok(()) => plan.injected_at_ms = Some(now_ms),
+                    Err(e) => errors.push(format!(
+                        "inject {} on node {}: {e}",
+                        plan.kind.name(),
+                        plan.target
+                    )),
+                }
+            }
+            // Recovery waits for the detector's confirmation (plus a
+            // beat), so detection provably preceded it; once the
+            // schedule is over, outstanding faults are recovered
+            // unconditionally so settling can converge.
+            let confirm_ripe = plan
+                .confirmed_at_ms
+                .is_some_and(|c| now_ms >= c + cfg.recover_after_confirm.as_millis() as u64);
+            if plan.injected_at_ms.is_some() && !plan.recovered && (confirm_ripe || past_schedule)
+            {
+                match manager.recover(plan.target, plan.kind) {
+                    Ok(()) => plan.recovered = true,
+                    Err(e) => {
+                        errors.push(format!(
+                            "recover {} on node {}: {e}",
+                            plan.kind.name(),
+                            plan.target
+                        ));
+                        plan.recovered = true; // don't retry forever
+                    }
+                }
+            }
+        }
+        for i in 0..cfg.nodes {
+            let action = if manager.probe(i, cfg.probe_timeout) {
+                detector.probe_success(i, start.elapsed().as_millis() as u64)
+            } else {
+                detector.probe_failure(i, start.elapsed().as_millis() as u64)
+            };
+            match action {
+                Some(DetectorAction::ConfirmDead) => {
+                    let t = start.elapsed().as_millis() as u64;
+                    let resp = svc.handle(&format!("KILLN {}", names[i]));
+                    if resp.starts_with("KILLED") {
+                        detections += 1;
+                    } else {
+                        errors.push(format!("KILLN {} answered {resp:?}", names[i]));
+                    }
+                    if let Some(plan) =
+                        plans.iter_mut().find(|p| p.target == i && p.confirmed_at_ms.is_none())
+                    {
+                        plan.confirmed_at_ms = Some(t);
+                    }
+                }
+                Some(DetectorAction::ReadyToRejoin) => {
+                    match rejoin_node(&svc, &manager, i, cfg.probe_timeout) {
+                        Ok(name) => {
+                            names[i] = name;
+                            detector.install_complete(i);
+                            rejoins += 1;
+                            if let Some(plan) =
+                                plans.iter_mut().find(|p| p.target == i && !p.rejoined)
+                            {
+                                plan.rejoined = true;
+                            }
+                        }
+                        Err(e) => {
+                            detector.rejoin_failed(i);
+                            errors.push(e);
+                        }
+                    }
+                }
+                // Suspect / Recovered are informational; the drill's
+                // verdict only rides the committed edges.
+                _ => {}
+            }
+        }
+        if past_schedule && plans.iter().all(|p| p.recovered) && detector.all_alive() {
+            break;
+        }
+        if now > cfg.duration + cfg.settle_timeout {
+            errors.push(format!(
+                "settling timed out after {:?}: cluster never fully recovered",
+                cfg.settle_timeout
+            ));
+            break;
+        }
+        std::thread::sleep(cfg.probe_every);
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut merged = WorkerStats::new();
+    let mut journal: Vec<(String, String)> = Vec::new();
+    for w in writers {
+        let (stats, j) = w.join().map_err(|_| "a drill writer panicked".to_string())?;
+        merged.merge(&stats);
+        journal.extend(j);
+    }
+    // The zero-acked-write-loss check: every acknowledged PUT must read
+    // back from the coordinator after all the churn.
+    let mut lost = Vec::new();
+    for (key, val) in &journal {
+        let got = svc.handle(&format!("GET {key}"));
+        if !got.contains(val.as_str()) {
+            lost.push(format!("{key}={val} (got {got:?})"));
+        }
+    }
+    manager.shutdown();
+
+    Ok(ClusterDrillReport {
+        nodes: cfg.nodes,
+        replicas: cfg.replicas.min(cfg.nodes),
+        faults: plans
+            .iter()
+            .map(|p| FaultOutcome {
+                kind: p.kind.name(),
+                target: p.target,
+                injected_at_ms: p.injected_at_ms.unwrap_or(0),
+                detect_ms: match (p.injected_at_ms, p.confirmed_at_ms) {
+                    (Some(i), Some(c)) => Some(c.saturating_sub(i)),
+                    _ => None,
+                },
+                rejoined: p.rejoined,
+            })
+            .collect(),
+        detections,
+        rejoins,
+        acked_writes: merged.acked_puts,
+        lost,
+        availability: merged.per_second,
+        errors,
+        elapsed: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> ClusterDrillReport {
+        ClusterDrillReport {
+            nodes: 4,
+            replicas: 2,
+            faults: vec![
+                FaultOutcome {
+                    kind: "crash",
+                    target: 0,
+                    injected_at_ms: 1000,
+                    detect_ms: Some(620),
+                    rejoined: true,
+                },
+                FaultOutcome {
+                    kind: "partition",
+                    target: 1,
+                    injected_at_ms: 2500,
+                    detect_ms: Some(480),
+                    rejoined: true,
+                },
+            ],
+            detections: 2,
+            rejoins: 2,
+            acked_writes: 9000,
+            lost: Vec::new(),
+            availability: vec![(2000, 0), (1800, 10), (2100, 0)],
+            errors: Vec::new(),
+            elapsed: Duration::from_millis(5200),
+        }
+    }
+
+    #[test]
+    fn report_figures_and_verdict() {
+        let rep = sample_report();
+        assert!(rep.pass(), "{}", rep.summary());
+        assert_eq!(rep.detect_ms_max(), 620);
+        assert!((rep.availability_min() - 1800.0 / 1810.0).abs() < 1e-9);
+        let s = rep.summary();
+        assert!(s.contains("detections=2"), "{s}");
+        assert!(s.contains("lost=0"), "{s}");
+    }
+
+    #[test]
+    fn any_lost_write_or_missed_detection_fails() {
+        let mut rep = sample_report();
+        rep.lost.push("w0k7=v0x7".into());
+        assert!(!rep.pass());
+        let mut rep = sample_report();
+        rep.faults[1].detect_ms = None;
+        rep.detections = 1;
+        assert!(!rep.pass());
+        let mut rep = sample_report();
+        rep.errors.push("KILLN flaked".into());
+        assert!(!rep.pass());
+        let mut rep = sample_report();
+        rep.faults[0].rejoined = false;
+        rep.rejoins = 1;
+        assert!(!rep.pass());
+    }
+
+    #[test]
+    fn json_matches_the_gated_schema() {
+        let j = sample_report().to_json();
+        assert!(j.contains("\"bench\": \"cluster_drill\""), "{j}");
+        assert!(j.contains("\"detect_ms_max\": 620"), "{j}");
+        assert!(j.contains("\"lost_writes\": 0"), "{j}");
+        assert!(j.contains("\"availability_min\": 0.9945"), "{j}");
+        assert!(j.contains("\"fault_kinds\": [\"crash\", \"partition\"]"), "{j}");
+        assert!(j.contains("\"pass\": true"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+    }
+
+    #[test]
+    fn config_rejects_degenerate_shapes() {
+        let mut cfg = ClusterDrillConfig::new(PathBuf::from("/bin/true"));
+        cfg.nodes = 1;
+        assert!(run_drill(&cfg).is_err(), "one node cannot lose a member");
+        let mut cfg = ClusterDrillConfig::new(PathBuf::from("/bin/true"));
+        cfg.nodes = 2;
+        cfg.faults = vec![FaultKind::Crash; 3];
+        assert!(run_drill(&cfg).is_err(), "more faults than nodes");
+    }
+}

@@ -1,0 +1,31 @@
+//! `cluster` — the multi-process cluster: real node processes, a
+//! heartbeat failure detector, and the drill that ties them to the
+//! coordinator's migration machinery (DESIGN.md §15).
+//!
+//! Everything below the coordinator so far lived in one process; this
+//! module gives the system a *physical* shape:
+//!
+//! * [`manager`] — [`manager::ClusterManager`] spawns each storage node
+//!   as its own `memento node` child process (ephemeral loopback port,
+//!   one-line `LISTENING <addr>` stdout handshake), owns the pid table
+//!   and port map, and fronts every node with a
+//!   [`crate::testkit::faults::PartitionProxy`] so the whole fault
+//!   matrix — SIGKILL crash, SIGSTOP gray failure, socket-level
+//!   partition — is injectable per node.
+//! * [`detector`] — [`detector::FailureDetector`], the pure
+//!   `Alive → Suspect → Dead` state machine over probe outcomes:
+//!   confirmation counts suppress flaps, `ConfirmDead` fires exactly
+//!   once per death (the edge the coordinator turns into `KILLN` + a
+//!   migration drain), and rejoin is gated on snapshot install.
+//! * [`drill`] — [`drill::run_drill`]: node processes + live write
+//!   load + scheduled faults + the detector loop, ending in a
+//!   zero-acked-write-loss verdict with measured detection latency and
+//!   a per-second availability trajectory (`BENCH_cluster.json`).
+
+pub mod detector;
+pub mod drill;
+pub mod manager;
+
+pub use detector::{DetectorAction, DetectorConfig, FailureDetector, NodeHealth};
+pub use drill::{run_drill, ClusterDrillConfig, ClusterDrillReport};
+pub use manager::ClusterManager;

@@ -47,6 +47,9 @@
 //!                                    `CACHESTAT disabled` on an
 //!                                    uncached service)
 //! EPOCH                           → EPOCH <e> WORKING <w>
+//! PING                            → PONG EPOCH <e> WORKING <w>
+//!                                    (liveness probe; the heartbeat
+//!                                    failure detector's verb)
 //! FSYNC                           → SYNCED files=<n>   (flush every
 //!                                    unsynced WAL file; durable mode)
 //! WALSTAT                         → WALSTAT durable=<bool> <wal
@@ -831,6 +834,15 @@ impl Service {
             }
             Request::Epoch => Ok(Response::Info(format!(
                 "EPOCH {} WORKING {}",
+                self.router.epoch(),
+                self.router.working()
+            ))),
+            // The heartbeat probe (DESIGN.md §15): answered from the
+            // router's published counters only — no storage, no locks —
+            // so a node that can still schedule this handler is alive by
+            // the detector's definition.
+            Request::Ping => Ok(Response::Info(format!(
+                "PONG EPOCH {} WORKING {}",
                 self.router.epoch(),
                 self.router.working()
             ))),

@@ -13,6 +13,11 @@
 //! * [`coordinator`] — an epoch-versioned cluster-membership + request-router
 //!   layer (the L3 system contribution): dynamic batching, failure handling,
 //!   rebalance auditing, and a TCP front-end.
+//! * [`cluster`] — the multi-process cluster: `memento node` child
+//!   processes supervised by a pid/port-owning manager, a heartbeat
+//!   failure detector (`Alive → Suspect → Dead` with flap suppression)
+//!   that drives `KILLN`/rejoin automatically, and the end-to-end fault
+//!   drill behind `BENCH_cluster.json`.
 //! * [`runtime`] — the batched-lookup engine: a pure-Rust lockstep-lane
 //!   backend by default, with the PJRT path (AOT-compiled JAX/Pallas
 //!   artifacts, `artifacts/*.hlo.txt`) behind the `pjrt` cargo feature;
@@ -45,6 +50,7 @@
 pub mod algorithms;
 pub mod benchkit;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;

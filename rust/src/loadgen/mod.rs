@@ -14,7 +14,9 @@
 //! * a [`churn`] injector that fails and restores nodes mid-run, so the
 //!   paper's stable / one-shot / incremental scenarios run end-to-end;
 //! * per-thread [`crate::metrics::Histogram`]s merged into a
-//!   [`report::RunReport`] with p50/p99/p999 and JSON/CSV output.
+//!   [`report::RunReport`] with p50/p99/p999, a per-second availability
+//!   trajectory (the success-rate dip a fault drill gates on), and
+//!   JSON/CSV output.
 //!
 //! Traffic reaches the service through a [`target::Target`] — either
 //! in-process (no protocol overhead) or over live TCP — one per worker.
@@ -245,6 +247,7 @@ pub fn run(cfg: &LoadgenConfig, factory: &TargetFactory) -> Result<RunReport, St
         churn_events,
         node_loads,
         timeseries,
+        availability: merged.per_second,
     })
 }
 
@@ -317,14 +320,20 @@ fn worker_loop(
         let op = workload.next_op(&mut rng);
         let line = op.to_line();
         let sent = Instant::now();
+        // Availability bucket: whole seconds since run start, stamped at
+        // send time so a response delayed across a second boundary still
+        // charges the second the request was offered in.
+        let second = sent.duration_since(start).as_secs();
         match tgt.call(&line) {
             Ok(resp) => {
                 let done = Instant::now();
                 if resp.is_empty() || resp.starts_with("ERR") || resp.starts_with("BUSY") {
                     stats.errors += 1;
+                    stats.record_second(second, false);
                     continue;
                 }
                 stats.ops += 1;
+                stats.record_second(second, true);
                 if op.is_put() && resp.starts_with("OK") {
                     stats.acked_puts += 1;
                 }
@@ -339,6 +348,7 @@ fn worker_loop(
                 // and flag the abort so the report can say the offered
                 // load fell short.
                 stats.errors += 1;
+                stats.record_second(second, false);
                 stats.aborted_workers = 1;
                 break;
             }
@@ -381,6 +391,15 @@ mod tests {
         assert_eq!(rep.node_loads.len(), 8, "{:?}", rep.node_loads);
         assert!(rep.node_loads.iter().all(|n| n.weight == 1));
         assert!(rep.node_loads.iter().map(|n| n.ops()).sum::<u64>() > 0);
+        // Every operation lands in exactly one per-second availability
+        // bucket, so the trajectory totals reconcile with the run totals.
+        let (ok, err) = rep
+            .availability
+            .iter()
+            .fold((0u64, 0u64), |(o, e), (ok, err)| (o + ok, e + err));
+        assert_eq!(ok, rep.ops, "{:?}", rep.availability);
+        assert_eq!(err, rep.errors);
+        assert_eq!(rep.min_availability().unwrap().1, 1.0, "clean run");
     }
 
     #[test]

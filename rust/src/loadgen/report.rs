@@ -200,12 +200,33 @@ pub struct WorkerStats {
     pub corrected: Histogram,
     /// Latency measured from the actual send time.
     pub naive: Histogram,
+    /// Per-second `(ok, err)` operation buckets indexed by whole seconds
+    /// since run start: slot `i` counts operations *sent* during second
+    /// `i`. This is what turns a fault drill's "the cluster stayed up"
+    /// into a measured per-second success rate — a crash or partition
+    /// window reads as a dip in the trajectory (DESIGN.md §15).
+    pub per_second: Vec<(u64, u64)>,
 }
 
 impl WorkerStats {
     /// Empty stats.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Count one operation outcome in its per-second availability
+    /// bucket, growing the trajectory as the run progresses.
+    pub fn record_second(&mut self, second: u64, ok: bool) {
+        let idx = second as usize;
+        if self.per_second.len() <= idx {
+            self.per_second.resize(idx + 1, (0, 0));
+        }
+        let slot = &mut self.per_second[idx];
+        if ok {
+            slot.0 += 1;
+        } else {
+            slot.1 += 1;
+        }
     }
 
     /// Fold another worker's stats into this one.
@@ -216,6 +237,13 @@ impl WorkerStats {
         self.acked_puts += other.acked_puts;
         self.corrected.merge(&other.corrected);
         self.naive.merge(&other.naive);
+        if self.per_second.len() < other.per_second.len() {
+            self.per_second.resize(other.per_second.len(), (0, 0));
+        }
+        for (i, (ok, err)) in other.per_second.iter().enumerate() {
+            self.per_second[i].0 += ok;
+            self.per_second[i].1 += err;
+        }
     }
 }
 
@@ -259,6 +287,11 @@ pub struct RunReport {
     /// time axis that attributes a latency spike to a churn event and a
     /// named stage. Empty when the target did not answer the scrapes.
     pub timeseries: Vec<TimeSample>,
+    /// Per-second `(ok, err)` buckets merged across workers — the
+    /// availability trajectory. Second `i` covers `[i, i+1)` seconds
+    /// after run start; the per-second success rate is the drill-facing
+    /// availability figure (a fault window reads as a dip).
+    pub availability: Vec<(u64, u64)>,
 }
 
 impl RunReport {
@@ -316,6 +349,14 @@ impl RunReport {
             q(&self.naive, 0.999),
             benchkit::fmt_ns(self.naive.max() as f64)
         ));
+        if let Some((sec, rate)) = self.min_availability() {
+            out.push_str(&format!(
+                "availability (per-second): min success rate={:.4} at t={}s over {} seconds\n",
+                rate,
+                sec,
+                self.availability.len()
+            ));
+        }
         if !self.node_loads.is_empty() {
             out.push_str("per-node load (observed share vs weight share):\n");
             let mut err_max = 0.0f64;
@@ -376,6 +417,44 @@ impl RunReport {
             }
         }
         out
+    }
+
+    /// Lowest per-second success rate across the run, with the second it
+    /// occurred in (`None` when no second saw traffic). This is the
+    /// availability floor a fault drill gates on: a crash or partition
+    /// that stalls the data path shows up here even when the run-total
+    /// error ratio stays tiny.
+    pub fn min_availability(&self) -> Option<(u64, f64)> {
+        self.availability
+            .iter()
+            .enumerate()
+            .filter(|(_, (ok, err))| ok + err > 0)
+            .map(|(s, (ok, err))| (s as u64, *ok as f64 / (ok + err) as f64))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
+    /// Per-second success-rate table for the `results/` CSV trajectory
+    /// (`None` when the run collected no per-second buckets). A second
+    /// with no traffic at all emits rate 1.0 — no evidence of
+    /// unavailability is not the same as failure, and workers that sat
+    /// out a second (open-loop pacing gaps) should not read as an outage.
+    pub fn availability_table(&self) -> Option<Table> {
+        if self.availability.is_empty() {
+            return None;
+        }
+        let mut t =
+            Table::new("loadgen_availability", &["second", "ok", "err", "success_rate"]);
+        for (s, (ok, err)) in self.availability.iter().enumerate() {
+            let total = ok + err;
+            let rate = if total > 0 { *ok as f64 / total as f64 } else { 1.0 };
+            t.push_row(vec![
+                s.to_string(),
+                ok.to_string(),
+                err.to_string(),
+                format!("{rate:.4}"),
+            ]);
+        }
+        Some(t)
     }
 
     /// Per-event availability table for the `results/` CSV trajectory
@@ -563,13 +642,16 @@ impl RunReport {
                 )
             })
             .collect();
+        let avail: Vec<String> =
+            self.availability.iter().map(|(ok, err)| format!("[{ok}, {err}]")).collect();
         format!(
             "{{\n  \"mode\": \"{}\",\n  \"workload\": \"{}\",\n  \"churn\": \"{}\",\n  \
              \"threads\": {},\n  \"target_rate\": {:.1},\n  \"elapsed_s\": {:.3},\n  \
              \"ops\": {},\n  \"errors\": {},\n  \"aborted_workers\": {},\n  \
              \"acked_puts\": {},\n  \
              \"throughput\": {:.1},\n  \"latency_ns\": {},\n  \"naive_latency_ns\": {},\n  \
-             \"churn_events\": [{}],\n  \"timeseries_samples\": {}\n}}\n",
+             \"churn_events\": [{}],\n  \"availability_per_s\": [{}],\n  \
+             \"timeseries_samples\": {}\n}}\n",
             json_escape(&self.mode),
             json_escape(&self.workload),
             json_escape(&self.churn),
@@ -584,6 +666,7 @@ impl RunReport {
             hist(&self.corrected),
             hist(&self.naive),
             events.join(", "),
+            avail.join(", "),
             self.timeseries.len()
         )
     }
@@ -687,6 +770,7 @@ mod tests {
                     }],
                 },
             ],
+            availability: vec![(500, 0), (480, 20)],
         }
     }
 
@@ -707,6 +791,54 @@ mod tests {
         assert_eq!(a.aborted_workers, 1);
         assert_eq!(a.acked_puts, 3);
         assert_eq!(a.corrected.count(), 2);
+    }
+
+    #[test]
+    fn per_second_buckets_merge_elementwise() {
+        let mut a = WorkerStats::new();
+        let mut b = WorkerStats::new();
+        a.record_second(0, true);
+        a.record_second(2, false);
+        b.record_second(1, true);
+        b.record_second(2, true);
+        a.merge(&b);
+        assert_eq!(a.per_second, vec![(1, 0), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn availability_trajectory_renders_tables_and_json() {
+        let rep = sample_report();
+        let (sec, rate) = rep.min_availability().expect("two seconds of traffic");
+        assert_eq!(sec, 1, "second 1 has the errors");
+        assert!((rate - 0.96).abs() < 1e-9, "480/500 = {rate}");
+        let t = rep.availability_table().expect("two buckets");
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1][0], "1");
+        assert_eq!(t.rows[1][1], "480");
+        assert_eq!(t.rows[1][2], "20");
+        assert_eq!(t.rows[1][3], "0.9600");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("second,ok,err,success_rate"), "{csv}");
+        let r = rep.render();
+        assert!(
+            r.contains("availability (per-second): min success rate=0.9600 at t=1s"),
+            "{r}"
+        );
+        assert!(
+            rep.to_json().contains("\"availability_per_s\": [[500, 0], [480, 20]]"),
+            "{}",
+            rep.to_json()
+        );
+        // A traffic-free second reads as available, not as an outage.
+        let mut rep = rep;
+        rep.availability.insert(1, (0, 0));
+        assert_eq!(rep.availability_table().unwrap().rows[1][3], "1.0000");
+        assert_eq!(rep.min_availability().unwrap().0, 2, "the dip moved to second 2");
+        // No buckets at all → no table, no render section, no min.
+        rep.availability.clear();
+        assert!(rep.availability_table().is_none());
+        assert!(rep.min_availability().is_none());
+        assert!(!rep.render().contains("availability (per-second)"));
     }
 
     #[test]

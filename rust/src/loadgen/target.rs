@@ -68,8 +68,8 @@ impl Target for InProcTarget {
 /// lines) come back as `ERR <CODE> <msg>` lines so the generator counts
 /// them uniformly; only transport failures surface as `io::Error`.
 /// (This used to exist only for binary mode while text mode rode the
-/// raw-line `Client::request*` shims; those shims are deprecated —
-/// DESIGN.md §13 — and both modes now share the typed path.)
+/// raw-line `Client::request*` shims; those shims were removed —
+/// DESIGN.md §13 — and both modes share the typed path.)
 fn call_typed(client: &mut Client, line: &str) -> std::io::Result<String> {
     let req = match Request::parse_text(line) {
         Ok(req) => req,

@@ -10,6 +10,12 @@
 //! * `crashdrill` — kill-mid-run durability drills against the WAL
 //!   (child process aborted at a seed-selected crash site, then
 //!   recovered and checked — DESIGN.md §11.4);
+//! * `node`     — run one storage node process (spawned per member by
+//!   the cluster drill's `ClusterManager`; prints `LISTENING <addr>`
+//!   and serves the binary protocol — DESIGN.md §15.1);
+//! * `cluster-drill` — multi-process fault drill: node children +
+//!   heartbeat failure detector + live write load, ending in a
+//!   zero-acked-write-loss verdict (DESIGN.md §15.4);
 //! * `info`     — environment report (algorithms, artifacts, PJRT).
 
 use memento::cli::ArgSpec;
@@ -33,6 +39,8 @@ fn main() {
         Some("lookup") => cmd_lookup(&args[1..]),
         Some("drill") => cmd_drill(&args[1..]),
         Some("crashdrill") => cmd_crashdrill(&args[1..]),
+        Some("node") => cmd_node(&args[1..]),
+        Some("cluster-drill") => cmd_cluster_drill(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -49,7 +57,8 @@ fn main() {
 
 fn top_usage() -> &'static str {
     "memento — MementoHash consistent-hash router (paper reproduction)\n\n\
-     USAGE:\n  memento <serve|figures|loadgen|lookup|drill|crashdrill|replay|info> [flags]\n\n\
+     USAGE:\n  memento <serve|figures|loadgen|lookup|drill|crashdrill|node|cluster-drill|replay|info> \
+     [flags]\n\n\
      Run `memento <subcommand> --help` for details."
 }
 
@@ -510,6 +519,13 @@ fn run_loadgen(args: &memento::cli::Args) -> Result<(), String> {
                 Err(e) => eprintln!("[timeseries csv save failed: {e}]"),
             }
         }
+        // The per-second success-rate trajectory (availability column).
+        if let Some(av) = report.availability_table() {
+            match av.save_csv(&format!("{stem}_availability")) {
+                Ok(p) => println!("[saved {}]", p.display()),
+                Err(e) => eprintln!("[availability csv save failed: {e}]"),
+            }
+        }
     }
     let json_path = args.get("json");
     if !json_path.is_empty() {
@@ -771,6 +787,152 @@ fn cmd_crashdrill(raw: &[String]) -> i32 {
     } else {
         eprintln!("crashdrill: {failures} of {} drills FAILED", sites.len() * seeds.len());
         1
+    }
+}
+
+fn cmd_node(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("node", "run one storage node process (cluster member)")
+        .flag("bind", "127.0.0.1:0", "TCP bind address (0 = ephemeral port)")
+        .flag("max-conns", "64", "maximum concurrent connections");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // A node is a single-member service: its own storage, served over
+    // the same wire protocols as the coordinator (PING answers the
+    // heartbeat probes, PUT/GET carry snapshot installs).
+    let router = match Router::new("memento", 1, 8, None) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("node router: {e}");
+            return 1;
+        }
+    };
+    let svc = Service::new(router);
+    let max_conns: usize = args.get_parsed("max-conns").unwrap_or(64);
+    match svc.serve(args.get("bind"), max_conns) {
+        Ok(handle) => {
+            // The spawn handshake: exactly one stdout line, explicitly
+            // flushed — the parent reads it through a pipe (block
+            // buffered, so an unflushed println would hang the spawn).
+            use std::io::Write as _;
+            let mut out = std::io::stdout();
+            let _ = writeln!(out, "LISTENING {}", handle.addr());
+            let _ = out.flush();
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("node bind {} failed: {e}", args.get("bind"));
+            1
+        }
+    }
+}
+
+fn cmd_cluster_drill(raw: &[String]) -> i32 {
+    use memento::cluster::{run_drill, ClusterDrillConfig};
+    use memento::testkit::faults::FaultKind;
+    let spec = ArgSpec::new(
+        "cluster-drill",
+        "multi-process fault drill: node children, heartbeat detector, live load",
+    )
+    .flag("nodes", "4", "node processes (and coordinator members)")
+    .flag("replicas", "2", "PUT replication factor")
+    .flag("writers", "2", "concurrent writer threads")
+    .flag("duration", "4", "scheduled drill length in seconds (fractions allowed)")
+    .flag("faults", "crash,partition", "comma list drawn from crash|stall|partition")
+    .flag("probe-ms", "50", "heartbeat probe cadence in ms")
+    .flag("probe-timeout-ms", "100", "per-probe read deadline in ms")
+    .flag("json", "", "also write the report as JSON to this path (BENCH_cluster.json)");
+    let args = match spec.parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let exe = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot locate own binary for node children: {e}");
+            return 1;
+        }
+    };
+    let mut cfg = ClusterDrillConfig::new(exe);
+    cfg.nodes = args.get_parsed("nodes").unwrap_or(4);
+    cfg.replicas = args.get_parsed("replicas").unwrap_or(2);
+    cfg.writers = args.get_parsed("writers").unwrap_or(2);
+    let secs: f64 = args.get_parsed("duration").unwrap_or(4.0);
+    if !secs.is_finite() || secs <= 0.0 {
+        eprintln!("duration must be a positive number of seconds");
+        return 2;
+    }
+    cfg.duration = std::time::Duration::from_secs_f64(secs);
+    cfg.probe_every =
+        std::time::Duration::from_millis(args.get_parsed("probe-ms").unwrap_or(50));
+    cfg.probe_timeout =
+        std::time::Duration::from_millis(args.get_parsed("probe-timeout-ms").unwrap_or(100));
+    cfg.faults = Vec::new();
+    for tok in args.get("faults").split(',') {
+        match tok.trim() {
+            "crash" => cfg.faults.push(FaultKind::Crash),
+            "stall" => cfg.faults.push(FaultKind::Stall),
+            "partition" => cfg.faults.push(FaultKind::Partition),
+            other => {
+                eprintln!("unknown fault '{other}' (crash|stall|partition)");
+                return 2;
+            }
+        }
+    }
+    println!(
+        "cluster-drill: nodes={} replicas={} writers={} faults={} for {secs}s",
+        cfg.nodes,
+        cfg.replicas,
+        cfg.writers,
+        args.get("faults")
+    );
+    match run_drill(&cfg) {
+        Ok(rep) => {
+            for f in &rep.faults {
+                println!(
+                    "  fault {} on node {}: injected at {}ms, detected {} rejoined={}",
+                    f.kind,
+                    f.target,
+                    f.injected_at_ms,
+                    f.detect_ms.map_or("NEVER".to_string(), |d| format!("in {d}ms")),
+                    f.rejoined
+                );
+            }
+            for e in &rep.errors {
+                eprintln!("  error: {e}");
+            }
+            for l in rep.lost.iter().take(5) {
+                eprintln!("  lost: {l}");
+            }
+            let json_path = args.get("json");
+            if !json_path.is_empty() {
+                if let Err(e) = std::fs::write(json_path, rep.to_json()) {
+                    eprintln!("write {json_path}: {e}");
+                    return 1;
+                }
+                println!("[saved {json_path}]");
+            }
+            if rep.pass() {
+                println!("PASS {}", rep.summary());
+                0
+            } else {
+                println!("FAIL {}", rep.summary());
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("cluster-drill failed: {e}");
+            1
+        }
     }
 }
 

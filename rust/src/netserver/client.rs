@@ -1,8 +1,9 @@
 //! `client` — the blocking client for both wire protocols: typed
 //! framed calls ([`Client::call`] / [`Client::call_many`]) over either
-//! the newline text protocol or the length-prefixed binary framing,
-//! plus the historical line-oriented shims (`request*`) kept for
-//! existing callers.
+//! the newline text protocol or the length-prefixed binary framing.
+//! (The historical line-oriented `request*` shims were removed per the
+//! DESIGN.md §13 plan; [`Client::close`] replaced their last use,
+//! the transport-level `QUIT`.)
 //!
 //! One connected [`Client`] speaks exactly one protocol, chosen at
 //! connect time ([`Client::connect`] → text,
@@ -14,9 +15,9 @@ use crate::proto::{try_frame, ProtoError, Request, Response, MAGIC_BINARY, MAGIC
 use std::fmt;
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
-/// Bounded pipelining chunk for [`Client::call_many`] /
-/// [`Client::request_pipelined`].
+/// Bounded pipelining chunk for [`Client::call_many`].
 ///
 /// The chunking is load-bearing, not just a batching knob: writing an
 /// *unbounded* batch before reading anything deadlocks once the request
@@ -114,6 +115,40 @@ impl Client {
         Ok(Self { reader: BufReader::new(stream), writer, mode, rbuf: Vec::new() })
     }
 
+    /// Bound every subsequent read on this connection: a reply that
+    /// does not arrive within `timeout` surfaces as a
+    /// [`ClientError::Io`] of kind `WouldBlock`/`TimedOut` instead of
+    /// blocking forever. `None` restores unbounded reads.
+    ///
+    /// This is what makes a health probe safe against gray failure
+    /// (DESIGN.md §15): a SIGSTOPped node holds its sockets open and
+    /// never answers, so a probe without a deadline would hang the
+    /// failure detector on exactly the node it must declare dead. The
+    /// deadline lives on the client's socket — it is independent of any
+    /// server-side grace period on the data path.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// Transport-level goodbye: on the text protocol, send `QUIT` and
+    /// wait for the server's `BYE` ack, so the close is observed rather
+    /// than raced; on the binary protocol (which has no quit frame) the
+    /// socket just closes. Either way the client is consumed.
+    pub fn close(mut self) -> io::Result<()> {
+        if self.mode == ClientMode::Text {
+            self.send_text_line("QUIT")?;
+            let mut bye = String::new();
+            self.reader.read_line(&mut bye)?;
+            if bye.trim_end() != "BYE" {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("expected BYE, got {bye:?}"),
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Execute one typed request and return the typed response, or the
     /// server's typed error ([`ClientError::Proto`]), or a transport
     /// failure ([`ClientError::Io`]). Works on both protocols; in text
@@ -177,16 +212,6 @@ impl Client {
     }
 
     // -- text-mode internals ------------------------------------------------
-
-    fn check_text(&self) -> io::Result<()> {
-        if self.mode != ClientMode::Text {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidInput,
-                "text-line API used on a binary-mode client; use call()/call_many()",
-            ));
-        }
-        Ok(())
-    }
 
     fn send_text_line(&mut self, line: &str) -> io::Result<()> {
         self.writer.write_all(line.as_bytes())?;
@@ -267,67 +292,6 @@ impl Client {
         }
     }
 
-    // -- line-oriented shims (deprecated; removal tracked in DESIGN.md
-    // §13) ------------------------------------------------------------------
-
-    /// Send one request line, read one response line. **Deprecated
-    /// shim** (text mode only) — prefer [`Client::call`], which returns
-    /// typed responses and typed errors on both protocols.
-    #[deprecated(
-        since = "0.1.0",
-        note = "use Client::call — typed responses/errors on both protocols \
-                (removal tracked in DESIGN.md §13)"
-    )]
-    pub fn request(&mut self, line: &str) -> io::Result<String> {
-        self.check_text()?;
-        self.send_text_line(line)?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        Ok(resp.trim_end().to_string())
-    }
-
-    /// Send one request line, read a multi-line response until (and
-    /// including) the line that equals `terminator` — the shape of the
-    /// `METRICS` exposition, whose body is many lines ended by `# EOF`.
-    /// **Deprecated shim** (text mode only) — prefer [`Client::call`],
-    /// which picks the terminator from the request.
-    #[deprecated(
-        since = "0.1.0",
-        note = "use Client::call — it picks the terminator from the request \
-                (removal tracked in DESIGN.md §13)"
-    )]
-    pub fn request_multiline(&mut self, line: &str, terminator: &str) -> io::Result<String> {
-        self.check_text()?;
-        self.send_text_line(line)?;
-        self.read_multiline(terminator)
-    }
-
-    /// Pipelined raw-line batch, chunked like [`Client::call_many`].
-    /// **Deprecated shim** (text mode only) — prefer
-    /// [`Client::call_many`], which returns typed per-request results.
-    #[deprecated(
-        since = "0.1.0",
-        note = "use Client::call_many — typed per-request results \
-                (removal tracked in DESIGN.md §13)"
-    )]
-    pub fn request_pipelined(&mut self, lines: &[String]) -> io::Result<Vec<String>> {
-        self.check_text()?;
-        let mut out = Vec::with_capacity(lines.len());
-        for chunk in lines.chunks(PIPELINE_CHUNK) {
-            let mut buf = String::with_capacity(chunk.iter().map(|l| l.len() + 1).sum());
-            for line in chunk {
-                buf.push_str(line);
-                buf.push('\n');
-            }
-            self.writer.write_all(buf.as_bytes())?;
-            for _ in chunk {
-                let mut resp = String::new();
-                self.reader.read_line(&mut resp)?;
-                out.push(resp.trim_end().to_string());
-            }
-        }
-        Ok(out)
-    }
 }
 
 #[cfg(test)]
@@ -335,21 +299,24 @@ mod tests {
     use super::*;
 
     #[test]
-    // The deprecated shims' mode guard is still under test until the
-    // shims are removed (DESIGN.md §13).
-    #[allow(deprecated)]
-    fn text_api_is_rejected_on_a_binary_client() {
+    fn read_deadline_bounds_a_silent_peer() {
+        // A listener that accepts and then never answers — the shape of
+        // a SIGSTOPped node holding its sockets open. Without the
+        // deadline this call would block forever.
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
-        let mut c = Client::connect_binary(&addr).unwrap();
+        let mut c = Client::connect(&addr).unwrap();
         let held = hold.join().unwrap().unwrap();
-        let err = c.request("LOOKUP 1").unwrap_err();
-        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
-        let err = c.request_multiline("METRICS", "# EOF").unwrap_err();
-        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
-        let err = c.request_pipelined(&["LOOKUP 1".to_string()]).unwrap_err();
-        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        c.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let err = match c.call(&Request::Epoch) {
+            Err(ClientError::Io(e)) => e,
+            other => panic!("expected a transport timeout, got {other:?}"),
+        };
+        assert!(
+            matches!(err.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut),
+            "expected WouldBlock/TimedOut, got {err:?}"
+        );
         drop(held);
     }
 

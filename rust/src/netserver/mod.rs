@@ -972,6 +972,59 @@ mod tests {
         serve("127.0.0.1:0", 16, Arc::new(|req: &str| format!("echo:{req}"))).unwrap()
     }
 
+    /// Raw line I/O below the typed layer: echo handlers answer
+    /// arbitrary lines no [`Request`] can carry, so these tests speak
+    /// the socket directly (the deprecated `Client::request*` shims
+    /// they used to ride were removed per DESIGN.md §13).
+    struct RawLine {
+        reader: io::BufReader<TcpStream>,
+        writer: TcpStream,
+    }
+
+    impl RawLine {
+        fn connect(addr: &SocketAddr) -> Self {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let writer = stream.try_clone().unwrap();
+            Self { reader: io::BufReader::new(stream), writer }
+        }
+
+        fn request(&mut self, line: &str) -> io::Result<String> {
+            self.writer.write_all(line.as_bytes())?;
+            self.writer.write_all(b"\n")?;
+            let mut resp = String::new();
+            self.reader.read_line(&mut resp)?;
+            Ok(resp.trim_end().to_string())
+        }
+
+        /// Read a multi-line body until (and including) `terminator`,
+        /// then consume the server's frame newline; a leading `ERR`
+        /// line returns immediately (no terminator will ever come).
+        fn request_multiline(&mut self, line: &str, terminator: &str) -> io::Result<String> {
+            self.writer.write_all(line.as_bytes())?;
+            self.writer.write_all(b"\n")?;
+            let mut out = String::new();
+            loop {
+                let mut l = String::new();
+                if self.reader.read_line(&mut l)? == 0 {
+                    break;
+                }
+                let done = l.trim_end() == terminator;
+                let err = out.is_empty() && l.starts_with("ERR");
+                out.push_str(&l);
+                if err {
+                    break;
+                }
+                if done {
+                    let mut frame = String::new();
+                    self.reader.read_line(&mut frame)?;
+                    break;
+                }
+            }
+            Ok(out)
+        }
+    }
+
     /// A typed handler: LOOKUP maps to a deterministic bucket/node,
     /// GET is always missing, PUT acks, everything else is refused.
     struct TypedEcho;
@@ -1002,13 +1055,9 @@ mod tests {
     }
 
     #[test]
-    // Raw-line echo handlers sit below the typed protocol, so the
-    // deprecated line shims are the right instrument here — they stay
-    // in use until the shims are removed (DESIGN.md §13).
-    #[allow(deprecated)]
     fn request_response_roundtrip() {
         let server = echo_server();
-        let mut c = Client::connect(&server.addr()).unwrap();
+        let mut c = RawLine::connect(&server.addr());
         assert_eq!(c.request("hello").unwrap(), "echo:hello");
         assert_eq!(c.request("world").unwrap(), "echo:world");
         assert_eq!(c.request("QUIT").unwrap(), "BYE");
@@ -1016,16 +1065,13 @@ mod tests {
     }
 
     #[test]
-    // Raw-line echo handler: the deprecated shims are the instrument
-    // (DESIGN.md §13).
-    #[allow(deprecated)]
     fn concurrent_clients() {
         let server = echo_server();
         let addr = server.addr();
         let threads: Vec<_> = (0..8)
             .map(|i| {
                 std::thread::spawn(move || {
-                    let mut c = Client::connect(&addr).unwrap();
+                    let mut c = RawLine::connect(&addr);
                     for j in 0..50 {
                         let req = format!("{i}-{j}");
                         assert_eq!(c.request(&req).unwrap(), format!("echo:{req}"));
@@ -1040,9 +1086,6 @@ mod tests {
     }
 
     #[test]
-    // Raw-line handler with a hand-rolled multiline shape: only the
-    // deprecated shims can speak it (DESIGN.md §13).
-    #[allow(deprecated)]
     fn multiline_responses_preserve_framing() {
         // A handler that answers EXPO with a multi-line, EOF-terminated
         // body (the METRICS shape) and everything else with one line.
@@ -1060,7 +1103,7 @@ mod tests {
             }),
         )
         .unwrap();
-        let mut c = Client::connect(&server.addr()).unwrap();
+        let mut c = RawLine::connect(&server.addr());
         let body = c.request_multiline("EXPO", "# EOF").unwrap();
         assert_eq!(body, "# TYPE a counter\na 1\n# EOF\n");
         // The frame newline was consumed: the connection still lines up.
@@ -1144,9 +1187,6 @@ mod tests {
     }
 
     #[test]
-    // Raw-line echo handler: the deprecated shim is the instrument
-    // (DESIGN.md §13).
-    #[allow(deprecated)]
     fn shutdown_terminates_accept_loop() {
         let server = echo_server();
         let addr = server.addr();
@@ -1154,8 +1194,12 @@ mod tests {
         // Loop thread is gone; new connections either fail or are never
         // served. Allow a beat for the OS to tear down.
         std::thread::sleep(Duration::from_millis(50));
-        if let Ok(mut c) = Client::connect(&addr) {
+        if let Ok(stream) = TcpStream::connect(addr) {
             // Connection may open (listener backlog) but must not respond.
+            let mut c = RawLine {
+                reader: io::BufReader::new(stream.try_clone().unwrap()),
+                writer: stream,
+            };
             let r = c.request("x");
             assert!(r.is_err() || r.unwrap().is_empty());
         }

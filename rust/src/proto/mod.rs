@@ -241,6 +241,11 @@ pub enum Request {
     },
     /// Hot-key cache counters: `CACHESTAT`.
     CacheStat,
+    /// Liveness probe: `PING`. Answered `PONG EPOCH <e> WORKING <w>`
+    /// without touching storage — the heartbeat failure detector's
+    /// probe verb (DESIGN.md §15), cheap enough to send every few
+    /// hundred milliseconds per node.
+    Ping,
 }
 
 impl Request {
@@ -378,6 +383,7 @@ mod tests {
         assert!(Request::Put { key: 1, value: "v".into() }.is_data_path());
         assert!(!Request::Kill { bucket: 1 }.is_data_path());
         assert!(!Request::Stats.is_data_path());
+        assert!(!Request::Ping.is_data_path(), "probes must not skew the latency tail");
     }
 
     #[test]

@@ -99,6 +99,7 @@ impl Request {
             },
             Some("STAGES") => Request::Stages,
             Some("CACHESTAT") => Request::CacheStat,
+            Some("PING") => Request::Ping,
             Some("DUMP") => {
                 // Lenient like the old dispatch: a non-numeric count falls
                 // back to the server default instead of rejecting.
@@ -144,6 +145,7 @@ impl Request {
             Request::Series { metric } => format!("SERIES {metric}"),
             Request::Stages => "STAGES".into(),
             Request::CacheStat => "CACHESTAT".into(),
+            Request::Ping => "PING".into(),
             Request::Dump { max: Some(n) } => format!("DUMP {n}"),
             Request::Dump { max: None } => "DUMP".into(),
         }
@@ -260,6 +262,7 @@ mod tests {
             ("SERIES some_metric", Request::Series { metric: "some_metric".into() }),
             ("STAGES", Request::Stages),
             ("CACHESTAT", Request::CacheStat),
+            ("PING", Request::Ping),
             ("DUMP 99", Request::Dump { max: Some(99) }),
             ("DUMP", Request::Dump { max: None }),
         ] {

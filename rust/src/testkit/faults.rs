@@ -1,0 +1,390 @@
+//! `faults` — process-level fault injection for cluster drills
+//! (DESIGN.md §15.3).
+//!
+//! Three fault families, each exercising a different failure mode of a
+//! real node *process* (not a `KILL n` protocol line):
+//!
+//! * **Crash** — `SIGKILL` via [`std::process::Child::kill`]: the
+//!   process vanishes, its sockets RST, the kernel reclaims everything.
+//!   The cleanest failure; detection sees connection errors.
+//! * **Stall (gray failure)** — [`sigstop`] / [`sigcont`]: the process
+//!   is frozen mid-whatever-it-was-doing but its sockets stay open and
+//!   ESTABLISHED. Nothing errors; probes just never get answered. This
+//!   is the case that forces the probe read deadline
+//!   ([`crate::netserver::Client::set_read_timeout`]) — without it the
+//!   detector would hang on exactly the node it must declare dead.
+//! * **Partition** — [`PartitionProxy`]: a tiny in-process TCP
+//!   forwarder sitting between the coordinator and one node, able to
+//!   blackhole either direction on command. Bytes are read and
+//!   discarded rather than the connection being reset, so the victim
+//!   looks *slow*, not *gone* — the asymmetric-partition shapes (can
+//!   send, can't hear) fall out of the per-direction flags.
+//!
+//! The signal shim declares `kill(2)` directly (same in-crate FFI idiom
+//! as [`crate::netserver::poll`] — std already links libc, so the
+//! symbol resolves without any external crate).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+// SAFETY contract for the declaration: `kill(2)` is async-signal-safe,
+// takes two plain integers, and returns 0 / -1 + errno — no pointers,
+// no ownership. Signature per POSIX; std links libc on every unix.
+extern "C" {
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+
+/// `SIGSTOP` — uncatchable suspend (Linux value; 17 on the BSDs/macOS).
+#[cfg(target_os = "linux")]
+const SIGSTOP: i32 = 19;
+#[cfg(not(target_os = "linux"))]
+const SIGSTOP: i32 = 17;
+
+/// `SIGCONT` — resume a stopped process (Linux value; 19 on the
+/// BSDs/macOS).
+#[cfg(target_os = "linux")]
+const SIGCONT: i32 = 18;
+#[cfg(not(target_os = "linux"))]
+const SIGCONT: i32 = 19;
+
+fn send_signal(pid: u32, sig: i32) -> io::Result<()> {
+    // SAFETY: kill(2) takes two integers by value and touches no
+    // caller memory. A stale pid can at worst signal the wrong process
+    // in our own session — the drill harness only passes pids of
+    // children it still owns (not yet waited on), so the pid cannot
+    // have been recycled.
+    let rc = unsafe { kill(pid as i32, sig) };
+    if rc == 0 {
+        Ok(())
+    } else {
+        Err(io::Error::last_os_error())
+    }
+}
+
+/// Freeze a process (`SIGSTOP`): gray failure — sockets stay open,
+/// nothing answers. Undo with [`sigcont`].
+pub fn sigstop(pid: u32) -> io::Result<()> {
+    send_signal(pid, SIGSTOP)
+}
+
+/// Thaw a process frozen by [`sigstop`] (`SIGCONT`).
+pub fn sigcont(pid: u32) -> io::Result<()> {
+    send_signal(pid, SIGCONT)
+}
+
+/// The fault matrix one drill event draws from (DESIGN.md §15.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// SIGKILL the node process: sockets reset, detection via errors.
+    Crash,
+    /// SIGSTOP the node process: sockets live, probes time out.
+    Stall,
+    /// Blackhole the node's proxy in both directions: bytes vanish.
+    Partition,
+}
+
+impl FaultKind {
+    /// Stable name for logs and drill reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Stall => "stall",
+            FaultKind::Partition => "partition",
+        }
+    }
+}
+
+/// How long a proxy relay thread blocks in `read` before re-checking
+/// its stop/blackhole flags. Bounds both shutdown latency and the lag
+/// between `partition()` and bytes actually stopping.
+const RELAY_POLL: Duration = Duration::from_millis(25);
+
+/// A per-node TCP forwarder the coordinator dials *instead of* the
+/// node: `coordinator → proxy → node`. While healthy it shuttles bytes
+/// both ways; [`PartitionProxy::partition`] makes it read-and-discard
+/// (either direction independently via
+/// [`PartitionProxy::set_blackhole`]), so the peer sees silence — not
+/// a reset — exactly like a dropped-packets network partition.
+///
+/// Connections accepted while partitioned still complete the TCP
+/// handshake (loopback accepts in the kernel), but no payload crosses;
+/// a probe on such a connection times out rather than erroring, which
+/// is the hard case the failure detector must classify as death.
+pub struct PartitionProxy {
+    addr: SocketAddr,
+    drop_to_node: Arc<AtomicBool>,
+    drop_to_client: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl PartitionProxy {
+    /// Bind a loopback port and start forwarding to `target`.
+    pub fn start(target: SocketAddr) -> io::Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let drop_to_node = Arc::new(AtomicBool::new(false));
+        let drop_to_client = Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let (dn, dc, stop) = (drop_to_node.clone(), drop_to_client.clone(), stop.clone());
+            std::thread::Builder::new()
+                .name("fault-proxy".into())
+                .spawn(move || accept_loop(listener, target, dn, dc, stop))
+                .expect("spawn fault-proxy thread")
+        };
+        Ok(Self {
+            addr,
+            drop_to_node,
+            drop_to_client,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The loopback address clients should dial instead of the node.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Blackhole both directions: a full partition.
+    pub fn partition(&self) {
+        self.set_blackhole(true, true);
+    }
+
+    /// Restore forwarding in both directions.
+    pub fn heal(&self) {
+        self.set_blackhole(false, false);
+    }
+
+    /// Set each direction independently: `to_node` drops
+    /// coordinator→node bytes, `to_client` drops node→coordinator
+    /// bytes — the asymmetric (can-send / can't-hear) partition shapes.
+    pub fn set_blackhole(&self, to_node: bool, to_client: bool) {
+        self.drop_to_node.store(to_node, Ordering::SeqCst);
+        self.drop_to_client.store(to_client, Ordering::SeqCst);
+    }
+
+    /// True if either direction is currently blackholed.
+    pub fn is_partitioned(&self) -> bool {
+        self.drop_to_node.load(Ordering::SeqCst) || self.drop_to_client.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for PartitionProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Relay threads are detached: they observe `stop` within
+        // RELAY_POLL (or instantly, on peer close when the drill tears
+        // its connections down) and exit on their own.
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    target: SocketAddr,
+    drop_to_node: Arc<AtomicBool>,
+    drop_to_client: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((client, _)) => {
+                // Dial the node per accepted connection. A dead node
+                // (crash fault) refuses; dropping the client socket
+                // here gives the dialer an immediate error — the same
+                // signal a direct connection would produce.
+                let Ok(node) = TcpStream::connect(target) else {
+                    continue;
+                };
+                let _ = client.set_nodelay(true);
+                let _ = node.set_nodelay(true);
+                spawn_relay(&client, &node, drop_to_node.clone(), stop.clone(), "fwd");
+                spawn_relay(&node, &client, drop_to_client.clone(), stop.clone(), "rev");
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One direction of one proxied connection: copy bytes `from → to`
+/// unless this direction's blackhole flag is up, in which case the
+/// bytes are read and dropped (silence, not reset). Exits on EOF,
+/// transport error, or the proxy-wide stop flag.
+fn spawn_relay(
+    from: &TcpStream,
+    to: &TcpStream,
+    blackhole: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    dir: &str,
+) {
+    let (Ok(mut from), Ok(mut to)) = (from.try_clone(), to.try_clone()) else {
+        return;
+    };
+    let _ = from.set_read_timeout(Some(RELAY_POLL));
+    let _ = std::thread::Builder::new()
+        .name(format!("fault-relay-{dir}"))
+        .spawn(move || {
+            let mut buf = [0u8; 4096];
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let n = match from.read(&mut buf) {
+                    Ok(0) => {
+                        // EOF: propagate the close so the peer's reads
+                        // terminate too (a healed proxy must not leave
+                        // half-open zombies).
+                        let _ = to.shutdown(std::net::Shutdown::Write);
+                        return;
+                    }
+                    Ok(n) => n,
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        continue;
+                    }
+                    Err(_) => return,
+                };
+                if blackhole.load(Ordering::SeqCst) {
+                    continue; // read and discarded — the partition
+                }
+                if to.write_all(&buf[..n]).is_err() {
+                    return;
+                }
+            }
+        });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    /// A one-line echo peer: accepts connections, answers each line
+    /// with `pong:<line>`.
+    fn echo_peer() -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            while let Ok((stream, _)) = listener.accept() {
+                let mut reader = io::BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                while {
+                    line.clear();
+                    reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false)
+                } {
+                    let resp = format!("pong:{}\n", line.trim_end());
+                    if writer.write_all(resp.as_bytes()).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, t)
+    }
+
+    fn ask(stream: &mut TcpStream, reader: &mut io::BufReader<TcpStream>, msg: &str) -> String {
+        stream.write_all(format!("{msg}\n").as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    }
+
+    #[test]
+    fn proxy_forwards_both_directions() {
+        let (peer, _t) = echo_peer();
+        let proxy = PartitionProxy::start(peer).unwrap();
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        let mut reader = io::BufReader::new(s.try_clone().unwrap());
+        assert_eq!(ask(&mut s, &mut reader, "hello"), "pong:hello");
+        assert_eq!(ask(&mut s, &mut reader, "again"), "pong:again");
+        assert!(!proxy.is_partitioned());
+    }
+
+    #[test]
+    fn partition_blackholes_and_heal_restores() {
+        let (peer, _t) = echo_peer();
+        let proxy = PartitionProxy::start(peer).unwrap();
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        let mut reader = io::BufReader::new(s.try_clone().unwrap());
+        assert_eq!(ask(&mut s, &mut reader, "pre"), "pong:pre");
+
+        proxy.partition();
+        // Give the relay a beat to observe the flag, then verify
+        // silence: the write succeeds (TCP buffers it) but no response
+        // crosses within the deadline.
+        std::thread::sleep(RELAY_POLL * 2);
+        s.write_all(b"lost\n").unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let mut swallowed = String::new();
+        let err = reader.read_line(&mut swallowed).unwrap_err();
+        assert!(
+            matches!(err.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut),
+            "partitioned read must time out, got {err:?}"
+        );
+
+        // Heal on a *fresh* connection: the blackholed bytes are gone
+        // for good (dropped, not queued — a real partition loses them).
+        proxy.heal();
+        s.set_read_timeout(None).unwrap();
+        let mut s2 = TcpStream::connect(proxy.addr()).unwrap();
+        let mut r2 = io::BufReader::new(s2.try_clone().unwrap());
+        assert_eq!(ask(&mut s2, &mut r2, "post"), "pong:post");
+    }
+
+    #[test]
+    fn sigstop_freezes_and_sigcont_thaws_a_child() {
+        // `sleep` exists on every unix CI image; the child never exits
+        // on its own inside the test window.
+        let mut child = std::process::Command::new("sleep")
+            .arg("30")
+            .spawn()
+            .expect("spawn sleep");
+        let pid = child.id();
+        sigstop(pid).expect("SIGSTOP must be deliverable to our own child");
+        #[cfg(target_os = "linux")]
+        {
+            // /proc state letter 'T' = stopped: the field right after
+            // the parenthesized comm (which may itself contain spaces,
+            // hence the rsplit on the closing paren). Delivery is
+            // asynchronous, so poll briefly.
+            let state_of = || {
+                let stat = std::fs::read_to_string(format!("/proc/{pid}/stat")).unwrap();
+                stat.rsplit_once(')')
+                    .map(|(_, rest)| rest.trim_start())
+                    .and_then(|rest| rest.split(' ').next())
+                    .unwrap_or("")
+                    .to_string()
+            };
+            let deadline = std::time::Instant::now() + Duration::from_secs(2);
+            while state_of() != "T" && std::time::Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            assert_eq!(state_of(), "T", "child never reached the stopped state");
+        }
+        sigcont(pid).expect("SIGCONT must thaw the child");
+        child.kill().unwrap();
+        child.wait().unwrap();
+    }
+
+    #[test]
+    fn fault_kind_names_are_stable() {
+        assert_eq!(FaultKind::Crash.name(), "crash");
+        assert_eq!(FaultKind::Stall.name(), "stall");
+        assert_eq!(FaultKind::Partition.name(), "partition");
+    }
+}

@@ -11,6 +11,9 @@
 //!   with `MEMENTO_TEST_SEED` to explore; it is printed on failure).
 //! * [`crashdrill`] — deterministic kill-mid-run recovery drills for the
 //!   durability layer (child process + seed-selected crash points).
+//! * [`faults`] — process-level fault injection for cluster drills:
+//!   SIGSTOP/SIGCONT gray failure, SIGKILL crash, and a per-node TCP
+//!   partition proxy (DESIGN.md §15.3).
 
 #[allow(unused_imports)] // Rng64 brings the generator methods into scope for callers
 pub use crate::hashing::prng::Rng64;
@@ -19,6 +22,7 @@ use crate::hashing::prng::Xoshiro256;
 use std::fmt::Debug;
 
 pub mod crashdrill;
+pub mod faults;
 pub mod script;
 
 /// Property-run configuration.

@@ -1,0 +1,125 @@
+//! Integration: the multi-process cluster (DESIGN.md §15). Each test
+//! spawns real `memento node` child processes through the
+//! `ClusterManager`, drives the fault matrix against them, and — in the
+//! drill test — runs the whole detector-driven recovery loop end to
+//! end with live write load and the zero-acked-write-loss check.
+
+use memento::cluster::{run_drill, ClusterDrillConfig, ClusterManager};
+use memento::testkit::faults::FaultKind;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const CHILD: &str = env!("CARGO_BIN_EXE_memento");
+
+/// Generous probe deadline for CI machines; the drill's production
+/// default (100 ms) is exercised by `cluster-smoke`.
+const PROBE: Duration = Duration::from_millis(300);
+
+/// Probe with a few retries — a freshly spawned or respawned child may
+/// need a beat before its accept loop answers.
+fn probe_soon(m: &ClusterManager, node: usize) -> bool {
+    for _ in 0..20 {
+        if m.probe(node, PROBE) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    false
+}
+
+#[test]
+fn manager_spawns_probes_and_survives_the_fault_matrix() {
+    let mut m = ClusterManager::new(PathBuf::from(CHILD));
+    let a = m.spawn_node().expect("spawn node 0");
+    let b = m.spawn_node().expect("spawn node 1");
+    assert_eq!((a, b), (0, 1));
+    assert_eq!(m.len(), 2);
+    assert!(probe_soon(&m, 0), "fresh node 0 must PONG");
+    assert!(probe_soon(&m, 1), "fresh node 1 must PONG");
+    assert_ne!(m.addr(0), m.real_addr(0), "clients dial the proxy, not the node");
+
+    // Crash: the process is gone; probes fail fast; restart revives the
+    // slot with a new pid and port.
+    let old_pid = m.pid(0);
+    m.crash(0).expect("SIGKILL node 0");
+    assert!(!m.is_running(0));
+    assert!(!m.probe(0, PROBE), "crashed node must not answer");
+    m.restart(0).expect("respawn node 0");
+    assert!(m.is_running(0));
+    assert_ne!(m.pid(0), old_pid, "restart is a new process");
+    assert!(probe_soon(&m, 0), "restarted node must PONG");
+
+    // Gray failure: SIGSTOP leaves sockets open but nothing answers —
+    // the probe's read deadline must classify it as failure, and
+    // SIGCONT must bring it straight back.
+    m.stall(1).expect("SIGSTOP node 1");
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!m.probe(1, Duration::from_millis(150)), "stalled node must time out");
+    m.resume(1).expect("SIGCONT node 1");
+    assert!(probe_soon(&m, 1), "thawed node must PONG");
+
+    // Partition: the node process is perfectly healthy but its bytes
+    // vanish at the proxy; healing restores fresh connections.
+    m.partition(1);
+    assert!(!m.probe(1, Duration::from_millis(150)), "partitioned node must time out");
+    m.heal(1);
+    assert!(probe_soon(&m, 1), "healed node must PONG");
+
+    m.shutdown();
+    assert!(!m.probe(0, PROBE));
+    assert!(!m.probe(1, PROBE));
+}
+
+/// The mini acceptance drill: one SIGKILL crash against a 3-node
+/// cluster under live write load. The detector must confirm the death
+/// (driving the real `KILLN` + migration drain), the respawned node
+/// must rejoin via `ADD` + snapshot install, and every acked write must
+/// read back afterwards. The larger CI shape (4 nodes, crash +
+/// partition) runs in the `cluster-smoke` job via the binary.
+#[test]
+fn crash_drill_detects_drains_and_rejoins_losslessly() {
+    let mut cfg = ClusterDrillConfig::new(PathBuf::from(CHILD));
+    cfg.nodes = 3;
+    cfg.writers = 1;
+    cfg.duration = Duration::from_millis(1500);
+    cfg.faults = vec![FaultKind::Crash];
+    let rep = run_drill(&cfg).expect("drill must run");
+    assert!(
+        rep.pass(),
+        "cluster drill failed:\n  {}\n  errors: {:?}\n  lost: {:?}",
+        rep.summary(),
+        rep.errors,
+        rep.lost
+    );
+    assert_eq!(rep.detections, 1, "exactly one detector-driven KILLN");
+    assert_eq!(rep.rejoins, 1, "the crashed node must rejoin");
+    assert!(rep.faults[0].detect_ms.is_some(), "detection latency measured");
+    assert!(rep.acked_writes > 0, "the writers made progress");
+    assert!(!rep.availability.is_empty(), "per-second availability collected");
+    // The JSON payload carries the gated figures.
+    let j = rep.to_json();
+    assert!(j.contains("\"bench\": \"cluster_drill\""), "{j}");
+    assert!(j.contains("\"lost_writes\": 0"), "{j}");
+}
+
+/// A partition (bytes vanish, process healthy) must be detected and
+/// recovered exactly like a crash — the gray path the read deadline
+/// exists for.
+#[test]
+fn partition_drill_recovers_through_the_proxy() {
+    let mut cfg = ClusterDrillConfig::new(PathBuf::from(CHILD));
+    cfg.nodes = 3;
+    cfg.writers = 1;
+    cfg.duration = Duration::from_millis(1500);
+    cfg.faults = vec![FaultKind::Partition];
+    let rep = run_drill(&cfg).expect("drill must run");
+    assert!(
+        rep.pass(),
+        "partition drill failed:\n  {}\n  errors: {:?}\n  lost: {:?}",
+        rep.summary(),
+        rep.errors,
+        rep.lost
+    );
+    assert_eq!(rep.faults[0].kind, "partition");
+    assert_eq!(rep.rejoins, 1);
+}

@@ -49,6 +49,7 @@ fn all_requests() -> Vec<Request> {
         Request::Series { metric: "service_requests".into() },
         Request::Stages,
         Request::CacheStat,
+        Request::Ping,
         Request::Dump { max: Some(16) },
         Request::Dump { max: None },
     ]

@@ -41,12 +41,9 @@ fn tcp_protocol_roundtrip() {
     assert!(r.starts_with("BUCKET "), "{r}");
     let r = req(&mut c, "EPOCH");
     assert_eq!(r, "EPOCH 0 WORKING 8");
-    // QUIT is a transport-level command with no typed request; the
-    // raw-line shim is the only way to speak it until it is removed
-    // alongside the shims (DESIGN.md §13).
-    #[allow(deprecated)]
-    let bye = c.request("QUIT").unwrap();
-    assert_eq!(bye, "BYE");
+    // QUIT is transport-level: `Client::close` sends it and waits for
+    // the server's BYE ack (the DESIGN.md §13 shim-removal endgame).
+    c.close().unwrap();
     server.shutdown();
 }
 

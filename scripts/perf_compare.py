@@ -8,6 +8,11 @@ Usage:
         --loadgen BENCH_loadgen_smoke.json \
         --baseline ci/perf-baseline.json
 
+The cluster-smoke job runs it standalone against the drill payload:
+
+    python3 scripts/perf_compare.py \
+        --cluster BENCH_cluster.json --baseline ci/perf-baseline.json
+
 The baseline holds conservative *floors* (see ci/perf-baseline.json):
 CI runners are shared and noisy, so the gate only trips when measured
 throughput falls below baseline/2 — a real regression (a lock back on
@@ -36,7 +41,7 @@ def cell_throughput(rows, threads):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--current", required=True, help="BENCH_router_scaling.json from this run")
+    ap.add_argument("--current", help="BENCH_router_scaling.json from this run (optional)")
     ap.add_argument("--loadgen", help="BENCH_loadgen_smoke.json from this run (optional)")
     ap.add_argument("--migration", help="BENCH_migration.json from this run (optional)")
     ap.add_argument("--weighted", help="BENCH_weighted.json from this run (optional)")
@@ -44,10 +49,11 @@ def main():
     ap.add_argument("--obs", help="BENCH_obs.json from this run (optional)")
     ap.add_argument("--conn", help="BENCH_conn.json from this run (optional)")
     ap.add_argument("--hotset", help="BENCH_hotset.json from this run (optional)")
+    ap.add_argument("--cluster", help="BENCH_cluster.json from this run (optional)")
     ap.add_argument("--baseline", required=True, help="committed ci/perf-baseline.json")
     args = ap.parse_args()
 
-    current = load(args.current)
+    current = load(args.current) if args.current else None
     baseline = load(args.baseline)
     failures = []
     checks = []
@@ -67,12 +73,13 @@ def main():
         if not ok:
             failures.append(name)
 
-    for threads, floor in baseline["loadgen_closed_ops_s"].items():
-        measured = cell_throughput(current["loadgen_closed"], int(threads))
-        gate(f"loadgen closed @ {threads} threads", measured, floor)
-    for threads, floor in baseline["route_only_ops_s"].items():
-        measured = cell_throughput(current["route_only"], int(threads))
-        gate(f"route-only @ {threads} threads", measured, floor)
+    if current is not None:
+        for threads, floor in baseline["loadgen_closed_ops_s"].items():
+            measured = cell_throughput(current["loadgen_closed"], int(threads))
+            gate(f"loadgen closed @ {threads} threads", measured, floor)
+        for threads, floor in baseline["route_only_ops_s"].items():
+            measured = cell_throughput(current["route_only"], int(threads))
+            gate(f"route-only @ {threads} threads", measured, floor)
 
     if args.loadgen:
         smoke = load(args.loadgen)
@@ -209,6 +216,41 @@ def main():
         if speed is not None:
             print(f"hot-key cache speedup at zipf s=1.2: {speed}x (informational)")
 
+    if args.cluster:
+        clu = load(args.cluster)
+        n_faults = int(clu["faults"])
+        # Every scheduled fault must be confirmed by the detector (which
+        # is what drives the KILLN + drain) and every downed node must
+        # rejoin — these are exact counts, not noisy figures.
+        for figure, label in (("detections", "cluster detections"), ("rejoins", "cluster rejoins")):
+            got = int(clu[figure])
+            ok = got == n_faults
+            checks.append((f"{label} (== faults)", got, n_faults, n_faults, ok))
+            if not ok:
+                failures.append(f"{label} (== faults)")
+        # Zero acked-write loss is the drill's core invariant: a single
+        # lost write is a durability bug, never runner jitter.
+        gate_ceiling("cluster lost writes (ceiling)", float(clu["lost_writes"]), 0)
+        # Detection latency rides the probe cadence, not CPU speed, so a
+        # generous absolute ceiling catches a stuck detector without
+        # flaking on slow runners.
+        gate_ceiling(
+            "cluster detect ms max (ceiling)",
+            float(clu["detect_ms_max"]),
+            baseline["cluster_detect_ms_max"],
+        )
+        # Availability floor is absolute: the write path must keep
+        # serving through single-node faults at replicas=2.
+        avail = float(clu["availability_min"])
+        floor = baseline["cluster_availability_min"]
+        ok = avail >= floor
+        checks.append(("cluster availability min (floor, absolute)", avail, floor, floor, ok))
+        if not ok:
+            failures.append("cluster availability min (floor, absolute)")
+        if not bool(clu.get("pass", False)):
+            failures.append("cluster drill self-verdict")
+            checks.append(("cluster drill self-verdict", 0, 1, 1, False))
+
     width = max(len(c[0]) for c in checks)
 
     def fmt(v):
@@ -222,7 +264,7 @@ def main():
             f"baseline {fmt(floor)}  gate {fmt(threshold)}  {verdict}"
         )
 
-    scaling = current.get("loadgen_speedup_8v1")
+    scaling = current.get("loadgen_speedup_8v1") if current is not None else None
     if scaling is not None:
         cores = current.get("cores", "?")
         print(f"\nloadgen speedup 8v1: {scaling}x on {cores} cores (informational)")

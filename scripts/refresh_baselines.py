@@ -33,6 +33,13 @@ REFERENCES = {
     "BENCH_wal.json": ["wal_batch_puts_per_s", "wal_osonly_puts_per_s"],
     "BENCH_conn.json": ["conn_bin_lookup_ops_s", "conn_1k_ops_s", "conn_p999_us"],
     "BENCH_hotset.json": ["hotset_get_ops_s", "hotset_hit_rate", "hotset_stale_reads"],
+    "BENCH_cluster.json": [
+        "detections",
+        "rejoins",
+        "detect_ms_max",
+        "lost_writes",
+        "availability_min",
+    ],
 }
 
 # (baseline key, source file, gate figure key) for --ratchet.
